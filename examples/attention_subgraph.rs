@@ -1,0 +1,99 @@
+//! The paper's Fig. 1 scenario: why per-GROUP time measurement is needed.
+//!
+//! Measures the attention sub-graph (q, k, v, qk_matmul, av_matmul) of a
+//! transformer block under all 2^5 MP configurations and compares:
+//!   * measured per-group gain (ground truth under the simulator),
+//!   * the sum of per-layer gain measurements (the naive predictor),
+//!   * the MAC-based theoretical gain, scale+bias fitted.
+//!
+//! Run: cargo run --release --example attention_subgraph [-- --model tiny-m]
+
+use ampq::gaudisim::{HwModel, Simulator};
+use ampq::graph::partition::partition;
+use ampq::metrics::tt_layer_gain;
+use ampq::model::Manifest;
+use ampq::numerics::{Format, PAPER_FORMATS};
+use ampq::timing::{measure_groups, measure_per_layer, SimTtft};
+use ampq::util::{stats, Args, Rng};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[])?;
+    let model = args.get_or("model", "tiny-m");
+
+    let manifest = Manifest::load(Path::new(args.get_or("artifacts", "artifacts")))?;
+    let info = manifest.model(model)?;
+    let graph = info.load_graph(&manifest.root)?;
+    let part = partition(&graph)?;
+
+    let gi = part
+        .groups
+        .iter()
+        .position(|g| g.len() == 5)
+        .ok_or_else(|| anyhow!("no attention group"))?;
+    let qnames: Vec<&str> =
+        part.groups[gi].qidxs.iter().map(|&q| graph.qlayers[q].as_str()).collect();
+    println!("attention sub-graph V{gi}: {}", qnames.join(", "));
+
+    let hw = HwModel { noise_std: 0.005, ..HwModel::default() };
+    let sim = Simulator::new(&graph, hw);
+    let mut src = SimTtft { sim, rng: Rng::new(7), reps: 5 };
+    let tm = measure_groups(&mut src, &part, &PAPER_FORMATS)?;
+    let per_layer = measure_per_layer(&mut src, &PAPER_FORMATS)?;
+    let group = &tm.groups[gi];
+
+    let mut rows: Vec<(String, f64, f64, f64)> = group
+        .configs
+        .iter()
+        .zip(&group.gains)
+        .map(|(fmts, &measured)| {
+            let label: String =
+                fmts.iter().map(|f| if *f == Format::Bf16 { '0' } else { '1' }).collect();
+            let summed: f64 = group
+                .qidxs
+                .iter()
+                .zip(fmts)
+                .map(|(&q, &f)| per_layer[q][if f == Format::Bf16 { 0 } else { 1 }])
+                .sum();
+            let theo: f64 = group
+                .qidxs
+                .iter()
+                .zip(fmts)
+                .map(|(&q, &f)| tt_layer_gain(&info.qlayers[q], f))
+                .sum();
+            (label, measured, summed, theo)
+        })
+        .collect();
+    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+    let (a, b) = stats::linfit(
+        &rows.iter().map(|r| r.3).collect::<Vec<_>>(),
+        &rows.iter().map(|r| r.1).collect::<Vec<_>>(),
+    );
+    println!(
+        "{:>8} {:>14} {:>18} {:>20}",
+        "config", "measured[us]", "sum-per-layer[us]", "theoretical-fit[us]"
+    );
+    for (label, m, s, t) in &rows {
+        println!("{label:>8} {m:>14.2} {s:>18.2} {:>20.2}", a * t + b);
+    }
+
+    let gaps: Vec<f64> = rows.iter().map(|r| (r.2 - r.1).abs()).collect();
+    let tgaps: Vec<f64> = rows.iter().map(|r| (a * r.3 + b - r.1).abs()).collect();
+    let max_gain = rows.last().unwrap().1;
+    println!(
+        "\nmean |error| vs measured: per-layer sum {:.1} us ({:.0}% of max gain), \
+         fitted theoretical {:.1} us ({:.0}% of max gain)",
+        stats::mean(&gaps),
+        100.0 * stats::mean(&gaps) / max_gain,
+        stats::mean(&tgaps),
+        100.0 * stats::mean(&tgaps) / max_gain
+    );
+    println!(
+        "=> neither per-layer summation nor MAC counting predicts branched-sub-graph \
+         timing; measuring each group directly (the paper's method) is required."
+    );
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! END-TO-END DRIVER (DESIGN.md §6): the full paper pipeline on a real
+//! workload, proving all three layers compose:
+//!
+//!   L1/L2  the AOT-compiled JAX+Pallas forward & sensitivity executables
+//!          run through PJRT from rust (no python at runtime);
+//!   L3     partition -> calibration -> per-group time measurement -> IP ->
+//!          task evaluation, comparing IP-ET vs Random vs Prefix.
+//!
+//! Prints the paper's headline: IP-ET achieves better accuracy at equal or
+//! lower TTFT than both baselines.  Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: cargo run --release --example e2e_pipeline [-- --model tiny-s --seeds 3]
+
+use ampq::coordinator::{Pipeline, Strategy};
+use ampq::evalharness::{load_all_tasks, CachedEvaluator};
+use ampq::figures::sweep::{aggregate, run_sweep};
+use ampq::gaudisim::HwModel;
+use ampq::metrics::Objective;
+use ampq::model::Manifest;
+use ampq::numerics::PAPER_FORMATS;
+use ampq::runtime::FwdMode;
+use ampq::util::Args;
+use anyhow::Result;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[])?;
+    let model = args.get_or("model", "tiny-s");
+    let n_seeds = args.u64_or("seeds", 3)?;
+    let t0 = Instant::now();
+
+    let manifest = Manifest::load(Path::new(args.get_or("artifacts", "artifacts")))?;
+    let pl = Pipeline::new(&manifest, model, FwdMode::Ref, HwModel::default(),
+                           PAPER_FORMATS.to_vec())?;
+    println!(
+        "[{:6.1}s] loaded + partitioned ({} groups) + calibrated (R={}, E[g^2]={:.4})",
+        t0.elapsed().as_secs_f64(),
+        pl.partition.groups.len(),
+        pl.calibration.n_samples,
+        pl.calibration.eg2
+    );
+
+    let tm = pl.measure_time(0, 5)?;
+    println!(
+        "[{:6.1}s] measured {} per-group time tables; baseline TTFT {:.1} us",
+        t0.elapsed().as_secs_f64(),
+        pl.partition.n_measurements(PAPER_FORMATS.len()),
+        tm.base_ttft
+    );
+
+    let tasks = load_all_tasks(&manifest.root, &pl.info)?;
+    let mut eval = CachedEvaluator::new(&pl.mr, &tasks);
+    let family = pl.family(Objective::EmpiricalTime, &tm);
+    let taus = [0.0, 0.001, 0.002, 0.003, 0.004, 0.005, 0.006, 0.007];
+    let sweep = run_sweep(
+        &pl, &family, &tasks, &taus, n_seeds, 0.02,
+        &[Strategy::Ip, Strategy::Random, Strategy::Prefix], &mut eval,
+    )?;
+    println!(
+        "[{:6.1}s] evaluated {} sweep points ({} unique forward configs)",
+        t0.elapsed().as_secs_f64(),
+        sweep.points.len(),
+        eval.cache_len()
+    );
+
+    println!("\nbaseline (all-BF16): TTFT {:.1} us, task acc {:?}", sweep.baseline.ttft_us,
+        sweep.task_names.iter().zip(&sweep.baseline.task_acc)
+            .map(|(n, a)| format!("{n}={a:.3}")).collect::<Vec<_>>());
+
+    println!("\n== accuracy-vs-TTFT (avg over {} tasks, {} seeds) ==", sweep.task_names.len(), n_seeds);
+    println!("{:>8} | {:>22} | {:>22} | {:>22}", "tau", "IP-ET", "Random", "Prefix");
+    let agg_ip = aggregate(&sweep, Strategy::Ip);
+    let agg_rnd = aggregate(&sweep, Strategy::Random);
+    let agg_pre = aggregate(&sweep, Strategy::Prefix);
+    for i in 0..agg_ip.len() {
+        let cell = |a: &ampq::figures::sweep::AggPoint| {
+            format!("{:7.1}us {:+.3}±{:.3}%", a.ttft_us, a.acc_diff_mean, a.acc_diff_std)
+        };
+        println!(
+            "{:>8.4} | {:>22} | {:>22} | {:>22}",
+            agg_ip[i].tau, cell(&agg_ip[i]), cell(&agg_rnd[i]), cell(&agg_pre[i])
+        );
+    }
+
+    // Headline: at the most aggressive tau, compare accuracy at the
+    // IP's TTFT against what baselines need for similar accuracy.
+    let last = agg_ip.last().unwrap();
+    let base_ttft = sweep.baseline.ttft_us;
+    println!(
+        "\nheadline: IP-ET at tau={:.3}% reaches TTFT {:.1} us ({:.1}% faster than BF16) \
+         with avg accuracy diff {:+.3}%",
+        last.tau * 100.0,
+        last.ttft_us,
+        100.0 * (base_ttft - last.ttft_us) / base_ttft,
+        last.acc_diff_mean
+    );
+    for (name, agg) in [("Random", &agg_rnd), ("Prefix", &agg_pre)] {
+        let a = agg.last().unwrap();
+        println!(
+            "          {name} at the same budget: TTFT {:.1} us, accuracy diff {:+.3}%",
+            a.ttft_us, a.acc_diff_mean
+        );
+    }
+    let ip_better_count = (0..agg_ip.len())
+        .filter(|&i| {
+            agg_ip[i].acc_diff_mean >= agg_rnd[i].acc_diff_mean - 1e-9
+                || agg_ip[i].ttft_us <= agg_rnd[i].ttft_us + 1e-9
+        })
+        .count();
+    println!(
+        "IP-ET dominates Random (better acc or faster) at {}/{} thresholds",
+        ip_better_count,
+        agg_ip.len()
+    );
+    println!("[{:6.1}s] done", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Table-1-style strategy comparison across both models and all three
+//! objective families (IP-ET / IP-TT / IP-M vs Random / Prefix).
+//!
+//! A reduced-scale version of `ampq figures --fig table1` suitable for a
+//! quick interactive run; pass --seeds/--models for larger sweeps.
+//!
+//! Run: cargo run --release --example strategy_comparison [-- --seeds 2]
+
+use ampq::coordinator::{Pipeline, Strategy};
+use ampq::evalharness::{load_all_tasks, CachedEvaluator};
+use ampq::figures::sweep::run_sweep;
+use ampq::gaudisim::HwModel;
+use ampq::metrics::Objective;
+use ampq::model::Manifest;
+use ampq::numerics::PAPER_FORMATS;
+use ampq::report;
+use ampq::runtime::FwdMode;
+use ampq::util::Args;
+use anyhow::Result;
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[])?;
+    let n_seeds = args.u64_or("seeds", 2)?;
+    let models: Vec<&str> = args.get_or("models", "tiny-s,tiny-m").split(',').collect();
+    let taus = [0.0, 0.002, 0.004, 0.007];
+
+    let manifest = Manifest::load(Path::new(args.get_or("artifacts", "artifacts")))?;
+    let header: Vec<String> = ["model", "family", "strategy", "avg acc diff [%]", "lamb ppl diff [%]"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    for model in &models {
+        let pl = Pipeline::new(&manifest, model, FwdMode::Ref, HwModel::default(),
+                               PAPER_FORMATS.to_vec())?;
+        let tm = pl.measure_time(0, 5)?;
+        let tasks = load_all_tasks(&manifest.root, &pl.info)?;
+        let mut eval = CachedEvaluator::new(&pl.mr, &tasks);
+        let lamb = tasks.iter().position(|t| t.meta.name == "lamb").unwrap();
+
+        for objective in [Objective::EmpiricalTime, Objective::TheoreticalTime, Objective::Memory] {
+            let family = pl.family(objective, &tm);
+            let sweep = run_sweep(
+                &pl, &family, &tasks, &taus, n_seeds, 0.02,
+                &[Strategy::Random, Strategy::Prefix, Strategy::Ip], &mut eval,
+            )?;
+            for strategy in [Strategy::Random, Strategy::Prefix, Strategy::Ip] {
+                let pts: Vec<_> =
+                    sweep.points.iter().filter(|p| p.strategy == strategy).collect();
+                let accd: Vec<f64> = pts
+                    .iter()
+                    .map(|p| {
+                        p.task_acc
+                            .iter()
+                            .zip(&sweep.baseline.task_acc)
+                            .map(|(a, b)| (a - b) * 100.0)
+                            .sum::<f64>()
+                            / p.task_acc.len() as f64
+                    })
+                    .collect();
+                let ppld: Vec<f64> = pts
+                    .iter()
+                    .map(|p| (p.task_ppl[lamb] / sweep.baseline.task_ppl[lamb] - 1.0) * 100.0)
+                    .collect();
+                rows.push(vec![
+                    model.to_string(),
+                    objective.name().into(),
+                    strategy.name().into(),
+                    report::pm(ampq::util::stats::mean(&accd), ampq::util::stats::std(&accd)),
+                    report::pm(ampq::util::stats::mean(&ppld), ampq::util::stats::std(&ppld)),
+                ]);
+            }
+        }
+        println!("({model} done)");
+    }
+
+    println!("\n{}", report::format_table(&header, &rows));
+    println!("(paper Table 1 shape: IP rows should dominate Random/Prefix within each family)");
+    Ok(())
+}

@@ -1,0 +1,193 @@
+"""AOT export: python runs ONCE here; rust never imports python at runtime.
+
+Per model (tiny-s, tiny-m) this produces under artifacts/<model>/:
+  weights.tbin          trained parameters (build-time PTQ subject)
+  fwd_quant.hlo.txt     L2 fwd with L1 Pallas fake-quant kernels
+                        (tokens i32[B,T], mbits f32[Lq], pscale f32[Lq],
+                         *weights) -> (logits f32[B,T,V], loss f32[B])
+  fwd_ref.hlo.txt       same signature, pure-jnp quant path (cross-check +
+                        fast eval mode)
+  sensitivity.hlo.txt   (tokens i32[1,T], *weights) -> (g, s f32[Lq])
+  graph.json            op DAG for partition + timing simulation
+  calib.tbin            calibration sequences  i32[R, T]
+  tasks/<t>.tbin        evaluation task datasets
+plus artifacts/manifest.json describing everything.
+
+HLO *text* is the interchange format (NOT .serialize()): jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import corpus
+from compile.model import (CONFIGS, ModelCfg, fwd, param_order, param_shapes,
+                           qlayer_kinds, qlayer_names)
+from compile.sensitivity import sensitivity_fn
+from compile.tensorbin import read_tbin, write_tbin
+from compile.graphdef import write_graph
+from compile.quant import FORMATS
+from compile.train import train
+
+N_EX = 64  # examples per evaluation task
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fwd(cfg: ModelCfg, use_pallas: bool) -> str:
+    order = param_order(cfg)
+    shapes = param_shapes(cfg)
+
+    def fn(tokens, mbits, pscale, *weights):
+        params = dict(zip(order, weights))
+        return fwd(cfg, params, tokens, mbits=mbits, pscale=pscale,
+                   use_pallas=use_pallas)
+
+    specs = [
+        jax.ShapeDtypeStruct((cfg.eval_b, cfg.seq), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.n_qlayers,), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n_qlayers,), jnp.float32),
+    ] + [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in order]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_sensitivity(cfg: ModelCfg) -> str:
+    order = param_order(cfg)
+    shapes = param_shapes(cfg)
+    run = sensitivity_fn(cfg)
+
+    def fn(tokens, *weights):
+        return run(dict(zip(order, weights)), tokens)
+
+    specs = [jax.ShapeDtypeStruct((1, cfg.seq), jnp.int32)] + [
+        jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in order
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def qlayer_table(cfg: ModelCfg) -> list[dict]:
+    n = cfg.eval_b * cfg.seq
+    bh = cfg.eval_b * cfg.heads
+    dims = {"q_proj": (cfg.d, cfg.d), "k_proj": (cfg.d, cfg.d),
+            "v_proj": (cfg.d, cfg.d), "o_proj": (cfg.d, cfg.d),
+            "gate_proj": (cfg.d, cfg.ff), "up_proj": (cfg.d, cfg.ff),
+            "down_proj": (cfg.ff, cfg.d)}
+    out = []
+    for name, kind in zip(qlayer_names(cfg), qlayer_kinds(cfg)):
+        short = name.split(".")[-1]
+        if kind == "bgemm":
+            macs = bh * cfg.seq * cfg.seq * cfg.hd
+            c, k, pcount = cfg.seq, cfg.hd, 0
+        elif name == "lm_head":
+            c, k = cfg.d, cfg.vocab
+            macs, pcount = n * c * k, c * k
+        else:
+            c, k = dims[short]
+            macs, pcount = n * c * k, c * k
+        out.append(dict(name=name, kind=kind, c=c, k=k, macs=macs,
+                        params=pcount))
+    return out
+
+
+def export_model(cfg: ModelCfg, root: str, force: bool) -> dict:
+    mdir = os.path.join(root, cfg.name)
+    os.makedirs(os.path.join(mdir, "tasks"), exist_ok=True)
+    wpath = os.path.join(mdir, "weights.tbin")
+
+    order = param_order(cfg)
+    if os.path.exists(wpath) and not force:
+        print(f"[aot] {cfg.name}: reusing cached weights")
+        loaded = read_tbin(wpath)
+        params = {k: jnp.asarray(v) for k, v in loaded.items()}
+        history = []
+    else:
+        params, history = train(cfg)
+        write_tbin(wpath, [(n, np.asarray(params[n])) for n in order])
+
+    print(f"[aot] {cfg.name}: lowering fwd (pallas) ...", flush=True)
+    with open(os.path.join(mdir, "fwd_quant.hlo.txt"), "w") as f:
+        f.write(lower_fwd(cfg, use_pallas=True))
+    print(f"[aot] {cfg.name}: lowering fwd (ref) ...", flush=True)
+    with open(os.path.join(mdir, "fwd_ref.hlo.txt"), "w") as f:
+        f.write(lower_fwd(cfg, use_pallas=False))
+    print(f"[aot] {cfg.name}: lowering sensitivity ...", flush=True)
+    with open(os.path.join(mdir, "sensitivity.hlo.txt"), "w") as f:
+        f.write(lower_sensitivity(cfg))
+
+    write_graph(cfg, os.path.join(mdir, "graph.json"))
+
+    rng = np.random.default_rng(7 + cfg.seed)
+    calib = np.stack([
+        np.asarray(corpus.pad_to(corpus.make_line(rng, cfg)[0], cfg.seq), np.int32)
+        for _ in range(cfg.calib_r)
+    ])
+    write_tbin(os.path.join(mdir, "calib.tbin"), [("tokens", calib)])
+
+    tasks_meta = []
+    for td in corpus.make_all_tasks(cfg, N_EX, seed=100 + cfg.seed):
+        tpath = os.path.join(mdir, "tasks", f"{td.name}.tbin")
+        write_tbin(tpath, [("tokens", td.tokens), ("spans", td.spans),
+                           ("labels", td.labels)])
+        tasks_meta.append(dict(name=td.name, kind=td.kind, k=td.k,
+                               n_ex=len(td.labels),
+                               path=f"{cfg.name}/tasks/{td.name}.tbin"))
+
+    return dict(
+        name=cfg.name, vocab=cfg.vocab, d=cfg.d, blocks=cfg.blocks,
+        heads=cfg.heads, ff=cfg.ff, seq=cfg.seq, eval_b=cfg.eval_b,
+        calib_r=cfg.calib_r, n_qlayers=cfg.n_qlayers,
+        qlayers=qlayer_table(cfg),
+        param_order=order,
+        param_shapes={n: list(param_shapes(cfg)[n]) for n in order},
+        artifacts=dict(
+            weights=f"{cfg.name}/weights.tbin",
+            fwd_quant=f"{cfg.name}/fwd_quant.hlo.txt",
+            fwd_ref=f"{cfg.name}/fwd_ref.hlo.txt",
+            sensitivity=f"{cfg.name}/sensitivity.hlo.txt",
+            graph=f"{cfg.name}/graph.json",
+            calib=f"{cfg.name}/calib.tbin",
+        ),
+        tasks=tasks_meta,
+        train_history=history,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="tiny-s,tiny-m")
+    ap.add_argument("--force-train", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    models = []
+    for name in args.models.split(","):
+        models.append(export_model(CONFIGS[name], args.out, args.force_train))
+
+    manifest = dict(
+        formats={k: dict(mbits=v["mbits"], bytes=v["bytes"],
+                         fmax=v["fmax"]) for k, v in FORMATS.items()},
+        models=models,
+    )
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

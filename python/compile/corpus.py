@@ -1,0 +1,208 @@
+"""Synthetic corpus + task datasets (build-time).
+
+Substitution for the paper's real corpora/tasks (see DESIGN.md §3): a small
+formal language whose statistics a tiny transformer learns quickly (induction
+-head copy/reverse patterns), with four evaluation tasks mirroring the paper's
+protocol:
+
+  hella  4-way continuation choice          (HellaSwag analog)
+  lamb   last-token prediction, acc + ppl   (LAMBADA analog)
+  wino   2-way single-token cloze           (Winogrande analog)
+  piqa   2-way procedure (reversal) choice  (PIQA analog)
+
+Line grammar (token ids from model.py):
+  [BOS, START] s_1..s_n (REV?) [SEP] payload [END] PAD...
+where payload = s_1..s_n (copy) or s_n..s_1 (if REV).  Symbols are drawn from
+a per-position-skewed distribution so the corpus also carries plain n-gram
+structure (perplexity is meaningful, not just the deterministic span).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from compile.model import PAD, BOS, START, REV, SEP, END, SYM_BASE, ModelCfg
+
+MIN_SEQ, MAX_SEQ = 8, 16
+
+
+@dataclass
+class TaskData:
+    """One evaluation task: n_ex examples x k choices, padded to [_, T]."""
+    name: str
+    kind: str              # "choice" (acc over K spans) or "lastword" (+ppl)
+    k: int
+    tokens: np.ndarray     # i32 [n_ex * k, T]
+    spans: np.ndarray      # i32 [n_ex * k, 2]  (start, end) of scored span
+    labels: np.ndarray     # i32 [n_ex]
+
+
+def _draw_syms(rng: np.random.Generator, n: int, n_syms: int) -> np.ndarray:
+    """Zipf-ish symbol draw: gives the corpus non-uniform n-gram statistics."""
+    w = 1.0 / (1.0 + np.arange(n_syms)) ** 0.7
+    return rng.choice(n_syms, size=n, p=w / w.sum()) + SYM_BASE
+
+
+def make_line(rng: np.random.Generator, cfg: ModelCfg, rev: bool | None = None):
+    """Returns (tokens list, payload_start, seq list, rev flag)."""
+    if rev is None:
+        rev = bool(rng.integers(2))
+    n = int(rng.integers(MIN_SEQ, MAX_SEQ + 1))
+    seq = list(_draw_syms(rng, n, cfg.n_syms))
+    head = [BOS, START] + seq + ([REV] if rev else []) + [SEP]
+    payload = seq[::-1] if rev else seq
+    return head + payload + [END], len(head), seq, rev
+
+
+def pad_to(tokens: list[int], t: int) -> list[int]:
+    assert len(tokens) <= t, (len(tokens), t)
+    return tokens + [PAD] * (t - len(tokens))
+
+
+# Fraction of payload symbols corrupted in TRAINING lines.  A noisy corpus
+# bounds the model's achievable per-token confidence, keeping evaluation
+# examples near the decision margin — the regime where quantization noise
+# measurably moves accuracy (as with the paper's real LLMs).  Task datasets
+# are generated from CLEAN lines.
+TRAIN_NOISE = 0.08
+
+
+def corpus_batch(rng: np.random.Generator, cfg: ModelCfg, b: int,
+                 noise: float = TRAIN_NOISE) -> np.ndarray:
+    out = np.zeros((b, cfg.seq), np.int32)
+    for i in range(b):
+        line, pstart, _, _ = make_line(rng, cfg)
+        if noise > 0.0:
+            for j in range(pstart, len(line) - 1):
+                if line[j] >= SYM_BASE and rng.random() < noise:
+                    line[j] = SYM_BASE + int(rng.integers(cfg.n_syms))
+        out[i] = pad_to(line, cfg.seq)
+    return out
+
+
+def _confusable(rng, token: int, pool: list[int], n_syms: int) -> int:
+    """A distractor symbol: prefer one the model has seen in this sequence
+    (hard — membership cues don't help), fall back to a random symbol."""
+    options = [tk for tk in pool if tk != token and tk >= SYM_BASE]
+    if options:
+        return int(options[int(rng.integers(len(options)))])
+    alt = SYM_BASE + int(rng.integers(n_syms))
+    if alt == token:
+        alt = SYM_BASE + (alt - SYM_BASE + 1) % n_syms
+    return alt
+
+
+def _corrupt(rng, span: list[int], pool: list[int], n_syms: int) -> list[int]:
+    """Minimally corrupt a span: replace exactly ONE symbol position with a
+    confusable symbol.  Near-margin distractors keep the tasks sensitive to
+    quantization noise instead of saturating at 100% accuracy."""
+    out = list(span)
+    sym_pos = [i for i, tk in enumerate(out) if tk >= SYM_BASE]
+    if not sym_pos:
+        return out
+    i = sym_pos[int(rng.integers(len(sym_pos)))]
+    out[i] = _confusable(rng, out[i], pool, n_syms)
+    return out
+
+
+def make_hella(rng, cfg: ModelCfg, n_ex: int) -> TaskData:
+    """Context = line up to mid-payload; 4 candidate completions."""
+    k = 4
+    tokens = np.zeros((n_ex * k, cfg.seq), np.int32)
+    spans = np.zeros((n_ex * k, 2), np.int32)
+    labels = np.zeros((n_ex,), np.int32)
+    for e in range(n_ex):
+        line, pstart, seq, rev = make_line(rng, cfg)
+        cut = pstart + len(seq) // 2
+        ctx, true_rest = line[:cut], line[cut:]
+        label = int(rng.integers(k))
+        labels[e] = label
+        seen: set[tuple] = {tuple(true_rest)}
+        for c in range(k):
+            if c == label:
+                rest = true_rest
+            else:
+                # Distinct single-symbol corruptions (retry on collision).
+                for _ in range(16):
+                    rest = _corrupt(rng, true_rest, seq, cfg.n_syms)
+                    if tuple(rest) not in seen:
+                        break
+                seen.add(tuple(rest))
+            row = e * k + c
+            tokens[row] = pad_to(ctx + rest, cfg.seq)
+            spans[row] = (cut, cut + len(rest))
+    return TaskData("hella", "choice", k, tokens, spans, labels)
+
+
+def make_lamb(rng, cfg: ModelCfg, n_ex: int) -> TaskData:
+    """Predict the final payload token (before END): accuracy + perplexity."""
+    tokens = np.zeros((n_ex, cfg.seq), np.int32)
+    spans = np.zeros((n_ex, 2), np.int32)
+    labels = np.zeros((n_ex,), np.int32)
+    for e in range(n_ex):
+        line, pstart, seq, rev = make_line(rng, cfg)
+        last_pos = len(line) - 2  # final payload token (line ends with END)
+        tokens[e] = pad_to(line, cfg.seq)
+        spans[e] = (last_pos, last_pos + 1)
+        labels[e] = line[last_pos]
+    return TaskData("lamb", "lastword", 1, tokens, spans, labels)
+
+
+def make_wino(rng, cfg: ModelCfg, n_ex: int) -> TaskData:
+    """2-way cloze on one mid-payload token."""
+    k = 2
+    tokens = np.zeros((n_ex * k, cfg.seq), np.int32)
+    spans = np.zeros((n_ex * k, 2), np.int32)
+    labels = np.zeros((n_ex,), np.int32)
+    for e in range(n_ex):
+        line, pstart, seq, rev = make_line(rng, cfg)
+        j = pstart + int(rng.integers(1, len(seq) - 1))
+        true_tok = line[j]
+        alt = _confusable(rng, true_tok, seq, cfg.n_syms)
+        label = int(rng.integers(k))
+        labels[e] = label
+        for c in range(k):
+            row = line.copy()
+            row[j] = true_tok if c == label else alt
+            tokens[e * k + c] = pad_to(row, cfg.seq)
+            spans[e * k + c] = (j, j + 1)
+    return TaskData("wino", "choice", k, tokens, spans, labels)
+
+
+def make_piqa(rng, cfg: ModelCfg, n_ex: int) -> TaskData:
+    """2-way choice between a correct reversal and one with a swapped pair."""
+    k = 2
+    tokens = np.zeros((n_ex * k, cfg.seq), np.int32)
+    spans = np.zeros((n_ex * k, 2), np.int32)
+    labels = np.zeros((n_ex,), np.int32)
+    for e in range(n_ex):
+        line, pstart, seq, _ = make_line(rng, cfg, rev=True)
+        payload = line[pstart:-1]
+        bad = payload.copy()
+        # Swap two distinct adjacent symbols (guaranteed different by retry).
+        for _ in range(8):
+            j = int(rng.integers(len(bad) - 1))
+            if bad[j] != bad[j + 1]:
+                bad[j], bad[j + 1] = bad[j + 1], bad[j]
+                break
+        else:
+            bad[0] = SYM_BASE + (bad[0] - SYM_BASE + 1) % cfg.n_syms
+        label = int(rng.integers(k))
+        labels[e] = label
+        for c in range(k):
+            pl_c = payload if c == label else bad
+            row = line[:pstart] + pl_c + [END]
+            tokens[e * k + c] = pad_to(row, cfg.seq)
+            spans[e * k + c] = (pstart, pstart + len(pl_c))
+    return TaskData("piqa", "choice", k, tokens, spans, labels)
+
+
+TASK_MAKERS = {"hella": make_hella, "lamb": make_lamb,
+               "wino": make_wino, "piqa": make_piqa}
+
+
+def make_all_tasks(cfg: ModelCfg, n_ex: int, seed: int) -> list[TaskData]:
+    return [maker(np.random.default_rng(seed + i), cfg, n_ex)
+            for i, (name, maker) in enumerate(sorted(TASK_MAKERS.items()))]

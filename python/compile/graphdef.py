@@ -1,0 +1,113 @@
+"""Emit graph.json — the model computation DAG the rust coordinator consumes.
+
+The DAG feeds two rust subsystems:
+  * graph/partition.rs — the paper's Algorithm 2 (sequential single-entry/
+    single-exit sub-graphs).  Following Fig. 6 ("residual adds are omitted"),
+    residual skip edges are tagged so the partitioner can bypass them.
+  * gaudisim/ — the Gaudi-2-like timing model; every node carries engine
+    (mme / tpc), MAC count, and tensor byte sizes at the BF16 baseline.
+
+All sizes are computed for the evaluation batch (eval_b x seq), the shape the
+paper's TTFT prefill measurements use.
+"""
+
+from __future__ import annotations
+
+import json
+
+from compile.model import BLOCK_QLAYERS, ModelCfg, qlayer_kinds, qlayer_names
+
+BF16_BYTES = 2
+
+
+def _node(nid, kind, engine, qidx, macs, bytes_in, bytes_out, param_bytes,
+          c=0, k=0):
+    return dict(id=nid, kind=kind, engine=engine, qidx=qidx, macs=int(macs),
+                bytes_in=int(bytes_in), bytes_out=int(bytes_out),
+                param_bytes=int(param_bytes), c=int(c), k=int(k))
+
+
+def build_graph(cfg: ModelCfg) -> dict:
+    b, t, d, h, ff, v = cfg.eval_b, cfg.seq, cfg.d, cfg.heads, cfg.ff, cfg.vocab
+    hd = cfg.hd
+    n = b * t            # token rows
+    bh = b * h           # batched heads
+    e = lambda x: x * BF16_BYTES
+    act = n * d          # elements of a [B,T,d] activation
+
+    nodes, edges, res_edges = [], [], []
+    qidx = {name: i for i, name in enumerate(qlayer_names(cfg))}
+
+    def add(nid, kind, engine, q=-1, macs=0, bi=0, bo=0, pb=0, c=0, k=0):
+        nodes.append(_node(nid, kind, engine, q, macs, bi, bo, pb, c, k))
+
+    def lin(nid, c_in, k_out):
+        add(nid, "linear", "mme", qidx[nid], macs=n * c_in * k_out,
+            bi=e(n * c_in), bo=e(n * k_out), pb=e(c_in * k_out), c=c_in, k=k_out)
+
+    add("embed", "embed", "tpc", bi=e(n), bo=e(act), pb=e(v * d))
+    prev_out = "embed"   # node whose output feeds the next block
+    for i in range(cfg.blocks):
+        p = f"blk{i}."
+        add(p + "rms1", "rmsnorm", "tpc", bi=e(act), bo=e(act), pb=e(d))
+        lin(p + "q_proj", d, d)
+        lin(p + "k_proj", d, d)
+        lin(p + "v_proj", d, d)
+        add(p + "rope_q", "rope", "tpc", bi=e(act), bo=e(act))
+        add(p + "rope_k", "rope", "tpc", bi=e(act), bo=e(act))
+        add(p + "qk_matmul", "bgemm", "mme", qidx[p + "qk_matmul"],
+            macs=bh * t * t * hd, bi=e(2 * act), bo=e(bh * t * t), c=hd, k=t)
+        add(p + "softmax", "softmax", "tpc", bi=e(bh * t * t), bo=e(bh * t * t))
+        add(p + "av_matmul", "bgemm", "mme", qidx[p + "av_matmul"],
+            macs=bh * t * t * hd, bi=e(bh * t * t + act), bo=e(act), c=t, k=hd)
+        lin(p + "o_proj", d, d)
+        add(p + "add1", "add", "tpc", bi=e(2 * act), bo=e(act))
+        add(p + "rms2", "rmsnorm", "tpc", bi=e(act), bo=e(act), pb=e(d))
+        lin(p + "gate_proj", d, ff)
+        lin(p + "up_proj", d, ff)
+        add(p + "silu", "silu", "tpc", bi=e(n * ff), bo=e(n * ff))
+        add(p + "mul", "mul", "tpc", bi=e(2 * n * ff), bo=e(n * ff))
+        lin(p + "down_proj", ff, d)
+        add(p + "add2", "add", "tpc", bi=e(2 * act), bo=e(act))
+
+        edges += [
+            (prev_out, p + "rms1"),
+            (p + "rms1", p + "q_proj"), (p + "rms1", p + "k_proj"),
+            (p + "rms1", p + "v_proj"),
+            (p + "q_proj", p + "rope_q"), (p + "k_proj", p + "rope_k"),
+            (p + "rope_q", p + "qk_matmul"), (p + "rope_k", p + "qk_matmul"),
+            (p + "qk_matmul", p + "softmax"),
+            (p + "softmax", p + "av_matmul"), (p + "v_proj", p + "av_matmul"),
+            (p + "av_matmul", p + "o_proj"),
+            (p + "o_proj", p + "add1"),
+            (p + "add1", p + "rms2"),
+            (p + "rms2", p + "gate_proj"), (p + "rms2", p + "up_proj"),
+            (p + "gate_proj", p + "silu"),
+            (p + "silu", p + "mul"), (p + "up_proj", p + "mul"),
+            (p + "mul", p + "down_proj"),
+            (p + "down_proj", p + "add2"),
+        ]
+        res_edges += [(prev_out, p + "add1"), (p + "add1", p + "add2")]
+        prev_out = p + "add2"
+
+    add("rms_f", "rmsnorm", "tpc", bi=e(act), bo=e(act), pb=e(d))
+    add("lm_head", "linear", "mme", qidx["lm_head"], macs=n * d * v,
+        bi=e(act), bo=e(n * v), pb=e(d * v), c=d, k=v)
+    edges += [(prev_out, "rms_f"), ("rms_f", "lm_head")]
+
+    return dict(
+        model=cfg.name,
+        eval_b=b, seq=t,
+        nodes=nodes,
+        edges=[list(x) for x in edges],
+        residual_edges=[list(x) for x in res_edges],
+        qlayers=qlayer_names(cfg),
+        qkinds=qlayer_kinds(cfg),
+    )
+
+
+def write_graph(cfg: ModelCfg, path: str) -> dict:
+    g = build_graph(cfg)
+    with open(path, "w") as f:
+        json.dump(g, f, indent=1)
+    return g

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: batched fake-quant GEMM (the paper's BGEMM op).
+
+Covers the two attention BGEMMs the paper quantizes (Fig. 6):
+  qk_matmul:  scores[BH, T, T] = fq(q[BH, T, hd]) @ fq(k[BH, T, hd])^T
+  av_matmul:  out[BH, T, hd]   = fq(p[BH, T, T])  @ fq(v[BH, T, hd])
+
+Both are expressed as one kernel: z[g, M, K] = fq(a[g, M, C]) @ fq(b[g, C, K]),
+gridded over batch groups so several heads' tiles share one VMEM residency
+(the Gaudi-2 MME batch loop analog).  interpret=True as everywhere (see
+qmatmul.py for the hardware-adaptation rationale).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.quant import fake_quant_with_scale, fmax_for_mbits, tensor_scale
+
+# Batch-group size: how many batch elements one grid step processes.
+DEFAULT_GB = 8
+
+
+def _pick_group(batch: int, pref: int) -> int:
+    if batch % pref == 0:
+        return pref
+    g = 1
+    for c in range(1, min(batch, pref) + 1):
+        if batch % c == 0:
+            g = c
+    return g
+
+
+def vmem_footprint(gb: int, m_dim: int, c_dim: int, k_dim: int) -> int:
+    """Bytes of VMEM held by one grid step."""
+    return 4 * gb * (m_dim * c_dim + c_dim * k_dim + m_dim * k_dim)
+
+
+def _kernel(meta_ref, a_ref, b_ref, o_ref):
+    m = meta_ref[0, 0]
+    fmax = meta_ref[0, 1]
+    s_a = meta_ref[0, 2]
+    s_b = meta_ref[0, 3]
+    aq = fake_quant_with_scale(a_ref[...], m, s_a, fmax)
+    bq = fake_quant_with_scale(b_ref[...], m, s_b, fmax)
+    # Batched contraction with f32 accumulation: [g,M,C] x [g,C,K] -> [g,M,K].
+    o_ref[...] = jax.lax.dot_general(
+        aq, bq, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+
+
+def qbgemm(a, b, m, pert=1.0, gb: int = DEFAULT_GB):
+    """Batched fake-quant GEMM: z[g,M,K] = fq(a[g,M,C]) @ fq(b[g,C,K])."""
+    g, mm, c = a.shape
+    g2, c2, k = b.shape
+    assert g == g2 and c == c2, (a.shape, b.shape)
+    gb = _pick_group(g, gb)
+
+    fmax = fmax_for_mbits(m)
+    s_a = tensor_scale(a, m, pert)
+    s_b = tensor_scale(b, m, pert)
+    meta = jnp.stack([m, fmax, s_a, s_b]).reshape(1, 4).astype(jnp.float32)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(g // gb,),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+            pl.BlockSpec((gb, mm, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((gb, c, k), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((gb, mm, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, mm, k), jnp.float32),
+        interpret=True,
+    )(meta, a, b)

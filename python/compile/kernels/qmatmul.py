@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: blocked fake-quant matmul (the paper's linear-layer op).
+
+Computes  y[M,K] = fq(x[M,C], m) @ fq(w[K,C], m)^T  (+ bias)  with both
+operands quantize-dequantized to ``m`` mantissa bits using per-tensor scales
+(computed once outside the kernel, passed in as scalars).
+
+Hardware adaptation (see DESIGN.md #Hardware-Adaptation): the paper's Gaudi-2
+MME FP8 path is re-expressed TPU-style — BlockSpec tiles HBM->VMEM transfers,
+quantization is applied per-block at load (the Gaudi cast-at-DMA analog), and
+the inner product accumulates in f32 as the MXU would.  ``interpret=True``
+throughout: the CPU PJRT client cannot execute Mosaic custom-calls, and
+correctness is what the interpret path validates (kernels/ref.py oracle).
+
+Block-shape selection targets a VMEM budget (see vmem_footprint) rather than
+CPU wallclock; EXPERIMENTS.md #Perf records the footprint/utilization table.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.quant import fake_quant_with_scale, fmax_for_mbits, tensor_scale
+
+# Default tile sizes (f32 words): chosen so x-tile + w-tile + out-tile fit in
+# a ~1 MiB VMEM budget for the model dims used here (C <= 512).
+DEFAULT_BM = 64
+DEFAULT_BK = 32
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of ``dim`` that is <= pref (pref itself if divisible)."""
+    if dim % pref == 0:
+        return pref
+    b = 1
+    for c in range(1, min(dim, pref) + 1):
+        if dim % c == 0:
+            b = c
+    return b
+
+
+def vmem_footprint(m_dim: int, c_dim: int, k_dim: int, bm: int, bk: int) -> int:
+    """Bytes of VMEM held by one grid step (f32 tiles + f32 accumulator)."""
+    return 4 * (bm * c_dim + bk * c_dim + bm * bk)
+
+
+def _kernel(meta_ref, x_ref, w_ref, b_ref, o_ref):
+    # meta = [m, fmax, s_x, s_w]
+    m = meta_ref[0, 0]
+    fmax = meta_ref[0, 1]
+    s_x = meta_ref[0, 2]
+    s_w = meta_ref[0, 3]
+    xq = fake_quant_with_scale(x_ref[...], m, s_x, fmax)
+    wq = fake_quant_with_scale(w_ref[...], m, s_w, fmax)
+    # MXU-style: f32 accumulation of the (quantized) operand product.
+    acc = jax.lax.dot_general(
+        xq, wq, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] = acc + b_ref[...]
+
+
+def qmatmul(x, w, b, m, pert=1.0, bm: int = DEFAULT_BM, bk: int = DEFAULT_BK):
+    """Fake-quant matmul: y = fq(x) @ fq(w)^T + b.
+
+    x: [M, C] activations, w: [K, C] weights, b: [K] bias (zeros if None),
+    m: traced scalar mantissa bits, pert: traced scale-perturbation factor.
+    """
+    mm, c = x.shape
+    k, c2 = w.shape
+    assert c == c2, (x.shape, w.shape)
+    if b is None:
+        b = jnp.zeros((k,), jnp.float32)
+    bm = _pick_block(mm, bm)
+    bk = _pick_block(k, bk)
+
+    fmax = fmax_for_mbits(m)
+    s_x = tensor_scale(x, m, pert)
+    s_w = tensor_scale(w, m, pert)
+    meta = jnp.stack([m, fmax, s_x, s_w]).reshape(1, 4).astype(jnp.float32)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(mm // bm, k // bk),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda i, j: (0, 0)),
+            pl.BlockSpec((bm, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, c), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mm, k), jnp.float32),
+        interpret=True,
+    )(meta, x, w, b)

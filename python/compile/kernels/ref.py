@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+These are the CORE correctness references: pytest (python/tests/) asserts the
+Pallas kernels match these bit-for-bit-ish (allclose at f32) across
+hypothesis-swept shapes, mantissa widths, and scale perturbations.  They are
+also used by the L2 model's ``use_pallas=False`` path (training, sensitivity)
+where differentiability / speed matter more than exercising the kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.quant import fake_quant
+
+
+def qmatmul_ref(x, w, b, m, pert=1.0):
+    """y[M,K] = fq(x[M,C]) @ fq(w[K,C])^T + b[K]."""
+    if b is None:
+        b = jnp.zeros((w.shape[0],), jnp.float32)
+    xq = fake_quant(x, m, pert)
+    wq = fake_quant(w, m, pert)
+    return xq @ wq.T + b
+
+
+def qbgemm_ref(a, b, m, pert=1.0):
+    """z[g,M,K] = fq(a[g,M,C]) @ fq(b[g,C,K])."""
+    aq = fake_quant(a, m, pert)
+    bq = fake_quant(b, m, pert)
+    return jnp.einsum("gmc,gck->gmk", aq, bq)
+
+
+def matmul_ref(x, w, b=None):
+    """Unquantized linear: y = x @ w^T + b (training / sensitivity path)."""
+    y = x @ w.T
+    if b is not None:
+        y = y + b
+    return y

@@ -1,0 +1,261 @@
+"""L2: Llama-style transformer in JAX, with runtime-controlled mixed precision.
+
+The model mirrors the block structure the paper partitions (Fig. 6): RMSNorm ->
+{q,k,v projections, RoPE, qk BGEMM, softmax, av BGEMM, o projection} ->
+residual -> RMSNorm -> {gate/up projections, SiLU*mul, down projection} ->
+residual, plus a final RMSNorm and lm_head.  Quantizable layers (paper's
+L_lin + L_BGEMM) per block: q,k,v,qk,av,o,gate,up,down — plus lm_head.
+
+Two runtime inputs make a SINGLE lowered HLO module serve every MP config:
+  mantissa_bits f32[Lq] — per-quantizable-layer mantissa width (23 = fp32
+      identity, 7 = bf16, 3 = fp8_e4m3, ...), consumed as data by the
+      fake-quant kernels;
+  pscale        f32[Lq] — per-layer quantization-scale perturbation
+      multipliers (the paper's seed protocol for accuracy statistics).
+
+Sensitivity tap points: with ``taps`` given (and quantization off), every
+quantizable layer's extended input z = [x; w] (or [x0; x1] for BGEMM) is
+multiplied elementwise by a ones-tensor tap.  Then d(loss)/d(tap) = z .* dg/dz
+exactly, so the paper's sensitivity s_l = ||z .* zdot||^2 (eq. 19) is the
+squared norm of the tap gradient — no intermediate capture needed.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.qmatmul import qmatmul
+from compile.kernels.qbgemm import qbgemm
+from compile.kernels.ref import qmatmul_ref, qbgemm_ref, matmul_ref
+
+PAD, BOS, START, REV, SEP, END, QM = 0, 1, 2, 3, 4, 5, 6
+SYM_BASE = 8  # first "word" symbol; vocab - SYM_BASE usable symbols
+
+# Per-block quantizable layers, in qidx order (paper Fig. 6 naming).
+BLOCK_QLAYERS = (
+    "q_proj", "k_proj", "v_proj", "qk_matmul", "av_matmul",
+    "o_proj", "gate_proj", "up_proj", "down_proj",
+)
+BGEMM_LAYERS = ("qk_matmul", "av_matmul")
+
+
+@dataclass(frozen=True)
+class ModelCfg:
+    name: str
+    vocab: int = 64
+    d: int = 96
+    blocks: int = 2
+    heads: int = 4
+    ff: int = 192
+    seq: int = 48
+    eval_b: int = 8
+    calib_r: int = 32
+    train_steps: int = 900
+    train_b: int = 32
+    lr: float = 3.0e-3
+    seed: int = 0
+
+    @property
+    def hd(self) -> int:
+        return self.d // self.heads
+
+    @property
+    def n_qlayers(self) -> int:
+        return len(BLOCK_QLAYERS) * self.blocks + 1  # + lm_head
+
+    @property
+    def n_syms(self) -> int:
+        return self.vocab - SYM_BASE
+
+
+CONFIGS = {
+    # Stand-ins for the paper's Llama-3.2-1B / Llama-3.1-8B (see DESIGN.md §3).
+    "tiny-s": ModelCfg(name="tiny-s", d=96, blocks=2, heads=4, ff=192,
+                       train_steps=900, seed=0),
+    "tiny-m": ModelCfg(name="tiny-m", d=192, blocks=3, heads=6, ff=384,
+                       train_steps=1200, seed=1),
+}
+
+
+def qlayer_names(cfg: ModelCfg) -> list[str]:
+    names = []
+    for i in range(cfg.blocks):
+        names += [f"blk{i}.{n}" for n in BLOCK_QLAYERS]
+    names.append("lm_head")
+    return names
+
+
+def qlayer_kinds(cfg: ModelCfg) -> list[str]:
+    return ["bgemm" if n.split(".")[-1] in BGEMM_LAYERS else "linear"
+            for n in qlayer_names(cfg)]
+
+
+def param_order(cfg: ModelCfg) -> list[str]:
+    """Deterministic parameter ordering — the HLO input order contract with rust."""
+    order = ["embed"]
+    for i in range(cfg.blocks):
+        b = f"blk{i}."
+        order += [b + "rms1_g", b + "q_w", b + "k_w", b + "v_w", b + "o_w",
+                  b + "rms2_g", b + "gate_w", b + "up_w", b + "down_w"]
+    order += ["rms_f_g", "lm_head_w"]
+    return order
+
+
+def param_shapes(cfg: ModelCfg) -> dict[str, tuple[int, ...]]:
+    shapes: dict[str, tuple[int, ...]] = {"embed": (cfg.vocab, cfg.d)}
+    for i in range(cfg.blocks):
+        b = f"blk{i}."
+        shapes[b + "rms1_g"] = (cfg.d,)
+        shapes[b + "q_w"] = (cfg.d, cfg.d)
+        shapes[b + "k_w"] = (cfg.d, cfg.d)
+        shapes[b + "v_w"] = (cfg.d, cfg.d)
+        shapes[b + "o_w"] = (cfg.d, cfg.d)
+        shapes[b + "rms2_g"] = (cfg.d,)
+        shapes[b + "gate_w"] = (cfg.ff, cfg.d)
+        shapes[b + "up_w"] = (cfg.ff, cfg.d)
+        shapes[b + "down_w"] = (cfg.d, cfg.ff)
+    shapes["rms_f_g"] = (cfg.d,)
+    shapes["lm_head_w"] = (cfg.vocab, cfg.d)
+    return shapes
+
+
+def init_params(cfg: ModelCfg, key) -> dict[str, jnp.ndarray]:
+    params = {}
+    for name, shape in param_shapes(cfg).items():
+        key, sub = jax.random.split(key)
+        if name.endswith("_g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed":
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * 0.02
+        else:
+            fan_in = shape[-1]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * (fan_in ** -0.5)
+    return params
+
+
+def _rmsnorm(x, g, eps=1.0e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def _rope(x):
+    """Rotary embedding over [BH, T, hd]."""
+    _, t, hd = x.shape
+    half = hd // 2
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    inv = jnp.exp2(-jnp.arange(half, dtype=jnp.float32) * (14.0 / half))
+    ang = pos * inv[None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def make_taps(cfg: ModelCfg, batch: int) -> dict[str, jnp.ndarray]:
+    """Ones-taps for every quantizable layer's extended input components."""
+    n = batch * cfg.seq
+    shapes = param_shapes(cfg)
+    taps: dict[str, jnp.ndarray] = {}
+    bh = batch * cfg.heads
+    for i in range(cfg.blocks):
+        b = f"blk{i}."
+        for lname, wname, c in (("q_proj", "q_w", cfg.d), ("k_proj", "k_w", cfg.d),
+                                ("v_proj", "v_w", cfg.d), ("o_proj", "o_w", cfg.d),
+                                ("gate_proj", "gate_w", cfg.d), ("up_proj", "up_w", cfg.d),
+                                ("down_proj", "down_w", cfg.ff)):
+            taps[b + lname + ".x"] = jnp.ones((n, c), jnp.float32)
+            taps[b + lname + ".w"] = jnp.ones(shapes[b + wname], jnp.float32)
+        taps[b + "qk_matmul.a"] = jnp.ones((bh, cfg.seq, cfg.hd), jnp.float32)
+        taps[b + "qk_matmul.b"] = jnp.ones((bh, cfg.hd, cfg.seq), jnp.float32)
+        taps[b + "av_matmul.a"] = jnp.ones((bh, cfg.seq, cfg.seq), jnp.float32)
+        taps[b + "av_matmul.b"] = jnp.ones((bh, cfg.seq, cfg.hd), jnp.float32)
+    taps["lm_head.x"] = jnp.ones((n, cfg.d), jnp.float32)
+    taps["lm_head.w"] = jnp.ones(shapes["lm_head_w"], jnp.float32)
+    return taps
+
+
+def fwd(cfg: ModelCfg, params, tokens, mbits=None, pscale=None, taps=None,
+        use_pallas=True):
+    """Forward pass.
+
+    tokens: i32[B, T].  Returns (logits f32[B, T, V], loss f32[B]) where
+    loss[b] is the PAD-masked mean next-token cross-entropy of sample b
+    (the paper's per-sample loss g^r).
+    """
+    assert not (taps is not None and mbits is not None), \
+        "sensitivity taps are measured at high precision (paper §2.2)"
+    batch, t = tokens.shape
+    assert t == cfg.seq
+    qnames = qlayer_names(cfg)
+    qidx = {n: i for i, n in enumerate(qnames)}
+
+    def qlin(x2d, w, name):
+        if taps is not None:
+            x2d = x2d * taps[name + ".x"]
+            w = w * taps[name + ".w"]
+        if mbits is None:
+            return matmul_ref(x2d, w)
+        i = qidx[name]
+        op = qmatmul if use_pallas else qmatmul_ref
+        return op(x2d, w, None, mbits[i], pscale[i])
+
+    def qbg(a, b, name):
+        if taps is not None:
+            a = a * taps[name + ".a"]
+            b = b * taps[name + ".b"]
+        if mbits is None:
+            return jnp.einsum("gmc,gck->gmk", a, b)
+        i = qidx[name]
+        op = qbgemm if use_pallas else qbgemm_ref
+        return op(a, b, mbits[i], pscale[i])
+
+    x = params["embed"][tokens]  # [B, T, d]
+
+    for i in range(cfg.blocks):
+        b = f"blk{i}."
+        # --- attention sub-graph (paper V1) ---
+        xn = _rmsnorm(x, params[b + "rms1_g"])
+        xn2 = xn.reshape(batch * t, cfg.d)
+        q = qlin(xn2, params[b + "q_w"], b + "q_proj")
+        k = qlin(xn2, params[b + "k_w"], b + "k_proj")
+        v = qlin(xn2, params[b + "v_w"], b + "v_proj")
+
+        def heads(y):
+            return (y.reshape(batch, t, cfg.heads, cfg.hd)
+                    .transpose(0, 2, 1, 3)
+                    .reshape(batch * cfg.heads, t, cfg.hd))
+
+        qh, kh, vh = _rope(heads(q)), _rope(heads(k)), heads(v)
+        scores = qbg(qh, kh.transpose(0, 2, 1), b + "qk_matmul") * (cfg.hd ** -0.5)
+        mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+        scores = jnp.where(mask[None], scores, -1.0e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = qbg(probs, vh, b + "av_matmul")  # [BH, T, hd]
+        attn2 = (attn.reshape(batch, cfg.heads, t, cfg.hd)
+                 .transpose(0, 2, 1, 3)
+                 .reshape(batch * t, cfg.d))
+        # --- o_proj sub-graph (paper V2) ---
+        o = qlin(attn2, params[b + "o_w"], b + "o_proj")
+        x = x + o.reshape(batch, t, cfg.d)
+
+        # --- MLP sub-graphs (paper V3 = {gate, up}, V4 = {down}) ---
+        xn = _rmsnorm(x, params[b + "rms2_g"])
+        xn2 = xn.reshape(batch * t, cfg.d)
+        gate = qlin(xn2, params[b + "gate_w"], b + "gate_proj")
+        up = qlin(xn2, params[b + "up_w"], b + "up_proj")
+        h = jax.nn.silu(gate) * up
+        down = qlin(h, params[b + "down_w"], b + "down_proj")
+        x = x + down.reshape(batch, t, cfg.d)
+
+    xn = _rmsnorm(x, params["rms_f_g"])
+    logits2 = qlin(xn.reshape(batch * t, cfg.d), params["lm_head_w"], "lm_head")
+    logits = logits2.reshape(batch, t, cfg.vocab)
+
+    # PAD-masked per-sample next-token cross-entropy.
+    targets = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    ll = jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    msk = (targets != PAD).astype(jnp.float32)
+    loss = -(ll * msk).sum(axis=1) / jnp.maximum(msk.sum(axis=1), 1.0)
+    return logits, loss

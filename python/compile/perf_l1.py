@@ -1,0 +1,80 @@
+"""L1 perf analysis: VMEM footprint + MXU-utilization estimates per block shape.
+
+interpret=True gives CPU-numpy timings only — NOT a TPU proxy — so the L1
+optimization target is structural (DESIGN.md §8): pick BlockSpec tiles that
+(a) fit comfortably in VMEM (~16 MiB/core budget, we target << 4 MiB so
+double-buffering fits), and (b) keep the MXU systolic array full
+(128x128 tiles; utilization = how much of each dimension a tile covers).
+
+Run:  python -m compile.perf_l1          (prints the sweep table)
+Used by EXPERIMENTS.md §Perf and asserted in tests/test_perf_models.py.
+"""
+
+from __future__ import annotations
+
+from compile.kernels.qmatmul import vmem_footprint as mm_footprint
+from compile.kernels.qbgemm import vmem_footprint as bg_footprint
+from compile.model import CONFIGS
+
+MXU = 128  # systolic array side
+VMEM_BUDGET = 4 * 1024 * 1024  # leave 4x headroom for double buffering
+
+
+def mxu_utilization(bm: int, bk: int, c: int) -> float:
+    """Fraction of the MXU kept busy by a (bm x c) @ (c x bk) tile issue."""
+    um = min(bm, MXU) / MXU
+    uk = min(bk, MXU) / MXU
+    uc = min(c, MXU) / MXU
+    return um * uk * uc
+
+
+def qmatmul_sweep(cfg, m_dim: int):
+    rows = []
+    for bm in (16, 32, 64, 128):
+        if m_dim % bm:
+            continue
+        for bk in (16, 32, 64):
+            for c in sorted({cfg.d, cfg.ff, cfg.vocab}):
+                if c % bk and c != cfg.vocab:
+                    pass
+                fp = mm_footprint(m_dim, c, bk, bm, bk)
+                rows.append((bm, bk, c, fp, mxu_utilization(bm, bk, c)))
+    return rows
+
+
+def chosen_config_report(cfg):
+    """The shipped block shapes (qmatmul DEFAULT_BM/BK=64/32, qbgemm gb=8)."""
+    m_dim = cfg.eval_b * cfg.seq
+    out = []
+    for name, c, k in (("q/k/v/o_proj", cfg.d, cfg.d),
+                       ("gate/up_proj", cfg.d, cfg.ff),
+                       ("down_proj", cfg.ff, cfg.d),
+                       ("lm_head", cfg.d, cfg.vocab)):
+        bm, bk = min(64, m_dim), min(32, k)
+        fp = mm_footprint(m_dim, c, bk, bm, bk)
+        out.append((name, bm, bk, c, fp, mxu_utilization(bm, bk, c)))
+    bh = cfg.eval_b * cfg.heads
+    gb = min(8, bh)
+    for name, m, c, k in (("qk_matmul", cfg.seq, cfg.hd, cfg.seq),
+                          ("av_matmul", cfg.seq, cfg.seq, cfg.hd)):
+        fp = bg_footprint(gb, m, c, k)
+        out.append((name, gb, -1, c, fp, mxu_utilization(m, k, c)))
+    return out
+
+
+def main():
+    for name, cfg in CONFIGS.items():
+        m_dim = cfg.eval_b * cfg.seq
+        print(f"\n=== {name} (M = {m_dim}) — shipped block shapes ===")
+        print(f"{'layer':<14} {'bm/gb':>6} {'bk':>4} {'C':>5} {'VMEM[KiB]':>10} {'MXU util':>9}")
+        for layer, bm, bk, c, fp, util in chosen_config_report(cfg):
+            ok = "ok" if fp <= VMEM_BUDGET else "OVER"
+            print(f"{layer:<14} {bm:>6} {bk:>4} {c:>5} {fp/1024:>10.1f} {util:>9.3f}  {ok}")
+        print(f"\n--- qmatmul block sweep (d-dim layers) ---")
+        print(f"{'bm':>4} {'bk':>4} {'C':>5} {'VMEM[KiB]':>10} {'MXU util':>9}")
+        for bm, bk, c, fp, util in qmatmul_sweep(cfg, m_dim)[:16]:
+            print(f"{bm:>4} {bk:>4} {c:>5} {fp/1024:>10.1f} {util:>9.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""L2 perf audit: instruction census of the lowered HLO modules.
+
+Checks the properties DESIGN.md §8 targets for the JAX graph:
+  * no redundant recomputation — each quantizable matmul lowers to exactly
+    one dot/dot-general per layer (counted against the layer table);
+  * elementwise chains are fusable — report the fusion-relevant op mix;
+  * while-loop count matches the Pallas grid structure (interpret mode
+    lowers each pallas_call to one loop nest).
+
+Run:  python -m compile.perf_l2 [artifacts_dir]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+from collections import Counter
+
+
+OPCODE_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{}, ]+?\s(\w+)\(")
+
+
+def census(path: str) -> Counter:
+    ops: Counter = Counter()
+    with open(path) as f:
+        for line in f:
+            m = OPCODE_RE.match(line)
+            if m:
+                ops[m.group(1)] += 1
+    return ops
+
+
+def audit(root: str, model: str) -> dict:
+    out = {}
+    for kind in ("fwd_quant", "fwd_ref", "sensitivity"):
+        p = os.path.join(root, model, f"{kind}.hlo.txt")
+        if os.path.exists(p):
+            out[kind] = census(p)
+    return out
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    for model in ("tiny-s", "tiny-m"):
+        if not os.path.isdir(os.path.join(root, model)):
+            continue
+        print(f"\n=== {model} ===")
+        for kind, ops in audit(root, model).items():
+            total = sum(ops.values())
+            dots = ops.get("dot", 0)
+            whiles = ops.get("while", 0)
+            print(f"{kind:<12} {total:>6} instrs | dot {dots:>3} | while {whiles:>3} "
+                  f"| exp {ops.get('exponential', 0):>3} | top5 "
+                  + ", ".join(f"{k}:{v}" for k, v in ops.most_common(5)))
+
+
+if __name__ == "__main__":
+    main()

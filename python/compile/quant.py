@@ -1,0 +1,102 @@
+"""Fake-quantization numerics (build-time, jnp).
+
+Implements the paper's quantization-noise model (eq. 15-16): a value kept in a
+floating-point format with ``m`` stored mantissa bits suffers a relative
+rounding error ~ |z| * 2^-m * U[+-1/2].  We emulate any such format on f32 by
+round-to-nearest on the mantissa at ``m`` bits, combined with a per-tensor
+scale and saturation for narrow-range formats (FP8-E4M3 fmax=448).
+
+``m`` is *runtime data* (a traced jnp scalar), so a single lowered HLO module
+can evaluate every mixed-precision configuration: the rust coordinator feeds a
+per-layer ``mantissa_bits`` vector into the compiled executable.
+
+Conventions (mirrored in rust/src/numerics):
+  format      m   fmax      bytes
+  fp32       23   (none)    4      identity (reference precision)
+  bf16        7   (none)    2
+  fp16       10   (none)    2
+  fp8_e4m3    3   448       1
+  fp8_e5m2    2   57344     1
+alpha_f = 2^(-2m)/12 is the per-element relative MSE of the rounding noise.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Keep in sync with rust/src/numerics/formats.rs.
+FORMATS = {
+    "fp32": dict(mbits=23, fmax=None, bytes=4),
+    "bf16": dict(mbits=7, fmax=None, bytes=2),
+    "fp16": dict(mbits=10, fmax=None, bytes=2),
+    "fp8_e4m3": dict(mbits=3, fmax=448.0, bytes=1),
+    "fp8_e5m2": dict(mbits=2, fmax=57344.0, bytes=1),
+}
+
+
+def alpha(mbits) -> float:
+    """Relative MSE of rounding noise for a format with ``mbits`` mantissa bits."""
+    return 2.0 ** (-2.0 * mbits) / 12.0
+
+
+def fmax_for_mbits(m):
+    """Saturation range as a function of (traced) mantissa bits.
+
+    Narrow FP8 formats saturate; wider formats have effectively unbounded
+    range on our data.  Branch-free so that ``m`` may be a traced value:
+      m <= 2 -> e5m2 (57344), m == 3 -> e4m3 (448), else unbounded.
+    """
+    big = jnp.float32(3.0e38)
+    return jnp.where(m <= 2.5, 57344.0, jnp.where(m <= 3.5, 448.0, big))
+
+
+def round_mantissa(v, m):
+    """Round-to-nearest of ``v`` at ``m`` stored mantissa bits (elementwise).
+
+    For |v| in [2^e, 2^{e+1}) the representable grid spacing is 2^{e-m};
+    m=23 is (to f32 resolution) the identity.
+
+    The exponent is clamped to [-96, 120]: without it, near-denormal inputs
+    (|v| < 2^-104) make exp2(m - e) overflow to +inf and the reconstruction
+    inf/inf = NaN poisons the whole forward pass.  Clamping flushes such
+    values to 0 (any real format would) and leaves huge values unrounded
+    (they saturate via fmax anyway).
+    """
+    av = jnp.abs(v)
+    # Guard zeros: log2(0) = -inf would poison exp2 below.
+    e = jnp.floor(jnp.log2(jnp.where(av > 0, av, 1.0)))
+    e = jnp.clip(e, -96.0, 120.0)
+    f = jnp.exp2(m - e)
+    return jnp.where(av > 0, jnp.round(v * f) / f, 0.0)
+
+
+def tensor_scale(v, m, pert=1.0):
+    """Per-tensor quantization scale with perturbation multiplier ``pert``.
+
+    Narrow formats are scaled so max|v| maps onto the representable range;
+    wide formats use unit scale.  ``pert`` models the paper's seed protocol
+    ("perturb the scales before quantization").
+    """
+    fmax = fmax_for_mbits(m)
+    amax = jnp.max(jnp.abs(v))
+    scaled = fmax < 1.0e30
+    s = jnp.where(scaled, jnp.where(amax > 0, amax, 1.0) / fmax, 1.0)
+    return s * pert
+
+
+def fake_quant(v, m, pert=1.0):
+    """Quantize-dequantize ``v`` to a format with ``m`` mantissa bits."""
+    s = tensor_scale(v, m, pert)
+    fmax = fmax_for_mbits(m)
+    vn = v / s
+    q = round_mantissa(vn, m)
+    q = jnp.clip(q, -fmax, fmax)
+    return q * s
+
+
+def fake_quant_with_scale(v, m, s, fmax):
+    """Quantize-dequantize with a precomputed scale (kernel-internal form)."""
+    vn = v / s
+    q = round_mantissa(vn, m)
+    q = jnp.clip(q, -fmax, fmax)
+    return q * s

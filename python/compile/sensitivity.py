@@ -1,0 +1,61 @@
+"""L2: the paper's sensitivity program (§2.2, eq. 17-21), lowered to HLO.
+
+One high-precision forward+backward pass per calibration sample r (batch=1,
+matching the paper's per-sample math exactly) returning:
+  g    — the sample loss g^r (scalar),
+  s    — f32[Lq] per-quantizable-layer sensitivities
+         s_l^r = ||z_l^r .* dg/dz_l^r||^2   (eq. 19),
+         where z is the layer's extended input ([x; w] for linear,
+         [x0; x1] for BGEMM).
+
+Implementation: multiplicative ones-taps (see model.fwd) make the tap
+gradient equal z .* zdot elementwise, so s_l is just the summed squared
+tap-gradient over the layer's components.  The rust coordinator averages
+s_l^r and (g^r)^2 over the calibration set (eq. 21) and predicts the loss
+MSE of any MP configuration as d = sum_l s_l * alpha_f(l) (eq. 22-23, 6).
+
+Note the paper's memory point holds here too: no optimizer state is kept —
+the backward pass only materializes activation-shaped tap gradients.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.model import ModelCfg, fwd, make_taps, qlayer_names, qlayer_kinds
+
+
+def sensitivity_fn(cfg: ModelCfg):
+    """Returns f(params_tuple..., tokens[1,T]) -> (g, s[Lq]) ready to lower."""
+    qnames = qlayer_names(cfg)
+    qkinds = qlayer_kinds(cfg)
+
+    def run(params: dict, tokens):
+        def loss_of_taps(taps):
+            _, loss = fwd(cfg, params, tokens, taps=taps, use_pallas=False)
+            return loss[0]
+
+        taps = make_taps(cfg, 1)
+        g, grads = jax.value_and_grad(loss_of_taps)(taps)
+        comps = []
+        for name, kind in zip(qnames, qkinds):
+            keys = (".a", ".b") if kind == "bgemm" else (".x", ".w")
+            s = sum(jnp.sum(jnp.square(grads[name + k])) for k in keys)
+            comps.append(s)
+        return g, jnp.stack(comps)
+
+    return run
+
+
+def empirical_loss_noise(cfg: ModelCfg, params, tokens, mbits, pscale,
+                         use_pallas=False):
+    """Measured loss error (ghat - g) per sample — validation-only helper.
+
+    Used by pytest to check the Taylor/independence model: predicted
+    d = sum_l s_l * alpha_f should track E[(ghat - g)^2] for small noise.
+    """
+    _, g = fwd(cfg, params, tokens, use_pallas=False)
+    _, ghat = fwd(cfg, params, tokens, mbits=mbits, pscale=pscale,
+                  use_pallas=use_pallas)
+    return ghat - g

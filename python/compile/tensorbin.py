@@ -1,0 +1,64 @@
+""".tbin — tiny named-tensor container (little-endian), shared with rust.
+
+Layout (keep in sync with rust/src/tensorbin/):
+  magic   6 bytes  b"TBIN1\\0"
+  count   u32      number of tensors
+  per tensor:
+    name_len u16, name bytes (utf-8)
+    dtype    u8   (0 = f32, 1 = i32)
+    ndim     u8
+    dims     u32 * ndim
+    payload  raw little-endian values (4 bytes each)
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"TBIN1\x00"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+DTYPES_INV = {0: np.float32, 1: np.int32}
+
+
+def write_tbin(path: str, tensors: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in DTYPES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read_tbin(path: str) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[:6] != MAGIC:
+        raise ValueError(f"{path}: bad magic")
+    off = 6
+    (count,) = struct.unpack_from("<I", data, off)
+    off += 4
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off:off + nlen].decode()
+        off += nlen
+        dtype, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, DTYPES_INV[dtype], count=n, offset=off)
+        off += 4 * n
+        out[name] = arr.reshape(dims).copy()
+    return out

@@ -1,0 +1,69 @@
+"""Build-time trainer for the stand-in LLMs (see DESIGN.md §3).
+
+Plain AdamW on the PAD-masked next-token cross-entropy, pure-jnp forward
+(``use_pallas=False``, no quantization) for speed; the trained weights are
+frozen into artifacts/<model>/weights.tbin and every runtime experiment is
+PTQ on top of them — exactly the paper's setting (no QAT, no fine-tuning).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.corpus import corpus_batch
+from compile.model import ModelCfg, fwd, init_params
+
+
+def adamw_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def adamw_step(params, grads, state, lr, b1=0.9, b2=0.98, eps=1.0e-8, wd=0.01):
+    t = state["t"] + 1.0
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * jnp.square(grads[k]) for k in params}
+    mh = {k: m[k] / (1 - b1 ** t) for k in params}
+    vh = {k: v[k] / (1 - b2 ** t) for k in params}
+    new = {k: params[k] - lr * (mh[k] / (jnp.sqrt(vh[k]) + eps) + wd * params[k])
+           for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train(cfg: ModelCfg, verbose: bool = True):
+    """Returns (params, history) — history is [(step, loss)] for the manifest."""
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_params(cfg, key)
+    opt = adamw_init(params)
+    rng = np.random.default_rng(1000 + cfg.seed)
+
+    def loss_fn(p, tokens):
+        _, loss = fwd(cfg, p, tokens, use_pallas=False)
+        return loss.mean()
+
+    @jax.jit
+    def step(p, o, tokens, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(p, tokens)
+        p2, o2 = adamw_step(p, grads, o, lr)
+        return p2, o2, loss
+
+    history = []
+    t0 = time.time()
+    for i in range(cfg.train_steps):
+        # Cosine decay with short warmup.
+        warm = min(1.0, (i + 1) / 50.0)
+        decay = 0.5 * (1.0 + np.cos(np.pi * i / cfg.train_steps))
+        lr = cfg.lr * warm * (0.1 + 0.9 * decay)
+        tokens = jnp.asarray(corpus_batch(rng, cfg, cfg.train_b))
+        params, opt, loss = step(params, opt, tokens, jnp.float32(lr))
+        if i % 100 == 0 or i == cfg.train_steps - 1:
+            history.append((i, float(loss)))
+            if verbose:
+                print(f"[train {cfg.name}] step {i:5d} loss {float(loss):.4f} "
+                      f"({time.time() - t0:.1f}s)", flush=True)
+    return params, history

@@ -1,0 +1,94 @@
+"""Task-dataset invariants: the rust eval harness relies on these."""
+
+import numpy as np
+import pytest
+
+from compile import corpus
+from compile.model import CONFIGS, END, PAD, SEP, SYM_BASE
+
+CFG = CONFIGS["tiny-s"]
+
+
+@pytest.fixture(scope="module")
+def tasks():
+    return {t.name: t for t in corpus.make_all_tasks(CFG, 16, seed=0)}
+
+
+def test_line_structure():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        line, pstart, seq, rev = corpus.make_line(rng, CFG)
+        assert len(line) <= CFG.seq
+        assert line[-1] == END
+        assert line[pstart - 1] == SEP
+        payload = line[pstart:-1]
+        assert payload == (seq[::-1] if rev else seq)
+        assert all(tk >= SYM_BASE for tk in seq)
+
+
+def test_batch_shape_and_padding():
+    rng = np.random.default_rng(1)
+    b = corpus.corpus_batch(rng, CFG, 16)
+    assert b.shape == (16, CFG.seq) and b.dtype == np.int32
+    assert np.all(b < CFG.vocab) and np.all(b >= 0)
+    # PAD only as a suffix.
+    for row in b:
+        nz = np.nonzero(row == PAD)[0]
+        if len(nz):
+            assert np.all(row[nz[0]:] == PAD)
+
+
+@pytest.mark.parametrize("name,k", [("hella", 4), ("lamb", 1),
+                                    ("wino", 2), ("piqa", 2)])
+def test_task_shapes(tasks, name, k):
+    td = tasks[name]
+    assert td.k == k
+    n = len(td.labels)
+    assert td.tokens.shape == (n * k, CFG.seq)
+    assert td.spans.shape == (n * k, 2)
+    assert np.all(td.labels >= 0)
+    if td.kind == "choice":
+        assert np.all(td.labels < k)
+    else:
+        assert np.all(td.labels < CFG.vocab)
+
+
+def test_spans_valid(tasks):
+    for td in tasks.values():
+        for row, (s, e) in zip(td.tokens, td.spans):
+            assert 0 < s < e <= CFG.seq
+            # Scored span is never padding.
+            assert np.all(row[s:e] != PAD)
+
+
+def test_choice_rows_differ_only_where_expected(tasks):
+    for name in ("hella", "wino", "piqa"):
+        td = tasks[name]
+        for ex in range(len(td.labels)):
+            rows = td.tokens[ex * td.k:(ex + 1) * td.k]
+            spans = td.spans[ex * td.k:(ex + 1) * td.k]
+            # All choices share the context before the span start.
+            s0 = spans[:, 0].min()
+            for r in rows[1:]:
+                assert np.array_equal(rows[0][:s0], r[:s0])
+            # And at least two rows differ inside the span.
+            assert any(not np.array_equal(rows[0], r) for r in rows[1:])
+
+
+def test_labels_roughly_balanced(tasks):
+    td = tasks["hella"]
+    counts = np.bincount(td.labels, minlength=td.k)
+    assert counts.max() <= len(td.labels)  # sanity
+    assert counts.min() >= 0
+    # With 16 examples over 4 choices, expect no label to dominate fully.
+    assert counts.max() < len(td.labels)
+
+
+def test_determinism():
+    a = corpus.make_all_tasks(CFG, 8, seed=5)
+    b = corpus.make_all_tasks(CFG, 8, seed=5)
+    for x, y in zip(a, b):
+        assert np.array_equal(x.tokens, y.tokens)
+        assert np.array_equal(x.labels, y.labels)
+    c = corpus.make_all_tasks(CFG, 8, seed=6)
+    assert any(not np.array_equal(x.tokens, y.tokens) for x, y in zip(a, c))

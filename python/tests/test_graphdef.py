@@ -1,0 +1,118 @@
+"""graph.json invariants — the contract with rust graph/partition + gaudisim."""
+
+import numpy as np
+import pytest
+
+from compile.graphdef import build_graph
+from compile.model import CONFIGS, qlayer_names
+
+CFG = CONFIGS["tiny-s"]
+
+
+@pytest.fixture(scope="module")
+def g():
+    return build_graph(CFG)
+
+
+def _ids(g):
+    return [n["id"] for n in g["nodes"]]
+
+
+def test_unique_ids(g):
+    ids = _ids(g)
+    assert len(ids) == len(set(ids))
+
+
+def test_edges_reference_nodes(g):
+    ids = set(_ids(g))
+    for s, d in g["edges"] + g["residual_edges"]:
+        assert s in ids and d in ids
+
+
+def test_acyclic_topological(g):
+    # Kahn's algorithm over all edges must consume every node.
+    ids = _ids(g)
+    indeg = {i: 0 for i in ids}
+    adj = {i: [] for i in ids}
+    for s, d in g["edges"] + g["residual_edges"]:
+        indeg[d] += 1
+        adj[s].append(d)
+    queue = [i for i in ids if indeg[i] == 0]
+    seen = 0
+    while queue:
+        v = queue.pop()
+        seen += 1
+        for w in adj[v]:
+            indeg[w] -= 1
+            if indeg[w] == 0:
+                queue.append(w)
+    assert seen == len(ids)
+
+
+def test_single_source_sink_without_residuals(g):
+    ids = set(_ids(g))
+    srcs = ids - {d for _, d in g["edges"]}
+    sinks = ids - {s for s, _ in g["edges"]}
+    assert srcs == {"embed"}
+    assert sinks == {"lm_head"}
+
+
+def test_qidx_bijection(g):
+    names = qlayer_names(CFG)
+    by_q = {n["qidx"]: n["id"] for n in g["nodes"] if n["qidx"] >= 0}
+    assert len(by_q) == CFG.n_qlayers
+    for i, name in enumerate(names):
+        assert by_q[i] == name
+    assert g["qlayers"] == names
+
+
+def test_engines_and_kinds(g):
+    for n in g["nodes"]:
+        assert n["engine"] in ("mme", "tpc")
+        if n["qidx"] >= 0:
+            assert n["engine"] == "mme"
+            assert n["kind"] in ("linear", "bgemm")
+            assert n["macs"] > 0
+        else:
+            assert n["macs"] == 0
+
+
+def test_mac_totals_match_dims(g):
+    n = CFG.eval_b * CFG.seq
+    byid = {x["id"]: x for x in g["nodes"]}
+    assert byid["blk0.q_proj"]["macs"] == n * CFG.d * CFG.d
+    assert byid["blk0.gate_proj"]["macs"] == n * CFG.d * CFG.ff
+    bh = CFG.eval_b * CFG.heads
+    assert byid["blk0.qk_matmul"]["macs"] == bh * CFG.seq * CFG.seq * CFG.hd
+    assert byid["lm_head"]["macs"] == n * CFG.d * CFG.vocab
+
+
+def test_linear_layers_have_param_bytes(g):
+    for n in g["nodes"]:
+        if n["kind"] == "linear":
+            assert n["param_bytes"] == 2 * n["c"] * n["k"]
+        if n["kind"] == "bgemm":
+            assert n["param_bytes"] == 0
+
+
+def test_residual_edges_are_skips(g):
+    # Every residual edge must short-circuit a path that also exists through
+    # the main edges (it is a skip, not the only connection).
+    adj = {}
+    for s, d in g["edges"]:
+        adj.setdefault(s, []).append(d)
+
+    def reachable(a, b):
+        stack, seen = [a], set()
+        while stack:
+            v = stack.pop()
+            if v == b:
+                return True
+            for w in adj.get(v, []):
+                if w not in seen:
+                    seen.add(w)
+                    stack.append(w)
+        return False
+
+    for s, d in g["residual_edges"]:
+        assert reachable(s, d), (s, d)

@@ -1,0 +1,108 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes (incl. non-divisible block dims), mantissa widths,
+and scale perturbations; assert_allclose against kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qmatmul import qmatmul, _pick_block, vmem_footprint
+from compile.kernels.qbgemm import qbgemm, _pick_group
+from compile.kernels.ref import qmatmul_ref, qbgemm_ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@given(
+    m_dim=st.sampled_from([8, 48, 64, 96, 384]),
+    c_dim=st.sampled_from([16, 96, 192]),
+    k_dim=st.sampled_from([32, 64, 96, 192]),
+    mbits=st.sampled_from([2.0, 3.0, 7.0, 10.0, 23.0]),
+    pert=st.sampled_from([1.0, 0.97, 1.05]),
+    seed=st.integers(min_value=0, max_value=7),
+)
+@settings(max_examples=40, deadline=None)
+def test_qmatmul_matches_ref(m_dim, c_dim, k_dim, mbits, pert, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, m_dim, c_dim), _rand(rng, k_dim, c_dim)
+    b = _rand(rng, k_dim)
+    got = qmatmul(x, w, b, jnp.float32(mbits), jnp.float32(pert))
+    want = qmatmul_ref(x, w, b, jnp.float32(mbits), jnp.float32(pert))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@given(
+    g_dim=st.sampled_from([1, 4, 8, 24, 48]),
+    m_dim=st.sampled_from([8, 48]),
+    c_dim=st.sampled_from([16, 32, 48]),
+    k_dim=st.sampled_from([24, 48]),
+    mbits=st.sampled_from([2.0, 3.0, 7.0, 23.0]),
+    seed=st.integers(min_value=0, max_value=7),
+)
+@settings(max_examples=30, deadline=None)
+def test_qbgemm_matches_ref(g_dim, m_dim, c_dim, k_dim, mbits, seed):
+    rng = np.random.default_rng(100 + seed)
+    a, b = _rand(rng, g_dim, m_dim, c_dim), _rand(rng, g_dim, c_dim, k_dim)
+    got = qbgemm(a, b, jnp.float32(mbits))
+    want = qbgemm_ref(a, b, jnp.float32(mbits))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_qmatmul_none_bias():
+    rng = np.random.default_rng(0)
+    x, w = _rand(rng, 64, 32), _rand(rng, 32, 32)
+    got = qmatmul(x, w, None, jnp.float32(23.0), jnp.float32(1.0))
+    want = qmatmul_ref(x, w, None, jnp.float32(23.0))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_qmatmul_identity_at_fp32():
+    rng = np.random.default_rng(1)
+    x, w = _rand(rng, 64, 96), _rand(rng, 64, 96)
+    got = qmatmul(x, w, None, jnp.float32(23.0), jnp.float32(1.0))
+    plain = np.asarray(x) @ np.asarray(w).T
+    np.testing.assert_allclose(np.asarray(got), plain, rtol=3e-5, atol=3e-5)
+
+
+def test_qmatmul_under_jit():
+    rng = np.random.default_rng(2)
+    x, w = _rand(rng, 48, 96), _rand(rng, 32, 96)
+    f = jax.jit(lambda x, w, m: qmatmul(x, w, None, m, jnp.float32(1.0)))
+    got = f(x, w, jnp.float32(3.0))
+    want = qmatmul_ref(x, w, None, jnp.float32(3.0))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_quantization_grad_is_zero_through_round():
+    # fake-quant uses round(): gradient through the kernel would be degenerate,
+    # which is why sensitivity runs at high precision (model.fwd asserts this).
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 8, 16)
+    w = _rand(rng, 8, 16)
+    g = jax.grad(lambda x: qmatmul_ref(x, w, None, jnp.float32(3.0)).sum())(x)
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+def test_pick_block_divides():
+    for dim in (7, 31, 48, 64, 96, 384):
+        for pref in (8, 32, 64):
+            b = _pick_block(dim, pref)
+            assert dim % b == 0 and 1 <= b <= max(pref, 1)
+    for g in (1, 3, 8, 48):
+        gb = _pick_group(g, 8)
+        assert g % gb == 0
+
+
+def test_vmem_footprint_monotone_in_blocks():
+    f1 = vmem_footprint(384, 96, 64, 32, 32)
+    f2 = vmem_footprint(384, 96, 64, 64, 32)
+    assert f2 > f1

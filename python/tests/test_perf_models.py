@@ -1,0 +1,67 @@
+"""Perf-model invariants (DESIGN.md §8): the shipped kernel block shapes fit
+the VMEM budget, the MXU-utilization model behaves, and the lowered HLO has
+no redundant matmuls (one dot per quantizable layer per pass)."""
+
+import os
+
+import pytest
+
+from compile.model import CONFIGS
+from compile.perf_l1 import (VMEM_BUDGET, chosen_config_report,
+                             mxu_utilization)
+from compile.perf_l2 import audit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.parametrize("model", ["tiny-s", "tiny-m"])
+def test_shipped_blocks_fit_vmem(model):
+    cfg = CONFIGS[model]
+    for layer, bm, bk, c, footprint, util in chosen_config_report(cfg):
+        assert footprint <= VMEM_BUDGET, (layer, footprint)
+        assert 0.0 < util <= 1.0
+
+
+def test_mxu_utilization_model():
+    # Full 128x128x128 tile saturates; halving any dim halves utilization.
+    assert mxu_utilization(128, 128, 128) == 1.0
+    assert mxu_utilization(64, 128, 128) == 0.5
+    assert mxu_utilization(64, 64, 128) == 0.25
+    # Oversized tiles don't report > 1.
+    assert mxu_utilization(256, 256, 256) == 1.0
+
+
+@pytest.mark.skipif(not os.path.isdir(os.path.join(ART, "tiny-s")),
+                    reason="artifacts not built")
+@pytest.mark.parametrize("model", ["tiny-s", "tiny-m"])
+def test_hlo_dot_count_matches_layer_table(model):
+    cfg = CONFIGS[model]
+    ops = audit(ART, model)
+    # fwd_ref: one dot per quantizable layer (q,k,v,qk,av,o,gate,up,down
+    # per block + lm_head).  XLA may keep a couple of auxiliary dots from
+    # rope/softmax lowering; require >= layer count and < 1.5x.
+    nq = cfg.n_qlayers
+    dots = ops["fwd_ref"].get("dot", 0)
+    assert nq <= dots <= int(1.5 * nq) + 2, (dots, nq)
+    # Sensitivity is fwd+bwd at high precision: dots roughly 3x fwd
+    # (fwd + two grads per matmul), never more than 4x.
+    sdots = ops["sensitivity"].get("dot", 0)
+    assert 2 * nq <= sdots <= 4 * nq + 4, (sdots, nq)
+
+
+@pytest.mark.skipif(not os.path.isdir(os.path.join(ART, "tiny-s")),
+                    reason="artifacts not built")
+def test_pallas_fwd_structure():
+    # interpret-mode pallas_calls lower to per-grid-step computations (XLA
+    # unrolls small grids into call/dynamic-slice sequences rather than
+    # while loops).  The kernel path must be materially larger than the
+    # pure-jnp ref, with identical dot counts (same math, different tiling).
+    ops = audit(ART, "tiny-s")
+    quant_total = sum(ops["fwd_quant"].values())
+    ref_total = sum(ops["fwd_ref"].values())
+    assert quant_total > ref_total * 1.2, (quant_total, ref_total)
+    assert ops["fwd_quant"].get("dot", 0) == ops["fwd_ref"].get("dot", 0)
+    # Block-wise execution shows up as dynamic slicing in the kernel path.
+    slices_q = ops["fwd_quant"].get("dynamic-slice", 0) + ops["fwd_quant"].get("slice", 0)
+    slices_r = ops["fwd_ref"].get("dynamic-slice", 0) + ops["fwd_ref"].get("slice", 0)
+    assert slices_q >= slices_r

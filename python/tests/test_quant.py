@@ -1,0 +1,106 @@
+"""Properties of the fake-quant numerics (compile/quant.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quant import (FORMATS, alpha, fake_quant, fmax_for_mbits,
+                           round_mantissa, tensor_scale)
+
+finite_f32 = st.floats(min_value=-1.0e4, max_value=1.0e4, width=32,
+                       allow_nan=False, allow_infinity=False)
+
+
+def test_alpha_values():
+    # alpha_f = 2^-2m / 12 (paper eq. after (16)).
+    assert alpha(3) == pytest.approx(2.0 ** -6 / 12.0)
+    assert alpha(7) == pytest.approx(2.0 ** -14 / 12.0)
+    # Monotone decreasing in m.
+    ms = [FORMATS[f]["mbits"] for f in ("fp8_e5m2", "fp8_e4m3", "bf16", "fp16", "fp32")]
+    als = [alpha(m) for m in ms]
+    assert als == sorted(als, reverse=True)
+
+
+def test_round_mantissa_identity_at_f32():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=256).astype(np.float32))
+    y = round_mantissa(x, 23.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-7)
+
+
+@given(st.integers(min_value=1, max_value=23))
+@settings(max_examples=23, deadline=None)
+def test_round_mantissa_relative_error_bound(m):
+    # |q - v| <= |v| * 2^-m / 2  — matches the noise model (eq. 15).
+    x = jnp.asarray(np.random.default_rng(m).normal(size=512).astype(np.float32))
+    q = np.asarray(round_mantissa(x, float(m)))
+    v = np.asarray(x)
+    bound = np.abs(v) * 2.0 ** (-m) * 0.5 * (1 + 1e-5) + 1e-30
+    assert np.all(np.abs(q - v) <= bound)
+
+
+@given(st.integers(min_value=1, max_value=23))
+@settings(max_examples=23, deadline=None)
+def test_round_mantissa_idempotent(m):
+    x = jnp.asarray(np.random.default_rng(m + 99).normal(size=256).astype(np.float32))
+    q1 = round_mantissa(x, float(m))
+    q2 = round_mantissa(q1, float(m))
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-7)
+
+
+def test_round_mantissa_preserves_zero_and_sign():
+    x = jnp.asarray([0.0, -0.0, 1.5, -1.5, 1e-20, -1e-20], jnp.float32)
+    q = np.asarray(round_mantissa(x, 3.0))
+    assert q[0] == 0.0 and q[1] == 0.0
+    assert q[2] > 0 and q[3] < 0
+    assert np.all(np.sign(q[4:]) == np.sign(np.asarray(x[4:])))
+
+
+def test_fmax_selection():
+    assert float(fmax_for_mbits(jnp.float32(2.0))) == 57344.0
+    assert float(fmax_for_mbits(jnp.float32(3.0))) == 448.0
+    assert float(fmax_for_mbits(jnp.float32(7.0))) > 1e30
+    assert float(fmax_for_mbits(jnp.float32(23.0))) > 1e30
+
+
+def test_fake_quant_fp8_saturation_via_scale():
+    # Per-tensor scaling maps max|v| onto fmax: no element exceeds fmax * s.
+    v = jnp.asarray([1.0, 100.0, -1000.0, 0.5], jnp.float32)
+    q = np.asarray(fake_quant(v, 3.0))
+    s = float(tensor_scale(v, jnp.float32(3.0)))
+    assert np.max(np.abs(q)) <= 448.0 * s * (1 + 1e-6)
+    # Largest element survives scaling approximately.
+    assert q[2] == pytest.approx(-1000.0, rel=0.1)
+
+
+def test_fake_quant_mse_matches_alpha_statistically():
+    # E[(q-v)^2] ~= E[v^2] * alpha_f for dense mantissas (eq. 16 aggregated).
+    rng = np.random.default_rng(3)
+    v = jnp.asarray(rng.lognormal(0.0, 1.0, size=200_000).astype(np.float32))
+    m = 3.0
+    q = np.asarray(fake_quant(v, m))
+    rel = (q - np.asarray(v)) / np.asarray(v)
+    measured = np.mean(rel ** 2)
+    predicted = alpha(m)
+    # Rounding noise is not exactly uniform; allow 2x band.
+    assert predicted / 2.5 < measured < predicted * 2.5
+
+
+def test_scale_perturbation_changes_grid():
+    v = jnp.asarray(np.random.default_rng(5).normal(size=64).astype(np.float32))
+    q1 = np.asarray(fake_quant(v, 3.0, pert=1.0))
+    q2 = np.asarray(fake_quant(v, 3.0, pert=1.03))
+    assert not np.allclose(q1, q2)
+    # ... but both stay close to v.
+    np.testing.assert_allclose(q2, np.asarray(v), rtol=0.2, atol=1e-6)
+
+
+def test_round_mantissa_denormal_safe():
+    # Regression: near-denormal inputs must not produce NaN via
+    # exp2(m - e) overflow (found by the tiny-m Table-1 sweep).
+    v = jnp.asarray([1e-38, -1e-38, 1e-30, 2e-44, 1e30, -1e35], jnp.float32)
+    for m in (2.0, 3.0, 7.0, 23.0):
+        q = np.asarray(round_mantissa(v, m))
+        assert np.all(np.isfinite(q)), (m, q)
+    q2 = np.asarray(fake_quant(v, 3.0))
+    assert np.all(np.isfinite(q2))

@@ -1,0 +1,99 @@
+"""The paper's core claim (§2.2 + §3.2): the first-order loss-MSE model
+d = sum_l s_l * alpha_f predicts the measured E[(ghat - g)^2]."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus
+from compile.model import CONFIGS, fwd, init_params, qlayer_names
+from compile.quant import alpha
+from compile.sensitivity import sensitivity_fn
+
+CFG = CONFIGS["tiny-s"]
+R = 12  # calibration samples for the test
+
+
+@pytest.fixture(scope="module")
+def calib():
+    params = init_params(CFG, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(42)
+    toks = [jnp.asarray(corpus.corpus_batch(rng, CFG, 1)) for _ in range(R)]
+    sfn = jax.jit(sensitivity_fn(CFG))
+    gs, ss = [], []
+    for t in toks:
+        g, s = sfn(params, t)
+        gs.append(float(g))
+        ss.append(np.asarray(s))
+    s_mean = np.mean(ss, axis=0)        # eq. (21)
+    g2_mean = float(np.mean(np.square(gs)))
+    return params, toks, s_mean, g2_mean
+
+
+def test_sensitivities_positive_finite(calib):
+    _, _, s_mean, g2 = calib
+    assert s_mean.shape == (CFG.n_qlayers,)
+    assert np.all(np.isfinite(s_mean)) and np.all(s_mean >= 0)
+    assert np.count_nonzero(s_mean) == CFG.n_qlayers
+    assert g2 > 0
+
+
+def test_sensitivity_spread(calib):
+    # Layers must differ in sensitivity — otherwise MP selection is vacuous.
+    _, _, s_mean, _ = calib
+    assert s_mean.max() / max(s_mean.min(), 1e-30) > 3.0
+
+
+def _measured_mse(params, toks, mbits, n_noise=8):
+    """E over samples and scale-perturbation draws of (ghat - g)^2."""
+    errs = []
+    rng = np.random.default_rng(0)
+    for t in toks:
+        _, g = fwd(CFG, params, t, use_pallas=False)
+        for _ in range(n_noise):
+            ps = jnp.asarray(1.0 + 0.05 * rng.standard_normal(CFG.n_qlayers)
+                             .astype(np.float32))
+            _, gh = fwd(CFG, params, t, mbits=mbits, pscale=ps,
+                        use_pallas=False)
+            errs.append(float(gh[0] - g[0]))
+    return float(np.mean(np.square(errs)))
+
+
+@pytest.mark.parametrize("m", [7.0, 5.0])
+def test_taylor_prediction_tracks_measurement(calib, m):
+    # All layers at m mantissa bits: predicted d = alpha(m) * sum_l s_l.
+    params, toks, s_mean, _ = calib
+    mbits = jnp.full((CFG.n_qlayers,), m)
+    predicted = alpha(m) * float(s_mean.sum())
+    measured = _measured_mse(params, toks, mbits)
+    assert measured > 0
+    # First-order model with independence assumptions: demand the right
+    # order of magnitude (paper's Fig. 3a shows the same quality of fit).
+    ratio = predicted / measured
+    assert 0.1 < ratio < 10.0, (predicted, measured)
+
+
+def test_additivity_across_layer_groups(calib):
+    # Quantizing {first half} and {second half} separately should sum to
+    # roughly the MSE of quantizing all (independence assumption, eq. 23/6).
+    params, toks, _, _ = calib
+    lq = CFG.n_qlayers
+    half = lq // 2
+    m = 6.0
+    base = jnp.full((lq,), 23.0)
+    mb_a = base.at[:half].set(m)
+    mb_b = base.at[half:].set(m)
+    mb_all = jnp.full((lq,), m)
+    d_a = _measured_mse(params, toks, mb_a, n_noise=6)
+    d_b = _measured_mse(params, toks, mb_b, n_noise=6)
+    d_all = _measured_mse(params, toks, mb_all, n_noise=6)
+    assert 0.25 < (d_a + d_b) / d_all < 4.0
+
+
+def test_sensitivity_scales_with_loss_grad(calib):
+    # lm_head feeds the loss directly — its sensitivity should be material.
+    _, _, s_mean, _ = calib
+    names = qlayer_names(CFG)
+    lm = s_mean[names.index("lm_head")]
+    assert lm > np.percentile(s_mean, 10)

@@ -1,0 +1,63 @@
+""".tbin container round-trip (writer here, reader also reimplemented in rust)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.tensorbin import MAGIC, read_tbin, write_tbin
+
+
+def test_roundtrip_basic(tmp_path):
+    p = str(tmp_path / "x.tbin")
+    a = np.arange(12, dtype=np.float32).reshape(3, 4)
+    b = np.arange(6, dtype=np.int32).reshape(2, 3)
+    write_tbin(p, [("a", a), ("b", b)])
+    out = read_tbin(p)
+    assert set(out) == {"a", "b"}
+    np.testing.assert_array_equal(out["a"], a)
+    np.testing.assert_array_equal(out["b"], b)
+    assert out["a"].dtype == np.float32 and out["b"].dtype == np.int32
+
+
+@given(
+    ndim=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=100),
+    use_int=st.booleans(),
+)
+@settings(max_examples=25, deadline=None)
+def test_roundtrip_random(tmp_path_factory, ndim, seed, use_int):
+    rng = np.random.default_rng(seed)
+    shape = tuple(int(rng.integers(1, 6)) for _ in range(ndim))
+    if use_int:
+        arr = rng.integers(-1000, 1000, size=shape).astype(np.int32)
+    else:
+        arr = rng.normal(size=shape).astype(np.float32)
+    p = str(tmp_path_factory.mktemp("tb") / "r.tbin")
+    write_tbin(p, [("t", arr)])
+    out = read_tbin(p)["t"]
+    np.testing.assert_array_equal(out, arr)
+    assert out.shape == shape
+
+
+def test_magic_checked(tmp_path):
+    p = str(tmp_path / "bad.tbin")
+    with open(p, "wb") as f:
+        f.write(b"NOTBIN" + b"\x00" * 10)
+    with pytest.raises(ValueError):
+        read_tbin(p)
+
+
+def test_rejects_f64(tmp_path):
+    p = str(tmp_path / "f64.tbin")
+    with pytest.raises(TypeError):
+        write_tbin(p, [("x", np.zeros(3, np.float64))])
+
+
+def test_header_layout(tmp_path):
+    p = str(tmp_path / "h.tbin")
+    write_tbin(p, [("ab", np.zeros((2,), np.float32))])
+    raw = open(p, "rb").read()
+    assert raw[:6] == MAGIC
+    assert raw[6:10] == (1).to_bytes(4, "little")
+    assert raw[10:12] == (2).to_bytes(2, "little")
+    assert raw[12:14] == b"ab"

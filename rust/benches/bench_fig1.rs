@@ -1,0 +1,64 @@
+//! Bench for Figure 1: regenerate the attention-sub-graph gain table
+//! (32 configs x {measured-group, per-layer-sum, theoretical}) and time the
+//! measurement harness end to end.
+
+use ampq::gaudisim::{HwModel, Simulator};
+use ampq::graph::partition::partition;
+use ampq::model::Manifest;
+use ampq::numerics::PAPER_FORMATS;
+use ampq::timing::{measure_groups, measure_per_layer, SimTtft};
+use ampq::util::bench::{bench, black_box};
+use ampq::util::Rng;
+use std::path::Path;
+
+fn main() {
+    let manifest = Manifest::load(Path::new("artifacts")).expect("make artifacts");
+    for model in ["tiny-s", "tiny-m"] {
+        let info = manifest.model(model).unwrap();
+        let graph = info.load_graph(&manifest.root).unwrap();
+        let part = partition(&graph).unwrap();
+        let hw = HwModel { noise_std: 0.0, ..HwModel::default() };
+
+        bench(&format!("fig1/{model}/measure_all_groups"), 1, 5, || {
+            let sim = Simulator::new(&graph, hw.clone());
+            let mut src = SimTtft { sim, rng: Rng::new(0), reps: 5 };
+            black_box(measure_groups(&mut src, &part, &PAPER_FORMATS).unwrap());
+        });
+        bench(&format!("fig1/{model}/measure_per_layer"), 1, 5, || {
+            let sim = Simulator::new(&graph, hw.clone());
+            let mut src = SimTtft { sim, rng: Rng::new(0), reps: 5 };
+            black_box(measure_per_layer(&mut src, &PAPER_FORMATS).unwrap());
+        });
+
+        // Correctness shape check mirrored from the paper: per-layer sums
+        // must mispredict the attention group's measured gains.
+        let sim = Simulator::new(&graph, hw.clone());
+        let mut src = SimTtft { sim, rng: Rng::new(0), reps: 1 };
+        let tm = measure_groups(&mut src, &part, &PAPER_FORMATS).unwrap();
+        let pl_gains = measure_per_layer(&mut src, &PAPER_FORMATS).unwrap();
+        let gi = part.groups.iter().position(|g| g.len() == 5).unwrap();
+        let g = &tm.groups[gi];
+        let worst_gap = g
+            .configs
+            .iter()
+            .zip(&g.gains)
+            .map(|(fmts, &m)| {
+                let s: f64 = g
+                    .qidxs
+                    .iter()
+                    .zip(fmts)
+                    .map(|(&q, &f)| pl_gains[q][if f == ampq::numerics::Format::Bf16 { 0 } else { 1 }])
+                    .sum();
+                (s - m).abs()
+            })
+            .fold(0.0f64, f64::max);
+        let max_gain = g.gains.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "fig1/{model}: worst per-layer-sum error {:.1} us = {:.0}% of max group gain {:.1} us",
+            worst_gap,
+            100.0 * worst_gap / max_gain,
+            max_gain
+        );
+        assert!(worst_gap / max_gain > 0.05, "expected the Fig-1 non-additivity gap");
+    }
+}

@@ -1,0 +1,63 @@
+//! Bench for Figures 4/5/7 + Table 1: a reduced accuracy-vs-TTFT sweep
+//! (IP-ET family, 3 strategies, 2 seeds) with the end-to-end timing of the
+//! evaluation hot loop — the dominant cost of regenerating the paper.
+
+use ampq::coordinator::{Pipeline, Strategy};
+use ampq::evalharness::{load_all_tasks, CachedEvaluator};
+use ampq::figures::sweep::{aggregate, run_sweep};
+use ampq::gaudisim::{HwModel, MpConfig};
+use ampq::metrics::Objective;
+use ampq::model::Manifest;
+use ampq::numerics::PAPER_FORMATS;
+use ampq::runtime::FwdMode;
+use ampq::util::bench::bench;
+use std::path::Path;
+
+fn main() {
+    let manifest = Manifest::load(Path::new("artifacts")).expect("make artifacts");
+    let pl = Pipeline::new(&manifest, "tiny-s", FwdMode::Ref, HwModel::default(),
+                           PAPER_FORMATS.to_vec())
+        .unwrap();
+    let tasks = load_all_tasks(&manifest.root, &pl.info).unwrap();
+    let tm = pl.measure_time(0, 5).unwrap();
+    let family = pl.family(Objective::EmpiricalTime, &tm);
+
+    // Single-task single-config eval: the innermost unit.
+    let nq = pl.info.n_qlayers;
+    let cfg = MpConfig::all_bf16(nq);
+    let ones = vec![1.0f32; nq];
+    bench("table1/eval_one_task (hella, 256 rows)", 1, 3, || {
+        ampq::evalharness::evaluate(&pl.mr, &tasks[0], &cfg, &ones).unwrap();
+    });
+
+    let t0 = std::time::Instant::now();
+    let mut eval = CachedEvaluator::new(&pl.mr, &tasks);
+    let sweep = run_sweep(
+        &pl,
+        &family,
+        &tasks,
+        &[0.0, 0.004, 0.007],
+        2,
+        0.02,
+        &[Strategy::Ip, Strategy::Random, Strategy::Prefix],
+        &mut eval,
+    )
+    .unwrap();
+    println!(
+        "table1/reduced_sweep: {} points, {} unique configs, {:.1}s total",
+        sweep.points.len(),
+        eval.cache_len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // Paper-shape check: IP-ET's accuracy at the tightest nonzero tau should
+    // not be materially worse than the baselines', and its TTFT not slower.
+    let ip = aggregate(&sweep, Strategy::Ip);
+    let rnd = aggregate(&sweep, Strategy::Random);
+    let last = ip.len() - 1;
+    println!(
+        "table1 shape: tau={:.3} IP {:+.3}% @ {:.0}us | Random {:+.3}% @ {:.0}us",
+        ip[last].tau, ip[last].acc_diff_mean, ip[last].ttft_us,
+        rnd[last].acc_diff_mean, rnd[last].ttft_us
+    );
+}

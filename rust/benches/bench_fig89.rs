@@ -1,0 +1,51 @@
+//! Bench for Figures 8 and 9: the IP-TT (MAC-time) and IP-M (memory)
+//! objective builders and solves across the tau grid.
+
+use ampq::coordinator::{optimize, paper_tau_grid, Pipeline};
+use ampq::gaudisim::HwModel;
+use ampq::metrics::Objective;
+use ampq::model::Manifest;
+use ampq::numerics::PAPER_FORMATS;
+use ampq::runtime::FwdMode;
+use ampq::util::bench::{bench, black_box};
+use std::path::Path;
+
+fn main() {
+    let manifest = Manifest::load(Path::new("artifacts")).expect("make artifacts");
+    for model in ["tiny-s", "tiny-m"] {
+        let pl = Pipeline::new(&manifest, model, FwdMode::Ref, HwModel::default(),
+                               PAPER_FORMATS.to_vec())
+            .unwrap();
+        let tm = pl.measure_time(0, 5).unwrap();
+
+        for objective in [Objective::TheoreticalTime, Objective::Memory] {
+            let family = pl.family(objective, &tm);
+            bench(&format!("fig89/{model}/{}/build+solve_tau_grid", objective.name()), 1, 10, || {
+                for tau in paper_tau_grid() {
+                    black_box(optimize(&family.groups, &pl.calibration, tau).unwrap());
+                }
+            });
+
+            // Shape check: gains monotone in tau; memory family never
+            // touches BGEMM layers.
+            let mut last = -1.0f64;
+            for tau in paper_tau_grid() {
+                let out = optimize(&family.groups, &pl.calibration, tau).unwrap();
+                assert!(out.solution.gain >= last - 1e-9);
+                last = out.solution.gain;
+                if objective == Objective::Memory {
+                    for (l, q) in pl.info.qlayers.iter().enumerate() {
+                        if q.kind == ampq::model::LayerKind::Bgemm {
+                            assert_eq!(out.config.get(l), ampq::numerics::Format::Bf16);
+                        }
+                    }
+                }
+            }
+            println!(
+                "fig89/{model}/{}: monotone gains up to {:.3e}",
+                objective.name(),
+                last
+            );
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! PJRT runtime benchmarks: compile time, forward latency (Pallas-kernel vs
+//! pure-jnp artifact), sensitivity pass — the L1/L2 execution costs as seen
+//! from the rust hot path.
+
+use ampq::gaudisim::MpConfig;
+use ampq::model::Manifest;
+use ampq::numerics::Format;
+use ampq::runtime::{FwdMode, ModelRuntime, Runtime};
+use ampq::util::bench::{bench, black_box};
+use std::path::Path;
+
+fn main() {
+    let manifest = Manifest::load(Path::new("artifacts")).expect("make artifacts");
+    let rt = Runtime::new().unwrap();
+    let info = manifest.model("tiny-s").unwrap().clone();
+    let calib = info.load_calib(&manifest.root).unwrap();
+    let tokens: Vec<i32> = calib[..info.eval_b].concat();
+    let nq = info.n_qlayers;
+    let fp8 = MpConfig::uniform(nq, Format::Fp8E4m3);
+    let ones = vec![1.0f32; nq];
+
+    let t0 = std::time::Instant::now();
+    let mr_pallas = ModelRuntime::load(&rt, &manifest.root, &info, FwdMode::Pallas).unwrap();
+    println!("runtime/compile fwd_quant (pallas): {:.2}s", t0.elapsed().as_secs_f64());
+    let t0 = std::time::Instant::now();
+    let mr_ref = ModelRuntime::load(&rt, &manifest.root, &info, FwdMode::Ref).unwrap();
+    println!("runtime/compile fwd_ref: {:.2}s", t0.elapsed().as_secs_f64());
+
+    bench("runtime/fwd pallas (B=8, fp8)", 2, 20, || {
+        black_box(mr_pallas.fwd(&tokens, &fp8, &ones).unwrap());
+    });
+    bench("runtime/fwd ref (B=8, fp8)", 2, 20, || {
+        black_box(mr_ref.fwd(&tokens, &fp8, &ones).unwrap());
+    });
+    bench("runtime/fwd ref (B=8, fp32 identity)", 2, 20, || {
+        black_box(mr_ref.fwd_fp32(&tokens).unwrap());
+    });
+    bench("runtime/sensitivity (B=1 fwd+bwd)", 2, 20, || {
+        black_box(mr_ref.sensitivity(&calib[0]).unwrap());
+    });
+
+    // Numerical agreement between the two artifacts at identity precision.
+    let a = mr_pallas.fwd_fp32(&tokens).unwrap();
+    let b = mr_ref.fwd_fp32(&tokens).unwrap();
+    let max_diff = a
+        .logits
+        .iter()
+        .zip(&b.logits)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    println!("runtime/pallas-vs-ref max |logit diff| at fp32: {max_diff:.2e}");
+    assert!(max_diff < 1e-3);
+}

@@ -1,0 +1,51 @@
+//! Gaudi-2-like simulator micro-benchmarks: partition + makespan scheduling
+//! (the inner loop of every time-gain measurement).
+
+use ampq::gaudisim::{HwModel, MpConfig, Simulator};
+use ampq::graph::partition::partition;
+use ampq::model::Manifest;
+use ampq::numerics::Format;
+use ampq::util::bench::{bench, black_box};
+use std::path::Path;
+
+fn main() {
+    let manifest = Manifest::load(Path::new("artifacts")).expect("make artifacts");
+    for model in ["tiny-s", "tiny-m"] {
+        let info = manifest.model(model).unwrap();
+        let graph = info.load_graph(&manifest.root).unwrap();
+        println!("{model}: {} nodes, {} edges", graph.nodes.len(), graph.edges.len());
+
+        bench(&format!("sim/{model}/partition"), 10, 1000, || {
+            black_box(partition(&graph).unwrap());
+        });
+
+        let hw = HwModel { noise_std: 0.0, ..HwModel::default() };
+        let sim = Simulator::new(&graph, hw.clone());
+        let cfg = MpConfig::uniform(graph.qlayers.len(), Format::Fp8E4m3);
+        bench(&format!("sim/{model}/makespan (ready-list)"), 10, 1000, || {
+            black_box(sim.makespan(&cfg));
+        });
+        bench(&format!("sim/{model}/makespan_scan (reference)"), 10, 1000, || {
+            black_box(sim.makespan_scan(&cfg));
+        });
+        assert_eq!(sim.makespan(&cfg), sim.makespan_scan(&cfg));
+        bench(&format!("sim/{model}/simulator_new"), 10, 1000, || {
+            black_box(Simulator::new(&graph, hw.clone()));
+        });
+
+        // A full Algorithm-1 measurement pass (dominates `ampq measure`).
+        let part = partition(&graph).unwrap();
+        let n_meas = part.n_measurements(2) + 1;
+        let r = bench(&format!("sim/{model}/full_measurement_pass"), 1, 10, || {
+            let sim = Simulator::new(&graph, hw.clone());
+            let mut rng = ampq::util::Rng::new(0);
+            let mut src = ampq::timing::SimTtft { sim, rng: rng.fork(1), reps: 5 };
+            black_box(ampq::timing::measure_groups(&mut src, &part, &ampq::numerics::PAPER_FORMATS).unwrap());
+        });
+        println!(
+            "sim/{model}: {} TTFT measurements x 5 reps -> {:.2} us per makespan call",
+            n_meas,
+            r.mean_us / (n_meas * 5) as f64
+        );
+    }
+}

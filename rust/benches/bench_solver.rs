@@ -1,0 +1,64 @@
+//! MCKP solver micro-benchmarks (L3 hot path): exact branch & bound vs DP
+//! vs greedy vs LP relaxation, on paper-scale and stress-scale instances.
+
+use ampq::solver::{branch_bound, dp, greedy, lp_relax, Mckp};
+use ampq::util::bench::{bench, black_box};
+use ampq::util::Rng;
+
+fn paper_scale_instance(seed: u64) -> Mckp {
+    // Llama-like: per block {32-config attention, 2, 4, 2} + lm_head,
+    // 8 blocks -> 33 groups.
+    let mut rng = Rng::new(seed);
+    let mut gains = Vec::new();
+    let mut costs = Vec::new();
+    for _ in 0..8 {
+        for &n in &[32usize, 2, 4, 2] {
+            gains.push((0..n).map(|_| rng.f64() * 100.0).collect::<Vec<f64>>());
+            costs.push((0..n).map(|_| rng.f64() * 1.0e-4).collect::<Vec<f64>>());
+        }
+    }
+    gains.push(vec![0.0, 50.0]);
+    costs.push(vec![1.0e-6, 1.0e-4]);
+    let total: f64 = costs.iter().map(|c| c.iter().cloned().fold(0.0, f64::max)).sum();
+    Mckp::new(gains, costs, total * 0.4).unwrap()
+}
+
+fn main() {
+    let p = paper_scale_instance(7);
+    println!(
+        "instance: {} groups, {} total choices",
+        p.n_groups(),
+        p.gains.iter().map(|g| g.len()).sum::<usize>()
+    );
+
+    bench("solver/branch_bound (exact)", 3, 50, || {
+        black_box(branch_bound::solve(&p));
+    });
+    bench("solver/dp (8192 buckets)", 3, 50, || {
+        black_box(dp::solve(&p));
+    });
+    bench("solver/greedy", 3, 200, || {
+        black_box(greedy::solve(&p));
+    });
+    bench("solver/lp_relax", 3, 200, || {
+        black_box(lp_relax::solve(&p));
+    });
+
+    // Solution-quality ablation (DESIGN.md ablations).
+    let exact = branch_bound::solve(&p);
+    for (name, sol) in [("dp", dp::solve(&p)), ("greedy", greedy::solve(&p))] {
+        println!(
+            "solver/{name}: gain {:.3} = {:.4} of exact ({:.3}), budget used {:.1}%",
+            sol.gain,
+            sol.gain / exact.gain,
+            exact.gain,
+            100.0 * sol.cost / p.budget
+        );
+        assert!(sol.gain <= exact.gain + 1e-9);
+        assert!(sol.gain >= 0.90 * exact.gain, "{name} quality regression");
+    }
+    let lp = lp_relax::solve(&p);
+    assert!(lp.bound >= exact.gain - 1e-9);
+    println!("solver/lp bound {:.3} >= exact {:.3} (gap {:.3}%)",
+        lp.bound, exact.gain, 100.0 * (lp.bound / exact.gain - 1.0));
+}

@@ -1,0 +1,149 @@
+//! Baseline strategies (paper §3.1): Random and Prefix.  Both flip layers
+//! from BF16 to FP8 while the *predicted* loss MSE stays within the same
+//! tau^2 E[g^2] budget the IP uses, so the comparison isolates layer
+//! SELECTION quality.
+
+use crate::gaudisim::MpConfig;
+use crate::numerics::Format;
+use crate::sensitivity::Calibration;
+use crate::util::Rng;
+
+/// Layers eligible for quantization (IP-M runs restrict to linear layers).
+pub type Eligible = Vec<bool>;
+
+/// Random strategy: visit layers in a random order, flip each to `fmt` if
+/// the running predicted loss MSE still fits the budget.
+pub fn random_config(
+    calib: &Calibration,
+    tau: f64,
+    eligible: &Eligible,
+    fmt: Format,
+    rng: &mut Rng,
+) -> MpConfig {
+    let nq = calib.s.len();
+    let budget = calib.budget(tau);
+    let mut cfg = MpConfig::all_bf16(nq);
+    let mut d = calib.loss_mse(&cfg);
+    let mut order: Vec<usize> = (0..nq).filter(|&l| eligible[l]).collect();
+    rng.shuffle(&mut order);
+    for l in order {
+        let delta = calib.layer_mse(l, fmt) - calib.layer_mse(l, Format::Bf16);
+        if d + delta <= budget {
+            cfg.set(l, fmt);
+            d += delta;
+        }
+    }
+    cfg
+}
+
+/// Prefix strategy: quantize layers in model order (0, 1, 2, ...) until the
+/// budget would be exceeded; skip ineligible layers.
+pub fn prefix_config(
+    calib: &Calibration,
+    tau: f64,
+    eligible: &Eligible,
+    fmt: Format,
+) -> MpConfig {
+    let nq = calib.s.len();
+    let budget = calib.budget(tau);
+    let mut cfg = MpConfig::all_bf16(nq);
+    let mut d = calib.loss_mse(&cfg);
+    for l in 0..nq {
+        if !eligible[l] {
+            continue;
+        }
+        let delta = calib.layer_mse(l, fmt) - calib.layer_mse(l, Format::Bf16);
+        if d + delta > budget {
+            break; // strictly sequential: stop at the first overflow
+        }
+        cfg.set(l, fmt);
+        d += delta;
+    }
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn calib() -> Calibration {
+        Calibration {
+            s: vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0],
+            eg2: 1.0,
+            g_mean: 1.0,
+            n_samples: 4,
+        }
+    }
+
+    fn all_eligible(n: usize) -> Eligible {
+        vec![true; n]
+    }
+
+    #[test]
+    fn both_respect_budget() {
+        let c = calib();
+        let mut rng = Rng::new(1);
+        for tau in [0.02, 0.05, 0.1, 0.3] {
+            let r = random_config(&c, tau, &all_eligible(6), Format::Fp8E4m3, &mut rng);
+            let p = prefix_config(&c, tau, &all_eligible(6), Format::Fp8E4m3);
+            assert!(c.loss_mse(&r) <= c.budget(tau) + 1e-15);
+            assert!(c.loss_mse(&p) <= c.budget(tau) + 1e-15);
+        }
+    }
+
+    #[test]
+    fn prefix_is_a_prefix() {
+        let c = calib();
+        let p = prefix_config(&c, 0.08, &all_eligible(6), Format::Fp8E4m3);
+        let quantized: Vec<bool> = p.0.iter().map(|f| *f == Format::Fp8E4m3).collect();
+        // Once a BF16 appears, everything after must be BF16.
+        let first_bf16 = quantized.iter().position(|&q| !q).unwrap_or(6);
+        assert!(quantized[first_bf16..].iter().all(|&q| !q));
+        assert!(p.n_quantized() > 0);
+    }
+
+    #[test]
+    fn random_varies_with_seed_but_same_budget() {
+        // Equal sensitivities + a budget that fits only ~half the layers:
+        // which half gets quantized depends on the shuffle order.
+        let c = calib();
+        // Budget ~= all-BF16 MSE + 3 FP8 upgrades.
+        let upgrade = c.layer_mse(0, Format::Fp8E4m3) - c.layer_mse(0, Format::Bf16);
+        let tau = ((c.loss_mse(&MpConfig::all_bf16(6)) + 3.2 * upgrade) / c.eg2).sqrt();
+        let cfgs: Vec<String> = (0..10)
+            .map(|seed| {
+                let mut rng = Rng::new(seed);
+                random_config(&c, tau, &all_eligible(6), Format::Fp8E4m3, &mut rng)
+                    .bits_label()
+            })
+            .collect();
+        let mut distinct = cfgs.clone();
+        distinct.sort();
+        distinct.dedup();
+        assert!(distinct.len() > 1, "random strategy should vary across seeds");
+    }
+
+    #[test]
+    fn ineligible_layers_stay_bf16() {
+        let c = calib();
+        let mut eligible = all_eligible(6);
+        eligible[2] = false;
+        eligible[4] = false;
+        let mut rng = Rng::new(3);
+        let r = random_config(&c, 10.0, &eligible, Format::Fp8E4m3, &mut rng);
+        assert_eq!(r.get(2), Format::Bf16);
+        assert_eq!(r.get(4), Format::Bf16);
+        assert_eq!(r.n_quantized(), 4);
+        let p = prefix_config(&c, 10.0, &eligible, Format::Fp8E4m3);
+        assert_eq!(p.get(2), Format::Bf16);
+        assert_eq!(p.n_quantized(), 4);
+    }
+
+    #[test]
+    fn generous_budget_quantizes_all_eligible() {
+        let c = calib();
+        let mut rng = Rng::new(0);
+        let r = random_config(&c, 100.0, &all_eligible(6), Format::Fp8E4m3, &mut rng);
+        assert_eq!(r.n_quantized(), 6);
+    }
+}

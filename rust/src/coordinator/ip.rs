@@ -1,0 +1,149 @@
+//! The paper's IP strategy (eq. 5): assemble the MCKP from per-group gain
+//! vectors c_j and loss-MSE vectors d_j, solve, and materialize the chosen
+//! MpConfig.
+
+use crate::gaudisim::MpConfig;
+use crate::metrics::{covered_layers, GroupChoices};
+use crate::numerics::Format;
+use crate::sensitivity::Calibration;
+use crate::solver::{self, Mckp, Solution};
+use anyhow::Result;
+
+/// Result of one IP solve.
+#[derive(Clone, Debug)]
+pub struct IpOutcome {
+    pub config: MpConfig,
+    pub solution: Solution,
+    /// Predicted loss MSE of the FULL config (covered + default-BF16 layers).
+    pub predicted_mse: f64,
+    pub budget: f64,
+}
+
+/// Solve eq. (5) at threshold `tau`.
+///
+/// Layers not covered by any group (e.g. BGEMM under IP-M) are fixed at
+/// BF16; their (constant) loss-MSE contribution is charged against the
+/// budget so the constraint covers the whole model.
+pub fn optimize(
+    groups: &[GroupChoices],
+    calib: &Calibration,
+    tau: f64,
+) -> Result<IpOutcome> {
+    let nq = calib.s.len();
+    let covered = covered_layers(groups, nq);
+    let uncovered_mse: f64 = (0..nq)
+        .filter(|&l| !covered[l])
+        .map(|l| calib.layer_mse(l, Format::Bf16))
+        .sum();
+
+    let budget_total = calib.budget(tau);
+    let budget = (budget_total - uncovered_mse).max(0.0);
+
+    let gains: Vec<Vec<f64>> = groups.iter().map(|g| g.gains.clone()).collect();
+    let costs: Vec<Vec<f64>> = groups
+        .iter()
+        .map(|g| {
+            g.configs
+                .iter()
+                .map(|cfg| calib.group_mse(&g.qidxs, cfg))
+                .collect()
+        })
+        .collect();
+    let problem = Mckp::new(gains, costs, budget)?;
+    let solution = solver::solve(&problem);
+
+    let mut config = MpConfig::all_bf16(nq);
+    for (g, &p) in groups.iter().zip(&solution.choice) {
+        for (&q, &f) in g.qidxs.iter().zip(&g.configs[p]) {
+            config.set(q, f);
+        }
+    }
+    let predicted_mse = calib.loss_mse(&config);
+    Ok(IpOutcome { config, solution, predicted_mse, budget: budget_total })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::PAPER_FORMATS;
+
+    fn calib4() -> Calibration {
+        Calibration { s: vec![1.0, 10.0, 0.1, 2.0], eg2: 1.0, g_mean: 1.0, n_samples: 4 }
+    }
+
+    fn singleton_groups(gains_fp8: &[f64]) -> Vec<GroupChoices> {
+        gains_fp8
+            .iter()
+            .enumerate()
+            .map(|(l, &g)| GroupChoices {
+                qidxs: vec![l],
+                configs: vec![vec![Format::Bf16], vec![Format::Fp8E4m3]],
+                gains: vec![0.0, g],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn spends_budget_on_low_sensitivity_layers_first() {
+        let calib = calib4();
+        let groups = singleton_groups(&[1.0, 1.0, 1.0, 1.0]); // equal gains
+        // Budget enough for ~2 cheap layers but not the sensitive one.
+        let d_cheap = calib.layer_mse(2, Format::Fp8E4m3) + calib.layer_mse(0, Format::Fp8E4m3);
+        let tau = ((d_cheap * 1.5 + calib.loss_mse(&MpConfig::all_bf16(4))) / calib.eg2).sqrt();
+        let out = optimize(&groups, &calib, tau).unwrap();
+        assert!(out.solution.feasible);
+        // Layer 2 (s=0.1) must be quantized before layer 1 (s=10).
+        assert_eq!(out.config.get(2), Format::Fp8E4m3);
+        assert_eq!(out.config.get(1), Format::Bf16);
+        assert!(out.predicted_mse <= out.budget + 1e-12);
+    }
+
+    #[test]
+    fn generous_budget_quantizes_everything() {
+        let calib = calib4();
+        let groups = singleton_groups(&[1.0, 1.0, 1.0, 1.0]);
+        let out = optimize(&groups, &calib, 10.0).unwrap();
+        assert_eq!(out.config.n_quantized(), 4);
+    }
+
+    #[test]
+    fn tau_zero_falls_back_to_baseline() {
+        let calib = calib4();
+        let groups = singleton_groups(&[1.0, 1.0, 1.0, 1.0]);
+        let out = optimize(&groups, &calib, 0.0).unwrap();
+        // All-BF16 has nonzero d, so tau=0 is infeasible: fall back to
+        // the min-cost (all-BF16) configuration.
+        assert!(!out.solution.feasible);
+        assert_eq!(out.config.n_quantized(), 0);
+    }
+
+    #[test]
+    fn uncovered_layers_charge_budget() {
+        let calib = calib4();
+        // Only layers {0, 2} participate (like IP-M skipping BGEMMs).
+        let groups: Vec<GroupChoices> = singleton_groups(&[1.0, 1.0, 1.0, 1.0])
+            .into_iter()
+            .enumerate()
+            .filter(|(l, _)| *l == 0 || *l == 2)
+            .map(|(_, g)| g)
+            .collect();
+        let out = optimize(&groups, &calib, 0.5).unwrap();
+        assert_eq!(out.config.get(1), Format::Bf16);
+        assert_eq!(out.config.get(3), Format::Bf16);
+        // Full-model predicted MSE includes the uncovered layers.
+        let full = calib.loss_mse(&out.config);
+        assert!((full - out.predicted_mse).abs() < 1e-15);
+    }
+
+    #[test]
+    fn monotone_in_tau() {
+        let calib = calib4();
+        let groups = singleton_groups(&[3.0, 1.0, 2.0, 1.5]);
+        let mut last_gain = -1.0;
+        for tau in [0.01, 0.05, 0.1, 0.5, 1.0] {
+            let out = optimize(&groups, &calib, tau).unwrap();
+            assert!(out.solution.gain >= last_gain - 1e-12);
+            last_gain = out.solution.gain;
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 coordinator — the paper's system contribution, end to end:
+//! partitioning (Algorithm 2 via graph::partition), sensitivity calibration,
+//! per-group time-gain measurement, IP optimization (eq. 5), and the
+//! Random/Prefix baselines used in §3.
+
+pub mod baselines;
+pub mod ip;
+pub mod pipeline;
+
+pub use ip::{optimize, IpOutcome};
+pub use pipeline::{paper_tau_grid, select_config, Family, Pipeline, Strategy};

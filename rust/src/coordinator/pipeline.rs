@@ -1,0 +1,163 @@
+//! End-to-end Algorithm 1: partition -> sensitivity calibration ->
+//! per-group time-gain measurement -> IP optimization, plus the strategy
+//! families and baselines the paper evaluates against.
+
+use crate::gaudisim::{HwModel, MpConfig, Simulator};
+use crate::graph::partition::{partition, Partition};
+use crate::graph::Graph;
+use crate::metrics::{self, GroupChoices, Objective};
+use crate::model::{LayerKind, Manifest, ModelInfo};
+use crate::numerics::Format;
+use crate::runtime::{FwdMode, ModelRuntime, Runtime};
+use crate::sensitivity::{calibrate, Calibration};
+use crate::timing::{measure_groups, SimTtft, TimeMeasurements};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Everything Algorithm 1 needs, loaded once per model.
+pub struct Pipeline {
+    pub info: ModelInfo,
+    pub graph: Graph,
+    pub partition: Partition,
+    pub mr: ModelRuntime,
+    pub calibration: Calibration,
+    pub hw: HwModel,
+    pub formats: Vec<Format>,
+}
+
+impl Pipeline {
+    /// Steps 1-2 of Algorithm 1: analyze/partition + sensitivity calibration.
+    pub fn new(
+        manifest: &Manifest,
+        model: &str,
+        mode: FwdMode,
+        hw: HwModel,
+        formats: Vec<Format>,
+    ) -> Result<Pipeline> {
+        let rt = Runtime::new()?;
+        let info = manifest.model(model)?.clone();
+        let graph = info.load_graph(&manifest.root)?;
+        let part = partition(&graph)?;
+        let mr = ModelRuntime::load(&rt, &manifest.root, &info, mode)?;
+        let calib_tokens = info.load_calib(&manifest.root)?;
+        let calibration = calibrate(&mr, &calib_tokens)?;
+        Ok(Pipeline { info, graph, partition: part, mr, calibration, hw, formats })
+    }
+
+    /// Step 3: per-group empirical time-gain measurement on the simulator
+    /// (paper protocol: mean of `reps` TTFT iterations; 5 in the paper).
+    pub fn measure_time(&self, seed: u64, reps: usize) -> Result<TimeMeasurements> {
+        let sim = Simulator::new(&self.graph, self.hw.clone());
+        let mut src = SimTtft { sim, rng: Rng::new(seed), reps };
+        measure_groups(&mut src, &self.partition, &self.formats)
+    }
+
+    /// Simulated TTFT of a full config (for reporting accuracy-vs-TTFT).
+    pub fn simulated_ttft(&self, cfg: &MpConfig, seed: u64, reps: usize) -> f64 {
+        let sim = Simulator::new(&self.graph, self.hw.clone());
+        let mut rng = Rng::new(seed);
+        sim.measure_ttft(cfg, &mut rng, reps)
+    }
+
+    /// Build the IP groups for one objective family.
+    pub fn family(&self, objective: Objective, tm: &TimeMeasurements) -> Family {
+        let groups = match objective {
+            Objective::EmpiricalTime => metrics::empirical_groups(tm),
+            Objective::TheoreticalTime => {
+                metrics::theoretical_groups(&self.partition, &self.info.qlayers, &self.formats)
+            }
+            Objective::Memory => metrics::memory_groups(&self.info.qlayers, &self.formats),
+        };
+        // Baselines in the Memory family may only touch linear layers
+        // (paper §3.1); ET/TT families may quantize everything.
+        let eligible = match objective {
+            Objective::Memory => self
+                .info
+                .qlayers
+                .iter()
+                .map(|q| q.kind == LayerKind::Linear)
+                .collect(),
+            _ => vec![true; self.info.n_qlayers],
+        };
+        Family { objective, groups, eligible }
+    }
+}
+
+/// One strategy family: the IP objective + the baseline eligibility mask.
+pub struct Family {
+    pub objective: Objective,
+    pub groups: Vec<GroupChoices>,
+    pub eligible: Vec<bool>,
+}
+
+/// Strategy selector (paper §3.1 comparison set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Ip,
+    Random,
+    Prefix,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Ip => "IP",
+            Strategy::Random => "Random",
+            Strategy::Prefix => "Prefix",
+        }
+    }
+}
+
+/// Produce the MP configuration a strategy chooses at threshold tau.
+pub fn select_config(
+    family: &Family,
+    strategy: Strategy,
+    calibration: &Calibration,
+    tau: f64,
+    seed: u64,
+) -> Result<MpConfig> {
+    Ok(match strategy {
+        Strategy::Ip => super::ip::optimize(&family.groups, calibration, tau)?.config,
+        Strategy::Random => {
+            let mut rng = Rng::new(0xA11CE ^ seed);
+            super::baselines::random_config(
+                calibration,
+                tau,
+                &family.eligible,
+                Format::Fp8E4m3,
+                &mut rng,
+            )
+        }
+        Strategy::Prefix => super::baselines::prefix_config(
+            calibration,
+            tau,
+            &family.eligible,
+            Format::Fp8E4m3,
+        ),
+    })
+}
+
+/// The paper's tau sweep (§3.2): {0, 0.1%, ..., 0.7%} plus all-FP8.
+pub fn paper_tau_grid() -> Vec<f64> {
+    (0..=7).map(|i| i as f64 * 0.001).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_grid_matches_paper() {
+        let g = paper_tau_grid();
+        assert_eq!(g.len(), 8);
+        assert_eq!(g[0], 0.0);
+        assert!((g[7] - 0.007).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strategy_names() {
+        assert_eq!(Strategy::Ip.name(), "IP");
+        assert_eq!(Strategy::Random.name(), "Random");
+        assert_eq!(Strategy::Prefix.name(), "Prefix");
+    }
+}

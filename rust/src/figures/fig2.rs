@@ -1,0 +1,50 @@
+//! Figure 2: layer-wise quantization patterns across MP configurations
+//! (rows = tau values, columns = layers) for IP-ET, Prefix, and Random.
+
+use super::sweep::measure;
+use super::FigureCtx;
+use crate::coordinator::{select_config, Strategy};
+use crate::metrics::Objective;
+use crate::report::{self, ascii};
+use anyhow::Result;
+
+pub fn run(ctx: &FigureCtx, model: &str) -> Result<()> {
+    let pl = ctx.pipeline(model)?;
+    let tm = measure(&pl, ctx.params.reps)?;
+    let family = pl.family(Objective::EmpiricalTime, &tm);
+
+    let mut sections = String::new();
+    let mut csv_rows: Vec<Vec<String>> = Vec::new();
+    for strategy in [Strategy::Ip, Strategy::Prefix, Strategy::Random] {
+        let mut rows: Vec<(String, String)> = Vec::new();
+        for &tau in &ctx.params.taus {
+            let cfg = select_config(&family, strategy, &pl.calibration, tau, 0)?;
+            let bits = cfg.bits_label();
+            csv_rows.push(vec![
+                strategy.name().to_string(),
+                format!("{tau}"),
+                bits.clone(),
+            ]);
+            rows.push((format!("tau={:.3}%", tau * 100.0), bits));
+        }
+        let title = match strategy {
+            Strategy::Ip => "IP-ET (top)",
+            Strategy::Prefix => "Prefix (middle)",
+            Strategy::Random => "Random (bottom)",
+        };
+        sections.push_str(&ascii::pattern_grid(
+            &format!("Fig 2 [{model}] — {title}"),
+            &rows,
+        ));
+        sections.push('\n');
+    }
+
+    report::write_csv(
+        &ctx.out.join(format!("fig2_{model}.csv")),
+        &["strategy", "tau", "pattern_bits"],
+        &csv_rows,
+    )?;
+    report::save_text(&ctx.out.join(format!("fig2_{model}.txt")), &sections)?;
+    println!("fig2[{model}]: patterns for {} taus x 3 strategies", ctx.params.taus.len());
+    Ok(())
+}

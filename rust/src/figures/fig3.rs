@@ -1,0 +1,112 @@
+//! Figure 3 (§3.2 model validation) on IP-ET-chosen configurations over the
+//! tau sweep plus all-FP8:
+//!   3a: theoretical (additive) loss MSE vs measured E[(ghat - g)^2];
+//!   3b: theoretical (group-additive) TTFT reduction vs direct measurement.
+
+use super::sweep::measure;
+use super::FigureCtx;
+use crate::coordinator::{select_config, Strategy};
+use crate::gaudisim::{MpConfig, Simulator};
+use crate::metrics::Objective;
+use crate::numerics::Format;
+use crate::report::{self, ascii};
+use crate::sensitivity::validate::measured_loss_mse;
+use crate::util::{stats, Rng};
+use anyhow::Result;
+
+pub fn run(ctx: &FigureCtx, model: &str) -> Result<()> {
+    let pl = ctx.pipeline(model)?;
+    let tm = measure(&pl, ctx.params.reps)?;
+    let family = pl.family(Objective::EmpiricalTime, &tm);
+    let calib_tokens = pl.info.load_calib(&ctx.manifest.root)?;
+    let sim = Simulator::new(&pl.graph, ctx.params.hw.clone());
+    let base_ttft = sim.makespan(&MpConfig::all_bf16(pl.info.n_qlayers));
+
+    // Configurations: IP-ET at each tau, plus all-FP8 (paper protocol).
+    let mut configs: Vec<(String, MpConfig)> = Vec::new();
+    for &tau in &ctx.params.taus {
+        let cfg = select_config(&family, Strategy::Ip, &pl.calibration, tau, 0)?;
+        configs.push((format!("{tau}"), cfg));
+    }
+    configs.push((
+        "all-fp8".into(),
+        MpConfig::uniform(pl.info.n_qlayers, Format::Fp8E4m3),
+    ));
+
+    let mut rng = Rng::new(33);
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut a_pred = Vec::new();
+    let mut a_meas = Vec::new();
+    let mut b_pred = Vec::new();
+    let mut b_meas = Vec::new();
+    for (i, (tag, cfg)) in configs.iter().enumerate() {
+        let d_pred = pl.calibration.loss_mse(cfg);
+        let d_meas = measured_loss_mse(
+            &pl.mr,
+            &calib_tokens,
+            cfg,
+            3,
+            ctx.params.sigma,
+            &mut rng,
+        )?;
+        // 3b: group-additive prediction vs direct simulator measurement,
+        // as relative TTFT reduction.
+        let pred_red = tm.predict_gain(cfg) / tm.base_ttft;
+        let meas_red = (base_ttft - sim.makespan(cfg)) / base_ttft;
+        rows.push(vec![
+            tag.clone(),
+            report::f(d_pred),
+            report::f(d_meas),
+            report::f(pred_red),
+            report::f(meas_red),
+        ]);
+        a_pred.push((i as f64, d_pred));
+        a_meas.push((i as f64, d_meas));
+        b_pred.push((i as f64, pred_red));
+        b_meas.push((i as f64, meas_red));
+    }
+
+    report::write_csv(
+        &ctx.out.join(format!("fig3_{model}.csv")),
+        &["tau", "pred_loss_mse", "measured_loss_mse", "pred_ttft_reduction", "measured_ttft_reduction"],
+        &rows,
+    )?;
+
+    let plot_a = ascii::plot(
+        &format!("Fig 3a [{model}]: loss MSE vs tau index — theoretical (o) vs measured (x)"),
+        "tau index (last = all-FP8)",
+        "loss MSE",
+        &[
+            ascii::Series { name: "theoretical (additive, eq. 6)".into(), points: a_pred.clone() },
+            ascii::Series { name: "measured on chosen configs".into(), points: a_meas.clone() },
+        ],
+    );
+    let plot_b = ascii::plot(
+        &format!("Fig 3b [{model}]: relative TTFT reduction vs tau index"),
+        "tau index (last = all-FP8)",
+        "TTFT reduction fraction",
+        &[
+            ascii::Series { name: "theoretical (group-additive, eq. 7)".into(), points: b_pred.clone() },
+            ascii::Series { name: "measured".into(), points: b_meas.clone() },
+        ],
+    );
+    report::save_text(&ctx.out.join(format!("fig3a_{model}.txt")), &plot_a)?;
+    report::save_text(&ctx.out.join(format!("fig3b_{model}.txt")), &plot_b)?;
+
+    let corr_mse = stats::pearson(
+        &a_pred.iter().map(|p| p.1).collect::<Vec<_>>(),
+        &a_meas.iter().map(|p| p.1).collect::<Vec<_>>(),
+    );
+    let corr_ttft = stats::pearson(
+        &b_pred.iter().map(|p| p.1).collect::<Vec<_>>(),
+        &b_meas.iter().map(|p| p.1).collect::<Vec<_>>(),
+    );
+    println!(
+        "fig3[{model}]: corr(pred, measured) loss-MSE = {corr_mse:.3}, TTFT reduction = {corr_ttft:.3}"
+    );
+    report::save_text(
+        &ctx.out.join(format!("fig3_{model}_summary.txt")),
+        &format!("corr_loss_mse={corr_mse:.4}\ncorr_ttft={corr_ttft:.4}\n"),
+    )?;
+    Ok(())
+}

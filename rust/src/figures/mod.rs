@@ -1,0 +1,87 @@
+//! Regeneration of every figure and table in the paper's evaluation
+//! (DESIGN.md §5 experiment index).  Each figure lands in results/ as a CSV
+//! plus an ASCII rendering.
+//!
+//! The accuracy experiments share one `run_sweep` product per
+//! (model, objective family): strategy x tau x seed -> configuration ->
+//! {predicted loss MSE, simulated TTFT, per-task accuracy/ppl}, with
+//! config-level caching of forward passes (CachedEvaluator).
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod sweep;
+pub mod table1;
+
+use crate::coordinator::Pipeline;
+use crate::gaudisim::HwModel;
+use crate::model::Manifest;
+use crate::numerics::{Format, PAPER_FORMATS};
+use crate::runtime::FwdMode;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Experiment-scale parameters (paper defaults; benches shrink them).
+#[derive(Clone, Debug)]
+pub struct ExpParams {
+    pub taus: Vec<f64>,
+    pub n_seeds: u64,
+    /// Scale-perturbation sigma (paper perturbs quantization scales).
+    pub sigma: f64,
+    /// TTFT measurement iterations (paper: 5).
+    pub reps: usize,
+    pub fwd_mode: FwdMode,
+    pub hw: HwModel,
+}
+
+impl Default for ExpParams {
+    fn default() -> Self {
+        ExpParams {
+            taus: crate::coordinator::paper_tau_grid(),
+            n_seeds: 10,
+            sigma: 0.02,
+            reps: 5,
+            fwd_mode: FwdMode::Ref,
+            hw: HwModel::default(),
+        }
+    }
+}
+
+impl ExpParams {
+    /// Reduced scale for smoke/bench runs.
+    pub fn quick() -> Self {
+        ExpParams {
+            taus: vec![0.0, 0.002, 0.004, 0.007],
+            n_seeds: 2,
+            ..Default::default()
+        }
+    }
+}
+
+/// Shared context for figure generation.
+pub struct FigureCtx {
+    pub manifest: Manifest,
+    pub params: ExpParams,
+    pub out: PathBuf,
+}
+
+impl FigureCtx {
+    pub fn new(manifest: Manifest, params: ExpParams, out: PathBuf) -> Self {
+        std::fs::create_dir_all(&out).ok();
+        FigureCtx { manifest, params, out }
+    }
+
+    pub fn formats(&self) -> Vec<Format> {
+        PAPER_FORMATS.to_vec()
+    }
+
+    pub fn pipeline(&self, model: &str) -> Result<Pipeline> {
+        Pipeline::new(
+            &self.manifest,
+            model,
+            self.params.fwd_mode,
+            self.params.hw.clone(),
+            self.formats(),
+        )
+    }
+}

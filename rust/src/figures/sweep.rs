@@ -1,0 +1,226 @@
+//! The shared strategy x tau x seed sweep behind Figs. 4, 5, 7, 8, 9 and
+//! Table 1: select a configuration per (strategy, tau, seed), then attach
+//! predicted loss MSE, simulated TTFT, theoretical/memory gains, and
+//! per-task accuracy/perplexity.
+
+use crate::coordinator::{select_config, Family, Pipeline, Strategy};
+use crate::evalharness::{CachedEvaluator, EvalResult, TaskData};
+use crate::gaudisim::{MpConfig, Simulator};
+use crate::metrics::{mem_layer_gain, tt_layer_gain};
+use crate::sensitivity::validate::draw_pscale;
+use crate::timing::TimeMeasurements;
+use crate::util::Rng;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub strategy: Strategy,
+    pub tau: f64,
+    pub seed: u64,
+    pub config: MpConfig,
+    /// Predicted loss MSE d (eq. 6).
+    pub predicted_mse: f64,
+    /// Normalized RMSE sqrt(d / E[g^2]).
+    pub nrmse: f64,
+    /// Deterministic simulated TTFT (us).
+    pub ttft_us: f64,
+    /// Theoretical MAC-time gain (eq. 24) of the config.
+    pub tt_gain: f64,
+    /// Memory gain in bytes (eq. 25).
+    pub mem_gain: f64,
+    /// Per-task accuracy and perplexity (task order of `tasks`).
+    pub task_acc: Vec<f64>,
+    pub task_ppl: Vec<f64>,
+}
+
+/// Baseline (all-BF16, unperturbed) reference scores.
+#[derive(Clone, Debug)]
+pub struct Baseline {
+    pub ttft_us: f64,
+    pub task_acc: Vec<f64>,
+    pub task_ppl: Vec<f64>,
+}
+
+pub struct Sweep {
+    pub points: Vec<SweepPoint>,
+    pub baseline: Baseline,
+    pub task_names: Vec<String>,
+}
+
+/// Full sweep for one strategy family.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sweep(
+    pl: &Pipeline,
+    family: &Family,
+    tasks: &[TaskData],
+    taus: &[f64],
+    n_seeds: u64,
+    sigma: f64,
+    strategies: &[Strategy],
+    eval: &mut CachedEvaluator,
+) -> Result<Sweep> {
+    let sim = Simulator::new(&pl.graph, pl.hw.clone());
+    let nq = pl.info.n_qlayers;
+
+    let bf16 = MpConfig::all_bf16(nq);
+    let ones = vec![1.0f32; nq];
+    let base_results = eval_tasks(eval, &bf16, u64::MAX, &ones)?;
+    let baseline = Baseline {
+        ttft_us: sim.makespan(&bf16),
+        task_acc: base_results.iter().map(|r| r.acc).collect(),
+        task_ppl: base_results.iter().map(|r| r.ppl).collect(),
+    };
+
+    let mut points = Vec::new();
+    for &strategy in strategies {
+        for &tau in taus {
+            for seed in 0..n_seeds {
+                // Strategy selection: IP/Prefix are tau-deterministic; Random
+                // re-draws per seed (paper Fig. 2 scattered patterns).
+                let config = select_config(family, strategy, &pl.calibration, tau, seed)?;
+                let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9));
+                let ps = draw_pscale(nq, sigma, &mut rng);
+                let results = eval_tasks(eval, &config, seed, &ps)?;
+                let predicted_mse = pl.calibration.loss_mse(&config);
+                points.push(SweepPoint {
+                    strategy,
+                    tau,
+                    seed,
+                    ttft_us: sim.makespan(&config),
+                    tt_gain: total_tt_gain(pl, &config),
+                    mem_gain: total_mem_gain(pl, &config),
+                    nrmse: (predicted_mse / pl.calibration.eg2).sqrt(),
+                    predicted_mse,
+                    task_acc: results.iter().map(|r| r.acc).collect(),
+                    task_ppl: results.iter().map(|r| r.ppl).collect(),
+                    config,
+                });
+            }
+        }
+    }
+    Ok(Sweep {
+        points,
+        baseline,
+        task_names: tasks.iter().map(|t| t.meta.name.clone()).collect(),
+    })
+}
+
+fn eval_tasks(
+    eval: &mut CachedEvaluator,
+    cfg: &MpConfig,
+    seed: u64,
+    pscale: &[f32],
+) -> Result<Vec<EvalResult>> {
+    eval.eval_all(cfg, seed, pscale)
+}
+
+pub fn total_tt_gain(pl: &Pipeline, cfg: &MpConfig) -> f64 {
+    pl.info
+        .qlayers
+        .iter()
+        .enumerate()
+        .map(|(l, q)| tt_layer_gain(q, cfg.get(l)))
+        .sum()
+}
+
+pub fn total_mem_gain(pl: &Pipeline, cfg: &MpConfig) -> f64 {
+    pl.info
+        .qlayers
+        .iter()
+        .enumerate()
+        .map(|(l, q)| mem_layer_gain(q, cfg.get(l)))
+        .sum()
+}
+
+/// Measure per-group time gains once and reuse across figures.
+pub fn measure(pl: &Pipeline, reps: usize) -> Result<TimeMeasurements> {
+    pl.measure_time(0x71_4e_33, reps)
+}
+
+/// Aggregate sweep points into per-(strategy, tau) mean +- std of the
+/// task-averaged accuracy difference vs baseline.
+pub struct AggPoint {
+    pub strategy: Strategy,
+    pub tau: f64,
+    pub ttft_us: f64,
+    pub tt_gain: f64,
+    pub mem_gain: f64,
+    pub nrmse: f64,
+    pub acc_diff_mean: f64,
+    pub acc_diff_std: f64,
+    /// Per-task (mean, std) accuracy differences.
+    pub per_task: Vec<(f64, f64)>,
+    /// Per-task (mean, std) ppl relative difference in percent.
+    pub per_task_ppl: Vec<(f64, f64)>,
+}
+
+pub fn aggregate(sweep: &Sweep, strategy: Strategy) -> Vec<AggPoint> {
+    let mut taus: Vec<f64> = sweep
+        .points
+        .iter()
+        .filter(|p| p.strategy == strategy)
+        .map(|p| p.tau)
+        .collect();
+    taus.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    taus.dedup();
+    let n_tasks = sweep.task_names.len();
+
+    taus.iter()
+        .map(|&tau| {
+            let pts: Vec<&SweepPoint> = sweep
+                .points
+                .iter()
+                .filter(|p| p.strategy == strategy && p.tau == tau)
+                .collect();
+            let avg_diffs: Vec<f64> = pts
+                .iter()
+                .map(|p| {
+                    (0..n_tasks)
+                        .map(|t| (p.task_acc[t] - sweep.baseline.task_acc[t]) * 100.0)
+                        .sum::<f64>()
+                        / n_tasks as f64
+                })
+                .collect();
+            let per_task: Vec<(f64, f64)> = (0..n_tasks)
+                .map(|t| {
+                    let d: Vec<f64> = pts
+                        .iter()
+                        .map(|p| (p.task_acc[t] - sweep.baseline.task_acc[t]) * 100.0)
+                        .collect();
+                    (crate::util::stats::mean(&d), crate::util::stats::std(&d))
+                })
+                .collect();
+            let per_task_ppl: Vec<(f64, f64)> = (0..n_tasks)
+                .map(|t| {
+                    let d: Vec<f64> = pts
+                        .iter()
+                        .map(|p| {
+                            (p.task_ppl[t] / sweep.baseline.task_ppl[t] - 1.0) * 100.0
+                        })
+                        .collect();
+                    (crate::util::stats::mean(&d), crate::util::stats::std(&d))
+                })
+                .collect();
+            AggPoint {
+                strategy,
+                tau,
+                ttft_us: crate::util::stats::mean(
+                    &pts.iter().map(|p| p.ttft_us).collect::<Vec<_>>(),
+                ),
+                tt_gain: crate::util::stats::mean(
+                    &pts.iter().map(|p| p.tt_gain).collect::<Vec<_>>(),
+                ),
+                mem_gain: crate::util::stats::mean(
+                    &pts.iter().map(|p| p.mem_gain).collect::<Vec<_>>(),
+                ),
+                nrmse: crate::util::stats::mean(
+                    &pts.iter().map(|p| p.nrmse).collect::<Vec<_>>(),
+                ),
+                acc_diff_mean: crate::util::stats::mean(&avg_diffs),
+                acc_diff_std: crate::util::stats::std(&avg_diffs),
+                per_task,
+                per_task_ppl,
+            }
+        })
+        .collect()
+}

@@ -1,0 +1,305 @@
+//! Table 1 + the accuracy-vs-performance figures (4, 5, 7, 8, 9).
+//!
+//! All of these consume the same strategy x tau x seed sweeps (one per
+//! objective family), so they are generated together per model, and Table 1
+//! is then combined across models.
+
+use super::sweep::{aggregate, measure, run_sweep, Sweep};
+use super::FigureCtx;
+use crate::coordinator::Strategy;
+use crate::evalharness::{load_all_tasks, CachedEvaluator};
+use crate::metrics::Objective;
+use crate::numerics::Format;
+use crate::report::{self, ascii};
+use anyhow::Result;
+
+const STRATEGIES: [Strategy; 3] = [Strategy::Random, Strategy::Prefix, Strategy::Ip];
+
+pub fn run(ctx: &FigureCtx, model: &str) -> Result<()> {
+    let pl = ctx.pipeline(model)?;
+    let tasks = load_all_tasks(&ctx.manifest.root, &pl.info)?;
+    let tm = measure(&pl, ctx.params.reps)?;
+    let mut eval = CachedEvaluator::new(&pl.mr, &tasks);
+
+    let mut table_rows: Vec<Vec<String>> = Vec::new();
+
+    for objective in [Objective::EmpiricalTime, Objective::TheoreticalTime, Objective::Memory] {
+        let family = pl.family(objective, &tm);
+        let sweep = run_sweep(
+            &pl,
+            &family,
+            &tasks,
+            &ctx.params.taus,
+            ctx.params.n_seeds,
+            ctx.params.sigma,
+            &STRATEGIES,
+            &mut eval,
+        )?;
+
+        emit_family_figures(ctx, model, objective, &sweep)?;
+        table_rows.extend(table1_rows(model, objective, &sweep));
+        println!(
+            "table1[{model}/{}]: {} sweep points, {} unique forward configs",
+            objective.name(),
+            sweep.points.len(),
+            eval.cache_len()
+        );
+    }
+
+    report::write_csv(
+        &ctx.out.join(format!("table1_{model}.csv")),
+        &TABLE1_HEADER,
+        &table_rows,
+    )?;
+    Ok(())
+}
+
+const TABLE1_HEADER: [&str; 9] = [
+    "model", "family", "strategy", "lamb_ppl_diff_pct", "lamb_acc_diff",
+    "hella_acc_diff", "wino_acc_diff", "piqa_acc_diff", "tasks_avg_acc_diff",
+];
+
+/// Pool all (tau, seed) points of a strategy into mean +- std rows
+/// (paper: "averaged over different quantization configurations from
+/// high-precision (BF16) to low-precision (FP8)").
+fn table1_rows(model: &str, objective: Objective, sweep: &Sweep) -> Vec<Vec<String>> {
+    let t_idx = |name: &str| sweep.task_names.iter().position(|n| n == name).unwrap();
+    let (ti_hella, ti_lamb, ti_wino, ti_piqa) =
+        (t_idx("hella"), t_idx("lamb"), t_idx("wino"), t_idx("piqa"));
+
+    STRATEGIES
+        .iter()
+        .map(|&strategy| {
+            let pts: Vec<_> = sweep.points.iter().filter(|p| p.strategy == strategy).collect();
+            let col = |ti: usize| -> (f64, f64) {
+                let d: Vec<f64> = pts
+                    .iter()
+                    .map(|p| (p.task_acc[ti] - sweep.baseline.task_acc[ti]) * 100.0)
+                    .collect();
+                (crate::util::stats::mean(&d), crate::util::stats::std(&d))
+            };
+            let ppl: Vec<f64> = pts
+                .iter()
+                .map(|p| (p.task_ppl[ti_lamb] / sweep.baseline.task_ppl[ti_lamb] - 1.0) * 100.0)
+                .collect();
+            let avg: Vec<f64> = pts
+                .iter()
+                .map(|p| {
+                    [ti_hella, ti_lamb, ti_wino, ti_piqa]
+                        .iter()
+                        .map(|&ti| (p.task_acc[ti] - sweep.baseline.task_acc[ti]) * 100.0)
+                        .sum::<f64>()
+                        / 4.0
+                })
+                .collect();
+            let (lm, ls) = col(ti_lamb);
+            let (hm, hs) = col(ti_hella);
+            let (wm, ws) = col(ti_wino);
+            let (pm_, ps) = col(ti_piqa);
+            vec![
+                model.to_string(),
+                objective.name().to_string(),
+                strategy.name().to_string(),
+                report::pm(crate::util::stats::mean(&ppl), crate::util::stats::std(&ppl)),
+                report::pm(lm, ls),
+                report::pm(hm, hs),
+                report::pm(wm, ws),
+                report::pm(pm_, ps),
+                report::pm(crate::util::stats::mean(&avg), crate::util::stats::std(&avg)),
+            ]
+        })
+        .collect()
+}
+
+fn emit_family_figures(
+    ctx: &FigureCtx,
+    model: &str,
+    objective: Objective,
+    sweep: &Sweep,
+) -> Result<()> {
+    let aggs: Vec<_> = STRATEGIES.iter().map(|&s| (s, aggregate(sweep, s))).collect();
+
+    // Per-point CSV (raw sweep) for downstream analysis.
+    let mut rows = Vec::new();
+    for p in &sweep.points {
+        rows.push(vec![
+            p.strategy.name().into(),
+            format!("{}", p.tau),
+            format!("{}", p.seed),
+            p.config.bits_label(),
+            report::f(p.predicted_mse),
+            report::f(p.nrmse),
+            report::f(p.ttft_us),
+            report::f(p.tt_gain),
+            report::f(p.mem_gain),
+            p.task_acc.iter().map(|a| format!("{a:.4}")).collect::<Vec<_>>().join(";"),
+        ]);
+    }
+    report::write_csv(
+        &ctx.out.join(format!("sweep_{model}_{}.csv", objective.name())),
+        &["strategy", "tau", "seed", "config", "pred_mse", "nrmse", "ttft_us", "tt_gain", "mem_gain", "task_acc"],
+        &rows,
+    )?;
+
+    match objective {
+        Objective::EmpiricalTime => {
+            // Fig 4: loss MSE vs empirical time gain.
+            let series4: Vec<ascii::Series> = aggs
+                .iter()
+                .map(|(s, ag)| ascii::Series {
+                    name: s.name().into(),
+                    points: ag
+                        .iter()
+                        .map(|a| (sweep.baseline.ttft_us - a.ttft_us, a.nrmse * a.nrmse))
+                        .collect(),
+                })
+                .collect();
+            report::save_text(
+                &ctx.out.join(format!("fig4_{model}.txt")),
+                &ascii::plot(
+                    &format!("Fig 4 [{model}]: loss MSE vs empirical time gain"),
+                    "time gain [us]",
+                    "normalized loss MSE (d / E[g^2])",
+                    &series4,
+                ),
+            )?;
+            // Fig 5: avg accuracy diff vs TTFT.
+            let series5: Vec<ascii::Series> = aggs
+                .iter()
+                .map(|(s, ag)| ascii::Series {
+                    name: s.name().into(),
+                    points: ag.iter().map(|a| (a.ttft_us, a.acc_diff_mean)).collect(),
+                })
+                .collect();
+            report::save_text(
+                &ctx.out.join(format!("fig5_{model}.txt")),
+                &ascii::plot(
+                    &format!("Fig 5 [{model}]: avg accuracy diff [%] vs TTFT [us]"),
+                    "TTFT [us]",
+                    "accuracy diff vs BF16 [%]",
+                    &series5,
+                ),
+            )?;
+            // Fig 7: per-task accuracy (and lamb ppl) vs TTFT.
+            let mut fig7 = String::new();
+            for (ti, tname) in sweep.task_names.iter().enumerate() {
+                let series: Vec<ascii::Series> = aggs
+                    .iter()
+                    .map(|(s, ag)| ascii::Series {
+                        name: s.name().into(),
+                        points: ag.iter().map(|a| (a.ttft_us, a.per_task[ti].0)).collect(),
+                    })
+                    .collect();
+                fig7.push_str(&ascii::plot(
+                    &format!("Fig 7 [{model}/{tname}]: accuracy diff [%] vs TTFT [us]"),
+                    "TTFT [us]",
+                    "acc diff [%]",
+                    &series,
+                ));
+                fig7.push('\n');
+                if tname == "lamb" {
+                    let series_p: Vec<ascii::Series> = aggs
+                        .iter()
+                        .map(|(s, ag)| ascii::Series {
+                            name: s.name().into(),
+                            points: ag
+                                .iter()
+                                .map(|a| (a.ttft_us, a.per_task_ppl[ti].0))
+                                .collect(),
+                        })
+                        .collect();
+                    fig7.push_str(&ascii::plot(
+                        &format!("Fig 7 [{model}/lamb]: perplexity diff [%] vs TTFT [us]"),
+                        "TTFT [us]",
+                        "ppl diff [%]",
+                        &series_p,
+                    ));
+                    fig7.push('\n');
+                }
+            }
+            report::save_text(&ctx.out.join(format!("fig7_{model}.txt")), &fig7)?;
+        }
+        Objective::TheoreticalTime => {
+            // Fig 8: accuracy diff vs theoretical (MAC) time.
+            let base_tt: f64 = sweep
+                .points
+                .iter()
+                .map(|p| p.tt_gain)
+                .fold(0.0, f64::max);
+            let series: Vec<ascii::Series> = aggs
+                .iter()
+                .map(|(s, ag)| ascii::Series {
+                    name: s.name().into(),
+                    points: ag
+                        .iter()
+                        .map(|a| (base_tt - a.tt_gain, a.acc_diff_mean))
+                        .collect(),
+                })
+                .collect();
+            report::save_text(
+                &ctx.out.join(format!("fig8_{model}.txt")),
+                &ascii::plot(
+                    &format!("Fig 8 [{model}]: accuracy diff [%] vs MAC-time (lower = more quantized)"),
+                    "theoretical time [BF16-MAC units, relative]",
+                    "acc diff [%]",
+                    &series,
+                ),
+            )?;
+        }
+        Objective::Memory => {
+            // Fig 9: accuracy diff vs total model memory.
+            let total_bytes = (pl_total_param_bytes(sweep)) as f64;
+            let series: Vec<ascii::Series> = aggs
+                .iter()
+                .map(|(s, ag)| ascii::Series {
+                    name: s.name().into(),
+                    points: ag
+                        .iter()
+                        .map(|a| (total_bytes - a.mem_gain, a.acc_diff_mean))
+                        .collect(),
+                })
+                .collect();
+            report::save_text(
+                &ctx.out.join(format!("fig9_{model}.txt")),
+                &ascii::plot(
+                    &format!("Fig 9 [{model}]: accuracy diff [%] vs total weight memory [bytes]"),
+                    "total memory [bytes]",
+                    "acc diff [%]",
+                    &series,
+                ),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Baseline weight bytes: the memory x-axis offset.  All sweeps carry the
+/// same qlayer table, so infer from the largest possible gain at FP8
+/// (delta_M = 1 byte/element -> gain == param count) plus BF16 2 B/element.
+fn pl_total_param_bytes(sweep: &Sweep) -> u64 {
+    // max mem_gain over points == sum over linear layers of params * 1 byte
+    // only if some point quantizes everything; safer: recompute from configs
+    // is overkill — use 2x the max observed gain as the BF16 total proxy,
+    // falling back to max gain if nothing quantized.
+    let max_gain = sweep.points.iter().map(|p| p.mem_gain).fold(0.0, f64::max);
+    (2.0 * max_gain.max(1.0)) as u64
+}
+
+/// Merge per-model Table 1 CSVs into the final table + rendering.
+pub fn combine(ctx: &FigureCtx, models: &[String]) -> Result<()> {
+    let mut all_rows: Vec<Vec<String>> = Vec::new();
+    for m in models {
+        let path = ctx.out.join(format!("table1_{m}.csv"));
+        let text = std::fs::read_to_string(&path)?;
+        for line in text.lines().skip(1) {
+            all_rows.push(line.split(',').map(|s| s.to_string()).collect());
+        }
+    }
+    report::write_csv(&ctx.out.join("table1.csv"), &TABLE1_HEADER, &all_rows)?;
+    let header: Vec<String> = TABLE1_HEADER.iter().map(|s| s.to_string()).collect();
+    let rendered = report::format_table(&header, &all_rows);
+    report::save_text(&ctx.out.join("table1.txt"), &rendered)?;
+    println!("{rendered}");
+    let _ = Format::Bf16; // anchor import
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Hardware model parameters and per-op roofline cost.
+
+use crate::graph::{Engine, Node};
+use crate::numerics::Format;
+
+/// Accelerator description (defaults shaped after Gaudi 2's architecture:
+/// 2 MME units, a TPC pool, HBM roofline; absolute rates are scaled to this
+/// testbed — the paper's method only needs *relative* behaviour).
+#[derive(Clone, Debug)]
+pub struct HwModel {
+    /// Parallel matrix engines.
+    pub n_mme: usize,
+    /// Parallel vector engines.
+    pub n_tpc: usize,
+    /// BF16 MACs per microsecond per MME engine.
+    pub mme_macs_per_us: f64,
+    /// Vector-engine processed bytes per microsecond per TPC engine.
+    pub tpc_bytes_per_us: f64,
+    /// HBM bandwidth, bytes per microsecond (shared).
+    pub hbm_bytes_per_us: f64,
+    /// Kernel launch overhead, microseconds (fused chains pay once).
+    pub launch_us: f64,
+    /// Multiplicative std-dev of measurement noise.
+    pub noise_std: f64,
+    /// Elementwise-chain fusion on the vector engine (ablation toggle).
+    pub enable_fusion: bool,
+}
+
+impl Default for HwModel {
+    fn default() -> Self {
+        HwModel {
+            n_mme: 2,
+            n_tpc: 4,
+            mme_macs_per_us: 100_000.0,
+            tpc_bytes_per_us: 12_000.0,
+            hbm_bytes_per_us: 40_000.0,
+            launch_us: 1.5,
+            noise_std: 0.01,
+            enable_fusion: true,
+        }
+    }
+}
+
+impl HwModel {
+    /// Duration of one node executed in `fmt` (quantizable nodes only use
+    /// fmt; others are BF16 by construction), EXCLUDING launch overhead
+    /// (the scheduler adds it, once per fused chain).
+    pub fn op_time_us(&self, node: &Node, fmt: Format) -> f64 {
+        match node.engine {
+            Engine::Mme => {
+                let compute = node.macs as f64 / (self.mme_macs_per_us * fmt.mme_rate());
+                // Operands (activations in + weights) move at the format's
+                // byte width; outputs are produced at BF16.
+                let ratio = fmt.bytes() as f64 / Format::Bf16.bytes() as f64;
+                let bytes = (node.bytes_in + node.param_bytes) as f64 * ratio
+                    + node.bytes_out as f64;
+                let mem = bytes / self.hbm_bytes_per_us;
+                compute.max(mem)
+            }
+            Engine::Tpc => {
+                let work = (node.bytes_in + node.bytes_out) as f64 / self.tpc_bytes_per_us;
+                let mem = (node.bytes_in + node.bytes_out) as f64 / self.hbm_bytes_per_us;
+                work.max(mem)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::testutil::n;
+
+    #[test]
+    fn fp8_speeds_up_mme() {
+        let hw = HwModel::default();
+        let mut node = n("l", 0);
+        node.macs = 10_000_000; // compute-bound
+        let t_bf16 = hw.op_time_us(&node, Format::Bf16);
+        let t_fp8 = hw.op_time_us(&node, Format::Fp8E4m3);
+        assert!((t_bf16 / t_fp8 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_bound_op_gains_less_than_2x() {
+        let hw = HwModel::default();
+        let mut node = n("l", 0);
+        node.macs = 1000; // trivial compute
+        node.bytes_in = 1_000_000;
+        node.bytes_out = 1_000_000;
+        node.param_bytes = 0;
+        let t_bf16 = hw.op_time_us(&node, Format::Bf16);
+        let t_fp8 = hw.op_time_us(&node, Format::Fp8E4m3);
+        assert!(t_fp8 < t_bf16);
+        // Output bytes unchanged -> speedup strictly below 2x.
+        assert!(t_bf16 / t_fp8 < 2.0);
+    }
+
+    #[test]
+    fn tpc_ignores_format() {
+        let hw = HwModel::default();
+        let node = n("sm", -1); // tpc
+        assert_eq!(
+            hw.op_time_us(&node, Format::Bf16),
+            hw.op_time_us(&node, Format::Fp8E4m3)
+        );
+    }
+
+    #[test]
+    fn times_positive_monotone_in_work() {
+        let hw = HwModel::default();
+        let mut a = n("a", 0);
+        let mut b = n("b", 1);
+        a.macs = 1_000_000;
+        b.macs = 2_000_000;
+        assert!(hw.op_time_us(&a, Format::Bf16) > 0.0);
+        assert!(hw.op_time_us(&b, Format::Bf16) > hw.op_time_us(&a, Format::Bf16));
+    }
+}

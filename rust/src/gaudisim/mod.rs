@@ -1,0 +1,131 @@
+//! Gaudi-2-like timing simulator (DESIGN.md §3 substitution).
+//!
+//! The paper measures empirical time gain on an Intel Gaudi 2; this image
+//! has no accelerator, so we simulate the *phenomenon* the paper's method
+//! exploits (§2.3.1 / Fig. 1):
+//!
+//!   * per-op roofline: time = max(compute, memory) + launch overhead,
+//!     with FP8 running 2x MAC rate on the matrix engines and moving half
+//!     the operand bytes;
+//!   * a list scheduler over the full DAG with a small pool of parallel
+//!     MME and TPC engines — concurrent layers inside a branched sub-graph
+//!     overlap, so per-layer time gains do NOT add within a group;
+//!   * elementwise-chain fusion on the vector engine (single launch,
+//!     intermediates stay on-chip) — the "compiler is free to fuse" effect;
+//!   * multiplicative measurement noise on every TTFT sample.
+//!
+//! Sequential sub-graphs, by contrast, cannot overlap (data dependency), so
+//! their gained times DO add — exactly the paper's additivity structure.
+
+pub mod hw;
+pub mod schedule;
+
+pub use hw::HwModel;
+pub use schedule::Simulator;
+
+use crate::numerics::Format;
+
+/// A full-model MP configuration: one format per quantizable layer.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct MpConfig(pub Vec<Format>);
+
+impl MpConfig {
+    pub fn uniform(n: usize, f: Format) -> MpConfig {
+        MpConfig(vec![f; n])
+    }
+
+    pub fn all_bf16(n: usize) -> MpConfig {
+        Self::uniform(n, Format::Bf16)
+    }
+
+    pub fn get(&self, qidx: usize) -> Format {
+        self.0[qidx]
+    }
+
+    pub fn set(&mut self, qidx: usize, f: Format) {
+        self.0[qidx] = f;
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Count of layers not at the baseline format.
+    pub fn n_quantized(&self) -> usize {
+        self.0.iter().filter(|&&f| f != Format::Bf16).count()
+    }
+
+    /// Mantissa-bit vector for the compiled HLO's `mbits` input.
+    pub fn mbits_f32(&self) -> Vec<f32> {
+        self.0.iter().map(|f| f.mbits() as f32).collect()
+    }
+
+    /// Compact human-readable tag, e.g. "01101" (paper Fig. 1 labels:
+    /// 0 = BF16, 1 = FP8).
+    pub fn bits_label(&self) -> String {
+        self.0
+            .iter()
+            .map(|f| if *f == Format::Bf16 { '0' } else { '1' })
+            .collect()
+    }
+}
+
+/// Enumerate all F^L configurations of `formats` over `layer_count` slots
+/// (the columns of the paper's Q_j matrix), in lexicographic order with the
+/// LAST layer varying fastest.
+pub fn enumerate_configs(formats: &[Format], layer_count: usize) -> Vec<Vec<Format>> {
+    let f = formats.len();
+    let total = f.pow(layer_count as u32);
+    let mut out = Vec::with_capacity(total);
+    for p in 0..total {
+        let mut cfg = Vec::with_capacity(layer_count);
+        for l in 0..layer_count {
+            let digit = (p / f.pow((layer_count - 1 - l) as u32)) % f;
+            cfg.push(formats[digit]);
+        }
+        out.push(cfg);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_basics() {
+        let mut c = MpConfig::all_bf16(3);
+        assert_eq!(c.n_quantized(), 0);
+        c.set(1, Format::Fp8E4m3);
+        assert_eq!(c.n_quantized(), 1);
+        assert_eq!(c.bits_label(), "010");
+        assert_eq!(c.mbits_f32(), vec![7.0, 3.0, 7.0]);
+    }
+
+    #[test]
+    fn enumerate_counts() {
+        let fs = [Format::Bf16, Format::Fp8E4m3];
+        let cfgs = enumerate_configs(&fs, 5);
+        assert_eq!(cfgs.len(), 32);
+        // All distinct.
+        let mut labels: Vec<String> = cfgs
+            .iter()
+            .map(|c| MpConfig(c.clone()).bits_label())
+            .collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 32);
+    }
+
+    #[test]
+    fn enumerate_order_last_fastest() {
+        let fs = [Format::Bf16, Format::Fp8E4m3];
+        let cfgs = enumerate_configs(&fs, 2);
+        let labels: Vec<String> = cfgs.iter().map(|c| MpConfig(c.clone()).bits_label()).collect();
+        assert_eq!(labels, vec!["00", "01", "10", "11"]);
+    }
+}

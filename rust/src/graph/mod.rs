@@ -1,0 +1,347 @@
+//! Model computation DAG — loaded from artifacts/<model>/graph.json.
+//!
+//! Feeds the partitioner (the paper's Algorithm 2) and the gaudisim timing
+//! model.  Residual skip edges are kept separately: the paper's Fig. 6
+//! partitions the graph "with residual adds omitted", while the timing
+//! simulation uses the full edge set.
+
+pub mod partition;
+
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Matrix engine (Gaudi MME / TPU MXU analog) — linear + BGEMM ops.
+    Mme,
+    /// Vector engine (Gaudi TPC / TPU VPU analog) — everything else.
+    Tpc,
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: String,
+    pub kind: String,
+    pub engine: Engine,
+    /// Index into the model's quantizable-layer table, or -1.
+    pub qidx: i32,
+    pub macs: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub param_bytes: u64,
+    /// Linear/BGEMM contraction dims (0 for non-quantizable ops).
+    pub c: usize,
+    pub k: usize,
+}
+
+impl Node {
+    pub fn quantizable(&self) -> bool {
+        self.qidx >= 0
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub model: String,
+    pub eval_b: usize,
+    pub seq: usize,
+    pub nodes: Vec<Node>,
+    /// Main dataflow edges (node indices).
+    pub edges: Vec<(usize, usize)>,
+    /// Residual skip edges (node indices) — excluded by the partitioner.
+    pub residual_edges: Vec<(usize, usize)>,
+    pub qlayers: Vec<String>,
+    pub qkinds: Vec<String>,
+    index: HashMap<String, usize>,
+}
+
+impl Graph {
+    pub fn from_json(j: &Json) -> Result<Graph> {
+        let mut nodes = Vec::new();
+        let mut index = HashMap::new();
+        for nj in j.get("nodes")?.arr()? {
+            let id = nj.get("id")?.str()?.to_string();
+            let engine = match nj.get("engine")?.str()? {
+                "mme" => Engine::Mme,
+                "tpc" => Engine::Tpc,
+                e => bail!("unknown engine '{e}'"),
+            };
+            index.insert(id.clone(), nodes.len());
+            nodes.push(Node {
+                id,
+                kind: nj.get("kind")?.str()?.to_string(),
+                engine,
+                qidx: nj.get("qidx")?.i64()? as i32,
+                macs: nj.get("macs")?.f64()? as u64,
+                bytes_in: nj.get("bytes_in")?.f64()? as u64,
+                bytes_out: nj.get("bytes_out")?.f64()? as u64,
+                param_bytes: nj.get("param_bytes")?.f64()? as u64,
+                c: nj.get("c")?.usize()?,
+                k: nj.get("k")?.usize()?,
+            });
+        }
+        let read_edges = |key: &str| -> Result<Vec<(usize, usize)>> {
+            let mut out = Vec::new();
+            for e in j.get(key)?.arr()? {
+                let pair = e.arr()?;
+                let s = pair[0].str()?;
+                let d = pair[1].str()?;
+                let si = *index.get(s).ok_or_else(|| anyhow!("edge src '{s}' unknown"))?;
+                let di = *index.get(d).ok_or_else(|| anyhow!("edge dst '{d}' unknown"))?;
+                out.push((si, di));
+            }
+            Ok(out)
+        };
+        let g = Graph {
+            model: j.get("model")?.str()?.to_string(),
+            eval_b: j.get("eval_b")?.usize()?,
+            seq: j.get("seq")?.usize()?,
+            edges: read_edges("edges")?,
+            residual_edges: read_edges("residual_edges")?,
+            qlayers: j.get("qlayers")?.arr()?.iter().map(|x| Ok(x.str()?.to_string())).collect::<Result<_>>()?,
+            qkinds: j.get("qkinds")?.arr()?.iter().map(|x| Ok(x.str()?.to_string())).collect::<Result<_>>()?,
+            nodes,
+            index,
+        };
+        g.check()?;
+        Ok(g)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Graph> {
+        Graph::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Construct directly (tests / synthetic graphs).
+    pub fn synthetic(nodes: Vec<Node>, edges: Vec<(usize, usize)>) -> Graph {
+        let index = nodes.iter().enumerate().map(|(i, n)| (n.id.clone(), i)).collect();
+        let qlayers = nodes.iter().filter(|n| n.quantizable()).map(|n| n.id.clone()).collect();
+        let qkinds = nodes.iter().filter(|n| n.quantizable()).map(|n| n.kind.clone()).collect();
+        Graph {
+            model: "synthetic".into(),
+            eval_b: 1,
+            seq: 1,
+            nodes,
+            edges,
+            residual_edges: vec![],
+            qlayers,
+            qkinds,
+            index,
+        }
+    }
+
+    fn check(&self) -> Result<()> {
+        // qidx must biject onto [0, n_q).
+        let mut seen = vec![false; self.qlayers.len()];
+        for n in &self.nodes {
+            if n.qidx >= 0 {
+                let q = n.qidx as usize;
+                if q >= seen.len() || seen[q] {
+                    bail!("bad qidx {} on node {}", n.qidx, n.id);
+                }
+                seen[q] = true;
+                if self.qlayers[q] != n.id {
+                    bail!("qidx {} maps to '{}' but qlayers says '{}'", q, n.id, self.qlayers[q]);
+                }
+            }
+        }
+        if !seen.iter().all(|&x| x) {
+            bail!("not all quantizable layers present in graph");
+        }
+        if self.topo_order(true).is_none() {
+            bail!("graph has a cycle");
+        }
+        Ok(())
+    }
+
+    pub fn node_index(&self, id: &str) -> Result<usize> {
+        self.index.get(id).copied().ok_or_else(|| anyhow!("node '{id}' unknown"))
+    }
+
+    /// Adjacency list; `with_residual` includes skip edges.
+    pub fn successors(&self, with_residual: bool) -> Vec<Vec<usize>> {
+        let mut adj = vec![Vec::new(); self.nodes.len()];
+        for &(s, d) in &self.edges {
+            adj[s].push(d);
+        }
+        if with_residual {
+            for &(s, d) in &self.residual_edges {
+                adj[s].push(d);
+            }
+        }
+        adj
+    }
+
+    pub fn predecessors(&self, with_residual: bool) -> Vec<Vec<usize>> {
+        let mut adj = vec![Vec::new(); self.nodes.len()];
+        for &(s, d) in &self.edges {
+            adj[d].push(s);
+        }
+        if with_residual {
+            for &(s, d) in &self.residual_edges {
+                adj[d].push(s);
+            }
+        }
+        adj
+    }
+
+    /// Kahn topological order over the chosen edge set; None if cyclic.
+    pub fn topo_order(&self, with_residual: bool) -> Option<Vec<usize>> {
+        let succ = self.successors(with_residual);
+        let mut indeg = vec![0usize; self.nodes.len()];
+        for vs in &succ {
+            for &d in vs {
+                indeg[d] += 1;
+            }
+        }
+        let mut queue: std::collections::VecDeque<usize> =
+            (0..self.nodes.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.nodes.len());
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &d in &succ[v] {
+                indeg[d] -= 1;
+                if indeg[d] == 0 {
+                    queue.push_back(d);
+                }
+            }
+        }
+        (order.len() == self.nodes.len()).then_some(order)
+    }
+
+    /// Longest path length (in edges) from any source, per node
+    /// (Algorithm 2's path_len, computed by DP over the topo order).
+    pub fn longest_path(&self, with_residual: bool) -> Vec<usize> {
+        let order = self.topo_order(with_residual).expect("acyclic");
+        let succ = self.successors(with_residual);
+        let mut pl = vec![0usize; self.nodes.len()];
+        for &v in &order {
+            for &d in &succ[v] {
+                pl[d] = pl[d].max(pl[v] + 1);
+            }
+        }
+        pl
+    }
+
+    /// Sources / sinks over main edges.
+    pub fn source(&self) -> Result<usize> {
+        let pred = self.predecessors(false);
+        let srcs: Vec<usize> = (0..self.nodes.len()).filter(|&i| pred[i].is_empty()).collect();
+        if srcs.len() != 1 {
+            bail!("expected single source, found {}", srcs.len());
+        }
+        Ok(srcs[0])
+    }
+
+    pub fn sink(&self) -> Result<usize> {
+        let succ = self.successors(false);
+        let sinks: Vec<usize> = (0..self.nodes.len()).filter(|&i| succ[i].is_empty()).collect();
+        if sinks.len() != 1 {
+            bail!("expected single sink, found {}", sinks.len());
+        }
+        Ok(sinks[0])
+    }
+
+    /// Total parameter bytes at the BF16 baseline (for memory metrics).
+    pub fn total_param_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.param_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+pub mod testutil {
+    use super::*;
+
+    /// Build a quick synthetic node.
+    pub fn n(id: &str, qidx: i32) -> Node {
+        Node {
+            id: id.into(),
+            kind: if qidx >= 0 { "linear".into() } else { "op".into() },
+            engine: if qidx >= 0 { Engine::Mme } else { Engine::Tpc },
+            qidx,
+            macs: if qidx >= 0 { 1000 } else { 0 },
+            bytes_in: 64,
+            bytes_out: 64,
+            param_bytes: if qidx >= 0 { 128 } else { 0 },
+            c: 8,
+            k: 8,
+        }
+    }
+
+    /// a -> b -> c chain with q layers at b.
+    pub fn chain() -> Graph {
+        Graph::synthetic(
+            vec![n("a", -1), n("b", 0), n("c", 1)],
+            vec![(0, 1), (1, 2)],
+        )
+    }
+
+    /// Diamond: s -> {x, y} -> m -> t.
+    pub fn diamond() -> Graph {
+        Graph::synthetic(
+            vec![n("s", -1), n("x", 0), n("y", 1), n("m", 2), n("t", -1)],
+            vec![(0, 1), (0, 2), (1, 3), (2, 3), (3, 4)],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn topo_and_longest_path() {
+        let g = diamond();
+        let topo = g.topo_order(false).unwrap();
+        assert_eq!(topo.len(), 5);
+        let pl = g.longest_path(false);
+        assert_eq!(pl, vec![0, 1, 1, 2, 3]);
+    }
+
+    #[test]
+    fn source_sink() {
+        let g = diamond();
+        assert_eq!(g.source().unwrap(), 0);
+        assert_eq!(g.sink().unwrap(), 4);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let g = Graph::synthetic(vec![n("a", -1), n("b", -1)], vec![(0, 1), (1, 0)]);
+        assert!(g.topo_order(false).is_none());
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let src = r#"{
+          "model": "t", "eval_b": 2, "seq": 4,
+          "nodes": [
+            {"id":"a","kind":"embed","engine":"tpc","qidx":-1,"macs":0,"bytes_in":8,"bytes_out":8,"param_bytes":0,"c":0,"k":0},
+            {"id":"b","kind":"linear","engine":"mme","qidx":0,"macs":100,"bytes_in":8,"bytes_out":8,"param_bytes":32,"c":2,"k":2}
+          ],
+          "edges": [["a","b"]],
+          "residual_edges": [],
+          "qlayers": ["b"],
+          "qkinds": ["linear"]
+        }"#;
+        let g = Graph::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(g.nodes.len(), 2);
+        assert_eq!(g.node_index("b").unwrap(), 1);
+        assert!(g.nodes[1].quantizable());
+        assert_eq!(g.total_param_bytes(), 32);
+    }
+
+    #[test]
+    fn bad_qidx_rejected() {
+        let src = r#"{
+          "model": "t", "eval_b": 1, "seq": 1,
+          "nodes": [
+            {"id":"a","kind":"linear","engine":"mme","qidx":1,"macs":1,"bytes_in":1,"bytes_out":1,"param_bytes":1,"c":1,"k":1}
+          ],
+          "edges": [], "residual_edges": [],
+          "qlayers": ["a"], "qkinds": ["linear"]
+        }"#;
+        assert!(Graph::from_json(&Json::parse(src).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! The paper's Algorithm 2: partition the model DAG into an ordered sequence
+//! of single-entry/single-exit (SESE) sub-graphs that execute strictly
+//! sequentially at run time, so their gained times add (§2.3.1, Appendix B).
+//!
+//! Residual skip edges are excluded from the walk, matching Fig. 6
+//! ("residual adds are omitted for clarity").
+
+use super::Graph;
+use anyhow::{bail, Result};
+use std::collections::BTreeSet;
+
+/// One sequential sub-graph V_j.
+#[derive(Clone, Debug)]
+pub struct SubGraph {
+    /// Every node swept into this SESE region (graph node indices, sorted).
+    pub all_nodes: Vec<usize>,
+    /// The quantizable members (graph node indices, in qidx order).
+    pub qnodes: Vec<usize>,
+    /// Their indices into the model's quantizable-layer table.
+    pub qidxs: Vec<usize>,
+}
+
+impl SubGraph {
+    pub fn len(&self) -> usize {
+        self.qidxs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.qidxs.is_empty()
+    }
+
+    /// Number of MP configurations for this group: F^{L_j}.
+    pub fn n_configs(&self, n_formats: usize) -> usize {
+        n_formats.pow(self.qidxs.len() as u32)
+    }
+}
+
+/// Partition of the whole model: ordered groups {V_j}.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub groups: Vec<SubGraph>,
+}
+
+impl Partition {
+    /// Total quantizable layers covered.
+    pub fn n_qlayers(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).sum()
+    }
+
+    /// Map qidx -> group index.
+    pub fn group_of(&self) -> Vec<usize> {
+        let n = self.n_qlayers();
+        let mut out = vec![usize::MAX; n];
+        for (j, g) in self.groups.iter().enumerate() {
+            for &q in &g.qidxs {
+                out[q] = j;
+            }
+        }
+        out
+    }
+
+    /// Total number of per-group timing measurements: sum_j F^{L_j}.
+    pub fn n_measurements(&self, n_formats: usize) -> usize {
+        self.groups.iter().map(|g| g.n_configs(n_formats)).sum()
+    }
+}
+
+/// Algorithm 2 (paper Appendix B), walking main edges only.
+pub fn partition(graph: &Graph) -> Result<Partition> {
+    let succ = graph.successors(false);
+    let pl = graph.longest_path(false);
+    let start = graph.source()?;
+    let end = graph.sink()?;
+
+    let mut groups: Vec<SubGraph> = Vec::new();
+    let mut vertex = start;
+    let mut covered: BTreeSet<usize> = BTreeSet::new();
+
+    // The source itself forms the first candidate region.
+    let mut pending: Vec<usize> = vec![vertex];
+    flush(graph, &mut groups, &mut pending, &mut covered);
+
+    while vertex != end {
+        let mut region: Vec<usize> = Vec::new();
+        let mut frontier: BTreeSet<usize> = succ[vertex].iter().copied().collect();
+        let mut cur_len = pl[vertex] + 1;
+        // Sweep vertices whose longest-path rank has been reached into the
+        // region until the frontier narrows to a single vertex — that vertex
+        // is the region's single exit.
+        let mut guard = 0usize;
+        while frontier.len() > 1 {
+            let snapshot: Vec<usize> = frontier.iter().copied().collect();
+            for v in snapshot {
+                if pl[v] <= cur_len {
+                    frontier.remove(&v);
+                    region.push(v);
+                    for &w in &succ[v] {
+                        frontier.insert(w);
+                    }
+                }
+            }
+            cur_len += 1;
+            guard += 1;
+            if guard > graph.nodes.len() + 2 {
+                bail!("partition did not converge (malformed DAG?)");
+            }
+        }
+        let Some(&exit) = frontier.iter().next() else {
+            bail!("dead-end before reaching sink (node '{}')", graph.nodes[vertex].id);
+        };
+        vertex = exit;
+        region.push(vertex);
+        flush(graph, &mut groups, &mut region, &mut covered);
+    }
+
+    // Every quantizable layer must be covered exactly once.
+    let covered_q: usize = groups.iter().map(|g| g.len()).sum();
+    if covered_q != graph.qlayers.len() {
+        bail!("partition covered {covered_q} of {} quantizable layers", graph.qlayers.len());
+    }
+    Ok(Partition { groups })
+}
+
+/// Pop non-quantizable vertices; append as a group if any remain
+/// (Algorithm 2 lines 21-24).
+fn flush(graph: &Graph, groups: &mut Vec<SubGraph>, region: &mut Vec<usize>,
+         covered: &mut BTreeSet<usize>) {
+    let mut qnodes: Vec<usize> = region
+        .iter()
+        .copied()
+        .filter(|&v| graph.nodes[v].quantizable() && !covered.contains(&v))
+        .collect();
+    qnodes.sort_by_key(|&v| graph.nodes[v].qidx);
+    let mut all: Vec<usize> = region.drain(..).collect();
+    all.sort_unstable();
+    all.dedup();
+    for &v in &qnodes {
+        covered.insert(v);
+    }
+    if !qnodes.is_empty() {
+        let qidxs = qnodes.iter().map(|&v| graph.nodes[v].qidx as usize).collect();
+        groups.push(SubGraph { all_nodes: all, qnodes, qidxs });
+    }
+}
+
+/// Validate the SESE property of each group (used by tests & `ampq partition`):
+/// all main-edge crossings into the region come through one entry frontier
+/// and leave through the group's last vertex region.
+pub fn validate_sequential(graph: &Graph, part: &Partition) -> Result<()> {
+    // Groups must be disjoint in qidxs and ordered topologically.
+    let mut seen = BTreeSet::new();
+    for g in &part.groups {
+        for &q in &g.qidxs {
+            if !seen.insert(q) {
+                bail!("qidx {q} appears in two groups");
+            }
+        }
+    }
+    let pl = graph.longest_path(false);
+    let mut last_max = 0usize;
+    for (j, g) in part.groups.iter().enumerate() {
+        let lo = g.qnodes.iter().map(|&v| pl[v]).min().unwrap();
+        let hi = g.qnodes.iter().map(|&v| pl[v]).max().unwrap();
+        if j > 0 && lo <= last_max.saturating_sub(0) && lo < last_max {
+            bail!("group {j} overlaps previous in depth ({lo} < {last_max})");
+        }
+        last_max = hi.max(last_max);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::testutil::{chain, diamond, n};
+    use crate::graph::Graph;
+
+    #[test]
+    fn chain_gives_singleton_groups() {
+        let g = chain();
+        let p = partition(&g).unwrap();
+        assert_eq!(p.groups.len(), 2);
+        assert!(p.groups.iter().all(|gr| gr.len() == 1));
+        assert_eq!(p.group_of(), vec![0, 1]);
+    }
+
+    #[test]
+    fn diamond_merges_branches() {
+        let g = diamond();
+        let p = partition(&g).unwrap();
+        // {x, y, m} is a single SESE region; t is non-quantizable.
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.groups[0].qidxs, vec![0, 1, 2]);
+        assert_eq!(p.groups[0].n_configs(2), 8);
+    }
+
+    #[test]
+    fn wide_fanout_converges() {
+        // s -> {a,b,c,d} -> m -> t : one group of 5 q-layers.
+        let nodes = vec![
+            n("s", -1), n("a", 0), n("b", 1), n("c", 2), n("d", 3), n("m", 4), n("t", -1),
+        ];
+        let edges = vec![(0, 1), (0, 2), (0, 3), (0, 4), (1, 5), (2, 5), (3, 5), (4, 5), (5, 6)];
+        let g = Graph::synthetic(nodes, edges);
+        let p = partition(&g).unwrap();
+        assert_eq!(p.groups.len(), 1);
+        assert_eq!(p.groups[0].len(), 5);
+    }
+
+    #[test]
+    fn asymmetric_depth_branches() {
+        // s -> a -> b -> m ; s -> c -> m ; m -> t  (unequal branch depths)
+        let nodes = vec![n("s", -1), n("a", 0), n("b", 1), n("c", 2), n("m", 3), n("t", -1)];
+        let edges = vec![(0, 1), (1, 2), (0, 3), (2, 4), (3, 4), (4, 5)];
+        let g = Graph::synthetic(nodes, edges);
+        let p = partition(&g).unwrap();
+        assert_eq!(p.groups.len(), 1);
+        let mut q = p.groups[0].qidxs.clone();
+        q.sort_unstable();
+        assert_eq!(q, vec![0, 1, 2, 3]);
+        validate_sequential(&g, &p).unwrap();
+    }
+
+    #[test]
+    fn sequential_chain_after_merge() {
+        // diamond followed by two sequential linears.
+        let nodes = vec![
+            n("s", -1), n("x", 0), n("y", 1), n("m", 2), n("p", 3), n("q", 4), n("t", -1),
+        ];
+        let edges = vec![(0, 1), (0, 2), (1, 3), (2, 3), (3, 4), (4, 5), (5, 6)];
+        let g = Graph::synthetic(nodes, edges);
+        let p = partition(&g).unwrap();
+        assert_eq!(p.groups.len(), 3);
+        assert_eq!(p.groups[0].qidxs, vec![0, 1, 2]);
+        assert_eq!(p.groups[1].qidxs, vec![3]);
+        assert_eq!(p.groups[2].qidxs, vec![4]);
+        assert_eq!(p.n_measurements(2), 8 + 2 + 2);
+        validate_sequential(&g, &p).unwrap();
+    }
+
+    #[test]
+    fn group_of_total() {
+        let g = diamond();
+        let p = partition(&g).unwrap();
+        assert_eq!(p.n_qlayers(), 3);
+        assert!(p.group_of().iter().all(|&j| j == 0));
+    }
+}

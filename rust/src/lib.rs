@@ -1,0 +1,30 @@
+//! # ampq — Automatic Mixed Precision with Constrained Loss-MSE
+//!
+//! Rust + JAX + Pallas reproduction of Markovich-Golan et al. (2025):
+//! *"Automatic mixed precision for optimizing gained time with constrained
+//! loss mean-squared-error based on model partition to sequential
+//! sub-graphs"*.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): partition (Algorithm 2), sensitivity calibration,
+//!   per-group time-gain measurement, MCKP/IP optimization, strategies,
+//!   task evaluation, reporting — python is never on the request path.
+//! * L2/L1 (python/compile, build-time only): the JAX transformer with
+//!   runtime-controlled fake-quant Pallas kernels, lowered once to HLO text
+//!   in `artifacts/` and executed here via PJRT (`runtime`).
+
+pub mod coordinator;
+pub mod evalharness;
+pub mod figures;
+pub mod gaudisim;
+pub mod graph;
+pub mod metrics;
+pub mod model;
+pub mod numerics;
+pub mod report;
+pub mod runtime;
+pub mod sensitivity;
+pub mod solver;
+pub mod tensorbin;
+pub mod timing;
+pub mod util;

@@ -1,0 +1,318 @@
+//! ampq CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands (see README):
+//!   partition  — print the Algorithm-2 sub-graph partition (paper Fig. 6)
+//!   calibrate  — run sensitivity calibration, print s_l and E[g^2]
+//!   measure    — per-group empirical time-gain tables (paper §2.3.1)
+//!   optimize   — solve the IP at one tau, print the chosen configuration
+//!   evaluate   — evaluate a strategy's configuration on the tasks
+//!   pipeline   — Algorithm 1 end to end with a tau sweep summary
+//!   figures    — regenerate paper figures/tables into results/
+//!   ttft       — wall-clock TTFT of the real compiled forward (PJRT)
+
+use ampq::coordinator::{paper_tau_grid, select_config, Pipeline, Strategy};
+use ampq::evalharness::{evaluate, load_all_tasks};
+use ampq::figures::{fig1, fig2, fig3, table1, ExpParams, FigureCtx};
+use ampq::gaudisim::{HwModel, MpConfig};
+use ampq::metrics::Objective;
+use ampq::model::Manifest;
+use ampq::numerics::{Format, PAPER_FORMATS};
+use ampq::runtime::FwdMode;
+use ampq::sensitivity::validate::draw_pscale;
+use ampq::timing::{measure_groups, TtftSource, WallTtft};
+use ampq::util::{Args, Rng};
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: ampq <partition|calibrate|measure|optimize|evaluate|pipeline|figures|ttft> \
+  [--model tiny-s] [--artifacts artifacts] [--out results] [--tau 0.004] \
+  [--objective et|tt|m] [--strategy ip|random|prefix] [--seeds N] [--quick] [--fwd pallas|ref]";
+
+fn run(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["quick", "all", "help"])?;
+    if args.flag("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = args.positional[0].as_str();
+    let root = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let manifest = Manifest::load(&root)?;
+    let model = args.get_or("model", "tiny-s").to_string();
+    let fwd_mode = match args.get_or("fwd", "ref") {
+        "pallas" => FwdMode::Pallas,
+        "ref" => FwdMode::Ref,
+        m => bail!("unknown --fwd '{m}'"),
+    };
+
+    match cmd {
+        "partition" => cmd_partition(&manifest, &model),
+        "calibrate" => cmd_calibrate(&manifest, &model, fwd_mode),
+        "measure" => cmd_measure(&manifest, &model, fwd_mode, &args),
+        "optimize" => cmd_optimize(&manifest, &model, fwd_mode, &args),
+        "evaluate" => cmd_evaluate(&manifest, &model, fwd_mode, &args),
+        "pipeline" => cmd_pipeline(&manifest, &model, fwd_mode, &args),
+        "figures" => cmd_figures(manifest, fwd_mode, &args),
+        "ttft" => cmd_ttft(&manifest, &model, &args),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn load_pipeline(manifest: &Manifest, model: &str, fwd: FwdMode) -> Result<Pipeline> {
+    Pipeline::new(manifest, model, fwd, HwModel::default(), PAPER_FORMATS.to_vec())
+}
+
+fn parse_objective(args: &Args) -> Result<Objective> {
+    Ok(match args.get_or("objective", "et") {
+        "et" => Objective::EmpiricalTime,
+        "tt" => Objective::TheoreticalTime,
+        "m" => Objective::Memory,
+        o => bail!("unknown --objective '{o}'"),
+    })
+}
+
+fn parse_strategy(args: &Args) -> Result<Strategy> {
+    Ok(match args.get_or("strategy", "ip") {
+        "ip" => Strategy::Ip,
+        "random" => Strategy::Random,
+        "prefix" => Strategy::Prefix,
+        s => bail!("unknown --strategy '{s}'"),
+    })
+}
+
+fn cmd_partition(manifest: &Manifest, model: &str) -> Result<()> {
+    let info = manifest.model(model)?;
+    let graph = info.load_graph(&manifest.root)?;
+    let part = ampq::graph::partition::partition(&graph)?;
+    println!(
+        "model {model}: {} nodes, {} quantizable layers -> {} sequential sub-graphs",
+        graph.nodes.len(),
+        graph.qlayers.len(),
+        part.groups.len()
+    );
+    for (j, g) in part.groups.iter().enumerate() {
+        let names: Vec<&str> = g.qidxs.iter().map(|&q| graph.qlayers[q].as_str()).collect();
+        println!(
+            "  V{j:<2} ({} layers, {} configs): {}",
+            g.len(),
+            g.n_configs(PAPER_FORMATS.len()),
+            names.join(", ")
+        );
+    }
+    println!(
+        "total per-group measurements: {} (vs {:.2e} for exhaustive whole-model search)",
+        part.n_measurements(PAPER_FORMATS.len()),
+        (PAPER_FORMATS.len() as f64).powi(graph.qlayers.len() as i32)
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(manifest: &Manifest, model: &str, fwd: FwdMode) -> Result<()> {
+    let pl = load_pipeline(manifest, model, fwd)?;
+    let c = &pl.calibration;
+    println!(
+        "model {model}: R={} samples, E[g]={:.4}, E[g^2]={:.4}",
+        c.n_samples, c.g_mean, c.eg2
+    );
+    println!("{:<22} {:>14} {:>14}", "layer", "s_l", "d_l(fp8)");
+    for (l, q) in pl.info.qlayers.iter().enumerate() {
+        println!(
+            "{:<22} {:>14.6} {:>14.3e}",
+            q.name,
+            c.s[l],
+            c.layer_mse(l, Format::Fp8E4m3)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_measure(manifest: &Manifest, model: &str, fwd: FwdMode, args: &Args) -> Result<()> {
+    let pl = load_pipeline(manifest, model, fwd)?;
+    let reps = args.usize_or("reps", 5)?;
+    let tm = pl.measure_time(args.u64_or("seed", 0)?, reps)?;
+    println!("model {model}: baseline TTFT {:.1} us (simulated Gaudi-2-like)", tm.base_ttft);
+    for g in &tm.groups {
+        let names: Vec<&str> =
+            g.qidxs.iter().map(|&q| pl.info.qlayers[q].name.as_str()).collect();
+        println!("group {} [{}]:", g.group, names.join(", "));
+        for (cfg, gain) in g.configs.iter().zip(&g.gains) {
+            let label: String =
+                cfg.iter().map(|f| if *f == Format::Bf16 { '0' } else { '1' }).collect();
+            println!("    {label}  gain {:>9.2} us", gain);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_optimize(manifest: &Manifest, model: &str, fwd: FwdMode, args: &Args) -> Result<()> {
+    let pl = load_pipeline(manifest, model, fwd)?;
+    let tau = args.f64_or("tau", 0.004)?;
+    let objective = parse_objective(args)?;
+    let tm = pl.measure_time(0, args.usize_or("reps", 5)?)?;
+    let family = pl.family(objective, &tm);
+    let out = ampq::coordinator::optimize(&family.groups, &pl.calibration, tau)?;
+    println!(
+        "model {model} {} tau={tau}: feasible={} gain={:.3} predicted-mse={:.3e} budget={:.3e}",
+        objective.name(),
+        out.solution.feasible,
+        out.solution.gain,
+        out.predicted_mse,
+        out.budget
+    );
+    println!("config ({} of {} layers quantized):", out.config.n_quantized(), out.config.len());
+    for (l, q) in pl.info.qlayers.iter().enumerate() {
+        println!("  {:<22} {}", q.name, out.config.get(l).name());
+    }
+    Ok(())
+}
+
+fn cmd_evaluate(manifest: &Manifest, model: &str, fwd: FwdMode, args: &Args) -> Result<()> {
+    let pl = load_pipeline(manifest, model, fwd)?;
+    let tau = args.f64_or("tau", 0.004)?;
+    let objective = parse_objective(args)?;
+    let strategy = parse_strategy(args)?;
+    let seed = args.u64_or("seed", 0)?;
+    let tm = pl.measure_time(0, 5)?;
+    let family = pl.family(objective, &tm);
+    let cfg = select_config(&family, strategy, &pl.calibration, tau, seed)?;
+    let tasks = load_all_tasks(&manifest.root, &pl.info)?;
+    let mut rng = Rng::new(seed);
+    let ps = draw_pscale(pl.info.n_qlayers, args.f64_or("sigma", 0.02)?, &mut rng);
+    println!(
+        "model {model} {} {} tau={tau} seed={seed}: config {}",
+        objective.name(),
+        strategy.name(),
+        cfg.bits_label()
+    );
+    let bf16 = MpConfig::all_bf16(pl.info.n_qlayers);
+    let ones = vec![1.0f32; pl.info.n_qlayers];
+    for task in &tasks {
+        let base = evaluate(&pl.mr, task, &bf16, &ones)?;
+        let r = evaluate(&pl.mr, task, &cfg, &ps)?;
+        println!(
+            "  {:<6} acc {:.4} (diff {:+.4}) ppl {:.4} (diff {:+.2}%)",
+            task.meta.name,
+            r.acc,
+            r.acc - base.acc,
+            r.ppl,
+            (r.ppl / base.ppl - 1.0) * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(manifest: &Manifest, model: &str, fwd: FwdMode, args: &Args) -> Result<()> {
+    let pl = load_pipeline(manifest, model, fwd)?;
+    let objective = parse_objective(args)?;
+    println!("== Algorithm 1 on {model} ({}) ==", objective.name());
+    println!(
+        "[1] partition: {} groups, {} measurements",
+        pl.partition.groups.len(),
+        pl.partition.n_measurements(PAPER_FORMATS.len())
+    );
+    println!(
+        "[2] calibration: R={} E[g]={:.4} E[g^2]={:.4}",
+        pl.calibration.n_samples, pl.calibration.g_mean, pl.calibration.eg2
+    );
+    let tm = pl.measure_time(0, args.usize_or("reps", 5)?)?;
+    println!("[3] time gains measured: baseline TTFT {:.1} us", tm.base_ttft);
+    let family = pl.family(objective, &tm);
+    println!("[4] IP sweep:");
+    println!(
+        "{:>8} {:>6} {:>12} {:>12} {:>12} {:>10}",
+        "tau", "nq", "gain", "pred-mse", "budget", "ttft[us]"
+    );
+    for tau in paper_tau_grid() {
+        let out = ampq::coordinator::optimize(&family.groups, &pl.calibration, tau)?;
+        let ttft = pl.simulated_ttft(&out.config, 1, 5);
+        println!(
+            "{:>8.4} {:>6} {:>12.3} {:>12.3e} {:>12.3e} {:>10.1}",
+            tau,
+            out.config.n_quantized(),
+            out.solution.gain,
+            out.predicted_mse,
+            out.budget,
+            ttft
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figures(manifest: Manifest, fwd: FwdMode, args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get_or("out", "results"));
+    let mut params = if args.flag("quick") { ExpParams::quick() } else { ExpParams::default() };
+    params.fwd_mode = fwd;
+    params.n_seeds = args.u64_or("seeds", params.n_seeds)?;
+    let models: Vec<String> = args
+        .get_or("models", "tiny-s,tiny-m")
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let which = args.get_or("fig", "all").to_string();
+    let ctx = FigureCtx::new(manifest, params, out);
+
+    for model in &models {
+        if which == "all" || which == "1" {
+            fig1::run(&ctx, model)?;
+        }
+        if which == "all" || which == "2" {
+            fig2::run(&ctx, model)?;
+        }
+        if which == "all" || which == "3" || which == "3a" || which == "3b" {
+            fig3::run(&ctx, model)?;
+        }
+        if which == "all" || which == "table1" || which == "4" || which == "5"
+            || which == "7" || which == "8" || which == "9"
+        {
+            table1::run(&ctx, model)?;
+        }
+    }
+    if which == "all" || which == "table1" {
+        table1::combine(&ctx, &models)?;
+    }
+    println!("figures written to {}", ctx.out.display());
+    Ok(())
+}
+
+fn cmd_ttft(manifest: &Manifest, model: &str, args: &Args) -> Result<()> {
+    // Wall-clock TTFT of the REAL compiled forward on this host — proves the
+    // measurement harness drives actual PJRT executables (secondary mode;
+    // CPU fake-quant adds ops, so gains are not Gaudi-shaped).
+    let rt = ampq::runtime::Runtime::new()?;
+    let info = manifest.model(model)?.clone();
+    let mode = match args.get_or("fwd", "pallas") {
+        "pallas" => FwdMode::Pallas,
+        _ => FwdMode::Ref,
+    };
+    let mr = ampq::runtime::ModelRuntime::load(&rt, &manifest.root, &info, mode)?;
+    let calib = info.load_calib(&manifest.root)?;
+    let tokens: Vec<i32> = calib[..info.eval_b].concat();
+    let mut src = WallTtft { mr: &mr, tokens, reps: args.usize_or("reps", 5)? };
+    let base = src.measure(&MpConfig::all_bf16(info.n_qlayers))?;
+    let fp8 = src.measure(&MpConfig::uniform(info.n_qlayers, Format::Fp8E4m3))?;
+    println!(
+        "model {model} [{}] wall-clock fwd on {}: bf16-config {:.1} us, fp8-config {:.1} us / batch of {}",
+        if mode == FwdMode::Pallas { "pallas" } else { "ref" },
+        rt.platform(),
+        base,
+        fp8,
+        info.eval_b
+    );
+    // Per-group measurement demo over the wall clock (paper Algorithm 1.3).
+    let graph = info.load_graph(&manifest.root)?;
+    let part = ampq::graph::partition::partition(&graph)?;
+    let tm = measure_groups(&mut src, &part, &PAPER_FORMATS)?;
+    println!("wall-clock per-group gains (us): ");
+    for g in &tm.groups {
+        let best = g.gains.iter().cloned().fold(f64::MIN, f64::max);
+        println!("  group {:<2} ({} cfgs): max gain {:+.1}", g.group, g.gains.len(), best);
+    }
+    Ok(())
+}

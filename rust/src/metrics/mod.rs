@@ -1,0 +1,170 @@
+//! Performance-metric builders: the c_{j,p} vectors the IP maximizes
+//! (paper §2.3).  Three objectives:
+//!   * empirical time  c^ET — measured per-group TTFT gains (§2.3.1),
+//!   * theoretical time c^TT — MAC-count model, additive per layer (eq. 24),
+//!   * memory          c^M  — weight-byte reduction, linear layers only,
+//!     singleton groups (eq. 25-26).
+
+use crate::gaudisim::enumerate_configs;
+use crate::graph::partition::Partition;
+use crate::model::{LayerKind, QLayer};
+use crate::numerics::{delta_m, delta_t, Format};
+use crate::timing::TimeMeasurements;
+
+/// Objective selector (strategy families IP-ET / IP-TT / IP-M).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    EmpiricalTime,
+    TheoreticalTime,
+    Memory,
+}
+
+impl Objective {
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::EmpiricalTime => "IP-ET",
+            Objective::TheoreticalTime => "IP-TT",
+            Objective::Memory => "IP-M",
+        }
+    }
+}
+
+/// One IP group: candidate configurations (paper's Q_j columns) and their
+/// performance-gain values c_{j,p}.
+#[derive(Clone, Debug)]
+pub struct GroupChoices {
+    pub qidxs: Vec<usize>,
+    pub configs: Vec<Vec<Format>>,
+    pub gains: Vec<f64>,
+}
+
+/// c^ET: straight from the measured per-group tables.
+pub fn empirical_groups(tm: &TimeMeasurements) -> Vec<GroupChoices> {
+    tm.groups
+        .iter()
+        .map(|g| GroupChoices {
+            qidxs: g.qidxs.clone(),
+            configs: g.configs.clone(),
+            gains: g.gains.clone(),
+        })
+        .collect()
+}
+
+/// Per-layer theoretical gain c^TT_{l,f} = MACs_l * delta_T(f) (eq. 24),
+/// in units of "BF16 MAC times" (the IP is scale-invariant).
+pub fn tt_layer_gain(q: &QLayer, f: Format) -> f64 {
+    q.macs as f64 * delta_t(f)
+}
+
+/// c^TT grouped on the same partition as ET (additivity makes this exact).
+pub fn theoretical_groups(
+    part: &Partition,
+    qlayers: &[QLayer],
+    formats: &[Format],
+) -> Vec<GroupChoices> {
+    part.groups
+        .iter()
+        .map(|g| {
+            let configs = enumerate_configs(formats, g.qidxs.len());
+            let gains = configs
+                .iter()
+                .map(|cfg| {
+                    g.qidxs
+                        .iter()
+                        .zip(cfg)
+                        .map(|(&q, &f)| tt_layer_gain(&qlayers[q], f))
+                        .sum()
+                })
+                .collect();
+            GroupChoices { qidxs: g.qidxs.clone(), configs, gains }
+        })
+        .collect()
+}
+
+/// Per-layer memory gain c^M_{l,f} = params_l * delta_M(f) bytes (eq. 25);
+/// zero for BGEMM (intermediates are stack-allocated — paper §2.3.3).
+pub fn mem_layer_gain(q: &QLayer, f: Format) -> f64 {
+    match q.kind {
+        LayerKind::Linear => q.params as f64 * delta_m(f),
+        LayerKind::Bgemm => 0.0,
+    }
+}
+
+/// c^M: singleton groups over LINEAR layers only (paper: "IP-M quantizes
+/// only linear layers"); BGEMM layers are left out of the IP entirely and
+/// stay at the baseline format.
+pub fn memory_groups(qlayers: &[QLayer], formats: &[Format]) -> Vec<GroupChoices> {
+    qlayers
+        .iter()
+        .enumerate()
+        .filter(|(_, q)| q.kind == LayerKind::Linear)
+        .map(|(l, q)| {
+            let configs = enumerate_configs(formats, 1);
+            let gains = configs.iter().map(|cfg| mem_layer_gain(q, cfg[0])).collect();
+            GroupChoices { qidxs: vec![l], configs, gains }
+        })
+        .collect()
+}
+
+/// Layers covered by a set of groups (everything else defaults to BF16).
+pub fn covered_layers(groups: &[GroupChoices], n_qlayers: usize) -> Vec<bool> {
+    let mut covered = vec![false; n_qlayers];
+    for g in groups {
+        for &q in &g.qidxs {
+            covered[q] = true;
+        }
+    }
+    covered
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::partition::partition;
+    use crate::graph::testutil::diamond;
+    use crate::numerics::PAPER_FORMATS;
+
+    fn qlayers3() -> Vec<QLayer> {
+        vec![
+            QLayer { name: "x".into(), kind: LayerKind::Linear, c: 8, k: 8, macs: 1000, params: 64 },
+            QLayer { name: "y".into(), kind: LayerKind::Bgemm, c: 8, k: 8, macs: 500, params: 0 },
+            QLayer { name: "m".into(), kind: LayerKind::Linear, c: 8, k: 8, macs: 2000, params: 128 },
+        ]
+    }
+
+    #[test]
+    fn tt_gains_additive_and_scaled() {
+        let g = diamond();
+        let part = partition(&g).unwrap();
+        let groups = theoretical_groups(&part, &qlayers3(), &PAPER_FORMATS);
+        assert_eq!(groups.len(), 1);
+        let gc = &groups[0];
+        // All-BF16 gain = 0; all-FP8 = 0.5 * total MACs.
+        let bf16 = gc.configs.iter().position(|c| c.iter().all(|f| *f == Format::Bf16)).unwrap();
+        let fp8 = gc.configs.iter().position(|c| c.iter().all(|f| *f == Format::Fp8E4m3)).unwrap();
+        assert_eq!(gc.gains[bf16], 0.0);
+        assert!((gc.gains[fp8] - 0.5 * 3500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_skips_bgemm() {
+        let groups = memory_groups(&qlayers3(), &PAPER_FORMATS);
+        assert_eq!(groups.len(), 2); // only the two linear layers
+        for g in &groups {
+            assert_eq!(g.qidxs.len(), 1);
+            assert_eq!(g.configs.len(), 2);
+            // FP8 gain = params * 1 byte.
+            let fp8 = g.configs.iter().position(|c| c[0] == Format::Fp8E4m3).unwrap();
+            assert!(g.gains[fp8] > 0.0);
+        }
+        let covered = covered_layers(&groups, 3);
+        assert_eq!(covered, vec![true, false, true]);
+    }
+
+    #[test]
+    fn objective_names() {
+        assert_eq!(Objective::EmpiricalTime.name(), "IP-ET");
+        assert_eq!(Objective::TheoreticalTime.name(), "IP-TT");
+        assert_eq!(Objective::Memory.name(), "IP-M");
+    }
+}

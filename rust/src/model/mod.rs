@@ -1,0 +1,290 @@
+//! Artifact manifest: model descriptions, layer tables, artifact paths.
+//!
+//! Parses artifacts/manifest.json written by python/compile/aot.py — the
+//! single contract between the build-time python layers and this runtime.
+
+use crate::graph::Graph;
+use crate::tensorbin::{self, TensorFile};
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+use std::path::{Path, PathBuf};
+
+/// Quantizable layer kind (paper's L_lin vs L_BGEMM).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Linear,
+    Bgemm,
+}
+
+/// One quantizable layer's static description.
+#[derive(Clone, Debug)]
+pub struct QLayer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Contraction (input) dim C_l.
+    pub c: usize,
+    /// Output dim K_l.
+    pub k: usize,
+    /// MAC count at the evaluation batch (N C K, or BGEMM equivalent).
+    pub macs: u64,
+    /// Parameter element count (0 for BGEMM).
+    pub params: u64,
+}
+
+/// Evaluation-task metadata.
+#[derive(Clone, Debug)]
+pub struct TaskMeta {
+    pub name: String,
+    /// "choice" (argmax over K spans) or "lastword" (accuracy + ppl).
+    pub kind: String,
+    pub k: usize,
+    pub n_ex: usize,
+    pub path: String,
+}
+
+/// Paths (relative to the artifacts root) of one model's artifacts.
+#[derive(Clone, Debug)]
+pub struct ArtifactPaths {
+    pub weights: String,
+    pub fwd_quant: String,
+    pub fwd_ref: String,
+    pub sensitivity: String,
+    pub graph: String,
+    pub calib: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d: usize,
+    pub blocks: usize,
+    pub heads: usize,
+    pub ff: usize,
+    pub seq: usize,
+    pub eval_b: usize,
+    pub calib_r: usize,
+    pub n_qlayers: usize,
+    pub qlayers: Vec<QLayer>,
+    pub param_order: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub paths: ArtifactPaths,
+    pub tasks: Vec<TaskMeta>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: Vec<ModelInfo>,
+}
+
+impl Manifest {
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&root.join("manifest.json"))?;
+        let mut models = Vec::new();
+        for mj in j.get("models")?.arr()? {
+            models.push(parse_model(mj)?);
+        }
+        if models.is_empty() {
+            bail!("manifest has no models");
+        }
+        Ok(Manifest { root: root.to_path_buf(), models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                let names: Vec<&str> = self.models.iter().map(|m| m.name.as_str()).collect();
+                anyhow!("model '{name}' not in manifest (have: {names:?})")
+            })
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+}
+
+impl ModelInfo {
+    pub fn load_graph(&self, root: &Path) -> Result<Graph> {
+        let g = Graph::load(&root.join(&self.paths.graph))?;
+        if g.qlayers.len() != self.n_qlayers {
+            bail!("graph qlayers {} != manifest {}", g.qlayers.len(), self.n_qlayers);
+        }
+        Ok(g)
+    }
+
+    pub fn load_weights(&self, root: &Path) -> Result<TensorFile> {
+        let tf = tensorbin::read(&root.join(&self.paths.weights))?;
+        for name in &self.param_order {
+            tf.get(name)?;
+        }
+        Ok(tf)
+    }
+
+    pub fn load_calib(&self, root: &Path) -> Result<Vec<Vec<i32>>> {
+        let tf = tensorbin::read(&root.join(&self.paths.calib))?;
+        let t = tf.get("tokens")?;
+        let dims = t.dims();
+        if dims.len() != 2 || dims[1] != self.seq {
+            bail!("calib tokens shape {:?} (want [_, {}])", dims, self.seq);
+        }
+        let data = t.as_i32()?;
+        Ok(data.chunks(self.seq).map(|c| c.to_vec()).collect())
+    }
+
+    /// qidx of a layer by name.
+    pub fn qidx(&self, name: &str) -> Result<usize> {
+        self.qlayers
+            .iter()
+            .position(|q| q.name == name)
+            .ok_or_else(|| anyhow!("qlayer '{name}' unknown"))
+    }
+
+    /// Total parameter elements over quantizable linear layers
+    /// (the memory-gain denominator).
+    pub fn total_qparams(&self) -> u64 {
+        self.qlayers.iter().map(|q| q.params).sum()
+    }
+}
+
+fn parse_model(mj: &Json) -> Result<ModelInfo> {
+    let qlayers = mj
+        .get("qlayers")?
+        .arr()?
+        .iter()
+        .map(|q| {
+            Ok(QLayer {
+                name: q.get("name")?.str()?.to_string(),
+                kind: match q.get("kind")?.str()? {
+                    "linear" => LayerKind::Linear,
+                    "bgemm" => LayerKind::Bgemm,
+                    k => bail!("unknown layer kind '{k}'"),
+                },
+                c: q.get("c")?.usize()?,
+                k: q.get("k")?.usize()?,
+                macs: q.get("macs")?.f64()? as u64,
+                params: q.get("params")?.f64()? as u64,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let pj = mj.get("artifacts")?;
+    let paths = ArtifactPaths {
+        weights: pj.get("weights")?.str()?.to_string(),
+        fwd_quant: pj.get("fwd_quant")?.str()?.to_string(),
+        fwd_ref: pj.get("fwd_ref")?.str()?.to_string(),
+        sensitivity: pj.get("sensitivity")?.str()?.to_string(),
+        graph: pj.get("graph")?.str()?.to_string(),
+        calib: pj.get("calib")?.str()?.to_string(),
+    };
+
+    let param_order: Vec<String> = mj
+        .get("param_order")?
+        .arr()?
+        .iter()
+        .map(|x| Ok(x.str()?.to_string()))
+        .collect::<Result<_>>()?;
+    let shapes_j = mj.get("param_shapes")?;
+    let param_shapes = param_order
+        .iter()
+        .map(|n| {
+            shapes_j
+                .get(n)?
+                .arr()?
+                .iter()
+                .map(|d| d.usize())
+                .collect::<Result<Vec<_>>>()
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let tasks = mj
+        .get("tasks")?
+        .arr()?
+        .iter()
+        .map(|t| {
+            Ok(TaskMeta {
+                name: t.get("name")?.str()?.to_string(),
+                kind: t.get("kind")?.str()?.to_string(),
+                k: t.get("k")?.usize()?,
+                n_ex: t.get("n_ex")?.usize()?,
+                path: t.get("path")?.str()?.to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let info = ModelInfo {
+        name: mj.get("name")?.str()?.to_string(),
+        vocab: mj.get("vocab")?.usize()?,
+        d: mj.get("d")?.usize()?,
+        blocks: mj.get("blocks")?.usize()?,
+        heads: mj.get("heads")?.usize()?,
+        ff: mj.get("ff")?.usize()?,
+        seq: mj.get("seq")?.usize()?,
+        eval_b: mj.get("eval_b")?.usize()?,
+        calib_r: mj.get("calib_r")?.usize()?,
+        n_qlayers: mj.get("n_qlayers")?.usize()?,
+        qlayers,
+        param_order,
+        param_shapes,
+        paths,
+        tasks,
+    };
+    if info.qlayers.len() != info.n_qlayers {
+        bail!("{}: qlayer table size mismatch", info.name);
+    }
+    Ok(info)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_root()).expect("run `make artifacts` first");
+        assert!(m.models.len() >= 2);
+        let s = m.model("tiny-s").unwrap();
+        assert_eq!(s.n_qlayers, 9 * s.blocks + 1);
+        assert_eq!(s.qlayers.len(), s.n_qlayers);
+        assert_eq!(s.tasks.len(), 4);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn qlayer_kinds_consistent() {
+        let m = Manifest::load(&artifacts_root()).unwrap();
+        for info in &m.models {
+            let bgemms = info.qlayers.iter().filter(|q| q.kind == LayerKind::Bgemm).count();
+            assert_eq!(bgemms, 2 * info.blocks);
+            for q in &info.qlayers {
+                assert!(q.macs > 0);
+                match q.kind {
+                    LayerKind::Linear => assert!(q.params > 0),
+                    LayerKind::Bgemm => assert_eq!(q.params, 0),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn graph_and_weights_load() {
+        let m = Manifest::load(&artifacts_root()).unwrap();
+        let info = m.model("tiny-s").unwrap();
+        let g = info.load_graph(&m.root).unwrap();
+        assert_eq!(g.qlayers.len(), info.n_qlayers);
+        let w = info.load_weights(&m.root).unwrap();
+        // Shapes match the manifest contract.
+        for (name, shape) in info.param_order.iter().zip(&info.param_shapes) {
+            let t = w.get(name).unwrap();
+            assert_eq!(t.dims(), &shape[..], "{name}");
+        }
+        let calib = info.load_calib(&m.root).unwrap();
+        assert_eq!(calib.len(), info.calib_r);
+    }
+}

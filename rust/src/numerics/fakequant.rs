@@ -1,0 +1,136 @@
+//! Reference fake-quant in rust — mirrors python/compile/quant.py exactly.
+//!
+//! Used by tests (cross-validating the .tbin/HLO pipeline) and by the
+//! simulator's noise diagnostics.  The runtime model itself quantizes inside
+//! the compiled HLO; this is NOT on the request path.
+
+use super::Format;
+
+/// Round-to-nearest of `v` at `m` stored mantissa bits.
+pub fn round_mantissa(v: f32, m: u32) -> f32 {
+    if v == 0.0 || !v.is_finite() {
+        return v;
+    }
+    // Clamp the exponent like the jnp implementation: near-denormal inputs
+    // would otherwise overflow exp2(m - e) to inf and produce inf/inf = NaN.
+    let e = v.abs().log2().floor().clamp(-96.0, 120.0);
+    let f = (m as f32 - e).exp2();
+    (v * f).round() / f
+}
+
+/// Per-tensor scale with perturbation (matches quant.tensor_scale).
+pub fn tensor_scale(vs: &[f32], fmt: Format, pert: f32) -> f32 {
+    let s = match fmt.fmax() {
+        Some(fmax) => {
+            let amax = vs.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            (if amax > 0.0 { amax } else { 1.0 }) / fmax
+        }
+        None => 1.0,
+    };
+    s * pert
+}
+
+/// Quantize-dequantize a tensor to `fmt` (paper's noise injection).
+pub fn fake_quant(vs: &[f32], fmt: Format, pert: f32) -> Vec<f32> {
+    let s = tensor_scale(vs, fmt, pert);
+    let fmax = fmt.fmax().unwrap_or(f32::MAX);
+    vs.iter()
+        .map(|&v| {
+            let vn = v / s;
+            let q = round_mantissa(vn, fmt.mbits()).clamp(-fmax, fmax);
+            q * s
+        })
+        .collect()
+}
+
+/// Empirical relative MSE of quantizing `vs` to `fmt` — should track
+/// Format::alpha() for dense data (used in model-validation tests).
+pub fn relative_mse(vs: &[f32], fmt: Format) -> f64 {
+    let q = fake_quant(vs, fmt, 1.0);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&v, &qv) in vs.iter().zip(&q) {
+        num += ((qv - v) as f64).powi(2);
+        den += (v as f64).powi(2);
+    }
+    if den > 0.0 { num / den } else { 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_at_fp32() {
+        let mut r = Rng::new(0);
+        for _ in 0..1000 {
+            let v = (r.normal() * 10.0) as f32;
+            let q = round_mantissa(v, 23);
+            assert!((q - v).abs() <= v.abs() * 1e-6);
+        }
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        let mut r = Rng::new(1);
+        for m in [2u32, 3, 7, 10] {
+            for _ in 0..2000 {
+                let v = (r.normal() * 100.0) as f32;
+                let q = round_mantissa(v, m);
+                let bound = v.abs() * 2.0f32.powi(-(m as i32)) * 0.5 * 1.0001;
+                assert!((q - v).abs() <= bound + 1e-30, "m={m} v={v} q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut r = Rng::new(2);
+        for _ in 0..500 {
+            let v = (r.normal() * 3.0) as f32;
+            let q1 = round_mantissa(v, 3);
+            let q2 = round_mantissa(q1, 3);
+            assert_eq!(q1, q2);
+        }
+    }
+
+    #[test]
+    fn zero_preserved() {
+        assert_eq!(round_mantissa(0.0, 3), 0.0);
+        let q = fake_quant(&[0.0, 1.0, -1.0], Format::Fp8E4m3, 1.0);
+        assert_eq!(q[0], 0.0);
+    }
+
+    #[test]
+    fn saturation_respected() {
+        let vs = [1.0f32, 100.0, -1000.0, 0.5];
+        let q = fake_quant(&vs, Format::Fp8E4m3, 1.0);
+        let s = tensor_scale(&vs, Format::Fp8E4m3, 1.0);
+        for &x in &q {
+            assert!(x.abs() <= 448.0 * s * 1.000_01);
+        }
+        // The max element survives within format resolution.
+        assert!((q[2] + 1000.0).abs() / 1000.0 < 0.1);
+    }
+
+    #[test]
+    fn mse_tracks_alpha() {
+        let mut r = Rng::new(3);
+        let vs: Vec<f32> = (0..100_000).map(|_| (r.normal()).exp() as f32).collect();
+        for fmt in [Format::Fp8E4m3, Format::Bf16] {
+            let measured = relative_mse(&vs, fmt);
+            let predicted = fmt.alpha();
+            let ratio = measured / predicted;
+            assert!(ratio > 0.3 && ratio < 3.0, "{fmt:?}: ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn perturbation_shifts_grid() {
+        let vs: Vec<f32> = (0..64).map(|i| (i as f32 + 0.37) * 0.1).collect();
+        let a = fake_quant(&vs, Format::Fp8E4m3, 1.0);
+        let b = fake_quant(&vs, Format::Fp8E4m3, 1.05);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,136 @@
+//! Numerical formats and the paper's quantization-noise model.
+//!
+//! Mirrors python/compile/quant.py.  The rust side needs these for:
+//!   * alpha_f in the loss-MSE predictor (eq. 22),
+//!   * per-format byte widths / MME rate factors in metrics + gaudisim,
+//!   * a reference fake-quant for tests (validating against the jnp oracle).
+
+pub mod fakequant;
+
+/// A floating-point format the accelerator supports (paper's f index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Format {
+    Fp32,
+    Fp16,
+    Bf16,
+    Fp8E4m3,
+    Fp8E5m2,
+}
+
+impl Format {
+    /// Stored mantissa bits m_f (paper §2.2).
+    pub fn mbits(self) -> u32 {
+        match self {
+            Format::Fp32 => 23,
+            Format::Fp16 => 10,
+            Format::Bf16 => 7,
+            Format::Fp8E4m3 => 3,
+            Format::Fp8E5m2 => 2,
+        }
+    }
+
+    /// Bytes per stored element (paper's memory-gain delta_M source).
+    pub fn bytes(self) -> usize {
+        match self {
+            Format::Fp32 => 4,
+            Format::Fp16 | Format::Bf16 => 2,
+            Format::Fp8E4m3 | Format::Fp8E5m2 => 1,
+        }
+    }
+
+    /// Saturation bound (None = effectively unbounded for our data).
+    pub fn fmax(self) -> Option<f32> {
+        match self {
+            Format::Fp8E4m3 => Some(448.0),
+            Format::Fp8E5m2 => Some(57344.0),
+            _ => None,
+        }
+    }
+
+    /// alpha_f = 2^-2m / 12 — relative MSE of one element's rounding noise
+    /// (paper eq. after (16)).
+    pub fn alpha(self) -> f64 {
+        2.0f64.powi(-2 * self.mbits() as i32) / 12.0
+    }
+
+    /// MME throughput multiplier vs BF16 (Gaudi-2-like: FP8 MACs run 2x).
+    pub fn mme_rate(self) -> f64 {
+        match self {
+            Format::Fp32 => 0.5,
+            Format::Fp16 | Format::Bf16 => 1.0,
+            Format::Fp8E4m3 | Format::Fp8E5m2 => 2.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::Fp32 => "fp32",
+            Format::Fp16 => "fp16",
+            Format::Bf16 => "bf16",
+            Format::Fp8E4m3 => "fp8_e4m3",
+            Format::Fp8E5m2 => "fp8_e5m2",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Format> {
+        Some(match s {
+            "fp32" => Format::Fp32,
+            "fp16" => Format::Fp16,
+            "bf16" => Format::Bf16,
+            "fp8_e4m3" | "fp8" => Format::Fp8E4m3,
+            "fp8_e5m2" => Format::Fp8E5m2,
+            _ => return None,
+        })
+    }
+}
+
+/// The format menu used throughout the paper's experiments: F = 2,
+/// BF16 (baseline, index 0) and FP8-E4M3 (index 1).
+pub const PAPER_FORMATS: [Format; 2] = [Format::Bf16, Format::Fp8E4m3];
+
+/// Per-MAC time gain of format f vs the BF16 baseline, delta_T,f (eq. 24):
+/// 1 - rate(bf16)/rate(f) in units of "BF16 MAC times".
+pub fn delta_t(f: Format) -> f64 {
+    1.0 - Format::Bf16.mme_rate() / f.mme_rate()
+}
+
+/// Per-element byte reduction of storing in f instead of BF16, delta_M,f
+/// (eq. 25).
+pub fn delta_m(f: Format) -> f64 {
+    Format::Bf16.bytes() as f64 - f.bytes() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_ordering() {
+        assert!(Format::Fp8E5m2.alpha() > Format::Fp8E4m3.alpha());
+        assert!(Format::Fp8E4m3.alpha() > Format::Bf16.alpha());
+        assert!(Format::Bf16.alpha() > Format::Fp32.alpha());
+    }
+
+    #[test]
+    fn alpha_values() {
+        assert!((Format::Fp8E4m3.alpha() - 2.0f64.powi(-6) / 12.0).abs() < 1e-18);
+        assert!((Format::Bf16.alpha() - 2.0f64.powi(-14) / 12.0).abs() < 1e-18);
+    }
+
+    #[test]
+    fn deltas() {
+        assert_eq!(delta_t(Format::Bf16), 0.0);
+        assert_eq!(delta_t(Format::Fp8E4m3), 0.5);
+        assert_eq!(delta_m(Format::Bf16), 0.0);
+        assert_eq!(delta_m(Format::Fp8E4m3), 1.0);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for f in [Format::Fp32, Format::Fp16, Format::Bf16, Format::Fp8E4m3, Format::Fp8E5m2] {
+            assert_eq!(Format::from_name(f.name()), Some(f));
+        }
+        assert_eq!(Format::from_name("fp8"), Some(Format::Fp8E4m3));
+        assert_eq!(Format::from_name("int4"), None);
+    }
+}

@@ -1,0 +1,118 @@
+//! Terminal line/scatter plots — every figure gets a results/*.txt render
+//! alongside its CSV so the reproduction is inspectable without matplotlib.
+
+/// A named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+const MARKS: &[char] = &['o', 'x', '+', '*', '#', '@'];
+
+/// Render multiple series on one grid with axes and a legend.
+pub fn plot(title: &str, xlabel: &str, ylabel: &str, series: &[Series]) -> String {
+    let width = 72usize;
+    let height = 22usize;
+    let pts: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    if pts.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::MAX, f64::MIN);
+    let (mut ymin, mut ymax) = (f64::MAX, f64::MIN);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-300 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-300 {
+        ymax = ymin + 1.0;
+    }
+    // Pad the y-range slightly so extremes are visible.
+    let ypad = (ymax - ymin) * 0.05;
+    ymin -= ypad;
+    ymax += ypad;
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            let cx = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  [{}] {}\n", MARKS[si % MARKS.len()], s.name));
+    }
+    out.push_str(&format!("  y: {ylabel}  [{:.4e} .. {:.4e}]\n", ymin, ymax));
+    for row in &grid {
+        out.push_str("  |");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("   x: {xlabel}  [{:.4e} .. {:.4e}]\n", xmin, xmax));
+    out
+}
+
+/// Quantization-pattern heat strip (paper Fig. 2): rows = configurations,
+/// cols = layers; '#' = FP8, '.' = BF16.
+pub fn pattern_grid(title: &str, rows: &[(String, String)]) -> String {
+    let mut out = format!("{title}\n");
+    let label_w = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(4);
+    for (label, bits) in rows {
+        let strip: String = bits.chars().map(|c| if c == '1' { '#' } else { '.' }).collect();
+        out.push_str(&format!("  {label:>label_w$} |{strip}|\n"));
+    }
+    out.push_str(&format!(
+        "  {:>label_w$}  ('#' = FP8, '.' = BF16; columns = layer index)\n",
+        ""
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plot_renders_points() {
+        let s = vec![Series {
+            name: "line".into(),
+            points: (0..10).map(|i| (i as f64, i as f64 * 2.0)).collect(),
+        }];
+        let out = plot("test", "x", "y", &s);
+        assert!(out.contains("test"));
+        assert!(out.contains("[o] line"));
+        assert!(out.matches('o').count() >= 8);
+    }
+
+    #[test]
+    fn plot_handles_empty() {
+        assert!(plot("t", "x", "y", &[]).contains("no data"));
+    }
+
+    #[test]
+    fn plot_handles_degenerate_range() {
+        let s = vec![Series { name: "p".into(), points: vec![(1.0, 1.0), (1.0, 1.0)] }];
+        let out = plot("t", "x", "y", &s);
+        assert!(out.contains('o'));
+    }
+
+    #[test]
+    fn pattern_grid_renders() {
+        let out = pattern_grid("fig2", &[("tau=0.1".into(), "0110".into())]);
+        assert!(out.contains("|.##.|"));
+    }
+}

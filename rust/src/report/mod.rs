@@ -1,0 +1,109 @@
+//! Reporting: CSV emitters, ASCII plots, and aligned tables — every paper
+//! figure/table is regenerated as a CSV plus a terminal rendering under
+//! results/ (see DESIGN.md §5 for the experiment index).
+
+pub mod ascii;
+
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// Write a CSV file with a header row.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Format an aligned text table (paper Table 1 style).
+pub fn format_table(header: &[String], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    out.push_str(&fmt_row(header, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Save a string artifact under results/.
+pub fn save_text(path: &Path, content: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)?;
+    Ok(())
+}
+
+/// f64 cell formatting helpers.
+pub fn f(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1000.0 || x.abs() < 1.0e-3 {
+        format!("{x:.4e}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+pub fn pm(mean: f64, std: f64) -> String {
+    format!("{mean:+.3} ± {std:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_written() {
+        let p = std::env::temp_dir().join(format!("ampq_csv_{}.csv", std::process::id()));
+        write_csv(&p, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = format_table(
+            &["name".into(), "value".into()],
+            &[vec!["x".into(), "1.5".into()], vec!["longer".into(), "2".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[3].contains("longer"));
+    }
+
+    #[test]
+    fn num_format() {
+        assert_eq!(f(0.0), "0");
+        assert!(f(1234.5).contains('e'));
+        assert_eq!(f(1.5), "1.5000");
+        assert!(pm(0.1234, 0.05).starts_with("+0.123"));
+    }
+}

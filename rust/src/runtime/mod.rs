@@ -1,0 +1,274 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the rust hot path.  Python is never involved here.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
+//! instruction ids, sidestepping the 64-bit-id proto incompatibility.
+
+use crate::gaudisim::MpConfig;
+use crate::model::ModelInfo;
+use crate::tensorbin::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// Shared PJRT CPU client (compile + execute).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))
+    }
+}
+
+/// Which forward artifact to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FwdMode {
+    /// fwd_quant.hlo.txt — the L1 Pallas kernel path (the real system).
+    Pallas,
+    /// fwd_ref.hlo.txt — pure-jnp quant path (fast sweeps / cross-checks).
+    Ref,
+}
+
+/// Output of one forward execution.
+#[derive(Clone, Debug)]
+pub struct FwdOut {
+    /// Logits, row-major [B, T, V].
+    pub logits: Vec<f32>,
+    /// Per-sample PAD-masked mean CE loss, [B].
+    pub loss: Vec<f32>,
+}
+
+/// A model bound to compiled executables + uploaded weights.
+pub struct ModelRuntime {
+    pub info: ModelInfo,
+    fwd: xla::PjRtLoadedExecutable,
+    sens: xla::PjRtLoadedExecutable,
+    /// Weight literals in param_order — reused across every call.
+    weights: Vec<xla::Literal>,
+    pub fwd_mode: FwdMode,
+}
+
+fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal shape {:?} vs data len {}", dims, data.len());
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal shape {:?} vs data len {}", dims, data.len());
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+impl ModelRuntime {
+    /// Compile the forward + sensitivity executables and upload weights.
+    pub fn load(rt: &Runtime, root: &Path, info: &ModelInfo, mode: FwdMode) -> Result<ModelRuntime> {
+        let fwd_path = match mode {
+            FwdMode::Pallas => &info.paths.fwd_quant,
+            FwdMode::Ref => &info.paths.fwd_ref,
+        };
+        let fwd = rt.compile(&root.join(fwd_path))?;
+        let sens = rt.compile(&root.join(&info.paths.sensitivity))?;
+
+        let wfile = info.load_weights(root)?;
+        let mut weights = Vec::with_capacity(info.param_order.len());
+        for (name, shape) in info.param_order.iter().zip(&info.param_shapes) {
+            let t = wfile.get(name)?;
+            match t {
+                Tensor::F32 { data, .. } => weights.push(literal_f32(data, shape)?),
+                Tensor::I32 { .. } => bail!("{name}: weights must be f32"),
+            }
+        }
+        Ok(ModelRuntime { info: info.clone(), fwd, sens, weights, fwd_mode: mode })
+    }
+
+    /// Forward pass: tokens is row-major [B, T] with B == info.eval_b.
+    pub fn fwd(&self, tokens: &[i32], config: &MpConfig, pscale: &[f32]) -> Result<FwdOut> {
+        let b = self.info.eval_b;
+        let t = self.info.seq;
+        if tokens.len() != b * t {
+            bail!("tokens len {} != {}x{}", tokens.len(), b, t);
+        }
+        let mbits = config.mbits_f32();
+        if mbits.len() != self.info.n_qlayers || pscale.len() != self.info.n_qlayers {
+            bail!("config/pscale length mismatch");
+        }
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 + self.weights.len());
+        let tok_lit = literal_i32(tokens, &[b, t])?;
+        let mb_lit = literal_f32(&mbits, &[mbits.len()])?;
+        let ps_lit = literal_f32(pscale, &[pscale.len()])?;
+        args.push(&tok_lit);
+        args.push(&mb_lit);
+        args.push(&ps_lit);
+        for w in &self.weights {
+            args.push(w);
+        }
+        let result = self
+            .fwd
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("fwd execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fwd fetch: {e:?}"))?;
+        let (logits_l, loss_l) = lit.to_tuple2().map_err(|e| anyhow!("fwd tuple: {e:?}"))?;
+        let logits = logits_l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let loss = loss_l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        if logits.len() != b * t * self.info.vocab || loss.len() != b {
+            bail!("fwd output shape unexpected");
+        }
+        Ok(FwdOut { logits, loss })
+    }
+
+    /// High-precision forward (fp32 identity quantization).
+    pub fn fwd_fp32(&self, tokens: &[i32]) -> Result<FwdOut> {
+        let cfg = MpConfig::uniform(self.info.n_qlayers, crate::numerics::Format::Fp32);
+        let ones = vec![1.0f32; self.info.n_qlayers];
+        self.fwd(tokens, &cfg, &ones)
+    }
+
+    /// Sensitivity pass for ONE calibration sample (tokens: [T]).
+    /// Returns (g, s[Lq]) — eq. (19) per sample.
+    pub fn sensitivity(&self, tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let t = self.info.seq;
+        if tokens.len() != t {
+            bail!("sensitivity tokens len {} != {}", tokens.len(), t);
+        }
+        let tok_lit = literal_i32(tokens, &[1, t])?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weights.len());
+        args.push(&tok_lit);
+        for w in &self.weights {
+            args.push(w);
+        }
+        let result = self
+            .sens
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("sensitivity execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sensitivity fetch: {e:?}"))?;
+        let (g_l, s_l) = lit.to_tuple2().map_err(|e| anyhow!("sens tuple: {e:?}"))?;
+        let g = g_l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let s = s_l.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        if s.len() != self.info.n_qlayers {
+            bail!("sensitivity output length {}", s.len());
+        }
+        Ok((g, s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Manifest;
+    use crate::numerics::Format;
+    use std::path::PathBuf;
+
+    fn root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime_for(mode: FwdMode) -> (Manifest, Runtime, ModelRuntime) {
+        let m = Manifest::load(&root()).expect("make artifacts first");
+        let rt = Runtime::new().unwrap();
+        let info = m.model("tiny-s").unwrap().clone();
+        let mr = ModelRuntime::load(&rt, &m.root, &info, mode).unwrap();
+        (m, rt, mr)
+    }
+
+    #[test]
+    fn fwd_executes_and_shapes() {
+        let (m, _rt, mr) = runtime_for(FwdMode::Ref);
+        let calib = mr.info.load_calib(&m.root).unwrap();
+        let b = mr.info.eval_b;
+        let tokens: Vec<i32> = calib[..b].concat();
+        let out = mr.fwd_fp32(&tokens).unwrap();
+        assert_eq!(out.loss.len(), b);
+        assert!(out.loss.iter().all(|l| l.is_finite() && *l > 0.0));
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn quantization_perturbs_loss() {
+        let (m, _rt, mr) = runtime_for(FwdMode::Ref);
+        let calib = mr.info.load_calib(&m.root).unwrap();
+        let b = mr.info.eval_b;
+        let tokens: Vec<i32> = calib[..b].concat();
+        let hp = mr.fwd_fp32(&tokens).unwrap();
+        let fp8 = MpConfig::uniform(mr.info.n_qlayers, Format::Fp8E4m3);
+        let ones = vec![1.0f32; mr.info.n_qlayers];
+        let q = mr.fwd(&tokens, &fp8, &ones).unwrap();
+        let diff: f32 = hp
+            .loss
+            .iter()
+            .zip(&q.loss)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1e-6, "fp8 must perturb the loss");
+        // BF16 perturbs much less than FP8.
+        let bf16 = MpConfig::all_bf16(mr.info.n_qlayers);
+        let qb = mr.fwd(&tokens, &bf16, &ones).unwrap();
+        let diff_b: f32 = hp
+            .loss
+            .iter()
+            .zip(&qb.loss)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff_b < diff, "bf16 {diff_b} should perturb less than fp8 {diff}");
+    }
+
+    #[test]
+    fn sensitivity_runs() {
+        let (m, _rt, mr) = runtime_for(FwdMode::Ref);
+        let calib = mr.info.load_calib(&m.root).unwrap();
+        let (g, s) = mr.sensitivity(&calib[0]).unwrap();
+        assert!(g > 0.0 && g.is_finite());
+        assert_eq!(s.len(), mr.info.n_qlayers);
+        assert!(s.iter().all(|x| x.is_finite() && *x >= 0.0));
+        assert!(s.iter().any(|x| *x > 0.0));
+    }
+
+    #[test]
+    fn pallas_and_ref_agree_at_fp32() {
+        let m = Manifest::load(&root()).unwrap();
+        let rt = Runtime::new().unwrap();
+        let info = m.model("tiny-s").unwrap().clone();
+        let mr_p = ModelRuntime::load(&rt, &m.root, &info, FwdMode::Pallas).unwrap();
+        let mr_r = ModelRuntime::load(&rt, &m.root, &info, FwdMode::Ref).unwrap();
+        let calib = info.load_calib(&m.root).unwrap();
+        let tokens: Vec<i32> = calib[..info.eval_b].concat();
+        let a = mr_p.fwd_fp32(&tokens).unwrap();
+        let b = mr_r.fwd_fp32(&tokens).unwrap();
+        for (x, y) in a.logits.iter().zip(&b.logits) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Sensitivity calibration (paper §2.2) and the additive loss-MSE predictor.
+//!
+//! `calibrate` runs the AOT sensitivity executable (high-precision fwd+bwd,
+//! batch=1) over the calibration set, averaging per-layer sensitivities
+//! s_l (eq. 21) and the loss second moment E[g^2].  `Calibration::loss_mse`
+//! then predicts the loss MSE of ANY mixed-precision configuration as
+//! d = sum_l s_l * alpha_{f(l)}  (eq. 22, 23, 6) — the quantity the IP
+//! constrains to tau^2 E[g^2].
+
+pub mod validate;
+
+use crate::gaudisim::MpConfig;
+use crate::numerics::Format;
+use crate::runtime::ModelRuntime;
+use anyhow::{bail, Result};
+
+/// Calibrated sensitivity state for one model.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// Per-layer average sensitivity s_l (eq. 21).
+    pub s: Vec<f64>,
+    /// E[g^2] over the calibration set.
+    pub eg2: f64,
+    /// Mean loss E[g] (diagnostics).
+    pub g_mean: f64,
+    pub n_samples: usize,
+}
+
+/// Run the sensitivity executable over `samples` calibration sequences.
+pub fn calibrate(mr: &ModelRuntime, calib: &[Vec<i32>]) -> Result<Calibration> {
+    if calib.is_empty() {
+        bail!("empty calibration set");
+    }
+    let nq = mr.info.n_qlayers;
+    let mut s = vec![0.0f64; nq];
+    let mut g2 = 0.0f64;
+    let mut g1 = 0.0f64;
+    for tokens in calib {
+        let (g, sl) = mr.sensitivity(tokens)?;
+        for (acc, x) in s.iter_mut().zip(&sl) {
+            *acc += *x as f64;
+        }
+        g2 += (g as f64) * (g as f64);
+        g1 += g as f64;
+    }
+    let r = calib.len() as f64;
+    for x in s.iter_mut() {
+        *x /= r;
+    }
+    Ok(Calibration { s, eg2: g2 / r, g_mean: g1 / r, n_samples: calib.len() })
+}
+
+impl Calibration {
+    /// Predicted loss MSE of one layer in format f: d_{l,f} (eq. 22).
+    pub fn layer_mse(&self, qidx: usize, f: Format) -> f64 {
+        self.s[qidx] * f.alpha()
+    }
+
+    /// Predicted loss MSE of a full configuration (eq. 6 with eq. 23).
+    pub fn loss_mse(&self, cfg: &MpConfig) -> f64 {
+        cfg.0
+            .iter()
+            .enumerate()
+            .map(|(l, &f)| self.layer_mse(l, f))
+            .sum()
+    }
+
+    /// Predicted loss MSE contribution of a group configuration
+    /// d_{j,p} (eq. 23).
+    pub fn group_mse(&self, qidxs: &[usize], formats: &[Format]) -> f64 {
+        qidxs
+            .iter()
+            .zip(formats)
+            .map(|(&q, &f)| self.layer_mse(q, f))
+            .sum()
+    }
+
+    /// The IP budget tau^2 * E[g^2] for a normalized-RMSE threshold tau.
+    pub fn budget(&self, tau: f64) -> f64 {
+        tau * tau * self.eg2
+    }
+
+    /// Normalized RMSE sqrt(d / E[g^2]) of a configuration — comparable
+    /// directly against tau.
+    pub fn normalized_rmse(&self, cfg: &MpConfig) -> f64 {
+        (self.loss_mse(cfg) / self.eg2).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_calibration() -> Calibration {
+        Calibration { s: vec![1.0, 4.0, 0.25], eg2: 16.0, g_mean: 4.0, n_samples: 8 }
+    }
+
+    #[test]
+    fn additive_over_layers() {
+        let c = fake_calibration();
+        let cfg = MpConfig(vec![Format::Fp8E4m3, Format::Bf16, Format::Fp8E4m3]);
+        let expect = 1.0 * Format::Fp8E4m3.alpha()
+            + 4.0 * Format::Bf16.alpha()
+            + 0.25 * Format::Fp8E4m3.alpha();
+        assert!((c.loss_mse(&cfg) - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn group_mse_subsets() {
+        let c = fake_calibration();
+        let d = c.group_mse(&[0, 2], &[Format::Fp8E4m3, Format::Fp8E4m3]);
+        let expect = (1.0 + 0.25) * Format::Fp8E4m3.alpha();
+        assert!((d - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn budget_and_rmse() {
+        let c = fake_calibration();
+        assert!((c.budget(0.5) - 4.0).abs() < 1e-12);
+        let cfg = MpConfig::uniform(3, Format::Fp32);
+        assert!(c.normalized_rmse(&cfg) < 1e-6);
+        let cfg8 = MpConfig::uniform(3, Format::Fp8E4m3);
+        assert!(c.normalized_rmse(&cfg8) > c.normalized_rmse(&MpConfig::all_bf16(3)));
+    }
+
+    #[test]
+    fn fp8_dominates_bf16_mse() {
+        let c = fake_calibration();
+        for l in 0..3 {
+            assert!(c.layer_mse(l, Format::Fp8E4m3) > c.layer_mse(l, Format::Bf16));
+        }
+    }
+}

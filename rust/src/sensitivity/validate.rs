@@ -1,0 +1,52 @@
+//! Measured loss MSE (paper §3.2, Fig. 3a): run the REAL quantized forward
+//! over the calibration set and compare E[(ghat - g)^2] against the additive
+//! Taylor prediction.  This is the validation the paper uses to justify the
+//! IP's constraint model.
+
+use crate::gaudisim::MpConfig;
+use crate::runtime::ModelRuntime;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Draw a scale-perturbation vector (the paper's seed protocol).
+pub fn draw_pscale(n: usize, sigma: f64, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| (1.0 + sigma * rng.normal()) as f32).collect()
+}
+
+/// Measured loss MSE of `cfg`: mean over calibration batches and
+/// `n_draws` perturbation draws of (ghat - g)^2, where g is the fp32 loss.
+pub fn measured_loss_mse(
+    mr: &ModelRuntime,
+    calib: &[Vec<i32>],
+    cfg: &MpConfig,
+    n_draws: usize,
+    sigma: f64,
+    rng: &mut Rng,
+) -> Result<f64> {
+    let b = mr.info.eval_b;
+    let nq = mr.info.n_qlayers;
+    let mut errs: Vec<f64> = Vec::new();
+    for batch in calib.chunks(b) {
+        if batch.len() < b {
+            break; // HLO batch is static; drop the ragged tail
+        }
+        let tokens: Vec<i32> = batch.concat();
+        let hp = mr.fwd_fp32(&tokens)?;
+        for _ in 0..n_draws {
+            let ps = draw_pscale(nq, sigma, rng);
+            let q = mr.fwd(&tokens, cfg, &ps)?;
+            for (gh, g) in q.loss.iter().zip(&hp.loss) {
+                errs.push((*gh as f64 - *g as f64).powi(2));
+            }
+        }
+    }
+    Ok(crate::util::stats::mean(&errs))
+}
+
+/// Paper Fig. 3a row: (tau, predicted d, measured E[(ghat-g)^2]).
+#[derive(Clone, Debug)]
+pub struct MseValidationPoint {
+    pub tau: f64,
+    pub predicted: f64,
+    pub measured: f64,
+}

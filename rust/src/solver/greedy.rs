@@ -1,0 +1,109 @@
+//! Greedy MCKP: start all-min-cost, apply convex-hull upgrades in global
+//! efficiency order while they fit.  Fast, feasible, and typically within a
+//! few percent of optimal — used as the branch & bound incumbent and as an
+//! ablation point (DESIGN.md calls out solver choice as a design ablation).
+
+use super::hull::HullPoint;
+use super::lp_relax;
+use super::problem::{Mckp, Solution};
+
+pub fn solve(p: &Mckp) -> Solution {
+    let hulls = lp_relax::hulls(p);
+    solve_with_hulls(p, &hulls)
+}
+
+pub fn solve_with_hulls(p: &Mckp, hulls: &[Vec<HullPoint>]) -> Solution {
+    let mut level = vec![0usize; hulls.len()];
+    let mut cost: f64 = hulls.iter().map(|h| h[0].cost).sum();
+
+    if cost > p.budget + 1e-12 {
+        let mut s = p.solution_from(p.min_cost_choice());
+        s.feasible = false;
+        return s;
+    }
+
+    struct Inc {
+        group: usize,
+        to: usize,
+        dcost: f64,
+        dgain: f64,
+    }
+    let mut incs: Vec<Inc> = Vec::new();
+    for (j, h) in hulls.iter().enumerate() {
+        for t in 1..h.len() {
+            incs.push(Inc { group: j, to: t, dcost: h[t].cost - h[t - 1].cost, dgain: h[t].gain - h[t - 1].gain });
+        }
+    }
+    incs.sort_by(|a, b| {
+        (b.dgain / b.dcost)
+            .partial_cmp(&(a.dgain / a.dcost))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    for inc in incs {
+        if inc.to != level[inc.group] + 1 {
+            continue;
+        }
+        if cost + inc.dcost <= p.budget + 1e-12 {
+            level[inc.group] = inc.to;
+            cost += inc.dcost;
+        }
+    }
+
+    let choice: Vec<usize> = level.iter().zip(hulls).map(|(&t, h)| h[t].choice).collect();
+    p.solution_from(choice)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::branch_bound;
+    use crate::solver::problem::gen::random;
+    use crate::util::Rng;
+
+    #[test]
+    fn feasible_and_below_exact() {
+        let mut rng = Rng::new(2024);
+        for _ in 0..200 {
+            let p = random(&mut rng, 5, 5);
+            let g = solve(&p);
+            let e = branch_bound::solve(&p);
+            assert_eq!(g.feasible, e.feasible);
+            if e.feasible {
+                assert!(g.cost <= p.budget + 1e-9);
+                assert!(g.gain <= e.gain + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn usually_near_optimal() {
+        let mut rng = Rng::new(55);
+        let mut total_ratio = 0.0;
+        let mut n = 0;
+        for _ in 0..100 {
+            let p = random(&mut rng, 6, 4);
+            let e = branch_bound::solve(&p);
+            if !e.feasible || e.gain <= 1e-9 {
+                continue;
+            }
+            let g = solve(&p);
+            total_ratio += g.gain / e.gain;
+            n += 1;
+        }
+        assert!(n > 50);
+        assert!(total_ratio / n as f64 > 0.9, "avg ratio {}", total_ratio / n as f64);
+    }
+
+    #[test]
+    fn generous_budget_takes_best() {
+        let p = Mckp::new(
+            vec![vec![0.0, 3.0, 7.0], vec![1.0, 2.0]],
+            vec![vec![0.0, 1.0, 2.0], vec![0.0, 1.0]],
+            100.0,
+        )
+        .unwrap();
+        let s = solve(&p);
+        assert_eq!(s.gain, 9.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Per-group efficient frontier (convex hull) for MCKP relaxations.
+//!
+//! For a group's (cost, gain) choices, the LP relaxation only ever mixes
+//! points on the upper-left convex hull: dominated points (higher cost, no
+//! more gain) and concave points are discarded.  Consecutive hull points
+//! define "upgrade increments" with decreasing gain/cost efficiency.
+
+/// One hull point: a surviving choice.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HullPoint {
+    pub choice: usize,
+    pub cost: f64,
+    pub gain: f64,
+}
+
+/// Upper-left convex hull in (cost, gain), sorted by increasing cost.
+/// Always contains the min-cost point.
+pub fn efficient_frontier(costs: &[f64], gains: &[f64]) -> Vec<HullPoint> {
+    let mut pts: Vec<HullPoint> = (0..costs.len())
+        .map(|i| HullPoint { choice: i, cost: costs[i], gain: gains[i] })
+        .collect();
+    // Sort by cost, then by descending gain so the best at equal cost wins.
+    pts.sort_by(|a, b| {
+        a.cost
+            .partial_cmp(&b.cost)
+            .unwrap()
+            .then(b.gain.partial_cmp(&a.gain).unwrap())
+    });
+    // Drop dominated points (non-increasing gain as cost grows).
+    let mut frontier: Vec<HullPoint> = Vec::new();
+    for p in pts {
+        if let Some(last) = frontier.last() {
+            if p.gain <= last.gain + 1e-15 {
+                continue;
+            }
+            if (p.cost - last.cost).abs() < 1e-18 {
+                continue; // same cost, lower/equal gain already covered
+            }
+        }
+        frontier.push(p);
+    }
+    // Enforce concavity (upper hull): efficiencies must be decreasing.
+    let mut hull: Vec<HullPoint> = Vec::new();
+    for p in frontier {
+        while hull.len() >= 2 {
+            let a = hull[hull.len() - 2];
+            let b = hull[hull.len() - 1];
+            let e_ab = (b.gain - a.gain) / (b.cost - a.cost);
+            let e_bp = (p.gain - b.gain) / (p.cost - b.cost);
+            if e_bp >= e_ab - 1e-15 {
+                hull.pop(); // b is under the chord a-p
+            } else {
+                break;
+            }
+        }
+        hull.push(p);
+    }
+    hull
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_point() {
+        let h = efficient_frontier(&[2.0], &[5.0]);
+        assert_eq!(h.len(), 1);
+        assert_eq!(h[0].choice, 0);
+    }
+
+    #[test]
+    fn drops_dominated() {
+        // choice 1 costs more but gains less than choice 0.
+        let h = efficient_frontier(&[1.0, 2.0], &[5.0, 4.0]);
+        assert_eq!(h.len(), 1);
+        assert_eq!(h[0].choice, 0);
+    }
+
+    #[test]
+    fn keeps_pareto_chain() {
+        let h = efficient_frontier(&[0.0, 1.0, 2.0], &[0.0, 10.0, 15.0]);
+        assert_eq!(h.iter().map(|p| p.choice).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn removes_concave_point() {
+        // Middle point is below the chord from first to last.
+        let h = efficient_frontier(&[0.0, 1.0, 2.0], &[0.0, 1.0, 10.0]);
+        assert_eq!(h.iter().map(|p| p.choice).collect::<Vec<_>>(), vec![0, 2]);
+    }
+
+    #[test]
+    fn equal_cost_takes_best_gain() {
+        let h = efficient_frontier(&[1.0, 1.0, 2.0], &[3.0, 7.0, 9.0]);
+        assert_eq!(h[0].choice, 1);
+        assert_eq!(h.len(), 2);
+    }
+
+    #[test]
+    fn efficiencies_decrease() {
+        let costs = [0.0, 0.5, 1.1, 1.9, 3.0, 4.5];
+        let gains = [0.0, 4.0, 6.5, 8.0, 9.0, 9.5];
+        let h = efficient_frontier(&costs, &gains);
+        for w in h.windows(3) {
+            let e1 = (w[1].gain - w[0].gain) / (w[1].cost - w[0].cost);
+            let e2 = (w[2].gain - w[1].gain) / (w[2].cost - w[1].cost);
+            assert!(e2 <= e1 + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! LP relaxation of MCKP (Dantzig-style over convex-hull increments).
+//!
+//! Start every group at its min-cost hull point; greedily apply hull
+//! "upgrade increments" in decreasing gain/cost efficiency until the budget
+//! is exhausted; the last upgrade may be fractional.  The result upper-bounds
+//! the integer optimum and is exact for the LP.
+
+use super::hull::{efficient_frontier, HullPoint};
+use super::problem::Mckp;
+
+#[derive(Clone, Debug)]
+pub struct LpSolution {
+    /// Upper bound on the integer optimum.
+    pub bound: f64,
+    /// Integral part of the LP solution (hull point index per group).
+    pub base_choice: Vec<usize>,
+    pub base_gain: f64,
+    pub base_cost: f64,
+}
+
+struct Increment {
+    group: usize,
+    to_point: usize, // hull index
+    dcost: f64,
+    dgain: f64,
+}
+
+pub fn hulls(p: &Mckp) -> Vec<Vec<HullPoint>> {
+    p.costs
+        .iter()
+        .zip(&p.gains)
+        .map(|(c, g)| efficient_frontier(c, g))
+        .collect()
+}
+
+/// Solve the LP relaxation; `hulls` from [`hulls`] (precomputable).
+pub fn solve_with_hulls(p: &Mckp, hulls: &[Vec<HullPoint>]) -> LpSolution {
+    let mut incs: Vec<Increment> = Vec::new();
+    for (j, h) in hulls.iter().enumerate() {
+        for t in 1..h.len() {
+            incs.push(Increment {
+                group: j,
+                to_point: t,
+                dcost: h[t].cost - h[t - 1].cost,
+                dgain: h[t].gain - h[t - 1].gain,
+            });
+        }
+    }
+    // Decreasing efficiency. Hull increments within a group are already
+    // decreasing, so the greedy order applies them consistently (point t
+    // before t+1).
+    incs.sort_by(|a, b| {
+        (b.dgain / b.dcost)
+            .partial_cmp(&(a.dgain / a.dcost))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    let mut level = vec![0usize; hulls.len()];
+    let mut gain: f64 = hulls.iter().map(|h| h[0].gain).sum();
+    let mut cost: f64 = hulls.iter().map(|h| h[0].cost).sum();
+    let mut bound = gain;
+    let mut remaining = p.budget - cost;
+
+    for inc in incs {
+        // Only apply in-order upgrades (t must be the current level + 1).
+        if inc.to_point != level[inc.group] + 1 {
+            continue;
+        }
+        if remaining <= 0.0 {
+            break;
+        }
+        if inc.dcost <= remaining {
+            remaining -= inc.dcost;
+            level[inc.group] += 1;
+            gain += inc.dgain;
+            cost += inc.dcost;
+            bound = gain;
+        } else {
+            // Fractional tail: LP takes a fraction of this increment.
+            bound = gain + inc.dgain * (remaining / inc.dcost);
+            break;
+        }
+    }
+
+    let base_choice = level.iter().zip(hulls).map(|(&t, h)| h[t].choice).collect();
+    LpSolution { bound: bound.max(gain), base_choice, base_gain: gain, base_cost: cost }
+}
+
+pub fn solve(p: &Mckp) -> LpSolution {
+    solve_with_hulls(p, &hulls(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::problem::gen::random;
+    use crate::util::Rng;
+
+    #[test]
+    fn bound_dominates_brute_force() {
+        let mut rng = Rng::new(42);
+        for _ in 0..200 {
+            let p = random(&mut rng, 4, 4);
+            let exact = p.brute_force();
+            let lp = solve(&p);
+            if exact.feasible {
+                assert!(
+                    lp.bound >= exact.gain - 1e-9,
+                    "lp bound {} < exact {}",
+                    lp.bound,
+                    exact.gain
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn integral_when_budget_generous() {
+        let p = Mckp::new(
+            vec![vec![0.0, 5.0], vec![0.0, 7.0]],
+            vec![vec![0.0, 1.0], vec![0.0, 2.0]],
+            100.0,
+        )
+        .unwrap();
+        let lp = solve(&p);
+        assert_eq!(lp.base_choice, vec![1, 1]);
+        assert!((lp.bound - 12.0).abs() < 1e-12);
+        assert!((lp.base_gain - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fractional_tail() {
+        // One group, upgrade costs 2 but only 1 budget: bound = half the gain.
+        let p = Mckp::new(vec![vec![0.0, 10.0]], vec![vec![0.0, 2.0]], 1.0).unwrap();
+        let lp = solve(&p);
+        assert!((lp.bound - 5.0).abs() < 1e-12);
+        assert_eq!(lp.base_choice, vec![0]);
+    }
+
+    #[test]
+    fn base_solution_feasible() {
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let p = random(&mut rng, 5, 5);
+            let lp = solve(&p);
+            let (g, c) = p.evaluate(&lp.base_choice);
+            let min_cost: f64 = p
+                .costs
+                .iter()
+                .map(|cs| cs.iter().cloned().fold(f64::MAX, f64::min))
+                .sum();
+            if min_cost <= p.budget {
+                assert!(c <= p.budget + 1e-9);
+            }
+            assert!((g - lp.base_gain).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Integer-programming solvers for the paper's optimization (eq. 5):
+//!
+//!   maximize   sum_j c_{j, p(j)}
+//!   subject to sum_j d_{j, p(j)} <= budget,   one configuration p per group.
+//!
+//! This is a Multiple-Choice Knapsack Problem (MCKP).  Four solvers:
+//!   * `branch_bound` — exact, LP-relaxation-bounded DFS (the default).
+//!   * `dp`           — scaled dynamic program (near-exact, linear-ish).
+//!   * `greedy`       — convex-hull marginal-efficiency heuristic.
+//!   * `lp_relax`     — LP relaxation (upper bound; used by branch_bound).
+
+pub mod branch_bound;
+pub mod dp;
+pub mod greedy;
+pub mod hull;
+pub mod lp_relax;
+pub mod problem;
+
+pub use branch_bound::solve as solve_exact;
+pub use problem::{Mckp, Solution};
+
+/// Solve with the exact method; fall back to greedy if B&B blows the node
+/// budget (never observed on paper-scale instances, but bounded by design).
+pub fn solve(p: &Mckp) -> Solution {
+    branch_bound::solve(p)
+}

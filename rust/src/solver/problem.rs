@@ -1,0 +1,176 @@
+//! MCKP problem definition + brute-force reference (tests only).
+
+use anyhow::{bail, Result};
+
+/// maximize sum_j gains[j][p_j]  s.t.  sum_j costs[j][p_j] <= budget.
+#[derive(Clone, Debug)]
+pub struct Mckp {
+    pub gains: Vec<Vec<f64>>,
+    pub costs: Vec<Vec<f64>>,
+    pub budget: f64,
+}
+
+/// A (possibly infeasible-budget) assignment of one choice per group.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Solution {
+    pub choice: Vec<usize>,
+    pub gain: f64,
+    pub cost: f64,
+    /// False when even the min-cost assignment exceeds the budget; in that
+    /// case `choice` IS that min-cost assignment (the paper's tau=0 edge:
+    /// fall back to the all-baseline configuration).
+    pub feasible: bool,
+}
+
+impl Mckp {
+    pub fn new(gains: Vec<Vec<f64>>, costs: Vec<Vec<f64>>, budget: f64) -> Result<Mckp> {
+        if gains.len() != costs.len() {
+            bail!("gains/costs group count mismatch");
+        }
+        for (j, (g, c)) in gains.iter().zip(&costs).enumerate() {
+            if g.is_empty() || g.len() != c.len() {
+                bail!("group {j}: bad choice count ({} vs {})", g.len(), c.len());
+            }
+            if c.iter().any(|x| !x.is_finite() || *x < 0.0) {
+                bail!("group {j}: costs must be finite and non-negative");
+            }
+            if g.iter().any(|x| !x.is_finite()) {
+                bail!("group {j}: gains must be finite");
+            }
+        }
+        Ok(Mckp { gains, costs, budget })
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.gains.len()
+    }
+
+    pub fn evaluate(&self, choice: &[usize]) -> (f64, f64) {
+        let gain = choice.iter().enumerate().map(|(j, &p)| self.gains[j][p]).sum();
+        let cost = choice.iter().enumerate().map(|(j, &p)| self.costs[j][p]).sum();
+        (gain, cost)
+    }
+
+    /// Min-cost assignment (ties broken by higher gain) — the fallback and
+    /// the B&B root.
+    pub fn min_cost_choice(&self) -> Vec<usize> {
+        self.costs
+            .iter()
+            .zip(&self.gains)
+            .map(|(cs, gs)| {
+                let mut best = 0usize;
+                for i in 1..cs.len() {
+                    if cs[i] < cs[best] || (cs[i] == cs[best] && gs[i] > gs[best]) {
+                        best = i;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    pub fn solution_from(&self, choice: Vec<usize>) -> Solution {
+        let (gain, cost) = self.evaluate(&choice);
+        Solution { feasible: cost <= self.budget + 1e-12, choice, gain, cost }
+    }
+
+    /// Exhaustive search — O(prod |choices|), tests only.
+    pub fn brute_force(&self) -> Solution {
+        let mut best: Option<Solution> = None;
+        let mut choice = vec![0usize; self.n_groups()];
+        loop {
+            let sol = self.solution_from(choice.clone());
+            if sol.feasible {
+                let better = match &best {
+                    None => true,
+                    Some(b) => sol.gain > b.gain + 1e-12,
+                };
+                if better {
+                    best = Some(sol);
+                }
+            }
+            // Odometer increment.
+            let mut j = 0;
+            loop {
+                if j == self.n_groups() {
+                    return best.unwrap_or_else(|| {
+                        let mut s = self.solution_from(self.min_cost_choice());
+                        s.feasible = false;
+                        s
+                    });
+                }
+                choice[j] += 1;
+                if choice[j] < self.gains[j].len() {
+                    break;
+                }
+                choice[j] = 0;
+                j += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+pub mod gen {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Random MCKP instance for property tests.
+    pub fn random(rng: &mut Rng, max_groups: usize, max_choices: usize) -> Mckp {
+        let j = rng.range(1, max_groups + 1);
+        let mut gains = Vec::new();
+        let mut costs = Vec::new();
+        for _ in 0..j {
+            let k = rng.range(1, max_choices + 1);
+            gains.push((0..k).map(|_| rng.f64() * 10.0).collect());
+            costs.push((0..k).map(|_| rng.f64() * 5.0).collect());
+        }
+        let total_min: f64 = costs.iter().map(|c: &Vec<f64>| c.iter().cloned().fold(f64::MAX, f64::min)).sum();
+        let total_max: f64 = costs.iter().map(|c: &Vec<f64>| c.iter().cloned().fold(0.0, f64::max)).sum();
+        let budget = total_min + rng.f64() * (total_max - total_min).max(0.1);
+        Mckp::new(gains, costs, budget).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation() {
+        assert!(Mckp::new(vec![vec![1.0]], vec![vec![1.0], vec![2.0]], 1.0).is_err());
+        assert!(Mckp::new(vec![vec![]], vec![vec![]], 1.0).is_err());
+        assert!(Mckp::new(vec![vec![1.0]], vec![vec![-1.0]], 1.0).is_err());
+        assert!(Mckp::new(vec![vec![f64::NAN]], vec![vec![1.0]], 1.0).is_err());
+        assert!(Mckp::new(vec![vec![1.0, 2.0]], vec![vec![0.0, 1.0]], 1.0).is_ok());
+    }
+
+    #[test]
+    fn brute_force_simple() {
+        // Two groups; budget forces the cheap option in one of them.
+        let p = Mckp::new(
+            vec![vec![0.0, 10.0], vec![0.0, 8.0]],
+            vec![vec![0.0, 3.0], vec![0.0, 2.0]],
+            4.0,
+        )
+        .unwrap();
+        let s = p.brute_force();
+        assert!(s.feasible);
+        assert_eq!(s.gain, 10.0);
+        assert_eq!(s.choice, vec![1, 0]);
+    }
+
+    #[test]
+    fn infeasible_falls_back() {
+        let p = Mckp::new(vec![vec![1.0, 5.0]], vec![vec![2.0, 3.0]], 1.0).unwrap();
+        let s = p.brute_force();
+        assert!(!s.feasible);
+        assert_eq!(s.choice, vec![0]); // min-cost
+    }
+
+    #[test]
+    fn min_cost_tie_prefers_gain() {
+        let p = Mckp::new(vec![vec![1.0, 5.0]], vec![vec![2.0, 2.0]], 10.0).unwrap();
+        assert_eq!(p.min_cost_choice(), vec![1]);
+    }
+}

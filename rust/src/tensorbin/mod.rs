@@ -1,0 +1,227 @@
+//! .tbin named-tensor container — reader/writer mirroring
+//! python/compile/tensorbin.py (see that file for the layout spec).
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"TBIN1\0";
+
+/// A named tensor loaded from (or destined for) a .tbin file.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+}
+
+/// Ordered collection of named tensors (order preserved from the file).
+#[derive(Clone, Debug, Default)]
+pub struct TensorFile {
+    pub names: Vec<String>,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl TensorFile {
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("tensor '{name}' not found"))
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        if !self.tensors.contains_key(name) {
+            self.names.push(name.to_string());
+        }
+        self.tensors.insert(name.to_string(), t);
+    }
+}
+
+fn rd_u16(b: &[u8], off: &mut usize) -> Result<u16> {
+    let v = b
+        .get(*off..*off + 2)
+        .ok_or_else(|| anyhow!("truncated .tbin at {off:?}"))?;
+    *off += 2;
+    Ok(u16::from_le_bytes([v[0], v[1]]))
+}
+
+fn rd_u32(b: &[u8], off: &mut usize) -> Result<u32> {
+    let v = b
+        .get(*off..*off + 4)
+        .ok_or_else(|| anyhow!("truncated .tbin at {off:?}"))?;
+    *off += 4;
+    Ok(u32::from_le_bytes([v[0], v[1], v[2], v[3]]))
+}
+
+pub fn read(path: &Path) -> Result<TensorFile> {
+    let data = std::fs::read(path).map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+    if data.len() < 10 || &data[..6] != MAGIC {
+        bail!("{}: bad .tbin magic", path.display());
+    }
+    let mut off = 6usize;
+    let count = rd_u32(&data, &mut off)?;
+    let mut out = TensorFile::default();
+    for _ in 0..count {
+        let nlen = rd_u16(&data, &mut off)? as usize;
+        let name = std::str::from_utf8(
+            data.get(off..off + nlen).ok_or_else(|| anyhow!("truncated name"))?,
+        )?
+        .to_string();
+        off += nlen;
+        let dtype = *data.get(off).ok_or_else(|| anyhow!("truncated dtype"))?;
+        let ndim = *data.get(off + 1).ok_or_else(|| anyhow!("truncated ndim"))?;
+        off += 2;
+        let mut dims = Vec::with_capacity(ndim as usize);
+        for _ in 0..ndim {
+            dims.push(rd_u32(&data, &mut off)? as usize);
+        }
+        let n: usize = dims.iter().product::<usize>().max(if ndim == 0 { 1 } else { 0 });
+        let bytes = data
+            .get(off..off + 4 * n)
+            .ok_or_else(|| anyhow!("truncated payload for '{name}'"))?;
+        off += 4 * n;
+        let tensor = match dtype {
+            0 => Tensor::F32 {
+                dims,
+                data: bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            },
+            1 => Tensor::I32 {
+                dims,
+                data: bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            },
+            d => bail!("{name}: unknown dtype {d}"),
+        };
+        out.insert(&name, tensor);
+    }
+    Ok(out)
+}
+
+pub fn write(path: &Path, tf: &TensorFile) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(tf.names.len() as u32).to_le_bytes())?;
+    for name in &tf.names {
+        let t = &tf.tensors[name];
+        f.write_all(&(name.len() as u16).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        let (dtype, dims): (u8, &[usize]) = match t {
+            Tensor::F32 { dims, .. } => (0, dims),
+            Tensor::I32 { dims, .. } => (1, dims),
+        };
+        f.write_all(&[dtype, dims.len() as u8])?;
+        for d in dims {
+            f.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        match t {
+            Tensor::F32 { data, .. } => {
+                for x in data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Tensor::I32 { data, .. } => {
+                for x in data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("ampq_tbin_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut tf = TensorFile::default();
+        tf.insert("a", Tensor::F32 { dims: vec![2, 3], data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] });
+        tf.insert("b", Tensor::I32 { dims: vec![4], data: vec![-1, 0, 1, 2] });
+        let p = tmp("roundtrip");
+        write(&p, &tf).unwrap();
+        let back = read(&p).unwrap();
+        assert_eq!(back.names, vec!["a", "b"]);
+        assert_eq!(back.get("a").unwrap(), &tf.tensors["a"]);
+        assert_eq!(back.get("b").unwrap(), &tf.tensors["b"]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("badmagic");
+        std::fs::write(&p, b"NOTBIN\x00\x00\x00\x00").unwrap();
+        assert!(read(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let mut tf = TensorFile::default();
+        tf.insert("x", Tensor::F32 { dims: vec![8], data: vec![0.0; 8] });
+        let p = tmp("trunc");
+        write(&p, &tf).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        raw.truncate(raw.len() - 5);
+        std::fs::write(&p, &raw).unwrap();
+        assert!(read(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_tensor_error() {
+        let tf = TensorFile::default();
+        assert!(tf.get("nope").is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_error() {
+        let t = Tensor::F32 { dims: vec![1], data: vec![0.0] };
+        assert!(t.as_i32().is_err());
+        assert!(t.as_f32().is_ok());
+    }
+}

@@ -1,0 +1,247 @@
+//! Per-group empirical time-gain measurement (paper §2.3.1).
+//!
+//! "The time gain of the p-th MP configuration of the j-th group is measured
+//!  by subtracting the end-to-end TTFT of the model with the j-th group
+//!  configured correspondingly (others BF16) from the end-to-end TTFT of the
+//!  model in BF16."
+//!
+//! `TtftSource` abstracts where TTFT comes from: the Gaudi-2-like simulator
+//! (primary; see gaudisim) or wall-clock timing of the real compiled HLO on
+//! the CPU PJRT client (secondary — proves the harness drives real
+//! executables; CPU fake-quant adds ops, so its gains are not Gaudi-shaped).
+
+use crate::gaudisim::{enumerate_configs, MpConfig, Simulator};
+use crate::graph::partition::Partition;
+use crate::numerics::Format;
+use crate::runtime::ModelRuntime;
+use crate::util::{stats, Rng};
+use anyhow::Result;
+
+/// Provider of one averaged TTFT measurement for a full-model config.
+pub trait TtftSource {
+    fn measure(&mut self, cfg: &MpConfig) -> Result<f64>;
+    /// Number of quantizable layers (config length).
+    fn n_qlayers(&self) -> usize;
+}
+
+/// Simulator-backed TTFT (the paper's Gaudi-2 stand-in).
+pub struct SimTtft<'g> {
+    pub sim: Simulator<'g>,
+    pub rng: Rng,
+    /// Paper protocol: average of 5 iterations.
+    pub reps: usize,
+}
+
+impl<'g> TtftSource for SimTtft<'g> {
+    fn measure(&mut self, cfg: &MpConfig) -> Result<f64> {
+        Ok(self.sim.measure_ttft(cfg, &mut self.rng, self.reps))
+    }
+
+    fn n_qlayers(&self) -> usize {
+        self.sim.graph().qlayers.len()
+    }
+}
+
+/// Wall-clock TTFT of the real compiled forward on this host.
+pub struct WallTtft<'a> {
+    pub mr: &'a ModelRuntime,
+    pub tokens: Vec<i32>,
+    pub reps: usize,
+}
+
+impl<'a> TtftSource for WallTtft<'a> {
+    fn measure(&mut self, cfg: &MpConfig) -> Result<f64> {
+        let ps = vec![1.0f32; self.mr.info.n_qlayers];
+        // Warm-up once, then average `reps` timed runs (paper: 5).
+        self.mr.fwd(&self.tokens, cfg, &ps)?;
+        let mut xs = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t0 = std::time::Instant::now();
+            self.mr.fwd(&self.tokens, cfg, &ps)?;
+            xs.push(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        Ok(stats::mean(&xs))
+    }
+
+    fn n_qlayers(&self) -> usize {
+        self.mr.info.n_qlayers
+    }
+}
+
+/// Measured gains for one group: gains[p] aligns with configs[p]
+/// (columns of the paper's Q_j matrix).
+#[derive(Clone, Debug)]
+pub struct GroupGains {
+    pub group: usize,
+    pub qidxs: Vec<usize>,
+    pub configs: Vec<Vec<Format>>,
+    /// c^ET_{j,p} — TTFT(baseline) - TTFT(config), microseconds.
+    pub gains: Vec<f64>,
+}
+
+/// Full measurement product: baseline TTFT + per-group gain tables.
+#[derive(Clone, Debug)]
+pub struct TimeMeasurements {
+    pub base_ttft: f64,
+    pub groups: Vec<GroupGains>,
+}
+
+impl TimeMeasurements {
+    /// Predicted TTFT of a full config under group additivity (eq. 7):
+    /// baseline minus the sum of matching group gains.
+    pub fn predict_ttft(&self, cfg: &MpConfig) -> f64 {
+        self.base_ttft - self.predict_gain(cfg)
+    }
+
+    /// Predicted total gain c (eq. 7) for a full configuration.
+    pub fn predict_gain(&self, cfg: &MpConfig) -> f64 {
+        let mut total = 0.0;
+        for g in &self.groups {
+            let key: Vec<Format> = g.qidxs.iter().map(|&q| cfg.get(q)).collect();
+            let p = g
+                .configs
+                .iter()
+                .position(|c| c == &key)
+                .expect("config enumerations cover all format combinations");
+            total += g.gains[p];
+        }
+        total
+    }
+}
+
+/// Measure every group x config (paper Algorithm 1, line 3).
+pub fn measure_groups<S: TtftSource>(
+    src: &mut S,
+    part: &Partition,
+    formats: &[Format],
+) -> Result<TimeMeasurements> {
+    let nq = src.n_qlayers();
+    let base = src.measure(&MpConfig::all_bf16(nq))?;
+    let mut groups = Vec::with_capacity(part.groups.len());
+    for (j, g) in part.groups.iter().enumerate() {
+        let configs = enumerate_configs(formats, g.qidxs.len());
+        let mut gains = Vec::with_capacity(configs.len());
+        for cfg_fmts in &configs {
+            let mut cfg = MpConfig::all_bf16(nq);
+            for (&q, &f) in g.qidxs.iter().zip(cfg_fmts) {
+                cfg.set(q, f);
+            }
+            let t = src.measure(&cfg)?;
+            gains.push(base - t);
+        }
+        groups.push(GroupGains { group: j, qidxs: g.qidxs.clone(), configs, gains });
+    }
+    Ok(TimeMeasurements { base_ttft: base, groups })
+}
+
+/// Per-layer gains (the naive baseline of Fig. 1): gain of quantizing each
+/// single layer alone, summed later to "predict" group gains.
+pub fn measure_per_layer<S: TtftSource>(
+    src: &mut S,
+    formats: &[Format],
+) -> Result<Vec<Vec<f64>>> {
+    let nq = src.n_qlayers();
+    let base = src.measure(&MpConfig::all_bf16(nq))?;
+    let mut out = Vec::with_capacity(nq);
+    for q in 0..nq {
+        let mut per_fmt = Vec::with_capacity(formats.len());
+        for &f in formats {
+            if f == Format::Bf16 {
+                per_fmt.push(0.0);
+                continue;
+            }
+            let mut cfg = MpConfig::all_bf16(nq);
+            cfg.set(q, f);
+            per_fmt.push(base - src.measure(&cfg)?);
+        }
+        out.push(per_fmt);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gaudisim::HwModel;
+    use crate::graph::partition::partition;
+    use crate::graph::testutil::n;
+    use crate::graph::Graph;
+    use crate::numerics::PAPER_FORMATS;
+
+    fn small_graph() -> Graph {
+        let mut nodes =
+            vec![n("s", -1), n("a", 0), n("b", 1), n("m", -1), n("c", 2), n("t", -1)];
+        for nd in nodes.iter_mut() {
+            if nd.qidx >= 0 {
+                nd.macs = 2_000_000;
+            }
+        }
+        // s -> {a, b} -> m -> c -> t
+        Graph::synthetic(nodes, vec![(0, 1), (0, 2), (1, 3), (2, 3), (3, 4), (4, 5)])
+    }
+
+    fn sim_src(g: &Graph) -> SimTtft<'_> {
+        SimTtft {
+            sim: Simulator::new(g, HwModel { noise_std: 0.0, ..HwModel::default() }),
+            rng: Rng::new(0),
+            reps: 1,
+        }
+    }
+
+    #[test]
+    fn measures_all_group_configs() {
+        let g = small_graph();
+        let part = partition(&g).unwrap();
+        let mut src = sim_src(&g);
+        let tm = measure_groups(&mut src, &part, &PAPER_FORMATS).unwrap();
+        assert_eq!(tm.groups.len(), part.groups.len());
+        for (gg, pg) in tm.groups.iter().zip(&part.groups) {
+            assert_eq!(gg.gains.len(), 2usize.pow(pg.qidxs.len() as u32));
+            // BF16-only config has zero gain by construction.
+            let all_bf16 = gg
+                .configs
+                .iter()
+                .position(|c| c.iter().all(|f| *f == Format::Bf16))
+                .unwrap();
+            assert!(gg.gains[all_bf16].abs() < 1e-9);
+            // FP8-everything is the max gain in this monotone simulator.
+            let max = gg.gains.iter().cloned().fold(f64::MIN, f64::max);
+            let all_fp8 = gg
+                .configs
+                .iter()
+                .position(|c| c.iter().all(|f| *f == Format::Fp8E4m3))
+                .unwrap();
+            assert!(gg.gains[all_fp8] >= max - 1e-9);
+        }
+    }
+
+    #[test]
+    fn predict_matches_direct_measurement() {
+        // Group additivity in the noise-free simulator: predicted TTFT of the
+        // all-FP8 config tracks its direct measurement.
+        let g = small_graph();
+        let part = partition(&g).unwrap();
+        let mut src = sim_src(&g);
+        let tm = measure_groups(&mut src, &part, &PAPER_FORMATS).unwrap();
+        let full = MpConfig::uniform(3, Format::Fp8E4m3);
+        let direct = src.measure(&full).unwrap();
+        let predicted = tm.predict_ttft(&full);
+        assert!(
+            (direct - predicted).abs() / direct < 0.08,
+            "direct {direct} vs predicted {predicted}"
+        );
+    }
+
+    #[test]
+    fn per_layer_table_shape() {
+        let g = small_graph();
+        let mut src = sim_src(&g);
+        let t = measure_per_layer(&mut src, &PAPER_FORMATS).unwrap();
+        assert_eq!(t.len(), 3);
+        for row in &t {
+            assert_eq!(row.len(), 2);
+            assert_eq!(row[0], 0.0); // bf16 column
+            assert!(row[1] >= 0.0);
+        }
+    }
+}

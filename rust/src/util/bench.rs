@@ -1,0 +1,69 @@
+//! Minimal benchmarking harness (criterion is not vendored in this image).
+//!
+//! Used by the `benches/` targets (`cargo bench`, harness = false).  Reports
+//! mean / median / p95 over timed iterations after a warmup, in a stable
+//! one-line format that EXPERIMENTS.md §Perf records.
+
+use super::stats;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub p95_us: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} iters {:>5}  mean {:>12.2} us  median {:>12.2} us  p95 {:>12.2} us",
+            self.name, self.iters, self.mean_us, self.median_us, self.p95_us
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations (after `warmup` unrecorded calls).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: stats::mean(&samples),
+        median_us: stats::median(&samples),
+        p95_us: stats::percentile(&samples, 95.0),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 2, 50, || {
+            black_box((0..100).sum::<usize>());
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.mean_us >= 0.0);
+        assert!(r.p95_us >= r.median_us * 0.5);
+    }
+}

@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser (clap is not vendored in this image).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the binary name). `flag_names` lists options
+    /// that take no value.
+    pub fn parse(raw: &[String], flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    i += 1;
+                    let v = raw
+                        .get(i)
+                        .ok_or_else(|| anyhow!("option --{body} needs a value"))?;
+                    out.options.insert(body.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&sv(&["run", "--tau", "0.5", "--force", "--x=3"]), &["force"]).unwrap();
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("tau"), Some("0.5"));
+        assert!(a.flag("force"));
+        assert_eq!(a.usize_or("x", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--tau"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]), &[]).unwrap();
+        assert_eq!(a.get_or("model", "tiny-s"), "tiny-s");
+        assert_eq!(a.f64_or("tau", 0.1).unwrap(), 0.1);
+        assert!(!a.flag("anything"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&sv(&["--n", "abc"]), &[]).unwrap();
+        assert!(a.usize_or("n", 1).is_err());
+    }
+}

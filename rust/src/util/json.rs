@@ -1,0 +1,378 @@
+//! Minimal JSON parser/serializer (serde_json is not vendored in this image).
+//!
+//! Supports the full JSON grammar we emit from python (objects, arrays,
+//! strings with escapes, numbers, bools, null).  Object key order is
+//! preserved (Vec of pairs) so round-trips are stable.
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing data at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| anyhow!("parse {}: {e}", path.display()))
+    }
+
+    // ---- typed accessors -------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(kv) => kv
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v)
+                .ok_or_else(|| anyhow!("missing key '{key}'")),
+            _ => bail!("not an object (looking for '{key}')"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => bail!("not an array"),
+        }
+    }
+
+    pub fn str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("not a string"),
+        }
+    }
+
+    pub fn f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(x) => Ok(*x),
+            _ => bail!("not a number"),
+        }
+    }
+
+    pub fn i64(&self) -> Result<i64> {
+        Ok(self.f64()? as i64)
+    }
+
+    pub fn usize(&self) -> Result<usize> {
+        let x = self.f64()?;
+        if x < 0.0 {
+            bail!("negative where usize expected");
+        }
+        Ok(x as usize)
+    }
+
+    // ---- serializer ------------------------------------------------------
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 9.0e15 {
+                    out.push_str(&format!("{}", *x as i64));
+                } else {
+                    out.push_str(&format!("{x}"));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(kv) => {
+                out.push('{');
+                for (i, (k, v)) in kv.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at byte {}, found '{}'", c as char, self.i, self.peek()? as char);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.i)
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut kv = Vec::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(kv));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let v = self.value()?;
+            kv.push((k, v));
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                c => bail!("expected ',' or '}}' at byte {}, found '{}'", self.i, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.ws();
+            v.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => bail!("expected ',' or ']' at byte {}, found '{}'", self.i, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => bail!("bad escape at byte {}", self.i),
+                    }
+                }
+                c => {
+                    // Collect full UTF-8 sequences.
+                    let start = self.i - 1;
+                    let len = match c {
+                        0x00..=0x7f => 1,
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        _ => 4,
+                    };
+                    self.i = start + len;
+                    if self.i > self.b.len() {
+                        bail!("truncated utf-8");
+                    }
+                    s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse::<f64>().map_err(|e| anyhow!("bad number '{s}': {e}"))?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse(" -3.5e2 ").unwrap(), Json::Num(-350.0));
+        assert_eq!(Json::parse(r#""a\nb""#).unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": "x"}], "c": null}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().arr().unwrap().len(), 3);
+        assert_eq!(
+            j.get("a").unwrap().arr().unwrap()[2].get("b").unwrap().str().unwrap(),
+            "x"
+        );
+        assert_eq!(*j.get("c").unwrap(), Json::Null);
+    }
+
+    #[test]
+    fn parse_unicode_escape() {
+        assert_eq!(Json::parse(r#""A""#).unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn parse_utf8_passthrough() {
+        assert_eq!(Json::parse("\"héllo\"").unwrap(), Json::Str("héllo".into()));
+    }
+
+    #[test]
+    fn rejects_trailing() {
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"x":[1,2.5,"s",true,null],"y":{"z":-7}}"#;
+        let j = Json::parse(src).unwrap();
+        let out = j.to_string();
+        assert_eq!(Json::parse(&out).unwrap(), j);
+    }
+
+    #[test]
+    fn accessor_errors() {
+        let j = Json::parse(r#"{"a": 1}"#).unwrap();
+        assert!(j.get("b").is_err());
+        assert!(j.get("a").unwrap().str().is_err());
+        assert_eq!(j.get("a").unwrap().usize().unwrap(), 1);
+        assert!(j.opt("missing").is_none());
+    }
+
+    #[test]
+    fn preserves_key_order() {
+        let j = Json::parse(r#"{"z":1,"a":2,"m":3}"#).unwrap();
+        if let Json::Obj(kv) = &j {
+            let keys: Vec<&str> = kv.iter().map(|(k, _)| k.as_str()).collect();
+            assert_eq!(keys, vec!["z", "a", "m"]);
+        } else {
+            panic!()
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared utilities: deterministic PRNG, statistics, JSON, CLI parsing.
+//!
+//! These exist because the image's vendored crate set does not include
+//! rand / serde_json / clap / criterion — see DESIGN.md §3 (substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,227 @@
+//! Integration tests over the real artifacts: the full Algorithm-1 pipeline
+//! (PJRT runtime + partition + calibration + simulator + IP) and the paper's
+//! §3.2 validation claims at test scale.
+//!
+//! Requires `make artifacts` to have produced artifacts/.
+
+use ampq::coordinator::{optimize, select_config, Pipeline, Strategy};
+use ampq::evalharness::{evaluate, load_all_tasks};
+use ampq::gaudisim::{HwModel, MpConfig, Simulator};
+use ampq::metrics::Objective;
+use ampq::model::Manifest;
+use ampq::numerics::{Format, PAPER_FORMATS};
+use ampq::runtime::FwdMode;
+use ampq::sensitivity::validate::{draw_pscale, measured_loss_mse};
+use ampq::util::Rng;
+use std::path::PathBuf;
+
+fn root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(&root()).unwrap()
+}
+
+/// PJRT handles are not Send/Sync and XLA compilation is expensive, so the
+/// runtime-dependent checks share ONE pipeline inside a single #[test] and
+/// run sequentially as sub-checks.
+#[test]
+fn full_pipeline_integration() {
+    let manifest = manifest();
+    let pl = Pipeline::new(
+        &manifest,
+        "tiny-s",
+        FwdMode::Ref,
+        HwModel::default(),
+        PAPER_FORMATS.to_vec(),
+    )
+    .expect("pipeline (run `make artifacts` first)");
+
+    check_partition_matches_paper_fig6(&pl);
+    check_sensitivity_spread(&pl);
+    check_predicted_loss_mse_tracks_measured(&pl, &manifest);
+    check_group_gains_additive(&pl);
+    check_ip_dominates_baselines(&pl);
+    check_budget_respected(&pl);
+    check_memory_family_skips_bgemm(&pl);
+    check_evaluation(&pl, &manifest);
+    check_tau_zero(&pl);
+    check_wall_clock(&pl, &manifest);
+}
+
+fn check_partition_matches_paper_fig6(pl: &Pipeline) {
+    // Per block: V1 = 5-layer attention, V2 = o_proj, V3 = {gate, up},
+    // V4 = down_proj; plus the final lm_head group (paper Fig. 6).
+    let sizes: Vec<usize> = pl.partition.groups.iter().map(|g| g.len()).collect();
+    let expected: Vec<usize> = (0..pl.info.blocks)
+        .flat_map(|_| vec![5, 1, 2, 1])
+        .chain(std::iter::once(1))
+        .collect();
+    assert_eq!(sizes, expected);
+    // First group is exactly the attention five.
+    let names: Vec<&str> = pl.partition.groups[0]
+        .qidxs
+        .iter()
+        .map(|&q| pl.info.qlayers[q].name.as_str())
+        .collect();
+    assert_eq!(
+        names,
+        vec!["blk0.q_proj", "blk0.k_proj", "blk0.v_proj", "blk0.qk_matmul", "blk0.av_matmul"]
+    );
+}
+
+fn check_sensitivity_spread(pl: &Pipeline) {
+    let s = &pl.calibration.s;
+    assert_eq!(s.len(), pl.info.n_qlayers);
+    assert!(s.iter().all(|&x| x > 0.0));
+    let max = s.iter().cloned().fold(f64::MIN, f64::max);
+    let min = s.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(max / min > 3.0, "sensitivity spread too small: {min}..{max}");
+}
+
+fn check_predicted_loss_mse_tracks_measured(pl: &Pipeline, m: &Manifest) {
+    // Paper Fig. 3a at test scale: prediction within an order of magnitude
+    // and correctly ordered between BF16 and FP8.
+    let calib = pl.info.load_calib(&m.root).unwrap();
+    let mut rng = Rng::new(5);
+    let mut ratios = Vec::new();
+    for fmt in [Format::Bf16, Format::Fp8E4m3] {
+        let cfg = MpConfig::uniform(pl.info.n_qlayers, fmt);
+        let pred = pl.calibration.loss_mse(&cfg);
+        let meas = measured_loss_mse(&pl.mr, &calib, &cfg, 2, 0.02, &mut rng).unwrap();
+        assert!(meas > 0.0);
+        ratios.push(pred / meas);
+    }
+    for r in &ratios {
+        assert!(*r > 0.05 && *r < 20.0, "prediction ratio {r} out of range");
+    }
+    // FP8 must measure much larger than BF16.
+    let cfg8 = MpConfig::uniform(pl.info.n_qlayers, Format::Fp8E4m3);
+    let cfg16 = MpConfig::all_bf16(pl.info.n_qlayers);
+    let m8 = measured_loss_mse(&pl.mr, &calib, &cfg8, 2, 0.02, &mut rng).unwrap();
+    let m16 = measured_loss_mse(&pl.mr, &calib, &cfg16, 2, 0.02, &mut rng).unwrap();
+    assert!(m8 > m16 * 10.0, "fp8 {m8} vs bf16 {m16}");
+}
+
+fn check_group_gains_additive(pl: &Pipeline) {
+    // Paper Fig. 3b / §3.2: group-additive prediction matches direct
+    // measurement (noise-free simulator).
+    let hw = HwModel { noise_std: 0.0, ..HwModel::default() };
+    let sim = Simulator::new(&pl.graph, hw.clone());
+    let mut src = ampq::timing::SimTtft { sim, rng: Rng::new(0), reps: 1 };
+    let tm = ampq::timing::measure_groups(&mut src, &pl.partition, &PAPER_FORMATS).unwrap();
+    let sim2 = Simulator::new(&pl.graph, hw);
+    for (tag, cfg) in [
+        ("all-fp8", MpConfig::uniform(pl.info.n_qlayers, Format::Fp8E4m3)),
+        ("half", {
+            let mut c = MpConfig::all_bf16(pl.info.n_qlayers);
+            for l in 0..pl.info.n_qlayers / 2 {
+                c.set(l, Format::Fp8E4m3);
+            }
+            c
+        }),
+    ] {
+        let direct = sim2.makespan(&cfg);
+        let predicted = tm.predict_ttft(&cfg);
+        let rel = (direct - predicted).abs() / direct;
+        assert!(rel < 0.05, "{tag}: direct {direct} vs predicted {predicted} (rel {rel})");
+    }
+}
+
+fn check_ip_dominates_baselines(pl: &Pipeline) {
+    let tm = pl.measure_time(0, 5).unwrap();
+    let family = pl.family(Objective::EmpiricalTime, &tm);
+    for tau in [0.002, 0.004, 0.007] {
+        let ip = optimize(&family.groups, &pl.calibration, tau).unwrap();
+        for strategy in [Strategy::Random, Strategy::Prefix] {
+            for seed in 0..3 {
+                let cfg = select_config(&family, strategy, &pl.calibration, tau, seed).unwrap();
+                let baseline_gain = tm.predict_gain(&cfg);
+                assert!(
+                    ip.solution.gain >= baseline_gain - 1e-6,
+                    "tau {tau}: IP {} < {} {baseline_gain}",
+                    ip.solution.gain,
+                    strategy.name()
+                );
+            }
+        }
+    }
+}
+
+fn check_budget_respected(pl: &Pipeline) {
+    let tm = pl.measure_time(1, 5).unwrap();
+    for objective in [Objective::EmpiricalTime, Objective::TheoreticalTime, Objective::Memory] {
+        let family = pl.family(objective, &tm);
+        for tau in [0.001, 0.003, 0.006] {
+            let out = optimize(&family.groups, &pl.calibration, tau).unwrap();
+            if out.solution.feasible {
+                assert!(
+                    out.predicted_mse <= pl.calibration.budget(tau) + 1e-12,
+                    "{} tau {tau}: mse {} > budget {}",
+                    objective.name(),
+                    out.predicted_mse,
+                    pl.calibration.budget(tau)
+                );
+            }
+        }
+    }
+}
+
+fn check_memory_family_skips_bgemm(pl: &Pipeline) {
+    let tm = pl.measure_time(2, 5).unwrap();
+    let family = pl.family(Objective::Memory, &tm);
+    let out = optimize(&family.groups, &pl.calibration, 0.01).unwrap();
+    for (l, q) in pl.info.qlayers.iter().enumerate() {
+        if q.kind == ampq::model::LayerKind::Bgemm {
+            assert_eq!(out.config.get(l), Format::Bf16, "{}", q.name);
+        }
+    }
+    // ...but with a generous budget it quantizes every linear layer.
+    let n_linear = pl
+        .info
+        .qlayers
+        .iter()
+        .filter(|q| q.kind == ampq::model::LayerKind::Linear)
+        .count();
+    assert_eq!(out.config.n_quantized(), n_linear);
+}
+
+fn check_evaluation(pl: &Pipeline, m: &Manifest) {
+    let tasks = load_all_tasks(&m.root, &pl.info).unwrap();
+    let nq = pl.info.n_qlayers;
+    let bf16 = MpConfig::all_bf16(nq);
+    let ones = vec![1.0f32; nq];
+    let a = evaluate(&pl.mr, &tasks[0], &bf16, &ones).unwrap();
+    let b = evaluate(&pl.mr, &tasks[0], &bf16, &ones).unwrap();
+    assert_eq!(a.acc, b.acc);
+    assert_eq!(a.ppl, b.ppl);
+    // FP8 must change measured perplexity.
+    let fp8 = MpConfig::uniform(nq, Format::Fp8E4m3);
+    let mut rng = Rng::new(9);
+    let ps = draw_pscale(nq, 0.02, &mut rng);
+    let c = evaluate(&pl.mr, &tasks[0], &fp8, &ps).unwrap();
+    assert!((c.ppl - a.ppl).abs() / a.ppl > 1e-4, "fp8 left ppl unchanged");
+    // Scores are sane.
+    for r in [&a, &c] {
+        assert!(r.acc >= 0.0 && r.acc <= 1.0);
+        assert!(r.ppl.is_finite() && r.ppl > 0.0);
+    }
+}
+
+fn check_tau_zero(pl: &Pipeline) {
+    let tm = pl.measure_time(3, 5).unwrap();
+    let family = pl.family(Objective::EmpiricalTime, &tm);
+    let out = optimize(&family.groups, &pl.calibration, 0.0).unwrap();
+    assert_eq!(out.config.n_quantized(), 0);
+}
+
+fn check_wall_clock(pl: &Pipeline, m: &Manifest) {
+    let calib = pl.info.load_calib(&m.root).unwrap();
+    let tokens: Vec<i32> = calib[..pl.info.eval_b].concat();
+    let mut src = ampq::timing::WallTtft { mr: &pl.mr, tokens, reps: 2 };
+    use ampq::timing::TtftSource;
+    let t = src.measure(&MpConfig::all_bf16(pl.info.n_qlayers)).unwrap();
+    assert!(t > 100.0, "wall-clock TTFT {t} us implausibly small");
+    assert!(t < 10.0e6, "wall-clock TTFT {t} us implausibly large");
+}

@@ -1,0 +1,219 @@
+//! Property-based tests (hand-rolled generator harness — proptest is not
+//! vendored; failures print the offending seed for reproduction).
+//!
+//! Invariants:
+//!   * partition: disjoint cover, qidx order, convergence on random
+//!     series-parallel DAGs; groups non-overlapping in depth;
+//!   * solvers: exact == brute force; greedy/dp feasible and <= exact;
+//!     LP bound >= exact; budgets always respected;
+//!   * simulator: determinism, monotonicity under quantization, group
+//!     additivity on random sequential chains.
+
+use ampq::gaudisim::{HwModel, MpConfig, Simulator};
+use ampq::graph::partition::{partition, validate_sequential};
+use ampq::graph::{Engine, Graph, Node};
+use ampq::numerics::Format;
+use ampq::solver::{branch_bound, dp, greedy, lp_relax, Mckp};
+use ampq::util::Rng;
+
+fn qnode(id: String, qidx: i32, macs: u64) -> Node {
+    Node {
+        id,
+        kind: if qidx >= 0 { "linear".into() } else { "op".into() },
+        engine: if qidx >= 0 { Engine::Mme } else { Engine::Tpc },
+        qidx,
+        macs,
+        bytes_in: 4096,
+        bytes_out: 4096,
+        param_bytes: if qidx >= 0 { 8192 } else { 0 },
+        c: 16,
+        k: 16,
+    }
+}
+
+/// Random series-parallel-ish DAG: a chain of stages, each either a single
+/// node or a fan-out/fan-in diamond of 2-4 parallel quantizable nodes.
+fn random_sp_graph(rng: &mut Rng) -> Graph {
+    let mut nodes: Vec<Node> = vec![qnode("src".into(), -1, 0)];
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    let mut tail = 0usize;
+    let mut qidx = 0i32;
+    let stages = rng.range(1, 7);
+    for s in 0..stages {
+        if rng.bool() {
+            // single quantizable node
+            let v = nodes.len();
+            nodes.push(qnode(format!("s{s}"), qidx, 1_000_000 + rng.below(4_000_000) as u64));
+            qidx += 1;
+            edges.push((tail, v));
+            tail = v;
+        } else {
+            // diamond: fan out to w parallel nodes, merge at a quantizable
+            // or pass-through node
+            let w = rng.range(2, 5);
+            let mut mids = Vec::new();
+            for i in 0..w {
+                let v = nodes.len();
+                nodes.push(qnode(format!("s{s}b{i}"), qidx, 1_000_000 + rng.below(4_000_000) as u64));
+                qidx += 1;
+                edges.push((tail, v));
+                mids.push(v);
+            }
+            let m = nodes.len();
+            let merge_q = rng.bool();
+            nodes.push(if merge_q {
+                let n = qnode(format!("s{s}m"), qidx, 2_000_000);
+                qidx += 1;
+                n
+            } else {
+                qnode(format!("s{s}m"), -1, 0)
+            });
+            for v in mids {
+                edges.push((v, m));
+            }
+            tail = m;
+        }
+    }
+    let t = nodes.len();
+    nodes.push(qnode("sink".into(), -1, 0));
+    edges.push((tail, t));
+    Graph::synthetic(nodes, edges)
+}
+
+#[test]
+fn partition_invariants_on_random_dags() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed);
+        let g = random_sp_graph(&mut rng);
+        let p = partition(&g).unwrap_or_else(|e| panic!("seed {seed}: partition failed: {e}"));
+        // Disjoint cover of all quantizable layers.
+        let mut seen = vec![false; g.qlayers.len()];
+        for gr in &p.groups {
+            assert!(!gr.is_empty(), "seed {seed}: empty group");
+            for &q in &gr.qidxs {
+                assert!(!seen[q], "seed {seed}: qidx {q} duplicated");
+                seen[q] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "seed {seed}: not covered");
+        validate_sequential(&g, &p).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+#[test]
+fn solver_cross_validation_random_instances() {
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(1000 + seed);
+        let p = random_mckp(&mut rng);
+        let exact = p.brute_force();
+        let bb = branch_bound::solve(&p);
+        let d = dp::solve(&p);
+        let gr = greedy::solve(&p);
+        let lp = lp_relax::solve(&p);
+
+        assert_eq!(bb.feasible, exact.feasible, "seed {seed}");
+        if !exact.feasible {
+            continue;
+        }
+        assert!((bb.gain - exact.gain).abs() < 1e-9, "seed {seed}: bb {} exact {}", bb.gain, exact.gain);
+        assert!(bb.cost <= p.budget + 1e-9, "seed {seed}");
+        assert!(d.cost <= p.budget + 1e-9, "seed {seed}");
+        assert!(gr.cost <= p.budget + 1e-9, "seed {seed}");
+        assert!(d.gain <= exact.gain + 1e-9, "seed {seed}");
+        assert!(gr.gain <= exact.gain + 1e-9, "seed {seed}");
+        assert!(lp.bound >= exact.gain - 1e-9, "seed {seed}: lp {} exact {}", lp.bound, exact.gain);
+    }
+}
+
+fn random_mckp(rng: &mut Rng) -> Mckp {
+    let j = rng.range(1, 6);
+    let mut gains = Vec::new();
+    let mut costs = Vec::new();
+    for _ in 0..j {
+        let k = rng.range(1, 6);
+        gains.push((0..k).map(|_| rng.f64() * 10.0).collect::<Vec<f64>>());
+        costs.push((0..k).map(|_| rng.f64() * 3.0).collect::<Vec<f64>>());
+    }
+    let lo: f64 = costs.iter().map(|c| c.iter().cloned().fold(f64::MAX, f64::min)).sum();
+    let hi: f64 = costs.iter().map(|c| c.iter().cloned().fold(0.0f64, f64::max)).sum();
+    let budget = lo + rng.f64() * (hi - lo).max(0.01);
+    Mckp::new(gains, costs, budget).unwrap()
+}
+
+#[test]
+fn simulator_invariants_on_random_dags() {
+    let hw = HwModel { noise_std: 0.0, ..HwModel::default() };
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(2000 + seed);
+        let g = random_sp_graph(&mut rng);
+        let nq = g.qlayers.len();
+        if nq == 0 {
+            continue;
+        }
+        let sim = Simulator::new(&g, hw.clone());
+        let base_cfg = MpConfig::all_bf16(nq);
+        let base = sim.makespan(&base_cfg);
+        assert!(base > 0.0, "seed {seed}");
+        // Determinism.
+        assert_eq!(base, sim.makespan(&base_cfg), "seed {seed}");
+        // Monotonicity: quantizing any single layer never slows things.
+        for l in 0..nq {
+            let mut c = MpConfig::all_bf16(nq);
+            c.set(l, Format::Fp8E4m3);
+            let t = sim.makespan(&c);
+            assert!(t <= base * 1.01, "seed {seed} layer {l}: {t} > {base}");
+        }
+        // All-FP8 is at least as fast as any single-layer config.
+        let full = sim.makespan(&MpConfig::uniform(nq, Format::Fp8E4m3));
+        assert!(full <= base, "seed {seed}");
+    }
+}
+
+#[test]
+fn group_gain_additivity_on_random_dags() {
+    // Per-group FP8 gains must sum to (approximately) the all-FP8 gain —
+    // the paper's additivity claim, which holds by construction for
+    // sequential sub-graphs (noise-free).
+    let hw = HwModel { noise_std: 0.0, ..HwModel::default() };
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(3000 + seed);
+        let g = random_sp_graph(&mut rng);
+        let nq = g.qlayers.len();
+        if nq == 0 {
+            continue;
+        }
+        let p = partition(&g).unwrap();
+        let sim = Simulator::new(&g, hw.clone());
+        let base = sim.makespan(&MpConfig::all_bf16(nq));
+        let mut sum = 0.0;
+        for gr in &p.groups {
+            let mut c = MpConfig::all_bf16(nq);
+            for &q in &gr.qidxs {
+                c.set(q, Format::Fp8E4m3);
+            }
+            sum += base - sim.makespan(&c);
+        }
+        let all = base - sim.makespan(&MpConfig::uniform(nq, Format::Fp8E4m3));
+        if all > 1.0 {
+            let rel = (sum - all).abs() / all;
+            assert!(rel < 0.10, "seed {seed}: sum {sum} vs all {all} (rel {rel})");
+        }
+    }
+}
+
+#[test]
+fn mpconfig_label_roundtrip_random() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(4000 + seed);
+        let n = rng.range(1, 40);
+        let mut cfg = MpConfig::all_bf16(n);
+        for l in 0..n {
+            if rng.bool() {
+                cfg.set(l, Format::Fp8E4m3);
+            }
+        }
+        let label = cfg.bits_label();
+        assert_eq!(label.len(), n);
+        assert_eq!(label.chars().filter(|&c| c == '1').count(), cfg.n_quantized());
+    }
+}
