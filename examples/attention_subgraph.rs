@@ -6,41 +6,53 @@
 //!   * the sum of per-layer gain measurements (the naive predictor),
 //!   * the MAC-based theoretical gain, scale+bias fitted.
 //!
-//! Run: cargo run --release --example attention_subgraph [-- --model tiny-m]
+//! Uses only the stage-1 artifact + the simulator, so it runs without PJRT —
+//! and with --demo, without AOT artifacts at all.
+//!
+//! Run: cargo run --release --example attention_subgraph [-- --model tiny-m | --demo]
 
 use ampq::gaudisim::{HwModel, Simulator};
-use ampq::graph::partition::partition;
 use ampq::metrics::tt_layer_gain;
-use ampq::model::Manifest;
 use ampq::numerics::{Format, PAPER_FORMATS};
+use ampq::plan::demo::demo_model;
+use ampq::plan::Engine;
 use ampq::timing::{measure_groups, measure_per_layer, SimTtft};
 use ampq::util::{stats, Args, Rng};
 use anyhow::{anyhow, Result};
-use std::path::Path;
+use std::path::PathBuf;
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &[])?;
-    let model = args.get_or("model", "tiny-m");
+    let args = Args::parse(&raw, &["demo"])?;
+    let demo = args.flag("demo");
+    let model = args.get_or("model", if demo { "demo" } else { "tiny-m" });
+    let root = PathBuf::from(args.get_or("artifacts", "artifacts"));
 
-    let manifest = Manifest::load(Path::new(args.get_or("artifacts", "artifacts")))?;
-    let info = manifest.model(model)?;
-    let graph = info.load_graph(&manifest.root)?;
-    let part = partition(&graph)?;
+    let mut engine = Engine::new().with_artifacts_root(root);
+    if demo {
+        let (graph, qlayers, calibration) = demo_model(2, 7);
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+    }
+    let part = engine.partitioned(model)?;
+    let graph = engine.graph(model)?;
 
     let gi = part
+        .partition
         .groups
         .iter()
         .position(|g| g.len() == 5)
         .ok_or_else(|| anyhow!("no attention group"))?;
-    let qnames: Vec<&str> =
-        part.groups[gi].qidxs.iter().map(|&q| graph.qlayers[q].as_str()).collect();
+    let qnames: Vec<&str> = part.partition.groups[gi]
+        .qidxs
+        .iter()
+        .map(|&q| part.qlayers[q].name.as_str())
+        .collect();
     println!("attention sub-graph V{gi}: {}", qnames.join(", "));
 
     let hw = HwModel { noise_std: 0.005, ..HwModel::default() };
     let sim = Simulator::new(&graph, hw);
     let mut src = SimTtft { sim, rng: Rng::new(7), reps: 5 };
-    let tm = measure_groups(&mut src, &part, &PAPER_FORMATS)?;
+    let tm = measure_groups(&mut src, &part.partition, &PAPER_FORMATS)?;
     let per_layer = measure_per_layer(&mut src, &PAPER_FORMATS)?;
     let group = &tm.groups[gi];
 
@@ -61,7 +73,7 @@ fn main() -> Result<()> {
                 .qidxs
                 .iter()
                 .zip(fmts)
-                .map(|(&q, &f)| tt_layer_gain(&info.qlayers[q], f))
+                .map(|(&q, &f)| tt_layer_gain(&part.qlayers[q], f))
                 .sum();
             (label, measured, summed, theo)
         })

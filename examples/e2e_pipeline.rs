@@ -3,25 +3,23 @@
 //!
 //!   L1/L2  the AOT-compiled JAX+Pallas forward & sensitivity executables
 //!          run through PJRT from rust (no python at runtime);
-//!   L3     partition -> calibration -> per-group time measurement -> IP ->
-//!          task evaluation, comparing IP-ET vs Random vs Prefix.
+//!   L3     Engine stages (partition -> calibration -> time measurement) ->
+//!          Planner queries -> task evaluation, comparing IP-ET vs Random
+//!          vs Prefix.
 //!
 //! Prints the paper's headline: IP-ET achieves better accuracy at equal or
 //! lower TTFT than both baselines.  Results are recorded in EXPERIMENTS.md.
 //!
 //! Run: cargo run --release --example e2e_pipeline [-- --model tiny-s --seeds 3]
 
-use ampq::coordinator::{Pipeline, Strategy};
+use ampq::coordinator::Strategy;
 use ampq::evalharness::{load_all_tasks, CachedEvaluator};
-use ampq::figures::sweep::{aggregate, run_sweep};
-use ampq::gaudisim::HwModel;
+use ampq::figures::sweep::{aggregate, run_sweep, SweepInputs};
 use ampq::metrics::Objective;
-use ampq::model::Manifest;
-use ampq::numerics::PAPER_FORMATS;
-use ampq::runtime::FwdMode;
+use ampq::plan::Engine;
 use ampq::util::Args;
-use anyhow::Result;
-use std::path::Path;
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
 use std::time::Instant;
 
 fn main() -> Result<()> {
@@ -31,32 +29,49 @@ fn main() -> Result<()> {
     let n_seeds = args.u64_or("seeds", 3)?;
     let t0 = Instant::now();
 
-    let manifest = Manifest::load(Path::new(args.get_or("artifacts", "artifacts")))?;
-    let pl = Pipeline::new(&manifest, model, FwdMode::Ref, HwModel::default(),
-                           PAPER_FORMATS.to_vec())?;
+    let root = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let mut engine = Engine::new()
+        .with_artifacts_root(root.clone())
+        .with_cache_dir(root.join("cache"));
+
+    let planner = engine.planner(model)?;
     println!(
-        "[{:6.1}s] loaded + partitioned ({} groups) + calibrated (R={}, E[g^2]={:.4})",
+        "[{:6.1}s] staged artifacts ready: {} groups, calibration R={}, E[g^2]={:.4}, \
+         baseline TTFT {:.1} us",
         t0.elapsed().as_secs_f64(),
-        pl.partition.groups.len(),
-        pl.calibration.n_samples,
-        pl.calibration.eg2
+        planner.partitioned().partition.groups.len(),
+        planner.calibration().n_samples,
+        planner.calibration().eg2,
+        planner.measurements().base_ttft
     );
 
-    let tm = pl.measure_time(0, 5)?;
-    println!(
-        "[{:6.1}s] measured {} per-group time tables; baseline TTFT {:.1} us",
-        t0.elapsed().as_secs_f64(),
-        pl.partition.n_measurements(PAPER_FORMATS.len()),
-        tm.base_ttft
-    );
+    let info = engine.info(model)?;
+    let graph = engine.graph(model)?;
+    let tasks_root = engine
+        .artifacts_root()
+        .ok_or_else(|| anyhow!("no artifacts root"))?
+        .to_path_buf();
+    let tasks = load_all_tasks(&tasks_root, &info)?;
+    let hw = engine.hw().clone();
+    let mr = engine.runtime(model)?;
+    let mut eval = CachedEvaluator::new(mr, &tasks);
+    let inputs = SweepInputs {
+        planner: &planner,
+        qlayers: &info.qlayers,
+        graph: &graph,
+        hw,
+        tasks: &tasks,
+    };
 
-    let tasks = load_all_tasks(&manifest.root, &pl.info)?;
-    let mut eval = CachedEvaluator::new(&pl.mr, &tasks);
-    let family = pl.family(Objective::EmpiricalTime, &tm);
     let taus = [0.0, 0.001, 0.002, 0.003, 0.004, 0.005, 0.006, 0.007];
     let sweep = run_sweep(
-        &pl, &family, &tasks, &taus, n_seeds, 0.02,
-        &[Strategy::Ip, Strategy::Random, Strategy::Prefix], &mut eval,
+        &inputs,
+        Objective::EmpiricalTime,
+        &taus,
+        n_seeds,
+        0.02,
+        &[Strategy::Ip, Strategy::Random, Strategy::Prefix],
+        &mut eval,
     )?;
     println!(
         "[{:6.1}s] evaluated {} sweep points ({} unique forward configs)",

@@ -1,67 +1,50 @@
-//! Quickstart: the smallest useful ampq program.
+//! Quickstart: the smallest useful ampq program, on the staged planning API.
 //!
-//! Loads the AOT artifacts, partitions the model into sequential sub-graphs
-//! (Algorithm 2), calibrates per-layer sensitivity on the real compiled
-//! fwd+bwd (the paper's eq. 21), measures per-group time gains on the
-//! Gaudi-2-like simulator, and solves the IP (eq. 5) at one threshold.
+//! An `Engine` materializes the stage artifacts (partition -> calibration ->
+//! time measurement) once — loading them from artifacts/cache/ when present —
+//! and a `Planner` answers the actual query in microseconds, returning a
+//! self-contained, JSON-serializable `Plan`.
 //!
 //! Run: cargo run --release --example quickstart [-- --model tiny-s --tau 0.004]
 
-use ampq::coordinator::{optimize, Pipeline};
-use ampq::gaudisim::{HwModel, MpConfig};
+use ampq::coordinator::Strategy;
 use ampq::metrics::Objective;
-use ampq::model::Manifest;
-use ampq::numerics::PAPER_FORMATS;
-use ampq::runtime::FwdMode;
+use ampq::plan::Engine;
 use ampq::util::Args;
 use anyhow::Result;
-use std::path::Path;
+use std::path::PathBuf;
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&raw, &[])?;
     let model = args.get_or("model", "tiny-s");
     let tau = args.f64_or("tau", 0.004)?;
+    let root = PathBuf::from(args.get_or("artifacts", "artifacts"));
 
-    // 1. Load artifacts (HLO text + weights + graph + calibration data).
-    let manifest = Manifest::load(Path::new(args.get_or("artifacts", "artifacts")))?;
+    // 1. Point an Engine at the AOT artifacts; stage products cache on disk.
+    let mut engine = Engine::new()
+        .with_artifacts_root(root.clone())
+        .with_cache_dir(root.join("cache"));
 
-    // 2. Partition + calibrate (Algorithm 1, steps 1-2).
-    let pl = Pipeline::new(&manifest, model, FwdMode::Ref, HwModel::default(),
-                           PAPER_FORMATS.to_vec())?;
+    // 2. Materialize (or load) the stage artifacts and get a Planner.
+    let planner = engine.planner(model)?;
     println!(
         "{model}: {} sequential sub-graphs over {} quantizable layers; E[g^2] = {:.4}",
-        pl.partition.groups.len(),
-        pl.info.n_qlayers,
-        pl.calibration.eg2
+        planner.partitioned().partition.groups.len(),
+        planner.n_qlayers(),
+        planner.calibration().eg2
     );
-
-    // 3. Measure per-group empirical time gains (Algorithm 1, step 3).
-    let tm = pl.measure_time(0, 5)?;
-    println!("baseline TTFT {:.1} us (simulated Gaudi-2-like)", tm.base_ttft);
-
-    // 4. Solve the IP at tau (Algorithm 1, step 4).
-    let family = pl.family(Objective::EmpiricalTime, &tm);
-    let out = optimize(&family.groups, &pl.calibration, tau)?;
+    let c = engine.counters();
     println!(
-        "tau = {tau}: quantized {} / {} layers, predicted gain {:.1} us, \
-         predicted loss-MSE {:.3e} (budget {:.3e})",
-        out.config.n_quantized(),
-        out.config.len(),
-        out.solution.gain,
-        out.predicted_mse,
-        out.budget
+        "stage passes this run: {} partition, {} calibration, {} measurement ({} from cache)",
+        c.partition_passes, c.calibration_passes, c.measurement_passes, c.cache_loads
     );
-    println!("config bits (0=BF16, 1=FP8): {}", out.config.bits_label());
 
-    // 5. Check the chosen config against a direct simulator measurement.
-    let direct = pl.simulated_ttft(&out.config, 1, 5);
-    let base = pl.simulated_ttft(&MpConfig::all_bf16(pl.info.n_qlayers), 2, 5);
-    println!(
-        "direct re-measurement: TTFT {:.1} -> {:.1} us ({:.1}% reduction)",
-        base,
-        direct,
-        100.0 * (base - direct) / base
-    );
+    // 3. One planning query (eq. 5) — microseconds, no recomputation.
+    let plan = planner.plan(Objective::EmpiricalTime, Strategy::Ip, tau, 0)?;
+    println!("{}", plan.summary());
+
+    // 4. The Plan is a self-contained artifact: ship it as JSON.
+    println!("{}", plan.to_json().to_string());
     Ok(())
 }

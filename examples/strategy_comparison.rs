@@ -1,23 +1,22 @@
 //! Table-1-style strategy comparison across both models and all three
-//! objective families (IP-ET / IP-TT / IP-M vs Random / Prefix).
+//! objective families (IP-ET / IP-TT / IP-M vs Random / Prefix), driven by
+//! one Engine: each model pays one calibration + one measurement pass, and
+//! all nine (family, strategy) sweeps are pure Planner queries.
 //!
 //! A reduced-scale version of `ampq figures --fig table1` suitable for a
 //! quick interactive run; pass --seeds/--models for larger sweeps.
 //!
 //! Run: cargo run --release --example strategy_comparison [-- --seeds 2]
 
-use ampq::coordinator::{Pipeline, Strategy};
+use ampq::coordinator::Strategy;
 use ampq::evalharness::{load_all_tasks, CachedEvaluator};
-use ampq::figures::sweep::run_sweep;
-use ampq::gaudisim::HwModel;
+use ampq::figures::sweep::{run_sweep, SweepInputs};
 use ampq::metrics::Objective;
-use ampq::model::Manifest;
-use ampq::numerics::PAPER_FORMATS;
+use ampq::plan::Engine;
 use ampq::report;
-use ampq::runtime::FwdMode;
 use ampq::util::Args;
-use anyhow::Result;
-use std::path::Path;
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -26,7 +25,11 @@ fn main() -> Result<()> {
     let models: Vec<&str> = args.get_or("models", "tiny-s,tiny-m").split(',').collect();
     let taus = [0.0, 0.002, 0.004, 0.007];
 
-    let manifest = Manifest::load(Path::new(args.get_or("artifacts", "artifacts")))?;
+    let root = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let mut engine = Engine::new()
+        .with_artifacts_root(root.clone())
+        .with_cache_dir(root.join("cache"));
+
     let header: Vec<String> = ["model", "family", "strategy", "avg acc diff [%]", "lamb ppl diff [%]"]
         .iter()
         .map(|s| s.to_string())
@@ -34,17 +37,29 @@ fn main() -> Result<()> {
     let mut rows: Vec<Vec<String>> = Vec::new();
 
     for model in &models {
-        let pl = Pipeline::new(&manifest, model, FwdMode::Ref, HwModel::default(),
-                               PAPER_FORMATS.to_vec())?;
-        let tm = pl.measure_time(0, 5)?;
-        let tasks = load_all_tasks(&manifest.root, &pl.info)?;
-        let mut eval = CachedEvaluator::new(&pl.mr, &tasks);
+        let planner = engine.planner(model)?;
+        let info = engine.info(model)?;
+        let graph = engine.graph(model)?;
+        let tasks_root = engine
+            .artifacts_root()
+            .ok_or_else(|| anyhow!("no artifacts root"))?
+            .to_path_buf();
+        let tasks = load_all_tasks(&tasks_root, &info)?;
+        let hw = engine.hw().clone();
         let lamb = tasks.iter().position(|t| t.meta.name == "lamb").unwrap();
+        let mr = engine.runtime(model)?;
+        let mut eval = CachedEvaluator::new(mr, &tasks);
+        let inputs = SweepInputs {
+            planner: &planner,
+            qlayers: &info.qlayers,
+            graph: &graph,
+            hw,
+            tasks: &tasks,
+        };
 
-        for objective in [Objective::EmpiricalTime, Objective::TheoreticalTime, Objective::Memory] {
-            let family = pl.family(objective, &tm);
+        for objective in Objective::ALL {
             let sweep = run_sweep(
-                &pl, &family, &tasks, &taus, n_seeds, 0.02,
+                &inputs, objective, &taus, n_seeds, 0.02,
                 &[Strategy::Random, Strategy::Prefix, Strategy::Ip], &mut eval,
             )?;
             for strategy in [Strategy::Random, Strategy::Prefix, Strategy::Ip] {

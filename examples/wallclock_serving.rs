@@ -2,17 +2,18 @@
 //! AOT-compiled Pallas forward on the PJRT CPU client — no simulator, no
 //! python.  Reports throughput and latency percentiles per MP configuration,
 //! proving the artifact path (L1 Pallas -> L2 JAX -> HLO text -> rust PJRT)
-//! composes into a deployable request loop.
+//! composes into a deployable request loop.  The runtime handle comes from
+//! the same Engine that serves planning queries.
 //!
 //! Run: cargo run --release --example wallclock_serving [-- --model tiny-s --requests 32]
 
 use ampq::gaudisim::MpConfig;
-use ampq::model::Manifest;
 use ampq::numerics::Format;
-use ampq::runtime::{FwdMode, ModelRuntime, Runtime};
+use ampq::plan::Engine;
+use ampq::runtime::FwdMode;
 use ampq::util::{stats, Args, Rng};
 use anyhow::Result;
-use std::path::Path;
+use std::path::PathBuf;
 use std::time::Instant;
 
 fn main() -> Result<()> {
@@ -21,16 +22,14 @@ fn main() -> Result<()> {
     let model = args.get_or("model", "tiny-s");
     let n_requests = args.usize_or("requests", 32)?;
 
-    let manifest = Manifest::load(Path::new(args.get_or("artifacts", "artifacts")))?;
-    let rt = Runtime::new()?;
-    let info = manifest.model(model)?.clone();
-    println!("loading {model} (pallas fwd) on {} ...", rt.platform());
-    let t0 = Instant::now();
-    let mr = ModelRuntime::load(&rt, &manifest.root, &info, FwdMode::Pallas)?;
-    println!("compiled in {:.2}s", t0.elapsed().as_secs_f64());
+    let root = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let mut engine = Engine::new()
+        .with_artifacts_root(root.clone())
+        .with_fwd_mode(FwdMode::Pallas);
+    let info = engine.info(model)?;
 
     // Synthesize a request stream from the calibration distribution.
-    let calib = info.load_calib(&manifest.root)?;
+    let calib = info.load_calib(&root)?;
     let mut rng = Rng::new(42);
     let batches: Vec<Vec<i32>> = (0..n_requests)
         .map(|_| {
@@ -40,6 +39,11 @@ fn main() -> Result<()> {
                 .concat()
         })
         .collect();
+
+    println!("loading {model} (pallas fwd) ...");
+    let t0 = Instant::now();
+    let mr = engine.runtime(model)?;
+    println!("compiled in {:.2}s", t0.elapsed().as_secs_f64());
 
     let nq = info.n_qlayers;
     let ones = vec![1.0f32; nq];

@@ -7,16 +7,13 @@
 //!   * partition granularity: per-group IP vs a per-layer (additivity-
 //!     assuming) IP — the paper's central claim in optimization form.
 
-use ampq::coordinator::Pipeline;
 use ampq::gaudisim::{HwModel, MpConfig, Simulator};
 use ampq::metrics::{GroupChoices, Objective};
-use ampq::model::Manifest;
 use ampq::numerics::{Format, PAPER_FORMATS};
-use ampq::runtime::FwdMode;
+use ampq::plan::Engine;
 use ampq::solver::{branch_bound, greedy, Mckp};
 use ampq::timing::{measure_groups, measure_per_layer, SimTtft};
 use ampq::util::Rng;
-use std::path::Path;
 
 fn fig1_gap(graph: &ampq::graph::Graph, part: &ampq::graph::partition::Partition, hw: HwModel) -> f64 {
     let sim = Simulator::new(graph, hw.clone());
@@ -45,13 +42,15 @@ fn fig1_gap(graph: &ampq::graph::Graph, part: &ampq::graph::partition::Partition
 }
 
 fn main() {
-    let manifest = Manifest::load(Path::new("artifacts")).expect("make artifacts");
-    let info = manifest.model("tiny-s").unwrap();
-    let graph = info.load_graph(&manifest.root).unwrap();
-    let part = ampq::graph::partition::partition(&graph).unwrap();
+    let base = HwModel { noise_std: 0.0, ..HwModel::default() };
+    let mut engine = Engine::new()
+        .with_artifacts_root("artifacts")
+        .with_hw(base.clone());
+    let part_art = engine.partitioned("tiny-s").expect("make artifacts");
+    let graph = engine.graph("tiny-s").unwrap();
+    let part = &part_art.partition;
 
     println!("== ablation: hardware-model features -> Fig-1 non-additivity gap ==");
-    let base = HwModel { noise_std: 0.0, ..HwModel::default() };
     for (tag, hw) in [
         ("1 MME, no fusion", HwModel { n_mme: 1, enable_fusion: false, ..base.clone() }),
         ("1 MME, fusion", HwModel { n_mme: 1, ..base.clone() }),
@@ -60,21 +59,20 @@ fn main() {
         ("4 MME, fusion", HwModel { n_mme: 4, ..base.clone() }),
     ] {
         println!("  {tag:<26} mean |sum-per-layer − measured| = {:.1}% of max group gain",
-                 100.0 * fig1_gap(&graph, &part, hw));
+                 100.0 * fig1_gap(&graph, part, hw));
     }
 
     println!("\n== ablation: solver choice on the real calibrated IP ==");
-    let pl = Pipeline::new(&manifest, "tiny-s", FwdMode::Ref, base.clone(), PAPER_FORMATS.to_vec())
-        .unwrap();
-    let tm = pl.measure_time(0, 5).unwrap();
-    let family = pl.family(Objective::EmpiricalTime, &tm);
+    let planner = engine.planner("tiny-s").unwrap();
+    let calibration = planner.calibration();
+    let family = planner.family(Objective::EmpiricalTime);
     for tau in [0.001, 0.002, 0.004, 0.007] {
-        let budget = pl.calibration.budget(tau);
+        let budget = calibration.budget(tau);
         let gains: Vec<Vec<f64>> = family.groups.iter().map(|g| g.gains.clone()).collect();
         let costs: Vec<Vec<f64>> = family
             .groups
             .iter()
-            .map(|g| g.configs.iter().map(|c| pl.calibration.group_mse(&g.qidxs, c)).collect())
+            .map(|g| g.configs.iter().map(|c| calibration.group_mse(&g.qidxs, c)).collect())
             .collect();
         let p = Mckp::new(gains, costs, budget).unwrap();
         let e = branch_bound::solve(&p);
@@ -90,21 +88,22 @@ fn main() {
     println!("\n== ablation: per-group (paper) vs per-layer-additivity IP ==");
     // Build a WRONG objective that assumes per-layer additivity, optimize
     // with it, then re-score the chosen config with the true simulator.
-    let sim = Simulator::new(&pl.graph, base.clone());
+    let nq = planner.n_qlayers();
+    let sim = Simulator::new(&graph, base.clone());
     let mut src = SimTtft { sim, rng: Rng::new(1), reps: 5 };
     let per_layer = measure_per_layer(&mut src, &PAPER_FORMATS).unwrap();
-    let naive_groups: Vec<GroupChoices> = (0..pl.info.n_qlayers)
+    let naive_groups: Vec<GroupChoices> = (0..nq)
         .map(|l| GroupChoices {
             qidxs: vec![l],
             configs: vec![vec![Format::Bf16], vec![Format::Fp8E4m3]],
             gains: vec![0.0, per_layer[l][1]],
         })
         .collect();
-    let sim2 = Simulator::new(&pl.graph, base.clone());
-    let base_ttft = sim2.makespan(&MpConfig::all_bf16(pl.info.n_qlayers));
+    let sim2 = Simulator::new(&graph, base.clone());
+    let base_ttft = sim2.makespan(&MpConfig::all_bf16(nq));
     for tau in [0.002, 0.004, 0.007] {
-        let paper = ampq::coordinator::optimize(&family.groups, &pl.calibration, tau).unwrap();
-        let naive = ampq::coordinator::optimize(&naive_groups, &pl.calibration, tau).unwrap();
+        let paper = ampq::coordinator::optimize(&family.groups, calibration, tau).unwrap();
+        let naive = ampq::coordinator::optimize(&naive_groups, calibration, tau).unwrap();
         let t_paper = sim2.makespan(&paper.config);
         let t_naive = sim2.makespan(&naive.config);
         println!(

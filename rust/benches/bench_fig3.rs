@@ -1,33 +1,31 @@
 //! Bench for Figure 3 (§3.2 validation): time the loss-MSE predictor vs a
 //! measured loss-MSE pass, and regenerate the additivity check numbers.
 
-use ampq::coordinator::Pipeline;
-use ampq::gaudisim::{HwModel, MpConfig};
-use ampq::numerics::{Format, PAPER_FORMATS};
-use ampq::runtime::FwdMode;
+use ampq::gaudisim::MpConfig;
+use ampq::numerics::Format;
+use ampq::plan::Engine;
 use ampq::sensitivity::validate::measured_loss_mse;
 use ampq::util::bench::{bench, black_box};
 use ampq::util::Rng;
-use ampq::model::Manifest;
-use std::path::Path;
 
 fn main() {
-    let manifest = Manifest::load(Path::new("artifacts")).expect("make artifacts");
-    let pl = Pipeline::new(&manifest, "tiny-s", FwdMode::Ref, HwModel::default(),
-                           PAPER_FORMATS.to_vec())
-        .unwrap();
-    let calib = pl.info.load_calib(&manifest.root).unwrap();
-    let nq = pl.info.n_qlayers;
+    let mut engine = Engine::new().with_artifacts_root("artifacts");
+    let planner = engine.planner("tiny-s").expect("make artifacts");
+    let info = engine.info("tiny-s").unwrap();
+    let calib_tokens = info.load_calib(engine.artifacts_root().unwrap()).unwrap();
+    let calibration = planner.calibration().clone();
+    let nq = planner.n_qlayers();
     let fp8 = MpConfig::uniform(nq, Format::Fp8E4m3);
 
     // The predictor is the hot path of the IP inner loop: must be ~ns.
     bench("fig3/predict_loss_mse (eq. 6)", 100, 10_000, || {
-        black_box(pl.calibration.loss_mse(&fp8));
+        black_box(calibration.loss_mse(&fp8));
     });
 
+    let mr = engine.runtime("tiny-s").expect("PJRT runtime");
     bench("fig3/measured_loss_mse (1 draw, 32 samples)", 0, 3, || {
         let mut rng = Rng::new(1);
-        black_box(measured_loss_mse(&pl.mr, &calib, &fp8, 1, 0.02, &mut rng).unwrap());
+        black_box(measured_loss_mse(mr, &calib_tokens, &fp8, 1, 0.02, &mut rng).unwrap());
     });
 
     // Shape check: prediction within an order of magnitude of measurement
@@ -35,8 +33,8 @@ fn main() {
     let mut rng = Rng::new(2);
     for fmt in [Format::Bf16, Format::Fp8E4m3] {
         let cfg = MpConfig::uniform(nq, fmt);
-        let pred = pl.calibration.loss_mse(&cfg);
-        let meas = measured_loss_mse(&pl.mr, &calib, &cfg, 2, 0.02, &mut rng).unwrap();
+        let pred = calibration.loss_mse(&cfg);
+        let meas = measured_loss_mse(mr, &calib_tokens, &cfg, 2, 0.02, &mut rng).unwrap();
         println!(
             "fig3/{}: predicted {pred:.3e} measured {meas:.3e} ratio {:.2}",
             fmt.name(),

@@ -2,40 +2,44 @@
 //! (IP-ET family, 3 strategies, 2 seeds) with the end-to-end timing of the
 //! evaluation hot loop — the dominant cost of regenerating the paper.
 
-use ampq::coordinator::{Pipeline, Strategy};
+use ampq::coordinator::Strategy;
 use ampq::evalharness::{load_all_tasks, CachedEvaluator};
-use ampq::figures::sweep::{aggregate, run_sweep};
-use ampq::gaudisim::{HwModel, MpConfig};
+use ampq::figures::sweep::{aggregate, run_sweep, SweepInputs};
+use ampq::gaudisim::MpConfig;
 use ampq::metrics::Objective;
-use ampq::model::Manifest;
-use ampq::numerics::PAPER_FORMATS;
-use ampq::runtime::FwdMode;
+use ampq::plan::Engine;
 use ampq::util::bench::bench;
-use std::path::Path;
 
 fn main() {
-    let manifest = Manifest::load(Path::new("artifacts")).expect("make artifacts");
-    let pl = Pipeline::new(&manifest, "tiny-s", FwdMode::Ref, HwModel::default(),
-                           PAPER_FORMATS.to_vec())
-        .unwrap();
-    let tasks = load_all_tasks(&manifest.root, &pl.info).unwrap();
-    let tm = pl.measure_time(0, 5).unwrap();
-    let family = pl.family(Objective::EmpiricalTime, &tm);
+    let mut engine = Engine::new().with_artifacts_root("artifacts");
+    let planner = engine.planner("tiny-s").expect("make artifacts");
+    let info = engine.info("tiny-s").unwrap();
+    let graph = engine.graph("tiny-s").unwrap();
+    let root = engine.artifacts_root().unwrap().to_path_buf();
+    let tasks = load_all_tasks(&root, &info).unwrap();
+    let hw = engine.hw().clone();
+    let mr = engine.runtime("tiny-s").expect("PJRT runtime");
 
     // Single-task single-config eval: the innermost unit.
-    let nq = pl.info.n_qlayers;
+    let nq = info.n_qlayers;
     let cfg = MpConfig::all_bf16(nq);
     let ones = vec![1.0f32; nq];
     bench("table1/eval_one_task (hella, 256 rows)", 1, 3, || {
-        ampq::evalharness::evaluate(&pl.mr, &tasks[0], &cfg, &ones).unwrap();
+        ampq::evalharness::evaluate(mr, &tasks[0], &cfg, &ones).unwrap();
     });
 
     let t0 = std::time::Instant::now();
-    let mut eval = CachedEvaluator::new(&pl.mr, &tasks);
+    let mut eval = CachedEvaluator::new(mr, &tasks);
+    let inputs = SweepInputs {
+        planner: &planner,
+        qlayers: &info.qlayers,
+        graph: &graph,
+        hw,
+        tasks: &tasks,
+    };
     let sweep = run_sweep(
-        &pl,
-        &family,
-        &tasks,
+        &inputs,
+        Objective::EmpiricalTime,
         &[0.0, 0.004, 0.007],
         2,
         0.02,

@@ -1,28 +1,20 @@
 //! Bench for Figures 8 and 9: the IP-TT (MAC-time) and IP-M (memory)
-//! objective builders and solves across the tau grid.
+//! planner queries across the tau grid, driven by cached stage artifacts.
 
-use ampq::coordinator::{optimize, paper_tau_grid, Pipeline};
-use ampq::gaudisim::HwModel;
+use ampq::coordinator::{paper_tau_grid, Strategy};
 use ampq::metrics::Objective;
-use ampq::model::Manifest;
-use ampq::numerics::PAPER_FORMATS;
-use ampq::runtime::FwdMode;
+use ampq::plan::Engine;
 use ampq::util::bench::{bench, black_box};
-use std::path::Path;
 
 fn main() {
-    let manifest = Manifest::load(Path::new("artifacts")).expect("make artifacts");
+    let mut engine = Engine::new().with_artifacts_root("artifacts");
     for model in ["tiny-s", "tiny-m"] {
-        let pl = Pipeline::new(&manifest, model, FwdMode::Ref, HwModel::default(),
-                               PAPER_FORMATS.to_vec())
-            .unwrap();
-        let tm = pl.measure_time(0, 5).unwrap();
+        let planner = engine.planner(model).expect("make artifacts");
 
         for objective in [Objective::TheoreticalTime, Objective::Memory] {
-            let family = pl.family(objective, &tm);
-            bench(&format!("fig89/{model}/{}/build+solve_tau_grid", objective.name()), 1, 10, || {
+            bench(&format!("fig89/{model}/{}/solve_tau_grid", objective.name()), 1, 10, || {
                 for tau in paper_tau_grid() {
-                    black_box(optimize(&family.groups, &pl.calibration, tau).unwrap());
+                    black_box(planner.plan(objective, Strategy::Ip, tau, 0).unwrap());
                 }
             });
 
@@ -30,13 +22,13 @@ fn main() {
             // touches BGEMM layers.
             let mut last = -1.0f64;
             for tau in paper_tau_grid() {
-                let out = optimize(&family.groups, &pl.calibration, tau).unwrap();
-                assert!(out.solution.gain >= last - 1e-9);
-                last = out.solution.gain;
+                let plan = planner.plan(objective, Strategy::Ip, tau, 0).unwrap();
+                assert!(plan.gain >= last - 1e-9);
+                last = plan.gain;
                 if objective == Objective::Memory {
-                    for (l, q) in pl.info.qlayers.iter().enumerate() {
+                    for (l, q) in planner.partitioned().qlayers.iter().enumerate() {
                         if q.kind == ampq::model::LayerKind::Bgemm {
-                            assert_eq!(out.config.get(l), ampq::numerics::Format::Bf16);
+                            assert_eq!(plan.config.get(l), ampq::numerics::Format::Bf16);
                         }
                     }
                 }
@@ -48,4 +40,9 @@ fn main() {
             );
         }
     }
+    let c = engine.counters();
+    println!(
+        "fig89: both models served by {} calibration + {} measurement passes",
+        c.calibration_passes, c.measurement_passes
+    );
 }

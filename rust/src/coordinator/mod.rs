@@ -2,10 +2,17 @@
 //! partitioning (Algorithm 2 via graph::partition), sensitivity calibration,
 //! per-group time-gain measurement, IP optimization (eq. 5), and the
 //! Random/Prefix baselines used in §3.
+//!
+//! Since 0.2 the preferred entry point is the staged planning API in
+//! [`crate::plan`]; this module keeps the shared strategy machinery and the
+//! deprecated one-shot `Pipeline` shim.
 
 pub mod baselines;
 pub mod ip;
 pub mod pipeline;
+pub mod strategy;
 
 pub use ip::{optimize, IpOutcome};
-pub use pipeline::{paper_tau_grid, select_config, Family, Pipeline, Strategy};
+#[allow(deprecated)]
+pub use pipeline::Pipeline;
+pub use strategy::{build_family, paper_tau_grid, select_config, Family, Strategy};

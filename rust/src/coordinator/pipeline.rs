@@ -1,12 +1,19 @@
-//! End-to-end Algorithm 1: partition -> sensitivity calibration ->
-//! per-group time-gain measurement -> IP optimization, plus the strategy
-//! families and baselines the paper evaluates against.
+//! Deprecated single-shot `Pipeline` — the pre-0.2 monolithic surface.
+//!
+//! `Pipeline::new` eagerly fuses partition + calibration, so every tau or
+//! objective query re-pays Algorithm 1's calibrate-once stages.  The staged
+//! planning API ([`crate::plan::Engine`] producing cacheable
+//! `Partitioned -> Calibrated -> Measured` artifacts and a
+//! [`crate::plan::Planner`] answering `plan(objective, strategy, tau)` in
+//! microseconds) replaces it; this shim is kept for one release so existing
+//! callers migrate smoothly (see DESIGN.md "Staged planning API").
 
+use crate::coordinator::strategy::{build_family, Family};
 use crate::gaudisim::{HwModel, MpConfig, Simulator};
 use crate::graph::partition::{partition, Partition};
 use crate::graph::Graph;
-use crate::metrics::{self, GroupChoices, Objective};
-use crate::model::{LayerKind, Manifest, ModelInfo};
+use crate::metrics::Objective;
+use crate::model::{Manifest, ModelInfo};
 use crate::numerics::Format;
 use crate::runtime::{FwdMode, ModelRuntime, Runtime};
 use crate::sensitivity::{calibrate, Calibration};
@@ -15,6 +22,11 @@ use crate::util::Rng;
 use anyhow::Result;
 
 /// Everything Algorithm 1 needs, loaded once per model.
+#[deprecated(
+    since = "0.2.0",
+    note = "use plan::Engine / plan::Planner (staged planning API, DESIGN.md): \
+            artifacts are cacheable and a tau sweep no longer re-calibrates"
+)]
 pub struct Pipeline {
     pub info: ModelInfo,
     pub graph: Graph,
@@ -25,6 +37,7 @@ pub struct Pipeline {
     pub formats: Vec<Format>,
 }
 
+#[allow(deprecated)]
 impl Pipeline {
     /// Steps 1-2 of Algorithm 1: analyze/partition + sensitivity calibration.
     pub fn new(
@@ -61,103 +74,6 @@ impl Pipeline {
 
     /// Build the IP groups for one objective family.
     pub fn family(&self, objective: Objective, tm: &TimeMeasurements) -> Family {
-        let groups = match objective {
-            Objective::EmpiricalTime => metrics::empirical_groups(tm),
-            Objective::TheoreticalTime => {
-                metrics::theoretical_groups(&self.partition, &self.info.qlayers, &self.formats)
-            }
-            Objective::Memory => metrics::memory_groups(&self.info.qlayers, &self.formats),
-        };
-        // Baselines in the Memory family may only touch linear layers
-        // (paper §3.1); ET/TT families may quantize everything.
-        let eligible = match objective {
-            Objective::Memory => self
-                .info
-                .qlayers
-                .iter()
-                .map(|q| q.kind == LayerKind::Linear)
-                .collect(),
-            _ => vec![true; self.info.n_qlayers],
-        };
-        Family { objective, groups, eligible }
-    }
-}
-
-/// One strategy family: the IP objective + the baseline eligibility mask.
-pub struct Family {
-    pub objective: Objective,
-    pub groups: Vec<GroupChoices>,
-    pub eligible: Vec<bool>,
-}
-
-/// Strategy selector (paper §3.1 comparison set).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Strategy {
-    Ip,
-    Random,
-    Prefix,
-}
-
-impl Strategy {
-    pub fn name(self) -> &'static str {
-        match self {
-            Strategy::Ip => "IP",
-            Strategy::Random => "Random",
-            Strategy::Prefix => "Prefix",
-        }
-    }
-}
-
-/// Produce the MP configuration a strategy chooses at threshold tau.
-pub fn select_config(
-    family: &Family,
-    strategy: Strategy,
-    calibration: &Calibration,
-    tau: f64,
-    seed: u64,
-) -> Result<MpConfig> {
-    Ok(match strategy {
-        Strategy::Ip => super::ip::optimize(&family.groups, calibration, tau)?.config,
-        Strategy::Random => {
-            let mut rng = Rng::new(0xA11CE ^ seed);
-            super::baselines::random_config(
-                calibration,
-                tau,
-                &family.eligible,
-                Format::Fp8E4m3,
-                &mut rng,
-            )
-        }
-        Strategy::Prefix => super::baselines::prefix_config(
-            calibration,
-            tau,
-            &family.eligible,
-            Format::Fp8E4m3,
-        ),
-    })
-}
-
-/// The paper's tau sweep (§3.2): {0, 0.1%, ..., 0.7%} plus all-FP8.
-pub fn paper_tau_grid() -> Vec<f64> {
-    (0..=7).map(|i| i as f64 * 0.001).collect()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn tau_grid_matches_paper() {
-        let g = paper_tau_grid();
-        assert_eq!(g.len(), 8);
-        assert_eq!(g[0], 0.0);
-        assert!((g[7] - 0.007).abs() < 1e-12);
-    }
-
-    #[test]
-    fn strategy_names() {
-        assert_eq!(Strategy::Ip.name(), "IP");
-        assert_eq!(Strategy::Random.name(), "Random");
-        assert_eq!(Strategy::Prefix.name(), "Prefix");
+        build_family(objective, &self.partition, &self.info.qlayers, &self.formats, tm)
     }
 }

@@ -1,0 +1,151 @@
+//! Strategy families and selection (paper §3.1 comparison set), shared by
+//! the staged planning API (`plan::Planner`) and the deprecated `Pipeline`.
+
+use crate::gaudisim::MpConfig;
+use crate::graph::partition::Partition;
+use crate::metrics::{self, GroupChoices, Objective};
+use crate::model::{LayerKind, QLayer};
+use crate::numerics::Format;
+use crate::sensitivity::Calibration;
+use crate::timing::TimeMeasurements;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// One strategy family: the IP objective + the baseline eligibility mask.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Family {
+    pub objective: Objective,
+    pub groups: Vec<GroupChoices>,
+    pub eligible: Vec<bool>,
+}
+
+/// Build the IP groups + baseline eligibility for one objective family.
+/// Baselines in the Memory family may only touch linear layers (paper §3.1);
+/// ET/TT families may quantize everything.
+pub fn build_family(
+    objective: Objective,
+    partition: &Partition,
+    qlayers: &[QLayer],
+    formats: &[Format],
+    tm: &TimeMeasurements,
+) -> Family {
+    let groups = match objective {
+        Objective::EmpiricalTime => metrics::empirical_groups(tm),
+        Objective::TheoreticalTime => metrics::theoretical_groups(partition, qlayers, formats),
+        Objective::Memory => metrics::memory_groups(qlayers, formats),
+    };
+    let eligible = match objective {
+        Objective::Memory => qlayers.iter().map(|q| q.kind == LayerKind::Linear).collect(),
+        _ => vec![true; qlayers.len()],
+    };
+    Family { objective, groups, eligible }
+}
+
+/// Strategy selector (paper §3.1 comparison set).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Ip,
+    Random,
+    Prefix,
+}
+
+impl Strategy {
+    /// Every strategy, in the paper's presentation order.
+    pub const ALL: [Strategy; 3] = [Strategy::Ip, Strategy::Random, Strategy::Prefix];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Ip => "IP",
+            Strategy::Random => "Random",
+            Strategy::Prefix => "Prefix",
+        }
+    }
+
+    /// Short machine-readable key (CLI flags, Plan serialization).
+    pub fn key(self) -> &'static str {
+        match self {
+            Strategy::Ip => "ip",
+            Strategy::Random => "random",
+            Strategy::Prefix => "prefix",
+        }
+    }
+
+    pub fn from_key(s: &str) -> Option<Strategy> {
+        Some(match s {
+            "ip" => Strategy::Ip,
+            "random" => Strategy::Random,
+            "prefix" => Strategy::Prefix,
+            _ => return None,
+        })
+    }
+}
+
+/// Produce the MP configuration a strategy chooses at threshold tau.
+pub fn select_config(
+    family: &Family,
+    strategy: Strategy,
+    calibration: &Calibration,
+    tau: f64,
+    seed: u64,
+) -> Result<MpConfig> {
+    Ok(match strategy {
+        Strategy::Ip => super::ip::optimize(&family.groups, calibration, tau)?.config,
+        Strategy::Random => {
+            let mut rng = Rng::new(0xA11CE ^ seed);
+            super::baselines::random_config(
+                calibration,
+                tau,
+                &family.eligible,
+                Format::Fp8E4m3,
+                &mut rng,
+            )
+        }
+        Strategy::Prefix => super::baselines::prefix_config(
+            calibration,
+            tau,
+            &family.eligible,
+            Format::Fp8E4m3,
+        ),
+    })
+}
+
+/// The paper's tau sweep (§3.2): {0, 0.1%, ..., 0.7%} plus all-FP8.
+pub fn paper_tau_grid() -> Vec<f64> {
+    (0..=7).map(|i| i as f64 * 0.001).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tau_grid_matches_paper() {
+        let g = paper_tau_grid();
+        assert_eq!(g.len(), 8);
+        assert_eq!(g[0], 0.0);
+        assert!((g[7] - 0.007).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strategy_names() {
+        assert_eq!(Strategy::Ip.name(), "IP");
+        assert_eq!(Strategy::Random.name(), "Random");
+        assert_eq!(Strategy::Prefix.name(), "Prefix");
+    }
+
+    #[test]
+    fn strategy_key_roundtrip() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::from_key(s.key()), Some(s));
+        }
+        assert_eq!(Strategy::from_key("nope"), None);
+    }
+
+    #[test]
+    fn objective_key_roundtrip() {
+        for o in Objective::ALL {
+            assert_eq!(Objective::from_key(o.key()), Some(o));
+        }
+        assert_eq!(Objective::from_key("x"), None);
+    }
+}

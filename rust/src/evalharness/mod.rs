@@ -11,8 +11,11 @@
 
 use crate::gaudisim::MpConfig;
 use crate::model::{ModelInfo, TaskMeta};
+use crate::plan::Plan;
 use crate::runtime::ModelRuntime;
+use crate::sensitivity::validate::draw_pscale;
 use crate::tensorbin;
+use crate::util::Rng;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::path::Path;
@@ -176,6 +179,23 @@ pub fn evaluate(
         ppl: (-mean_ll_per_tok).exp(),
         mean_ll: ll_sum / task.n_rows() as f64,
     })
+}
+
+/// Evaluate a [`Plan`]'s configuration on every task, drawing the paper's
+/// scale-perturbation vector deterministically from the plan's recorded
+/// seed — the staged-API entry point behind `ampq evaluate`.
+pub fn evaluate_plan(
+    mr: &ModelRuntime,
+    tasks: &[TaskData],
+    plan: &Plan,
+    sigma: f64,
+) -> Result<Vec<EvalResult>> {
+    let mut rng = Rng::new(plan.seed.wrapping_mul(0x9e37_79b9));
+    let ps = draw_pscale(plan.config.len(), sigma, &mut rng);
+    tasks
+        .iter()
+        .map(|task| evaluate(mr, task, &plan.config, &ps))
+        .collect()
 }
 
 /// Evaluate with caching across (config, seed) repeats — strategy sweeps

@@ -3,9 +3,11 @@
 //! MAC-based theoretical gain (scale+bias fitted), across all 2^5 configs,
 //! sorted by measured gain.  Demonstrates why per-group measurement is
 //! needed (the paper's core §2.3.1 motivation).
+//!
+//! Needs only the stage-1 artifact + the simulator — no PJRT.
 
 use super::FigureCtx;
-use crate::gaudisim::{MpConfig, Simulator};
+use crate::gaudisim::Simulator;
 use crate::metrics::tt_layer_gain;
 use crate::numerics::Format;
 use crate::report::{self, ascii};
@@ -13,22 +15,23 @@ use crate::timing::{measure_groups, measure_per_layer, SimTtft};
 use crate::util::{stats, Rng};
 use anyhow::{anyhow, Result};
 
-pub fn run(ctx: &FigureCtx, model: &str) -> Result<()> {
-    let pl = ctx.pipeline(model)?;
-    let formats = ctx.formats();
+pub fn run(ctx: &mut FigureCtx, model: &str) -> Result<()> {
+    let part = ctx.engine.partitioned(model)?;
+    let graph = ctx.engine.graph(model)?;
+    let formats = part.formats.clone();
 
     // The attention sub-graph = first group with 5 quantizable layers
     // (q, k, v, qk_matmul, av_matmul — paper Fig. 6's V1).
-    let gi = pl
+    let gi = part
         .partition
         .groups
         .iter()
         .position(|g| g.len() == 5)
         .ok_or_else(|| anyhow!("no 5-layer attention group found"))?;
 
-    let sim = Simulator::new(&pl.graph, ctx.params.hw.clone());
+    let sim = Simulator::new(&graph, ctx.params.hw.clone());
     let mut src = SimTtft { sim, rng: Rng::new(7), reps: ctx.params.reps };
-    let tm = measure_groups(&mut src, &pl.partition, &formats)?;
+    let tm = measure_groups(&mut src, &part.partition, &formats)?;
     let per_layer = measure_per_layer(&mut src, &formats)?;
 
     let group = &tm.groups[gi];
@@ -56,7 +59,7 @@ pub fn run(ctx: &FigureCtx, model: &str) -> Result<()> {
             let theo: f64 = qidxs
                 .iter()
                 .zip(cfg_fmts)
-                .map(|(&q, &f)| tt_layer_gain(&pl.info.qlayers[q], f))
+                .map(|(&q, &f)| tt_layer_gain(&part.qlayers[q], f))
                 .sum();
             (label, measured, summed, theo)
         })
@@ -122,6 +125,5 @@ pub fn run(ctx: &FigureCtx, model: &str) -> Result<()> {
     );
     print!("{summary}");
     report::save_text(&ctx.out.join(format!("fig1_{model}_summary.txt")), &summary)?;
-    let _ = MpConfig::all_bf16(1); // (keep import used under cfg variations)
     Ok(())
 }

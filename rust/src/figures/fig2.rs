@@ -1,25 +1,24 @@
 //! Figure 2: layer-wise quantization patterns across MP configurations
 //! (rows = tau values, columns = layers) for IP-ET, Prefix, and Random.
+//!
+//! Pure planner queries — no PJRT, no re-measurement.
 
-use super::sweep::measure;
 use super::FigureCtx;
-use crate::coordinator::{select_config, Strategy};
+use crate::coordinator::Strategy;
 use crate::metrics::Objective;
 use crate::report::{self, ascii};
 use anyhow::Result;
 
-pub fn run(ctx: &FigureCtx, model: &str) -> Result<()> {
-    let pl = ctx.pipeline(model)?;
-    let tm = measure(&pl, ctx.params.reps)?;
-    let family = pl.family(Objective::EmpiricalTime, &tm);
+pub fn run(ctx: &mut FigureCtx, model: &str) -> Result<()> {
+    let planner = ctx.engine.planner(model)?;
 
     let mut sections = String::new();
     let mut csv_rows: Vec<Vec<String>> = Vec::new();
     for strategy in [Strategy::Ip, Strategy::Prefix, Strategy::Random] {
         let mut rows: Vec<(String, String)> = Vec::new();
         for &tau in &ctx.params.taus {
-            let cfg = select_config(&family, strategy, &pl.calibration, tau, 0)?;
-            let bits = cfg.bits_label();
+            let plan = planner.plan(Objective::EmpiricalTime, strategy, tau, 0)?;
+            let bits = plan.config.bits_label();
             csv_rows.push(vec![
                 strategy.name().to_string(),
                 format!("{tau}"),

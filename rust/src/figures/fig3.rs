@@ -2,37 +2,45 @@
 //! tau sweep plus all-FP8:
 //!   3a: theoretical (additive) loss MSE vs measured E[(ghat - g)^2];
 //!   3b: theoretical (group-additive) TTFT reduction vs direct measurement.
+//!
+//! Plans come from the cached artifacts; only the measured-loss validation
+//! itself needs the compiled forward (PJRT).
 
-use super::sweep::measure;
 use super::FigureCtx;
-use crate::coordinator::{select_config, Strategy};
+use crate::coordinator::Strategy;
 use crate::gaudisim::{MpConfig, Simulator};
 use crate::metrics::Objective;
 use crate::numerics::Format;
 use crate::report::{self, ascii};
 use crate::sensitivity::validate::measured_loss_mse;
 use crate::util::{stats, Rng};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-pub fn run(ctx: &FigureCtx, model: &str) -> Result<()> {
-    let pl = ctx.pipeline(model)?;
-    let tm = measure(&pl, ctx.params.reps)?;
-    let family = pl.family(Objective::EmpiricalTime, &tm);
-    let calib_tokens = pl.info.load_calib(&ctx.manifest.root)?;
-    let sim = Simulator::new(&pl.graph, ctx.params.hw.clone());
-    let base_ttft = sim.makespan(&MpConfig::all_bf16(pl.info.n_qlayers));
+pub fn run(ctx: &mut FigureCtx, model: &str) -> Result<()> {
+    let planner = ctx.engine.planner(model)?;
+    let graph = ctx.engine.graph(model)?;
+    let info = ctx.engine.info(model)?;
+    let root = ctx
+        .engine
+        .artifacts_root()
+        .ok_or_else(|| anyhow!("fig3 needs an artifacts root (calibration tokens)"))?
+        .to_path_buf();
+    let calib_tokens = info.load_calib(&root)?;
+    let sim = Simulator::new(&graph, ctx.params.hw.clone());
+    let nq = planner.n_qlayers();
+    let base_ttft = sim.makespan(&MpConfig::all_bf16(nq));
+    let tm = planner.measurements().clone();
+    let calibration = planner.calibration().clone();
 
     // Configurations: IP-ET at each tau, plus all-FP8 (paper protocol).
     let mut configs: Vec<(String, MpConfig)> = Vec::new();
     for &tau in &ctx.params.taus {
-        let cfg = select_config(&family, Strategy::Ip, &pl.calibration, tau, 0)?;
-        configs.push((format!("{tau}"), cfg));
+        let plan = planner.plan(Objective::EmpiricalTime, Strategy::Ip, tau, 0)?;
+        configs.push((format!("{tau}"), plan.config));
     }
-    configs.push((
-        "all-fp8".into(),
-        MpConfig::uniform(pl.info.n_qlayers, Format::Fp8E4m3),
-    ));
+    configs.push(("all-fp8".into(), MpConfig::uniform(nq, Format::Fp8E4m3)));
 
+    let mr = ctx.engine.runtime(model)?;
     let mut rng = Rng::new(33);
     let mut rows: Vec<Vec<String>> = Vec::new();
     let mut a_pred = Vec::new();
@@ -40,9 +48,9 @@ pub fn run(ctx: &FigureCtx, model: &str) -> Result<()> {
     let mut b_pred = Vec::new();
     let mut b_meas = Vec::new();
     for (i, (tag, cfg)) in configs.iter().enumerate() {
-        let d_pred = pl.calibration.loss_mse(cfg);
+        let d_pred = calibration.loss_mse(cfg);
         let d_meas = measured_loss_mse(
-            &pl.mr,
+            mr,
             &calib_tokens,
             cfg,
             3,

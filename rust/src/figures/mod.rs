@@ -2,6 +2,11 @@
 //! (DESIGN.md §5 experiment index).  Each figure lands in results/ as a CSV
 //! plus an ASCII rendering.
 //!
+//! Figures run against the staged planning API: a shared [`plan::Engine`]
+//! materializes each model's stage artifacts once, and every figure queries
+//! the resulting `Planner` — so regenerating all figures pays one
+//! calibration and one time-measurement pass per model.
+//!
 //! The accuracy experiments share one `run_sweep` product per
 //! (model, objective family): strategy x tau x seed -> configuration ->
 //! {predicted loss MSE, simulated TTFT, per-task accuracy/ppl}, with
@@ -13,12 +18,11 @@ pub mod fig3;
 pub mod sweep;
 pub mod table1;
 
-use crate::coordinator::Pipeline;
 use crate::gaudisim::HwModel;
-use crate::model::Manifest;
 use crate::numerics::{Format, PAPER_FORMATS};
+use crate::plan::engine::DEFAULT_MEASURE_SEED;
+use crate::plan::Engine;
 use crate::runtime::FwdMode;
-use anyhow::Result;
 use std::path::PathBuf;
 
 /// Experiment-scale parameters (paper defaults; benches shrink them).
@@ -58,30 +62,24 @@ impl ExpParams {
     }
 }
 
-/// Shared context for figure generation.
+/// Shared context for figure generation: the artifact engine + scales.
 pub struct FigureCtx {
-    pub manifest: Manifest,
+    pub engine: Engine,
     pub params: ExpParams,
     pub out: PathBuf,
 }
 
 impl FigureCtx {
-    pub fn new(manifest: Manifest, params: ExpParams, out: PathBuf) -> Self {
+    pub fn new(engine: Engine, params: ExpParams, out: PathBuf) -> Self {
         std::fs::create_dir_all(&out).ok();
-        FigureCtx { manifest, params, out }
+        let engine = engine
+            .with_hw(params.hw.clone())
+            .with_fwd_mode(params.fwd_mode)
+            .with_measure_protocol(DEFAULT_MEASURE_SEED, params.reps);
+        FigureCtx { engine, params, out }
     }
 
     pub fn formats(&self) -> Vec<Format> {
         PAPER_FORMATS.to_vec()
-    }
-
-    pub fn pipeline(&self, model: &str) -> Result<Pipeline> {
-        Pipeline::new(
-            &self.manifest,
-            model,
-            self.params.fwd_mode,
-            self.params.hw.clone(),
-            self.formats(),
-        )
     }
 }

@@ -1,14 +1,16 @@
 //! The shared strategy x tau x seed sweep behind Figs. 4, 5, 7, 8, 9 and
-//! Table 1: select a configuration per (strategy, tau, seed), then attach
+//! Table 1: query the `Planner` per (strategy, tau, seed), then attach
 //! predicted loss MSE, simulated TTFT, theoretical/memory gains, and
 //! per-task accuracy/perplexity.
 
-use crate::coordinator::{select_config, Family, Pipeline, Strategy};
+use crate::coordinator::Strategy;
 use crate::evalharness::{CachedEvaluator, EvalResult, TaskData};
 use crate::gaudisim::{MpConfig, Simulator};
-use crate::metrics::{mem_layer_gain, tt_layer_gain};
+use crate::graph::Graph;
+use crate::metrics::{mem_layer_gain, tt_layer_gain, Objective};
+use crate::model::QLayer;
+use crate::plan::Planner;
 use crate::sensitivity::validate::draw_pscale;
-use crate::timing::TimeMeasurements;
 use crate::util::Rng;
 use anyhow::Result;
 
@@ -47,20 +49,28 @@ pub struct Sweep {
     pub task_names: Vec<String>,
 }
 
+/// Everything a sweep needs for one model, borrowed from the engine's
+/// artifacts once (the planner answers every query without recomputation).
+pub struct SweepInputs<'a> {
+    pub planner: &'a Planner,
+    pub qlayers: &'a [QLayer],
+    pub graph: &'a Graph,
+    pub hw: crate::gaudisim::HwModel,
+    pub tasks: &'a [TaskData],
+}
+
 /// Full sweep for one strategy family.
-#[allow(clippy::too_many_arguments)]
 pub fn run_sweep(
-    pl: &Pipeline,
-    family: &Family,
-    tasks: &[TaskData],
+    inp: &SweepInputs,
+    objective: Objective,
     taus: &[f64],
     n_seeds: u64,
     sigma: f64,
     strategies: &[Strategy],
     eval: &mut CachedEvaluator,
 ) -> Result<Sweep> {
-    let sim = Simulator::new(&pl.graph, pl.hw.clone());
-    let nq = pl.info.n_qlayers;
+    let sim = Simulator::new(inp.graph, inp.hw.clone());
+    let nq = inp.planner.n_qlayers();
 
     let bf16 = MpConfig::all_bf16(nq);
     let ones = vec![1.0f32; nq];
@@ -77,20 +87,20 @@ pub fn run_sweep(
             for seed in 0..n_seeds {
                 // Strategy selection: IP/Prefix are tau-deterministic; Random
                 // re-draws per seed (paper Fig. 2 scattered patterns).
-                let config = select_config(family, strategy, &pl.calibration, tau, seed)?;
+                let plan = inp.planner.plan(objective, strategy, tau, seed)?;
+                let config = plan.config;
                 let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9));
                 let ps = draw_pscale(nq, sigma, &mut rng);
                 let results = eval_tasks(eval, &config, seed, &ps)?;
-                let predicted_mse = pl.calibration.loss_mse(&config);
                 points.push(SweepPoint {
                     strategy,
                     tau,
                     seed,
                     ttft_us: sim.makespan(&config),
-                    tt_gain: total_tt_gain(pl, &config),
-                    mem_gain: total_mem_gain(pl, &config),
-                    nrmse: (predicted_mse / pl.calibration.eg2).sqrt(),
-                    predicted_mse,
+                    tt_gain: total_tt_gain(inp.qlayers, &config),
+                    mem_gain: total_mem_gain(inp.qlayers, &config),
+                    nrmse: plan.nrmse,
+                    predicted_mse: plan.predicted_mse,
                     task_acc: results.iter().map(|r| r.acc).collect(),
                     task_ppl: results.iter().map(|r| r.ppl).collect(),
                     config,
@@ -101,7 +111,7 @@ pub fn run_sweep(
     Ok(Sweep {
         points,
         baseline,
-        task_names: tasks.iter().map(|t| t.meta.name.clone()).collect(),
+        task_names: inp.tasks.iter().map(|t| t.meta.name.clone()).collect(),
     })
 }
 
@@ -114,27 +124,20 @@ fn eval_tasks(
     eval.eval_all(cfg, seed, pscale)
 }
 
-pub fn total_tt_gain(pl: &Pipeline, cfg: &MpConfig) -> f64 {
-    pl.info
-        .qlayers
+pub fn total_tt_gain(qlayers: &[QLayer], cfg: &MpConfig) -> f64 {
+    qlayers
         .iter()
         .enumerate()
         .map(|(l, q)| tt_layer_gain(q, cfg.get(l)))
         .sum()
 }
 
-pub fn total_mem_gain(pl: &Pipeline, cfg: &MpConfig) -> f64 {
-    pl.info
-        .qlayers
+pub fn total_mem_gain(qlayers: &[QLayer], cfg: &MpConfig) -> f64 {
+    qlayers
         .iter()
         .enumerate()
         .map(|(l, q)| mem_layer_gain(q, cfg.get(l)))
         .sum()
-}
-
-/// Measure per-group time gains once and reuse across figures.
-pub fn measure(pl: &Pipeline, reps: usize) -> Result<TimeMeasurements> {
-    pl.measure_time(0x71_4e_33, reps)
 }
 
 /// Aggregate sweep points into per-(strategy, tau) mean +- std of the

@@ -1,34 +1,48 @@
 //! Table 1 + the accuracy-vs-performance figures (4, 5, 7, 8, 9).
 //!
 //! All of these consume the same strategy x tau x seed sweeps (one per
-//! objective family), so they are generated together per model, and Table 1
-//! is then combined across models.
+//! objective family) against one Planner, so they are generated together
+//! per model, and Table 1 is then combined across models.
 
-use super::sweep::{aggregate, measure, run_sweep, Sweep};
+use super::sweep::{aggregate, run_sweep, Sweep, SweepInputs};
 use super::FigureCtx;
 use crate::coordinator::Strategy;
 use crate::evalharness::{load_all_tasks, CachedEvaluator};
 use crate::metrics::Objective;
 use crate::numerics::Format;
 use crate::report::{self, ascii};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use std::path::Path;
 
 const STRATEGIES: [Strategy; 3] = [Strategy::Random, Strategy::Prefix, Strategy::Ip];
 
-pub fn run(ctx: &FigureCtx, model: &str) -> Result<()> {
-    let pl = ctx.pipeline(model)?;
-    let tasks = load_all_tasks(&ctx.manifest.root, &pl.info)?;
-    let tm = measure(&pl, ctx.params.reps)?;
-    let mut eval = CachedEvaluator::new(&pl.mr, &tasks);
+pub fn run(ctx: &mut FigureCtx, model: &str) -> Result<()> {
+    let planner = ctx.engine.planner(model)?;
+    let info = ctx.engine.info(model)?;
+    let graph = ctx.engine.graph(model)?;
+    let root = ctx
+        .engine
+        .artifacts_root()
+        .ok_or_else(|| anyhow!("table1 needs an artifacts root (task datasets)"))?
+        .to_path_buf();
+    let tasks = load_all_tasks(&root, &info)?;
+    let hw = ctx.params.hw.clone();
+    let mr = ctx.engine.runtime(model)?;
+    let mut eval = CachedEvaluator::new(mr, &tasks);
+    let inputs = SweepInputs {
+        planner: &planner,
+        qlayers: &info.qlayers,
+        graph: &graph,
+        hw,
+        tasks: &tasks,
+    };
 
     let mut table_rows: Vec<Vec<String>> = Vec::new();
 
-    for objective in [Objective::EmpiricalTime, Objective::TheoreticalTime, Objective::Memory] {
-        let family = pl.family(objective, &tm);
+    for objective in Objective::ALL {
         let sweep = run_sweep(
-            &pl,
-            &family,
-            &tasks,
+            &inputs,
+            objective,
             &ctx.params.taus,
             ctx.params.n_seeds,
             ctx.params.sigma,
@@ -36,7 +50,7 @@ pub fn run(ctx: &FigureCtx, model: &str) -> Result<()> {
             &mut eval,
         )?;
 
-        emit_family_figures(ctx, model, objective, &sweep)?;
+        emit_family_figures(&ctx.out, model, objective, &sweep)?;
         table_rows.extend(table1_rows(model, objective, &sweep));
         println!(
             "table1[{model}/{}]: {} sweep points, {} unique forward configs",
@@ -112,7 +126,7 @@ fn table1_rows(model: &str, objective: Objective, sweep: &Sweep) -> Vec<Vec<Stri
 }
 
 fn emit_family_figures(
-    ctx: &FigureCtx,
+    out: &Path,
     model: &str,
     objective: Objective,
     sweep: &Sweep,
@@ -136,7 +150,7 @@ fn emit_family_figures(
         ]);
     }
     report::write_csv(
-        &ctx.out.join(format!("sweep_{model}_{}.csv", objective.name())),
+        &out.join(format!("sweep_{model}_{}.csv", objective.name())),
         &["strategy", "tau", "seed", "config", "pred_mse", "nrmse", "ttft_us", "tt_gain", "mem_gain", "task_acc"],
         &rows,
     )?;
@@ -155,7 +169,7 @@ fn emit_family_figures(
                 })
                 .collect();
             report::save_text(
-                &ctx.out.join(format!("fig4_{model}.txt")),
+                &out.join(format!("fig4_{model}.txt")),
                 &ascii::plot(
                     &format!("Fig 4 [{model}]: loss MSE vs empirical time gain"),
                     "time gain [us]",
@@ -172,7 +186,7 @@ fn emit_family_figures(
                 })
                 .collect();
             report::save_text(
-                &ctx.out.join(format!("fig5_{model}.txt")),
+                &out.join(format!("fig5_{model}.txt")),
                 &ascii::plot(
                     &format!("Fig 5 [{model}]: avg accuracy diff [%] vs TTFT [us]"),
                     "TTFT [us]",
@@ -217,7 +231,7 @@ fn emit_family_figures(
                     fig7.push('\n');
                 }
             }
-            report::save_text(&ctx.out.join(format!("fig7_{model}.txt")), &fig7)?;
+            report::save_text(&out.join(format!("fig7_{model}.txt")), &fig7)?;
         }
         Objective::TheoreticalTime => {
             // Fig 8: accuracy diff vs theoretical (MAC) time.
@@ -237,7 +251,7 @@ fn emit_family_figures(
                 })
                 .collect();
             report::save_text(
-                &ctx.out.join(format!("fig8_{model}.txt")),
+                &out.join(format!("fig8_{model}.txt")),
                 &ascii::plot(
                     &format!("Fig 8 [{model}]: accuracy diff [%] vs MAC-time (lower = more quantized)"),
                     "theoretical time [BF16-MAC units, relative]",
@@ -260,7 +274,7 @@ fn emit_family_figures(
                 })
                 .collect();
             report::save_text(
-                &ctx.out.join(format!("fig9_{model}.txt")),
+                &out.join(format!("fig9_{model}.txt")),
                 &ascii::plot(
                     &format!("Fig 9 [{model}]: accuracy diff [%] vs total weight memory [bytes]"),
                     "total memory [bytes]",

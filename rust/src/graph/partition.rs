@@ -10,7 +10,7 @@ use anyhow::{bail, Result};
 use std::collections::BTreeSet;
 
 /// One sequential sub-graph V_j.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SubGraph {
     /// Every node swept into this SESE region (graph node indices, sorted).
     pub all_nodes: Vec<usize>,
@@ -36,7 +36,7 @@ impl SubGraph {
 }
 
 /// Partition of the whole model: ordered groups {V_j}.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Partition {
     pub groups: Vec<SubGraph>,
 }

@@ -12,6 +12,23 @@
 //! * L2/L1 (python/compile, build-time only): the JAX transformer with
 //!   runtime-controlled fake-quant Pallas kernels, lowered once to HLO text
 //!   in `artifacts/` and executed here via PJRT (`runtime`).
+//!
+//! The public entry point is the **staged planning API** in [`plan`]:
+//! an [`plan::Engine`] materializes cacheable stage artifacts
+//! (`Partitioned -> Calibrated -> Measured`) once per model, and a
+//! [`plan::Planner`] answers `plan(objective, strategy, tau)` queries in
+//! microseconds, returning serializable [`plan::Plan`] values.  The old
+//! monolithic `coordinator::Pipeline` remains as a deprecated shim for one
+//! release.
+
+#![allow(
+    clippy::len_without_is_empty,
+    clippy::inherent_to_string,
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::manual_range_contains,
+    clippy::type_complexity
+)]
 
 pub mod coordinator;
 pub mod evalharness;
@@ -21,6 +38,7 @@ pub mod graph;
 pub mod metrics;
 pub mod model;
 pub mod numerics;
+pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod sensitivity;

@@ -1,28 +1,37 @@
-//! ampq CLI — the L3 coordinator entrypoint.
+//! ampq CLI — the L3 coordinator entrypoint, built on the staged planning
+//! API (`plan::Engine` -> stage artifacts -> `plan::Planner` -> `Plan`).
 //!
-//! Subcommands (see README):
-//!   partition  — print the Algorithm-2 sub-graph partition (paper Fig. 6)
-//!   calibrate  — run sensitivity calibration, print s_l and E[g^2]
-//!   measure    — per-group empirical time-gain tables (paper §2.3.1)
-//!   optimize   — solve the IP at one tau, print the chosen configuration
-//!   evaluate   — evaluate a strategy's configuration on the tasks
-//!   pipeline   — Algorithm 1 end to end with a tau sweep summary
+//! Subcommands (see README for the full table):
+//!   partition  — stage-1 artifact: the Algorithm-2 sub-graph partition
+//!   calibrate  — stage-2 artifact: sensitivities s_l and E[g^2]
+//!   measure    — stage-3 artifact: per-group time-gain tables (§2.3.1)
+//!   optimize   — one planning query -> Plan (config + MSE + gain)
+//!   evaluate   — evaluate a Plan's configuration on the tasks (PJRT)
+//!   pipeline   — Algorithm 1 end to end: stages 1-3 + IP tau sweep
+//!   sweep      — batch-solve tau x objective x strategy from cached
+//!                artifacts (one calibration + one measurement, total)
 //!   figures    — regenerate paper figures/tables into results/
 //!   ttft       — wall-clock TTFT of the real compiled forward (PJRT)
+//!
+//! Stage artifacts cache under <artifacts>/cache/<model>/ (disable with
+//! --no-cache).  `--json` prints machine-readable lines in the Plan/artifact
+//! serde format.  `--demo` registers a synthetic model ("demo") so
+//! everything except evaluate/ttft runs without AOT artifacts.
 
-use ampq::coordinator::{paper_tau_grid, select_config, Pipeline, Strategy};
-use ampq::evalharness::{evaluate, load_all_tasks};
+use ampq::coordinator::{paper_tau_grid, Strategy};
+use ampq::evalharness::{evaluate, evaluate_plan, load_all_tasks};
 use ampq::figures::{fig1, fig2, fig3, table1, ExpParams, FigureCtx};
-use ampq::gaudisim::{HwModel, MpConfig};
+use ampq::gaudisim::MpConfig;
 use ampq::metrics::Objective;
-use ampq::model::Manifest;
-use ampq::numerics::{Format, PAPER_FORMATS};
+use ampq::numerics::Format;
+use ampq::plan::demo::demo_model;
+use ampq::plan::Engine;
 use ampq::runtime::FwdMode;
-use ampq::sensitivity::validate::draw_pscale;
 use ampq::timing::{measure_groups, TtftSource, WallTtft};
-use ampq::util::{Args, Rng};
-use anyhow::{bail, Result};
+use ampq::util::Args;
+use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
+use std::time::Instant;
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -32,97 +41,166 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: ampq <partition|calibrate|measure|optimize|evaluate|pipeline|figures|ttft> \
-  [--model tiny-s] [--artifacts artifacts] [--out results] [--tau 0.004] \
-  [--objective et|tt|m] [--strategy ip|random|prefix] [--seeds N] [--quick] [--fwd pallas|ref]";
+const USAGE: &str = "usage: ampq <command> [options]
+
+commands:
+  partition   stage-1 artifact: Algorithm-2 sub-graph partition (Fig. 6)
+  calibrate   stage-2 artifact: sensitivity calibration s_l, E[g^2]
+  measure     stage-3 artifact: per-group empirical time-gain tables
+  optimize    solve one (objective, strategy, tau) query -> Plan
+  evaluate    evaluate a Plan's configuration on the eval tasks (needs PJRT)
+  pipeline    Algorithm 1 end to end: stages 1-3 + IP tau sweep
+  sweep       batch-solve the tau x objective x strategy grid from cache
+  figures     regenerate paper figures/tables into results/
+  ttft        wall-clock TTFT of the real compiled forward (needs PJRT)
+
+options:
+  --model NAME          model from artifacts/manifest.json [tiny-s]
+  --artifacts DIR       artifacts root [artifacts]
+  --no-cache            disable the stage cache under <artifacts>/cache/
+  --out DIR             figures output dir [results]
+  --tau X               loss-NRMSE threshold [0.004]
+  --taus a,b,c          explicit tau grid [paper grid 0..0.007]
+  --objective et|tt|m   IP objective family [et; sweep: all]
+  --strategy ip|random|prefix
+                        selection strategy [ip; sweep: all]
+  --seed N --seeds N    strategy RNG seed / number of seeds
+  --measure-seed N      seed of the simulator measurement pass
+                        [0x714e33; `measure` also honors --seed]
+  --reps N              TTFT iterations per measurement [5]
+  --sigma X             scale-perturbation sigma [0.02]
+  --fwd pallas|ref      forward artifact [ref; ttft: pallas]
+  --json                machine-readable JSON lines (Plan serde format)
+  --demo                register a synthetic model 'demo' (no artifacts
+                        or PJRT needed; sets the default --model)
+  --blocks N            demo model depth [2]";
 
 fn run(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &["quick", "all", "help"])?;
+    let args = Args::parse(raw, &["quick", "all", "help", "json", "demo", "no-cache"])?;
     if args.flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
     }
     let cmd = args.positional[0].as_str();
     let root = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let manifest = Manifest::load(&root)?;
-    let model = args.get_or("model", "tiny-s").to_string();
-    let fwd_mode = match args.get_or("fwd", "ref") {
+    let fwd_default = if cmd == "ttft" { "pallas" } else { "ref" };
+    let fwd_mode = match args.get_or("fwd", fwd_default) {
         "pallas" => FwdMode::Pallas,
         "ref" => FwdMode::Ref,
         m => bail!("unknown --fwd '{m}'"),
     };
+    let json = args.flag("json");
+    let demo = args.flag("demo");
+
+    // Measurement protocol: --measure-seed everywhere; the `measure`
+    // subcommand also honors plain --seed (pre-0.2 behavior).  --seed on
+    // other commands seeds strategies, not the measurement pass.
+    let default_seed = ampq::plan::engine::DEFAULT_MEASURE_SEED;
+    let measure_seed = if args.get("measure-seed").is_some() {
+        args.u64_or("measure-seed", default_seed)?
+    } else if cmd == "measure" {
+        args.u64_or("seed", default_seed)?
+    } else {
+        default_seed
+    };
+
+    let mut engine = Engine::new()
+        .with_artifacts_root(root.clone())
+        .with_fwd_mode(fwd_mode)
+        .with_measure_protocol(measure_seed, args.usize_or("reps", 5)?);
+    if !args.flag("no-cache") {
+        engine = engine.with_cache_dir(root.join("cache"));
+    }
+    if demo {
+        let blocks = args.usize_or("blocks", 2)?;
+        let (graph, qlayers, calibration) = demo_model(blocks, args.u64_or("seed", 0)?);
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+    }
+    let model = args
+        .get_or("model", if demo { "demo" } else { "tiny-s" })
+        .to_string();
 
     match cmd {
-        "partition" => cmd_partition(&manifest, &model),
-        "calibrate" => cmd_calibrate(&manifest, &model, fwd_mode),
-        "measure" => cmd_measure(&manifest, &model, fwd_mode, &args),
-        "optimize" => cmd_optimize(&manifest, &model, fwd_mode, &args),
-        "evaluate" => cmd_evaluate(&manifest, &model, fwd_mode, &args),
-        "pipeline" => cmd_pipeline(&manifest, &model, fwd_mode, &args),
-        "figures" => cmd_figures(manifest, fwd_mode, &args),
-        "ttft" => cmd_ttft(&manifest, &model, &args),
+        "partition" => cmd_partition(&mut engine, &model, json),
+        "calibrate" => cmd_calibrate(&mut engine, &model, json),
+        "measure" => cmd_measure(&mut engine, &model, json),
+        "optimize" => cmd_optimize(&mut engine, &model, &args, json),
+        "evaluate" => cmd_evaluate(&mut engine, &model, &args),
+        "pipeline" => cmd_pipeline(&mut engine, &model, &args, json),
+        "sweep" => cmd_sweep(&mut engine, &model, &args, json),
+        "figures" => cmd_figures(engine, &args, fwd_mode),
+        "ttft" => cmd_ttft(&mut engine, &model, &args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
 }
 
-fn load_pipeline(manifest: &Manifest, model: &str, fwd: FwdMode) -> Result<Pipeline> {
-    Pipeline::new(manifest, model, fwd, HwModel::default(), PAPER_FORMATS.to_vec())
-}
-
 fn parse_objective(args: &Args) -> Result<Objective> {
-    Ok(match args.get_or("objective", "et") {
-        "et" => Objective::EmpiricalTime,
-        "tt" => Objective::TheoreticalTime,
-        "m" => Objective::Memory,
-        o => bail!("unknown --objective '{o}'"),
-    })
+    let key = args.get_or("objective", "et");
+    Objective::from_key(key).ok_or_else(|| anyhow!("unknown --objective '{key}'"))
 }
 
 fn parse_strategy(args: &Args) -> Result<Strategy> {
-    Ok(match args.get_or("strategy", "ip") {
-        "ip" => Strategy::Ip,
-        "random" => Strategy::Random,
-        "prefix" => Strategy::Prefix,
-        s => bail!("unknown --strategy '{s}'"),
-    })
+    let key = args.get_or("strategy", "ip");
+    Strategy::from_key(key).ok_or_else(|| anyhow!("unknown --strategy '{key}'"))
 }
 
-fn cmd_partition(manifest: &Manifest, model: &str) -> Result<()> {
-    let info = manifest.model(model)?;
-    let graph = info.load_graph(&manifest.root)?;
-    let part = ampq::graph::partition::partition(&graph)?;
+fn parse_taus(args: &Args) -> Result<Vec<f64>> {
+    match args.get("taus") {
+        None => Ok(paper_tau_grid()),
+        Some(s) => s
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<f64>()
+                    .map_err(|e| anyhow!("--taus '{t}': {e}"))
+            })
+            .collect(),
+    }
+}
+
+fn cmd_partition(engine: &mut Engine, model: &str, json: bool) -> Result<()> {
+    let art = engine.partitioned(model)?;
+    if json {
+        println!("{}", art.to_json().to_string());
+        return Ok(());
+    }
+    let nf = art.formats.len();
     println!(
-        "model {model}: {} nodes, {} quantizable layers -> {} sequential sub-graphs",
-        graph.nodes.len(),
-        graph.qlayers.len(),
-        part.groups.len()
+        "model {model}: {} quantizable layers -> {} sequential sub-graphs",
+        art.n_qlayers(),
+        art.partition.groups.len()
     );
-    for (j, g) in part.groups.iter().enumerate() {
-        let names: Vec<&str> = g.qidxs.iter().map(|&q| graph.qlayers[q].as_str()).collect();
+    for (j, g) in art.partition.groups.iter().enumerate() {
+        let names: Vec<&str> = g.qidxs.iter().map(|&q| art.qlayers[q].name.as_str()).collect();
         println!(
             "  V{j:<2} ({} layers, {} configs): {}",
             g.len(),
-            g.n_configs(PAPER_FORMATS.len()),
+            g.n_configs(nf),
             names.join(", ")
         );
     }
     println!(
         "total per-group measurements: {} (vs {:.2e} for exhaustive whole-model search)",
-        part.n_measurements(PAPER_FORMATS.len()),
-        (PAPER_FORMATS.len() as f64).powi(graph.qlayers.len() as i32)
+        art.partition.n_measurements(nf),
+        (nf as f64).powi(art.n_qlayers() as i32)
     );
     Ok(())
 }
 
-fn cmd_calibrate(manifest: &Manifest, model: &str, fwd: FwdMode) -> Result<()> {
-    let pl = load_pipeline(manifest, model, fwd)?;
-    let c = &pl.calibration;
+fn cmd_calibrate(engine: &mut Engine, model: &str, json: bool) -> Result<()> {
+    let part = engine.partitioned(model)?;
+    let art = engine.calibrated(model)?;
+    if json {
+        println!("{}", art.to_json().to_string());
+        return Ok(());
+    }
+    let c = &art.calibration;
     println!(
         "model {model}: R={} samples, E[g]={:.4}, E[g^2]={:.4}",
         c.n_samples, c.g_mean, c.eg2
     );
     println!("{:<22} {:>14} {:>14}", "layer", "s_l", "d_l(fp8)");
-    for (l, q) in pl.info.qlayers.iter().enumerate() {
+    for (l, q) in part.qlayers.iter().enumerate() {
         println!(
             "{:<22} {:>14.6} {:>14.3e}",
             q.name,
@@ -133,14 +211,21 @@ fn cmd_calibrate(manifest: &Manifest, model: &str, fwd: FwdMode) -> Result<()> {
     Ok(())
 }
 
-fn cmd_measure(manifest: &Manifest, model: &str, fwd: FwdMode, args: &Args) -> Result<()> {
-    let pl = load_pipeline(manifest, model, fwd)?;
-    let reps = args.usize_or("reps", 5)?;
-    let tm = pl.measure_time(args.u64_or("seed", 0)?, reps)?;
-    println!("model {model}: baseline TTFT {:.1} us (simulated Gaudi-2-like)", tm.base_ttft);
+fn cmd_measure(engine: &mut Engine, model: &str, json: bool) -> Result<()> {
+    let part = engine.partitioned(model)?;
+    let art = engine.measured(model)?;
+    if json {
+        println!("{}", art.to_json().to_string());
+        return Ok(());
+    }
+    let tm = &art.measurements;
+    println!(
+        "model {model}: baseline TTFT {:.1} us (simulated Gaudi-2-like, seed {}, {} reps)",
+        tm.base_ttft, art.seed, art.reps
+    );
     for g in &tm.groups {
         let names: Vec<&str> =
-            g.qidxs.iter().map(|&q| pl.info.qlayers[q].name.as_str()).collect();
+            g.qidxs.iter().map(|&q| part.qlayers[q].name.as_str()).collect();
         println!("group {} [{}]:", g.group, names.join(", "));
         for (cfg, gain) in g.configs.iter().zip(&g.gains) {
             let label: String =
@@ -151,51 +236,52 @@ fn cmd_measure(manifest: &Manifest, model: &str, fwd: FwdMode, args: &Args) -> R
     Ok(())
 }
 
-fn cmd_optimize(manifest: &Manifest, model: &str, fwd: FwdMode, args: &Args) -> Result<()> {
-    let pl = load_pipeline(manifest, model, fwd)?;
-    let tau = args.f64_or("tau", 0.004)?;
-    let objective = parse_objective(args)?;
-    let tm = pl.measure_time(0, args.usize_or("reps", 5)?)?;
-    let family = pl.family(objective, &tm);
-    let out = ampq::coordinator::optimize(&family.groups, &pl.calibration, tau)?;
-    println!(
-        "model {model} {} tau={tau}: feasible={} gain={:.3} predicted-mse={:.3e} budget={:.3e}",
-        objective.name(),
-        out.solution.feasible,
-        out.solution.gain,
-        out.predicted_mse,
-        out.budget
-    );
-    println!("config ({} of {} layers quantized):", out.config.n_quantized(), out.config.len());
-    for (l, q) in pl.info.qlayers.iter().enumerate() {
-        println!("  {:<22} {}", q.name, out.config.get(l).name());
-    }
-    Ok(())
-}
-
-fn cmd_evaluate(manifest: &Manifest, model: &str, fwd: FwdMode, args: &Args) -> Result<()> {
-    let pl = load_pipeline(manifest, model, fwd)?;
+fn cmd_optimize(engine: &mut Engine, model: &str, args: &Args, json: bool) -> Result<()> {
     let tau = args.f64_or("tau", 0.004)?;
     let objective = parse_objective(args)?;
     let strategy = parse_strategy(args)?;
     let seed = args.u64_or("seed", 0)?;
-    let tm = pl.measure_time(0, 5)?;
-    let family = pl.family(objective, &tm);
-    let cfg = select_config(&family, strategy, &pl.calibration, tau, seed)?;
-    let tasks = load_all_tasks(&manifest.root, &pl.info)?;
-    let mut rng = Rng::new(seed);
-    let ps = draw_pscale(pl.info.n_qlayers, args.f64_or("sigma", 0.02)?, &mut rng);
+    let part = engine.partitioned(model)?;
+    let planner = engine.planner(model)?;
+    let plan = planner.plan(objective, strategy, tau, seed)?;
+    if json {
+        println!("{}", plan.to_json().to_string());
+        return Ok(());
+    }
+    println!("{}", plan.summary());
+    println!("config ({} of {} layers quantized):", plan.config.n_quantized(), plan.config.len());
+    for (l, q) in part.qlayers.iter().enumerate() {
+        println!("  {:<22} {}", q.name, plan.config.get(l).name());
+    }
+    Ok(())
+}
+
+fn cmd_evaluate(engine: &mut Engine, model: &str, args: &Args) -> Result<()> {
+    let tau = args.f64_or("tau", 0.004)?;
+    let objective = parse_objective(args)?;
+    let strategy = parse_strategy(args)?;
+    let seed = args.u64_or("seed", 0)?;
+    let sigma = args.f64_or("sigma", 0.02)?;
+    let planner = engine.planner(model)?;
+    let plan = planner.plan(objective, strategy, tau, seed)?;
+    let info = engine.info(model)?;
+    let root = engine
+        .artifacts_root()
+        .ok_or_else(|| anyhow!("evaluate needs an artifacts root"))?
+        .to_path_buf();
+    let tasks = load_all_tasks(&root, &info)?;
+    let mr = engine.runtime(model)?;
     println!(
         "model {model} {} {} tau={tau} seed={seed}: config {}",
         objective.name(),
         strategy.name(),
-        cfg.bits_label()
+        plan.config.bits_label()
     );
-    let bf16 = MpConfig::all_bf16(pl.info.n_qlayers);
-    let ones = vec![1.0f32; pl.info.n_qlayers];
-    for task in &tasks {
-        let base = evaluate(&pl.mr, task, &bf16, &ones)?;
-        let r = evaluate(&pl.mr, task, &cfg, &ps)?;
+    let bf16 = MpConfig::all_bf16(info.n_qlayers);
+    let ones = vec![1.0f32; info.n_qlayers];
+    let results = evaluate_plan(mr, &tasks, &plan, sigma)?;
+    for (task, r) in tasks.iter().zip(&results) {
+        let base = evaluate(mr, task, &bf16, &ones)?;
         println!(
             "  {:<6} acc {:.4} (diff {:+.4}) ppl {:.4} (diff {:+.2}%)",
             task.meta.name,
@@ -208,47 +294,117 @@ fn cmd_evaluate(manifest: &Manifest, model: &str, fwd: FwdMode, args: &Args) -> 
     Ok(())
 }
 
-fn cmd_pipeline(manifest: &Manifest, model: &str, fwd: FwdMode, args: &Args) -> Result<()> {
-    let pl = load_pipeline(manifest, model, fwd)?;
+fn cmd_pipeline(engine: &mut Engine, model: &str, args: &Args, json: bool) -> Result<()> {
     let objective = parse_objective(args)?;
-    println!("== Algorithm 1 on {model} ({}) ==", objective.name());
-    println!(
-        "[1] partition: {} groups, {} measurements",
-        pl.partition.groups.len(),
-        pl.partition.n_measurements(PAPER_FORMATS.len())
-    );
-    println!(
-        "[2] calibration: R={} E[g]={:.4} E[g^2]={:.4}",
-        pl.calibration.n_samples, pl.calibration.g_mean, pl.calibration.eg2
-    );
-    let tm = pl.measure_time(0, args.usize_or("reps", 5)?)?;
-    println!("[3] time gains measured: baseline TTFT {:.1} us", tm.base_ttft);
-    let family = pl.family(objective, &tm);
-    println!("[4] IP sweep:");
-    println!(
-        "{:>8} {:>6} {:>12} {:>12} {:>12} {:>10}",
-        "tau", "nq", "gain", "pred-mse", "budget", "ttft[us]"
-    );
-    for tau in paper_tau_grid() {
-        let out = ampq::coordinator::optimize(&family.groups, &pl.calibration, tau)?;
-        let ttft = pl.simulated_ttft(&out.config, 1, 5);
+    let taus = parse_taus(args)?;
+    let part = engine.partitioned(model)?;
+    if !json {
+        println!("== Algorithm 1 on {model} ({}) ==", objective.name());
         println!(
-            "{:>8.4} {:>6} {:>12.3} {:>12.3e} {:>12.3e} {:>10.1}",
-            tau,
-            out.config.n_quantized(),
-            out.solution.gain,
-            out.predicted_mse,
-            out.budget,
-            ttft
+            "[1] partition: {} groups, {} measurements",
+            part.partition.groups.len(),
+            part.partition.n_measurements(part.formats.len())
+        );
+    }
+    let planner = engine.planner(model)?;
+    if !json {
+        let c = planner.calibration();
+        println!(
+            "[2] calibration: R={} E[g]={:.4} E[g^2]={:.4}",
+            c.n_samples, c.g_mean, c.eg2
+        );
+        println!(
+            "[3] time gains measured: baseline TTFT {:.1} us",
+            planner.measurements().base_ttft
+        );
+        println!("[4] IP sweep:");
+        println!(
+            "{:>8} {:>6} {:>12} {:>12} {:>12} {:>10}",
+            "tau", "nq", "gain", "pred-mse", "budget", "ttft[us]"
+        );
+    }
+    for &tau in &taus {
+        let plan = planner.plan(objective, Strategy::Ip, tau, 0)?;
+        if json {
+            println!("{}", plan.to_json().to_string());
+        } else {
+            println!(
+                "{:>8.4} {:>6} {:>12.3} {:>12.3e} {:>12.3e} {:>10.1}",
+                tau,
+                plan.config.n_quantized(),
+                plan.gain,
+                plan.predicted_mse,
+                plan.budget,
+                plan.predicted_ttft_us
+            );
+        }
+    }
+    if !json {
+        let c = engine.counters();
+        println!(
+            "(stage passes: {} partition, {} calibration, {} measurement; {} cache loads)",
+            c.partition_passes, c.calibration_passes, c.measurement_passes, c.cache_loads
         );
     }
     Ok(())
 }
 
-fn cmd_figures(manifest: Manifest, fwd: FwdMode, args: &Args) -> Result<()> {
+fn cmd_sweep(engine: &mut Engine, model: &str, args: &Args, json: bool) -> Result<()> {
+    let taus = parse_taus(args)?;
+    let objectives: Vec<Objective> = match args.get("objective") {
+        None => Objective::ALL.to_vec(),
+        Some(_) => vec![parse_objective(args)?],
+    };
+    let strategies: Vec<Strategy> = match args.get("strategy") {
+        None => Strategy::ALL.to_vec(),
+        Some(_) => vec![parse_strategy(args)?],
+    };
+    let seed = args.u64_or("seed", 0)?;
+
+    let t0 = Instant::now();
+    let planner = engine.planner(model)?;
+    let stage_time = t0.elapsed();
+    let t1 = Instant::now();
+    let plans = planner.sweep(&objectives, &strategies, &taus, seed)?;
+    let solve_time = t1.elapsed();
+
+    if json {
+        for p in &plans {
+            println!("{}", p.to_json().to_string());
+        }
+    } else {
+        println!(
+            "== sweep {model}: {} objectives x {} strategies x {} taus = {} plans ==",
+            objectives.len(),
+            strategies.len(),
+            taus.len(),
+            plans.len()
+        );
+        for p in &plans {
+            println!("{}", p.summary());
+        }
+    }
+    let c = engine.counters();
+    let per_plan_us = solve_time.as_secs_f64() * 1e6 / plans.len().max(1) as f64;
+    eprintln!(
+        "sweep {model}: artifacts {:.1} ms ({} partition, {} calibration, {} measurement \
+         passes, {} cache loads); {} plans solved in {:.1} ms ({:.1} us/plan)",
+        stage_time.as_secs_f64() * 1e3,
+        c.partition_passes,
+        c.calibration_passes,
+        c.measurement_passes,
+        c.cache_loads,
+        plans.len(),
+        solve_time.as_secs_f64() * 1e3,
+        per_plan_us
+    );
+    Ok(())
+}
+
+fn cmd_figures(engine: Engine, args: &Args, fwd_mode: FwdMode) -> Result<()> {
     let out = PathBuf::from(args.get_or("out", "results"));
     let mut params = if args.flag("quick") { ExpParams::quick() } else { ExpParams::default() };
-    params.fwd_mode = fwd;
+    params.fwd_mode = fwd_mode;
     params.n_seeds = args.u64_or("seeds", params.n_seeds)?;
     let models: Vec<String> = args
         .get_or("models", "tiny-s,tiny-m")
@@ -256,22 +412,22 @@ fn cmd_figures(manifest: Manifest, fwd: FwdMode, args: &Args) -> Result<()> {
         .map(|s| s.to_string())
         .collect();
     let which = args.get_or("fig", "all").to_string();
-    let ctx = FigureCtx::new(manifest, params, out);
+    let mut ctx = FigureCtx::new(engine, params, out);
 
     for model in &models {
         if which == "all" || which == "1" {
-            fig1::run(&ctx, model)?;
+            fig1::run(&mut ctx, model)?;
         }
         if which == "all" || which == "2" {
-            fig2::run(&ctx, model)?;
+            fig2::run(&mut ctx, model)?;
         }
         if which == "all" || which == "3" || which == "3a" || which == "3b" {
-            fig3::run(&ctx, model)?;
+            fig3::run(&mut ctx, model)?;
         }
         if which == "all" || which == "table1" || which == "4" || which == "5"
             || which == "7" || which == "8" || which == "9"
         {
-            table1::run(&ctx, model)?;
+            table1::run(&mut ctx, model)?;
         }
     }
     if which == "all" || which == "table1" {
@@ -281,34 +437,31 @@ fn cmd_figures(manifest: Manifest, fwd: FwdMode, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_ttft(manifest: &Manifest, model: &str, args: &Args) -> Result<()> {
+fn cmd_ttft(engine: &mut Engine, model: &str, args: &Args) -> Result<()> {
     // Wall-clock TTFT of the REAL compiled forward on this host — proves the
     // measurement harness drives actual PJRT executables (secondary mode;
     // CPU fake-quant adds ops, so gains are not Gaudi-shaped).
-    let rt = ampq::runtime::Runtime::new()?;
-    let info = manifest.model(model)?.clone();
-    let mode = match args.get_or("fwd", "pallas") {
-        "pallas" => FwdMode::Pallas,
-        _ => FwdMode::Ref,
-    };
-    let mr = ampq::runtime::ModelRuntime::load(&rt, &manifest.root, &info, mode)?;
-    let calib = info.load_calib(&manifest.root)?;
+    let info = engine.info(model)?;
+    let root = engine
+        .artifacts_root()
+        .ok_or_else(|| anyhow!("ttft needs an artifacts root"))?
+        .to_path_buf();
+    let calib = info.load_calib(&root)?;
+    let part = engine.partitioned(model)?;
+    let mr = engine.runtime(model)?;
     let tokens: Vec<i32> = calib[..info.eval_b].concat();
-    let mut src = WallTtft { mr: &mr, tokens, reps: args.usize_or("reps", 5)? };
+    let mut src = WallTtft { mr, tokens, reps: args.usize_or("reps", 5)? };
     let base = src.measure(&MpConfig::all_bf16(info.n_qlayers))?;
     let fp8 = src.measure(&MpConfig::uniform(info.n_qlayers, Format::Fp8E4m3))?;
     println!(
-        "model {model} [{}] wall-clock fwd on {}: bf16-config {:.1} us, fp8-config {:.1} us / batch of {}",
-        if mode == FwdMode::Pallas { "pallas" } else { "ref" },
-        rt.platform(),
+        "model {model} [{}] wall-clock fwd: bf16-config {:.1} us, fp8-config {:.1} us / batch of {}",
+        if mr.fwd_mode == FwdMode::Pallas { "pallas" } else { "ref" },
         base,
         fp8,
         info.eval_b
     );
     // Per-group measurement demo over the wall clock (paper Algorithm 1.3).
-    let graph = info.load_graph(&manifest.root)?;
-    let part = ampq::graph::partition::partition(&graph)?;
-    let tm = measure_groups(&mut src, &part, &PAPER_FORMATS)?;
+    let tm = measure_groups(&mut src, &part.partition, &part.formats)?;
     println!("wall-clock per-group gains (us): ");
     for g in &tm.groups {
         let best = g.gains.iter().cloned().fold(f64::MIN, f64::max);

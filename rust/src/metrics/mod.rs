@@ -20,6 +20,10 @@ pub enum Objective {
 }
 
 impl Objective {
+    /// Every objective family, in the paper's presentation order.
+    pub const ALL: [Objective; 3] =
+        [Objective::EmpiricalTime, Objective::TheoreticalTime, Objective::Memory];
+
     pub fn name(self) -> &'static str {
         match self {
             Objective::EmpiricalTime => "IP-ET",
@@ -27,11 +31,29 @@ impl Objective {
             Objective::Memory => "IP-M",
         }
     }
+
+    /// Short machine-readable key (CLI flags, Plan serialization).
+    pub fn key(self) -> &'static str {
+        match self {
+            Objective::EmpiricalTime => "et",
+            Objective::TheoreticalTime => "tt",
+            Objective::Memory => "m",
+        }
+    }
+
+    pub fn from_key(s: &str) -> Option<Objective> {
+        Some(match s {
+            "et" => Objective::EmpiricalTime,
+            "tt" => Objective::TheoreticalTime,
+            "m" => Objective::Memory,
+            _ => return None,
+        })
+    }
 }
 
 /// One IP group: candidate configurations (paper's Q_j columns) and their
 /// performance-gain values c_{j,p}.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct GroupChoices {
     pub qidxs: Vec<usize>,
     pub configs: Vec<Vec<Format>>,

@@ -1,0 +1,440 @@
+//! Typed stage artifacts of Algorithm 1 — `Partitioned -> Calibrated ->
+//! Measured` — each independently constructible, JSON-serializable through
+//! `util::Json` (serde is not vendored in this image), and persistable
+//! to/from the on-disk cache under `artifacts/cache/`.
+//!
+//! The JSON forms round-trip exactly: floats are emitted with Rust's
+//! shortest-round-trip `Display` and parsed back bit-identical, so
+//! `from_json(to_json(x)) == x` (covered by tests here and in
+//! tests/staged_api.rs).
+
+use crate::graph::partition::{Partition, SubGraph};
+use crate::model::{LayerKind, QLayer};
+use crate::numerics::Format;
+use crate::sensitivity::Calibration;
+use crate::timing::{GroupGains, TimeMeasurements};
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// Version stamp embedded in every artifact and Plan.
+pub const SCHEMA_VERSION: i64 = 1;
+
+// ---- shared JSON helpers ------------------------------------------------
+
+pub(crate) fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+pub(crate) fn unum(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+pub(crate) fn f64s(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+}
+
+pub(crate) fn usizes(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| unum(x)).collect())
+}
+
+pub(crate) fn f64_vec(j: &Json) -> Result<Vec<f64>> {
+    j.arr()?.iter().map(|x| x.f64()).collect()
+}
+
+pub(crate) fn usize_vec(j: &Json) -> Result<Vec<usize>> {
+    j.arr()?.iter().map(|x| x.usize()).collect()
+}
+
+pub(crate) fn formats_to_json(fs: &[Format]) -> Json {
+    Json::Arr(fs.iter().map(|f| Json::Str(f.name().to_string())).collect())
+}
+
+pub(crate) fn formats_from_json(j: &Json) -> Result<Vec<Format>> {
+    j.arr()?
+        .iter()
+        .map(|x| {
+            let name = x.str()?;
+            Format::from_name(name).ok_or_else(|| anyhow!("unknown format '{name}'"))
+        })
+        .collect()
+}
+
+/// Validate the `{schema, kind}` header every artifact carries.
+pub(crate) fn check_header(j: &Json, kind: &str) -> Result<()> {
+    let schema = j.get("schema")?.i64()?;
+    if schema != SCHEMA_VERSION {
+        bail!("unsupported schema version {schema} (expected {SCHEMA_VERSION})");
+    }
+    let k = j.get("kind")?.str()?;
+    if k != kind {
+        bail!("artifact kind '{k}' (expected '{kind}')");
+    }
+    Ok(())
+}
+
+fn write_file(path: &Path, j: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, j.to_string())?;
+    Ok(())
+}
+
+// ---- stage 1: Partitioned ----------------------------------------------
+
+/// Stage-1 artifact: the Algorithm-2 partition plus the static layer table
+/// and the format menu every later stage is keyed on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Partitioned {
+    pub model: String,
+    pub formats: Vec<Format>,
+    pub qlayers: Vec<QLayer>,
+    pub partition: Partition,
+}
+
+impl Partitioned {
+    pub fn n_qlayers(&self) -> usize {
+        self.qlayers.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let qlayers = self
+            .qlayers
+            .iter()
+            .map(|q| {
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(q.name.clone())),
+                    (
+                        "kind".into(),
+                        Json::Str(
+                            match q.kind {
+                                LayerKind::Linear => "linear",
+                                LayerKind::Bgemm => "bgemm",
+                            }
+                            .to_string(),
+                        ),
+                    ),
+                    ("c".into(), unum(q.c)),
+                    ("k".into(), unum(q.k)),
+                    ("macs".into(), num(q.macs as f64)),
+                    ("params".into(), num(q.params as f64)),
+                ])
+            })
+            .collect();
+        let groups = self
+            .partition
+            .groups
+            .iter()
+            .map(|g| {
+                Json::Obj(vec![
+                    ("all_nodes".into(), usizes(&g.all_nodes)),
+                    ("qnodes".into(), usizes(&g.qnodes)),
+                    ("qidxs".into(), usizes(&g.qidxs)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("schema".into(), Json::Num(SCHEMA_VERSION as f64)),
+            ("kind".into(), Json::Str("partitioned".into())),
+            ("model".into(), Json::Str(self.model.clone())),
+            ("formats".into(), formats_to_json(&self.formats)),
+            ("qlayers".into(), Json::Arr(qlayers)),
+            ("groups".into(), Json::Arr(groups)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Partitioned> {
+        check_header(j, "partitioned")?;
+        let qlayers = j
+            .get("qlayers")?
+            .arr()?
+            .iter()
+            .map(|q| {
+                Ok(QLayer {
+                    name: q.get("name")?.str()?.to_string(),
+                    kind: match q.get("kind")?.str()? {
+                        "linear" => LayerKind::Linear,
+                        "bgemm" => LayerKind::Bgemm,
+                        k => bail!("unknown layer kind '{k}'"),
+                    },
+                    c: q.get("c")?.usize()?,
+                    k: q.get("k")?.usize()?,
+                    macs: q.get("macs")?.f64()? as u64,
+                    params: q.get("params")?.f64()? as u64,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let groups = j
+            .get("groups")?
+            .arr()?
+            .iter()
+            .map(|g| {
+                Ok(SubGraph {
+                    all_nodes: usize_vec(g.get("all_nodes")?)?,
+                    qnodes: usize_vec(g.get("qnodes")?)?,
+                    qidxs: usize_vec(g.get("qidxs")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Partitioned {
+            model: j.get("model")?.str()?.to_string(),
+            formats: formats_from_json(j.get("formats")?)?,
+            qlayers,
+            partition: Partition { groups },
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &Path) -> Result<Partitioned> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+// ---- stage 2: Calibrated -----------------------------------------------
+
+/// Stage-2 artifact: per-layer sensitivities s_l and loss moments (eq. 21),
+/// the calibrate-once product a whole tau sweep reuses.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Calibrated {
+    pub model: String,
+    pub calibration: Calibration,
+}
+
+impl Calibrated {
+    pub fn to_json(&self) -> Json {
+        let c = &self.calibration;
+        Json::Obj(vec![
+            ("schema".into(), Json::Num(SCHEMA_VERSION as f64)),
+            ("kind".into(), Json::Str("calibrated".into())),
+            ("model".into(), Json::Str(self.model.clone())),
+            ("s".into(), f64s(&c.s)),
+            ("eg2".into(), num(c.eg2)),
+            ("g_mean".into(), num(c.g_mean)),
+            ("n_samples".into(), unum(c.n_samples)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Calibrated> {
+        check_header(j, "calibrated")?;
+        Ok(Calibrated {
+            model: j.get("model")?.str()?.to_string(),
+            calibration: Calibration {
+                s: f64_vec(j.get("s")?)?,
+                eg2: j.get("eg2")?.f64()?,
+                g_mean: j.get("g_mean")?.f64()?,
+                n_samples: j.get("n_samples")?.usize()?,
+            },
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &Path) -> Result<Calibrated> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+// ---- stage 3: Measured --------------------------------------------------
+
+/// Stage-3 artifact: the per-group empirical time-gain tables (Algorithm 1
+/// line 3) plus the measurement protocol that produced them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Measured {
+    pub model: String,
+    pub formats: Vec<Format>,
+    pub seed: u64,
+    pub reps: usize,
+    /// Fingerprint of the hardware model the measurement ran under
+    /// (see `engine::hw_digest`) — part of the cache-validity key.
+    pub hw_digest: String,
+    pub measurements: TimeMeasurements,
+}
+
+impl Measured {
+    pub fn to_json(&self) -> Json {
+        let groups = self
+            .measurements
+            .groups
+            .iter()
+            .map(|g| {
+                let configs =
+                    Json::Arr(g.configs.iter().map(|c| formats_to_json(c)).collect());
+                Json::Obj(vec![
+                    ("group".into(), unum(g.group)),
+                    ("qidxs".into(), usizes(&g.qidxs)),
+                    ("configs".into(), configs),
+                    ("gains".into(), f64s(&g.gains)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("schema".into(), Json::Num(SCHEMA_VERSION as f64)),
+            ("kind".into(), Json::Str("measured".into())),
+            ("model".into(), Json::Str(self.model.clone())),
+            ("formats".into(), formats_to_json(&self.formats)),
+            // Seeds are u64: serialized as a string so values >= 2^53
+            // survive the JSON round-trip exactly.
+            ("seed".into(), Json::Str(self.seed.to_string())),
+            ("reps".into(), unum(self.reps)),
+            ("hw_digest".into(), Json::Str(self.hw_digest.clone())),
+            ("base_ttft".into(), num(self.measurements.base_ttft)),
+            ("groups".into(), Json::Arr(groups)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Measured> {
+        check_header(j, "measured")?;
+        let groups = j
+            .get("groups")?
+            .arr()?
+            .iter()
+            .map(|g| {
+                let configs = g
+                    .get("configs")?
+                    .arr()?
+                    .iter()
+                    .map(formats_from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(GroupGains {
+                    group: g.get("group")?.usize()?,
+                    qidxs: usize_vec(g.get("qidxs")?)?,
+                    configs,
+                    gains: f64_vec(g.get("gains")?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Measured {
+            model: j.get("model")?.str()?.to_string(),
+            formats: formats_from_json(j.get("formats")?)?,
+            seed: j.get("seed")?.str()?.parse::<u64>()?,
+            reps: j.get("reps")?.usize()?,
+            hw_digest: j.get("hw_digest")?.str()?.to_string(),
+            measurements: TimeMeasurements {
+                base_ttft: j.get("base_ttft")?.f64()?,
+                groups,
+            },
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &Path) -> Result<Measured> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::PAPER_FORMATS;
+
+    fn partitioned_fixture() -> Partitioned {
+        Partitioned {
+            model: "fixture".into(),
+            formats: PAPER_FORMATS.to_vec(),
+            qlayers: vec![
+                QLayer {
+                    name: "a".into(),
+                    kind: LayerKind::Linear,
+                    c: 8,
+                    k: 16,
+                    macs: 4096,
+                    params: 128,
+                },
+                QLayer {
+                    name: "b".into(),
+                    kind: LayerKind::Bgemm,
+                    c: 4,
+                    k: 4,
+                    macs: 1024,
+                    params: 0,
+                },
+            ],
+            partition: Partition {
+                groups: vec![SubGraph {
+                    all_nodes: vec![0, 1, 2],
+                    qnodes: vec![1, 2],
+                    qidxs: vec![0, 1],
+                }],
+            },
+        }
+    }
+
+    #[test]
+    fn partitioned_roundtrip() {
+        let p = partitioned_fixture();
+        let j = p.to_json();
+        let text = j.to_string();
+        let back = Partitioned::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn calibrated_roundtrip() {
+        let c = Calibrated {
+            model: "fixture".into(),
+            calibration: Calibration {
+                s: vec![0.125, 3.5e-4, 7.0],
+                eg2: 16.25,
+                g_mean: 4.03125,
+                n_samples: 8,
+            },
+        };
+        let back =
+            Calibrated::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn measured_roundtrip() {
+        let m = Measured {
+            model: "fixture".into(),
+            formats: PAPER_FORMATS.to_vec(),
+            seed: u64::MAX - 1, // > 2^53: must survive the round-trip exactly
+            reps: 5,
+            hw_digest: "HwModel { n_mme: 2 }".into(),
+            measurements: TimeMeasurements {
+                base_ttft: 123.456,
+                groups: vec![GroupGains {
+                    group: 0,
+                    qidxs: vec![0, 1],
+                    configs: vec![
+                        vec![Format::Bf16, Format::Bf16],
+                        vec![Format::Bf16, Format::Fp8E4m3],
+                        vec![Format::Fp8E4m3, Format::Bf16],
+                        vec![Format::Fp8E4m3, Format::Fp8E4m3],
+                    ],
+                    gains: vec![0.0, 1.5, 2.25, 3.875],
+                }],
+            },
+        };
+        let back =
+            Measured::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn wrong_kind_rejected() {
+        let p = partitioned_fixture();
+        assert!(Calibrated::from_json(&p.to_json()).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let p = partitioned_fixture();
+        let dir = std::env::temp_dir().join(format!("ampq_artifact_{}", std::process::id()));
+        let path = dir.join("fixture").join("partitioned.json");
+        p.save(&path).unwrap();
+        let back = Partitioned::load(&path).unwrap();
+        assert_eq!(back, p);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,212 @@
+//! A synthetic transformer model for the staged planning API.
+//!
+//! `demo_model` builds a Fig.-6-shaped computation DAG (per block: the
+//! 5-layer attention sub-graph, o_proj, {gate, up}, down_proj; plus a final
+//! lm_head) with a deterministic pseudo-calibration, so partitioning,
+//! time measurement (simulator), IP planning, and the `ampq sweep --demo`
+//! batch entrypoint all run without AOT artifacts or PJRT.  Tests use it as
+//! the acceptance fixture for the Engine/Planner surface.
+
+use crate::graph::{Engine as GraphEngine, Graph, Node};
+use crate::model::{LayerKind, QLayer};
+use crate::sensitivity::Calibration;
+use crate::util::Rng;
+
+/// Model width the synthetic shapes are derived from.
+const D: usize = 256;
+/// Feed-forward width.
+const FF: usize = 512;
+/// Vocabulary (lm_head output dim).
+const VOCAB: usize = 1024;
+/// Tokens per forward (sets MAC counts / activation bytes).
+const TOKENS: usize = 64;
+/// Sum of per-layer sensitivities after normalization; together with EG2
+/// this places the paper tau grid {0 .. 0.7%} across partial quantization.
+const S_TOTAL: f64 = 0.3;
+/// Loss second moment E[g^2] of the pseudo-calibration.
+const EG2: f64 = 4.4;
+
+struct Builder {
+    nodes: Vec<Node>,
+    edges: Vec<(usize, usize)>,
+    qlayers: Vec<QLayer>,
+}
+
+impl Builder {
+    fn tpc(&mut self, id: String, bytes: u64) -> usize {
+        self.nodes.push(Node {
+            id,
+            kind: "op".into(),
+            engine: GraphEngine::Tpc,
+            qidx: -1,
+            macs: 0,
+            bytes_in: bytes,
+            bytes_out: bytes,
+            param_bytes: 0,
+            c: 0,
+            k: 0,
+        });
+        self.nodes.len() - 1
+    }
+
+    fn linear(&mut self, id: String, c: usize, k: usize) -> usize {
+        let macs = (TOKENS * c * k) as u64;
+        let params = (c * k) as u64;
+        self.qlayers.push(QLayer {
+            name: id.clone(),
+            kind: LayerKind::Linear,
+            c,
+            k,
+            macs,
+            params,
+        });
+        self.nodes.push(Node {
+            id,
+            kind: "linear".into(),
+            engine: GraphEngine::Mme,
+            qidx: self.qlayers.len() as i32 - 1,
+            macs,
+            bytes_in: (TOKENS * c * 2) as u64,
+            bytes_out: (TOKENS * k * 2) as u64,
+            param_bytes: params * 2,
+            c,
+            k,
+        });
+        self.nodes.len() - 1
+    }
+
+    fn bgemm(&mut self, id: String, c: usize) -> usize {
+        let macs = (TOKENS * TOKENS * c * 4) as u64;
+        self.qlayers.push(QLayer {
+            name: id.clone(),
+            kind: LayerKind::Bgemm,
+            c,
+            k: c,
+            macs,
+            params: 0,
+        });
+        self.nodes.push(Node {
+            id,
+            kind: "bgemm".into(),
+            engine: GraphEngine::Mme,
+            qidx: self.qlayers.len() as i32 - 1,
+            macs,
+            bytes_in: (TOKENS * D * 2) as u64,
+            bytes_out: (TOKENS * D * 2) as u64,
+            param_bytes: 0,
+            c,
+            k: c,
+        });
+        self.nodes.len() - 1
+    }
+
+    fn edge(&mut self, from: usize, to: usize) {
+        self.edges.push((from, to));
+    }
+}
+
+/// Build a `blocks`-deep synthetic transformer: the graph, its quantizable
+/// layer table, and a deterministic pseudo-calibration derived from `seed`.
+pub fn demo_model(blocks: usize, seed: u64) -> (Graph, Vec<QLayer>, Calibration) {
+    let act_bytes = (TOKENS * D * 2) as u64;
+    let mut b = Builder { nodes: Vec::new(), edges: Vec::new(), qlayers: Vec::new() };
+
+    let mut prev = b.tpc("embed".into(), act_bytes);
+    for blk in 0..blocks {
+        // Attention: {q, k, v} in parallel, qk_matmul, softmax, av_matmul.
+        let q = b.linear(format!("blk{blk}.q_proj"), D, D);
+        let k = b.linear(format!("blk{blk}.k_proj"), D, D);
+        let v = b.linear(format!("blk{blk}.v_proj"), D, D);
+        b.edge(prev, q);
+        b.edge(prev, k);
+        b.edge(prev, v);
+        let qk = b.bgemm(format!("blk{blk}.qk_matmul"), D / 4);
+        b.edge(q, qk);
+        b.edge(k, qk);
+        let sm = b.tpc(format!("blk{blk}.softmax"), act_bytes);
+        b.edge(qk, sm);
+        let av = b.bgemm(format!("blk{blk}.av_matmul"), D / 4);
+        b.edge(sm, av);
+        b.edge(v, av);
+        let o = b.linear(format!("blk{blk}.o_proj"), D, D);
+        b.edge(av, o);
+        let res1 = b.tpc(format!("blk{blk}.res1"), act_bytes);
+        b.edge(o, res1);
+        // MLP: {gate, up} in parallel, elementwise, down.
+        let gate = b.linear(format!("blk{blk}.gate_proj"), D, FF);
+        let up = b.linear(format!("blk{blk}.up_proj"), D, FF);
+        b.edge(res1, gate);
+        b.edge(res1, up);
+        let act = b.tpc(format!("blk{blk}.act_mul"), act_bytes * 2);
+        b.edge(gate, act);
+        b.edge(up, act);
+        let down = b.linear(format!("blk{blk}.down_proj"), FF, D);
+        b.edge(act, down);
+        let res2 = b.tpc(format!("blk{blk}.res2"), act_bytes);
+        b.edge(down, res2);
+        prev = res2;
+    }
+    let head = b.linear("lm_head".into(), D, VOCAB);
+    b.edge(prev, head);
+    let out = b.tpc("out".into(), act_bytes);
+    b.edge(head, out);
+
+    let qlayers = b.qlayers;
+    let graph = Graph::synthetic(b.nodes, b.edges);
+    let calibration = demo_calibration(qlayers.len(), seed);
+    (graph, qlayers, calibration)
+}
+
+/// Deterministic pseudo-calibration: log-uniform sensitivity spread over
+/// ~2 decades, normalized so the paper tau grid lands across partial
+/// quantization (neither nothing nor everything fits the budget).
+pub fn demo_calibration(n_qlayers: usize, seed: u64) -> Calibration {
+    let mut rng = Rng::new(seed ^ 0xCA11_B8A7E);
+    let mut s: Vec<f64> = (0..n_qlayers)
+        .map(|_| 10f64.powf(rng.f64() * 2.0 - 1.0))
+        .collect();
+    let total: f64 = s.iter().sum();
+    for x in s.iter_mut() {
+        *x *= S_TOTAL / total;
+    }
+    Calibration { s, eg2: EG2, g_mean: EG2.sqrt() * 0.95, n_samples: 16 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::partition::{partition, validate_sequential};
+
+    #[test]
+    fn demo_partition_matches_paper_fig6_shape() {
+        let (graph, qlayers, _) = demo_model(2, 1);
+        assert_eq!(qlayers.len(), 2 * 9 + 1);
+        assert_eq!(graph.qlayers.len(), qlayers.len());
+        let p = partition(&graph).unwrap();
+        // Per block: V1 = 5-layer attention, V2 = o_proj, V3 = {gate, up},
+        // V4 = down_proj; plus the final lm_head group.
+        let sizes: Vec<usize> = p.groups.iter().map(|g| g.len()).collect();
+        assert_eq!(sizes, vec![5, 1, 2, 1, 5, 1, 2, 1, 1]);
+        validate_sequential(&graph, &p).unwrap();
+    }
+
+    #[test]
+    fn demo_calibration_is_deterministic_and_spread() {
+        let a = demo_calibration(19, 7);
+        let b = demo_calibration(19, 7);
+        assert_eq!(a, b);
+        let max = a.s.iter().cloned().fold(f64::MIN, f64::max);
+        let min = a.s.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min > 3.0, "spread {min}..{max}");
+        let total: f64 = a.s.iter().sum();
+        assert!((total - S_TOTAL).abs() < 1e-12);
+    }
+
+    #[test]
+    fn qidx_table_aligns_with_graph() {
+        let (graph, qlayers, _) = demo_model(1, 2);
+        for (i, name) in graph.qlayers.iter().enumerate() {
+            assert_eq!(name, &qlayers[i].name);
+        }
+    }
+}

@@ -1,0 +1,530 @@
+//! The production half of the staged API: an [`Engine`] owns the (lazily
+//! created) PJRT runtime and a multi-model registry, and materializes the
+//! stage artifacts `Partitioned -> Calibrated -> Measured` exactly once
+//! per model — from memory, from the on-disk cache under
+//! `artifacts/cache/<model>/`, or by computing them.  Counters record how
+//! many real passes ran, so callers (and tests) can verify that a full
+//! tau x objective x strategy sweep costs one calibration and one
+//! measurement pass.
+
+use super::artifact::{Calibrated, Measured, Partitioned};
+use super::planner::Planner;
+use crate::gaudisim::HwModel;
+use crate::graph::partition::partition;
+use crate::graph::Graph;
+use crate::model::{Manifest, ModelInfo, QLayer};
+use crate::numerics::{Format, PAPER_FORMATS};
+use crate::runtime::{FwdMode, ModelRuntime, Runtime};
+use crate::sensitivity::{calibrate, Calibration};
+use crate::timing::{measure_groups, SimTtft};
+use crate::util::{Json, Rng};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Default seed of the simulator measurement pass (kept stable so cached
+/// Measured artifacts are reproducible).
+pub const DEFAULT_MEASURE_SEED: u64 = 0x71_4e_33;
+/// Paper protocol: TTFT averaged over 5 iterations.
+pub const DEFAULT_MEASURE_REPS: usize = 5;
+
+/// How many real (non-cached) passes the engine has run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EngineCounters {
+    /// Algorithm-2 partition computations.
+    pub partition_passes: usize,
+    /// Sensitivity calibration passes (PJRT fwd+bwd sweeps, or synthetic
+    /// injections).
+    pub calibration_passes: usize,
+    /// Per-group time-gain measurement passes.
+    pub measurement_passes: usize,
+    /// Stage artifacts served from the on-disk cache.
+    pub cache_loads: usize,
+}
+
+/// Stable fingerprint of the hardware model a measurement ran under.
+/// `HwModel` derives Debug over plain scalar fields, so its Debug form is
+/// deterministic and captures every parameter that shapes the gain tables.
+pub(crate) fn hw_digest(hw: &HwModel) -> String {
+    format!("{hw:?}")
+}
+
+/// A model registered directly from in-memory pieces (tests, demos,
+/// simulator-only deployments without AOT artifacts).
+struct Synthetic {
+    graph: Graph,
+    qlayers: Vec<QLayer>,
+    calibration: Calibration,
+}
+
+#[derive(Default)]
+struct ModelState {
+    synthetic: Option<Synthetic>,
+    graph: Option<Graph>,
+    partitioned: Option<Partitioned>,
+    calibrated: Option<Calibrated>,
+    measured: Option<Measured>,
+    runtime: Option<ModelRuntime>,
+}
+
+/// Stateful artifact factory + registry.  See the module docs of
+/// [`crate::plan`] for the full picture.
+pub struct Engine {
+    artifacts_root: Option<PathBuf>,
+    manifest: Option<Manifest>,
+    cache_dir: Option<PathBuf>,
+    fwd_mode: FwdMode,
+    hw: HwModel,
+    formats: Vec<Format>,
+    measure_seed: u64,
+    measure_reps: usize,
+    rt: Option<Runtime>,
+    models: BTreeMap<String, ModelState>,
+    counters: EngineCounters,
+}
+
+impl Engine {
+    /// An empty engine (paper defaults).  Point it at AOT artifacts with
+    /// [`Engine::with_artifacts_root`] and/or register synthetic models.
+    pub fn new() -> Engine {
+        Engine {
+            artifacts_root: None,
+            manifest: None,
+            cache_dir: None,
+            fwd_mode: FwdMode::Ref,
+            hw: HwModel::default(),
+            formats: PAPER_FORMATS.to_vec(),
+            measure_seed: DEFAULT_MEASURE_SEED,
+            measure_reps: DEFAULT_MEASURE_REPS,
+            rt: None,
+            models: BTreeMap::new(),
+            counters: EngineCounters::default(),
+        }
+    }
+
+    /// Directory holding manifest.json + the AOT artifacts.
+    pub fn with_artifacts_root(mut self, root: impl Into<PathBuf>) -> Engine {
+        self.artifacts_root = Some(root.into());
+        self
+    }
+
+    /// Use an already-loaded manifest (its root becomes the artifacts root).
+    pub fn with_manifest(mut self, manifest: Manifest) -> Engine {
+        self.artifacts_root = Some(manifest.root.clone());
+        self.manifest = Some(manifest);
+        self
+    }
+
+    /// Enable the on-disk stage cache (conventionally `artifacts/cache`).
+    pub fn with_cache_dir(mut self, dir: impl Into<PathBuf>) -> Engine {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
+    pub fn with_fwd_mode(mut self, mode: FwdMode) -> Engine {
+        self.fwd_mode = mode;
+        self
+    }
+
+    pub fn with_hw(mut self, hw: HwModel) -> Engine {
+        self.hw = hw;
+        self
+    }
+
+    pub fn with_formats(mut self, formats: Vec<Format>) -> Engine {
+        self.formats = formats;
+        self
+    }
+
+    /// Measurement protocol of the Measured stage (seed, TTFT reps).
+    pub fn with_measure_protocol(mut self, seed: u64, reps: usize) -> Engine {
+        self.measure_seed = seed;
+        self.measure_reps = reps;
+        self
+    }
+
+    /// Register a model from in-memory pieces: no AOT artifacts or PJRT
+    /// needed; calibration is taken as given and timing runs on the
+    /// simulator.
+    pub fn register_synthetic(
+        &mut self,
+        name: &str,
+        graph: Graph,
+        qlayers: Vec<QLayer>,
+        calibration: Calibration,
+    ) {
+        let state = self.models.entry(name.to_string()).or_default();
+        state.synthetic = Some(Synthetic { graph, qlayers, calibration });
+    }
+
+    pub fn counters(&self) -> &EngineCounters {
+        &self.counters
+    }
+
+    pub fn artifacts_root(&self) -> Option<&Path> {
+        self.artifacts_root.as_deref()
+    }
+
+    pub fn hw(&self) -> &HwModel {
+        &self.hw
+    }
+
+    pub fn formats(&self) -> &[Format] {
+        &self.formats
+    }
+
+    /// Names the engine can currently serve: registered synthetic models
+    /// plus (when an artifacts root is set) every manifest model.
+    pub fn model_names(&mut self) -> Result<Vec<String>> {
+        let mut names: Vec<String> = self.models.keys().cloned().collect();
+        if self.artifacts_root.is_some() {
+            let manifest = self.manifest()?;
+            for m in &manifest.models {
+                if !names.contains(&m.name) {
+                    names.push(m.name.clone());
+                }
+            }
+        }
+        Ok(names)
+    }
+
+    fn manifest(&mut self) -> Result<&Manifest> {
+        if self.manifest.is_none() {
+            let root = self.artifacts_root.clone().ok_or_else(|| {
+                anyhow!(
+                    "engine has no artifacts root — call with_artifacts_root() \
+                     or register_synthetic()"
+                )
+            })?;
+            self.manifest = Some(Manifest::load(&root)?);
+        }
+        Ok(self.manifest.as_ref().unwrap())
+    }
+
+    /// Manifest metadata of a model (artifact-backed models only).
+    pub fn info(&mut self, model: &str) -> Result<ModelInfo> {
+        Ok(self.manifest()?.model(model)?.clone())
+    }
+
+    fn is_synthetic(&self, model: &str) -> bool {
+        self.models
+            .get(model)
+            .map(|s| s.synthetic.is_some())
+            .unwrap_or(false)
+    }
+
+    fn state_mut(&mut self, model: &str) -> &mut ModelState {
+        self.models.entry(model.to_string()).or_default()
+    }
+
+    fn qlayers(&mut self, model: &str) -> Result<Vec<QLayer>> {
+        if let Some(state) = self.models.get(model) {
+            if let Some(sy) = &state.synthetic {
+                return Ok(sy.qlayers.clone());
+            }
+        }
+        Ok(self.info(model)?.qlayers)
+    }
+
+    /// The model's computation DAG (loaded once, then cached in memory).
+    pub fn graph(&mut self, model: &str) -> Result<Graph> {
+        if let Some(state) = self.models.get(model) {
+            if let Some(g) = &state.graph {
+                return Ok(g.clone());
+            }
+            if let Some(sy) = &state.synthetic {
+                return Ok(sy.graph.clone());
+            }
+        }
+        let root = self
+            .artifacts_root
+            .clone()
+            .ok_or_else(|| anyhow!("model '{model}' is not registered and no artifacts root is set"))?;
+        let info = self.info(model)?;
+        let graph = info.load_graph(&root)?;
+        self.state_mut(model).graph = Some(graph.clone());
+        Ok(graph)
+    }
+
+    // ---- stage cache helpers --------------------------------------------
+
+    fn cache_path(&self, model: &str, stage: &str) -> Option<PathBuf> {
+        self.cache_dir
+            .as_ref()
+            .map(|d| d.join(model).join(format!("{stage}.json")))
+    }
+
+    fn cached_json(&self, model: &str, stage: &str) -> Option<Json> {
+        let path = self.cache_path(model, stage)?;
+        if !path.exists() {
+            return None;
+        }
+        match Json::parse_file(&path) {
+            Ok(j) => Some(j),
+            Err(e) => {
+                eprintln!(
+                    "warning: ignoring unreadable cache {} ({e}); recomputing",
+                    path.display()
+                );
+                None
+            }
+        }
+    }
+
+    fn store_cache(&self, model: &str, stage: &str, j: &Json) {
+        if let Some(path) = self.cache_path(model, stage) {
+            if let Some(parent) = path.parent() {
+                let _ = std::fs::create_dir_all(parent);
+            }
+            if let Err(e) = std::fs::write(&path, j.to_string()) {
+                eprintln!("warning: could not write cache {}: {e}", path.display());
+            }
+        }
+    }
+
+    // ---- stage 1: partition ---------------------------------------------
+
+    /// Stage-1 artifact (memory -> disk cache -> compute).
+    pub fn partitioned(&mut self, model: &str) -> Result<Partitioned> {
+        if let Some(p) = self.models.get(model).and_then(|s| s.partitioned.clone()) {
+            return Ok(p);
+        }
+        let expected_nq = self.qlayers(model)?.len();
+        if let Some(j) = self.cached_json(model, "partitioned") {
+            if let Ok(art) = Partitioned::from_json(&j) {
+                if art.model == model
+                    && art.formats == self.formats
+                    && art.n_qlayers() == expected_nq
+                {
+                    self.counters.cache_loads += 1;
+                    self.state_mut(model).partitioned = Some(art.clone());
+                    return Ok(art);
+                }
+            }
+            eprintln!("warning: stale partitioned cache for '{model}'; recomputing");
+        }
+        let graph = self.graph(model)?;
+        let qlayers = self.qlayers(model)?;
+        let part = partition(&graph)?;
+        self.counters.partition_passes += 1;
+        let art = Partitioned {
+            model: model.to_string(),
+            formats: self.formats.clone(),
+            qlayers,
+            partition: part,
+        };
+        self.store_cache(model, "partitioned", &art.to_json());
+        self.state_mut(model).partitioned = Some(art.clone());
+        Ok(art)
+    }
+
+    // ---- stage 2: calibration -------------------------------------------
+
+    /// Stage-2 artifact (memory -> disk cache -> compute).  Computing runs
+    /// the AOT sensitivity executable over the calibration set (PJRT) for
+    /// artifact-backed models, or takes the injected calibration for
+    /// synthetic ones; either counts as one calibration pass.
+    pub fn calibrated(&mut self, model: &str) -> Result<Calibrated> {
+        if let Some(c) = self.models.get(model).and_then(|s| s.calibrated.clone()) {
+            return Ok(c);
+        }
+        let expected_nq = self.qlayers(model)?.len();
+        if let Some(j) = self.cached_json(model, "calibrated") {
+            if let Ok(art) = Calibrated::from_json(&j) {
+                // For synthetic models the injected calibration is ground
+                // truth: the cache is only valid if it matches exactly
+                // (a different injection must win over a stale file).
+                let synthetic_ok = match self.models.get(model).and_then(|s| s.synthetic.as_ref())
+                {
+                    Some(sy) => art.calibration == sy.calibration,
+                    None => true,
+                };
+                if art.model == model && art.calibration.s.len() == expected_nq && synthetic_ok {
+                    self.counters.cache_loads += 1;
+                    self.state_mut(model).calibrated = Some(art.clone());
+                    return Ok(art);
+                }
+            }
+            eprintln!("warning: stale calibrated cache for '{model}'; recomputing");
+        }
+        let calibration = if self.is_synthetic(model) {
+            let state = self.models.get(model).unwrap();
+            state.synthetic.as_ref().unwrap().calibration.clone()
+        } else {
+            let root = self.manifest()?.root.clone();
+            let info = self.info(model)?;
+            let calib_tokens = info.load_calib(&root)?;
+            let mr = self.runtime(model)?;
+            calibrate(mr, &calib_tokens)?
+        };
+        self.counters.calibration_passes += 1;
+        let art = Calibrated { model: model.to_string(), calibration };
+        self.store_cache(model, "calibrated", &art.to_json());
+        self.state_mut(model).calibrated = Some(art.clone());
+        Ok(art)
+    }
+
+    // ---- stage 3: time measurement --------------------------------------
+
+    /// Stage-3 artifact (memory -> disk cache -> compute).  Computing runs
+    /// the per-group TTFT protocol on the Gaudi-2-like simulator.
+    pub fn measured(&mut self, model: &str) -> Result<Measured> {
+        if let Some(m) = self.models.get(model).and_then(|s| s.measured.clone()) {
+            return Ok(m);
+        }
+        let partitioned = self.partitioned(model)?;
+        let hw_digest = hw_digest(&self.hw);
+        if let Some(j) = self.cached_json(model, "measured") {
+            if let Ok(art) = Measured::from_json(&j) {
+                // The gain tables are only reusable under the SAME protocol:
+                // seed, reps, and hardware model all key the measurement.
+                if art.model == model
+                    && art.formats == self.formats
+                    && art.seed == self.measure_seed
+                    && art.reps == self.measure_reps
+                    && art.hw_digest == hw_digest
+                    && art.measurements.groups.len() == partitioned.partition.groups.len()
+                {
+                    self.counters.cache_loads += 1;
+                    self.state_mut(model).measured = Some(art.clone());
+                    return Ok(art);
+                }
+            }
+            eprintln!("warning: stale measured cache for '{model}'; recomputing");
+        }
+        let graph = self.graph(model)?;
+        let sim = crate::gaudisim::Simulator::new(&graph, self.hw.clone());
+        let mut src = SimTtft {
+            sim,
+            rng: Rng::new(self.measure_seed),
+            reps: self.measure_reps,
+        };
+        let tm = measure_groups(&mut src, &partitioned.partition, &self.formats)?;
+        self.counters.measurement_passes += 1;
+        let art = Measured {
+            model: model.to_string(),
+            formats: self.formats.clone(),
+            seed: self.measure_seed,
+            reps: self.measure_reps,
+            hw_digest,
+            measurements: tm,
+        };
+        self.store_cache(model, "measured", &art.to_json());
+        self.state_mut(model).measured = Some(art.clone());
+        Ok(art)
+    }
+
+    // ---- assembly --------------------------------------------------------
+
+    /// Assemble a [`Planner`] from the three stage artifacts, materializing
+    /// any that are missing.  Repeated calls re-use every artifact.
+    pub fn planner(&mut self, model: &str) -> Result<Planner> {
+        let partitioned = self.partitioned(model)?;
+        let calibrated = self.calibrated(model)?;
+        let measured = self.measured(model)?;
+        Planner::new(partitioned, calibrated, measured)
+    }
+
+    /// The compiled PJRT runtime of an artifact-backed model (loaded once).
+    /// Synthetic models have none.
+    pub fn runtime(&mut self, model: &str) -> Result<&ModelRuntime> {
+        if self.is_synthetic(model) {
+            bail!("model '{model}' is synthetic: it has no compiled PJRT runtime");
+        }
+        let loaded = self
+            .models
+            .get(model)
+            .map(|s| s.runtime.is_some())
+            .unwrap_or(false);
+        if !loaded {
+            let root = self.manifest()?.root.clone();
+            let info = self.info(model)?;
+            if self.rt.is_none() {
+                self.rt = Some(Runtime::new()?);
+            }
+            let mr = ModelRuntime::load(self.rt.as_ref().unwrap(), &root, &info, self.fwd_mode)?;
+            self.state_mut(model).runtime = Some(mr);
+        }
+        Ok(self.models.get(model).unwrap().runtime.as_ref().unwrap())
+    }
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::demo::demo_model;
+
+    fn temp_cache(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ampq_engine_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn stages_run_once_and_memoize() {
+        let (graph, qlayers, calibration) = demo_model(2, 3);
+        let mut engine = Engine::new();
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+        let a = engine.partitioned("demo").unwrap();
+        let b = engine.partitioned("demo").unwrap();
+        assert_eq!(a, b);
+        engine.calibrated("demo").unwrap();
+        engine.measured("demo").unwrap();
+        engine.planner("demo").unwrap();
+        engine.planner("demo").unwrap();
+        let c = engine.counters();
+        assert_eq!(c.partition_passes, 1);
+        assert_eq!(c.calibration_passes, 1);
+        assert_eq!(c.measurement_passes, 1);
+    }
+
+    #[test]
+    fn disk_cache_round_trips_between_engines() {
+        let cache = temp_cache("roundtrip");
+        std::fs::remove_dir_all(&cache).ok();
+        let (graph, qlayers, calibration) = demo_model(2, 3);
+
+        let mut first = Engine::new().with_cache_dir(&cache);
+        first.register_synthetic("demo", graph.clone(), qlayers.clone(), calibration.clone());
+        let p1 = first.planner("demo").unwrap();
+        assert_eq!(first.counters().calibration_passes, 1);
+        assert_eq!(first.counters().cache_loads, 0);
+
+        // A fresh engine must serve every stage from disk — zero passes.
+        let mut second = Engine::new().with_cache_dir(&cache);
+        second.register_synthetic("demo", graph, qlayers, calibration);
+        let p2 = second.planner("demo").unwrap();
+        let c = second.counters();
+        assert_eq!(c.partition_passes, 0, "partition should come from cache");
+        assert_eq!(c.calibration_passes, 0, "calibration should come from cache");
+        assert_eq!(c.measurement_passes, 0, "measurement should come from cache");
+        assert_eq!(c.cache_loads, 3);
+
+        // And the cached artifacts produce identical plans.
+        use crate::coordinator::Strategy;
+        use crate::metrics::Objective;
+        let a = p1.plan(Objective::EmpiricalTime, Strategy::Ip, 0.004, 0).unwrap();
+        let b = p2.plan(Objective::EmpiricalTime, Strategy::Ip, 0.004, 0).unwrap();
+        assert_eq!(a, b);
+
+        std::fs::remove_dir_all(&cache).ok();
+    }
+
+    #[test]
+    fn synthetic_models_have_no_runtime() {
+        let (graph, qlayers, calibration) = demo_model(1, 3);
+        let mut engine = Engine::new();
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+        assert!(engine.runtime("demo").is_err());
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let mut engine = Engine::new();
+        assert!(engine.partitioned("nope").is_err());
+    }
+}

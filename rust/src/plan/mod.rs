@@ -1,0 +1,239 @@
+//! Staged planning API (the 0.2 public surface).
+//!
+//! The paper's Algorithm 1 is explicitly staged — partition (Algorithm 2),
+//! sensitivity calibration (eq. 21), per-group time-gain measurement
+//! (§2.3.1), then one IP solve per (objective, tau) query (eq. 5).  This
+//! module exposes exactly that seam:
+//!
+//! * [`Engine`] owns the runtime and a multi-model registry and produces
+//!   the typed stage artifacts [`Partitioned`] -> [`Calibrated`] ->
+//!   [`Measured`], each cached in memory and (optionally) on disk under
+//!   `artifacts/cache/<model>/<stage>.json`;
+//! * [`Planner`] answers `plan(objective, strategy, tau)` queries against
+//!   those artifacts in microseconds, with no recomputation;
+//! * [`Plan`] is the self-contained, JSON-round-trippable answer:
+//!   configuration + predicted MSE + gain + provenance.
+//!
+//! ```no_run
+//! use ampq::metrics::Objective;
+//! use ampq::coordinator::{paper_tau_grid, Strategy};
+//! use ampq::plan::Engine;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut engine = Engine::new()
+//!     .with_artifacts_root("artifacts")
+//!     .with_cache_dir("artifacts/cache");
+//! let planner = engine.planner("tiny-s")?; // stages run (or load) once
+//! for tau in paper_tau_grid() {
+//!     let plan = planner.plan(Objective::EmpiricalTime, Strategy::Ip, tau, 0)?;
+//!     println!("{}", plan.to_json().to_string());
+//! }
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod artifact;
+pub mod demo;
+pub mod engine;
+pub mod planner;
+
+pub use self::artifact::{Calibrated, Measured, Partitioned, SCHEMA_VERSION};
+pub use self::engine::{Engine, EngineCounters};
+pub use self::planner::Planner;
+
+use crate::coordinator::Strategy;
+use crate::gaudisim::MpConfig;
+use crate::metrics::Objective;
+use crate::numerics::Format;
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+use self::artifact::{check_header, formats_to_json, num, unum};
+
+/// Where a Plan's numbers came from — enough to audit or reproduce it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Provenance {
+    /// Calibration sample count R behind the sensitivities.
+    pub calib_samples: usize,
+    /// Loss second moment E[g^2] the budget is scaled by.
+    pub eg2: f64,
+    /// Number of sequential sub-graphs in the partition.
+    pub n_groups: usize,
+    /// Baseline (all-BF16) TTFT of the measurement pass, microseconds.
+    pub base_ttft_us: f64,
+}
+
+/// A self-contained planning answer for one (objective, strategy, tau)
+/// query: the chosen configuration plus every number needed to act on it.
+/// Round-trips through JSON exactly (`Plan::from_json(plan.to_json()) ==
+/// plan`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub model: String,
+    pub objective: Objective,
+    pub strategy: Strategy,
+    pub tau: f64,
+    /// Seed used by seeded strategies (Random); recorded for reproduction.
+    pub seed: u64,
+    pub config: MpConfig,
+    /// False when even the all-baseline configuration exceeds the budget
+    /// (the paper's tau = 0 edge); `config` is then all-BF16.
+    pub feasible: bool,
+    /// Objective-family gain of `config` (us for ET, BF16-MAC units for TT,
+    /// bytes for M).
+    pub gain: f64,
+    /// Predicted loss MSE d of the full configuration (eq. 6).
+    pub predicted_mse: f64,
+    /// The constraint budget tau^2 E[g^2].
+    pub budget: f64,
+    /// Normalized RMSE sqrt(d / E[g^2]) — directly comparable to tau.
+    pub nrmse: f64,
+    /// Group-additive TTFT prediction for `config`, microseconds (eq. 7).
+    pub predicted_ttft_us: f64,
+    pub provenance: Provenance,
+}
+
+impl Plan {
+    pub fn to_json(&self) -> Json {
+        let config = formats_to_json(&self.config.0);
+        let prov = Json::Obj(vec![
+            ("calib_samples".into(), unum(self.provenance.calib_samples)),
+            ("eg2".into(), num(self.provenance.eg2)),
+            ("n_groups".into(), unum(self.provenance.n_groups)),
+            ("base_ttft_us".into(), num(self.provenance.base_ttft_us)),
+        ]);
+        Json::Obj(vec![
+            ("schema".into(), Json::Num(SCHEMA_VERSION as f64)),
+            ("kind".into(), Json::Str("plan".into())),
+            ("model".into(), Json::Str(self.model.clone())),
+            ("objective".into(), Json::Str(self.objective.key().into())),
+            ("strategy".into(), Json::Str(self.strategy.key().into())),
+            ("tau".into(), num(self.tau)),
+            // u64 seeds go through a string so values >= 2^53 round-trip
+            // exactly (JSON numbers are f64).
+            ("seed".into(), Json::Str(self.seed.to_string())),
+            ("config".into(), config),
+            ("feasible".into(), Json::Bool(self.feasible)),
+            ("gain".into(), num(self.gain)),
+            ("predicted_mse".into(), num(self.predicted_mse)),
+            ("budget".into(), num(self.budget)),
+            ("nrmse".into(), num(self.nrmse)),
+            ("predicted_ttft_us".into(), num(self.predicted_ttft_us)),
+            ("provenance".into(), prov),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Plan> {
+        check_header(j, "plan")?;
+        let objective_key = j.get("objective")?.str()?;
+        let objective = Objective::from_key(objective_key)
+            .ok_or_else(|| anyhow!("unknown objective '{objective_key}'"))?;
+        let strategy_key = j.get("strategy")?.str()?;
+        let strategy = Strategy::from_key(strategy_key)
+            .ok_or_else(|| anyhow!("unknown strategy '{strategy_key}'"))?;
+        let config = j
+            .get("config")?
+            .arr()?
+            .iter()
+            .map(|x| {
+                let name = x.str()?;
+                Format::from_name(name).ok_or_else(|| anyhow!("unknown format '{name}'"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let feasible = match j.get("feasible")? {
+            Json::Bool(b) => *b,
+            _ => bail!("'feasible' must be a bool"),
+        };
+        let pj = j.get("provenance")?;
+        Ok(Plan {
+            model: j.get("model")?.str()?.to_string(),
+            objective,
+            strategy,
+            tau: j.get("tau")?.f64()?,
+            seed: j.get("seed")?.str()?.parse::<u64>()?,
+            config: MpConfig(config),
+            feasible,
+            gain: j.get("gain")?.f64()?,
+            predicted_mse: j.get("predicted_mse")?.f64()?,
+            budget: j.get("budget")?.f64()?,
+            nrmse: j.get("nrmse")?.f64()?,
+            predicted_ttft_us: j.get("predicted_ttft_us")?.f64()?,
+            provenance: Provenance {
+                calib_samples: pj.get("calib_samples")?.usize()?,
+                eg2: pj.get("eg2")?.f64()?,
+                n_groups: pj.get("n_groups")?.usize()?,
+                base_ttft_us: pj.get("base_ttft_us")?.f64()?,
+            },
+        })
+    }
+
+    /// One-line human summary (the CLI's non-JSON output row).
+    pub fn summary(&self) -> String {
+        format!(
+            "{} {} {} tau={:.4} nq={}/{} gain={:.3} mse={:.3e} budget={:.3e} ttft={:.1}us{}",
+            self.model,
+            self.objective.name(),
+            self.strategy.name(),
+            self.tau,
+            self.config.n_quantized(),
+            self.config.len(),
+            self.gain,
+            self.predicted_mse,
+            self.budget,
+            self.predicted_ttft_us,
+            if self.feasible { "" } else { " (infeasible: baseline fallback)" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_fixture() -> Plan {
+        Plan {
+            model: "demo".into(),
+            objective: Objective::EmpiricalTime,
+            strategy: Strategy::Ip,
+            tau: 0.004,
+            seed: u64::MAX - 7, // > 2^53: must survive the round-trip exactly
+            config: MpConfig(vec![Format::Bf16, Format::Fp8E4m3, Format::Fp8E4m3]),
+            feasible: true,
+            gain: 41.625,
+            predicted_mse: 3.0517578125e-5,
+            budget: 7.04e-5,
+            nrmse: 0.00263,
+            predicted_ttft_us: 812.375,
+            provenance: Provenance {
+                calib_samples: 16,
+                eg2: 4.4,
+                n_groups: 9,
+                base_ttft_us: 854.0,
+            },
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let p = plan_fixture();
+        let text = p.to_json().to_string();
+        let back = Plan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn summary_mentions_strategy_and_tau() {
+        let s = plan_fixture().summary();
+        assert!(s.contains("IP"));
+        assert!(s.contains("0.0040"));
+    }
+
+    #[test]
+    fn rejects_other_kinds() {
+        let p = plan_fixture();
+        let mut j = p.to_json();
+        if let Json::Obj(kv) = &mut j {
+            kv[1].1 = Json::Str("partitioned".into());
+        }
+        assert!(Plan::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! The query half of the staged API: a [`Planner`] is assembled from the
+//! three stage artifacts and answers `plan(objective, strategy, tau)` in
+//! microseconds — one MCKP solve over precomputed gain/cost tables, no
+//! calibration or measurement.
+
+use super::artifact::{Calibrated, Measured, Partitioned};
+use super::{Plan, Provenance};
+use crate::coordinator::strategy::{build_family, select_config, Family, Strategy};
+use crate::gaudisim::MpConfig;
+use crate::metrics::Objective;
+use crate::numerics::Format;
+use crate::sensitivity::Calibration;
+use crate::timing::TimeMeasurements;
+use anyhow::{anyhow, bail, Result};
+
+/// Immutable planning state for one model: artifacts + the three
+/// precomputed IP families.
+pub struct Planner {
+    partitioned: Partitioned,
+    calibrated: Calibrated,
+    measured: Measured,
+    families: [Family; 3],
+}
+
+impl Planner {
+    /// Assemble and cross-validate the stage artifacts, precomputing the
+    /// gain/cost tables for all three objective families.
+    pub fn new(
+        partitioned: Partitioned,
+        calibrated: Calibrated,
+        measured: Measured,
+    ) -> Result<Planner> {
+        if partitioned.model != calibrated.model || partitioned.model != measured.model {
+            bail!(
+                "artifact model mismatch: partitioned '{}', calibrated '{}', measured '{}'",
+                partitioned.model,
+                calibrated.model,
+                measured.model
+            );
+        }
+        let nq = partitioned.n_qlayers();
+        if calibrated.calibration.s.len() != nq {
+            bail!(
+                "calibration covers {} layers but partition has {nq}",
+                calibrated.calibration.s.len()
+            );
+        }
+        if measured.measurements.groups.len() != partitioned.partition.groups.len() {
+            bail!(
+                "measurement has {} groups but partition has {}",
+                measured.measurements.groups.len(),
+                partitioned.partition.groups.len()
+            );
+        }
+        for (mg, pg) in measured
+            .measurements
+            .groups
+            .iter()
+            .zip(&partitioned.partition.groups)
+        {
+            if mg.qidxs != pg.qidxs {
+                bail!("measurement group {} does not match the partition", mg.group);
+            }
+        }
+        if measured.formats != partitioned.formats {
+            bail!("measurement format menu differs from the partition artifact");
+        }
+        let families = [
+            Objective::EmpiricalTime,
+            Objective::TheoreticalTime,
+            Objective::Memory,
+        ]
+        .map(|o| {
+            build_family(
+                o,
+                &partitioned.partition,
+                &partitioned.qlayers,
+                &partitioned.formats,
+                &measured.measurements,
+            )
+        });
+        Ok(Planner { partitioned, calibrated, measured, families })
+    }
+
+    pub fn model(&self) -> &str {
+        &self.partitioned.model
+    }
+
+    pub fn n_qlayers(&self) -> usize {
+        self.partitioned.n_qlayers()
+    }
+
+    pub fn partitioned(&self) -> &Partitioned {
+        &self.partitioned
+    }
+
+    pub fn calibration(&self) -> &Calibration {
+        &self.calibrated.calibration
+    }
+
+    pub fn measurements(&self) -> &TimeMeasurements {
+        &self.measured.measurements
+    }
+
+    pub fn family(&self, objective: Objective) -> &Family {
+        match objective {
+            Objective::EmpiricalTime => &self.families[0],
+            Objective::TheoreticalTime => &self.families[1],
+            Objective::Memory => &self.families[2],
+        }
+    }
+
+    /// Answer one planning query.  Pure function of the artifacts: no
+    /// calibration, measurement, or IO happens here.
+    pub fn plan(
+        &self,
+        objective: Objective,
+        strategy: Strategy,
+        tau: f64,
+        seed: u64,
+    ) -> Result<Plan> {
+        let family = self.family(objective);
+        let calib = &self.calibrated.calibration;
+        let config = select_config(family, strategy, calib, tau, seed)?;
+        let gain = family_gain(family, &config)?;
+        let predicted_mse = calib.loss_mse(&config);
+        let budget = calib.budget(tau);
+        let tm = &self.measured.measurements;
+        Ok(Plan {
+            model: self.partitioned.model.clone(),
+            objective,
+            strategy,
+            tau,
+            seed,
+            feasible: predicted_mse <= budget + 1e-12,
+            gain,
+            predicted_mse,
+            budget,
+            nrmse: calib.normalized_rmse(&config),
+            predicted_ttft_us: tm.predict_ttft(&config),
+            provenance: Provenance {
+                calib_samples: calib.n_samples,
+                eg2: calib.eg2,
+                n_groups: self.partitioned.partition.groups.len(),
+                base_ttft_us: tm.base_ttft,
+            },
+            config,
+        })
+    }
+
+    /// Batch-solve a full grid; plans come back in (objective, strategy,
+    /// tau) iteration order.
+    pub fn sweep(
+        &self,
+        objectives: &[Objective],
+        strategies: &[Strategy],
+        taus: &[f64],
+        seed: u64,
+    ) -> Result<Vec<Plan>> {
+        let mut plans =
+            Vec::with_capacity(objectives.len() * strategies.len() * taus.len());
+        for &objective in objectives {
+            for &strategy in strategies {
+                for &tau in taus {
+                    plans.push(self.plan(objective, strategy, tau, seed)?);
+                }
+            }
+        }
+        Ok(plans)
+    }
+}
+
+/// Objective-family gain of a full configuration: sum over groups of the
+/// gain at the group's matching configuration column.  Layers not covered
+/// by the family (e.g. BGEMM under IP-M) contribute nothing.
+fn family_gain(family: &Family, cfg: &MpConfig) -> Result<f64> {
+    let mut total = 0.0;
+    for g in &family.groups {
+        let key: Vec<Format> = g.qidxs.iter().map(|&q| cfg.get(q)).collect();
+        let p = g
+            .configs
+            .iter()
+            .position(|c| c == &key)
+            .ok_or_else(|| anyhow!("configuration not in the group's enumeration"))?;
+        total += g.gains[p];
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::demo::demo_model;
+    use crate::plan::Engine;
+
+    fn demo_planner() -> Planner {
+        let (graph, qlayers, calibration) = demo_model(2, 7);
+        let mut engine = Engine::new();
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+        engine.planner("demo").unwrap()
+    }
+
+    #[test]
+    fn ip_plans_respect_budget() {
+        let planner = demo_planner();
+        for objective in Objective::ALL {
+            for tau in [0.001, 0.004, 0.007] {
+                let plan = planner.plan(objective, Strategy::Ip, tau, 0).unwrap();
+                assert!(plan.feasible, "{objective:?} tau {tau}");
+                assert!(plan.predicted_mse <= plan.budget + 1e-12);
+                assert_eq!(plan.config.len(), planner.n_qlayers());
+            }
+        }
+    }
+
+    #[test]
+    fn tau_zero_returns_all_bf16() {
+        let planner = demo_planner();
+        let plan = planner
+            .plan(Objective::EmpiricalTime, Strategy::Ip, 0.0, 0)
+            .unwrap();
+        assert_eq!(plan.config.n_quantized(), 0);
+    }
+
+    #[test]
+    fn gain_monotone_in_tau_for_ip() {
+        let planner = demo_planner();
+        let mut last = -1.0;
+        for tau in [0.001, 0.002, 0.004, 0.007] {
+            let plan = planner
+                .plan(Objective::EmpiricalTime, Strategy::Ip, tau, 0)
+                .unwrap();
+            assert!(plan.gain >= last - 1e-9, "tau {tau}: {} < {last}", plan.gain);
+            last = plan.gain;
+        }
+    }
+
+    #[test]
+    fn sweep_covers_grid() {
+        let planner = demo_planner();
+        let taus = [0.0, 0.004];
+        let plans = planner
+            .sweep(&Objective::ALL, &Strategy::ALL, &taus, 0)
+            .unwrap();
+        assert_eq!(plans.len(), 3 * 3 * 2);
+        // Every plan round-trips through JSON exactly.
+        for p in &plans {
+            let text = p.to_json().to_string();
+            let back = Plan::from_json(&crate::util::Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(&back, p);
+        }
+    }
+
+    #[test]
+    fn memory_family_keeps_bgemm_at_baseline() {
+        let planner = demo_planner();
+        let plan = planner
+            .plan(Objective::Memory, Strategy::Ip, 0.01, 0)
+            .unwrap();
+        for (l, q) in planner.partitioned().qlayers.iter().enumerate() {
+            if q.kind == crate::model::LayerKind::Bgemm {
+                assert_eq!(plan.config.get(l), Format::Bf16, "{}", q.name);
+            }
+        }
+    }
+}

@@ -15,7 +15,7 @@ use crate::runtime::ModelRuntime;
 use anyhow::{bail, Result};
 
 /// Calibrated sensitivity state for one model.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Calibration {
     /// Per-layer average sensitivity s_l (eq. 21).
     pub s: Vec<f64>,

@@ -70,7 +70,7 @@ impl<'a> TtftSource for WallTtft<'a> {
 
 /// Measured gains for one group: gains[p] aligns with configs[p]
 /// (columns of the paper's Q_j matrix).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct GroupGains {
     pub group: usize,
     pub qidxs: Vec<usize>,
@@ -80,7 +80,7 @@ pub struct GroupGains {
 }
 
 /// Full measurement product: baseline TTFT + per-group gain tables.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TimeMeasurements {
     pub base_ttft: f64,
     pub groups: Vec<GroupGains>,

@@ -2,7 +2,12 @@
 //! (PJRT runtime + partition + calibration + simulator + IP) and the paper's
 //! §3.2 validation claims at test scale.
 //!
-//! Requires `make artifacts` to have produced artifacts/.
+//! Requires `make artifacts` to have produced artifacts/, plus real PJRT
+//! bindings in place of the vendored xla stub.  Exercises the deprecated
+//! `Pipeline` shim on purpose — the staged API has its own suite in
+//! tests/staged_api.rs.
+
+#![allow(deprecated)]
 
 use ampq::coordinator::{optimize, select_config, Pipeline, Strategy};
 use ampq::evalharness::{evaluate, load_all_tasks};
@@ -27,6 +32,7 @@ fn manifest() -> Manifest {
 /// runtime-dependent checks share ONE pipeline inside a single #[test] and
 /// run sequentially as sub-checks.
 #[test]
+#[ignore = "requires real PJRT bindings + AOT artifacts (vendored xla stub cannot execute)"]
 fn full_pipeline_integration() {
     let manifest = manifest();
     let pl = Pipeline::new(

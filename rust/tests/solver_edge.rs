@@ -1,0 +1,154 @@
+//! Solver edge cases and cross-solver agreement (issue satellite):
+//! empty group lists, budget = 0, single-choice groups, and B&B vs DP vs
+//! greedy agreement on random small MCKP instances — plus the tau = 0 IP
+//! behaviour (all-BF16 fallback) at the coordinator layer.
+
+use ampq::coordinator::optimize;
+use ampq::metrics::GroupChoices;
+use ampq::numerics::Format;
+use ampq::sensitivity::Calibration;
+use ampq::solver::{branch_bound, dp, greedy, lp_relax, Mckp};
+use ampq::util::Rng;
+
+#[test]
+fn empty_group_list_is_feasible_with_zero_gain() {
+    let p = Mckp::new(vec![], vec![], 0.0).unwrap();
+    for sol in [p.brute_force(), branch_bound::solve(&p), dp::solve(&p), greedy::solve(&p)] {
+        assert!(sol.feasible);
+        assert!(sol.choice.is_empty());
+        assert_eq!(sol.gain, 0.0);
+        assert_eq!(sol.cost, 0.0);
+    }
+    assert_eq!(lp_relax::solve(&p).bound, 0.0);
+}
+
+#[test]
+fn zero_budget_returns_all_baseline_and_stays_feasible() {
+    // Every group's baseline option costs nothing (the all-BF16 row of a
+    // normalized family): budget = 0 must stay feasible and pick exactly
+    // the baseline in every group.
+    let p = Mckp::new(
+        vec![vec![0.0, 7.0], vec![0.0, 3.0], vec![0.0, 9.0]],
+        vec![vec![0.0, 0.5], vec![0.0, 0.25], vec![0.0, 1.0]],
+        0.0,
+    )
+    .unwrap();
+    for sol in [p.brute_force(), branch_bound::solve(&p), dp::solve(&p), greedy::solve(&p)] {
+        assert!(sol.feasible, "budget 0 with zero-cost baselines must be feasible");
+        assert_eq!(sol.choice, vec![0, 0, 0]);
+        assert_eq!(sol.gain, 0.0);
+    }
+}
+
+#[test]
+fn ip_tau_zero_returns_all_bf16() {
+    // Coordinator layer: at tau = 0 the constraint admits nothing (even
+    // BF16 has nonzero predicted MSE), so the IP falls back to the
+    // all-BF16 configuration — the paper's tau = 0 edge.
+    let calib = Calibration { s: vec![1.0, 2.0, 0.5], eg2: 1.0, g_mean: 1.0, n_samples: 4 };
+    let groups: Vec<GroupChoices> = (0..3)
+        .map(|l| GroupChoices {
+            qidxs: vec![l],
+            configs: vec![vec![Format::Bf16], vec![Format::Fp8E4m3]],
+            gains: vec![0.0, 1.0],
+        })
+        .collect();
+    let out = optimize(&groups, &calib, 0.0).unwrap();
+    assert_eq!(out.config.n_quantized(), 0, "tau=0 must return all-BF16");
+    assert_eq!(out.budget, 0.0);
+}
+
+#[test]
+fn single_choice_groups_are_forced() {
+    // One option per group: the only possible assignment; feasibility is
+    // decided purely by the budget.
+    let gains = vec![vec![2.0], vec![3.0], vec![4.0]];
+    let costs = vec![vec![1.0], vec![1.0], vec![1.0]];
+    let fits = Mckp::new(gains.clone(), costs.clone(), 3.5).unwrap();
+    for sol in
+        [fits.brute_force(), branch_bound::solve(&fits), dp::solve(&fits), greedy::solve(&fits)]
+    {
+        assert!(sol.feasible);
+        assert_eq!(sol.choice, vec![0, 0, 0]);
+        assert!((sol.gain - 9.0).abs() < 1e-12);
+    }
+    let tight = Mckp::new(gains, costs, 2.0).unwrap();
+    for sol in
+        [tight.brute_force(), branch_bound::solve(&tight), dp::solve(&tight), greedy::solve(&tight)]
+    {
+        assert!(!sol.feasible, "forced assignment over budget must be infeasible");
+        assert_eq!(sol.choice, vec![0, 0, 0], "fallback is still the min-cost choice");
+    }
+}
+
+#[test]
+fn mixed_single_and_multi_choice_groups() {
+    // A forced expensive group plus a real choice: the solver must spend
+    // what the forced group leaves over.
+    let p = Mckp::new(
+        vec![vec![5.0], vec![0.0, 2.0, 6.0]],
+        vec![vec![2.0], vec![0.0, 1.0, 3.0]],
+        3.5,
+    )
+    .unwrap();
+    let exact = p.brute_force();
+    let bb = branch_bound::solve(&p);
+    assert!(exact.feasible && bb.feasible);
+    assert_eq!(bb.choice, exact.choice);
+    assert_eq!(bb.choice, vec![0, 1]); // 6.0 would need cost 3 > 1.5 left
+    assert!((bb.gain - 7.0).abs() < 1e-12);
+}
+
+fn random_instance(rng: &mut Rng) -> Mckp {
+    let j = rng.range(1, 6);
+    let mut gains = Vec::new();
+    let mut costs = Vec::new();
+    for _ in 0..j {
+        let k = rng.range(1, 6);
+        gains.push((0..k).map(|_| rng.f64() * 10.0).collect::<Vec<f64>>());
+        costs.push((0..k).map(|_| rng.f64() * 3.0).collect::<Vec<f64>>());
+    }
+    let lo: f64 = costs
+        .iter()
+        .map(|c| c.iter().cloned().fold(f64::MAX, f64::min))
+        .sum();
+    let hi: f64 = costs
+        .iter()
+        .map(|c| c.iter().cloned().fold(0.0f64, f64::max))
+        .sum();
+    let budget = lo + rng.f64() * (hi - lo).max(0.01);
+    Mckp::new(gains, costs, budget).unwrap()
+}
+
+#[test]
+fn solvers_agree_on_random_small_instances() {
+    for seed in 0..150u64 {
+        let mut rng = Rng::new(0x5EED ^ seed);
+        let p = random_instance(&mut rng);
+        let exact = p.brute_force();
+        let bb = branch_bound::solve(&p);
+        let d = dp::solve(&p);
+        let g = greedy::solve(&p);
+        let lp = lp_relax::solve(&p);
+
+        assert_eq!(bb.feasible, exact.feasible, "seed {seed}");
+        assert_eq!(g.feasible, exact.feasible, "seed {seed}");
+        // DP rounds costs UP onto the bucket grid, so it can only miss
+        // feasibility on knife-edge budgets — never invent it.
+        if !exact.feasible {
+            assert!(!d.feasible, "seed {seed}: dp cannot out-feasible brute force");
+            continue;
+        }
+        // Exact == brute force; heuristics feasible and dominated; LP is an
+        // upper bound.
+        assert!((bb.gain - exact.gain).abs() < 1e-9, "seed {seed}");
+        assert!(bb.cost <= p.budget + 1e-9, "seed {seed}");
+        assert!(g.cost <= p.budget + 1e-9, "seed {seed}");
+        assert!(g.gain <= exact.gain + 1e-9, "seed {seed}");
+        if d.feasible {
+            assert!(d.cost <= p.budget + 1e-9, "seed {seed}");
+            assert!(d.gain <= exact.gain + 1e-9, "seed {seed}");
+        }
+        assert!(lp.bound >= exact.gain - 1e-9, "seed {seed}");
+    }
+}

@@ -1,0 +1,155 @@
+//! Stub of the PJRT/XLA binding surface `ampq::runtime` compiles against.
+//!
+//! The real system executes AOT-lowered HLO-text artifacts through PJRT
+//! (see python/compile/aot.py).  This image has no XLA runtime library to
+//! link, so this crate keeps the exact API shape while every entry point
+//! that would touch PJRT fails at *runtime* with a descriptive error.
+//!
+//! To run the compiled-HLO paths for real, replace the `xla` entry in
+//! rust/Cargo.toml with actual PJRT bindings exposing this same surface:
+//! `PjRtClient::cpu`, `platform_name`, `compile`,
+//! `HloModuleProto::from_text_file`, `XlaComputation::from_proto`,
+//! `PjRtLoadedExecutable::execute`, `PjRtBuffer::to_literal_sync`,
+//! `Literal::{vec1, reshape, to_tuple2, to_vec}`.
+//!
+//! Everything simulator-backed (partition, calibration from cached
+//! artifacts, time measurement, IP planning, `ampq sweep --demo`) works
+//! without PJRT; only live calibration / task evaluation / wall-clock TTFT
+//! need the real bindings.
+
+use std::fmt;
+
+const UNAVAILABLE: &str = "PJRT is unavailable: ampq was built against the vendored xla stub \
+     (rust/vendor/xla); swap in real PJRT bindings to run compiled HLO";
+
+/// Error type mirrored from the binding layer (call sites format with `{:?}`).
+pub struct Error(pub String);
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// Host-side tensor value handed to / fetched from executables.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _private: () })
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (the AOT interchange format is HLO text).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer returned by an execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// Compiled executable bound to a client.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle (CPU platform in the real deployment).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly() {
+        let err = PjRtClient::cpu().err().expect("stub must not pretend to work");
+        assert!(format!("{err:?}").contains("vendored xla stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn literal_shape_plumbing_is_inert() {
+        let l = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
