@@ -1,0 +1,122 @@
+//! Frontier serving: drive a concurrent `PlanService` with a batch of mixed
+//! multi-constraint requests against the synthetic demo model — the 0.3
+//! serving story end to end, no AOT artifacts or PJRT needed.
+//!
+//! 1. An `Engine` stages the demo model once and wraps its planner in a
+//!    `PlanService` (Send + Sync, clones share state).
+//! 2. `Planner::frontier` precomputes the tau -> gain Pareto curve; lookups
+//!    against it are O(log n) and bypass the IP solver entirely.
+//! 3. A batch of requests — pointwise solves, loss+memory two-constraint
+//!    queries, and frontier lookups — is answered across worker threads;
+//!    the frontier is swept exactly once no matter how many threads race.
+//!
+//! Run: cargo run --release --example frontier_serving [-- --blocks 2 --threads 4]
+
+use ampq::coordinator::Strategy;
+use ampq::metrics::Objective;
+use ampq::plan::demo::demo_model;
+use ampq::plan::{Engine, PlanRequest, ServeRequest};
+use ampq::util::Args;
+use anyhow::Result;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[])?;
+    let blocks = args.usize_or("blocks", 2)?;
+    let threads = args.usize_or("threads", 4)?;
+
+    // 1. Stage the synthetic model once; wrap it in a concurrent service.
+    let (graph, qlayers, calibration) = demo_model(blocks, 7);
+    let mut engine = Engine::new();
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    let svc = engine.service(&["demo"])?;
+
+    // 2. Precompute and print the empirical-time Pareto frontier.
+    let t0 = Instant::now();
+    let frontier = svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip)?;
+    println!(
+        "frontier(IP-ET): {} Pareto points over tau in [0, {:.5}], swept in {:.1} ms",
+        frontier.len(),
+        frontier.tau_max,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    for p in frontier.points.iter().take(6) {
+        println!(
+            "  tau>={:.5}  mse={:.3e}  gain={:>8.2} us  nq={}",
+            p.tau,
+            p.predicted_mse,
+            p.gain,
+            p.config.n_quantized()
+        );
+    }
+    if frontier.len() > 6 {
+        println!("  ... {} more points", frontier.len() - 6);
+    }
+
+    // 3. A mixed batch: pointwise solves across objectives, two-constraint
+    //    (loss + memory cap) requests, and cached-frontier lookups.
+    let probe = svc.solve(
+        "demo",
+        &PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.007),
+    )?;
+    let mut reqs: Vec<ServeRequest> = Vec::new();
+    for &tau in &[0.001, 0.002, 0.003, 0.004, 0.005, 0.006, 0.007] {
+        reqs.push(ServeRequest::new(
+            "demo",
+            PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(tau),
+        ));
+        reqs.push(
+            ServeRequest::new(
+                "demo",
+                PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(tau),
+            )
+            .via_frontier(),
+        );
+        reqs.push(ServeRequest::new(
+            "demo",
+            PlanRequest::new(Objective::Memory)
+                .with_loss_budget(tau)
+                .with_memory_cap(probe.weight_bytes * 1.05),
+        ));
+        reqs.push(ServeRequest::new(
+            "demo",
+            PlanRequest::new(Objective::TheoreticalTime)
+                .with_loss_budget(tau)
+                .with_strategy(Strategy::Prefix),
+        ));
+    }
+
+    let t1 = Instant::now();
+    let answers = svc.serve_batch(&reqs, threads)?;
+    let elapsed = t1.elapsed();
+    println!(
+        "\nserved {} mixed requests on {} threads in {:.1} ms ({:.1} us/request, {} frontier sweeps total)",
+        answers.len(),
+        threads,
+        elapsed.as_secs_f64() * 1e3,
+        elapsed.as_secs_f64() * 1e6 / answers.len() as f64,
+        svc.frontier_solves()
+    );
+    for (req, a) in reqs.iter().zip(&answers).take(8) {
+        let gain = a.get("gain")?.f64()?;
+        println!(
+            "  {:<5} {:<7} tau={:<6} {} gain={:.2}",
+            req.request.objective.key(),
+            req.request.strategy.key(),
+            req.request.tau.map(|t| format!("{t}")).unwrap_or_else(|| "-".into()),
+            if req.via_frontier { "frontier" } else { "solve   " },
+            gain
+        );
+    }
+    println!("  ...");
+
+    // The service shares ONE planner and ONE frontier across every thread:
+    // stage passes stay at one per stage for the whole batch.
+    let c = engine.counters();
+    println!(
+        "stage passes for the entire run: {} partition, {} calibration, {} measurement",
+        c.partition_passes, c.calibration_passes, c.measurement_passes
+    );
+    Ok(())
+}

@@ -7,9 +7,8 @@
 //!
 //! Run: cargo run --release --example quickstart [-- --model tiny-s --tau 0.004]
 
-use ampq::coordinator::Strategy;
 use ampq::metrics::Objective;
-use ampq::plan::Engine;
+use ampq::plan::{Engine, PlanRequest};
 use ampq::util::Args;
 use anyhow::Result;
 use std::path::PathBuf;
@@ -40,8 +39,12 @@ fn main() -> Result<()> {
         c.partition_passes, c.calibration_passes, c.measurement_passes, c.cache_loads
     );
 
-    // 3. One planning query (eq. 5) — microseconds, no recomputation.
-    let plan = planner.plan(Objective::EmpiricalTime, Strategy::Ip, tau, 0)?;
+    // 3. One planning query (eq. 5) — microseconds, no recomputation.  The
+    //    builder composes constraints; add `.with_memory_cap(bytes)` for a
+    //    joint loss-MSE + weight-byte solve.
+    let plan = planner.solve(
+        &PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(tau),
+    )?;
     println!("{}", plan.summary());
 
     // 4. The Plan is a self-contained artifact: ship it as JSON.

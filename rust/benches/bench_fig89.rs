@@ -1,9 +1,9 @@
 //! Bench for Figures 8 and 9: the IP-TT (MAC-time) and IP-M (memory)
 //! planner queries across the tau grid, driven by cached stage artifacts.
 
-use ampq::coordinator::{paper_tau_grid, Strategy};
+use ampq::coordinator::paper_tau_grid;
 use ampq::metrics::Objective;
-use ampq::plan::Engine;
+use ampq::plan::{Engine, PlanRequest};
 use ampq::util::bench::{bench, black_box};
 
 fn main() {
@@ -14,7 +14,8 @@ fn main() {
         for objective in [Objective::TheoreticalTime, Objective::Memory] {
             bench(&format!("fig89/{model}/{}/solve_tau_grid", objective.name()), 1, 10, || {
                 for tau in paper_tau_grid() {
-                    black_box(planner.plan(objective, Strategy::Ip, tau, 0).unwrap());
+                    let req = PlanRequest::new(objective).with_loss_budget(tau);
+                    black_box(planner.solve(&req).unwrap());
                 }
             });
 
@@ -22,7 +23,9 @@ fn main() {
             // touches BGEMM layers.
             let mut last = -1.0f64;
             for tau in paper_tau_grid() {
-                let plan = planner.plan(objective, Strategy::Ip, tau, 0).unwrap();
+                let plan = planner
+                    .solve(&PlanRequest::new(objective).with_loss_budget(tau))
+                    .unwrap();
                 assert!(plan.gain >= last - 1e-9);
                 last = plan.gain;
                 if objective == Objective::Memory {

@@ -52,7 +52,7 @@ fn main() {
             sol.gain,
             sol.gain / exact.gain,
             exact.gain,
-            100.0 * sol.cost / p.budget
+            100.0 * sol.cost / p.budget()
         );
         assert!(sol.gain <= exact.gain + 1e-9);
         assert!(sol.gain >= 0.90 * exact.gain, "{name} quality regression");

@@ -1,13 +1,15 @@
 //! The paper's IP strategy (eq. 5): assemble the MCKP from per-group gain
 //! vectors c_j and loss-MSE vectors d_j, solve, and materialize the chosen
-//! MpConfig.
+//! MpConfig.  Since 0.3 the solve optionally carries a second knapsack
+//! dimension capping total stored weight bytes (multi-constraint requests).
 
 use crate::gaudisim::MpConfig;
-use crate::metrics::{covered_layers, GroupChoices};
+use crate::metrics::{covered_layers, group_weight_bytes, GroupChoices};
+use crate::model::QLayer;
 use crate::numerics::Format;
 use crate::sensitivity::Calibration;
-use crate::solver::{self, Mckp, Solution};
-use anyhow::Result;
+use crate::solver::{self, CostDim, Mckp, Solution};
+use anyhow::{bail, Result};
 
 /// Result of one IP solve.
 #[derive(Clone, Debug)]
@@ -17,17 +19,32 @@ pub struct IpOutcome {
     /// Predicted loss MSE of the FULL config (covered + default-BF16 layers).
     pub predicted_mse: f64,
     pub budget: f64,
+    /// Full-model stored weight bytes of `config`; Some when a memory cap
+    /// was part of the solve.
+    pub weight_bytes: Option<f64>,
 }
 
-/// Solve eq. (5) at threshold `tau`.
-///
-/// Layers not covered by any group (e.g. BGEMM under IP-M) are fixed at
-/// BF16; their (constant) loss-MSE contribution is charged against the
-/// budget so the constraint covers the whole model.
+/// Solve eq. (5) at threshold `tau` (single loss-MSE constraint).
 pub fn optimize(
     groups: &[GroupChoices],
     calib: &Calibration,
     tau: f64,
+) -> Result<IpOutcome> {
+    optimize_with_caps(groups, calib, tau, None)
+}
+
+/// Solve eq. (5) at threshold `tau`, optionally under a second knapsack
+/// dimension capping total stored weight bytes at `memory = (qlayers, cap)`.
+///
+/// Layers not covered by any group (e.g. BGEMM under IP-M) are fixed at
+/// BF16; their (constant) loss-MSE — and, when capped, weight-byte —
+/// contributions are charged against the budgets so the constraints cover
+/// the whole model.
+pub fn optimize_with_caps(
+    groups: &[GroupChoices],
+    calib: &Calibration,
+    tau: f64,
+    memory: Option<(&[QLayer], f64)>,
 ) -> Result<IpOutcome> {
     let nq = calib.s.len();
     let covered = covered_layers(groups, nq);
@@ -40,7 +57,7 @@ pub fn optimize(
     let budget = (budget_total - uncovered_mse).max(0.0);
 
     let gains: Vec<Vec<f64>> = groups.iter().map(|g| g.gains.clone()).collect();
-    let costs: Vec<Vec<f64>> = groups
+    let mse_costs: Vec<Vec<f64>> = groups
         .iter()
         .map(|g| {
             g.configs
@@ -49,7 +66,36 @@ pub fn optimize(
                 .collect()
         })
         .collect();
-    let problem = Mckp::new(gains, costs, budget)?;
+
+    let problem = match memory {
+        None => Mckp::new(gains, mse_costs, budget)?,
+        Some((qlayers, cap)) => {
+            if qlayers.len() != nq {
+                bail!("memory cap layer table covers {} layers, calibration {nq}", qlayers.len());
+            }
+            let bytes_table: Vec<Vec<f64>> = groups
+                .iter()
+                .map(|g| {
+                    g.configs
+                        .iter()
+                        .map(|cfg| group_weight_bytes(qlayers, &g.qidxs, cfg))
+                        .collect()
+                })
+                .collect();
+            let uncovered_bytes: f64 = (0..nq)
+                .filter(|&l| !covered[l])
+                .map(|l| qlayers[l].params as f64 * Format::Bf16.bytes() as f64)
+                .sum();
+            Mckp::multi(
+                gains,
+                vec![
+                    CostDim::new("loss_mse", mse_costs),
+                    CostDim::new("weight_bytes", bytes_table),
+                ],
+                vec![budget, (cap - uncovered_bytes).max(0.0)],
+            )?
+        }
+    };
     let solution = solver::solve(&problem);
 
     let mut config = MpConfig::all_bf16(nq);
@@ -59,12 +105,14 @@ pub fn optimize(
         }
     }
     let predicted_mse = calib.loss_mse(&config);
-    Ok(IpOutcome { config, solution, predicted_mse, budget: budget_total })
+    let weight_bytes = memory.map(|(qlayers, _)| crate::metrics::weight_bytes(qlayers, &config));
+    Ok(IpOutcome { config, solution, predicted_mse, budget: budget_total, weight_bytes })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::LayerKind;
     use crate::numerics::PAPER_FORMATS;
 
     fn calib4() -> Calibration {
@@ -83,6 +131,19 @@ mod tests {
             .collect()
     }
 
+    fn qlayers4() -> Vec<QLayer> {
+        (0..4)
+            .map(|l| QLayer {
+                name: format!("l{l}"),
+                kind: LayerKind::Linear,
+                c: 8,
+                k: 8,
+                macs: 1000,
+                params: 100,
+            })
+            .collect()
+    }
+
     #[test]
     fn spends_budget_on_low_sensitivity_layers_first() {
         let calib = calib4();
@@ -96,6 +157,7 @@ mod tests {
         assert_eq!(out.config.get(2), Format::Fp8E4m3);
         assert_eq!(out.config.get(1), Format::Bf16);
         assert!(out.predicted_mse <= out.budget + 1e-12);
+        assert!(out.weight_bytes.is_none());
     }
 
     #[test]
@@ -145,5 +207,71 @@ mod tests {
             assert!(out.solution.gain >= last_gain - 1e-12);
             last_gain = out.solution.gain;
         }
+    }
+
+    #[test]
+    fn memory_cap_forces_unprofitable_quantization() {
+        let calib = calib4();
+        // Quantizing layers 0/1 LOSES time gain; 2/3 win.  4 layers x 100
+        // params: all-BF16 = 800 bytes, all-FP8 = 400.  Unconstrained the IP
+        // quantizes only 2 and 3 (600 bytes); a 500-byte cap forces one of
+        // the unprofitable layers to FP8 as well.
+        let groups = singleton_groups(&[-1.0, -1.0, 2.0, 2.0]);
+        let qlayers = qlayers4();
+        let free = optimize_with_caps(&groups, &calib, 10.0, Some((&qlayers, 1e9))).unwrap();
+        assert_eq!(free.config.n_quantized(), 2);
+        assert_eq!(free.weight_bytes.unwrap(), 600.0);
+        let capped = optimize_with_caps(&groups, &calib, 10.0, Some((&qlayers, 500.0))).unwrap();
+        assert!(capped.solution.feasible);
+        let bytes = capped.weight_bytes.unwrap();
+        assert!(bytes <= 500.0 + 1e-9, "bytes {bytes}");
+        assert_eq!(capped.config.n_quantized(), 3);
+        assert!((capped.solution.gain - 3.0).abs() < 1e-12);
+        assert!(capped.predicted_mse <= capped.budget + 1e-12);
+    }
+
+    #[test]
+    fn memory_cap_plus_tight_loss_budget_matches_brute_force() {
+        let calib = calib4();
+        let groups = singleton_groups(&[3.0, 9.0, 1.0, 2.0]);
+        let qlayers = qlayers4();
+        // Loss budget fits roughly the two cheapest-sensitivity upgrades.
+        let d_cheap = calib.layer_mse(2, Format::Fp8E4m3) + calib.layer_mse(0, Format::Fp8E4m3);
+        let tau = ((d_cheap * 1.2 + calib.loss_mse(&MpConfig::all_bf16(4))) / calib.eg2).sqrt();
+        let out = optimize_with_caps(&groups, &calib, tau, Some((&qlayers, 700.0))).unwrap();
+        // Cross-check against the brute-force oracle on the same instance.
+        let mse_costs: Vec<Vec<f64>> = groups
+            .iter()
+            .map(|g| g.configs.iter().map(|c| calib.group_mse(&g.qidxs, c)).collect())
+            .collect();
+        let bytes: Vec<Vec<f64>> = groups
+            .iter()
+            .map(|g| {
+                g.configs
+                    .iter()
+                    .map(|c| group_weight_bytes(&qlayers, &g.qidxs, c))
+                    .collect()
+            })
+            .collect();
+        let p = Mckp::multi(
+            groups.iter().map(|g| g.gains.clone()).collect(),
+            vec![CostDim::new("loss_mse", mse_costs), CostDim::new("weight_bytes", bytes)],
+            vec![calib.budget(tau), 700.0],
+        )
+        .unwrap();
+        let oracle = p.brute_force();
+        assert_eq!(out.solution.feasible, oracle.feasible);
+        assert!((out.solution.gain - oracle.gain).abs() < 1e-9);
+        assert!(out.weight_bytes.unwrap() <= 700.0 + 1e-9);
+    }
+
+    #[test]
+    fn impossible_memory_cap_falls_back_infeasible() {
+        let calib = calib4();
+        let groups = singleton_groups(&[1.0, 1.0, 1.0, 1.0]);
+        let qlayers = qlayers4();
+        // Even all-FP8 needs 400 bytes.
+        let out = optimize_with_caps(&groups, &calib, 10.0, Some((&qlayers, 100.0))).unwrap();
+        assert!(!out.solution.feasible);
     }
 }

@@ -12,7 +12,9 @@ pub mod ip;
 pub mod pipeline;
 pub mod strategy;
 
-pub use ip::{optimize, IpOutcome};
+pub use ip::{optimize, optimize_with_caps, IpOutcome};
 #[allow(deprecated)]
 pub use pipeline::Pipeline;
-pub use strategy::{build_family, paper_tau_grid, select_config, Family, Strategy};
+pub use strategy::{
+    build_family, paper_tau_grid, select_config, select_config_constrained, Family, Strategy,
+};

@@ -9,7 +9,8 @@ use crate::numerics::Format;
 use crate::sensitivity::Calibration;
 use crate::timing::TimeMeasurements;
 use crate::util::Rng;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
 
 /// One strategy family: the IP objective + the baseline eligibility mask.
 #[derive(Clone, Debug, PartialEq)]
@@ -17,6 +18,46 @@ pub struct Family {
     pub objective: Objective,
     pub groups: Vec<GroupChoices>,
     pub eligible: Vec<bool>,
+    /// Per-group `configuration -> column` maps, precomputed so per-query
+    /// gain lookups are O(|group|) hashes instead of an O(|configs|) linear
+    /// scan per group (frontier sweeps issue thousands of lookups).
+    index: Vec<HashMap<Vec<Format>, usize>>,
+}
+
+impl Family {
+    pub fn new(objective: Objective, groups: Vec<GroupChoices>, eligible: Vec<bool>) -> Family {
+        let index = groups
+            .iter()
+            .map(|g| {
+                g.configs
+                    .iter()
+                    .enumerate()
+                    .map(|(p, c)| (c.clone(), p))
+                    .collect::<HashMap<Vec<Format>, usize>>()
+            })
+            .collect();
+        Family { objective, groups, eligible, index }
+    }
+
+    /// Column index of `key` in group j's configuration enumeration.
+    pub fn config_column(&self, j: usize, key: &[Format]) -> Option<usize> {
+        self.index[j].get(key).copied()
+    }
+
+    /// Objective-family gain of a full configuration: sum over groups of the
+    /// gain at the group's matching configuration column.  Layers not
+    /// covered by the family (e.g. BGEMM under IP-M) contribute nothing.
+    pub fn gain_of(&self, cfg: &MpConfig) -> Result<f64> {
+        let mut total = 0.0;
+        for (j, g) in self.groups.iter().enumerate() {
+            let key: Vec<Format> = g.qidxs.iter().map(|&q| cfg.get(q)).collect();
+            let p = self
+                .config_column(j, &key)
+                .ok_or_else(|| anyhow!("configuration not in group {j}'s enumeration"))?;
+            total += g.gains[p];
+        }
+        Ok(total)
+    }
 }
 
 /// Build the IP groups + baseline eligibility for one objective family.
@@ -38,7 +79,7 @@ pub fn build_family(
         Objective::Memory => qlayers.iter().map(|q| q.kind == LayerKind::Linear).collect(),
         _ => vec![true; qlayers.len()],
     };
-    Family { objective, groups, eligible }
+    Family::new(objective, groups, eligible)
 }
 
 /// Strategy selector (paper §3.1 comparison set).
@@ -109,6 +150,26 @@ pub fn select_config(
     })
 }
 
+/// Multi-constraint selection: like [`select_config`], but the IP strategy
+/// additionally optimizes under an optional weight-byte cap (a second
+/// knapsack dimension).  Baselines pick by loss budget alone — a resulting
+/// cap violation surfaces through the plan's `feasible` flag.
+pub fn select_config_constrained(
+    family: &Family,
+    strategy: Strategy,
+    calibration: &Calibration,
+    tau: f64,
+    memory: Option<(&[QLayer], f64)>,
+    seed: u64,
+) -> Result<MpConfig> {
+    match (strategy, memory) {
+        (Strategy::Ip, Some(_)) => {
+            Ok(super::ip::optimize_with_caps(&family.groups, calibration, tau, memory)?.config)
+        }
+        _ => select_config(family, strategy, calibration, tau, seed),
+    }
+}
+
 /// The paper's tau sweep (§3.2): {0, 0.1%, ..., 0.7%} plus all-FP8.
 pub fn paper_tau_grid() -> Vec<f64> {
     (0..=7).map(|i| i as f64 * 0.001).collect()
@@ -147,5 +208,29 @@ mod tests {
             assert_eq!(Objective::from_key(o.key()), Some(o));
         }
         assert_eq!(Objective::from_key("x"), None);
+    }
+
+    #[test]
+    fn family_index_matches_linear_scan() {
+        let groups = vec![GroupChoices {
+            qidxs: vec![0, 1],
+            configs: vec![
+                vec![Format::Bf16, Format::Bf16],
+                vec![Format::Bf16, Format::Fp8E4m3],
+                vec![Format::Fp8E4m3, Format::Bf16],
+                vec![Format::Fp8E4m3, Format::Fp8E4m3],
+            ],
+            gains: vec![0.0, 1.0, 2.0, 3.5],
+        }];
+        let fam = Family::new(Objective::EmpiricalTime, groups, vec![true, true]);
+        for (p, cfg) in fam.groups[0].configs.clone().iter().enumerate() {
+            assert_eq!(fam.config_column(0, cfg), Some(p));
+        }
+        assert_eq!(fam.config_column(0, &[Format::Fp32, Format::Bf16]), None);
+        let gain = fam
+            .gain_of(&MpConfig(vec![Format::Fp8E4m3, Format::Fp8E4m3]))
+            .unwrap();
+        assert_eq!(gain, 3.5);
+        assert!(fam.gain_of(&MpConfig(vec![Format::Fp32, Format::Bf16])).is_err());
     }
 }

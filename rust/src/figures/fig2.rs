@@ -6,6 +6,7 @@
 use super::FigureCtx;
 use crate::coordinator::Strategy;
 use crate::metrics::Objective;
+use crate::plan::PlanRequest;
 use crate::report::{self, ascii};
 use anyhow::Result;
 
@@ -17,7 +18,11 @@ pub fn run(ctx: &mut FigureCtx, model: &str) -> Result<()> {
     for strategy in [Strategy::Ip, Strategy::Prefix, Strategy::Random] {
         let mut rows: Vec<(String, String)> = Vec::new();
         for &tau in &ctx.params.taus {
-            let plan = planner.plan(Objective::EmpiricalTime, strategy, tau, 0)?;
+            let plan = planner.solve(
+                &PlanRequest::new(Objective::EmpiricalTime)
+                    .with_strategy(strategy)
+                    .with_loss_budget(tau),
+            )?;
             let bits = plan.config.bits_label();
             csv_rows.push(vec![
                 strategy.name().to_string(),

@@ -7,10 +7,10 @@
 //! itself needs the compiled forward (PJRT).
 
 use super::FigureCtx;
-use crate::coordinator::Strategy;
 use crate::gaudisim::{MpConfig, Simulator};
 use crate::metrics::Objective;
 use crate::numerics::Format;
+use crate::plan::PlanRequest;
 use crate::report::{self, ascii};
 use crate::sensitivity::validate::measured_loss_mse;
 use crate::util::{stats, Rng};
@@ -35,7 +35,8 @@ pub fn run(ctx: &mut FigureCtx, model: &str) -> Result<()> {
     // Configurations: IP-ET at each tau, plus all-FP8 (paper protocol).
     let mut configs: Vec<(String, MpConfig)> = Vec::new();
     for &tau in &ctx.params.taus {
-        let plan = planner.plan(Objective::EmpiricalTime, Strategy::Ip, tau, 0)?;
+        let plan = planner
+            .solve(&PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(tau))?;
         configs.push((format!("{tau}"), plan.config));
     }
     configs.push(("all-fp8".into(), MpConfig::uniform(nq, Format::Fp8E4m3)));

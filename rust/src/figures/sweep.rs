@@ -9,7 +9,7 @@ use crate::gaudisim::{MpConfig, Simulator};
 use crate::graph::Graph;
 use crate::metrics::{mem_layer_gain, tt_layer_gain, Objective};
 use crate::model::QLayer;
-use crate::plan::Planner;
+use crate::plan::{PlanRequest, Planner};
 use crate::sensitivity::validate::draw_pscale;
 use crate::util::Rng;
 use anyhow::Result;
@@ -87,7 +87,12 @@ pub fn run_sweep(
             for seed in 0..n_seeds {
                 // Strategy selection: IP/Prefix are tau-deterministic; Random
                 // re-draws per seed (paper Fig. 2 scattered patterns).
-                let plan = inp.planner.plan(objective, strategy, tau, seed)?;
+                let plan = inp.planner.solve(
+                    &PlanRequest::new(objective)
+                        .with_strategy(strategy)
+                        .with_loss_budget(tau)
+                        .with_seed(seed),
+                )?;
                 let config = plan.config;
                 let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9));
                 let ps = draw_pscale(nq, sigma, &mut rng);

@@ -16,10 +16,13 @@
 //! The public entry point is the **staged planning API** in [`plan`]:
 //! an [`plan::Engine`] materializes cacheable stage artifacts
 //! (`Partitioned -> Calibrated -> Measured`) once per model, and a
-//! [`plan::Planner`] answers `plan(objective, strategy, tau)` queries in
-//! microseconds, returning serializable [`plan::Plan`] values.  The old
-//! monolithic `coordinator::Pipeline` remains as a deprecated shim for one
-//! release.
+//! [`plan::Planner`] resolves multi-constraint [`plan::PlanRequest`]
+//! queries (loss budget + optional memory cap) in microseconds, returning
+//! serializable [`plan::Plan`] values.  [`plan::Planner::frontier`]
+//! precomputes the tau -> gain Pareto curve, and [`plan::PlanService`]
+//! serves both concurrently.  The old monolithic `coordinator::Pipeline`
+//! and the scalar `Planner::plan(...)` query remain as deprecated shims
+//! for one release.
 
 #![allow(
     clippy::len_without_is_empty,

@@ -5,11 +5,15 @@
 //!   partition  — stage-1 artifact: the Algorithm-2 sub-graph partition
 //!   calibrate  — stage-2 artifact: sensitivities s_l and E[g^2]
 //!   measure    — stage-3 artifact: per-group time-gain tables (§2.3.1)
-//!   optimize   — one planning query -> Plan (config + MSE + gain)
+//!   optimize   — one planning query -> Plan (config + MSE + gain);
+//!                multi-constraint via --memory-cap
 //!   evaluate   — evaluate a Plan's configuration on the tasks (PJRT)
 //!   pipeline   — Algorithm 1 end to end: stages 1-3 + IP tau sweep
 //!   sweep      — batch-solve tau x objective x strategy from cached
 //!                artifacts (one calibration + one measurement, total)
+//!   frontier   — precompute the tau -> gain Pareto frontier
+//!   serve      — answer a JSON batch of plan/frontier requests on a
+//!                concurrent PlanService
 //!   figures    — regenerate paper figures/tables into results/
 //!   ttft       — wall-clock TTFT of the real compiled forward (PJRT)
 //!
@@ -25,10 +29,10 @@ use ampq::gaudisim::MpConfig;
 use ampq::metrics::Objective;
 use ampq::numerics::Format;
 use ampq::plan::demo::demo_model;
-use ampq::plan::Engine;
+use ampq::plan::{load_requests, Engine, Plan, PlanRequest};
 use ampq::runtime::FwdMode;
 use ampq::timing::{measure_groups, TtftSource, WallTtft};
-use ampq::util::Args;
+use ampq::util::{Args, Json};
 use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
 use std::time::Instant;
@@ -47,10 +51,14 @@ commands:
   partition   stage-1 artifact: Algorithm-2 sub-graph partition (Fig. 6)
   calibrate   stage-2 artifact: sensitivity calibration s_l, E[g^2]
   measure     stage-3 artifact: per-group empirical time-gain tables
-  optimize    solve one (objective, strategy, tau) query -> Plan
+  optimize    solve one multi-constraint query -> Plan
   evaluate    evaluate a Plan's configuration on the eval tasks (needs PJRT)
   pipeline    Algorithm 1 end to end: stages 1-3 + IP tau sweep
   sweep       batch-solve the tau x objective x strategy grid from cache
+  frontier    precompute the tau -> gain Pareto frontier for one
+              (model, objective, strategy)
+  serve       answer a JSON array of requests (--requests FILE) on a
+              concurrent PlanService
   figures     regenerate paper figures/tables into results/
   ttft        wall-clock TTFT of the real compiled forward (needs PJRT)
 
@@ -60,6 +68,9 @@ options:
   --no-cache            disable the stage cache under <artifacts>/cache/
   --out DIR             figures output dir [results]
   --tau X               loss-NRMSE threshold [0.004]
+  --memory-cap BYTES    additional stored-weight-byte cap (optimize)
+  --requests FILE       serve: JSON array of plan/frontier requests
+  --threads N           serve: worker threads [4]
   --taus a,b,c          explicit tau grid [paper grid 0..0.007]
   --objective et|tt|m   IP objective family [et; sweep: all]
   --strategy ip|random|prefix
@@ -128,6 +139,8 @@ fn run(raw: &[String]) -> Result<()> {
         "evaluate" => cmd_evaluate(&mut engine, &model, &args),
         "pipeline" => cmd_pipeline(&mut engine, &model, &args, json),
         "sweep" => cmd_sweep(&mut engine, &model, &args, json),
+        "frontier" => cmd_frontier(&mut engine, &model, &args, json),
+        "serve" => cmd_serve(&mut engine, &args, json),
         "figures" => cmd_figures(engine, &args, fwd_mode),
         "ttft" => cmd_ttft(&mut engine, &model, &args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -236,14 +249,23 @@ fn cmd_measure(engine: &mut Engine, model: &str, json: bool) -> Result<()> {
     Ok(())
 }
 
+/// Build a [`PlanRequest`] from the shared CLI options.
+fn build_request(args: &Args) -> Result<PlanRequest> {
+    let mut req = PlanRequest::new(parse_objective(args)?)
+        .with_strategy(parse_strategy(args)?)
+        .with_loss_budget(args.f64_or("tau", 0.004)?)
+        .with_seed(args.u64_or("seed", 0)?);
+    if args.get("memory-cap").is_some() {
+        req = req.with_memory_cap(args.f64_or("memory-cap", 0.0)?);
+    }
+    Ok(req)
+}
+
 fn cmd_optimize(engine: &mut Engine, model: &str, args: &Args, json: bool) -> Result<()> {
-    let tau = args.f64_or("tau", 0.004)?;
-    let objective = parse_objective(args)?;
-    let strategy = parse_strategy(args)?;
-    let seed = args.u64_or("seed", 0)?;
+    let req = build_request(args)?;
     let part = engine.partitioned(model)?;
     let planner = engine.planner(model)?;
-    let plan = planner.plan(objective, strategy, tau, seed)?;
+    let plan = planner.solve(&req)?;
     if json {
         println!("{}", plan.to_json().to_string());
         return Ok(());
@@ -257,13 +279,12 @@ fn cmd_optimize(engine: &mut Engine, model: &str, args: &Args, json: bool) -> Re
 }
 
 fn cmd_evaluate(engine: &mut Engine, model: &str, args: &Args) -> Result<()> {
-    let tau = args.f64_or("tau", 0.004)?;
-    let objective = parse_objective(args)?;
-    let strategy = parse_strategy(args)?;
-    let seed = args.u64_or("seed", 0)?;
+    let req = build_request(args)?;
+    let (objective, strategy) = (req.objective, req.strategy);
+    let (tau, seed) = (req.tau.unwrap_or(0.004), req.seed);
     let sigma = args.f64_or("sigma", 0.02)?;
     let planner = engine.planner(model)?;
-    let plan = planner.plan(objective, strategy, tau, seed)?;
+    let plan = planner.solve(&req)?;
     let info = engine.info(model)?;
     let root = engine
         .artifacts_root()
@@ -324,7 +345,8 @@ fn cmd_pipeline(engine: &mut Engine, model: &str, args: &Args, json: bool) -> Re
         );
     }
     for &tau in &taus {
-        let plan = planner.plan(objective, Strategy::Ip, tau, 0)?;
+        let plan =
+            planner.solve(&PlanRequest::new(objective).with_loss_budget(tau))?;
         if json {
             println!("{}", plan.to_json().to_string());
         } else {
@@ -397,6 +419,82 @@ fn cmd_sweep(engine: &mut Engine, model: &str, args: &Args, json: bool) -> Resul
         plans.len(),
         solve_time.as_secs_f64() * 1e3,
         per_plan_us
+    );
+    Ok(())
+}
+
+fn cmd_frontier(engine: &mut Engine, model: &str, args: &Args, json: bool) -> Result<()> {
+    let objective = parse_objective(args)?;
+    let strategy = parse_strategy(args)?;
+    let planner = engine.planner(model)?;
+    let t0 = Instant::now();
+    let f = planner.frontier(objective, strategy)?;
+    let elapsed = t0.elapsed();
+    if json {
+        println!("{}", f.to_json().to_string());
+        return Ok(());
+    }
+    println!(
+        "frontier {model} {} {}: {} Pareto points over tau in [0, {:.5}] ({:.1} ms)",
+        objective.name(),
+        strategy.name(),
+        f.points.len(),
+        f.tau_max,
+        elapsed.as_secs_f64() * 1e3
+    );
+    println!("{:>10} {:>12} {:>12} {:>6}", "tau>=", "pred-mse", "gain", "nq");
+    for p in &f.points {
+        println!(
+            "{:>10.5} {:>12.3e} {:>12.3} {:>6}",
+            p.tau,
+            p.predicted_mse,
+            p.gain,
+            p.config.n_quantized()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(engine: &mut Engine, args: &Args, json: bool) -> Result<()> {
+    let path = PathBuf::from(
+        args.get("requests")
+            .ok_or_else(|| anyhow!("serve needs --requests <file.json>"))?,
+    );
+    let reqs = load_requests(&Json::parse_file(&path)?)?;
+    let mut models: Vec<&str> = reqs.iter().map(|r| r.model.as_str()).collect();
+    models.sort();
+    models.dedup();
+    let svc = engine.service(&models)?;
+    let threads = args.usize_or("threads", 4)?;
+    let t0 = Instant::now();
+    let answers = svc.serve_batch(&reqs, threads)?;
+    let elapsed = t0.elapsed();
+    for a in &answers {
+        if json {
+            println!("{}", a.to_string());
+        } else if a.opt("kind").and_then(|k| k.str().ok()) == Some("plan") {
+            println!("{}", Plan::from_json(a)?.summary());
+        } else {
+            println!(
+                "{} {} {} tau={:.4} gain={:.3} mse={:.3e} (frontier)",
+                a.get("model")?.str()?,
+                a.get("objective")?.str()?,
+                a.get("strategy")?.str()?,
+                a.get("tau")?.f64()?,
+                a.get("gain")?.f64()?,
+                a.get("predicted_mse")?.f64()?
+            );
+        }
+    }
+    eprintln!(
+        "serve: {} requests over {} models on {} threads in {:.1} ms \
+         ({:.1} us/request); {} frontier sweeps",
+        reqs.len(),
+        models.len(),
+        threads,
+        elapsed.as_secs_f64() * 1e3,
+        elapsed.as_secs_f64() * 1e6 / reqs.len().max(1) as f64,
+        svc.frontier_solves()
     );
     Ok(())
 }

@@ -5,7 +5,7 @@
 //!   * memory          c^M  — weight-byte reduction, linear layers only,
 //!     singleton groups (eq. 25-26).
 
-use crate::gaudisim::enumerate_configs;
+use crate::gaudisim::{enumerate_configs, MpConfig};
 use crate::graph::partition::Partition;
 use crate::model::{LayerKind, QLayer};
 use crate::numerics::{delta_m, delta_t, Format};
@@ -128,6 +128,27 @@ pub fn memory_groups(qlayers: &[QLayer], formats: &[Format]) -> Vec<GroupChoices
         .collect()
 }
 
+/// Total stored weight bytes of a full configuration: every layer's params
+/// at that layer's format width (BGEMM layers hold no weights — params is
+/// zero).  The cost table of memory-capped PlanRequests.
+pub fn weight_bytes(qlayers: &[QLayer], cfg: &MpConfig) -> f64 {
+    qlayers
+        .iter()
+        .enumerate()
+        .map(|(l, q)| q.params as f64 * cfg.get(l).bytes() as f64)
+        .sum()
+}
+
+/// Weight bytes of one group's layers under one group configuration
+/// (a column of the memory cost dimension).
+pub fn group_weight_bytes(qlayers: &[QLayer], qidxs: &[usize], cfg: &[Format]) -> f64 {
+    qidxs
+        .iter()
+        .zip(cfg)
+        .map(|(&q, &f)| qlayers[q].params as f64 * f.bytes() as f64)
+        .sum()
+}
+
 /// Layers covered by a set of groups (everything else defaults to BF16).
 pub fn covered_layers(groups: &[GroupChoices], n_qlayers: usize) -> Vec<bool> {
     let mut covered = vec![false; n_qlayers];
@@ -181,6 +202,18 @@ mod tests {
         }
         let covered = covered_layers(&groups, 3);
         assert_eq!(covered, vec![true, false, true]);
+    }
+
+    #[test]
+    fn weight_bytes_tracks_formats() {
+        let q = qlayers3();
+        let n = q.len();
+        let bf16 = weight_bytes(&q, &MpConfig::all_bf16(n));
+        assert_eq!(bf16, (64.0 + 128.0) * 2.0); // bgemm has no params
+        let fp8 = weight_bytes(&q, &MpConfig::uniform(n, Format::Fp8E4m3));
+        assert_eq!(fp8, 64.0 + 128.0);
+        let grp = group_weight_bytes(&q, &[0, 2], &[Format::Fp8E4m3, Format::Bf16]);
+        assert_eq!(grp, 64.0 + 256.0);
     }
 
     #[test]

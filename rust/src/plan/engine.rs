@@ -425,6 +425,12 @@ impl Engine {
         Planner::new(partitioned, calibrated, measured)
     }
 
+    /// Stage `models` and wrap their planners in a concurrent
+    /// [`crate::plan::PlanService`] (the `ampq serve` entry point).
+    pub fn service(&mut self, models: &[&str]) -> Result<crate::plan::PlanService> {
+        crate::plan::PlanService::from_engine(self, models)
+    }
+
     /// The compiled PJRT runtime of an artifact-backed model (loaded once).
     /// Synthetic models have none.
     pub fn runtime(&mut self, model: &str) -> Result<&ModelRuntime> {
@@ -505,10 +511,11 @@ mod tests {
         assert_eq!(c.cache_loads, 3);
 
         // And the cached artifacts produce identical plans.
-        use crate::coordinator::Strategy;
         use crate::metrics::Objective;
-        let a = p1.plan(Objective::EmpiricalTime, Strategy::Ip, 0.004, 0).unwrap();
-        let b = p2.plan(Objective::EmpiricalTime, Strategy::Ip, 0.004, 0).unwrap();
+        use crate::plan::PlanRequest;
+        let req = PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004);
+        let a = p1.solve(&req).unwrap();
+        let b = p2.solve(&req).unwrap();
         assert_eq!(a, b);
 
         std::fs::remove_dir_all(&cache).ok();

@@ -1,0 +1,350 @@
+//! Precomputed Pareto frontiers over the tau -> gain tradeoff.
+//!
+//! A pointwise IP solve answers ONE budget; serving wants the whole curve.
+//! [`sweep`] runs the pointwise solver over the calibration's tau range
+//! (paper grid + an even cover of [0, tau_max]), bisects adjacent taus whose
+//! optimal gains differ to localize the breakpoints, and Pareto-filters the
+//! records into a list of points with strictly increasing predicted MSE and
+//! gain.  [`Frontier::at`] then answers any tau in O(log n): the optimal
+//! gain is a step function of the budget, so the highest-gain point whose
+//! MSE fits IS the pointwise optimum for every tau the sweep localized
+//! (asserted against fresh IP solves in tests).  Frontiers round-trip
+//! through JSON, so they can be precomputed offline and shipped to serving
+//! hosts.
+
+use super::artifact::{check_header, formats_from_json, formats_to_json, num, SCHEMA_VERSION};
+use crate::coordinator::Strategy;
+use crate::gaudisim::MpConfig;
+use crate::metrics::Objective;
+use crate::solver::EPS;
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// One Pareto point: the best configuration at its MSE level.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontierPoint {
+    /// Smallest swept tau whose solve produced this plan.
+    pub tau: f64,
+    /// Predicted loss MSE d of `config` (eq. 6).
+    pub predicted_mse: f64,
+    /// Objective-family gain of `config`.
+    pub gain: f64,
+    pub config: MpConfig,
+}
+
+/// A precomputed, JSON-round-trippable Pareto frontier for one
+/// (model, objective, strategy).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frontier {
+    pub model: String,
+    pub objective: Objective,
+    pub strategy: Strategy,
+    /// E[g^2] mapping tau -> budget (tau^2 * E[g^2]).
+    pub eg2: f64,
+    /// Upper end of the swept tau range (every configuration fits beyond).
+    pub tau_max: f64,
+    /// Pareto points, strictly increasing in BOTH predicted_mse and gain.
+    pub points: Vec<FrontierPoint>,
+}
+
+impl Frontier {
+    /// O(log n) lookup: the highest-gain point whose predicted loss MSE
+    /// fits the tau budget.  Below the first point (the paper's tau = 0
+    /// edge) the all-baseline fallback point itself is returned — exactly
+    /// what a pointwise infeasible solve falls back to.
+    pub fn at(&self, tau: f64) -> &FrontierPoint {
+        let budget = tau * tau * self.eg2;
+        let k = self.points.partition_point(|p| p.predicted_mse <= budget + EPS);
+        if k == 0 {
+            &self.points[0]
+        } else {
+            &self.points[k - 1]
+        }
+    }
+
+    /// Whether the point `at(tau)` actually fits the tau budget.
+    pub fn feasible_at(&self, tau: f64) -> bool {
+        self.at(tau).predicted_mse <= tau * tau * self.eg2 + EPS
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let points = self
+            .points
+            .iter()
+            .map(|p| {
+                Json::Obj(vec![
+                    ("tau".into(), num(p.tau)),
+                    ("predicted_mse".into(), num(p.predicted_mse)),
+                    ("gain".into(), num(p.gain)),
+                    ("config".into(), formats_to_json(&p.config.0)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("schema".into(), Json::Num(SCHEMA_VERSION as f64)),
+            ("kind".into(), Json::Str("frontier".into())),
+            ("model".into(), Json::Str(self.model.clone())),
+            ("objective".into(), Json::Str(self.objective.key().into())),
+            ("strategy".into(), Json::Str(self.strategy.key().into())),
+            ("eg2".into(), num(self.eg2)),
+            ("tau_max".into(), num(self.tau_max)),
+            ("points".into(), Json::Arr(points)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Frontier> {
+        check_header(j, "frontier")?;
+        let okey = j.get("objective")?.str()?;
+        let objective =
+            Objective::from_key(okey).ok_or_else(|| anyhow!("unknown objective '{okey}'"))?;
+        let skey = j.get("strategy")?.str()?;
+        let strategy =
+            Strategy::from_key(skey).ok_or_else(|| anyhow!("unknown strategy '{skey}'"))?;
+        let points = j
+            .get("points")?
+            .arr()?
+            .iter()
+            .map(|pj| {
+                Ok(FrontierPoint {
+                    tau: pj.get("tau")?.f64()?,
+                    predicted_mse: pj.get("predicted_mse")?.f64()?,
+                    gain: pj.get("gain")?.f64()?,
+                    config: MpConfig(formats_from_json(pj.get("config")?)?),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if points.is_empty() {
+            bail!("frontier has no points");
+        }
+        // `at` binary-searches over predicted_mse — reject artifacts whose
+        // points were reordered or merged out of the Pareto invariant.
+        for (i, w) in points.windows(2).enumerate() {
+            if !(w[1].predicted_mse > w[0].predicted_mse && w[1].gain > w[0].gain) {
+                bail!(
+                    "frontier points must strictly increase in predicted_mse and gain \
+                     (violated between points {i} and {})",
+                    i + 1
+                );
+            }
+        }
+        Ok(Frontier {
+            model: j.get("model")?.str()?.to_string(),
+            objective,
+            strategy,
+            eg2: j.get("eg2")?.f64()?,
+            tau_max: j.get("tau_max")?.f64()?,
+            points,
+        })
+    }
+}
+
+/// Cap on total pointwise solves per sweep (grid + bisection refinement).
+const MAX_REFINE_SOLVES: usize = 320;
+
+/// Sweep taus through `solve` (tau -> (predicted_mse, gain, config)),
+/// refine gain breakpoints by bisection, Pareto-filter, and assemble the
+/// [`Frontier`].  `grid` taus outside [0, tau_max] are clamped away; 0 and
+/// tau_max themselves are always solved.
+pub fn sweep<F>(
+    model: &str,
+    objective: Objective,
+    strategy: Strategy,
+    eg2: f64,
+    tau_max: f64,
+    grid: &[f64],
+    mut solve: F,
+) -> Result<Frontier>
+where
+    F: FnMut(f64) -> Result<(f64, f64, MpConfig)>,
+{
+    struct Rec {
+        tau: f64,
+        mse: f64,
+        gain: f64,
+        config: MpConfig,
+    }
+    if !(tau_max > 0.0) || !tau_max.is_finite() {
+        bail!("tau_max must be positive and finite (got {tau_max})");
+    }
+    let mut taus: Vec<f64> = grid
+        .iter()
+        .copied()
+        .filter(|t| t.is_finite() && *t >= 0.0 && *t <= tau_max)
+        .collect();
+    taus.push(0.0);
+    taus.push(tau_max);
+    taus.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    taus.dedup_by(|a, b| (*a - *b).abs() <= tau_max * 1e-9);
+
+    let mut records: Vec<Rec> = Vec::with_capacity(taus.len());
+    for &tau in &taus {
+        let (mse, gain, config) = solve(tau)?;
+        records.push(Rec { tau, mse, gain, config });
+    }
+
+    // Bisect adjacent taus with differing optimal gains until the gain step
+    // is localized to tau_res (or the solve budget runs out).
+    let gain_span = records.iter().map(|r| r.gain.abs()).fold(0.0, f64::max);
+    let gtol = 1e-9 * (1.0 + gain_span);
+    let tau_res = tau_max * 1e-4;
+    let mut queue: Vec<(f64, f64, f64, f64)> = records
+        .windows(2)
+        .filter(|w| (w[1].gain - w[0].gain).abs() > gtol)
+        .map(|w| (w[0].tau, w[0].gain, w[1].tau, w[1].gain))
+        .collect();
+    let mut solves_left = MAX_REFINE_SOLVES;
+    while let Some((lo, glo, hi, ghi)) = queue.pop() {
+        if solves_left == 0 {
+            break;
+        }
+        if hi - lo <= tau_res {
+            continue;
+        }
+        let mid = 0.5 * (lo + hi);
+        let (mse, gain, config) = solve(mid)?;
+        solves_left -= 1;
+        records.push(Rec { tau: mid, mse, gain, config });
+        if (gain - glo).abs() > gtol {
+            queue.push((lo, glo, mid, gain));
+        }
+        if (ghi - gain).abs() > gtol {
+            queue.push((mid, gain, hi, ghi));
+        }
+    }
+
+    // Pareto filter: ascending MSE, keep only strictly increasing gain
+    // (ties resolve to the cheapest MSE, then the smallest tau).
+    records.sort_by(|a, b| {
+        a.mse
+            .partial_cmp(&b.mse)
+            .unwrap()
+            .then(b.gain.partial_cmp(&a.gain).unwrap())
+            .then(a.tau.partial_cmp(&b.tau).unwrap())
+    });
+    let mut points: Vec<FrontierPoint> = Vec::new();
+    for r in records {
+        let keep = points.last().map_or(true, |l| r.gain > l.gain);
+        if keep {
+            points.push(FrontierPoint {
+                tau: r.tau,
+                predicted_mse: r.mse,
+                gain: r.gain,
+                config: r.config,
+            });
+        }
+    }
+    if points.is_empty() {
+        bail!("frontier sweep produced no points");
+    }
+    Ok(Frontier { model: model.to_string(), objective, strategy, eg2, tau_max, points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::Format;
+
+    /// Synthetic 1-knob "solver": gain jumps 0 -> 5 -> 9 at known budgets.
+    fn step_solve(tau: f64) -> Result<(f64, f64, MpConfig)> {
+        let budget = tau * tau; // eg2 = 1
+        if budget >= 0.9 {
+            Ok((0.9, 9.0, MpConfig(vec![Format::Fp8E4m3, Format::Fp8E4m3])))
+        } else if budget >= 0.25 {
+            Ok((0.25, 5.0, MpConfig(vec![Format::Fp8E4m3, Format::Bf16])))
+        } else {
+            Ok((0.01, 0.0, MpConfig(vec![Format::Bf16, Format::Bf16])))
+        }
+    }
+
+    fn step_frontier() -> Frontier {
+        sweep(
+            "m",
+            Objective::EmpiricalTime,
+            Strategy::Ip,
+            1.0,
+            2.0,
+            &[0.0, 0.1, 1.2, 2.0],
+            step_solve,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sweep_finds_every_step() {
+        let f = step_frontier();
+        assert_eq!(f.points.len(), 3);
+        assert_eq!(f.points[0].gain, 0.0);
+        assert_eq!(f.points[1].gain, 5.0);
+        assert_eq!(f.points[2].gain, 9.0);
+        // Strictly increasing in both coordinates.
+        for w in f.points.windows(2) {
+            assert!(w[1].predicted_mse > w[0].predicted_mse);
+            assert!(w[1].gain > w[0].gain);
+        }
+    }
+
+    #[test]
+    fn at_matches_the_step_function() {
+        let f = step_frontier();
+        for tau in [0.0, 0.05, 0.3, 0.49, 0.51, 0.7, 0.94, 0.96, 1.5, 2.0] {
+            let (mse, gain, config) = step_solve(tau).unwrap();
+            let p = f.at(tau);
+            assert_eq!(p.gain, gain, "tau {tau}");
+            assert_eq!(p.predicted_mse, mse, "tau {tau}");
+            assert_eq!(p.config, config, "tau {tau}");
+        }
+        // Below the fallback point's own MSE, at() still returns it.
+        assert_eq!(f.at(0.0).gain, 0.0);
+        assert!(!f.feasible_at(0.0));
+        assert!(f.feasible_at(0.2));
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let f = step_frontier();
+        let text = f.to_json().to_string();
+        let back = Frontier::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn rejects_other_kinds() {
+        let f = step_frontier();
+        let mut j = f.to_json();
+        if let Json::Obj(kv) = &mut j {
+            kv[1].1 = Json::Str("plan".into());
+        }
+        assert!(Frontier::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_unsorted_points() {
+        let f = step_frontier();
+        let mut j = f.to_json();
+        if let Json::Obj(kv) = &mut j {
+            let points = kv.iter_mut().find(|(k, _)| k == "points").unwrap();
+            if let Json::Arr(pts) = &mut points.1 {
+                pts.swap(0, 2); // break the sorted invariant at() relies on
+            }
+        }
+        assert!(Frontier::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_tau_max() {
+        assert!(sweep(
+            "m",
+            Objective::EmpiricalTime,
+            Strategy::Ip,
+            1.0,
+            0.0,
+            &[],
+            step_solve
+        )
+        .is_err());
+    }
+}

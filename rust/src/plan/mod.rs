@@ -1,45 +1,66 @@
-//! Staged planning API (the 0.2 public surface).
+//! Staged planning API (the 0.3 public surface).
 //!
 //! The paper's Algorithm 1 is explicitly staged — partition (Algorithm 2),
 //! sensitivity calibration (eq. 21), per-group time-gain measurement
-//! (§2.3.1), then one IP solve per (objective, tau) query (eq. 5).  This
-//! module exposes exactly that seam:
+//! (§2.3.1), then one IP solve per query (eq. 5).  This module exposes
+//! exactly that seam:
 //!
 //! * [`Engine`] owns the runtime and a multi-model registry and produces
 //!   the typed stage artifacts [`Partitioned`] -> [`Calibrated`] ->
 //!   [`Measured`], each cached in memory and (optionally) on disk under
 //!   `artifacts/cache/<model>/<stage>.json`;
-//! * [`Planner`] answers `plan(objective, strategy, tau)` queries against
-//!   those artifacts in microseconds, with no recomputation;
+//! * [`PlanRequest`] is the multi-constraint query builder — loss budget,
+//!   memory cap, strategy, seed — resolved by [`Planner::solve`] against
+//!   the artifacts in microseconds, with no recomputation;
+//! * [`Planner::frontier`] precomputes the whole tau -> gain Pareto curve
+//!   ([`Frontier`], JSON-round-trippable) for O(log n) `at(tau)` lookups;
+//! * [`PlanService`] is the `Send + Sync` serving handle: `Arc<Planner>`s
+//!   per model plus an interior frontier cache for concurrent callers;
 //! * [`Plan`] is the self-contained, JSON-round-trippable answer:
-//!   configuration + predicted MSE + gain + provenance.
+//!   configuration + predicted MSE + gain + weight bytes + provenance.
 //!
 //! ```no_run
 //! use ampq::metrics::Objective;
 //! use ampq::coordinator::{paper_tau_grid, Strategy};
-//! use ampq::plan::Engine;
+//! use ampq::plan::{Engine, PlanRequest};
 //!
 //! # fn main() -> anyhow::Result<()> {
 //! let mut engine = Engine::new()
 //!     .with_artifacts_root("artifacts")
 //!     .with_cache_dir("artifacts/cache");
 //! let planner = engine.planner("tiny-s")?; // stages run (or load) once
+//! let plan = planner.solve(
+//!     &PlanRequest::new(Objective::EmpiricalTime)
+//!         .with_loss_budget(0.004)
+//!         .with_memory_cap(1.5e6)
+//!         .with_strategy(Strategy::Ip),
+//! )?;
+//! println!("{}", plan.to_json().to_string());
+//! let frontier = planner.frontier(Objective::EmpiricalTime, Strategy::Ip)?;
 //! for tau in paper_tau_grid() {
-//!     let plan = planner.plan(Objective::EmpiricalTime, Strategy::Ip, tau, 0)?;
-//!     println!("{}", plan.to_json().to_string());
+//!     println!("tau {tau}: gain {}", frontier.at(tau).gain);
 //! }
 //! # Ok(())
 //! # }
 //! ```
+//!
+//! The 0.2 scalar query `Planner::plan(objective, strategy, tau, seed)`
+//! remains as a deprecated one-release shim delegating to `solve`.
 
 pub mod artifact;
 pub mod demo;
 pub mod engine;
+pub mod frontier;
 pub mod planner;
+pub mod request;
+pub mod service;
 
 pub use self::artifact::{Calibrated, Measured, Partitioned, SCHEMA_VERSION};
 pub use self::engine::{Engine, EngineCounters};
+pub use self::frontier::{Frontier, FrontierPoint};
 pub use self::planner::Planner;
+pub use self::request::PlanRequest;
+pub use self::service::{load_requests, PlanService, ServeRequest};
 
 use crate::coordinator::Strategy;
 use crate::gaudisim::MpConfig;
@@ -89,6 +110,11 @@ pub struct Plan {
     pub nrmse: f64,
     /// Group-additive TTFT prediction for `config`, microseconds (eq. 7).
     pub predicted_ttft_us: f64,
+    /// Weight-byte cap the request imposed (None = unconstrained).  When
+    /// set, `feasible` also requires `weight_bytes <= memory_cap`.
+    pub memory_cap: Option<f64>,
+    /// Total stored weight bytes of `config` (params at chosen widths).
+    pub weight_bytes: f64,
     pub provenance: Provenance,
 }
 
@@ -101,7 +127,7 @@ impl Plan {
             ("n_groups".into(), unum(self.provenance.n_groups)),
             ("base_ttft_us".into(), num(self.provenance.base_ttft_us)),
         ]);
-        Json::Obj(vec![
+        let mut kv: Vec<(String, Json)> = vec![
             ("schema".into(), Json::Num(SCHEMA_VERSION as f64)),
             ("kind".into(), Json::Str("plan".into())),
             ("model".into(), Json::Str(self.model.clone())),
@@ -118,8 +144,14 @@ impl Plan {
             ("budget".into(), num(self.budget)),
             ("nrmse".into(), num(self.nrmse)),
             ("predicted_ttft_us".into(), num(self.predicted_ttft_us)),
-            ("provenance".into(), prov),
-        ])
+        ];
+        // Optional constraint field: emitted only when the request set it.
+        if let Some(cap) = self.memory_cap {
+            kv.push(("memory_cap".into(), num(cap)));
+        }
+        kv.push(("weight_bytes".into(), num(self.weight_bytes)));
+        kv.push(("provenance".into(), prov));
+        Json::Obj(kv)
     }
 
     pub fn from_json(j: &Json) -> Result<Plan> {
@@ -157,6 +189,16 @@ impl Plan {
             budget: j.get("budget")?.f64()?,
             nrmse: j.get("nrmse")?.f64()?,
             predicted_ttft_us: j.get("predicted_ttft_us")?.f64()?,
+            memory_cap: match j.opt("memory_cap") {
+                None => None,
+                Some(x) => Some(x.f64()?),
+            },
+            // 0.2-era Plans (same schema version) predate this field; 0.0
+            // marks "unknown" so old artifacts keep parsing.
+            weight_bytes: match j.opt("weight_bytes") {
+                None => 0.0,
+                Some(x) => x.f64()?,
+            },
             provenance: Provenance {
                 calib_samples: pj.get("calib_samples")?.usize()?,
                 eg2: pj.get("eg2")?.f64()?,
@@ -168,8 +210,12 @@ impl Plan {
 
     /// One-line human summary (the CLI's non-JSON output row).
     pub fn summary(&self) -> String {
+        let mem = match self.memory_cap {
+            Some(cap) => format!(" bytes={:.3e}/cap={:.3e}", self.weight_bytes, cap),
+            None => String::new(),
+        };
         format!(
-            "{} {} {} tau={:.4} nq={}/{} gain={:.3} mse={:.3e} budget={:.3e} ttft={:.1}us{}",
+            "{} {} {} tau={:.4} nq={}/{} gain={:.3} mse={:.3e} budget={:.3e} ttft={:.1}us{}{}",
             self.model,
             self.objective.name(),
             self.strategy.name(),
@@ -180,6 +226,7 @@ impl Plan {
             self.predicted_mse,
             self.budget,
             self.predicted_ttft_us,
+            mem,
             if self.feasible { "" } else { " (infeasible: baseline fallback)" }
         )
     }
@@ -203,6 +250,8 @@ mod tests {
             budget: 7.04e-5,
             nrmse: 0.00263,
             predicted_ttft_us: 812.375,
+            memory_cap: None,
+            weight_bytes: 196608.0,
             provenance: Provenance {
                 calib_samples: 16,
                 eg2: 4.4,
@@ -225,6 +274,29 @@ mod tests {
         let s = plan_fixture().summary();
         assert!(s.contains("IP"));
         assert!(s.contains("0.0040"));
+    }
+
+    #[test]
+    fn parses_02_era_plans_without_weight_bytes() {
+        let p = plan_fixture();
+        let mut j = p.to_json();
+        if let Json::Obj(kv) = &mut j {
+            kv.retain(|(k, _)| k != "weight_bytes");
+        }
+        let back = Plan::from_json(&j).unwrap();
+        assert_eq!(back.weight_bytes, 0.0); // "unknown" marker
+        assert_eq!(back.config, p.config);
+    }
+
+    #[test]
+    fn memory_cap_roundtrips_when_present() {
+        let mut p = plan_fixture();
+        p.memory_cap = Some(2.5e5);
+        let text = p.to_json().to_string();
+        let back = Plan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p);
+        assert!(p.summary().contains("cap="));
+        assert!(!plan_fixture().summary().contains("cap="));
     }
 
     #[test]

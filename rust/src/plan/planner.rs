@@ -1,25 +1,34 @@
 //! The query half of the staged API: a [`Planner`] is assembled from the
-//! three stage artifacts and answers `plan(objective, strategy, tau)` in
+//! three stage artifacts and answers multi-constraint [`PlanRequest`]s in
 //! microseconds — one MCKP solve over precomputed gain/cost tables, no
-//! calibration or measurement.
+//! calibration or measurement.  `Planner::frontier` precomputes the whole
+//! tau -> gain Pareto curve for O(log n) serving-time lookups.
 
 use super::artifact::{Calibrated, Measured, Partitioned};
+use super::frontier::{self, Frontier};
+use super::request::PlanRequest;
 use super::{Plan, Provenance};
-use crate::coordinator::strategy::{build_family, select_config, Family, Strategy};
-use crate::gaudisim::MpConfig;
-use crate::metrics::Objective;
+use crate::coordinator::strategy::{
+    build_family, select_config_constrained, Family, Strategy,
+};
+use crate::metrics::{covered_layers, weight_bytes, Objective};
 use crate::numerics::Format;
 use crate::sensitivity::Calibration;
+use crate::solver::EPS;
 use crate::timing::TimeMeasurements;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 /// Immutable planning state for one model: artifacts + the three
-/// precomputed IP families.
+/// precomputed IP families.  Plain data — `Send + Sync`, so serving layers
+/// can share one instance across threads (see `plan::service`).
 pub struct Planner {
     partitioned: Partitioned,
     calibrated: Calibrated,
     measured: Measured,
     families: [Family; 3],
+    /// Per-family tau_max, precomputed at assembly (pure function of the
+    /// artifacts) so budget-less requests stay O(solve), not O(tables).
+    tau_maxes: [f64; 3],
 }
 
 impl Planner {
@@ -79,7 +88,12 @@ impl Planner {
                 &measured.measurements,
             )
         });
-        Ok(Planner { partitioned, calibrated, measured, families })
+        let tau_maxes = [
+            family_tau_max(&families[0], &calibrated.calibration),
+            family_tau_max(&families[1], &calibrated.calibration),
+            family_tau_max(&families[2], &calibrated.calibration),
+        ];
+        Ok(Planner { partitioned, calibrated, measured, families, tau_maxes })
     }
 
     pub fn model(&self) -> &str {
@@ -110,34 +124,62 @@ impl Planner {
         }
     }
 
-    /// Answer one planning query.  Pure function of the artifacts: no
-    /// calibration, measurement, or IO happens here.
-    pub fn plan(
-        &self,
-        objective: Objective,
-        strategy: Strategy,
-        tau: f64,
-        seed: u64,
-    ) -> Result<Plan> {
-        let family = self.family(objective);
+    /// The tau beyond which an objective's loss constraint is vacuous: the
+    /// NRMSE of the family's maximal-MSE configuration (uncovered layers at
+    /// BF16), plus headroom so that configuration itself is feasible.
+    /// Precomputed once at assembly.
+    pub fn tau_max(&self, objective: Objective) -> f64 {
+        match objective {
+            Objective::EmpiricalTime => self.tau_maxes[0],
+            Objective::TheoreticalTime => self.tau_maxes[1],
+            Objective::Memory => self.tau_maxes[2],
+        }
+    }
+
+    /// Resolve one multi-constraint planning query.  Pure function of the
+    /// artifacts: no calibration, measurement, or IO happens here.
+    pub fn solve(&self, req: &PlanRequest) -> Result<Plan> {
+        let family = self.family(req.objective);
         let calib = &self.calibrated.calibration;
-        let config = select_config(family, strategy, calib, tau, seed)?;
-        let gain = family_gain(family, &config)?;
+        let qlayers = &self.partitioned.qlayers;
+        if let Some(t) = req.tau {
+            // tau enters the budget squared — a negative value would
+            // silently plan like its absolute value.
+            if !t.is_finite() || t < 0.0 {
+                bail!("loss budget tau must be finite and non-negative (got {t})");
+            }
+        }
+        if let Some(c) = req.memory_cap {
+            if !c.is_finite() || c < 0.0 {
+                bail!("memory cap must be finite and non-negative (got {c})");
+            }
+        }
+        // No loss budget = plan at tau_max (the constraint is vacuous and
+        // only the remaining constraints bind).
+        let tau = req.tau.unwrap_or_else(|| self.tau_max(req.objective));
+        let memory = req.memory_cap.map(|cap| (qlayers.as_slice(), cap));
+        let config =
+            select_config_constrained(family, req.strategy, calib, tau, memory, req.seed)?;
+        let gain = family.gain_of(&config)?;
         let predicted_mse = calib.loss_mse(&config);
         let budget = calib.budget(tau);
+        let bytes = weight_bytes(qlayers, &config);
+        let mem_ok = req.memory_cap.map_or(true, |cap| bytes <= cap + EPS);
         let tm = &self.measured.measurements;
         Ok(Plan {
             model: self.partitioned.model.clone(),
-            objective,
-            strategy,
+            objective: req.objective,
+            strategy: req.strategy,
             tau,
-            seed,
-            feasible: predicted_mse <= budget + 1e-12,
+            seed: req.seed,
+            feasible: predicted_mse <= budget + EPS && mem_ok,
             gain,
             predicted_mse,
             budget,
             nrmse: calib.normalized_rmse(&config),
             predicted_ttft_us: tm.predict_ttft(&config),
+            memory_cap: req.memory_cap,
+            weight_bytes: bytes,
             provenance: Provenance {
                 calib_samples: calib.n_samples,
                 eg2: calib.eg2,
@@ -146,6 +188,57 @@ impl Planner {
             },
             config,
         })
+    }
+
+    /// Precompute the Pareto frontier of the tau -> gain tradeoff for one
+    /// (objective, strategy): the paper tau grid plus an even cover of
+    /// [0, tau_max], bisection-refined at every gain step.  `frontier.at(tau)`
+    /// then answers any threshold in O(log n) and agrees with a pointwise
+    /// IP solve (asserted in tests).
+    pub fn frontier(&self, objective: Objective, strategy: Strategy) -> Result<Frontier> {
+        let tau_max = self.tau_max(objective);
+        let mut grid: Vec<f64> =
+            crate::coordinator::paper_tau_grid().into_iter().filter(|t| *t <= tau_max).collect();
+        const COVER: usize = 24;
+        for i in 0..=COVER {
+            grid.push(tau_max * i as f64 / COVER as f64);
+        }
+        frontier::sweep(
+            self.model(),
+            objective,
+            strategy,
+            self.calibrated.calibration.eg2,
+            tau_max,
+            &grid,
+            |tau| {
+                let plan = self.solve(
+                    &PlanRequest::new(objective).with_strategy(strategy).with_loss_budget(tau),
+                )?;
+                Ok((plan.predicted_mse, plan.gain, plan.config))
+            },
+        )
+    }
+
+    /// One-release compatibility shim for the 0.2 scalar query surface.
+    #[deprecated(
+        since = "0.3.0",
+        note = "build a PlanRequest (PlanRequest::new(objective).with_loss_budget(tau)...) and \
+                call Planner::solve, or use Planner::frontier for whole-curve queries; this shim \
+                is removed next release"
+    )]
+    pub fn plan(
+        &self,
+        objective: Objective,
+        strategy: Strategy,
+        tau: f64,
+        seed: u64,
+    ) -> Result<Plan> {
+        self.solve(
+            &PlanRequest::new(objective)
+                .with_strategy(strategy)
+                .with_loss_budget(tau)
+                .with_seed(seed),
+        )
     }
 
     /// Batch-solve a full grid; plans come back in (objective, strategy,
@@ -162,7 +255,12 @@ impl Planner {
         for &objective in objectives {
             for &strategy in strategies {
                 for &tau in taus {
-                    plans.push(self.plan(objective, strategy, tau, seed)?);
+                    plans.push(self.solve(
+                        &PlanRequest::new(objective)
+                            .with_strategy(strategy)
+                            .with_loss_budget(tau)
+                            .with_seed(seed),
+                    )?);
                 }
             }
         }
@@ -170,21 +268,29 @@ impl Planner {
     }
 }
 
-/// Objective-family gain of a full configuration: sum over groups of the
-/// gain at the group's matching configuration column.  Layers not covered
-/// by the family (e.g. BGEMM under IP-M) contribute nothing.
-fn family_gain(family: &Family, cfg: &MpConfig) -> Result<f64> {
-    let mut total = 0.0;
-    for g in &family.groups {
-        let key: Vec<Format> = g.qidxs.iter().map(|&q| cfg.get(q)).collect();
-        let p = g
-            .configs
-            .iter()
-            .position(|c| c == &key)
-            .ok_or_else(|| anyhow!("configuration not in the group's enumeration"))?;
-        total += g.gains[p];
-    }
-    Ok(total)
+/// NRMSE of a family's maximal-MSE configuration (uncovered layers at
+/// BF16), with headroom so that configuration itself is feasible at the
+/// returned tau.  Pure function of the artifacts — computed once per
+/// family at `Planner::new`.
+fn family_tau_max(family: &Family, calib: &Calibration) -> f64 {
+    let nq = calib.s.len();
+    let covered = covered_layers(&family.groups, nq);
+    let uncovered: f64 = (0..nq)
+        .filter(|&l| !covered[l])
+        .map(|l| calib.layer_mse(l, Format::Bf16))
+        .sum();
+    let max_mse: f64 = family
+        .groups
+        .iter()
+        .map(|g| {
+            g.configs
+                .iter()
+                .map(|cfg| calib.group_mse(&g.qidxs, cfg))
+                .fold(0.0, f64::max)
+        })
+        .sum::<f64>()
+        + uncovered;
+    (max_mse / calib.eg2).sqrt() * (1.0 + 1e-9)
 }
 
 #[cfg(test)]
@@ -200,12 +306,16 @@ mod tests {
         engine.planner("demo").unwrap()
     }
 
+    fn req(objective: Objective, tau: f64) -> PlanRequest {
+        PlanRequest::new(objective).with_loss_budget(tau)
+    }
+
     #[test]
     fn ip_plans_respect_budget() {
         let planner = demo_planner();
         for objective in Objective::ALL {
             for tau in [0.001, 0.004, 0.007] {
-                let plan = planner.plan(objective, Strategy::Ip, tau, 0).unwrap();
+                let plan = planner.solve(&req(objective, tau)).unwrap();
                 assert!(plan.feasible, "{objective:?} tau {tau}");
                 assert!(plan.predicted_mse <= plan.budget + 1e-12);
                 assert_eq!(plan.config.len(), planner.n_qlayers());
@@ -214,11 +324,19 @@ mod tests {
     }
 
     #[test]
+    fn negative_or_nan_constraints_are_rejected() {
+        let planner = demo_planner();
+        assert!(planner.solve(&req(Objective::EmpiricalTime, -0.004)).is_err());
+        assert!(planner.solve(&req(Objective::EmpiricalTime, f64::NAN)).is_err());
+        assert!(planner
+            .solve(&req(Objective::EmpiricalTime, 0.004).with_memory_cap(-1.0))
+            .is_err());
+    }
+
+    #[test]
     fn tau_zero_returns_all_bf16() {
         let planner = demo_planner();
-        let plan = planner
-            .plan(Objective::EmpiricalTime, Strategy::Ip, 0.0, 0)
-            .unwrap();
+        let plan = planner.solve(&req(Objective::EmpiricalTime, 0.0)).unwrap();
         assert_eq!(plan.config.n_quantized(), 0);
     }
 
@@ -227,12 +345,52 @@ mod tests {
         let planner = demo_planner();
         let mut last = -1.0;
         for tau in [0.001, 0.002, 0.004, 0.007] {
-            let plan = planner
-                .plan(Objective::EmpiricalTime, Strategy::Ip, tau, 0)
-                .unwrap();
+            let plan = planner.solve(&req(Objective::EmpiricalTime, tau)).unwrap();
             assert!(plan.gain >= last - 1e-9, "tau {tau}: {} < {last}", plan.gain);
             last = plan.gain;
         }
+    }
+
+    #[test]
+    fn deprecated_shim_delegates_to_solve() {
+        let planner = demo_planner();
+        #[allow(deprecated)]
+        let via_shim = planner
+            .plan(Objective::EmpiricalTime, Strategy::Ip, 0.004, 3)
+            .unwrap();
+        let via_request = planner
+            .solve(&req(Objective::EmpiricalTime, 0.004).with_seed(3))
+            .unwrap();
+        assert_eq!(via_shim, via_request);
+    }
+
+    #[test]
+    fn no_loss_budget_plans_at_tau_max() {
+        let planner = demo_planner();
+        let plan = planner.solve(&PlanRequest::new(Objective::EmpiricalTime)).unwrap();
+        assert!(plan.feasible);
+        // Loss constraint vacuous: everything profitable gets quantized.
+        let at_max = planner
+            .solve(&req(Objective::EmpiricalTime, planner.tau_max(Objective::EmpiricalTime)))
+            .unwrap();
+        assert_eq!(plan.config, at_max.config);
+    }
+
+    #[test]
+    fn memory_cap_binds_and_is_reported() {
+        let planner = demo_planner();
+        let free = planner.solve(&req(Objective::EmpiricalTime, 0.007)).unwrap();
+        assert!(free.memory_cap.is_none());
+        // Cap strictly below the unconstrained plan's bytes.
+        let cap = free.weight_bytes * 0.9;
+        let capped = planner
+            .solve(&req(Objective::EmpiricalTime, 0.007).with_memory_cap(cap))
+            .unwrap();
+        assert_eq!(capped.memory_cap, Some(cap));
+        assert!(capped.weight_bytes <= cap + 1e-9, "{} > {cap}", capped.weight_bytes);
+        assert!(capped.predicted_mse <= capped.budget + 1e-12);
+        assert!(capped.feasible);
+        assert!(capped.gain <= free.gain + 1e-9);
     }
 
     #[test]
@@ -254,13 +412,25 @@ mod tests {
     #[test]
     fn memory_family_keeps_bgemm_at_baseline() {
         let planner = demo_planner();
-        let plan = planner
-            .plan(Objective::Memory, Strategy::Ip, 0.01, 0)
-            .unwrap();
+        let plan = planner.solve(&req(Objective::Memory, 0.01)).unwrap();
         for (l, q) in planner.partitioned().qlayers.iter().enumerate() {
             if q.kind == crate::model::LayerKind::Bgemm {
                 assert_eq!(plan.config.get(l), Format::Bf16, "{}", q.name);
             }
+        }
+    }
+
+    #[test]
+    fn tau_max_makes_every_family_fully_feasible() {
+        let planner = demo_planner();
+        for objective in Objective::ALL {
+            let tmax = planner.tau_max(objective);
+            assert!(tmax > 0.0);
+            let plan = planner.solve(&req(objective, tmax)).unwrap();
+            assert!(plan.feasible, "{objective:?}");
+            // Larger taus change nothing.
+            let beyond = planner.solve(&req(objective, tmax * 2.0)).unwrap();
+            assert_eq!(plan.config, beyond.config, "{objective:?}");
         }
     }
 }

@@ -1,0 +1,182 @@
+//! Multi-constraint planning queries.
+//!
+//! [`PlanRequest`] is the builder the 0.3 query surface resolves through
+//! `Planner::solve`, replacing the scalar `plan(objective, strategy, tau,
+//! seed)` signature: a request names the objective to maximize plus any
+//! combination of constraints —
+//!
+//! ```no_run
+//! use ampq::coordinator::Strategy;
+//! use ampq::metrics::Objective;
+//! use ampq::plan::PlanRequest;
+//!
+//! let req = PlanRequest::new(Objective::EmpiricalTime)
+//!     .with_loss_budget(0.004)        // loss-NRMSE <= tau
+//!     .with_memory_cap(1.5e6)         // AND stored weight bytes <= cap
+//!     .with_strategy(Strategy::Ip);
+//! ```
+//!
+//! Requests serialize to/from JSON (the `ampq serve --requests` batch
+//! format); unknown keys are ignored so serve entries can carry extra
+//! routing fields like `model`.
+
+use crate::coordinator::Strategy;
+use crate::metrics::Objective;
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// One planning query: maximize `objective` under the requested constraints.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanRequest {
+    pub objective: Objective,
+    pub strategy: Strategy,
+    /// Loss-NRMSE threshold tau (the paper's constraint).  None plans at
+    /// the objective's tau_max — the loss constraint becomes vacuous and
+    /// only the remaining constraints bind.
+    pub tau: Option<f64>,
+    /// Cap on total stored weight bytes (linear-layer params at their
+    /// chosen format widths).
+    pub memory_cap: Option<f64>,
+    /// RNG seed for seeded strategies (Random).
+    pub seed: u64,
+}
+
+impl PlanRequest {
+    /// A request with paper defaults: IP strategy, no constraints, seed 0.
+    pub fn new(objective: Objective) -> PlanRequest {
+        PlanRequest { objective, strategy: Strategy::Ip, tau: None, memory_cap: None, seed: 0 }
+    }
+
+    /// Constrain predicted loss NRMSE to `tau` (budget tau^2 E[g^2]).
+    pub fn with_loss_budget(mut self, tau: f64) -> PlanRequest {
+        self.tau = Some(tau);
+        self
+    }
+
+    /// Additionally cap total stored weight bytes.
+    pub fn with_memory_cap(mut self, bytes: f64) -> PlanRequest {
+        self.memory_cap = Some(bytes);
+        self
+    }
+
+    pub fn with_strategy(mut self, strategy: Strategy) -> PlanRequest {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> PlanRequest {
+        self.seed = seed;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("objective".to_string(), Json::Str(self.objective.key().into())),
+            ("strategy".to_string(), Json::Str(self.strategy.key().into())),
+        ];
+        if let Some(tau) = self.tau {
+            kv.push(("tau".to_string(), Json::Num(tau)));
+        }
+        if let Some(cap) = self.memory_cap {
+            kv.push(("memory_cap".to_string(), Json::Num(cap)));
+        }
+        // u64 seeds go through a string so values >= 2^53 round-trip exactly.
+        kv.push(("seed".to_string(), Json::Str(self.seed.to_string())));
+        Json::Obj(kv)
+    }
+
+    /// Parse a request object; unknown keys (e.g. `model` in serve batch
+    /// entries) are ignored.  `seed` may be a number or a string.
+    pub fn from_json(j: &Json) -> Result<PlanRequest> {
+        let okey = j.get("objective")?.str()?;
+        let objective =
+            Objective::from_key(okey).ok_or_else(|| anyhow!("unknown objective '{okey}'"))?;
+        let strategy = match j.opt("strategy") {
+            None => Strategy::Ip,
+            Some(s) => {
+                let k = s.str()?;
+                Strategy::from_key(k).ok_or_else(|| anyhow!("unknown strategy '{k}'"))?
+            }
+        };
+        let tau = match j.opt("tau") {
+            None => None,
+            Some(x) => Some(x.f64()?),
+        };
+        if let Some(t) = tau {
+            if !t.is_finite() || t < 0.0 {
+                bail!("tau must be finite and non-negative (got {t})");
+            }
+        }
+        let memory_cap = match j.opt("memory_cap") {
+            None => None,
+            Some(x) => Some(x.f64()?),
+        };
+        if let Some(c) = memory_cap {
+            if !c.is_finite() || c < 0.0 {
+                bail!("memory_cap must be finite and non-negative (got {c})");
+            }
+        }
+        let seed = match j.opt("seed") {
+            None => 0,
+            Some(Json::Str(s)) => s.parse::<u64>()?,
+            Some(x) => {
+                let v = x.f64()?;
+                if v < 0.0 {
+                    bail!("seed must be non-negative");
+                }
+                v as u64
+            }
+        };
+        Ok(PlanRequest { objective, strategy, tau, memory_cap, seed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_accumulates() {
+        let r = PlanRequest::new(Objective::Memory)
+            .with_loss_budget(0.002)
+            .with_memory_cap(4096.0)
+            .with_strategy(Strategy::Prefix)
+            .with_seed(9);
+        assert_eq!(r.objective, Objective::Memory);
+        assert_eq!(r.strategy, Strategy::Prefix);
+        assert_eq!(r.tau, Some(0.002));
+        assert_eq!(r.memory_cap, Some(4096.0));
+        assert_eq!(r.seed, 9);
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let full = PlanRequest::new(Objective::EmpiricalTime)
+            .with_loss_budget(0.004)
+            .with_memory_cap(1.5e6)
+            .with_seed(u64::MAX - 3);
+        let sparse = PlanRequest::new(Objective::TheoreticalTime);
+        for r in [full, sparse] {
+            let text = r.to_json().to_string();
+            let back = PlanRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn from_json_defaults_and_validation() {
+        let j = Json::parse(r#"{"objective":"et"}"#).unwrap();
+        let r = PlanRequest::from_json(&j).unwrap();
+        assert_eq!(r.strategy, Strategy::Ip);
+        assert_eq!(r.tau, None);
+        assert_eq!(r.seed, 0);
+        // Numeric seeds are accepted too.
+        let j = Json::parse(r#"{"objective":"et","seed":7}"#).unwrap();
+        assert_eq!(PlanRequest::from_json(&j).unwrap().seed, 7);
+        assert!(PlanRequest::from_json(&Json::parse(r#"{"objective":"bogus"}"#).unwrap()).is_err());
+        assert!(
+            PlanRequest::from_json(&Json::parse(r#"{"objective":"et","tau":-1}"#).unwrap())
+                .is_err()
+        );
+    }
+}

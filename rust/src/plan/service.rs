@@ -1,0 +1,341 @@
+//! A concurrent serving facade over per-model [`Planner`]s.
+//!
+//! [`PlanService`] is `Send + Sync + Clone` (clones share state): it holds
+//! one `Arc<Planner>` per model plus an interior Pareto-frontier cache, so
+//! a fleet of worker threads answers plan and frontier queries without ever
+//! re-running calibration, measurement, or a frontier sweep.  This is the
+//! ROADMAP's serving seam: artifacts are staged once per model (Engine),
+//! then query throughput is bounded only by MCKP solves — and frontier
+//! lookups don't even pay those.
+//!
+//! `ampq serve --requests <file.json>` drives [`PlanService::serve_batch`]
+//! over a JSON array of [`ServeRequest`]s; `ampq frontier` precomputes and
+//! prints one frontier.
+
+use super::engine::Engine;
+use super::frontier::Frontier;
+use super::planner::Planner;
+use super::request::PlanRequest;
+use crate::coordinator::Strategy;
+use crate::metrics::Objective;
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// One frontier slot: None until its sweep completes.  The per-key lock is
+/// held across the sweep, so racing threads for the SAME key wait for one
+/// computation — while hits and sweeps for other keys proceed untouched.
+type FrontierCell = Arc<Mutex<Option<Arc<Frontier>>>>;
+
+struct Inner {
+    planners: RwLock<BTreeMap<String, Arc<Planner>>>,
+    /// Frontier cells keyed by "model/objective/strategy".  The outer lock
+    /// guards only the map; computation happens under the per-key cell.
+    frontiers: Mutex<BTreeMap<String, FrontierCell>>,
+    frontier_solves: AtomicUsize,
+}
+
+/// Thread-safe handle answering plan/frontier queries for registered models.
+#[derive(Clone)]
+pub struct PlanService {
+    inner: Arc<Inner>,
+}
+
+impl Default for PlanService {
+    fn default() -> Self {
+        PlanService::new()
+    }
+}
+
+impl PlanService {
+    pub fn new() -> PlanService {
+        PlanService {
+            inner: Arc::new(Inner {
+                planners: RwLock::new(BTreeMap::new()),
+                frontiers: Mutex::new(BTreeMap::new()),
+                frontier_solves: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// Stage every model on `engine` and register its planner.
+    pub fn from_engine(engine: &mut Engine, models: &[&str]) -> Result<PlanService> {
+        let svc = PlanService::new();
+        for m in models {
+            svc.register(m, engine.planner(m)?);
+        }
+        Ok(svc)
+    }
+
+    pub fn register(&self, model: &str, planner: Planner) {
+        self.inner
+            .planners
+            .write()
+            .expect("planner registry lock poisoned")
+            .insert(model.to_string(), Arc::new(planner));
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.inner
+            .planners
+            .read()
+            .expect("planner registry lock poisoned")
+            .keys()
+            .cloned()
+            .collect()
+    }
+
+    pub fn planner(&self, model: &str) -> Result<Arc<Planner>> {
+        self.inner
+            .planners
+            .read()
+            .expect("planner registry lock poisoned")
+            .get(model)
+            .cloned()
+            .ok_or_else(|| anyhow!("model '{model}' is not registered with the service"))
+    }
+
+    /// Resolve one plan request against a model's planner.
+    pub fn solve(&self, model: &str, req: &PlanRequest) -> Result<super::Plan> {
+        self.planner(model)?.solve(req)
+    }
+
+    /// The (cached) Pareto frontier for one (model, objective, strategy).
+    /// Each key is swept exactly once; a failed sweep leaves the cell empty
+    /// so a later caller retries.
+    pub fn frontier(
+        &self,
+        model: &str,
+        objective: Objective,
+        strategy: Strategy,
+    ) -> Result<Arc<Frontier>> {
+        let key = format!("{model}/{}/{}", objective.key(), strategy.key());
+        let planner = self.planner(model)?;
+        let cell: FrontierCell = self
+            .inner
+            .frontiers
+            .lock()
+            .expect("frontier cache lock poisoned")
+            .entry(key)
+            .or_default()
+            .clone();
+        let mut slot = cell.lock().expect("frontier cell lock poisoned");
+        if let Some(f) = slot.as_ref() {
+            return Ok(f.clone());
+        }
+        let f = Arc::new(planner.frontier(objective, strategy)?);
+        self.inner.frontier_solves.fetch_add(1, Ordering::Relaxed);
+        *slot = Some(f.clone());
+        Ok(f)
+    }
+
+    /// How many frontier sweeps actually ran (cache misses).
+    pub fn frontier_solves(&self) -> usize {
+        self.inner.frontier_solves.load(Ordering::Relaxed)
+    }
+
+    /// Answer one serve entry: a fresh solve, or (for `via_frontier`
+    /// entries) an O(log n) lookup against the cached frontier.
+    pub fn answer(&self, req: &ServeRequest) -> Result<Json> {
+        if !req.via_frontier {
+            return Ok(self.solve(&req.model, &req.request)?.to_json());
+        }
+        if req.request.strategy != Strategy::Ip || req.request.memory_cap.is_some() {
+            bail!("frontier lookups serve IP requests without a memory cap");
+        }
+        let tau = req
+            .request
+            .tau
+            .ok_or_else(|| anyhow!("a frontier lookup needs an explicit tau"))?;
+        let f = self.frontier(&req.model, req.request.objective, req.request.strategy)?;
+        let p = f.at(tau);
+        Ok(Json::Obj(vec![
+            ("kind".into(), Json::Str("frontier_point".into())),
+            ("model".into(), Json::Str(req.model.clone())),
+            ("objective".into(), Json::Str(req.request.objective.key().into())),
+            ("strategy".into(), Json::Str(req.request.strategy.key().into())),
+            ("tau".into(), Json::Num(tau)),
+            ("gain".into(), Json::Num(p.gain)),
+            ("predicted_mse".into(), Json::Num(p.predicted_mse)),
+            ("feasible".into(), Json::Bool(f.feasible_at(tau))),
+            ("config".into(), super::artifact::formats_to_json(&p.config.0)),
+        ]))
+    }
+
+    /// Answer a batch across `threads` worker threads; results keep request
+    /// order.  Requests are answered independently (the batch always runs
+    /// to completion); if any failed, the earliest failure in request order
+    /// is returned after the batch drains.
+    pub fn serve_batch(&self, reqs: &[ServeRequest], threads: usize) -> Result<Vec<Json>> {
+        let n = reqs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let workers = threads.max(1).min(n);
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<Json>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let answer = self.answer(&reqs[i]);
+                    *slots[i].lock().expect("result slot lock poisoned") = Some(answer);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                slot.into_inner()
+                    .expect("result slot lock poisoned")
+                    .unwrap_or_else(|| Err(anyhow!("request {i} was never answered")))
+            })
+            .collect()
+    }
+}
+
+/// One entry of a serve batch: a model to route to plus the request itself.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeRequest {
+    pub model: String,
+    pub request: PlanRequest,
+    /// Answer from the cached Pareto frontier instead of a fresh IP solve.
+    pub via_frontier: bool,
+}
+
+impl ServeRequest {
+    pub fn new(model: impl Into<String>, request: PlanRequest) -> ServeRequest {
+        ServeRequest { model: model.into(), request, via_frontier: false }
+    }
+
+    pub fn via_frontier(mut self) -> ServeRequest {
+        self.via_frontier = true;
+        self
+    }
+
+    /// Flattened JSON: the request fields plus `model` (and `via_frontier`
+    /// when set).
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![("model".to_string(), Json::Str(self.model.clone()))];
+        if let Json::Obj(rest) = self.request.to_json() {
+            kv.extend(rest);
+        }
+        if self.via_frontier {
+            kv.push(("via_frontier".to_string(), Json::Bool(true)));
+        }
+        Json::Obj(kv)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServeRequest> {
+        let model = j.get("model")?.str()?.to_string();
+        let request = PlanRequest::from_json(j)?;
+        let via_frontier = match j.opt("via_frontier") {
+            None => false,
+            Some(Json::Bool(b)) => *b,
+            Some(_) => bail!("'via_frontier' must be a bool"),
+        };
+        Ok(ServeRequest { model, request, via_frontier })
+    }
+}
+
+/// Parse a serve batch file: a top-level JSON array of request objects.
+pub fn load_requests(j: &Json) -> Result<Vec<ServeRequest>> {
+    j.arr()?.iter().map(ServeRequest::from_json).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::demo::demo_model;
+
+    fn demo_service() -> PlanService {
+        let (graph, qlayers, calibration) = demo_model(2, 7);
+        let mut engine = Engine::new();
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+        PlanService::from_engine(&mut engine, &["demo"]).unwrap()
+    }
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn service_is_send_sync() {
+        assert_send_sync::<PlanService>();
+        assert_send_sync::<Planner>();
+        assert_send_sync::<Frontier>();
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let svc = demo_service();
+        let req = PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004);
+        assert!(svc.solve("nope", &req).is_err());
+        assert_eq!(svc.models(), vec!["demo".to_string()]);
+    }
+
+    #[test]
+    fn frontier_is_cached() {
+        let svc = demo_service();
+        let a = svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        let b = svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(svc.frontier_solves(), 1);
+        svc.frontier("demo", Objective::Memory, Strategy::Ip).unwrap();
+        assert_eq!(svc.frontier_solves(), 2);
+    }
+
+    #[test]
+    fn serve_request_json_roundtrip() {
+        let reqs = vec![
+            ServeRequest::new(
+                "demo",
+                PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004),
+            ),
+            ServeRequest::new(
+                "demo",
+                PlanRequest::new(Objective::Memory)
+                    .with_loss_budget(0.002)
+                    .with_memory_cap(1e6),
+            ),
+            ServeRequest::new(
+                "demo",
+                PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.003),
+            )
+            .via_frontier(),
+        ];
+        let batch = Json::Arr(reqs.iter().map(|r| r.to_json()).collect());
+        let back = load_requests(&Json::parse(&batch.to_string()).unwrap()).unwrap();
+        assert_eq!(back, reqs);
+    }
+
+    #[test]
+    fn batch_results_keep_order_and_match_sequential() {
+        let svc = demo_service();
+        let reqs: Vec<ServeRequest> = [0.001, 0.002, 0.004, 0.006]
+            .iter()
+            .flat_map(|&tau| {
+                vec![
+                    ServeRequest::new(
+                        "demo",
+                        PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(tau),
+                    ),
+                    ServeRequest::new(
+                        "demo",
+                        PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(tau),
+                    )
+                    .via_frontier(),
+                ]
+            })
+            .collect();
+        let sequential: Vec<Json> =
+            reqs.iter().map(|r| svc.answer(r).unwrap()).collect();
+        let parallel = svc.serve_batch(&reqs, 4).unwrap();
+        assert_eq!(parallel, sequential);
+        assert_eq!(svc.frontier_solves(), 1, "frontier must be swept once");
+    }
+}

@@ -1,26 +1,40 @@
-//! Exact MCKP via depth-first branch & bound with LP-relaxation pruning.
+//! Exact MCKP via depth-first branch & bound with LP-relaxation pruning,
+//! over every cost dimension.
 //!
 //! Groups are branched in descending "spread" (max-min gain) order so strong
-//! decisions come first; at each node the LP bound of the remaining suffix
-//! prunes hopeless subtrees.  Paper-scale instances (J <= ~40 groups, up to
-//! 32 choices) solve in well under a millisecond; a node cap keeps worst-case
-//! behaviour bounded (falls back to the greedy incumbent, still feasible).
+//! decisions come first; at each node the suffix is pruned on (a) per-dim
+//! min-cost feasibility and (b) the tightest single-dimension LP bound —
+//! each single-constraint relaxation upper-bounds the multi-constraint
+//! optimum, so their minimum is a valid bound.  Paper-scale instances
+//! (J <= ~40 groups, up to 32 choices) solve in well under a millisecond; a
+//! node cap keeps worst-case behaviour bounded by returning the best
+//! solution found so far — the feasible greedy incumbent in the
+//! single-constraint case, but a capped multi-constraint search that has
+//! not reached any feasible leaf yet reports the infeasible fallback even
+//! if feasible assignments exist (never observed below the cap).
+//!
+//! Multi-constraint instances may have NO feasible assignment even when
+//! each dimension is satisfiable alone; in that case the search proves it
+//! and the min-primary-cost fallback is returned with `feasible = false`.
 
 use super::greedy;
 use super::hull::HullPoint;
 use super::lp_relax;
 use super::problem::{Mckp, Solution};
+use super::EPS;
 
 const NODE_CAP: usize = 5_000_000;
 
 struct Ctx<'a> {
     p: &'a Mckp,
     order: Vec<usize>,
-    /// suffix_hulls[i] = hulls of groups order[i..] (re-indexed).
-    hulls: Vec<Vec<HullPoint>>,
-    /// min cost of suffix starting at order position i.
-    suffix_min_cost: Vec<f64>,
+    /// hulls[d][j] = dim-d efficient frontier of group j (original index).
+    hulls: Vec<Vec<Vec<HullPoint>>>,
+    /// suffix_min[d][i] = min dim-d cost of groups order[i..].
+    suffix_min: Vec<Vec<f64>>,
     best: Solution,
+    /// Gain of the best FEASIBLE solution found (-inf before the first).
+    best_gain: f64,
     nodes: usize,
 }
 
@@ -28,11 +42,22 @@ pub fn solve(p: &Mckp) -> Solution {
     // Incumbent: greedy (always produces min-cost fallback at worst).
     let incumbent = greedy::solve(p);
     if !incumbent.feasible {
-        // Even all-min-cost exceeds budget: nothing better exists.
-        return incumbent;
+        if p.is_single() {
+            // Even all-min-cost exceeds the budget: nothing better exists.
+            return incumbent;
+        }
+        // Multi-constraint: per-dim independent minima prove infeasibility;
+        // otherwise a feasible assignment may still exist — search for it.
+        for d in 0..p.n_dims() {
+            if p.independent_min_cost(d) > p.budgets[d] + EPS {
+                return incumbent;
+            }
+        }
     }
+    let best_gain = if incumbent.feasible { incumbent.gain } else { f64::NEG_INFINITY };
 
-    let hulls = lp_relax::hulls(p);
+    let hulls: Vec<Vec<Vec<HullPoint>>> =
+        (0..p.n_dims()).map(|d| lp_relax::hulls_for(p, d)).collect();
     // Branch order: descending gain spread.
     let mut order: Vec<usize> = (0..p.n_groups()).collect();
     let spread = |j: usize| -> f64 {
@@ -42,34 +67,39 @@ pub fn solve(p: &Mckp) -> Solution {
     order.sort_by(|&a, &b| spread(b).partial_cmp(&spread(a)).unwrap());
 
     let n = p.n_groups();
-    let mut suffix_min_cost = vec![0.0f64; n + 1];
-    for i in (0..n).rev() {
-        let j = order[i];
-        let mc = p.costs[j].iter().cloned().fold(f64::MAX, f64::min);
-        suffix_min_cost[i] = suffix_min_cost[i + 1] + mc;
+    let mut suffix_min = vec![vec![0.0f64; n + 1]; p.n_dims()];
+    for d in 0..p.n_dims() {
+        for i in (0..n).rev() {
+            let j = order[i];
+            let mc = p.costs[d].table[j].iter().cloned().fold(f64::MAX, f64::min);
+            suffix_min[d][i] = suffix_min[d][i + 1] + mc;
+        }
     }
 
     let mut ctx = Ctx {
         p,
         hulls,
-        suffix_min_cost,
+        suffix_min,
         best: incumbent,
+        best_gain,
         nodes: 0,
         order,
     };
     let mut choice = vec![0usize; n];
-    dfs(&mut ctx, 0, 0.0, 0.0, &mut choice);
+    let mut cost = vec![0.0f64; p.n_dims()];
+    dfs(&mut ctx, 0, 0.0, &mut cost, &mut choice);
     ctx.best
 }
 
-fn suffix_lp_bound(ctx: &Ctx, pos: usize, remaining_budget: f64) -> f64 {
-    // LP relaxation over groups order[pos..] with the remaining budget:
-    // start at min-cost hull points, apply increments in efficiency order.
+fn suffix_lp_bound(ctx: &Ctx, d: usize, pos: usize, remaining_budget: f64) -> f64 {
+    // LP relaxation of dim d over groups order[pos..] with the remaining
+    // budget: start at min-cost hull points, apply increments in efficiency
+    // order.
     let mut base_gain = 0.0;
     let mut base_cost = 0.0;
     let mut incs: Vec<(f64, f64)> = Vec::new(); // (efficiency-ordered dgain, dcost)
     for i in pos..ctx.order.len() {
-        let h = &ctx.hulls[ctx.order[i]];
+        let h = &ctx.hulls[d][ctx.order[i]];
         base_gain += h[0].gain;
         base_cost += h[0].cost;
         for t in 1..h.len() {
@@ -98,48 +128,64 @@ fn suffix_lp_bound(ctx: &Ctx, pos: usize, remaining_budget: f64) -> f64 {
     bound
 }
 
-fn dfs(ctx: &mut Ctx, pos: usize, gain: f64, cost: f64, choice: &mut Vec<usize>) {
+fn dfs(ctx: &mut Ctx, pos: usize, gain: f64, cost: &mut Vec<f64>, choice: &mut Vec<usize>) {
     ctx.nodes += 1;
     if ctx.nodes > NODE_CAP {
         return;
     }
     if pos == ctx.order.len() {
-        if cost <= ctx.p.budget + 1e-12 && gain > ctx.best.gain + 1e-12 {
+        if gain > ctx.best_gain + EPS && ctx.p.fits(cost) {
             // Un-permute the choice vector.
             let mut c = vec![0usize; choice.len()];
             for (i, &j) in ctx.order.iter().enumerate() {
                 c[j] = choice[i];
             }
             ctx.best = ctx.p.solution_from(c);
+            ctx.best_gain = ctx.best.gain;
         }
         return;
     }
-    // Feasibility + optimality prune.
-    if cost + ctx.suffix_min_cost[pos] > ctx.p.budget + 1e-12 {
-        return;
+    // Feasibility prune (every dimension).
+    for d in 0..ctx.p.n_dims() {
+        if cost[d] + ctx.suffix_min[d][pos] > ctx.p.budgets[d] + EPS {
+            return;
+        }
     }
-    let bound = gain + suffix_lp_bound(ctx, pos, ctx.p.budget - cost);
-    if bound <= ctx.best.gain + 1e-12 {
-        return;
+    // Optimality prune: each single-dimension LP relaxation upper-bounds
+    // the multi-constraint optimum, so the FIRST one at or below the
+    // incumbent already proves the subtree hopeless — stop bounding there.
+    for d in 0..ctx.p.n_dims() {
+        let bound = gain + suffix_lp_bound(ctx, d, pos, ctx.p.budgets[d] - cost[d]);
+        if bound <= ctx.best_gain + EPS {
+            return;
+        }
     }
     let j = ctx.order[pos];
     // Visit choices in descending gain (find good incumbents early).
     let mut idxs: Vec<usize> = (0..ctx.p.gains[j].len()).collect();
     idxs.sort_by(|&a, &b| ctx.p.gains[j][b].partial_cmp(&ctx.p.gains[j][a]).unwrap());
-    for i in idxs {
-        let c = cost + ctx.p.costs[j][i];
-        if c > ctx.p.budget + 1e-12 {
-            continue;
+    'choices: for i in idxs {
+        for d in 0..ctx.p.n_dims() {
+            if cost[d] + ctx.p.costs[d].table[j][i] > ctx.p.budgets[d] + EPS {
+                continue 'choices;
+            }
+        }
+        for (d, c) in cost.iter_mut().enumerate() {
+            *c += ctx.p.costs[d].table[j][i];
         }
         choice[pos] = i;
-        dfs(ctx, pos + 1, gain + ctx.p.gains[j][i], c, choice);
+        dfs(ctx, pos + 1, gain + ctx.p.gains[j][i], cost, choice);
+        for (d, c) in cost.iter_mut().enumerate() {
+            *c -= ctx.p.costs[d].table[j][i];
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::solver::problem::gen::random;
+    use crate::solver::problem::gen::{random, random_multi};
+    use crate::solver::CostDim;
     use crate::util::Rng;
 
     #[test]
@@ -157,7 +203,28 @@ mod tests {
                     bb.gain,
                     exact.gain
                 );
-                assert!(bb.cost <= p.budget + 1e-9);
+                assert!(bb.cost <= p.budget() + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_on_multi_constraint_instances() {
+        let mut rng = Rng::new(7777);
+        for trial in 0..300 {
+            let dims = 2 + (trial % 2) as usize;
+            let p = random_multi(&mut rng, 4, 4, dims);
+            let exact = p.brute_force();
+            let bb = solve(&p);
+            assert_eq!(bb.feasible, exact.feasible, "trial {trial}");
+            if exact.feasible {
+                assert!(
+                    (bb.gain - exact.gain).abs() < 1e-9,
+                    "trial {trial}: bb {} vs brute {}",
+                    bb.gain,
+                    exact.gain
+                );
+                assert!(p.fits(&bb.costs), "trial {trial}");
             }
         }
     }
@@ -169,7 +236,7 @@ mod tests {
             let p = random(&mut rng, 8, 6);
             let s = solve(&p);
             if s.feasible {
-                assert!(s.cost <= p.budget + 1e-9);
+                assert!(s.cost <= p.budget() + 1e-9);
             }
             assert_eq!(s.choice.len(), p.n_groups());
             for (j, &c) in s.choice.iter().enumerate() {
@@ -196,11 +263,71 @@ mod tests {
     }
 
     #[test]
+    fn two_dim_attention_scale_instance_fast() {
+        let mut rng = Rng::new(6);
+        let mut gains = Vec::new();
+        let mut mse = Vec::new();
+        let mut bytes = Vec::new();
+        for _ in 0..10 {
+            gains.push((0..32).map(|_| rng.f64() * 10.0).collect::<Vec<_>>());
+            mse.push((0..32).map(|_| rng.f64()).collect::<Vec<_>>());
+            bytes.push((0..32).map(|_| rng.f64() * 2.0).collect::<Vec<_>>());
+        }
+        let p = Mckp::multi(
+            gains,
+            vec![CostDim::new("mse", mse), CostDim::new("bytes", bytes)],
+            vec![5.0, 12.0],
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let s = solve(&p);
+        assert!(s.feasible);
+        assert!(p.fits(&s.costs));
+        assert!(t0.elapsed().as_millis() < 4000);
+    }
+
+    #[test]
+    fn finds_feasible_when_greedy_start_violates_secondary_budget() {
+        // Min-primary-cost start (choice 0 everywhere) violates the bytes
+        // cap; the only feasible assignment flips both groups to choice 1.
+        let p = Mckp::multi(
+            vec![vec![0.0, 4.0], vec![0.0, 3.0]],
+            vec![
+                CostDim::new("mse", vec![vec![0.0, 1.0], vec![0.0, 1.0]]),
+                CostDim::new("bytes", vec![vec![4.0, 1.0], vec![4.0, 1.0]]),
+            ],
+            vec![10.0, 3.0],
+        )
+        .unwrap();
+        let s = solve(&p);
+        assert!(s.feasible);
+        assert_eq!(s.choice, vec![1, 1]);
+        assert_eq!(s.gain, 7.0);
+    }
+
+    #[test]
     fn infeasible_budget() {
         let p = Mckp::new(vec![vec![5.0]], vec![vec![3.0]], 1.0).unwrap();
         let s = solve(&p);
         assert!(!s.feasible);
         assert_eq!(s.choice, vec![0]);
+    }
+
+    #[test]
+    fn jointly_infeasible_multi_returns_fallback() {
+        let p = Mckp::multi(
+            vec![vec![1.0, 5.0]],
+            vec![
+                CostDim::new("a", vec![vec![0.0, 3.0]]),
+                CostDim::new("b", vec![vec![3.0, 0.0]]),
+            ],
+            vec![1.0, 1.0],
+        )
+        .unwrap();
+        let s = solve(&p);
+        assert!(!s.feasible);
+        assert_eq!(s.choice, vec![0]);
+        assert_eq!(s, p.brute_force());
     }
 
     #[test]

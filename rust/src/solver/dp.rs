@@ -1,12 +1,18 @@
-//! Scaled dynamic program for MCKP.
+//! Scaled dynamic program for MCKP — the single-constraint fast path.
 //!
 //! Costs are discretized onto `buckets` grid points of the budget (rounding
 //! UP, so every returned solution is truly feasible); DP over groups x
 //! buckets maximizes gain.  With the default 8192 buckets the approximation
 //! loss is < J/8192 of the budget — indistinguishable from exact on paper
 //! instances (verified against branch & bound in tests).
+//!
+//! The DP operates on the PRIMARY dimension only.  On multi-constraint
+//! instances it stays a heuristic: the returned `feasible` flag reflects
+//! every budget, but optimality holds only single-dim — use
+//! [`crate::solver::branch_bound`] (the `solver::solve` default) there.
 
 use super::problem::{Mckp, Solution};
+use super::EPS;
 
 pub const DEFAULT_BUCKETS: usize = 8192;
 
@@ -16,22 +22,17 @@ pub fn solve(p: &Mckp) -> Solution {
 
 pub fn solve_buckets(p: &Mckp, buckets: usize) -> Solution {
     let n = p.n_groups();
-    let min_cost: f64 = p
-        .costs
-        .iter()
-        .map(|cs| cs.iter().cloned().fold(f64::MAX, f64::min))
-        .sum();
-    if min_cost > p.budget + 1e-12 {
-        let mut s = p.solution_from(p.min_cost_choice());
-        s.feasible = false;
-        return s;
+    let budget = p.budget();
+    let min_cost = p.independent_min_cost(0);
+    if min_cost > budget + EPS {
+        return p.fallback();
     }
-    if p.budget <= 0.0 {
+    if budget <= 0.0 {
         // Only zero-cost choices are usable.
         return zero_budget(p);
     }
 
-    let scale = buckets as f64 / p.budget;
+    let scale = buckets as f64 / budget;
     let q = |c: f64| -> usize { (c * scale).ceil() as usize };
 
     const NEG: f64 = f64::MIN / 4.0;
@@ -43,7 +44,7 @@ pub fn solve_buckets(p: &Mckp, buckets: usize) -> Solution {
     for j in 0..n {
         let mut next = vec![NEG; buckets + 1];
         let mut choice_at = vec![u32::MAX; buckets + 1];
-        for (i, (&c, &g)) in p.costs[j].iter().zip(&p.gains[j]).enumerate() {
+        for (i, (&c, &g)) in p.primary()[j].iter().zip(&p.gains[j]).enumerate() {
             let qc = q(c);
             if qc > buckets {
                 continue;
@@ -70,9 +71,7 @@ pub fn solve_buckets(p: &Mckp, buckets: usize) -> Solution {
         }
     }
     if best_g <= NEG / 2.0 {
-        let mut s = p.solution_from(p.min_cost_choice());
-        s.feasible = false;
-        return s;
+        return p.fallback();
     }
     // Backtrack.
     let mut choice = vec![0usize; n];
@@ -80,14 +79,14 @@ pub fn solve_buckets(p: &Mckp, buckets: usize) -> Solution {
     for j in (0..n).rev() {
         let i = back[j][b] as usize;
         choice[j] = i;
-        b -= q(p.costs[j][i]);
+        b -= q(p.primary()[j][i]);
     }
     p.solution_from(choice)
 }
 
 fn zero_budget(p: &Mckp) -> Solution {
     let choice: Vec<usize> = p
-        .costs
+        .primary()
         .iter()
         .zip(&p.gains)
         .map(|(cs, gs)| {
@@ -119,7 +118,7 @@ mod tests {
             let d = solve(&p);
             assert_eq!(d.feasible, e.feasible, "trial {trial}");
             if e.feasible {
-                assert!(d.cost <= p.budget + 1e-9, "trial {trial}");
+                assert!(d.cost <= p.budget() + 1e-9, "trial {trial}");
                 // ceil-rounding may lose a bucket's worth of budget per group.
                 assert!(
                     d.gain >= e.gain * 0.95 - 1e-9,
@@ -138,7 +137,7 @@ mod tests {
             let p = random(&mut rng, 6, 4);
             let d = solve(&p);
             if d.feasible {
-                assert!(d.cost <= p.budget + 1e-9);
+                assert!(d.cost <= p.budget() + 1e-9);
             }
         }
     }
@@ -150,7 +149,7 @@ mod tests {
             let p = random(&mut rng, 4, 4);
             let d = solve_buckets(&p, 16);
             if d.feasible {
-                assert!(d.cost <= p.budget + 1e-9);
+                assert!(d.cost <= p.budget() + 1e-9);
             }
         }
     }

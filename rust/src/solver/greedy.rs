@@ -2,10 +2,18 @@
 //! efficiency order while they fit.  Fast, feasible, and typically within a
 //! few percent of optimal — used as the branch & bound incumbent and as an
 //! ablation point (DESIGN.md calls out solver choice as a design ablation).
+//!
+//! Hulls and the efficiency order live on the PRIMARY dimension; with extra
+//! dimensions an upgrade is only applied while EVERY budget still fits, so
+//! the result is always feasible when the min-primary-cost start is.  (A
+//! multi-constraint instance whose start violates a secondary budget falls
+//! back infeasible here; branch & bound then searches for a feasible
+//! assignment itself.)
 
 use super::hull::HullPoint;
 use super::lp_relax;
 use super::problem::{Mckp, Solution};
+use super::EPS;
 
 pub fn solve(p: &Mckp) -> Solution {
     let hulls = lp_relax::hulls(p);
@@ -13,13 +21,21 @@ pub fn solve(p: &Mckp) -> Solution {
 }
 
 pub fn solve_with_hulls(p: &Mckp, hulls: &[Vec<HullPoint>]) -> Solution {
+    let dims = p.n_dims();
     let mut level = vec![0usize; hulls.len()];
-    let mut cost: f64 = hulls.iter().map(|h| h[0].cost).sum();
+    // Start at the min-primary-cost hull points, tracking every dimension.
+    let mut cost: Vec<f64> = (0..dims)
+        .map(|d| {
+            hulls
+                .iter()
+                .enumerate()
+                .map(|(j, h)| p.costs[d].table[j][h[0].choice])
+                .sum()
+        })
+        .collect();
 
-    if cost > p.budget + 1e-12 {
-        let mut s = p.solution_from(p.min_cost_choice());
-        s.feasible = false;
-        return s;
+    if !p.fits(&cost) {
+        return p.fallback();
     }
 
     struct Inc {
@@ -31,7 +47,12 @@ pub fn solve_with_hulls(p: &Mckp, hulls: &[Vec<HullPoint>]) -> Solution {
     let mut incs: Vec<Inc> = Vec::new();
     for (j, h) in hulls.iter().enumerate() {
         for t in 1..h.len() {
-            incs.push(Inc { group: j, to: t, dcost: h[t].cost - h[t - 1].cost, dgain: h[t].gain - h[t - 1].gain });
+            incs.push(Inc {
+                group: j,
+                to: t,
+                dcost: h[t].cost - h[t - 1].cost,
+                dgain: h[t].gain - h[t - 1].gain,
+            });
         }
     }
     incs.sort_by(|a, b| {
@@ -44,9 +65,18 @@ pub fn solve_with_hulls(p: &Mckp, hulls: &[Vec<HullPoint>]) -> Solution {
         if inc.to != level[inc.group] + 1 {
             continue;
         }
-        if cost + inc.dcost <= p.budget + 1e-12 {
-            level[inc.group] = inc.to;
-            cost += inc.dcost;
+        let j = inc.group;
+        let from = hulls[j][inc.to - 1].choice;
+        let to = hulls[j][inc.to].choice;
+        let fits = (0..dims).all(|d| {
+            cost[d] + p.costs[d].table[j][to] - p.costs[d].table[j][from]
+                <= p.budgets[d] + EPS
+        });
+        if fits {
+            for (d, c) in cost.iter_mut().enumerate() {
+                *c += p.costs[d].table[j][to] - p.costs[d].table[j][from];
+            }
+            level[j] = inc.to;
         }
     }
 
@@ -58,7 +88,7 @@ pub fn solve_with_hulls(p: &Mckp, hulls: &[Vec<HullPoint>]) -> Solution {
 mod tests {
     use super::*;
     use crate::solver::branch_bound;
-    use crate::solver::problem::gen::random;
+    use crate::solver::problem::gen::{random, random_multi};
     use crate::util::Rng;
 
     #[test]
@@ -70,7 +100,7 @@ mod tests {
             let e = branch_bound::solve(&p);
             assert_eq!(g.feasible, e.feasible);
             if e.feasible {
-                assert!(g.cost <= p.budget + 1e-9);
+                assert!(g.cost <= p.budget() + 1e-9);
                 assert!(g.gain <= e.gain + 1e-9);
             }
         }
@@ -105,5 +135,21 @@ mod tests {
         .unwrap();
         let s = solve(&p);
         assert_eq!(s.gain, 9.0);
+    }
+
+    #[test]
+    fn multi_dim_solutions_fit_every_budget() {
+        let mut rng = Rng::new(91);
+        for trial in 0..200 {
+            let p = random_multi(&mut rng, 5, 4, 2);
+            let g = solve(&p);
+            if g.feasible {
+                assert!(p.fits(&g.costs), "trial {trial}");
+            }
+            let e = branch_bound::solve(&p);
+            if e.feasible && g.feasible {
+                assert!(g.gain <= e.gain + 1e-9, "trial {trial}");
+            }
+        }
     }
 }

@@ -1,20 +1,31 @@
 //! LP relaxation of MCKP (Dantzig-style over convex-hull increments).
 //!
-//! Start every group at its min-cost hull point; greedily apply hull
-//! "upgrade increments" in decreasing gain/cost efficiency until the budget
-//! is exhausted; the last upgrade may be fractional.  The result upper-bounds
-//! the integer optimum and is exact for the LP.
+//! Single budget: start every group at its min-cost hull point; greedily
+//! apply hull "upgrade increments" in decreasing gain/cost efficiency until
+//! the budget is exhausted; the last upgrade may be fractional.  The result
+//! upper-bounds the integer optimum and is exact for the LP.
+//!
+//! Multiple budgets go through a surrogate (Lagrangian) relaxation: the D
+//! constraints are aggregated with non-negative weights into ONE knapsack
+//! constraint.  Any original-feasible assignment satisfies the aggregate,
+//! so for ANY weight vector the single-constraint LP bound of the aggregate
+//! upper-bounds the multi-constraint integer optimum; a short subgradient
+//! loop on the weights tightens the bound.
 
 use super::hull::{efficient_frontier, HullPoint};
 use super::problem::Mckp;
+use super::EPS;
 
 #[derive(Clone, Debug)]
 pub struct LpSolution {
     /// Upper bound on the integer optimum.
     pub bound: f64,
-    /// Integral part of the LP solution (hull point index per group).
+    /// Integral part of the LP solution (hull point index per group).  For
+    /// multi-budget instances this comes from the aggregate knapsack and
+    /// may violate individual budgets — it is a bound witness, not a plan.
     pub base_choice: Vec<usize>,
     pub base_gain: f64,
+    /// Primary-dimension cost of `base_choice`.
     pub base_cost: f64,
 }
 
@@ -25,15 +36,24 @@ struct Increment {
     dgain: f64,
 }
 
+/// Primary-dimension efficient frontiers (dim 0).
 pub fn hulls(p: &Mckp) -> Vec<Vec<HullPoint>> {
-    p.costs
+    hulls_for(p, 0)
+}
+
+/// Efficient frontiers of one cost dimension.
+pub fn hulls_for(p: &Mckp, d: usize) -> Vec<Vec<HullPoint>> {
+    p.costs[d]
+        .table
         .iter()
         .zip(&p.gains)
         .map(|(c, g)| efficient_frontier(c, g))
         .collect()
 }
 
-/// Solve the LP relaxation; `hulls` from [`hulls`] (precomputable).
+/// Solve the PRIMARY-dimension LP relaxation; `hulls` from [`hulls`]
+/// (precomputable).  Extra dimensions are ignored — dropping constraints
+/// only raises the bound, so the result is still a valid upper bound.
 pub fn solve_with_hulls(p: &Mckp, hulls: &[Vec<HullPoint>]) -> LpSolution {
     let mut incs: Vec<Increment> = Vec::new();
     for (j, h) in hulls.iter().enumerate() {
@@ -59,7 +79,7 @@ pub fn solve_with_hulls(p: &Mckp, hulls: &[Vec<HullPoint>]) -> LpSolution {
     let mut gain: f64 = hulls.iter().map(|h| h[0].gain).sum();
     let mut cost: f64 = hulls.iter().map(|h| h[0].cost).sum();
     let mut bound = gain;
-    let mut remaining = p.budget - cost;
+    let mut remaining = p.budget() - cost;
 
     for inc in incs {
         // Only apply in-order upgrades (t must be the current level + 1).
@@ -86,14 +106,72 @@ pub fn solve_with_hulls(p: &Mckp, hulls: &[Vec<HullPoint>]) -> LpSolution {
     LpSolution { bound: bound.max(gain), base_choice, base_gain: gain, base_cost: cost }
 }
 
+/// Aggregate the D cost dimensions into one with weights `w >= 0`.
+fn aggregate(p: &Mckp, w: &[f64]) -> Mckp {
+    let table: Vec<Vec<f64>> = (0..p.n_groups())
+        .map(|j| {
+            (0..p.gains[j].len())
+                .map(|i| (0..p.n_dims()).map(|d| w[d] * p.costs[d].table[j][i]).sum())
+                .collect()
+        })
+        .collect();
+    let budget = w.iter().zip(&p.budgets).map(|(wd, b)| wd * b).sum();
+    Mckp::new(p.gains.clone(), table, budget).expect("aggregate of a valid Mckp is valid")
+}
+
+/// Surrogate/Lagrangian bound for the multi-budget case (see module docs).
+/// Valid for any weights; `iters` subgradient steps tighten it.
+pub fn lagrangian(p: &Mckp, iters: usize) -> LpSolution {
+    // Scale-normalize: weight each dimension by 1/budget so constraints are
+    // comparable; zero budgets get a floor.
+    let scale: Vec<f64> = p.budgets.iter().map(|b| b.max(EPS)).collect();
+    let mut w: Vec<f64> = scale.iter().map(|s| 1.0 / s).collect();
+    let mut best: Option<LpSolution> = None;
+    let mut step = 0.5;
+    for _ in 0..iters.max(1) {
+        let agg = aggregate(p, &w);
+        let lp = solve_with_hulls(&agg, &hulls(&agg));
+        // Re-evaluate the integral base on the ORIGINAL dimensions.
+        let (g, costs) = p.evaluate(&lp.base_choice);
+        let candidate = LpSolution {
+            bound: lp.bound,
+            base_choice: lp.base_choice,
+            base_gain: g,
+            base_cost: costs[0],
+        };
+        if best.as_ref().map_or(true, |b| candidate.bound < b.bound) {
+            best = Some(candidate);
+        }
+        // Subgradient on relative violations: raise the weight of every
+        // violated dimension; a violation-free base cannot improve further.
+        let mut moved = false;
+        for d in 0..p.n_dims() {
+            let viol = (costs[d] - p.budgets[d]) / scale[d];
+            if viol > 0.0 {
+                w[d] *= 1.0 + step * viol.min(4.0);
+                moved = true;
+            }
+        }
+        if !moved {
+            break;
+        }
+        step *= 0.7;
+    }
+    best.expect("at least one iteration ran")
+}
+
 pub fn solve(p: &Mckp) -> LpSolution {
-    solve_with_hulls(p, &hulls(p))
+    if p.is_single() {
+        solve_with_hulls(p, &hulls(p))
+    } else {
+        lagrangian(p, 24)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::solver::problem::gen::random;
+    use crate::solver::problem::gen::{random, random_multi};
     use crate::util::Rng;
 
     #[test]
@@ -107,6 +185,24 @@ mod tests {
                 assert!(
                     lp.bound >= exact.gain - 1e-9,
                     "lp bound {} < exact {}",
+                    lp.bound,
+                    exact.gain
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lagrangian_bound_dominates_brute_force_multi() {
+        let mut rng = Rng::new(4242);
+        for trial in 0..200 {
+            let p = random_multi(&mut rng, 4, 4, 2);
+            let exact = p.brute_force();
+            let lp = solve(&p);
+            if exact.feasible {
+                assert!(
+                    lp.bound >= exact.gain - 1e-9,
+                    "trial {trial}: lagrangian bound {} < exact {}",
                     lp.bound,
                     exact.gain
                 );
@@ -145,12 +241,12 @@ mod tests {
             let lp = solve(&p);
             let (g, c) = p.evaluate(&lp.base_choice);
             let min_cost: f64 = p
-                .costs
+                .primary()
                 .iter()
                 .map(|cs| cs.iter().cloned().fold(f64::MAX, f64::min))
                 .sum();
-            if min_cost <= p.budget {
-                assert!(c <= p.budget + 1e-9);
+            if min_cost <= p.budget() {
+                assert!(c[0] <= p.budget() + 1e-9);
             }
             assert!((g - lp.base_gain).abs() < 1e-9);
         }

@@ -1,13 +1,23 @@
-//! Integer-programming solvers for the paper's optimization (eq. 5):
+//! Integer-programming solvers for the paper's optimization (eq. 5),
+//! generalized to multiple knapsack constraints:
 //!
 //!   maximize   sum_j c_{j, p(j)}
-//!   subject to sum_j d_{j, p(j)} <= budget,   one configuration p per group.
+//!   subject to sum_j d^k_{j, p(j)} <= budget_k  for every cost dimension k,
+//!              one configuration p per group.
 //!
-//! This is a Multiple-Choice Knapsack Problem (MCKP).  Four solvers:
-//!   * `branch_bound` — exact, LP-relaxation-bounded DFS (the default).
-//!   * `dp`           — scaled dynamic program (near-exact, linear-ish).
-//!   * `greedy`       — convex-hull marginal-efficiency heuristic.
+//! With one dimension this is the classic Multiple-Choice Knapsack Problem
+//! (MCKP); the planning layer adds a second dimension (weight bytes) for
+//! memory-capped requests.  Four solvers:
+//!   * `branch_bound` — exact, LP-relaxation-bounded DFS, prunes on every
+//!     cost dimension (the default).
+//!   * `dp`           — scaled dynamic program over the primary dimension
+//!     (near-exact, linear-ish; single-constraint fast path).
+//!   * `greedy`       — convex-hull marginal-efficiency heuristic; upgrades
+//!     are applied only while every budget still fits.
 //!   * `lp_relax`     — LP relaxation (upper bound; used by branch_bound).
+//!     Multi-budget instances go through a surrogate/Lagrangian weighting.
+//!
+//! `Mckp::brute_force` stays as the cross-solver oracle for tests.
 
 pub mod branch_bound;
 pub mod dp;
@@ -17,7 +27,12 @@ pub mod lp_relax;
 pub mod problem;
 
 pub use branch_bound::solve as solve_exact;
-pub use problem::{Mckp, Solution};
+pub use problem::{CostDim, Mckp, Solution};
+
+/// Shared feasibility tolerance: a cost may exceed its budget by at most
+/// EPS and still count as feasible.  Every solver and the planning layer
+/// use this one constant so tie-breaking is consistent end to end.
+pub const EPS: f64 = 1e-12;
 
 /// Solve with the exact method; fall back to greedy if B&B blows the node
 /// budget (never observed on paper-scale instances, but bounded by design).

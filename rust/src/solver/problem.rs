@@ -1,13 +1,38 @@
-//! MCKP problem definition + brute-force reference (tests only).
+//! Multi-constraint MCKP problem definition + brute-force reference
+//! (tests only).
+//!
+//! The 0.2 problem had a single loss-MSE budget; 0.3 generalizes to a
+//! vector of cost dimensions (`costs[d].table[j][p]`) with one budget per
+//! dimension, so the planner can express "maximize time gain subject to
+//! loss-MSE <= tau AND weight bytes <= cap" as one solve.  The
+//! single-budget form stays available through the thin [`Mckp::new`]
+//! constructor so the DP/hull fast paths survive unchanged.
 
+use super::EPS;
 use anyhow::{bail, Result};
 
-/// maximize sum_j gains[j][p_j]  s.t.  sum_j costs[j][p_j] <= budget.
+/// One cost dimension of a multi-constraint MCKP: a diagnostic label plus
+/// the per-group, per-choice cost table (same shape as `gains`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostDim {
+    pub label: String,
+    /// table[j][p] — cost of choice p in group j along this dimension.
+    pub table: Vec<Vec<f64>>,
+}
+
+impl CostDim {
+    pub fn new(label: impl Into<String>, table: Vec<Vec<f64>>) -> CostDim {
+        CostDim { label: label.into(), table }
+    }
+}
+
+/// maximize sum_j gains[j][p_j]  s.t. for every dimension d:
+/// sum_j costs[d].table[j][p_j] <= budgets[d].
 #[derive(Clone, Debug)]
 pub struct Mckp {
     pub gains: Vec<Vec<f64>>,
-    pub costs: Vec<Vec<f64>>,
-    pub budget: f64,
+    pub costs: Vec<CostDim>,
+    pub budgets: Vec<f64>,
 }
 
 /// A (possibly infeasible-budget) assignment of one choice per group.
@@ -15,46 +40,109 @@ pub struct Mckp {
 pub struct Solution {
     pub choice: Vec<usize>,
     pub gain: f64,
+    /// Primary-dimension (dim 0) cost of `choice`.
     pub cost: f64,
-    /// False when even the min-cost assignment exceeds the budget; in that
-    /// case `choice` IS that min-cost assignment (the paper's tau=0 edge:
+    /// Cost along every dimension (`costs[0] == cost`).
+    pub costs: Vec<f64>,
+    /// False when no assignment satisfies every budget; in that case
+    /// `choice` IS the min-primary-cost assignment (the paper's tau=0 edge:
     /// fall back to the all-baseline configuration).
     pub feasible: bool,
 }
 
 impl Mckp {
+    /// Single-constraint constructor (the paper's eq. 5) — the thin shim
+    /// the DP/hull fast paths key on.
     pub fn new(gains: Vec<Vec<f64>>, costs: Vec<Vec<f64>>, budget: f64) -> Result<Mckp> {
-        if gains.len() != costs.len() {
-            bail!("gains/costs group count mismatch");
+        Mckp::multi(gains, vec![CostDim::new("cost", costs)], vec![budget])
+    }
+
+    /// Multi-constraint constructor: one [`CostDim`] + budget per dimension.
+    pub fn multi(gains: Vec<Vec<f64>>, costs: Vec<CostDim>, budgets: Vec<f64>) -> Result<Mckp> {
+        if costs.is_empty() || costs.len() != budgets.len() {
+            bail!(
+                "need one budget per cost dimension ({} dims, {} budgets)",
+                costs.len(),
+                budgets.len()
+            );
         }
-        for (j, (g, c)) in gains.iter().zip(&costs).enumerate() {
-            if g.is_empty() || g.len() != c.len() {
-                bail!("group {j}: bad choice count ({} vs {})", g.len(), c.len());
+        for dim in &costs {
+            if dim.table.len() != gains.len() {
+                bail!(
+                    "gains/costs group count mismatch ({} vs {} in dim '{}')",
+                    gains.len(),
+                    dim.table.len(),
+                    dim.label
+                );
             }
-            if c.iter().any(|x| !x.is_finite() || *x < 0.0) {
-                bail!("group {j}: costs must be finite and non-negative");
+        }
+        for (j, g) in gains.iter().enumerate() {
+            if g.is_empty() {
+                bail!("group {j}: empty choice set");
             }
             if g.iter().any(|x| !x.is_finite()) {
                 bail!("group {j}: gains must be finite");
             }
+            for dim in &costs {
+                let c = &dim.table[j];
+                if c.len() != g.len() {
+                    bail!(
+                        "group {j}: bad choice count ({} vs {}) in dim '{}'",
+                        g.len(),
+                        c.len(),
+                        dim.label
+                    );
+                }
+                if c.iter().any(|x| !x.is_finite() || *x < 0.0) {
+                    bail!("group {j}: costs must be finite and non-negative in dim '{}'", dim.label);
+                }
+            }
         }
-        Ok(Mckp { gains, costs, budget })
+        Ok(Mckp { gains, costs, budgets })
     }
 
     pub fn n_groups(&self) -> usize {
         self.gains.len()
     }
 
-    pub fn evaluate(&self, choice: &[usize]) -> (f64, f64) {
-        let gain = choice.iter().enumerate().map(|(j, &p)| self.gains[j][p]).sum();
-        let cost = choice.iter().enumerate().map(|(j, &p)| self.costs[j][p]).sum();
-        (gain, cost)
+    pub fn n_dims(&self) -> usize {
+        self.costs.len()
     }
 
-    /// Min-cost assignment (ties broken by higher gain) — the fallback and
-    /// the B&B root.
+    pub fn is_single(&self) -> bool {
+        self.costs.len() == 1
+    }
+
+    /// Primary-dimension cost table (dim 0 — loss MSE in the planner).
+    pub fn primary(&self) -> &[Vec<f64>] {
+        &self.costs[0].table
+    }
+
+    /// Primary-dimension budget (dim 0).
+    pub fn budget(&self) -> f64 {
+        self.budgets[0]
+    }
+
+    /// (gain, per-dimension cost) of a full assignment.
+    pub fn evaluate(&self, choice: &[usize]) -> (f64, Vec<f64>) {
+        let gain = choice.iter().enumerate().map(|(j, &p)| self.gains[j][p]).sum();
+        let costs = self
+            .costs
+            .iter()
+            .map(|dim| choice.iter().enumerate().map(|(j, &p)| dim.table[j][p]).sum())
+            .collect();
+        (gain, costs)
+    }
+
+    /// True when a cost vector fits every budget (shared EPS slack).
+    pub fn fits(&self, costs: &[f64]) -> bool {
+        costs.iter().zip(&self.budgets).all(|(c, b)| *c <= *b + EPS)
+    }
+
+    /// Min-primary-cost assignment (ties broken by higher gain) — the
+    /// fallback and the B&B root.
     pub fn min_cost_choice(&self) -> Vec<usize> {
-        self.costs
+        self.primary()
             .iter()
             .zip(&self.gains)
             .map(|(cs, gs)| {
@@ -69,12 +157,31 @@ impl Mckp {
             .collect()
     }
 
-    pub fn solution_from(&self, choice: Vec<usize>) -> Solution {
-        let (gain, cost) = self.evaluate(&choice);
-        Solution { feasible: cost <= self.budget + 1e-12, choice, gain, cost }
+    /// Lower bound on dimension d: the sum of each group's cheapest choice
+    /// along d alone (choices may differ per dim — a bound, not an
+    /// assignment).  Exceeding a budget here proves joint infeasibility.
+    pub fn independent_min_cost(&self, d: usize) -> f64 {
+        self.costs[d]
+            .table
+            .iter()
+            .map(|cs| cs.iter().cloned().fold(f64::MAX, f64::min))
+            .sum()
     }
 
-    /// Exhaustive search — O(prod |choices|), tests only.
+    pub fn solution_from(&self, choice: Vec<usize>) -> Solution {
+        let (gain, costs) = self.evaluate(&choice);
+        Solution { feasible: self.fits(&costs), choice, gain, cost: costs[0], costs }
+    }
+
+    /// The infeasible fallback: min-primary-cost choice, `feasible = false`.
+    pub fn fallback(&self) -> Solution {
+        let mut s = self.solution_from(self.min_cost_choice());
+        s.feasible = false;
+        s
+    }
+
+    /// Exhaustive search over every dimension — the cross-solver oracle
+    /// (tests only; O(prod |choices|)).
     pub fn brute_force(&self) -> Solution {
         let mut best: Option<Solution> = None;
         let mut choice = vec![0usize; self.n_groups()];
@@ -83,7 +190,7 @@ impl Mckp {
             if sol.feasible {
                 let better = match &best {
                     None => true,
-                    Some(b) => sol.gain > b.gain + 1e-12,
+                    Some(b) => sol.gain > b.gain + EPS,
                 };
                 if better {
                     best = Some(sol);
@@ -93,11 +200,7 @@ impl Mckp {
             let mut j = 0;
             loop {
                 if j == self.n_groups() {
-                    return best.unwrap_or_else(|| {
-                        let mut s = self.solution_from(self.min_cost_choice());
-                        s.feasible = false;
-                        s
-                    });
+                    return best.unwrap_or_else(|| self.fallback());
                 }
                 choice[j] += 1;
                 if choice[j] < self.gains[j].len() {
@@ -110,12 +213,14 @@ impl Mckp {
     }
 }
 
-#[cfg(test)]
+/// Random-instance generators shared by unit, property, and integration
+/// tests (compiled unconditionally so `tests/` crates can reuse one
+/// distribution instead of drifting copies).
 pub mod gen {
     use super::*;
     use crate::util::Rng;
 
-    /// Random MCKP instance for property tests.
+    /// Random single-constraint MCKP instance for property tests.
     pub fn random(rng: &mut Rng, max_groups: usize, max_choices: usize) -> Mckp {
         let j = rng.range(1, max_groups + 1);
         let mut gains = Vec::new();
@@ -129,6 +234,36 @@ pub mod gen {
         let total_max: f64 = costs.iter().map(|c: &Vec<f64>| c.iter().cloned().fold(0.0, f64::max)).sum();
         let budget = total_min + rng.f64() * (total_max - total_min).max(0.1);
         Mckp::new(gains, costs, budget).unwrap()
+    }
+
+    /// Random multi-constraint instance: like [`random`] but with `dims`
+    /// independent cost dimensions, each budgeted between its independent
+    /// minimum and maximum so feasibility is non-trivial either way.
+    pub fn random_multi(
+        rng: &mut Rng,
+        max_groups: usize,
+        max_choices: usize,
+        dims: usize,
+    ) -> Mckp {
+        let j = rng.range(1, max_groups + 1);
+        let sizes: Vec<usize> = (0..j).map(|_| rng.range(1, max_choices + 1)).collect();
+        let gains: Vec<Vec<f64>> = sizes
+            .iter()
+            .map(|&k| (0..k).map(|_| rng.f64() * 10.0).collect())
+            .collect();
+        let mut costs = Vec::new();
+        let mut budgets = Vec::new();
+        for d in 0..dims {
+            let table: Vec<Vec<f64>> = sizes
+                .iter()
+                .map(|&k| (0..k).map(|_| rng.f64() * 5.0).collect())
+                .collect();
+            let lo: f64 = table.iter().map(|c| c.iter().cloned().fold(f64::MAX, f64::min)).sum();
+            let hi: f64 = table.iter().map(|c| c.iter().cloned().fold(0.0f64, f64::max)).sum();
+            budgets.push(lo + rng.f64() * (hi - lo).max(0.1));
+            costs.push(CostDim::new(format!("dim{d}"), table));
+        }
+        Mckp::multi(gains, costs, budgets).unwrap()
     }
 }
 
@@ -146,6 +281,39 @@ mod tests {
     }
 
     #[test]
+    fn multi_validation() {
+        // Budget count must match dimension count.
+        assert!(Mckp::multi(
+            vec![vec![1.0]],
+            vec![CostDim::new("a", vec![vec![1.0]])],
+            vec![1.0, 2.0],
+        )
+        .is_err());
+        assert!(Mckp::multi(vec![vec![1.0]], vec![], vec![]).is_err());
+        // Every dimension must have the full group shape.
+        assert!(Mckp::multi(
+            vec![vec![1.0, 2.0]],
+            vec![
+                CostDim::new("a", vec![vec![0.0, 1.0]]),
+                CostDim::new("b", vec![vec![0.0]]),
+            ],
+            vec![1.0, 1.0],
+        )
+        .is_err());
+        let p = Mckp::multi(
+            vec![vec![1.0, 2.0]],
+            vec![
+                CostDim::new("a", vec![vec![0.0, 1.0]]),
+                CostDim::new("b", vec![vec![2.0, 0.5]]),
+            ],
+            vec![1.0, 1.0],
+        )
+        .unwrap();
+        assert_eq!(p.n_dims(), 2);
+        assert!(!p.is_single());
+    }
+
+    #[test]
     fn brute_force_simple() {
         // Two groups; budget forces the cheap option in one of them.
         let p = Mckp::new(
@@ -158,6 +326,26 @@ mod tests {
         assert!(s.feasible);
         assert_eq!(s.gain, 10.0);
         assert_eq!(s.choice, vec![1, 0]);
+        assert_eq!(s.costs, vec![s.cost]);
+    }
+
+    #[test]
+    fn brute_force_respects_second_dimension() {
+        // Dim 0 would allow both upgrades; dim 1 only allows group 1's.
+        let p = Mckp::multi(
+            vec![vec![0.0, 10.0], vec![0.0, 8.0]],
+            vec![
+                CostDim::new("mse", vec![vec![0.0, 1.0], vec![0.0, 1.0]]),
+                CostDim::new("bytes", vec![vec![0.0, 5.0], vec![0.0, 1.0]]),
+            ],
+            vec![10.0, 2.0],
+        )
+        .unwrap();
+        let s = p.brute_force();
+        assert!(s.feasible);
+        assert_eq!(s.choice, vec![0, 1]);
+        assert_eq!(s.gain, 8.0);
+        assert!((s.costs[1] - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -169,8 +357,41 @@ mod tests {
     }
 
     #[test]
+    fn jointly_infeasible_multi_falls_back() {
+        // Each dim is satisfiable alone (with different choices) but no
+        // single choice fits both budgets.
+        let p = Mckp::multi(
+            vec![vec![1.0, 5.0]],
+            vec![
+                CostDim::new("a", vec![vec![0.0, 3.0]]),
+                CostDim::new("b", vec![vec![3.0, 0.0]]),
+            ],
+            vec![1.0, 1.0],
+        )
+        .unwrap();
+        let s = p.brute_force();
+        assert!(!s.feasible);
+        assert_eq!(s.choice, vec![0]); // min primary cost
+    }
+
+    #[test]
     fn min_cost_tie_prefers_gain() {
         let p = Mckp::new(vec![vec![1.0, 5.0]], vec![vec![2.0, 2.0]], 10.0).unwrap();
         assert_eq!(p.min_cost_choice(), vec![1]);
+    }
+
+    #[test]
+    fn independent_min_cost_per_dim() {
+        let p = Mckp::multi(
+            vec![vec![0.0, 1.0]],
+            vec![
+                CostDim::new("a", vec![vec![2.0, 5.0]]),
+                CostDim::new("b", vec![vec![7.0, 3.0]]),
+            ],
+            vec![10.0, 10.0],
+        )
+        .unwrap();
+        assert_eq!(p.independent_min_cost(0), 2.0);
+        assert_eq!(p.independent_min_cost(1), 3.0);
     }
 }

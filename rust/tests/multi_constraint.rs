@@ -1,0 +1,295 @@
+//! Acceptance suite for the 0.3 query redesign (issue acceptance criteria):
+//!
+//! * `Planner::frontier(EmpiricalTime, Ip).at(tau)` returns a plan whose
+//!   config, gain, and predicted MSE equal a pointwise `Strategy::Ip` solve
+//!   at that tau on the demo model;
+//! * a two-constraint request (loss-MSE + memory cap) returns a plan
+//!   satisfying both budgets and matching `brute_force` on a small instance;
+//! * the deprecated `Planner::plan(...)` shim delegates to `solve`;
+//! * `PlanService` answers concurrent plan/frontier queries with exactly one
+//!   frontier sweep and thread-order-independent results.
+
+use ampq::coordinator::{paper_tau_grid, Strategy};
+use ampq::metrics::Objective;
+use ampq::plan::demo::demo_model;
+use ampq::plan::{Engine, Frontier, PlanRequest, ServeRequest};
+use ampq::solver::{self, CostDim, Mckp};
+use ampq::util::Json;
+
+fn demo_engine() -> Engine {
+    let (graph, qlayers, calibration) = demo_model(2, 7);
+    let mut engine = Engine::new();
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    engine
+}
+
+#[test]
+fn frontier_at_matches_pointwise_ip_solve() {
+    let mut engine = demo_engine();
+    let planner = engine.planner("demo").unwrap();
+    let frontier = planner.frontier(Objective::EmpiricalTime, Strategy::Ip).unwrap();
+    assert!(frontier.points.len() > 3, "demo frontier should have several steps");
+    for &tau in &paper_tau_grid() {
+        let point = frontier.at(tau);
+        let plan = planner
+            .solve(&PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(tau))
+            .unwrap();
+        assert!(
+            (point.gain - plan.gain).abs() < 1e-9,
+            "tau {tau}: frontier gain {} vs pointwise {}",
+            point.gain,
+            plan.gain
+        );
+        assert!(
+            (point.predicted_mse - plan.predicted_mse).abs() < 1e-15,
+            "tau {tau}: frontier mse {} vs pointwise {}",
+            point.predicted_mse,
+            plan.predicted_mse
+        );
+        assert_eq!(point.config, plan.config, "tau {tau}: configs differ");
+        assert_eq!(frontier.feasible_at(tau), plan.feasible, "tau {tau}");
+    }
+}
+
+#[test]
+fn frontier_is_monotone_and_pareto() {
+    let mut engine = demo_engine();
+    let planner = engine.planner("demo").unwrap();
+    for objective in Objective::ALL {
+        let f = planner.frontier(objective, Strategy::Ip).unwrap();
+        for w in f.points.windows(2) {
+            assert!(w[1].predicted_mse > w[0].predicted_mse, "{objective:?}: mse not increasing");
+            assert!(w[1].gain > w[0].gain, "{objective:?}: gain not increasing");
+        }
+        // at() is monotone in tau over a dense sweep.
+        let mut last = f64::MIN;
+        let n = 200;
+        for i in 0..=n {
+            let tau = f.tau_max * i as f64 / n as f64;
+            let g = f.at(tau).gain;
+            assert!(g >= last - 1e-12, "{objective:?} tau {tau}: {g} < {last}");
+            last = g;
+        }
+    }
+}
+
+#[test]
+fn frontier_json_roundtrip() {
+    let mut engine = demo_engine();
+    let planner = engine.planner("demo").unwrap();
+    let f = planner.frontier(Objective::EmpiricalTime, Strategy::Ip).unwrap();
+    let text = f.to_json().to_string();
+    let back = Frontier::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, f);
+    // at() answers identically after the round-trip.
+    for &tau in &paper_tau_grid() {
+        assert_eq!(back.at(tau), f.at(tau));
+    }
+}
+
+#[test]
+fn two_constraint_request_satisfies_both_budgets() {
+    let mut engine = demo_engine();
+    let planner = engine.planner("demo").unwrap();
+    let free = planner
+        .solve(&PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.007))
+        .unwrap();
+    let bf16_total: f64 = planner
+        .partitioned()
+        .qlayers
+        .iter()
+        .map(|q| q.params as f64 * 2.0)
+        .sum();
+    assert!(free.weight_bytes < bf16_total, "tau 0.007 must quantize something");
+
+    // A cap just above the loss-optimal plan's bytes (and well below the
+    // all-BF16 total): the solver runs the genuine two-dimension path and
+    // must satisfy BOTH budgets without giving up gain.
+    let cap = free.weight_bytes * 1.02;
+    assert!(cap < bf16_total);
+    let capped = planner
+        .solve(
+            &PlanRequest::new(Objective::EmpiricalTime)
+                .with_loss_budget(0.007)
+                .with_memory_cap(cap),
+        )
+        .unwrap();
+    assert!(capped.feasible, "two-constraint demo request must be satisfiable");
+    assert!(
+        capped.predicted_mse <= capped.budget + 1e-12,
+        "loss budget violated: {} > {}",
+        capped.predicted_mse,
+        capped.budget
+    );
+    assert!(
+        capped.weight_bytes <= cap + 1e-9,
+        "memory cap violated: {} > {cap}",
+        capped.weight_bytes
+    );
+    assert_eq!(capped.memory_cap, Some(cap));
+    assert!((capped.gain - free.gain).abs() < 1e-9, "a satisfied cap must not cost gain");
+    // And the plan round-trips with the cap recorded.
+    let back =
+        ampq::plan::Plan::from_json(&Json::parse(&capped.to_json().to_string()).unwrap()).unwrap();
+    assert_eq!(back, capped);
+
+    // A cap below the all-FP8 floor is jointly unsatisfiable: the planner
+    // reports the fallback instead of silently violating a budget.
+    let floor: f64 = planner.partitioned().qlayers.iter().map(|q| q.params as f64).sum();
+    let impossible = planner
+        .solve(
+            &PlanRequest::new(Objective::EmpiricalTime)
+                .with_loss_budget(0.007)
+                .with_memory_cap(floor * 0.9),
+        )
+        .unwrap();
+    assert!(!impossible.feasible);
+}
+
+#[test]
+fn two_constraint_small_instance_matches_brute_force() {
+    // The exact solver the request path uses (branch & bound over both
+    // dimensions) against the exhaustive oracle on a hand-sized instance.
+    let gains = vec![vec![0.0, 5.0], vec![0.0, 4.0], vec![0.0, 3.0]];
+    let mse = vec![vec![0.0, 1.0], vec![0.0, 2.0], vec![0.0, 0.5]];
+    let bytes = vec![vec![4.0, 2.0], vec![6.0, 3.0], vec![2.0, 1.0]];
+    let p = Mckp::multi(
+        gains,
+        vec![CostDim::new("loss_mse", mse), CostDim::new("weight_bytes", bytes)],
+        vec![2.0, 9.0],
+    )
+    .unwrap();
+    let exact = p.brute_force();
+    let got = solver::solve(&p);
+    assert_eq!(got.feasible, exact.feasible);
+    assert!((got.gain - exact.gain).abs() < 1e-9, "{} vs {}", got.gain, exact.gain);
+    assert!(p.fits(&got.costs));
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_plan_shim_matches_solve() {
+    let mut engine = demo_engine();
+    let planner = engine.planner("demo").unwrap();
+    for objective in Objective::ALL {
+        for strategy in Strategy::ALL {
+            for &tau in &[0.0, 0.002, 0.005] {
+                let shim = planner.plan(objective, strategy, tau, 4).unwrap();
+                let solved = planner
+                    .solve(
+                        &PlanRequest::new(objective)
+                            .with_strategy(strategy)
+                            .with_loss_budget(tau)
+                            .with_seed(4),
+                    )
+                    .unwrap();
+                assert_eq!(shim, solved, "{objective:?}/{strategy:?} tau {tau}");
+            }
+        }
+    }
+}
+
+#[test]
+fn service_concurrent_queries_share_one_frontier() {
+    let mut engine = demo_engine();
+    let svc = engine.service(&["demo"]).unwrap();
+
+    // Reference answers, computed sequentially on a clone (shared state).
+    let taus = [0.001, 0.002, 0.003, 0.004, 0.005, 0.006, 0.007];
+    let reference: Vec<ampq::plan::Plan> = taus
+        .iter()
+        .map(|&tau| {
+            svc.solve(
+                "demo",
+                &PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(tau),
+            )
+            .unwrap()
+        })
+        .collect();
+
+    let results: Vec<Vec<ampq::plan::Plan>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let svc = svc.clone();
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    for &tau in &taus {
+                        // Exercise both the solve path and the frontier cache.
+                        let plan = svc
+                            .solve(
+                                "demo",
+                                &PlanRequest::new(Objective::EmpiricalTime)
+                                    .with_loss_budget(tau),
+                            )
+                            .unwrap();
+                        let f = svc
+                            .frontier("demo", Objective::EmpiricalTime, Strategy::Ip)
+                            .unwrap();
+                        assert_eq!(f.at(tau).config, plan.config);
+                        out.push(plan);
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for thread_plans in &results {
+        assert_eq!(thread_plans, &reference);
+    }
+    assert_eq!(svc.frontier_solves(), 1, "8 threads must share one frontier sweep");
+}
+
+#[test]
+fn serve_batch_mixed_requests_end_to_end() {
+    let mut engine = demo_engine();
+    let svc = engine.service(&["demo"]).unwrap();
+    let free = svc
+        .solve(
+            "demo",
+            &PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.007),
+        )
+        .unwrap();
+    let reqs = vec![
+        ServeRequest::new(
+            "demo",
+            PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004),
+        ),
+        ServeRequest::new(
+            "demo",
+            PlanRequest::new(Objective::EmpiricalTime)
+                .with_loss_budget(0.007)
+                .with_memory_cap(free.weight_bytes * 0.95),
+        ),
+        ServeRequest::new(
+            "demo",
+            PlanRequest::new(Objective::Memory)
+                .with_loss_budget(0.003)
+                .with_strategy(Strategy::Prefix),
+        ),
+        ServeRequest::new(
+            "demo",
+            PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.002),
+        )
+        .via_frontier(),
+    ];
+    // Round-trip the batch through its JSON file format first.
+    let file = Json::Arr(reqs.iter().map(|r| r.to_json()).collect()).to_string();
+    let parsed = ampq::plan::load_requests(&Json::parse(&file).unwrap()).unwrap();
+    assert_eq!(parsed, reqs);
+
+    let sequential: Vec<Json> = reqs.iter().map(|r| svc.answer(r).unwrap()).collect();
+    let parallel = svc.serve_batch(&parsed, 3).unwrap();
+    assert_eq!(parallel, sequential);
+
+    // The frontier answer matches a pointwise solve at its tau.
+    let pointwise = svc
+        .solve(
+            "demo",
+            &PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.002),
+        )
+        .unwrap();
+    let fr = &parallel[3];
+    assert_eq!(fr.get("kind").unwrap().str().unwrap(), "frontier_point");
+    assert!((fr.get("gain").unwrap().f64().unwrap() - pointwise.gain).abs() < 1e-9);
+}

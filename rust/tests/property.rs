@@ -13,6 +13,7 @@ use ampq::gaudisim::{HwModel, MpConfig, Simulator};
 use ampq::graph::partition::{partition, validate_sequential};
 use ampq::graph::{Engine, Graph, Node};
 use ampq::numerics::Format;
+use ampq::solver::problem::gen::random_multi;
 use ampq::solver::{branch_bound, dp, greedy, lp_relax, Mckp};
 use ampq::util::Rng;
 
@@ -116,12 +117,59 @@ fn solver_cross_validation_random_instances() {
             continue;
         }
         assert!((bb.gain - exact.gain).abs() < 1e-9, "seed {seed}: bb {} exact {}", bb.gain, exact.gain);
-        assert!(bb.cost <= p.budget + 1e-9, "seed {seed}");
-        assert!(d.cost <= p.budget + 1e-9, "seed {seed}");
-        assert!(gr.cost <= p.budget + 1e-9, "seed {seed}");
+        assert!(bb.cost <= p.budget() + 1e-9, "seed {seed}");
+        assert!(d.cost <= p.budget() + 1e-9, "seed {seed}");
+        assert!(gr.cost <= p.budget() + 1e-9, "seed {seed}");
         assert!(d.gain <= exact.gain + 1e-9, "seed {seed}");
         assert!(gr.gain <= exact.gain + 1e-9, "seed {seed}");
         assert!(lp.bound >= exact.gain - 1e-9, "seed {seed}: lp {} exact {}", lp.bound, exact.gain);
+    }
+}
+
+#[test]
+fn multi_constraint_solver_cross_validation() {
+    // On random multi-budget instances: branch & bound is exact against the
+    // brute-force oracle (feasibility AND gain), greedy stays within every
+    // budget and below exact, the Lagrangian LP bound dominates exact, and
+    // the primary-dim DP never reports a solution violating the budgets it
+    // can see.
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(5000 + seed);
+        let dims = 2 + (seed % 2) as usize;
+        let p = random_multi(&mut rng, 4, 4, dims);
+        let exact = p.brute_force();
+        let bb = branch_bound::solve(&p);
+        let gr = greedy::solve(&p);
+        let lp = lp_relax::solve(&p);
+
+        assert_eq!(bb.feasible, exact.feasible, "seed {seed}");
+        assert_eq!(bb.costs.len(), dims, "seed {seed}");
+        if gr.feasible {
+            assert!(p.fits(&gr.costs), "seed {seed}: greedy violates a budget");
+            assert!(gr.gain <= exact.gain + 1e-9, "seed {seed}");
+        }
+        if !exact.feasible {
+            continue;
+        }
+        assert!(
+            (bb.gain - exact.gain).abs() < 1e-9,
+            "seed {seed}: bb {} exact {}",
+            bb.gain,
+            exact.gain
+        );
+        assert!(p.fits(&bb.costs), "seed {seed}: bb violates a budget");
+        assert!(
+            lp.bound >= exact.gain - 1e-9,
+            "seed {seed}: lagrangian {} exact {}",
+            lp.bound,
+            exact.gain
+        );
+        // DP is a primary-dim heuristic on multi instances, but its
+        // feasibility verdict must still be honest.
+        let d = dp::solve(&p);
+        if d.feasible {
+            assert!(p.fits(&d.costs), "seed {seed}: dp feasibility lies");
+        }
     }
 }
 

@@ -142,11 +142,11 @@ fn solvers_agree_on_random_small_instances() {
         // Exact == brute force; heuristics feasible and dominated; LP is an
         // upper bound.
         assert!((bb.gain - exact.gain).abs() < 1e-9, "seed {seed}");
-        assert!(bb.cost <= p.budget + 1e-9, "seed {seed}");
-        assert!(g.cost <= p.budget + 1e-9, "seed {seed}");
+        assert!(bb.cost <= p.budget() + 1e-9, "seed {seed}");
+        assert!(g.cost <= p.budget() + 1e-9, "seed {seed}");
         assert!(g.gain <= exact.gain + 1e-9, "seed {seed}");
         if d.feasible {
-            assert!(d.cost <= p.budget + 1e-9, "seed {seed}");
+            assert!(d.cost <= p.budget() + 1e-9, "seed {seed}");
             assert!(d.gain <= exact.gain + 1e-9, "seed {seed}");
         }
         assert!(lp.bound >= exact.gain - 1e-9, "seed {seed}");
