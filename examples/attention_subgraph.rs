@@ -73,7 +73,7 @@ fn main() -> Result<()> {
                 .qidxs
                 .iter()
                 .zip(fmts)
-                .map(|(&q, &f)| tt_layer_gain(&part.qlayers[q], f))
+                .map(|(&q, &f)| tt_layer_gain(&part.qlayers[q], f, engine.device()))
                 .sum();
             (label, measured, summed, theo)
         })

@@ -52,14 +52,14 @@ fn main() -> Result<()> {
         .ok_or_else(|| anyhow!("no artifacts root"))?
         .to_path_buf();
     let tasks = load_all_tasks(&tasks_root, &info)?;
-    let hw = engine.hw().clone();
+    let device = engine.device().clone();
     let mr = engine.runtime(model)?;
     let mut eval = CachedEvaluator::new(mr, &tasks);
     let inputs = SweepInputs {
         planner: &planner,
         qlayers: &info.qlayers,
         graph: &graph,
-        hw,
+        device,
         tasks: &tasks,
     };
 

@@ -5,9 +5,16 @@
 //! and a `Planner` answers the actual query in microseconds, returning a
 //! self-contained, JSON-serializable `Plan`.
 //!
-//! Run: cargo run --release --example quickstart [-- --model tiny-s --tau 0.004]
+//! With `--demo` everything runs on the synthetic transformer (no AOT
+//! artifacts or PJRT needed) — this is what CI executes.  `--device` picks a
+//! hardware profile from the backend registry (`gaudi2`, `gaudi3`,
+//! `generic-gpu`, `cpu-roofline`) or a JSON profile file.
+//!
+//! Run: cargo run --release --example quickstart [-- --demo --device gaudi3]
 
+use ampq::backend::Registry;
 use ampq::metrics::Objective;
+use ampq::plan::demo::demo_model;
 use ampq::plan::{Engine, PlanRequest};
 use ampq::util::Args;
 use anyhow::Result;
@@ -15,20 +22,29 @@ use std::path::PathBuf;
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &[])?;
-    let model = args.get_or("model", "tiny-s");
+    let args = Args::parse(&raw, &["demo"])?;
+    let demo = args.flag("demo");
+    let model = args.get_or("model", if demo { "demo" } else { "tiny-s" });
     let tau = args.f64_or("tau", 0.004)?;
     let root = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let device = Registry::builtin().resolve(args.get_or("device", "gaudi2"))?;
 
-    // 1. Point an Engine at the AOT artifacts; stage products cache on disk.
+    // 1. Point an Engine at the AOT artifacts (or the synthetic demo model)
+    //    and the target device; stage products cache on disk per device.
     let mut engine = Engine::new()
         .with_artifacts_root(root.clone())
-        .with_cache_dir(root.join("cache"));
+        .with_cache_dir(root.join("cache"))
+        .with_device(device);
+    if demo {
+        let (graph, qlayers, calibration) = demo_model(2, 7);
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+    }
 
     // 2. Materialize (or load) the stage artifacts and get a Planner.
     let planner = engine.planner(model)?;
     println!(
-        "{model}: {} sequential sub-graphs over {} quantizable layers; E[g^2] = {:.4}",
+        "{model} on {}: {} sequential sub-graphs over {} quantizable layers; E[g^2] = {:.4}",
+        planner.device().name,
         planner.partitioned().partition.groups.len(),
         planner.n_qlayers(),
         planner.calibration().eg2

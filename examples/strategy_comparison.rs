@@ -45,7 +45,7 @@ fn main() -> Result<()> {
             .ok_or_else(|| anyhow!("no artifacts root"))?
             .to_path_buf();
         let tasks = load_all_tasks(&tasks_root, &info)?;
-        let hw = engine.hw().clone();
+        let device = engine.device().clone();
         let lamb = tasks.iter().position(|t| t.meta.name == "lamb").unwrap();
         let mr = engine.runtime(model)?;
         let mut eval = CachedEvaluator::new(mr, &tasks);
@@ -53,7 +53,7 @@ fn main() -> Result<()> {
             planner: &planner,
             qlayers: &info.qlayers,
             graph: &graph,
-            hw,
+            device,
             tasks: &tasks,
         };
 

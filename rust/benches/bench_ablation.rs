@@ -43,9 +43,11 @@ fn fig1_gap(graph: &ampq::graph::Graph, part: &ampq::graph::partition::Partition
 
 fn main() {
     let base = HwModel { noise_std: 0.0, ..HwModel::default() };
+    let mut quiet = ampq::backend::DeviceProfile::gaudi2();
+    quiet.noise_std = 0.0;
     let mut engine = Engine::new()
         .with_artifacts_root("artifacts")
-        .with_hw(base.clone());
+        .with_device(quiet);
     let part_art = engine.partitioned("tiny-s").expect("make artifacts");
     let graph = engine.graph("tiny-s").unwrap();
     let part = &part_art.partition;

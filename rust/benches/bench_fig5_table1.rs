@@ -17,7 +17,7 @@ fn main() {
     let graph = engine.graph("tiny-s").unwrap();
     let root = engine.artifacts_root().unwrap().to_path_buf();
     let tasks = load_all_tasks(&root, &info).unwrap();
-    let hw = engine.hw().clone();
+    let device = engine.device().clone();
     let mr = engine.runtime("tiny-s").expect("PJRT runtime");
 
     // Single-task single-config eval: the innermost unit.
@@ -34,7 +34,7 @@ fn main() {
         planner: &planner,
         qlayers: &info.qlayers,
         graph: &graph,
-        hw,
+        device,
         tasks: &tasks,
     };
     let sweep = run_sweep(

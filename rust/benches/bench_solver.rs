@@ -1,9 +1,13 @@
 //! MCKP solver micro-benchmarks (L3 hot path): exact branch & bound vs DP
 //! vs greedy vs LP relaxation, on paper-scale and stress-scale instances.
+//!
+//! Emits a machine-readable summary to BENCH_solver.json (override with
+//! BENCH_OUT=path) so CI records perf-trajectory data points.
 
 use ampq::solver::{branch_bound, dp, greedy, lp_relax, Mckp};
-use ampq::util::bench::{bench, black_box};
-use ampq::util::Rng;
+use ampq::util::bench::{bench, black_box, write_summary};
+use ampq::util::{Json, Rng};
+use std::path::PathBuf;
 
 fn paper_scale_instance(seed: u64) -> Mckp {
     // Llama-like: per block {32-config attention, 2, 4, 2} + lm_head,
@@ -31,20 +35,23 @@ fn main() {
         p.gains.iter().map(|g| g.len()).sum::<usize>()
     );
 
-    bench("solver/branch_bound (exact)", 3, 50, || {
-        black_box(branch_bound::solve(&p));
-    });
-    bench("solver/dp (8192 buckets)", 3, 50, || {
-        black_box(dp::solve(&p));
-    });
-    bench("solver/greedy", 3, 200, || {
-        black_box(greedy::solve(&p));
-    });
-    bench("solver/lp_relax", 3, 200, || {
-        black_box(lp_relax::solve(&p));
-    });
+    let results = vec![
+        bench("solver/branch_bound (exact)", 3, 50, || {
+            black_box(branch_bound::solve(&p));
+        }),
+        bench("solver/dp (8192 buckets)", 3, 50, || {
+            black_box(dp::solve(&p));
+        }),
+        bench("solver/greedy", 3, 200, || {
+            black_box(greedy::solve(&p));
+        }),
+        bench("solver/lp_relax", 3, 200, || {
+            black_box(lp_relax::solve(&p));
+        }),
+    ];
 
     // Solution-quality ablation (DESIGN.md ablations).
+    let mut quality: Vec<(String, Json)> = Vec::new();
     let exact = branch_bound::solve(&p);
     for (name, sol) in [("dp", dp::solve(&p)), ("greedy", greedy::solve(&p))] {
         println!(
@@ -56,9 +63,26 @@ fn main() {
         );
         assert!(sol.gain <= exact.gain + 1e-9);
         assert!(sol.gain >= 0.90 * exact.gain, "{name} quality regression");
+        quality.push((format!("{name}_of_exact"), Json::Num(sol.gain / exact.gain)));
     }
     let lp = lp_relax::solve(&p);
     assert!(lp.bound >= exact.gain - 1e-9);
-    println!("solver/lp bound {:.3} >= exact {:.3} (gap {:.3}%)",
-        lp.bound, exact.gain, 100.0 * (lp.bound / exact.gain - 1.0));
+    println!(
+        "solver/lp bound {:.3} >= exact {:.3} (gap {:.3}%)",
+        lp.bound,
+        exact.gain,
+        100.0 * (lp.bound / exact.gain - 1.0)
+    );
+    quality.push(("exact_gain".into(), Json::Num(exact.gain)));
+    quality.push(("lp_bound_gap".into(), Json::Num(lp.bound / exact.gain - 1.0)));
+    quality.push(("n_groups".into(), Json::Num(p.n_groups() as f64)));
+
+    // Machine-readable summary: the perf trajectory's data point.
+    let out = PathBuf::from(
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_solver.json".to_string()),
+    );
+    match write_summary(&out, "solver", &results, quality) {
+        Ok(()) => println!("bench summary written to {}", out.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", out.display()),
+    }
 }

@@ -1,0 +1,28 @@
+//! Pluggable hardware backends.
+//!
+//! The paper measures time gains on one device (Intel Gaudi 2); this
+//! subsystem makes the device a *parameter*.  A [`DeviceProfile`] bundles
+//! every hardware number the planner consumes — engine counts, the
+//! per-format MME [`RateTable`], TPC/HBM rooflines, launch overhead, the
+//! fusion flag, the supported-format mask, and HBM capacity — and a
+//! [`Registry`] resolves device names (four built-ins plus user JSON
+//! files) to profiles.
+//!
+//! Downstream construction points:
+//! * `gaudisim::HwModel::from_profile` / `Simulator::for_device` — the
+//!   timing simulator for a device;
+//! * `timing::SimTtft::for_device` — a TTFT source for a device;
+//! * `metrics::theoretical_groups` — eq.-24 MAC gains use the device's
+//!   rate table (the old `Format::mme_rate` hard-coding is gone);
+//! * `plan::Engine::with_device` — stages Measured artifacts keyed by
+//!   device, so measurements for different devices never collide;
+//! * `plan::PlanRequest::with_device` / `plan::PlanService` — per-device
+//!   request routing;
+//! * `ampq devices` / `ampq plan --device` / `ampq compare --devices` —
+//!   the CLI surface.
+
+pub mod profile;
+pub mod registry;
+
+pub use profile::{DeviceProfile, RateTable};
+pub use registry::{Registry, DEFAULT_DEVICE};

@@ -1,0 +1,430 @@
+//! Device profiles: the data that makes the time-gain predictor
+//! hardware-aware.
+//!
+//! The paper's sensitivity side (eq. 21-23) is hardware-agnostic, but its
+//! gain side is not: per-format MME throughput, engine counts, rooflines and
+//! launch overhead all belong to a *device*, not to the algorithm.  A
+//! [`DeviceProfile`] captures exactly that parameter set, serializes through
+//! `util::Json` (round-trips exactly), and is the single source every
+//! hardware-touching layer is constructed from: `gaudisim::HwModel`
+//! (simulator parameters), `metrics::theoretical_groups` (per-MAC delta_T),
+//! and the `Strategy` format menus (supported-format mask).  Adding a device
+//! is a data file, not a code fork.
+
+use crate::numerics::{Format, N_FORMATS};
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// Per-format MME throughput multipliers relative to BF16 (1.0 = one BF16
+/// MAC time per MAC; 2.0 = twice the MAC rate).  Replaces the old
+/// `Format::mme_rate` hard-coding — throughput is device data.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RateTable {
+    rates: [f64; N_FORMATS],
+}
+
+impl RateTable {
+    /// Every format at the same `rate`.
+    pub fn uniform(rate: f64) -> RateTable {
+        RateTable { rates: [rate; N_FORMATS] }
+    }
+
+    /// Gaudi-2-like rates: FP8 MACs run 2x, FP32 at half rate, FP16/BF16
+    /// at baseline (the values `Format::mme_rate` used to hard-code).
+    pub fn gaudi2() -> RateTable {
+        RateTable::uniform(1.0)
+            .with(Format::Fp32, 0.5)
+            .with(Format::Fp8E4m3, 2.0)
+            .with(Format::Fp8E5m2, 2.0)
+    }
+
+    pub fn get(&self, f: Format) -> f64 {
+        self.rates[f.index()]
+    }
+
+    pub fn set(&mut self, f: Format, rate: f64) {
+        self.rates[f.index()] = rate;
+    }
+
+    pub fn with(mut self, f: Format, rate: f64) -> RateTable {
+        self.set(f, rate);
+        self
+    }
+
+    /// Per-MAC time gain of format f vs the BF16 baseline, delta_T,f
+    /// (paper eq. 24): 1 - rate(bf16)/rate(f) in units of "BF16 MAC times".
+    pub fn delta_t(&self, f: Format) -> f64 {
+        1.0 - self.get(Format::Bf16) / self.get(f)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            Format::ALL
+                .iter()
+                .map(|f| (f.name().to_string(), Json::Num(self.get(*f))))
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<RateTable> {
+        let mut t = RateTable::uniform(1.0);
+        for f in Format::ALL {
+            let rate = j.get(f.name())?.f64()?;
+            if !rate.is_finite() || rate <= 0.0 {
+                bail!("mme rate for {} must be positive and finite (got {rate})", f.name());
+            }
+            t.set(f, rate);
+        }
+        Ok(t)
+    }
+}
+
+/// Everything the planner needs to know about one accelerator: engine
+/// counts, per-format MME rate table, TPC/HBM rooflines, launch overhead,
+/// fusion capability, supported-format mask, and HBM capacity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceProfile {
+    /// Registry key; also stamps Measured artifacts and Plans.
+    pub name: String,
+    /// Parallel matrix engines.
+    pub n_mme: usize,
+    /// Parallel vector engines.
+    pub n_tpc: usize,
+    /// BF16 MACs per microsecond per MME engine.
+    pub mme_macs_per_us: f64,
+    /// Vector-engine processed bytes per microsecond per TPC engine.
+    pub tpc_bytes_per_us: f64,
+    /// HBM bandwidth, bytes per microsecond (shared).
+    pub hbm_bytes_per_us: f64,
+    /// Kernel launch overhead, microseconds (fused chains pay once).
+    pub launch_us: f64,
+    /// Multiplicative std-dev of TTFT measurement noise.
+    pub noise_std: f64,
+    /// Elementwise-chain fusion on the vector engine.
+    pub enable_fusion: bool,
+    /// Per-format MME throughput multipliers vs BF16.
+    pub mme_rates: RateTable,
+    /// Formats the device can execute; planning menus are restricted to
+    /// this mask.  Must contain the BF16 baseline.
+    pub supported: Vec<Format>,
+    /// Total HBM capacity in bytes (profile metadata; per-request memory
+    /// caps are expressed on the PlanRequest).
+    pub hbm_capacity_bytes: f64,
+}
+
+impl DeviceProfile {
+    /// Today's defaults: the Gaudi-2-like testbed every pre-backend
+    /// measurement ran on (bit-for-bit identical simulator behaviour).
+    pub fn gaudi2() -> DeviceProfile {
+        DeviceProfile {
+            name: "gaudi2".into(),
+            n_mme: 2,
+            n_tpc: 4,
+            mme_macs_per_us: 100_000.0,
+            tpc_bytes_per_us: 12_000.0,
+            hbm_bytes_per_us: 40_000.0,
+            launch_us: 1.5,
+            noise_std: 0.01,
+            enable_fusion: true,
+            mme_rates: RateTable::gaudi2(),
+            supported: Format::ALL.to_vec(),
+            hbm_capacity_bytes: 96.0e9,
+        }
+    }
+
+    /// Gaudi-3-like: 2x MME throughput and 2x HBM bandwidth over gaudi2,
+    /// larger HBM pool; same relative format rates.
+    pub fn gaudi3() -> DeviceProfile {
+        DeviceProfile {
+            name: "gaudi3".into(),
+            mme_macs_per_us: 200_000.0,
+            hbm_bytes_per_us: 80_000.0,
+            hbm_capacity_bytes: 128.0e9,
+            ..DeviceProfile::gaudi2()
+        }
+    }
+
+    /// A generic GPU: four symmetric MME/TPC engine pairs, fast FP16
+    /// (2x like FP8), no FP8-E5M2 support, higher launch overhead.
+    pub fn generic_gpu() -> DeviceProfile {
+        DeviceProfile {
+            name: "generic-gpu".into(),
+            n_mme: 4,
+            n_tpc: 4,
+            mme_macs_per_us: 80_000.0,
+            tpc_bytes_per_us: 16_000.0,
+            hbm_bytes_per_us: 60_000.0,
+            launch_us: 3.0,
+            noise_std: 0.01,
+            enable_fusion: true,
+            mme_rates: RateTable::gaudi2().with(Format::Fp16, 2.0),
+            supported: vec![Format::Fp32, Format::Fp16, Format::Bf16, Format::Fp8E4m3],
+            hbm_capacity_bytes: 80.0e9,
+        }
+    }
+
+    /// A CPU roofline: one engine pair, compute-bound MME work, and NO
+    /// per-format throughput advantage — quantizing buys bytes, not time.
+    pub fn cpu_roofline() -> DeviceProfile {
+        DeviceProfile {
+            name: "cpu-roofline".into(),
+            n_mme: 1,
+            n_tpc: 1,
+            mme_macs_per_us: 5_000.0,
+            tpc_bytes_per_us: 8_000.0,
+            hbm_bytes_per_us: 40_000.0,
+            launch_us: 5.0,
+            noise_std: 0.0,
+            enable_fusion: false,
+            mme_rates: RateTable::uniform(1.0).with(Format::Fp32, 0.5),
+            supported: Format::ALL.to_vec(),
+            hbm_capacity_bytes: 512.0e9,
+        }
+    }
+
+    pub fn supports(&self, f: Format) -> bool {
+        self.supported.contains(&f)
+    }
+
+    /// Restrict a requested format menu to this device's supported set
+    /// (menu order preserved).
+    pub fn restrict_menu(&self, menu: &[Format]) -> Vec<Format> {
+        menu.iter().copied().filter(|f| self.supports(*f)).collect()
+    }
+
+    /// MME throughput multiplier of `f` vs BF16.
+    pub fn mme_rate(&self, f: Format) -> f64 {
+        self.mme_rates.get(f)
+    }
+
+    /// Per-MAC time gain delta_T,f of this device (paper eq. 24).
+    pub fn delta_t(&self, f: Format) -> f64 {
+        self.mme_rates.delta_t(f)
+    }
+
+    /// Filesystem-safe key for per-device cache files.  When sanitization
+    /// would alter the name, a stable FNV-1a hash of the ORIGINAL name is
+    /// appended so distinct device names ("my accel" vs "my-accel") never
+    /// share a cache file.
+    pub fn fs_key(&self) -> String {
+        let safe: String = self
+            .name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '-' })
+            .collect();
+        if safe == self.name {
+            return safe;
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.name.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        format!("{safe}-{h:016x}")
+    }
+
+    /// Structural sanity: positive rooflines, at least one engine of each
+    /// kind, BF16 in the supported mask.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("device profile needs a non-empty name");
+        }
+        if self.n_mme == 0 || self.n_tpc == 0 {
+            bail!("device '{}' needs at least one MME and one TPC engine", self.name);
+        }
+        for (what, v) in [
+            ("mme_macs_per_us", self.mme_macs_per_us),
+            ("tpc_bytes_per_us", self.tpc_bytes_per_us),
+            ("hbm_bytes_per_us", self.hbm_bytes_per_us),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                bail!("device '{}': {what} must be positive and finite (got {v})", self.name);
+            }
+        }
+        for (what, v) in [
+            ("launch_us", self.launch_us),
+            ("noise_std", self.noise_std),
+            ("hbm_capacity_bytes", self.hbm_capacity_bytes),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                bail!("device '{}': {what} must be non-negative and finite (got {v})", self.name);
+            }
+        }
+        for f in Format::ALL {
+            let rate = self.mme_rates.get(f);
+            if !rate.is_finite() || rate <= 0.0 {
+                bail!(
+                    "device '{}': mme rate for {} must be positive and finite (got {rate})",
+                    self.name,
+                    f.name()
+                );
+            }
+        }
+        if !self.supports(Format::Bf16) {
+            bail!("device '{}' must support the BF16 baseline format", self.name);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("n_mme".into(), Json::Num(self.n_mme as f64)),
+            ("n_tpc".into(), Json::Num(self.n_tpc as f64)),
+            ("mme_macs_per_us".into(), Json::Num(self.mme_macs_per_us)),
+            ("tpc_bytes_per_us".into(), Json::Num(self.tpc_bytes_per_us)),
+            ("hbm_bytes_per_us".into(), Json::Num(self.hbm_bytes_per_us)),
+            ("launch_us".into(), Json::Num(self.launch_us)),
+            ("noise_std".into(), Json::Num(self.noise_std)),
+            ("enable_fusion".into(), Json::Bool(self.enable_fusion)),
+            ("mme_rates".into(), self.mme_rates.to_json()),
+            (
+                "supported_formats".into(),
+                Json::Arr(
+                    self.supported
+                        .iter()
+                        .map(|f| Json::Str(f.name().to_string()))
+                        .collect(),
+                ),
+            ),
+            ("hbm_capacity_bytes".into(), Json::Num(self.hbm_capacity_bytes)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<DeviceProfile> {
+        let supported = j
+            .get("supported_formats")?
+            .arr()?
+            .iter()
+            .map(|x| {
+                let name = x.str()?;
+                Format::from_name(name).ok_or_else(|| anyhow!("unknown format '{name}'"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let enable_fusion = match j.get("enable_fusion")? {
+            Json::Bool(b) => *b,
+            _ => bail!("'enable_fusion' must be a bool"),
+        };
+        let p = DeviceProfile {
+            name: j.get("name")?.str()?.to_string(),
+            n_mme: j.get("n_mme")?.usize()?,
+            n_tpc: j.get("n_tpc")?.usize()?,
+            mme_macs_per_us: j.get("mme_macs_per_us")?.f64()?,
+            tpc_bytes_per_us: j.get("tpc_bytes_per_us")?.f64()?,
+            hbm_bytes_per_us: j.get("hbm_bytes_per_us")?.f64()?,
+            launch_us: j.get("launch_us")?.f64()?,
+            noise_std: j.get("noise_std")?.f64()?,
+            enable_fusion,
+            mme_rates: RateTable::from_json(j.get("mme_rates")?)?,
+            supported,
+            hbm_capacity_bytes: j.get("hbm_capacity_bytes")?.f64()?,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Load and validate one profile from a user JSON file.
+    pub fn load_file(path: &Path) -> Result<DeviceProfile> {
+        DeviceProfile::from_json(&Json::parse_file(path)?)
+            .map_err(|e| anyhow!("device profile {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaudi2_rates_match_the_old_hardcoding() {
+        let t = RateTable::gaudi2();
+        assert_eq!(t.get(Format::Fp32), 0.5);
+        assert_eq!(t.get(Format::Fp16), 1.0);
+        assert_eq!(t.get(Format::Bf16), 1.0);
+        assert_eq!(t.get(Format::Fp8E4m3), 2.0);
+        assert_eq!(t.get(Format::Fp8E5m2), 2.0);
+        // The eq.-24 deltas the IP-TT family is built from.
+        assert_eq!(t.delta_t(Format::Bf16), 0.0);
+        assert_eq!(t.delta_t(Format::Fp8E4m3), 0.5);
+        assert_eq!(t.delta_t(Format::Fp32), -1.0);
+    }
+
+    #[test]
+    fn cpu_roofline_has_no_fp8_rate_advantage() {
+        let p = DeviceProfile::cpu_roofline();
+        assert_eq!(p.delta_t(Format::Fp8E4m3), 0.0);
+        assert_eq!(p.n_mme, 1);
+        assert!(!p.enable_fusion);
+    }
+
+    #[test]
+    fn profile_json_roundtrip_exact() {
+        for p in [
+            DeviceProfile::gaudi2(),
+            DeviceProfile::gaudi3(),
+            DeviceProfile::generic_gpu(),
+            DeviceProfile::cpu_roofline(),
+        ] {
+            let text = p.to_json().to_string();
+            let back = DeviceProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, p, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_broken_profiles() {
+        let mut p = DeviceProfile::gaudi2();
+        p.n_mme = 0;
+        assert!(p.validate().is_err());
+        let mut p = DeviceProfile::gaudi2();
+        p.supported = vec![Format::Fp8E4m3];
+        assert!(p.validate().is_err(), "bf16 baseline must be supported");
+        let mut p = DeviceProfile::gaudi2();
+        p.hbm_bytes_per_us = 0.0;
+        assert!(p.validate().is_err());
+        let mut p = DeviceProfile::gaudi2();
+        p.mme_rates.set(Format::Fp8E4m3, 0.0);
+        assert!(p.validate().is_err(), "zero MME rates must be rejected");
+        // from_json re-validates: a doctored file is rejected.
+        let mut j = DeviceProfile::gaudi2().to_json();
+        if let Json::Obj(kv) = &mut j {
+            for (k, v) in kv.iter_mut() {
+                if k == "n_tpc" {
+                    *v = Json::Num(0.0);
+                }
+            }
+        }
+        assert!(DeviceProfile::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn menu_restriction_respects_the_mask() {
+        let gpu = DeviceProfile::generic_gpu();
+        assert!(!gpu.supports(Format::Fp8E5m2));
+        assert_eq!(
+            gpu.restrict_menu(&[Format::Bf16, Format::Fp8E5m2, Format::Fp8E4m3]),
+            vec![Format::Bf16, Format::Fp8E4m3]
+        );
+    }
+
+    #[test]
+    fn fs_key_sanitizes_and_disambiguates() {
+        // Clean names pass through untouched (built-in cache file names
+        // stay human-readable and stable).
+        assert_eq!(DeviceProfile::gaudi2().fs_key(), "gaudi2");
+        assert_eq!(DeviceProfile::cpu_roofline().fs_key(), "cpu-roofline");
+        // Names needing sanitization get a stable hash suffix, so two
+        // names that sanitize identically still get distinct cache files.
+        let mut a = DeviceProfile::gaudi2();
+        a.name = "my accel".into();
+        let mut b = DeviceProfile::gaudi2();
+        b.name = "my-accel".into();
+        let mut c = DeviceProfile::gaudi2();
+        c.name = "my/accel".into();
+        assert!(a.fs_key().starts_with("my-accel-"));
+        assert_eq!(b.fs_key(), "my-accel");
+        assert_ne!(a.fs_key(), b.fs_key());
+        assert_ne!(a.fs_key(), c.fs_key());
+        assert_eq!(a.fs_key(), a.fs_key(), "key must be deterministic");
+    }
+}

@@ -1,0 +1,131 @@
+//! A name -> [`DeviceProfile`] registry with the four built-in devices and
+//! user-supplied JSON profiles.
+
+use super::profile::DeviceProfile;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// The device every pre-backend measurement implicitly ran on.
+pub const DEFAULT_DEVICE: &str = "gaudi2";
+
+/// Device profile registry.  `Registry::builtin()` carries the four
+/// shipped devices; `load`/`register` add user profiles.
+pub struct Registry {
+    profiles: BTreeMap<String, DeviceProfile>,
+}
+
+impl Registry {
+    pub fn empty() -> Registry {
+        Registry { profiles: BTreeMap::new() }
+    }
+
+    /// The built-in device set: `gaudi2` (today's defaults), `gaudi3`
+    /// (2x MME/HBM), `generic-gpu` (4 symmetric engines, fp16-fast),
+    /// `cpu-roofline` (1 engine, no fp8 speedup).
+    pub fn builtin() -> Registry {
+        let mut r = Registry::empty();
+        for p in [
+            DeviceProfile::gaudi2(),
+            DeviceProfile::gaudi3(),
+            DeviceProfile::generic_gpu(),
+            DeviceProfile::cpu_roofline(),
+        ] {
+            r.register(p);
+        }
+        r
+    }
+
+    /// Register (or replace) a profile under its own name.
+    pub fn register(&mut self, profile: DeviceProfile) {
+        self.profiles.insert(profile.name.clone(), profile);
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.profiles.keys().cloned().collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &DeviceProfile> {
+        self.profiles.values()
+    }
+
+    pub fn get(&self, name: &str) -> Result<DeviceProfile> {
+        self.profiles.get(name).cloned().ok_or_else(|| {
+            anyhow!(
+                "unknown device '{name}' (known: {})",
+                self.names().join(", ")
+            )
+        })
+    }
+
+    /// Load a user JSON profile file, register it, and return its name.
+    pub fn load(&mut self, path: &Path) -> Result<String> {
+        let p = DeviceProfile::load_file(path)?;
+        let name = p.name.clone();
+        self.register(p);
+        Ok(name)
+    }
+
+    /// Resolve a CLI device spec: a registered name, or a path to a JSON
+    /// profile file.
+    pub fn resolve(&self, spec: &str) -> Result<DeviceProfile> {
+        if let Ok(p) = self.get(spec) {
+            return Ok(p);
+        }
+        let path = Path::new(spec);
+        if path.exists() {
+            return DeviceProfile::load_file(path);
+        }
+        Err(anyhow!(
+            "device '{spec}' is neither a registered profile (known: {}) nor a JSON file",
+            self.names().join(", ")
+        ))
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::builtin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_set_is_complete() {
+        let r = Registry::builtin();
+        assert_eq!(
+            r.names(),
+            vec!["cpu-roofline", "gaudi2", "gaudi3", "generic-gpu"]
+        );
+        assert_eq!(r.get(DEFAULT_DEVICE).unwrap(), DeviceProfile::gaudi2());
+        assert!(r.get("tpu-v9").is_err());
+    }
+
+    #[test]
+    fn load_and_resolve_user_profiles() {
+        let dir = std::env::temp_dir().join(format!("ampq_registry_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("accel.json");
+        let mut custom = DeviceProfile::gaudi2();
+        custom.name = "my-accel".into();
+        custom.mme_macs_per_us = 123_456.0;
+        std::fs::write(&path, custom.to_json().to_string()).unwrap();
+
+        let mut r = Registry::builtin();
+        let name = r.load(&path).unwrap();
+        assert_eq!(name, "my-accel");
+        assert_eq!(r.get("my-accel").unwrap(), custom);
+        // resolve() accepts both names and paths.
+        assert_eq!(r.resolve("my-accel").unwrap(), custom);
+        assert_eq!(
+            Registry::builtin().resolve(path.to_str().unwrap()).unwrap(),
+            custom
+        );
+        assert!(Registry::builtin().resolve("no/such/file.json").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

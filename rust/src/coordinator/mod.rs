@@ -3,18 +3,15 @@
 //! per-group time-gain measurement, IP optimization (eq. 5), and the
 //! Random/Prefix baselines used in §3.
 //!
-//! Since 0.2 the preferred entry point is the staged planning API in
-//! [`crate::plan`]; this module keeps the shared strategy machinery and the
-//! deprecated one-shot `Pipeline` shim.
+//! Since 0.2 the entry point is the staged planning API in [`crate::plan`];
+//! this module keeps the shared strategy machinery.  (The pre-0.2 one-shot
+//! `Pipeline` shim, deprecated for one release, is gone as of 0.4.)
 
 pub mod baselines;
 pub mod ip;
-pub mod pipeline;
 pub mod strategy;
 
 pub use ip::{optimize, optimize_with_caps, IpOutcome};
-#[allow(deprecated)]
-pub use pipeline::Pipeline;
 pub use strategy::{
     build_family, paper_tau_grid, select_config, select_config_constrained, Family, Strategy,
 };

@@ -1,6 +1,7 @@
-//! Strategy families and selection (paper §3.1 comparison set), shared by
-//! the staged planning API (`plan::Planner`) and the deprecated `Pipeline`.
+//! Strategy families and selection (paper §3.1 comparison set), consumed
+//! by the staged planning API (`plan::Planner`).
 
+use crate::backend::DeviceProfile;
 use crate::gaudisim::MpConfig;
 use crate::graph::partition::Partition;
 use crate::metrics::{self, GroupChoices, Objective};
@@ -16,6 +17,9 @@ use std::collections::HashMap;
 #[derive(Clone, Debug, PartialEq)]
 pub struct Family {
     pub objective: Objective,
+    /// The format menu this family's configurations draw from (already
+    /// restricted to the device's supported-format mask).
+    pub formats: Vec<Format>,
     pub groups: Vec<GroupChoices>,
     pub eligible: Vec<bool>,
     /// Per-group `configuration -> column` maps, precomputed so per-query
@@ -25,7 +29,12 @@ pub struct Family {
 }
 
 impl Family {
-    pub fn new(objective: Objective, groups: Vec<GroupChoices>, eligible: Vec<bool>) -> Family {
+    pub fn new(
+        objective: Objective,
+        formats: Vec<Format>,
+        groups: Vec<GroupChoices>,
+        eligible: Vec<bool>,
+    ) -> Family {
         let index = groups
             .iter()
             .map(|g| {
@@ -36,7 +45,22 @@ impl Family {
                     .collect::<HashMap<Vec<Format>, usize>>()
             })
             .collect();
-        Family { objective, groups, eligible, index }
+        Family { objective, formats, groups, eligible, index }
+    }
+
+    /// The format the Random/Prefix baselines quantize to: the narrowest
+    /// menu entry no wider than BF16, preferring the most mantissa bits at
+    /// equal width (FP8-E4M3 on the paper menu — and on any menu ordering,
+    /// unlike a first-entry rule, which would pick FP32 from a menu listing
+    /// it first).  A menu with nothing to narrow to (e.g. collapsed to
+    /// [BF16] by the device mask) quantizes nothing.
+    pub fn baseline_target(&self) -> Format {
+        self.formats
+            .iter()
+            .copied()
+            .filter(|f| *f != Format::Bf16 && f.bytes() <= Format::Bf16.bytes())
+            .min_by_key(|f| (f.bytes(), std::cmp::Reverse(f.mbits())))
+            .unwrap_or(Format::Bf16)
     }
 
     /// Column index of `key` in group j's configuration enumeration.
@@ -60,26 +84,31 @@ impl Family {
     }
 }
 
-/// Build the IP groups + baseline eligibility for one objective family.
-/// Baselines in the Memory family may only touch linear layers (paper §3.1);
-/// ET/TT families may quantize everything.
+/// Build the IP groups + baseline eligibility for one objective family on
+/// one device.  Baselines in the Memory family may only touch linear
+/// layers (paper §3.1); ET/TT families may quantize everything.  `formats`
+/// must already be restricted to the device's supported mask (the Engine
+/// does this when staging).
 pub fn build_family(
     objective: Objective,
     partition: &Partition,
     qlayers: &[QLayer],
     formats: &[Format],
     tm: &TimeMeasurements,
+    device: &DeviceProfile,
 ) -> Family {
     let groups = match objective {
         Objective::EmpiricalTime => metrics::empirical_groups(tm),
-        Objective::TheoreticalTime => metrics::theoretical_groups(partition, qlayers, formats),
+        Objective::TheoreticalTime => {
+            metrics::theoretical_groups(partition, qlayers, formats, device)
+        }
         Objective::Memory => metrics::memory_groups(qlayers, formats),
     };
     let eligible = match objective {
         Objective::Memory => qlayers.iter().map(|q| q.kind == LayerKind::Linear).collect(),
         _ => vec![true; qlayers.len()],
     };
-    Family::new(objective, groups, eligible)
+    Family::new(objective, formats.to_vec(), groups, eligible)
 }
 
 /// Strategy selector (paper §3.1 comparison set).
@@ -137,7 +166,7 @@ pub fn select_config(
                 calibration,
                 tau,
                 &family.eligible,
-                Format::Fp8E4m3,
+                family.baseline_target(),
                 &mut rng,
             )
         }
@@ -145,7 +174,7 @@ pub fn select_config(
             calibration,
             tau,
             &family.eligible,
-            Format::Fp8E4m3,
+            family.baseline_target(),
         ),
     })
 }
@@ -211,6 +240,38 @@ mod tests {
     }
 
     #[test]
+    fn collapsed_menu_baselines_quantize_nothing() {
+        // A device mask that leaves only BF16: baselines fall back to the
+        // baseline format (i.e. a no-op config).
+        let fam = Family::new(Objective::EmpiricalTime, vec![Format::Bf16], vec![], vec![]);
+        assert_eq!(fam.baseline_target(), Format::Bf16);
+    }
+
+    #[test]
+    fn baseline_target_is_menu_order_independent() {
+        // FP32 listed first must not become the baseline "quantization"
+        // target; the narrowest/highest-precision format wins.
+        let full = Family::new(Objective::EmpiricalTime, Format::ALL.to_vec(), vec![], vec![]);
+        assert_eq!(full.baseline_target(), Format::Fp8E4m3);
+        // No sub-BF16 width available: fp16 (same width, finer mantissa).
+        let wide = Family::new(
+            Objective::EmpiricalTime,
+            vec![Format::Fp32, Format::Fp16, Format::Bf16],
+            vec![],
+            vec![],
+        );
+        assert_eq!(wide.baseline_target(), Format::Fp16);
+        // FP32 alone never becomes a target (upcasting is not quantizing).
+        let up = Family::new(
+            Objective::EmpiricalTime,
+            vec![Format::Fp32, Format::Bf16],
+            vec![],
+            vec![],
+        );
+        assert_eq!(up.baseline_target(), Format::Bf16);
+    }
+
+    #[test]
     fn family_index_matches_linear_scan() {
         let groups = vec![GroupChoices {
             qidxs: vec![0, 1],
@@ -222,7 +283,13 @@ mod tests {
             ],
             gains: vec![0.0, 1.0, 2.0, 3.5],
         }];
-        let fam = Family::new(Objective::EmpiricalTime, groups, vec![true, true]);
+        let fam = Family::new(
+            Objective::EmpiricalTime,
+            vec![Format::Bf16, Format::Fp8E4m3],
+            groups,
+            vec![true, true],
+        );
+        assert_eq!(fam.baseline_target(), Format::Fp8E4m3);
         for (p, cfg) in fam.groups[0].configs.clone().iter().enumerate() {
             assert_eq!(fam.config_column(0, cfg), Some(p));
         }

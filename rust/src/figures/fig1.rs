@@ -29,7 +29,8 @@ pub fn run(ctx: &mut FigureCtx, model: &str) -> Result<()> {
         .position(|g| g.len() == 5)
         .ok_or_else(|| anyhow!("no 5-layer attention group found"))?;
 
-    let sim = Simulator::new(&graph, ctx.params.hw.clone());
+    let device = ctx.params.device.clone();
+    let sim = Simulator::for_device(&graph, &device);
     let mut src = SimTtft { sim, rng: Rng::new(7), reps: ctx.params.reps };
     let tm = measure_groups(&mut src, &part.partition, &formats)?;
     let per_layer = measure_per_layer(&mut src, &formats)?;
@@ -59,7 +60,7 @@ pub fn run(ctx: &mut FigureCtx, model: &str) -> Result<()> {
             let theo: f64 = qidxs
                 .iter()
                 .zip(cfg_fmts)
-                .map(|(&q, &f)| tt_layer_gain(&part.qlayers[q], f))
+                .map(|(&q, &f)| tt_layer_gain(&part.qlayers[q], f, &device))
                 .sum();
             (label, measured, summed, theo)
         })

@@ -26,7 +26,7 @@ pub fn run(ctx: &mut FigureCtx, model: &str) -> Result<()> {
         .ok_or_else(|| anyhow!("fig3 needs an artifacts root (calibration tokens)"))?
         .to_path_buf();
     let calib_tokens = info.load_calib(&root)?;
-    let sim = Simulator::new(&graph, ctx.params.hw.clone());
+    let sim = Simulator::for_device(&graph, &ctx.params.device);
     let nq = planner.n_qlayers();
     let base_ttft = sim.makespan(&MpConfig::all_bf16(nq));
     let tm = planner.measurements().clone();

@@ -18,7 +18,7 @@ pub mod fig3;
 pub mod sweep;
 pub mod table1;
 
-use crate::gaudisim::HwModel;
+use crate::backend::DeviceProfile;
 use crate::numerics::{Format, PAPER_FORMATS};
 use crate::plan::engine::DEFAULT_MEASURE_SEED;
 use crate::plan::Engine;
@@ -35,7 +35,8 @@ pub struct ExpParams {
     /// TTFT measurement iterations (paper: 5).
     pub reps: usize,
     pub fwd_mode: FwdMode,
-    pub hw: HwModel,
+    /// Hardware the simulated measurements run on.
+    pub device: DeviceProfile,
 }
 
 impl Default for ExpParams {
@@ -46,7 +47,7 @@ impl Default for ExpParams {
             sigma: 0.02,
             reps: 5,
             fwd_mode: FwdMode::Ref,
-            hw: HwModel::default(),
+            device: DeviceProfile::gaudi2(),
         }
     }
 }
@@ -73,7 +74,7 @@ impl FigureCtx {
     pub fn new(engine: Engine, params: ExpParams, out: PathBuf) -> Self {
         std::fs::create_dir_all(&out).ok();
         let engine = engine
-            .with_hw(params.hw.clone())
+            .with_device(params.device.clone())
             .with_fwd_mode(params.fwd_mode)
             .with_measure_protocol(DEFAULT_MEASURE_SEED, params.reps);
         FigureCtx { engine, params, out }

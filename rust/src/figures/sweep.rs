@@ -55,7 +55,7 @@ pub struct SweepInputs<'a> {
     pub planner: &'a Planner,
     pub qlayers: &'a [QLayer],
     pub graph: &'a Graph,
-    pub hw: crate::gaudisim::HwModel,
+    pub device: crate::backend::DeviceProfile,
     pub tasks: &'a [TaskData],
 }
 
@@ -69,7 +69,7 @@ pub fn run_sweep(
     strategies: &[Strategy],
     eval: &mut CachedEvaluator,
 ) -> Result<Sweep> {
-    let sim = Simulator::new(inp.graph, inp.hw.clone());
+    let sim = Simulator::for_device(inp.graph, &inp.device);
     let nq = inp.planner.n_qlayers();
 
     let bf16 = MpConfig::all_bf16(nq);
@@ -102,7 +102,7 @@ pub fn run_sweep(
                     tau,
                     seed,
                     ttft_us: sim.makespan(&config),
-                    tt_gain: total_tt_gain(inp.qlayers, &config),
+                    tt_gain: total_tt_gain(inp.qlayers, &config, &inp.device),
                     mem_gain: total_mem_gain(inp.qlayers, &config),
                     nrmse: plan.nrmse,
                     predicted_mse: plan.predicted_mse,
@@ -129,11 +129,15 @@ fn eval_tasks(
     eval.eval_all(cfg, seed, pscale)
 }
 
-pub fn total_tt_gain(qlayers: &[QLayer], cfg: &MpConfig) -> f64 {
+pub fn total_tt_gain(
+    qlayers: &[QLayer],
+    cfg: &MpConfig,
+    device: &crate::backend::DeviceProfile,
+) -> f64 {
     qlayers
         .iter()
         .enumerate()
-        .map(|(l, q)| tt_layer_gain(q, cfg.get(l)))
+        .map(|(l, q)| tt_layer_gain(q, cfg.get(l), device))
         .sum()
 }
 

@@ -26,14 +26,14 @@ pub fn run(ctx: &mut FigureCtx, model: &str) -> Result<()> {
         .ok_or_else(|| anyhow!("table1 needs an artifacts root (task datasets)"))?
         .to_path_buf();
     let tasks = load_all_tasks(&root, &info)?;
-    let hw = ctx.params.hw.clone();
+    let device = ctx.params.device.clone();
     let mr = ctx.engine.runtime(model)?;
     let mut eval = CachedEvaluator::new(mr, &tasks);
     let inputs = SweepInputs {
         planner: &planner,
         qlayers: &info.qlayers,
         graph: &graph,
-        hw,
+        device,
         tasks: &tasks,
     };
 

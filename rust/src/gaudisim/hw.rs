@@ -1,12 +1,14 @@
 //! Hardware model parameters and per-op roofline cost.
 
+use crate::backend::{DeviceProfile, RateTable};
 use crate::graph::{Engine, Node};
 use crate::numerics::Format;
 
-/// Accelerator description (defaults shaped after Gaudi 2's architecture:
+/// Simulator parameter block (defaults shaped after Gaudi 2's architecture:
 /// 2 MME units, a TPC pool, HBM roofline; absolute rates are scaled to this
-/// testbed — the paper's method only needs *relative* behaviour).
-#[derive(Clone, Debug)]
+/// testbed — the paper's method only needs *relative* behaviour).  Any
+/// device becomes a parameter block via [`HwModel::from_profile`].
+#[derive(Clone, Debug, PartialEq)]
 pub struct HwModel {
     /// Parallel matrix engines.
     pub n_mme: usize,
@@ -24,6 +26,9 @@ pub struct HwModel {
     pub noise_std: f64,
     /// Elementwise-chain fusion on the vector engine (ablation toggle).
     pub enable_fusion: bool,
+    /// Per-format MME throughput multipliers vs BF16 (device data — the
+    /// old `Format::mme_rate` hard-coding).
+    pub mme_rates: RateTable,
 }
 
 impl Default for HwModel {
@@ -37,18 +42,34 @@ impl Default for HwModel {
             launch_us: 1.5,
             noise_std: 0.01,
             enable_fusion: true,
+            mme_rates: RateTable::gaudi2(),
         }
     }
 }
 
 impl HwModel {
+    /// The simulator parameters of a device profile.
+    pub fn from_profile(p: &DeviceProfile) -> HwModel {
+        HwModel {
+            n_mme: p.n_mme,
+            n_tpc: p.n_tpc,
+            mme_macs_per_us: p.mme_macs_per_us,
+            tpc_bytes_per_us: p.tpc_bytes_per_us,
+            hbm_bytes_per_us: p.hbm_bytes_per_us,
+            launch_us: p.launch_us,
+            noise_std: p.noise_std,
+            enable_fusion: p.enable_fusion,
+            mme_rates: p.mme_rates,
+        }
+    }
+
     /// Duration of one node executed in `fmt` (quantizable nodes only use
     /// fmt; others are BF16 by construction), EXCLUDING launch overhead
     /// (the scheduler adds it, once per fused chain).
     pub fn op_time_us(&self, node: &Node, fmt: Format) -> f64 {
         match node.engine {
             Engine::Mme => {
-                let compute = node.macs as f64 / (self.mme_macs_per_us * fmt.mme_rate());
+                let compute = node.macs as f64 / (self.mme_macs_per_us * self.mme_rates.get(fmt));
                 // Operands (activations in + weights) move at the format's
                 // byte width; outputs are produced at BF16.
                 let ratio = fmt.bytes() as f64 / Format::Bf16.bytes() as f64;
@@ -100,6 +121,24 @@ mod tests {
     fn tpc_ignores_format() {
         let hw = HwModel::default();
         let node = n("sm", -1); // tpc
+        assert_eq!(
+            hw.op_time_us(&node, Format::Bf16),
+            hw.op_time_us(&node, Format::Fp8E4m3)
+        );
+    }
+
+    #[test]
+    fn gaudi2_profile_is_the_default_model() {
+        // The gaudi2 built-in must reproduce the pre-backend defaults
+        // exactly, field for field.
+        assert_eq!(HwModel::from_profile(&DeviceProfile::gaudi2()), HwModel::default());
+    }
+
+    #[test]
+    fn cpu_profile_removes_the_fp8_speedup() {
+        let hw = HwModel::from_profile(&DeviceProfile::cpu_roofline());
+        let mut node = n("l", 0);
+        node.macs = 10_000_000; // compute-bound on the weak CPU MME
         assert_eq!(
             hw.op_time_us(&node, Format::Bf16),
             hw.op_time_us(&node, Format::Fp8E4m3)

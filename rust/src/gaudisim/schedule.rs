@@ -2,6 +2,7 @@
 
 use super::hw::HwModel;
 use super::MpConfig;
+use crate::backend::DeviceProfile;
 use crate::graph::{Engine, Graph};
 use crate::numerics::Format;
 use crate::util::Rng;
@@ -43,6 +44,11 @@ impl<'g> Simulator<'g> {
             rank[v] = r;
         }
         Simulator { hw, graph, topo, preds, succ, indeg0, rank, fused }
+    }
+
+    /// Simulator parameterized by a device profile (see `backend`).
+    pub fn for_device(graph: &'g Graph, device: &DeviceProfile) -> Simulator<'g> {
+        Simulator::new(graph, HwModel::from_profile(device))
     }
 
     pub fn graph(&self) -> &Graph {

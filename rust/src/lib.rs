@@ -17,12 +17,14 @@
 //! an [`plan::Engine`] materializes cacheable stage artifacts
 //! (`Partitioned -> Calibrated -> Measured`) once per model, and a
 //! [`plan::Planner`] resolves multi-constraint [`plan::PlanRequest`]
-//! queries (loss budget + optional memory cap) in microseconds, returning
-//! serializable [`plan::Plan`] values.  [`plan::Planner::frontier`]
-//! precomputes the tau -> gain Pareto curve, and [`plan::PlanService`]
-//! serves both concurrently.  The old monolithic `coordinator::Pipeline`
-//! and the scalar `Planner::plan(...)` query remain as deprecated shims
-//! for one release.
+//! queries (loss budget + optional memory cap + target device) in
+//! microseconds, returning serializable [`plan::Plan`] values.
+//! [`plan::Planner::frontier`] precomputes the tau -> gain Pareto curve,
+//! and [`plan::PlanService`] serves both concurrently, routing per-device
+//! requests to per-device planners.  Hardware lives in [`backend`]: a
+//! [`backend::DeviceProfile`] (JSON-loadable; four built-ins in
+//! [`backend::Registry`]) parameterizes the simulator, the theoretical
+//! gain tables, and the format menus.
 
 #![allow(
     clippy::len_without_is_empty,
@@ -33,6 +35,7 @@
     clippy::type_complexity
 )]
 
+pub mod backend;
 pub mod coordinator;
 pub mod evalharness;
 pub mod figures;

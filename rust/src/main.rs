@@ -22,6 +22,7 @@
 //! serde format.  `--demo` registers a synthetic model ("demo") so
 //! everything except evaluate/ttft runs without AOT artifacts.
 
+use ampq::backend::{DeviceProfile, Registry};
 use ampq::coordinator::{paper_tau_grid, Strategy};
 use ampq::evalharness::{evaluate, evaluate_plan, load_all_tasks};
 use ampq::figures::{fig1, fig2, fig3, table1, ExpParams, FigureCtx};
@@ -29,7 +30,7 @@ use ampq::gaudisim::MpConfig;
 use ampq::metrics::Objective;
 use ampq::numerics::Format;
 use ampq::plan::demo::demo_model;
-use ampq::plan::{load_requests, Engine, Plan, PlanRequest};
+use ampq::plan::{load_requests, Engine, Frontier, Plan, PlanRequest};
 use ampq::runtime::FwdMode;
 use ampq::timing::{measure_groups, TtftSource, WallTtft};
 use ampq::util::{Args, Json};
@@ -51,14 +52,18 @@ commands:
   partition   stage-1 artifact: Algorithm-2 sub-graph partition (Fig. 6)
   calibrate   stage-2 artifact: sensitivity calibration s_l, E[g^2]
   measure     stage-3 artifact: per-group empirical time-gain tables
-  optimize    solve one multi-constraint query -> Plan
+              (simulated on the --device profile)
+  optimize    solve one multi-constraint query -> Plan (alias: plan)
   evaluate    evaluate a Plan's configuration on the eval tasks (needs PJRT)
   pipeline    Algorithm 1 end to end: stages 1-3 + IP tau sweep
   sweep       batch-solve the tau x objective x strategy grid from cache
   frontier    precompute the tau -> gain Pareto frontier for one
               (model, objective, strategy)
   serve       answer a JSON array of requests (--requests FILE) on a
-              concurrent PlanService
+              concurrent PlanService; entries may carry \"device\"
+  devices     list the built-in hardware device profiles
+  compare     plan on several devices (--devices a,b,c) and print their
+              Pareto frontiers side by side
   figures     regenerate paper figures/tables into results/
   ttft        wall-clock TTFT of the real compiled forward (needs PJRT)
 
@@ -66,6 +71,9 @@ options:
   --model NAME          model from artifacts/manifest.json [tiny-s]
   --artifacts DIR       artifacts root [artifacts]
   --no-cache            disable the stage cache under <artifacts>/cache/
+  --device NAME|FILE    hardware profile: a registry name (see `ampq
+                        devices`) or a JSON profile file [gaudi2]
+  --devices a,b,c       compare: device list (names and/or JSON files)
   --out DIR             figures output dir [results]
   --tau X               loss-NRMSE threshold [0.004]
   --memory-cap BYTES    additional stored-weight-byte cap (optimize)
@@ -85,6 +93,37 @@ options:
   --demo                register a synthetic model 'demo' (no artifacts
                         or PJRT needed; sets the default --model)
   --blocks N            demo model depth [2]";
+
+/// Everything needed to build one Engine; `serve` and `compare` build one
+/// per device from the same spec.
+struct EngineSpec {
+    root: PathBuf,
+    fwd_mode: FwdMode,
+    measure_seed: u64,
+    reps: usize,
+    no_cache: bool,
+    demo: bool,
+    blocks: usize,
+    demo_seed: u64,
+}
+
+impl EngineSpec {
+    fn engine(&self, device: DeviceProfile) -> Engine {
+        let mut engine = Engine::new()
+            .with_artifacts_root(self.root.clone())
+            .with_fwd_mode(self.fwd_mode)
+            .with_measure_protocol(self.measure_seed, self.reps)
+            .with_device(device);
+        if !self.no_cache {
+            engine = engine.with_cache_dir(self.root.join("cache"));
+        }
+        if self.demo {
+            let (graph, qlayers, calibration) = demo_model(self.blocks, self.demo_seed);
+            engine.register_synthetic("demo", graph, qlayers, calibration);
+        }
+        engine
+    }
+}
 
 fn run(raw: &[String]) -> Result<()> {
     let args = Args::parse(raw, &["quick", "all", "help", "json", "demo", "no-cache"])?;
@@ -115,18 +154,22 @@ fn run(raw: &[String]) -> Result<()> {
         default_seed
     };
 
-    let mut engine = Engine::new()
-        .with_artifacts_root(root.clone())
-        .with_fwd_mode(fwd_mode)
-        .with_measure_protocol(measure_seed, args.usize_or("reps", 5)?);
-    if !args.flag("no-cache") {
-        engine = engine.with_cache_dir(root.join("cache"));
-    }
-    if demo {
-        let blocks = args.usize_or("blocks", 2)?;
-        let (graph, qlayers, calibration) = demo_model(blocks, args.u64_or("seed", 0)?);
-        engine.register_synthetic("demo", graph, qlayers, calibration);
-    }
+    let registry = Registry::builtin();
+    let device = match args.get("device") {
+        None => DeviceProfile::gaudi2(),
+        Some(spec) => registry.resolve(spec)?,
+    };
+    let spec = EngineSpec {
+        root,
+        fwd_mode,
+        measure_seed,
+        reps: args.usize_or("reps", 5)?,
+        no_cache: args.flag("no-cache"),
+        demo,
+        blocks: args.usize_or("blocks", 2)?,
+        demo_seed: args.u64_or("seed", 0)?,
+    };
+    let mut engine = spec.engine(device);
     let model = args
         .get_or("model", if demo { "demo" } else { "tiny-s" })
         .to_string();
@@ -135,12 +178,14 @@ fn run(raw: &[String]) -> Result<()> {
         "partition" => cmd_partition(&mut engine, &model, json),
         "calibrate" => cmd_calibrate(&mut engine, &model, json),
         "measure" => cmd_measure(&mut engine, &model, json),
-        "optimize" => cmd_optimize(&mut engine, &model, &args, json),
+        "optimize" | "plan" => cmd_optimize(&mut engine, &model, &args, json),
         "evaluate" => cmd_evaluate(&mut engine, &model, &args),
         "pipeline" => cmd_pipeline(&mut engine, &model, &args, json),
         "sweep" => cmd_sweep(&mut engine, &model, &args, json),
         "frontier" => cmd_frontier(&mut engine, &model, &args, json),
-        "serve" => cmd_serve(&mut engine, &args, json),
+        "serve" => cmd_serve(&mut engine, &spec, &args, json),
+        "devices" => cmd_devices(&registry, json),
+        "compare" => cmd_compare(&spec, &registry, &model, &args, json),
         "figures" => cmd_figures(engine, &args, fwd_mode),
         "ttft" => cmd_ttft(&mut engine, &model, &args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -233,8 +278,8 @@ fn cmd_measure(engine: &mut Engine, model: &str, json: bool) -> Result<()> {
     }
     let tm = &art.measurements;
     println!(
-        "model {model}: baseline TTFT {:.1} us (simulated Gaudi-2-like, seed {}, {} reps)",
-        tm.base_ttft, art.seed, art.reps
+        "model {model}: baseline TTFT {:.1} us (simulated {}, seed {}, {} reps)",
+        tm.base_ttft, art.device.name, art.seed, art.reps
     );
     for g in &tm.groups {
         let names: Vec<&str> =
@@ -455,16 +500,89 @@ fn cmd_frontier(engine: &mut Engine, model: &str, args: &Args, json: bool) -> Re
     Ok(())
 }
 
-fn cmd_serve(engine: &mut Engine, args: &Args, json: bool) -> Result<()> {
+fn cmd_serve(engine: &mut Engine, spec: &EngineSpec, args: &Args, json: bool) -> Result<()> {
     let path = PathBuf::from(
         args.get("requests")
             .ok_or_else(|| anyhow!("serve needs --requests <file.json>"))?,
     );
-    let reqs = load_requests(&Json::parse_file(&path)?)?;
+    let mut reqs = load_requests(&Json::parse_file(&path)?)?;
+    // Canonicalize device specs up front: entries may name a registry
+    // profile OR a JSON profile file; routing keys are always the
+    // profile's own name.  The local registry starts from the built-ins
+    // PLUS the engine's own (possibly file-loaded) serving default, so
+    // entries can name the default device too; file-loaded profiles are
+    // registered so the staging loop below resolves them by name.
+    let mut registry = Registry::builtin();
+    registry.register(engine.device().clone());
+    // spec -> canonical name memo, so a file spec repeated across N
+    // entries is read and validated once, not N times.
+    let mut canon: Vec<(String, String)> = Vec::new();
+    for r in reqs.iter_mut() {
+        if let Some(d) = r.request.device.take() {
+            if let Some((_, name)) = canon.iter().find(|(s, _)| *s == d) {
+                r.request.device = Some(name.clone());
+                continue;
+            }
+            let profile = registry.resolve(&d)?;
+            // A file-loaded profile must not silently shadow a DIFFERENT
+            // profile already known under the same name — that would
+            // answer requests with the wrong hardware.
+            if let Ok(existing) = registry.get(&profile.name) {
+                if existing != profile {
+                    bail!(
+                        "device spec '{d}' redefines profile '{}' inconsistently with the \
+                         serving default, an earlier entry, or a built-in; rename the profile",
+                        profile.name
+                    );
+                }
+            }
+            let name = profile.name.clone();
+            registry.register(profile);
+            canon.push((d, name.clone()));
+            r.request.device = Some(name);
+        }
+    }
     let mut models: Vec<&str> = reqs.iter().map(|r| r.model.as_str()).collect();
     models.sort();
     models.dedup();
-    let svc = engine.service(&models)?;
+    // Stage the default-device engine only for the models some request
+    // actually queries on it (no device field, or naming it explicitly) —
+    // a batch that is entirely device-scoped elsewhere must not pay
+    // default-device measurement passes.
+    let default_name = engine.device().name.clone();
+    let mut default_models: Vec<&str> = reqs
+        .iter()
+        .filter(|r| r.request.device.as_deref().map_or(true, |d| d == default_name))
+        .map(|r| r.model.as_str())
+        .collect();
+    default_models.sort();
+    default_models.dedup();
+    let svc = engine.service(&default_models)?;
+    // Requests may target other devices: stage exactly the (model, device)
+    // pairs the batch references (the default engine's own device name is
+    // already registered by `service`).
+    let mut pairs: Vec<(&str, &str)> = reqs
+        .iter()
+        .filter_map(|r| {
+            r.request
+                .device
+                .as_deref()
+                .filter(|d| *d != engine.device().name)
+                .map(|d| (r.model.as_str(), d))
+        })
+        .collect();
+    pairs.sort();
+    pairs.dedup();
+    let mut dev_engines: Vec<(String, Engine)> = Vec::new();
+    for (model, dname) in pairs {
+        if !dev_engines.iter().any(|(n, _)| n.as_str() == dname) {
+            let profile = registry.resolve(dname)?;
+            dev_engines.push((dname.to_string(), spec.engine(profile)));
+        }
+        let dev_engine =
+            &mut dev_engines.iter_mut().find(|(n, _)| n.as_str() == dname).unwrap().1;
+        svc.register_for_device(model, dname, dev_engine.planner(model)?)?;
+    }
     let threads = args.usize_or("threads", 4)?;
     let t0 = Instant::now();
     let answers = svc.serve_batch(&reqs, threads)?;
@@ -499,11 +617,122 @@ fn cmd_serve(engine: &mut Engine, args: &Args, json: bool) -> Result<()> {
     Ok(())
 }
 
+fn cmd_devices(registry: &Registry, json: bool) -> Result<()> {
+    if json {
+        let arr: Vec<Json> = registry.iter().map(|p| p.to_json()).collect();
+        println!("{}", Json::Arr(arr).to_string());
+        return Ok(());
+    }
+    println!(
+        "{:<14} {:>4} {:>4} {:>12} {:>10} {:>10} {:>7} {:>7} {:>8} {:>10}  {}",
+        "device", "mme", "tpc", "macs/us/mme", "tpc B/us", "hbm B/us", "launch", "fusion",
+        "fp8-rate", "hbm-cap", "formats"
+    );
+    for p in registry.iter() {
+        let formats: Vec<&str> = p.supported.iter().map(|f| f.name()).collect();
+        println!(
+            "{:<14} {:>4} {:>4} {:>12.0} {:>10.0} {:>10.0} {:>7.1} {:>7} {:>8.1} {:>9.0}G  {}",
+            p.name,
+            p.n_mme,
+            p.n_tpc,
+            p.mme_macs_per_us,
+            p.tpc_bytes_per_us,
+            p.hbm_bytes_per_us,
+            p.launch_us,
+            if p.enable_fusion { "yes" } else { "no" },
+            p.mme_rate(Format::Fp8E4m3),
+            p.hbm_capacity_bytes / 1e9,
+            formats.join(",")
+        );
+    }
+    println!("(use --device NAME on any command, or --device FILE.json for a custom profile)");
+    Ok(())
+}
+
+fn cmd_compare(
+    spec: &EngineSpec,
+    registry: &Registry,
+    model: &str,
+    args: &Args,
+    json: bool,
+) -> Result<()> {
+    let objective = parse_objective(args)?;
+    let names = args
+        .get("devices")
+        .ok_or_else(|| anyhow!("compare needs --devices a,b,c (see `ampq devices`)"))?;
+    let mut reports: Vec<(String, f64, Frontier)> = Vec::new();
+    for spec_name in names.split(',') {
+        let profile = registry.resolve(spec_name.trim())?;
+        let mut engine = spec.engine(profile.clone());
+        let planner = engine.planner(model)?;
+        let frontier = planner.frontier(objective, Strategy::Ip)?;
+        reports.push((profile.name, planner.measurements().base_ttft, frontier));
+    }
+    if json {
+        let arr: Vec<Json> = reports
+            .iter()
+            .map(|(name, base, f)| {
+                Json::Obj(vec![
+                    ("device".into(), Json::Str(name.clone())),
+                    ("base_ttft_us".into(), Json::Num(*base)),
+                    ("frontier".into(), f.to_json()),
+                ])
+            })
+            .collect();
+        println!("{}", Json::Arr(arr).to_string());
+        return Ok(());
+    }
+
+    println!("== cross-device comparison: {model}, {} (IP) ==", objective.name());
+    println!(
+        "{:<14} {:>14} {:>8} {:>10} {:>12}",
+        "device", "base-TTFT[us]", "points", "tau_max", "max-gain"
+    );
+    for (name, base, f) in &reports {
+        let max_gain = f.points.last().map(|p| p.gain).unwrap_or(0.0);
+        println!(
+            "{:<14} {:>14.1} {:>8} {:>10.5} {:>12.3}",
+            name,
+            base,
+            f.points.len(),
+            f.tau_max,
+            max_gain
+        );
+    }
+
+    // Side-by-side frontier: one row per paper tau, one column per device
+    // showing the optimal gain (and quantized-layer count) at that budget.
+    let mut header = format!("{:>8} |", "tau");
+    for (name, _, _) in &reports {
+        header.push_str(&format!(" {:>20} |", name));
+    }
+    println!("\n{header}");
+    for tau in paper_tau_grid() {
+        let mut row = format!("{tau:>8.4} |");
+        for (_, _, f) in &reports {
+            let p = f.at(tau);
+            row.push_str(&format!(
+                " {:>12.3} (nq {:>2}) |",
+                p.gain,
+                p.config.n_quantized()
+            ));
+        }
+        println!("{row}");
+    }
+    println!(
+        "(gain units: us of TTFT for {}; nq = layers quantized at that budget)",
+        objective.name()
+    );
+    Ok(())
+}
+
 fn cmd_figures(engine: Engine, args: &Args, fwd_mode: FwdMode) -> Result<()> {
     let out = PathBuf::from(args.get_or("out", "results"));
     let mut params = if args.flag("quick") { ExpParams::quick() } else { ExpParams::default() };
     params.fwd_mode = fwd_mode;
     params.n_seeds = args.u64_or("seeds", params.n_seeds)?;
+    // Figures run on whatever --device the engine was built for.
+    params.device = engine.device().clone();
     let models: Vec<String> = args
         .get_or("models", "tiny-s,tiny-m")
         .split(',')

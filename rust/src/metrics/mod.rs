@@ -5,10 +5,11 @@
 //!   * memory          c^M  — weight-byte reduction, linear layers only,
 //!     singleton groups (eq. 25-26).
 
+use crate::backend::DeviceProfile;
 use crate::gaudisim::{enumerate_configs, MpConfig};
 use crate::graph::partition::Partition;
 use crate::model::{LayerKind, QLayer};
-use crate::numerics::{delta_m, delta_t, Format};
+use crate::numerics::{delta_m, Format};
 use crate::timing::TimeMeasurements;
 
 /// Objective selector (strategy families IP-ET / IP-TT / IP-M).
@@ -72,10 +73,11 @@ pub fn empirical_groups(tm: &TimeMeasurements) -> Vec<GroupChoices> {
         .collect()
 }
 
-/// Per-layer theoretical gain c^TT_{l,f} = MACs_l * delta_T(f) (eq. 24),
-/// in units of "BF16 MAC times" (the IP is scale-invariant).
-pub fn tt_layer_gain(q: &QLayer, f: Format) -> f64 {
-    q.macs as f64 * delta_t(f)
+/// Per-layer theoretical gain c^TT_{l,f} = MACs_l * delta_T,f (eq. 24),
+/// in units of "BF16 MAC times" (the IP is scale-invariant).  delta_T,f
+/// comes from the device's MME rate table — it is hardware data.
+pub fn tt_layer_gain(q: &QLayer, f: Format, device: &DeviceProfile) -> f64 {
+    q.macs as f64 * device.delta_t(f)
 }
 
 /// c^TT grouped on the same partition as ET (additivity makes this exact).
@@ -83,6 +85,7 @@ pub fn theoretical_groups(
     part: &Partition,
     qlayers: &[QLayer],
     formats: &[Format],
+    device: &DeviceProfile,
 ) -> Vec<GroupChoices> {
     part.groups
         .iter()
@@ -94,7 +97,7 @@ pub fn theoretical_groups(
                     g.qidxs
                         .iter()
                         .zip(cfg)
-                        .map(|(&q, &f)| tt_layer_gain(&qlayers[q], f))
+                        .map(|(&q, &f)| tt_layer_gain(&qlayers[q], f, device))
                         .sum()
                 })
                 .collect();
@@ -179,7 +182,8 @@ mod tests {
     fn tt_gains_additive_and_scaled() {
         let g = diamond();
         let part = partition(&g).unwrap();
-        let groups = theoretical_groups(&part, &qlayers3(), &PAPER_FORMATS);
+        let groups =
+            theoretical_groups(&part, &qlayers3(), &PAPER_FORMATS, &DeviceProfile::gaudi2());
         assert_eq!(groups.len(), 1);
         let gc = &groups[0];
         // All-BF16 gain = 0; all-FP8 = 0.5 * total MACs.
@@ -187,6 +191,16 @@ mod tests {
         let fp8 = gc.configs.iter().position(|c| c.iter().all(|f| *f == Format::Fp8E4m3)).unwrap();
         assert_eq!(gc.gains[bf16], 0.0);
         assert!((gc.gains[fp8] - 0.5 * 3500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tt_gains_are_device_dependent() {
+        let qs = qlayers3();
+        let gaudi = DeviceProfile::gaudi2();
+        let cpu = DeviceProfile::cpu_roofline();
+        assert!(tt_layer_gain(&qs[0], Format::Fp8E4m3, &gaudi) > 0.0);
+        // No fp8 throughput advantage -> zero theoretical time gain.
+        assert_eq!(tt_layer_gain(&qs[0], Format::Fp8E4m3, &cpu), 0.0);
     }
 
     #[test]

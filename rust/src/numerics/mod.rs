@@ -2,12 +2,19 @@
 //!
 //! Mirrors python/compile/quant.py.  The rust side needs these for:
 //!   * alpha_f in the loss-MSE predictor (eq. 22),
-//!   * per-format byte widths / MME rate factors in metrics + gaudisim,
+//!   * per-format byte widths in metrics + gaudisim,
 //!   * a reference fake-quant for tests (validating against the jnp oracle).
+//!
+//! Everything here is a property of the *format* itself.  Per-device
+//! throughput (the old `Format::mme_rate`) lives in
+//! `backend::DeviceProfile` — hardware data, not format data.
 
 pub mod fakequant;
 
-/// A floating-point format the accelerator supports (paper's f index).
+/// Number of supported formats (sizes `backend::RateTable`).
+pub const N_FORMATS: usize = 5;
+
+/// A floating-point format an accelerator may support (paper's f index).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Format {
     Fp32,
@@ -18,6 +25,21 @@ pub enum Format {
 }
 
 impl Format {
+    /// Every format, in declaration order ([`Format::index`] order).
+    pub const ALL: [Format; N_FORMATS] =
+        [Format::Fp32, Format::Fp16, Format::Bf16, Format::Fp8E4m3, Format::Fp8E5m2];
+
+    /// Dense index into [`Format::ALL`] (rate-table slots).
+    pub fn index(self) -> usize {
+        match self {
+            Format::Fp32 => 0,
+            Format::Fp16 => 1,
+            Format::Bf16 => 2,
+            Format::Fp8E4m3 => 3,
+            Format::Fp8E5m2 => 4,
+        }
+    }
+
     /// Stored mantissa bits m_f (paper §2.2).
     pub fn mbits(self) -> u32 {
         match self {
@@ -53,15 +75,6 @@ impl Format {
         2.0f64.powi(-2 * self.mbits() as i32) / 12.0
     }
 
-    /// MME throughput multiplier vs BF16 (Gaudi-2-like: FP8 MACs run 2x).
-    pub fn mme_rate(self) -> f64 {
-        match self {
-            Format::Fp32 => 0.5,
-            Format::Fp16 | Format::Bf16 => 1.0,
-            Format::Fp8E4m3 | Format::Fp8E5m2 => 2.0,
-        }
-    }
-
     pub fn name(self) -> &'static str {
         match self {
             Format::Fp32 => "fp32",
@@ -88,14 +101,9 @@ impl Format {
 /// BF16 (baseline, index 0) and FP8-E4M3 (index 1).
 pub const PAPER_FORMATS: [Format; 2] = [Format::Bf16, Format::Fp8E4m3];
 
-/// Per-MAC time gain of format f vs the BF16 baseline, delta_T,f (eq. 24):
-/// 1 - rate(bf16)/rate(f) in units of "BF16 MAC times".
-pub fn delta_t(f: Format) -> f64 {
-    1.0 - Format::Bf16.mme_rate() / f.mme_rate()
-}
-
 /// Per-element byte reduction of storing in f instead of BF16, delta_M,f
-/// (eq. 25).
+/// (eq. 25).  Purely format data; the time-side delta_T,f (eq. 24) is
+/// device data — see `backend::RateTable::delta_t`.
 pub fn delta_m(f: Format) -> f64 {
     Format::Bf16.bytes() as f64 - f.bytes() as f64
 }
@@ -119,18 +127,23 @@ mod tests {
 
     #[test]
     fn deltas() {
-        assert_eq!(delta_t(Format::Bf16), 0.0);
-        assert_eq!(delta_t(Format::Fp8E4m3), 0.5);
         assert_eq!(delta_m(Format::Bf16), 0.0);
         assert_eq!(delta_m(Format::Fp8E4m3), 1.0);
     }
 
     #[test]
     fn name_roundtrip() {
-        for f in [Format::Fp32, Format::Fp16, Format::Bf16, Format::Fp8E4m3, Format::Fp8E5m2] {
+        for f in Format::ALL {
             assert_eq!(Format::from_name(f.name()), Some(f));
         }
         assert_eq!(Format::from_name("fp8"), Some(Format::Fp8E4m3));
         assert_eq!(Format::from_name("int4"), None);
+    }
+
+    #[test]
+    fn index_is_dense_over_all() {
+        for (i, f) in Format::ALL.iter().enumerate() {
+            assert_eq!(f.index(), i);
+        }
     }
 }

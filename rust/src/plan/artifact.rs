@@ -8,6 +8,7 @@
 //! `from_json(to_json(x)) == x` (covered by tests here and in
 //! tests/staged_api.rs).
 
+use crate::backend::DeviceProfile;
 use crate::graph::partition::{Partition, SubGraph};
 use crate::model::{LayerKind, QLayer};
 use crate::numerics::Format;
@@ -243,16 +244,18 @@ impl Calibrated {
 // ---- stage 3: Measured --------------------------------------------------
 
 /// Stage-3 artifact: the per-group empirical time-gain tables (Algorithm 1
-/// line 3) plus the measurement protocol that produced them.
+/// line 3) plus the measurement protocol that produced them.  Gain tables
+/// are meaningless without their hardware, so the full device profile is
+/// embedded: it keys cache validity AND carries the rate table the
+/// theoretical-time family is built from at Planner assembly.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Measured {
     pub model: String,
     pub formats: Vec<Format>,
     pub seed: u64,
     pub reps: usize,
-    /// Fingerprint of the hardware model the measurement ran under
-    /// (see `engine::hw_digest`) — part of the cache-validity key.
-    pub hw_digest: String,
+    /// The device the measurement ran on (simulated).
+    pub device: DeviceProfile,
     pub measurements: TimeMeasurements,
 }
 
@@ -282,7 +285,7 @@ impl Measured {
             // survive the JSON round-trip exactly.
             ("seed".into(), Json::Str(self.seed.to_string())),
             ("reps".into(), unum(self.reps)),
-            ("hw_digest".into(), Json::Str(self.hw_digest.clone())),
+            ("device".into(), self.device.to_json()),
             ("base_ttft".into(), num(self.measurements.base_ttft)),
             ("groups".into(), Json::Arr(groups)),
         ])
@@ -314,7 +317,7 @@ impl Measured {
             formats: formats_from_json(j.get("formats")?)?,
             seed: j.get("seed")?.str()?.parse::<u64>()?,
             reps: j.get("reps")?.usize()?,
-            hw_digest: j.get("hw_digest")?.str()?.to_string(),
+            device: DeviceProfile::from_json(j.get("device")?)?,
             measurements: TimeMeasurements {
                 base_ttft: j.get("base_ttft")?.f64()?,
                 groups,
@@ -400,7 +403,7 @@ mod tests {
             formats: PAPER_FORMATS.to_vec(),
             seed: u64::MAX - 1, // > 2^53: must survive the round-trip exactly
             reps: 5,
-            hw_digest: "HwModel { n_mme: 2 }".into(),
+            device: DeviceProfile::gaudi3(),
             measurements: TimeMeasurements {
                 base_ttft: 123.456,
                 groups: vec![GroupGains {

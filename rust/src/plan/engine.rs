@@ -9,7 +9,7 @@
 
 use super::artifact::{Calibrated, Measured, Partitioned};
 use super::planner::Planner;
-use crate::gaudisim::HwModel;
+use crate::backend::DeviceProfile;
 use crate::graph::partition::partition;
 use crate::graph::Graph;
 use crate::model::{Manifest, ModelInfo, QLayer};
@@ -17,7 +17,7 @@ use crate::numerics::{Format, PAPER_FORMATS};
 use crate::runtime::{FwdMode, ModelRuntime, Runtime};
 use crate::sensitivity::{calibrate, Calibration};
 use crate::timing::{measure_groups, SimTtft};
-use crate::util::{Json, Rng};
+use crate::util::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -40,13 +40,6 @@ pub struct EngineCounters {
     pub measurement_passes: usize,
     /// Stage artifacts served from the on-disk cache.
     pub cache_loads: usize,
-}
-
-/// Stable fingerprint of the hardware model a measurement ran under.
-/// `HwModel` derives Debug over plain scalar fields, so its Debug form is
-/// deterministic and captures every parameter that shapes the gain tables.
-pub(crate) fn hw_digest(hw: &HwModel) -> String {
-    format!("{hw:?}")
 }
 
 /// A model registered directly from in-memory pieces (tests, demos,
@@ -74,7 +67,8 @@ pub struct Engine {
     manifest: Option<Manifest>,
     cache_dir: Option<PathBuf>,
     fwd_mode: FwdMode,
-    hw: HwModel,
+    device: DeviceProfile,
+    /// Requested menu; planning uses its device-supported subset.
     formats: Vec<Format>,
     measure_seed: u64,
     measure_reps: usize,
@@ -92,7 +86,7 @@ impl Engine {
             manifest: None,
             cache_dir: None,
             fwd_mode: FwdMode::Ref,
-            hw: HwModel::default(),
+            device: DeviceProfile::gaudi2(),
             formats: PAPER_FORMATS.to_vec(),
             measure_seed: DEFAULT_MEASURE_SEED,
             measure_reps: DEFAULT_MEASURE_REPS,
@@ -126,18 +120,46 @@ impl Engine {
         self
     }
 
-    pub fn with_hw(mut self, hw: HwModel) -> Engine {
-        self.hw = hw;
+    /// Drop memoized stage artifacts that depend on the device/menu or the
+    /// measurement protocol.  Staging after a builder change must re-check
+    /// against the NEW configuration (the disk cache enforces this; the
+    /// in-memory layer must not bypass it).
+    fn invalidate_stages(&mut self, partitioned: bool, measured: bool) {
+        for state in self.models.values_mut() {
+            if partitioned {
+                state.partitioned = None;
+            }
+            if measured {
+                state.measured = None;
+            }
+        }
+    }
+
+    /// Target hardware: the Measured stage simulates `device`, its cache
+    /// entries are keyed by the device, and the planning format menu is
+    /// restricted to the device's supported mask.
+    pub fn with_device(mut self, device: DeviceProfile) -> Engine {
+        if device != self.device {
+            // Menu (partition artifact) and gain tables both depend on it.
+            self.invalidate_stages(true, true);
+        }
+        self.device = device;
         self
     }
 
     pub fn with_formats(mut self, formats: Vec<Format>) -> Engine {
+        if formats != self.formats {
+            self.invalidate_stages(true, true);
+        }
         self.formats = formats;
         self
     }
 
     /// Measurement protocol of the Measured stage (seed, TTFT reps).
     pub fn with_measure_protocol(mut self, seed: u64, reps: usize) -> Engine {
+        if (seed, reps) != (self.measure_seed, self.measure_reps) {
+            self.invalidate_stages(false, true);
+        }
         self.measure_seed = seed;
         self.measure_reps = reps;
         self
@@ -165,12 +187,32 @@ impl Engine {
         self.artifacts_root.as_deref()
     }
 
-    pub fn hw(&self) -> &HwModel {
-        &self.hw
+    pub fn device(&self) -> &DeviceProfile {
+        &self.device
     }
 
+    /// The requested format menu (see [`Engine::menu`] for the effective
+    /// device-restricted one).
     pub fn formats(&self) -> &[Format] {
         &self.formats
+    }
+
+    /// The effective planning menu: the requested formats the device
+    /// supports.  The BF16 baseline must survive the mask.  Also the
+    /// staging-time gate rejecting structurally invalid device profiles
+    /// (`with_device` is an infallible builder; in-code profiles with
+    /// e.g. zero MME rates fail here, before any measurement runs).
+    pub fn menu(&self) -> Result<Vec<Format>> {
+        self.device.validate()?;
+        let menu = self.device.restrict_menu(&self.formats);
+        if !menu.contains(&Format::Bf16) {
+            bail!(
+                "device '{}' does not support the BF16 baseline (requested menu {:?})",
+                self.device.name,
+                self.formats
+            );
+        }
+        Ok(menu)
     }
 
     /// Names the engine can currently serve: registered synthetic models
@@ -284,18 +326,37 @@ impl Engine {
 
     // ---- stage 1: partition ---------------------------------------------
 
+    /// File-name tag of a non-default format menu (None for the paper
+    /// menu, keeping the legacy cache file names).  Non-default menus get
+    /// their own cache files — engines with different menus sharing one
+    /// cache dir must not thrash each other.
+    fn menu_tag(menu: &[Format]) -> Option<String> {
+        if menu == &PAPER_FORMATS[..] {
+            return None;
+        }
+        let tags: Vec<&str> = menu.iter().map(|f| f.name()).collect();
+        Some(tags.join("-"))
+    }
+
+    /// Cache stage name of the Partitioned artifact (menu-keyed).
+    fn partitioned_stage(menu: &[Format]) -> String {
+        match Self::menu_tag(menu) {
+            None => "partitioned".to_string(),
+            Some(tag) => format!("partitioned-{tag}"),
+        }
+    }
+
     /// Stage-1 artifact (memory -> disk cache -> compute).
     pub fn partitioned(&mut self, model: &str) -> Result<Partitioned> {
         if let Some(p) = self.models.get(model).and_then(|s| s.partitioned.clone()) {
             return Ok(p);
         }
         let expected_nq = self.qlayers(model)?.len();
-        if let Some(j) = self.cached_json(model, "partitioned") {
+        let menu = self.menu()?;
+        let stage = Self::partitioned_stage(&menu);
+        if let Some(j) = self.cached_json(model, &stage) {
             if let Ok(art) = Partitioned::from_json(&j) {
-                if art.model == model
-                    && art.formats == self.formats
-                    && art.n_qlayers() == expected_nq
-                {
+                if art.model == model && art.formats == menu && art.n_qlayers() == expected_nq {
                     self.counters.cache_loads += 1;
                     self.state_mut(model).partitioned = Some(art.clone());
                     return Ok(art);
@@ -309,11 +370,11 @@ impl Engine {
         self.counters.partition_passes += 1;
         let art = Partitioned {
             model: model.to_string(),
-            formats: self.formats.clone(),
+            formats: menu,
             qlayers,
             partition: part,
         };
-        self.store_cache(model, "partitioned", &art.to_json());
+        self.store_cache(model, &stage, &art.to_json());
         self.state_mut(model).partitioned = Some(art.clone());
         Ok(art)
     }
@@ -366,23 +427,38 @@ impl Engine {
 
     // ---- stage 3: time measurement --------------------------------------
 
+    /// Per-(device, menu) cache stage name, so measurements for different
+    /// devices — or different format menus on one device — land in
+    /// different files and never collide.  '+' joins the two variable
+    /// parts: `fs_key` sanitizes it away from device names, so a device
+    /// named like a menu tag cannot alias a (device, menu) pair.
+    fn measured_stage(&self, menu: &[Format]) -> String {
+        match Self::menu_tag(menu) {
+            None => format!("measured-{}", self.device.fs_key()),
+            Some(tag) => format!("measured-{}+{tag}", self.device.fs_key()),
+        }
+    }
+
     /// Stage-3 artifact (memory -> disk cache -> compute).  Computing runs
-    /// the per-group TTFT protocol on the Gaudi-2-like simulator.
+    /// the per-group TTFT protocol on the simulator parameterized by this
+    /// engine's device profile.
     pub fn measured(&mut self, model: &str) -> Result<Measured> {
         if let Some(m) = self.models.get(model).and_then(|s| s.measured.clone()) {
             return Ok(m);
         }
         let partitioned = self.partitioned(model)?;
-        let hw_digest = hw_digest(&self.hw);
-        if let Some(j) = self.cached_json(model, "measured") {
+        let stage = self.measured_stage(&partitioned.formats);
+        if let Some(j) = self.cached_json(model, &stage) {
             if let Ok(art) = Measured::from_json(&j) {
                 // The gain tables are only reusable under the SAME protocol:
-                // seed, reps, and hardware model all key the measurement.
+                // seed, reps, and the full device profile key the
+                // measurement (the file name only keys the device NAME —
+                // an edited profile under the same name must still miss).
                 if art.model == model
-                    && art.formats == self.formats
+                    && art.formats == partitioned.formats
                     && art.seed == self.measure_seed
                     && art.reps == self.measure_reps
-                    && art.hw_digest == hw_digest
+                    && art.device == self.device
                     && art.measurements.groups.len() == partitioned.partition.groups.len()
                 {
                     self.counters.cache_loads += 1;
@@ -390,26 +466,25 @@ impl Engine {
                     return Ok(art);
                 }
             }
-            eprintln!("warning: stale measured cache for '{model}'; recomputing");
+            eprintln!(
+                "warning: stale measured cache for '{model}' on device '{}'; recomputing",
+                self.device.name
+            );
         }
         let graph = self.graph(model)?;
-        let sim = crate::gaudisim::Simulator::new(&graph, self.hw.clone());
-        let mut src = SimTtft {
-            sim,
-            rng: Rng::new(self.measure_seed),
-            reps: self.measure_reps,
-        };
-        let tm = measure_groups(&mut src, &partitioned.partition, &self.formats)?;
+        let mut src =
+            SimTtft::for_device(&graph, &self.device, self.measure_seed, self.measure_reps);
+        let tm = measure_groups(&mut src, &partitioned.partition, &partitioned.formats)?;
         self.counters.measurement_passes += 1;
         let art = Measured {
             model: model.to_string(),
-            formats: self.formats.clone(),
+            formats: partitioned.formats.clone(),
             seed: self.measure_seed,
             reps: self.measure_reps,
-            hw_digest,
+            device: self.device.clone(),
             measurements: tm,
         };
-        self.store_cache(model, "measured", &art.to_json());
+        self.store_cache(model, &stage, &art.to_json());
         self.state_mut(model).measured = Some(art.clone());
         Ok(art)
     }
@@ -519,6 +594,94 @@ mod tests {
         assert_eq!(a, b);
 
         std::fs::remove_dir_all(&cache).ok();
+    }
+
+    #[test]
+    fn measured_cache_is_keyed_by_device() {
+        let cache = temp_cache("devkey");
+        std::fs::remove_dir_all(&cache).ok();
+        let (graph, qlayers, calibration) = demo_model(2, 3);
+
+        let mut g2 = Engine::new().with_cache_dir(&cache);
+        g2.register_synthetic("demo", graph.clone(), qlayers.clone(), calibration.clone());
+        let m2 = g2.measured("demo").unwrap();
+        assert!(cache.join("demo").join("measured-gaudi2.json").exists());
+
+        // A gaudi3 engine over the SAME cache shares partition+calibration
+        // but must re-measure: different device, different file.
+        let mut g3 = Engine::new()
+            .with_cache_dir(&cache)
+            .with_device(DeviceProfile::gaudi3());
+        g3.register_synthetic("demo", graph.clone(), qlayers.clone(), calibration.clone());
+        g3.calibrated("demo").unwrap();
+        let m3 = g3.measured("demo").unwrap();
+        assert_eq!(g3.counters().measurement_passes, 1, "gaudi3 must re-measure");
+        assert!(cache.join("demo").join("measured-gaudi3.json").exists());
+        assert_eq!(m3.device.name, "gaudi3");
+        // 2x MME/HBM -> a strictly faster baseline TTFT.
+        assert!(m3.measurements.base_ttft < m2.measurements.base_ttft);
+
+        // And a fresh gaudi2 engine still loads ITS artifact untouched.
+        let mut again = Engine::new().with_cache_dir(&cache);
+        again.register_synthetic("demo", graph, qlayers, calibration);
+        let back = again.measured("demo").unwrap();
+        assert_eq!(again.counters().measurement_passes, 0);
+        assert_eq!(back, m2);
+
+        std::fs::remove_dir_all(&cache).ok();
+    }
+
+    #[test]
+    fn retargeting_the_device_invalidates_memoized_stages() {
+        // with_device after staging must not serve another device's
+        // artifacts from memory.
+        let (graph, qlayers, calibration) = demo_model(1, 3);
+        let mut engine = Engine::new();
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+        let m2 = engine.measured("demo").unwrap();
+        assert_eq!(engine.counters().measurement_passes, 1);
+
+        let mut engine = engine.with_device(DeviceProfile::gaudi3());
+        let m3 = engine.measured("demo").unwrap();
+        assert_eq!(engine.counters().measurement_passes, 2, "must re-measure");
+        assert_eq!(m3.device.name, "gaudi3");
+        assert!(m3.measurements.base_ttft < m2.measurements.base_ttft);
+
+        // A no-op retarget keeps the memoized artifact.
+        let mut engine = engine.with_device(DeviceProfile::gaudi3());
+        engine.measured("demo").unwrap();
+        assert_eq!(engine.counters().measurement_passes, 2);
+    }
+
+    #[test]
+    fn device_mask_restricts_the_menu() {
+        let (graph, qlayers, calibration) = demo_model(1, 3);
+        let mut nofp8 = DeviceProfile::gaudi2();
+        nofp8.name = "nofp8".into();
+        nofp8.supported = vec![crate::numerics::Format::Bf16];
+        nofp8.noise_std = 0.0; // the all-BF16 "gain" must be exactly zero
+        let mut engine = Engine::new().with_device(nofp8);
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+        assert_eq!(engine.menu().unwrap(), vec![crate::numerics::Format::Bf16]);
+        let part = engine.partitioned("demo").unwrap();
+        assert_eq!(part.formats, vec![crate::numerics::Format::Bf16]);
+        // Every group enumerates exactly one (all-BF16) configuration.
+        let m = engine.measured("demo").unwrap();
+        for g in &m.measurements.groups {
+            assert_eq!(g.configs.len(), 1);
+            assert!(g.gains[0].abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bf16_must_survive_the_mask() {
+        let (graph, qlayers, calibration) = demo_model(1, 3);
+        let mut broken = DeviceProfile::gaudi2();
+        broken.name = "fp8only".into();
+        broken.supported = vec![crate::numerics::Format::Fp8E4m3];
+        let mut engine = Engine::new().with_device(broken);
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+        assert!(engine.partitioned("demo").is_err());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Staged planning API (the 0.3 public surface).
+//! Staged planning API (the 0.4 public surface).
 //!
 //! The paper's Algorithm 1 is explicitly staged — partition (Algorithm 2),
 //! sensitivity calibration (eq. 21), per-group time-gain measurement
@@ -10,14 +10,22 @@
 //!   [`Measured`], each cached in memory and (optionally) on disk under
 //!   `artifacts/cache/<model>/<stage>.json`;
 //! * [`PlanRequest`] is the multi-constraint query builder — loss budget,
-//!   memory cap, strategy, seed — resolved by [`Planner::solve`] against
-//!   the artifacts in microseconds, with no recomputation;
+//!   memory cap, strategy, seed, target device — resolved by
+//!   [`Planner::solve`] against the artifacts in microseconds, with no
+//!   recomputation;
 //! * [`Planner::frontier`] precomputes the whole tau -> gain Pareto curve
 //!   ([`Frontier`], JSON-round-trippable) for O(log n) `at(tau)` lookups;
 //! * [`PlanService`] is the `Send + Sync` serving handle: `Arc<Planner>`s
-//!   per model plus an interior frontier cache for concurrent callers;
+//!   per (model, device) plus an interior frontier cache for concurrent
+//!   callers;
 //! * [`Plan`] is the self-contained, JSON-round-trippable answer:
-//!   configuration + predicted MSE + gain + weight bytes + provenance.
+//!   configuration + predicted MSE + gain + weight bytes + device +
+//!   provenance.
+//!
+//! Hardware enters through `backend::DeviceProfile`
+//! (`Engine::with_device`): the Measured stage simulates that device and
+//! its cache entries are keyed by it, so per-device measurements never
+//! collide.
 //!
 //! ```no_run
 //! use ampq::metrics::Objective;
@@ -44,8 +52,9 @@
 //! # }
 //! ```
 //!
-//! The 0.2 scalar query `Planner::plan(objective, strategy, tau, seed)`
-//! remains as a deprecated one-release shim delegating to `solve`.
+//! (The 0.2 scalar query `Planner::plan(...)` and the pre-0.2
+//! `coordinator::Pipeline`, both deprecated for one release, are gone as
+//! of 0.4 — see DESIGN.md §4 for the migration table.)
 
 pub mod artifact;
 pub mod demo;
@@ -90,6 +99,8 @@ pub struct Provenance {
 #[derive(Clone, Debug, PartialEq)]
 pub struct Plan {
     pub model: String,
+    /// Name of the device profile the gain tables were measured on.
+    pub device: String,
     pub objective: Objective,
     pub strategy: Strategy,
     pub tau: f64,
@@ -131,6 +142,7 @@ impl Plan {
             ("schema".into(), Json::Num(SCHEMA_VERSION as f64)),
             ("kind".into(), Json::Str("plan".into())),
             ("model".into(), Json::Str(self.model.clone())),
+            ("device".into(), Json::Str(self.device.clone())),
             ("objective".into(), Json::Str(self.objective.key().into())),
             ("strategy".into(), Json::Str(self.strategy.key().into())),
             ("tau".into(), num(self.tau)),
@@ -178,6 +190,12 @@ impl Plan {
         let pj = j.get("provenance")?;
         Ok(Plan {
             model: j.get("model")?.str()?.to_string(),
+            // 0.3-era Plans predate the backend subsystem; they were all
+            // implicitly measured on the gaudi2 defaults.
+            device: match j.opt("device") {
+                None => crate::backend::DEFAULT_DEVICE.to_string(),
+                Some(x) => x.str()?.to_string(),
+            },
             objective,
             strategy,
             tau: j.get("tau")?.f64()?,
@@ -239,6 +257,7 @@ mod tests {
     fn plan_fixture() -> Plan {
         Plan {
             model: "demo".into(),
+            device: "gaudi2".into(),
             objective: Objective::EmpiricalTime,
             strategy: Strategy::Ip,
             tau: 0.004,
@@ -285,6 +304,19 @@ mod tests {
         }
         let back = Plan::from_json(&j).unwrap();
         assert_eq!(back.weight_bytes, 0.0); // "unknown" marker
+        assert_eq!(back.config, p.config);
+    }
+
+    #[test]
+    fn parses_03_era_plans_without_device() {
+        let p = plan_fixture();
+        let mut j = p.to_json();
+        if let Json::Obj(kv) = &mut j {
+            kv.retain(|(k, _)| k != "device");
+        }
+        let back = Plan::from_json(&j).unwrap();
+        // Pre-backend plans were all implicitly gaudi2.
+        assert_eq!(back.device, "gaudi2");
         assert_eq!(back.config, p.config);
     }
 

@@ -86,6 +86,7 @@ impl Planner {
                 &partitioned.qlayers,
                 &partitioned.formats,
                 &measured.measurements,
+                &measured.device,
             )
         });
         let tau_maxes = [
@@ -98,6 +99,12 @@ impl Planner {
 
     pub fn model(&self) -> &str {
         &self.partitioned.model
+    }
+
+    /// The device the Measured artifact was produced on; every Plan this
+    /// planner emits is stamped with it.
+    pub fn device(&self) -> &crate::backend::DeviceProfile {
+        &self.measured.device
     }
 
     pub fn n_qlayers(&self) -> usize {
@@ -154,6 +161,17 @@ impl Planner {
                 bail!("memory cap must be finite and non-negative (got {c})");
             }
         }
+        // A device-scoped request must match the device this planner's
+        // measurements ran on (PlanService routes by device; a direct
+        // mismatch here is a caller bug worth failing loudly on).
+        if let Some(d) = &req.device {
+            if d != &self.measured.device.name {
+                bail!(
+                    "request targets device '{d}' but this planner was measured on '{}'",
+                    self.measured.device.name
+                );
+            }
+        }
         // No loss budget = plan at tau_max (the constraint is vacuous and
         // only the remaining constraints bind).
         let tau = req.tau.unwrap_or_else(|| self.tau_max(req.objective));
@@ -168,6 +186,7 @@ impl Planner {
         let tm = &self.measured.measurements;
         Ok(Plan {
             model: self.partitioned.model.clone(),
+            device: self.measured.device.name.clone(),
             objective: req.objective,
             strategy: req.strategy,
             tau,
@@ -216,28 +235,6 @@ impl Planner {
                 )?;
                 Ok((plan.predicted_mse, plan.gain, plan.config))
             },
-        )
-    }
-
-    /// One-release compatibility shim for the 0.2 scalar query surface.
-    #[deprecated(
-        since = "0.3.0",
-        note = "build a PlanRequest (PlanRequest::new(objective).with_loss_budget(tau)...) and \
-                call Planner::solve, or use Planner::frontier for whole-curve queries; this shim \
-                is removed next release"
-    )]
-    pub fn plan(
-        &self,
-        objective: Objective,
-        strategy: Strategy,
-        tau: f64,
-        seed: u64,
-    ) -> Result<Plan> {
-        self.solve(
-            &PlanRequest::new(objective)
-                .with_strategy(strategy)
-                .with_loss_budget(tau)
-                .with_seed(seed),
         )
     }
 
@@ -352,16 +349,19 @@ mod tests {
     }
 
     #[test]
-    fn deprecated_shim_delegates_to_solve() {
+    fn plans_are_stamped_with_the_planner_device() {
         let planner = demo_planner();
-        #[allow(deprecated)]
-        let via_shim = planner
-            .plan(Objective::EmpiricalTime, Strategy::Ip, 0.004, 3)
+        assert_eq!(planner.device().name, "gaudi2");
+        let plan = planner.solve(&req(Objective::EmpiricalTime, 0.004)).unwrap();
+        assert_eq!(plan.device, "gaudi2");
+        // Matching device-scoped requests resolve; mismatches fail loudly.
+        let ok = planner
+            .solve(&req(Objective::EmpiricalTime, 0.004).with_device("gaudi2"))
             .unwrap();
-        let via_request = planner
-            .solve(&req(Objective::EmpiricalTime, 0.004).with_seed(3))
-            .unwrap();
-        assert_eq!(via_shim, via_request);
+        assert_eq!(ok.config, plan.config);
+        assert!(planner
+            .solve(&req(Objective::EmpiricalTime, 0.004).with_device("gaudi3"))
+            .is_err());
     }
 
     #[test]

@@ -39,12 +39,24 @@ pub struct PlanRequest {
     pub memory_cap: Option<f64>,
     /// RNG seed for seeded strategies (Random).
     pub seed: u64,
+    /// Target device profile name (see `backend::Registry`).  None plans
+    /// on the serving default; `PlanService` routes named devices to the
+    /// matching per-device planner.
+    pub device: Option<String>,
 }
 
 impl PlanRequest {
-    /// A request with paper defaults: IP strategy, no constraints, seed 0.
+    /// A request with paper defaults: IP strategy, no constraints, seed 0,
+    /// default device.
     pub fn new(objective: Objective) -> PlanRequest {
-        PlanRequest { objective, strategy: Strategy::Ip, tau: None, memory_cap: None, seed: 0 }
+        PlanRequest {
+            objective,
+            strategy: Strategy::Ip,
+            tau: None,
+            memory_cap: None,
+            seed: 0,
+            device: None,
+        }
     }
 
     /// Constrain predicted loss NRMSE to `tau` (budget tau^2 E[g^2]).
@@ -69,6 +81,12 @@ impl PlanRequest {
         self
     }
 
+    /// Plan for a named device profile (routes to the per-device planner).
+    pub fn with_device(mut self, device: impl Into<String>) -> PlanRequest {
+        self.device = Some(device.into());
+        self
+    }
+
     pub fn to_json(&self) -> Json {
         let mut kv = vec![
             ("objective".to_string(), Json::Str(self.objective.key().into())),
@@ -79,6 +97,9 @@ impl PlanRequest {
         }
         if let Some(cap) = self.memory_cap {
             kv.push(("memory_cap".to_string(), Json::Num(cap)));
+        }
+        if let Some(device) = &self.device {
+            kv.push(("device".to_string(), Json::Str(device.clone())));
         }
         // u64 seeds go through a string so values >= 2^53 round-trip exactly.
         kv.push(("seed".to_string(), Json::Str(self.seed.to_string())));
@@ -127,7 +148,11 @@ impl PlanRequest {
                 v as u64
             }
         };
-        Ok(PlanRequest { objective, strategy, tau, memory_cap, seed })
+        let device = match j.opt("device") {
+            None => None,
+            Some(x) => Some(x.str()?.to_string()),
+        };
+        Ok(PlanRequest { objective, strategy, tau, memory_cap, seed, device })
     }
 }
 
@@ -154,6 +179,7 @@ mod tests {
         let full = PlanRequest::new(Objective::EmpiricalTime)
             .with_loss_budget(0.004)
             .with_memory_cap(1.5e6)
+            .with_device("gaudi3")
             .with_seed(u64::MAX - 3);
         let sparse = PlanRequest::new(Objective::TheoreticalTime);
         for r in [full, sparse] {

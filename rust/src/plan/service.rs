@@ -1,12 +1,13 @@
-//! A concurrent serving facade over per-model [`Planner`]s.
+//! A concurrent serving facade over per-(model, device) [`Planner`]s.
 //!
 //! [`PlanService`] is `Send + Sync + Clone` (clones share state): it holds
-//! one `Arc<Planner>` per model plus an interior Pareto-frontier cache, so
-//! a fleet of worker threads answers plan and frontier queries without ever
-//! re-running calibration, measurement, or a frontier sweep.  This is the
-//! ROADMAP's serving seam: artifacts are staged once per model (Engine),
-//! then query throughput is bounded only by MCKP solves — and frontier
-//! lookups don't even pay those.
+//! one `Arc<Planner>` per model — and per (model, device) for requests
+//! carrying `PlanRequest::with_device` — plus an interior Pareto-frontier
+//! cache, so a fleet of worker threads answers plan and frontier queries
+//! without ever re-running calibration, measurement, or a frontier sweep.
+//! This is the ROADMAP's serving seam: artifacts are staged once per
+//! (model, device) (Engine), then query throughput is bounded only by MCKP
+//! solves — and frontier lookups don't even pay those.
 //!
 //! `ampq serve --requests <file.json>` drives [`PlanService::serve_batch`]
 //! over a JSON array of [`ServeRequest`]s; `ampq frontier` precomputes and
@@ -60,59 +61,151 @@ impl PlanService {
         }
     }
 
-    /// Stage every model on `engine` and register its planner.
-    pub fn from_engine(engine: &mut Engine, models: &[&str]) -> Result<PlanService> {
-        let svc = PlanService::new();
-        for m in models {
-            svc.register(m, engine.planner(m)?);
+    /// Registry key of a (model, optional device) pair.  The '@' join is
+    /// unambiguous because registration rejects '@' in model names
+    /// (see [`PlanService::check_model_name`]).
+    fn key_of(model: &str, device: Option<&str>) -> String {
+        match device {
+            Some(d) => format!("{model}@{d}"),
+            None => model.to_string(),
         }
-        Ok(svc)
     }
 
-    pub fn register(&self, model: &str, planner: Planner) {
+    /// '@' is the key separator: a model named "a@b" would collide with
+    /// the device alias of model "a" on device "b".  Enforced on every
+    /// registration path (lookups for such names simply miss).
+    fn check_model_name(model: &str) -> Result<()> {
+        if model.contains('@') {
+            bail!("model name '{model}' must not contain '@' (reserved for device routing keys)");
+        }
+        Ok(())
+    }
+
+    fn insert(&self, key: String, planner: Arc<Planner>) {
+        // (Re-)registering a planner invalidates the model's cached
+        // frontiers: a replacement planner (new seed/protocol, edited
+        // profile under the same name) must not serve its predecessor's
+        // curves.  Frontier keys are "model@device/..." (resolved device),
+        // so dropping the model's prefix over-invalidates at worst.
+        let model = key.split('@').next().unwrap_or(key.as_str()).to_string();
+        {
+            let mut frontiers =
+                self.inner.frontiers.lock().expect("frontier cache lock poisoned");
+            frontiers.retain(|k, _| !k.starts_with(&format!("{model}@")));
+        }
         self.inner
             .planners
             .write()
             .expect("planner registry lock poisoned")
-            .insert(model.to_string(), Arc::new(planner));
+            .insert(key, planner);
     }
 
+    /// Stage every model on `engine` and register its planner — both as
+    /// the model's default and under the engine's device name, so
+    /// device-scoped requests naming that device resolve too.
+    pub fn from_engine(engine: &mut Engine, models: &[&str]) -> Result<PlanService> {
+        let svc = PlanService::new();
+        let device = engine.device().name.clone();
+        for m in models {
+            Self::check_model_name(m)?;
+            let planner = Arc::new(engine.planner(m)?);
+            svc.insert(Self::key_of(m, None), planner.clone());
+            svc.insert(Self::key_of(m, Some(&device)), planner);
+        }
+        Ok(svc)
+    }
+
+    /// Register `planner` as the model's default (device-less requests).
+    /// Panics if the model name contains '@' (reserved; see
+    /// [`PlanService::register_for_device`] for the fallible variant).
+    pub fn register(&self, model: &str, planner: Planner) {
+        Self::check_model_name(model).expect("invalid model name");
+        self.insert(Self::key_of(model, None), Arc::new(planner));
+    }
+
+    /// Register `planner` for requests targeting `device` explicitly.  The
+    /// planner's own measured device must match.
+    pub fn register_for_device(&self, model: &str, device: &str, planner: Planner) -> Result<()> {
+        Self::check_model_name(model)?;
+        if planner.device().name != device {
+            bail!(
+                "planner for '{model}' was measured on '{}', not '{device}'",
+                planner.device().name
+            );
+        }
+        self.insert(Self::key_of(model, Some(device)), Arc::new(planner));
+        Ok(())
+    }
+
+    /// Registered model names (device-scoped aliases excluded).
     pub fn models(&self) -> Vec<String> {
         self.inner
             .planners
             .read()
             .expect("planner registry lock poisoned")
             .keys()
+            .filter(|k| !k.contains('@'))
             .cloned()
             .collect()
     }
 
     pub fn planner(&self, model: &str) -> Result<Arc<Planner>> {
+        self.planner_for(model, None)
+    }
+
+    /// The planner serving (model, optional device).
+    pub fn planner_for(&self, model: &str, device: Option<&str>) -> Result<Arc<Planner>> {
+        let key = Self::key_of(model, device);
         self.inner
             .planners
             .read()
             .expect("planner registry lock poisoned")
-            .get(model)
+            .get(&key)
             .cloned()
-            .ok_or_else(|| anyhow!("model '{model}' is not registered with the service"))
+            .ok_or_else(|| match device {
+                Some(d) => anyhow!(
+                    "model '{model}' has no planner for device '{d}' registered with the service"
+                ),
+                None => anyhow!("model '{model}' is not registered with the service"),
+            })
     }
 
-    /// Resolve one plan request against a model's planner.
+    /// Resolve one plan request against the matching (model, device)
+    /// planner.
     pub fn solve(&self, model: &str, req: &PlanRequest) -> Result<super::Plan> {
-        self.planner(model)?.solve(req)
+        self.planner_for(model, req.device.as_deref())?.solve(req)
     }
 
-    /// The (cached) Pareto frontier for one (model, objective, strategy).
-    /// Each key is swept exactly once; a failed sweep leaves the cell empty
-    /// so a later caller retries.
+    /// The (cached) Pareto frontier for one (model, objective, strategy)
+    /// on the model's default device.
     pub fn frontier(
         &self,
         model: &str,
         objective: Objective,
         strategy: Strategy,
     ) -> Result<Arc<Frontier>> {
-        let key = format!("{model}/{}/{}", objective.key(), strategy.key());
-        let planner = self.planner(model)?;
+        self.frontier_for(model, None, objective, strategy)
+    }
+
+    /// The (cached) Pareto frontier for one (model, device, objective,
+    /// strategy).  Each key is swept exactly once; a failed sweep leaves
+    /// the cell empty so a later caller retries.  The cache is keyed by
+    /// the planner's RESOLVED device, so the default alias and an explicit
+    /// request for the same device share one sweep.
+    pub fn frontier_for(
+        &self,
+        model: &str,
+        device: Option<&str>,
+        objective: Objective,
+        strategy: Strategy,
+    ) -> Result<Arc<Frontier>> {
+        let planner = self.planner_for(model, device)?;
+        let key = format!(
+            "{model}@{}/{}/{}",
+            planner.device().name,
+            objective.key(),
+            strategy.key()
+        );
         let cell: FrontierCell = self
             .inner
             .frontiers
@@ -149,11 +242,24 @@ impl PlanService {
             .request
             .tau
             .ok_or_else(|| anyhow!("a frontier lookup needs an explicit tau"))?;
-        let f = self.frontier(&req.model, req.request.objective, req.request.strategy)?;
+        // Stamp the RESOLVED device (like Plan answers do), so per-device
+        // frontier lines in one batch are distinguishable.
+        let device = self
+            .planner_for(&req.model, req.request.device.as_deref())?
+            .device()
+            .name
+            .clone();
+        let f = self.frontier_for(
+            &req.model,
+            req.request.device.as_deref(),
+            req.request.objective,
+            req.request.strategy,
+        )?;
         let p = f.at(tau);
         Ok(Json::Obj(vec![
             ("kind".into(), Json::Str("frontier_point".into())),
             ("model".into(), Json::Str(req.model.clone())),
+            ("device".into(), Json::Str(device)),
             ("objective".into(), Json::Str(req.request.objective.key().into())),
             ("strategy".into(), Json::Str(req.request.strategy.key().into())),
             ("tau".into(), Json::Num(tau)),
@@ -279,6 +385,32 @@ mod tests {
     }
 
     #[test]
+    fn reregistration_invalidates_cached_frontiers() {
+        let svc = demo_service();
+        let a = svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        assert_eq!(svc.frontier_solves(), 1);
+        // Replacing the model's planner (a re-staged engine) must drop its
+        // cached frontiers — the replacement may have new measurements.
+        let (graph, qlayers, calibration) = demo_model(2, 7);
+        let mut engine = Engine::new();
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+        svc.register("demo", engine.planner("demo").unwrap());
+        let b = svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "stale frontier served after re-registration");
+        assert_eq!(svc.frontier_solves(), 2);
+    }
+
+    #[test]
+    fn model_names_with_at_are_rejected_at_registration() {
+        // '@' is the routing-key separator: "a@gaudi2" would collide with
+        // model "a"'s gaudi2 alias.
+        let (graph, qlayers, calibration) = demo_model(1, 3);
+        let mut engine = Engine::new();
+        engine.register_synthetic("demo@gaudi2", graph, qlayers, calibration);
+        assert!(PlanService::from_engine(&mut engine, &["demo@gaudi2"]).is_err());
+    }
+
+    #[test]
     fn frontier_is_cached() {
         let svc = demo_service();
         let a = svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
@@ -286,6 +418,58 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(svc.frontier_solves(), 1);
         svc.frontier("demo", Objective::Memory, Strategy::Ip).unwrap();
+        assert_eq!(svc.frontier_solves(), 2);
+    }
+
+    #[test]
+    fn device_requests_route_to_per_device_planners() {
+        use crate::backend::DeviceProfile;
+        let (graph, qlayers, calibration) = demo_model(2, 7);
+        let mut g2 = Engine::new();
+        g2.register_synthetic("demo", graph.clone(), qlayers.clone(), calibration.clone());
+        let svc = PlanService::from_engine(&mut g2, &["demo"]).unwrap();
+        assert_eq!(svc.models(), vec!["demo".to_string()], "aliases stay hidden");
+
+        let req = PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004);
+        let default_plan = svc.solve("demo", &req).unwrap();
+        assert_eq!(default_plan.device, "gaudi2");
+        // from_engine also registered the engine's own device name.
+        let scoped = svc.solve("demo", &req.clone().with_device("gaudi2")).unwrap();
+        assert_eq!(scoped, default_plan);
+        // No gaudi3 planner registered yet.
+        assert!(svc.solve("demo", &req.clone().with_device("gaudi3")).is_err());
+
+        let mut g3 = Engine::new().with_device(DeviceProfile::gaudi3());
+        g3.register_synthetic("demo", graph.clone(), qlayers.clone(), calibration.clone());
+        svc.register_for_device("demo", "gaudi3", g3.planner("demo").unwrap())
+            .unwrap();
+        let p3 = svc.solve("demo", &req.clone().with_device("gaudi3")).unwrap();
+        assert_eq!(p3.device, "gaudi3");
+        // 2x MME/HBM: the faster device has a smaller baseline TTFT.
+        assert!(p3.provenance.base_ttft_us < default_plan.provenance.base_ttft_us);
+
+        // Registering a planner under the wrong device name is rejected.
+        let mut g2b = Engine::new();
+        g2b.register_synthetic("demo", graph, qlayers, calibration);
+        assert!(svc
+            .register_for_device("demo", "gaudi3", g2b.planner("demo").unwrap())
+            .is_err());
+
+        // Device-scoped frontiers cache independently of other devices...
+        let fd = svc
+            .frontier("demo", Objective::EmpiricalTime, Strategy::Ip)
+            .unwrap();
+        let f3 = svc
+            .frontier_for("demo", Some("gaudi3"), Objective::EmpiricalTime, Strategy::Ip)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&fd, &f3));
+        assert_eq!(svc.frontier_solves(), 2);
+        // ...but an explicit request for the DEFAULT device shares the
+        // default's sweep (cache keys use the resolved device).
+        let f2 = svc
+            .frontier_for("demo", Some("gaudi2"), Objective::EmpiricalTime, Strategy::Ip)
+            .unwrap();
+        assert!(Arc::ptr_eq(&fd, &f2));
         assert_eq!(svc.frontier_solves(), 2);
     }
 

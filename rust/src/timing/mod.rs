@@ -10,8 +10,10 @@
 //! the CPU PJRT client (secondary — proves the harness drives real
 //! executables; CPU fake-quant adds ops, so its gains are not Gaudi-shaped).
 
+use crate::backend::DeviceProfile;
 use crate::gaudisim::{enumerate_configs, MpConfig, Simulator};
 use crate::graph::partition::Partition;
+use crate::graph::Graph;
 use crate::numerics::Format;
 use crate::runtime::ModelRuntime;
 use crate::util::{stats, Rng};
@@ -24,12 +26,26 @@ pub trait TtftSource {
     fn n_qlayers(&self) -> usize;
 }
 
-/// Simulator-backed TTFT (the paper's Gaudi-2 stand-in).
+/// Simulator-backed TTFT (the paper's hardware stand-in; any device via
+/// [`SimTtft::for_device`]).
 pub struct SimTtft<'g> {
     pub sim: Simulator<'g>,
     pub rng: Rng,
     /// Paper protocol: average of 5 iterations.
     pub reps: usize,
+}
+
+impl<'g> SimTtft<'g> {
+    /// A TTFT source simulating `device` (see `backend::DeviceProfile`)
+    /// under the given measurement protocol.
+    pub fn for_device(
+        graph: &'g Graph,
+        device: &DeviceProfile,
+        seed: u64,
+        reps: usize,
+    ) -> SimTtft<'g> {
+        SimTtft { sim: Simulator::for_device(graph, device), rng: Rng::new(seed), reps }
+    }
 }
 
 impl<'g> TtftSource for SimTtft<'g> {

@@ -24,6 +24,39 @@ impl BenchResult {
             self.name, self.iters, self.mean_us, self.median_us, self.p95_us
         )
     }
+
+    /// Machine-readable form for BENCH_*.json summaries (the perf
+    /// trajectory's data points).
+    pub fn to_json(&self) -> super::Json {
+        use super::Json;
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("iters".into(), Json::Num(self.iters as f64)),
+            ("mean_us".into(), Json::Num(self.mean_us)),
+            ("median_us".into(), Json::Num(self.median_us)),
+            ("p95_us".into(), Json::Num(self.p95_us)),
+        ])
+    }
+}
+
+/// Write a `BENCH_<name>.json` summary: the timed results plus free-form
+/// extra fields (quality ratios, instance sizes, ...).
+pub fn write_summary(
+    path: &std::path::Path,
+    name: &str,
+    results: &[BenchResult],
+    extra: Vec<(String, super::Json)>,
+) -> std::io::Result<()> {
+    use super::Json;
+    let mut kv = vec![
+        ("bench".to_string(), Json::Str(name.to_string())),
+        (
+            "results".to_string(),
+            Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+        ),
+    ];
+    kv.extend(extra);
+    std::fs::write(path, Json::Obj(kv).to_string())
 }
 
 /// Time `f` for `iters` iterations (after `warmup` unrecorded calls).
@@ -65,5 +98,26 @@ mod tests {
         assert_eq!(r.iters, 50);
         assert!(r.mean_us >= 0.0);
         assert!(r.p95_us >= r.median_us * 0.5);
+    }
+
+    #[test]
+    fn summary_writes_parseable_json() {
+        let r = bench("unit", 0, 5, || {
+            black_box(1 + 1);
+        });
+        let path = std::env::temp_dir()
+            .join(format!("ampq_bench_summary_{}.json", std::process::id()));
+        write_summary(
+            &path,
+            "unit",
+            &[r],
+            vec![("note".into(), crate::util::Json::Str("x".into()))],
+        )
+        .unwrap();
+        let j = crate::util::Json::parse_file(&path).unwrap();
+        assert_eq!(j.get("bench").unwrap().str().unwrap(), "unit");
+        assert_eq!(j.get("results").unwrap().arr().unwrap().len(), 1);
+        assert_eq!(j.get("note").unwrap().str().unwrap(), "x");
+        std::fs::remove_file(&path).ok();
     }
 }

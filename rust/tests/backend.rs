@@ -1,0 +1,271 @@
+//! Acceptance suite for the backend subsystem (pluggable device profiles):
+//!
+//! * `DeviceProfile` JSON round-trips exactly, including randomized
+//!   property-style profiles;
+//! * the `gaudi2` built-in reproduces the pre-backend simulator TTFTs
+//!   bit-for-bit under a fixed seed;
+//! * cross-device behaviour: `cpu-roofline` yields ~zero fp8 time gain
+//!   while `gaudi2` does not, and the four built-ins produce distinct
+//!   Pareto frontiers;
+//! * a profile loaded from a user JSON file plans end-to-end;
+//! * Measured stage artifacts cache per device without collisions.
+
+use ampq::backend::{DeviceProfile, RateTable, Registry};
+use ampq::coordinator::Strategy;
+use ampq::gaudisim::{HwModel, MpConfig, Simulator};
+use ampq::metrics::Objective;
+use ampq::numerics::Format;
+use ampq::plan::demo::demo_model;
+use ampq::plan::{Engine, PlanRequest};
+use ampq::util::{Json, Rng};
+use std::path::PathBuf;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ampq_backend_{tag}_{}", std::process::id()))
+}
+
+fn random_profile(rng: &mut Rng, i: usize) -> DeviceProfile {
+    let mut rates = RateTable::uniform(1.0);
+    for f in Format::ALL {
+        if f != Format::Bf16 {
+            rates.set(f, 0.25 + rng.f64() * 4.0);
+        }
+    }
+    let supported: Vec<Format> = Format::ALL
+        .iter()
+        .copied()
+        .filter(|f| *f == Format::Bf16 || rng.bool())
+        .collect();
+    DeviceProfile {
+        name: format!("rand-{i}"),
+        n_mme: 1 + rng.below(8),
+        n_tpc: 1 + rng.below(8),
+        mme_macs_per_us: 1_000.0 + rng.f64() * 500_000.0,
+        tpc_bytes_per_us: 1_000.0 + rng.f64() * 50_000.0,
+        hbm_bytes_per_us: 10_000.0 + rng.f64() * 100_000.0,
+        launch_us: rng.f64() * 10.0,
+        noise_std: rng.f64() * 0.05,
+        enable_fusion: rng.bool(),
+        mme_rates: rates,
+        supported,
+        hbm_capacity_bytes: rng.f64() * 1.0e12,
+    }
+}
+
+#[test]
+fn profile_json_roundtrip_property() {
+    let mut rng = Rng::new(0xBACC);
+    for i in 0..64 {
+        let p = random_profile(&mut rng, i);
+        p.validate().unwrap();
+        let text = p.to_json().to_string();
+        let back = DeviceProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, p, "round-trip mismatch for {}", p.name);
+        // Double round-trip is a fixed point.
+        assert_eq!(back.to_json().to_string(), text);
+    }
+}
+
+#[test]
+fn registry_builtins_are_valid_and_distinct() {
+    let r = Registry::builtin();
+    let names = r.names();
+    assert_eq!(names, vec!["cpu-roofline", "gaudi2", "gaudi3", "generic-gpu"]);
+    let mut base_rates = Vec::new();
+    for p in r.iter() {
+        p.validate().unwrap();
+        assert!(p.supports(Format::Bf16));
+        assert!(p.supports(Format::Fp8E4m3), "{}: paper menu must run", p.name);
+        base_rates.push((p.name.clone(), p.mme_macs_per_us, p.n_mme));
+    }
+    base_rates.dedup_by(|a, b| a.1 == b.1 && a.2 == b.2);
+    assert_eq!(base_rates.len(), 4, "built-ins must be architecturally distinct");
+}
+
+#[test]
+fn gaudi2_profile_reproduces_legacy_ttfts_bit_for_bit() {
+    // The acceptance criterion: planning on the gaudi2 built-in is the
+    // identical computation the pre-backend HwModel::default() ran.
+    let (graph, _, _) = demo_model(2, 3);
+    let legacy = Simulator::new(&graph, HwModel::default());
+    let gaudi2 = Registry::builtin().get("gaudi2").unwrap();
+    let profiled = Simulator::for_device(&graph, &gaudi2);
+    let nq = graph.qlayers.len();
+    let mut mixed = MpConfig::all_bf16(nq);
+    for l in (0..nq).step_by(3) {
+        mixed.set(l, Format::Fp8E4m3);
+    }
+    for cfg in [
+        MpConfig::all_bf16(nq),
+        MpConfig::uniform(nq, Format::Fp8E4m3),
+        mixed,
+    ] {
+        assert_eq!(legacy.makespan(&cfg), profiled.makespan(&cfg));
+        // Noisy measurement with the same seed: bit-identical streams.
+        let mut r1 = Rng::new(0x714e33);
+        let mut r2 = Rng::new(0x714e33);
+        assert_eq!(
+            legacy.measure_ttft(&cfg, &mut r1, 5),
+            profiled.measure_ttft(&cfg, &mut r2, 5)
+        );
+    }
+}
+
+#[test]
+fn cpu_roofline_has_no_fp8_time_gain_but_gaudi2_does() {
+    let (graph, _, _) = demo_model(2, 3);
+    let nq = graph.qlayers.len();
+    let bf16 = MpConfig::all_bf16(nq);
+    let fp8 = MpConfig::uniform(nq, Format::Fp8E4m3);
+    let registry = Registry::builtin();
+
+    let gaudi = Simulator::for_device(&graph, &registry.get("gaudi2").unwrap());
+    let g_base = gaudi.makespan(&bf16);
+    let g_gain = g_base - gaudi.makespan(&fp8);
+    assert!(g_gain / g_base > 0.05, "gaudi2 fp8 gain {g_gain} of {g_base} too small");
+
+    let cpu = Simulator::for_device(&graph, &registry.get("cpu-roofline").unwrap());
+    let c_base = cpu.makespan(&bf16);
+    let c_gain = c_base - cpu.makespan(&fp8);
+    assert!(
+        c_gain.abs() / c_base < 0.01,
+        "cpu-roofline fp8 gain {c_gain} of {c_base} should be ~zero"
+    );
+}
+
+#[test]
+fn four_builtins_produce_four_distinct_frontiers() {
+    // The `ampq compare` acceptance path, engine-level: same model, four
+    // devices, four different Pareto curves.
+    let registry = Registry::builtin();
+    let mut max_gains = Vec::new();
+    for name in ["gaudi2", "gaudi3", "generic-gpu", "cpu-roofline"] {
+        let (graph, qlayers, calibration) = demo_model(2, 7);
+        let mut engine = Engine::new().with_device(registry.get(name).unwrap());
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+        let planner = engine.planner("demo").unwrap();
+        let frontier = planner.frontier(Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        let max_gain = frontier.points.last().unwrap().gain;
+        max_gains.push((name, max_gain));
+    }
+    // cpu-roofline's time frontier is (near) flat; the others are not.
+    let cpu = max_gains.iter().find(|(n, _)| *n == "cpu-roofline").unwrap().1;
+    for (name, g) in &max_gains {
+        if *name != "cpu-roofline" {
+            assert!(*g > 10.0 * cpu.max(1e-9), "{name} frontier should dominate cpu");
+        }
+    }
+    // All four max gains are pairwise distinct (different hardware).
+    for i in 0..max_gains.len() {
+        for j in (i + 1)..max_gains.len() {
+            let (na, a) = &max_gains[i];
+            let (nb, b) = &max_gains[j];
+            assert!(
+                (a - b).abs() > 1e-6 * (1.0 + a.abs()),
+                "{na} and {nb} produced identical frontiers"
+            );
+        }
+    }
+}
+
+#[test]
+fn user_json_profile_plans_end_to_end() {
+    let dir = temp_dir("userjson");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("my-accel.json");
+    // A made-up accelerator: 3x fp8 MACs, modest bandwidth, no e5m2.
+    let mut custom = DeviceProfile::gaudi2();
+    custom.name = "my-accel".into();
+    custom.mme_rates.set(Format::Fp8E4m3, 3.0);
+    custom.supported =
+        vec![Format::Fp32, Format::Fp16, Format::Bf16, Format::Fp8E4m3];
+    std::fs::write(&path, custom.to_json().to_string()).unwrap();
+
+    let mut registry = Registry::builtin();
+    let name = registry.load(&path).unwrap();
+    assert_eq!(name, "my-accel");
+
+    let (graph, qlayers, calibration) = demo_model(2, 7);
+    let mut engine = Engine::new().with_device(registry.get("my-accel").unwrap());
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    let planner = engine.planner("demo").unwrap();
+    let plan = planner
+        .solve(
+            &PlanRequest::new(Objective::EmpiricalTime)
+                .with_loss_budget(0.004)
+                .with_device("my-accel"),
+        )
+        .unwrap();
+    assert_eq!(plan.device, "my-accel");
+    assert!(plan.feasible);
+    // Plan JSON round-trips with the device stamp intact.
+    let back = ampq::plan::Plan::from_json(&Json::parse(&plan.to_json().to_string()).unwrap())
+        .unwrap();
+    assert_eq!(back, plan);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn per_device_measured_caches_do_not_collide() {
+    let cache = temp_dir("cachesep");
+    std::fs::remove_dir_all(&cache).ok();
+    let (graph, qlayers, calibration) = demo_model(2, 7);
+    let registry = Registry::builtin();
+
+    let mut gains = Vec::new();
+    for name in ["gaudi2", "gaudi3"] {
+        let mut engine = Engine::new()
+            .with_cache_dir(&cache)
+            .with_device(registry.get(name).unwrap());
+        engine.register_synthetic("demo", graph.clone(), qlayers.clone(), calibration.clone());
+        let plan = engine
+            .planner("demo")
+            .unwrap()
+            .solve(&PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004))
+            .unwrap();
+        assert_eq!(engine.counters().measurement_passes, 1, "{name} must measure");
+        gains.push(plan.gain);
+        assert!(cache.join("demo").join(format!("measured-{name}.json")).exists());
+    }
+    // Different hardware, different optimal gains.
+    assert!((gains[0] - gains[1]).abs() > 1e-9);
+
+    // Second pass per device: everything from cache, same answers.
+    for (i, name) in ["gaudi2", "gaudi3"].iter().enumerate() {
+        let mut engine = Engine::new()
+            .with_cache_dir(&cache)
+            .with_device(registry.get(name).unwrap());
+        engine.register_synthetic("demo", graph.clone(), qlayers.clone(), calibration.clone());
+        let plan = engine
+            .planner("demo")
+            .unwrap()
+            .solve(&PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004))
+            .unwrap();
+        assert_eq!(engine.counters().measurement_passes, 0, "{name} must hit cache");
+        assert_eq!(plan.gain, gains[i]);
+    }
+    std::fs::remove_dir_all(&cache).ok();
+}
+
+#[test]
+fn supported_mask_collapses_the_menu() {
+    // A device without fp8: the paper menu collapses to [bf16] and every
+    // strategy plans the all-baseline config even at generous budgets.
+    let mut nofp8 = DeviceProfile::gaudi2();
+    nofp8.name = "nofp8".into();
+    nofp8.supported = vec![Format::Fp32, Format::Fp16, Format::Bf16];
+    let (graph, qlayers, calibration) = demo_model(2, 7);
+    let mut engine = Engine::new().with_device(nofp8);
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    let planner = engine.planner("demo").unwrap();
+    for strategy in Strategy::ALL {
+        let plan = planner
+            .solve(
+                &PlanRequest::new(Objective::EmpiricalTime)
+                    .with_strategy(strategy)
+                    .with_loss_budget(0.007),
+            )
+            .unwrap();
+        assert_eq!(plan.config.n_quantized(), 0, "{strategy:?}");
+    }
+}

@@ -1,21 +1,21 @@
-//! Integration tests over the real artifacts: the full Algorithm-1 pipeline
-//! (PJRT runtime + partition + calibration + simulator + IP) and the paper's
-//! §3.2 validation claims at test scale.
+//! Integration tests over the real artifacts: the full Algorithm-1 staging
+//! (PJRT runtime + partition + calibration + simulator + IP) and the
+//! paper's §3.2 validation claims at test scale, on the staged planning
+//! API (`plan::Engine` / `plan::Planner`).
 //!
 //! Requires `make artifacts` to have produced artifacts/, plus real PJRT
-//! bindings in place of the vendored xla stub.  Exercises the deprecated
-//! `Pipeline` shim on purpose — the staged API has its own suite in
-//! tests/staged_api.rs.
+//! bindings in place of the vendored xla stub.
 
-#![allow(deprecated)]
-
-use ampq::coordinator::{optimize, select_config, Pipeline, Strategy};
+use ampq::backend::DeviceProfile;
+use ampq::coordinator::{optimize, select_config, Strategy};
 use ampq::evalharness::{evaluate, load_all_tasks};
-use ampq::gaudisim::{HwModel, MpConfig, Simulator};
+use ampq::gaudisim::{MpConfig, Simulator};
+use ampq::graph::Graph;
 use ampq::metrics::Objective;
-use ampq::model::Manifest;
+use ampq::model::ModelInfo;
 use ampq::numerics::{Format, PAPER_FORMATS};
-use ampq::runtime::FwdMode;
+use ampq::plan::{Engine, Partitioned, Planner};
+use ampq::runtime::{FwdMode, ModelRuntime};
 use ampq::sensitivity::validate::{draw_pscale, measured_loss_mse};
 use ampq::util::Rng;
 use std::path::PathBuf;
@@ -24,52 +24,56 @@ fn root() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn manifest() -> Manifest {
-    Manifest::load(&root()).unwrap()
+/// The noise-free gaudi2 testbed the validation checks measure on.
+fn quiet_device() -> DeviceProfile {
+    let mut d = DeviceProfile::gaudi2();
+    d.noise_std = 0.0;
+    d
 }
 
 /// PJRT handles are not Send/Sync and XLA compilation is expensive, so the
-/// runtime-dependent checks share ONE pipeline inside a single #[test] and
-/// run sequentially as sub-checks.
+/// runtime-dependent checks share ONE staged engine inside a single #[test]
+/// and run sequentially as sub-checks.
 #[test]
 #[ignore = "requires real PJRT bindings + AOT artifacts (vendored xla stub cannot execute)"]
 fn full_pipeline_integration() {
-    let manifest = manifest();
-    let pl = Pipeline::new(
-        &manifest,
-        "tiny-s",
-        FwdMode::Ref,
-        HwModel::default(),
-        PAPER_FORMATS.to_vec(),
-    )
-    .expect("pipeline (run `make artifacts` first)");
+    let mut engine = Engine::new()
+        .with_artifacts_root(root())
+        .with_fwd_mode(FwdMode::Ref);
+    // Stage everything up front (&mut engine), then borrow the runtime for
+    // the rest of the checks.
+    let info = engine.info("tiny-s").expect("manifest (run `make artifacts` first)");
+    let graph = engine.graph("tiny-s").unwrap();
+    let part = engine.partitioned("tiny-s").unwrap();
+    let planner = engine.planner("tiny-s").expect("staging (PJRT calibration)");
+    let mr = engine.runtime("tiny-s").expect("PJRT runtime");
 
-    check_partition_matches_paper_fig6(&pl);
-    check_sensitivity_spread(&pl);
-    check_predicted_loss_mse_tracks_measured(&pl, &manifest);
-    check_group_gains_additive(&pl);
-    check_ip_dominates_baselines(&pl);
-    check_budget_respected(&pl);
-    check_memory_family_skips_bgemm(&pl);
-    check_evaluation(&pl, &manifest);
-    check_tau_zero(&pl);
-    check_wall_clock(&pl, &manifest);
+    check_partition_matches_paper_fig6(&part, &info);
+    check_sensitivity_spread(&planner, &info);
+    check_predicted_loss_mse_tracks_measured(&planner, &info, mr);
+    check_group_gains_additive(&graph, &part, &info);
+    check_ip_dominates_baselines(&planner);
+    check_budget_respected(&planner);
+    check_memory_family_skips_bgemm(&planner, &info);
+    check_evaluation(&info, mr);
+    check_tau_zero(&planner);
+    check_wall_clock(&info, mr);
 }
 
-fn check_partition_matches_paper_fig6(pl: &Pipeline) {
+fn check_partition_matches_paper_fig6(part: &Partitioned, info: &ModelInfo) {
     // Per block: V1 = 5-layer attention, V2 = o_proj, V3 = {gate, up},
     // V4 = down_proj; plus the final lm_head group (paper Fig. 6).
-    let sizes: Vec<usize> = pl.partition.groups.iter().map(|g| g.len()).collect();
-    let expected: Vec<usize> = (0..pl.info.blocks)
+    let sizes: Vec<usize> = part.partition.groups.iter().map(|g| g.len()).collect();
+    let expected: Vec<usize> = (0..info.blocks)
         .flat_map(|_| vec![5, 1, 2, 1])
         .chain(std::iter::once(1))
         .collect();
     assert_eq!(sizes, expected);
     // First group is exactly the attention five.
-    let names: Vec<&str> = pl.partition.groups[0]
+    let names: Vec<&str> = part.partition.groups[0]
         .qidxs
         .iter()
-        .map(|&q| pl.info.qlayers[q].name.as_str())
+        .map(|&q| info.qlayers[q].name.as_str())
         .collect();
     assert_eq!(
         names,
@@ -77,25 +81,25 @@ fn check_partition_matches_paper_fig6(pl: &Pipeline) {
     );
 }
 
-fn check_sensitivity_spread(pl: &Pipeline) {
-    let s = &pl.calibration.s;
-    assert_eq!(s.len(), pl.info.n_qlayers);
+fn check_sensitivity_spread(planner: &Planner, info: &ModelInfo) {
+    let s = &planner.calibration().s;
+    assert_eq!(s.len(), info.n_qlayers);
     assert!(s.iter().all(|&x| x > 0.0));
     let max = s.iter().cloned().fold(f64::MIN, f64::max);
     let min = s.iter().cloned().fold(f64::MAX, f64::min);
     assert!(max / min > 3.0, "sensitivity spread too small: {min}..{max}");
 }
 
-fn check_predicted_loss_mse_tracks_measured(pl: &Pipeline, m: &Manifest) {
+fn check_predicted_loss_mse_tracks_measured(planner: &Planner, info: &ModelInfo, mr: &ModelRuntime) {
     // Paper Fig. 3a at test scale: prediction within an order of magnitude
     // and correctly ordered between BF16 and FP8.
-    let calib = pl.info.load_calib(&m.root).unwrap();
+    let calib = info.load_calib(&root()).unwrap();
     let mut rng = Rng::new(5);
     let mut ratios = Vec::new();
     for fmt in [Format::Bf16, Format::Fp8E4m3] {
-        let cfg = MpConfig::uniform(pl.info.n_qlayers, fmt);
-        let pred = pl.calibration.loss_mse(&cfg);
-        let meas = measured_loss_mse(&pl.mr, &calib, &cfg, 2, 0.02, &mut rng).unwrap();
+        let cfg = MpConfig::uniform(info.n_qlayers, fmt);
+        let pred = planner.calibration().loss_mse(&cfg);
+        let meas = measured_loss_mse(mr, &calib, &cfg, 2, 0.02, &mut rng).unwrap();
         assert!(meas > 0.0);
         ratios.push(pred / meas);
     }
@@ -103,46 +107,46 @@ fn check_predicted_loss_mse_tracks_measured(pl: &Pipeline, m: &Manifest) {
         assert!(*r > 0.05 && *r < 20.0, "prediction ratio {r} out of range");
     }
     // FP8 must measure much larger than BF16.
-    let cfg8 = MpConfig::uniform(pl.info.n_qlayers, Format::Fp8E4m3);
-    let cfg16 = MpConfig::all_bf16(pl.info.n_qlayers);
-    let m8 = measured_loss_mse(&pl.mr, &calib, &cfg8, 2, 0.02, &mut rng).unwrap();
-    let m16 = measured_loss_mse(&pl.mr, &calib, &cfg16, 2, 0.02, &mut rng).unwrap();
+    let cfg8 = MpConfig::uniform(info.n_qlayers, Format::Fp8E4m3);
+    let cfg16 = MpConfig::all_bf16(info.n_qlayers);
+    let m8 = measured_loss_mse(mr, &calib, &cfg8, 2, 0.02, &mut rng).unwrap();
+    let m16 = measured_loss_mse(mr, &calib, &cfg16, 2, 0.02, &mut rng).unwrap();
     assert!(m8 > m16 * 10.0, "fp8 {m8} vs bf16 {m16}");
 }
 
-fn check_group_gains_additive(pl: &Pipeline) {
+fn check_group_gains_additive(graph: &Graph, part: &Partitioned, info: &ModelInfo) {
     // Paper Fig. 3b / §3.2: group-additive prediction matches direct
     // measurement (noise-free simulator).
-    let hw = HwModel { noise_std: 0.0, ..HwModel::default() };
-    let sim = Simulator::new(&pl.graph, hw.clone());
-    let mut src = ampq::timing::SimTtft { sim, rng: Rng::new(0), reps: 1 };
-    let tm = ampq::timing::measure_groups(&mut src, &pl.partition, &PAPER_FORMATS).unwrap();
-    let sim2 = Simulator::new(&pl.graph, hw);
+    let device = quiet_device();
+    let mut src = ampq::timing::SimTtft::for_device(graph, &device, 0, 1);
+    let tm = ampq::timing::measure_groups(&mut src, &part.partition, &PAPER_FORMATS).unwrap();
+    let sim = Simulator::for_device(graph, &device);
     for (tag, cfg) in [
-        ("all-fp8", MpConfig::uniform(pl.info.n_qlayers, Format::Fp8E4m3)),
+        ("all-fp8", MpConfig::uniform(info.n_qlayers, Format::Fp8E4m3)),
         ("half", {
-            let mut c = MpConfig::all_bf16(pl.info.n_qlayers);
-            for l in 0..pl.info.n_qlayers / 2 {
+            let mut c = MpConfig::all_bf16(info.n_qlayers);
+            for l in 0..info.n_qlayers / 2 {
                 c.set(l, Format::Fp8E4m3);
             }
             c
         }),
     ] {
-        let direct = sim2.makespan(&cfg);
+        let direct = sim.makespan(&cfg);
         let predicted = tm.predict_ttft(&cfg);
         let rel = (direct - predicted).abs() / direct;
         assert!(rel < 0.05, "{tag}: direct {direct} vs predicted {predicted} (rel {rel})");
     }
 }
 
-fn check_ip_dominates_baselines(pl: &Pipeline) {
-    let tm = pl.measure_time(0, 5).unwrap();
-    let family = pl.family(Objective::EmpiricalTime, &tm);
+fn check_ip_dominates_baselines(planner: &Planner) {
+    let tm = planner.measurements();
+    let calibration = planner.calibration();
+    let family = planner.family(Objective::EmpiricalTime);
     for tau in [0.002, 0.004, 0.007] {
-        let ip = optimize(&family.groups, &pl.calibration, tau).unwrap();
+        let ip = optimize(&family.groups, calibration, tau).unwrap();
         for strategy in [Strategy::Random, Strategy::Prefix] {
             for seed in 0..3 {
-                let cfg = select_config(&family, strategy, &pl.calibration, tau, seed).unwrap();
+                let cfg = select_config(family, strategy, calibration, tau, seed).unwrap();
                 let baseline_gain = tm.predict_gain(&cfg);
                 assert!(
                     ip.solution.gain >= baseline_gain - 1e-6,
@@ -155,37 +159,35 @@ fn check_ip_dominates_baselines(pl: &Pipeline) {
     }
 }
 
-fn check_budget_respected(pl: &Pipeline) {
-    let tm = pl.measure_time(1, 5).unwrap();
+fn check_budget_respected(planner: &Planner) {
+    let calibration = planner.calibration();
     for objective in [Objective::EmpiricalTime, Objective::TheoreticalTime, Objective::Memory] {
-        let family = pl.family(objective, &tm);
+        let family = planner.family(objective);
         for tau in [0.001, 0.003, 0.006] {
-            let out = optimize(&family.groups, &pl.calibration, tau).unwrap();
+            let out = optimize(&family.groups, calibration, tau).unwrap();
             if out.solution.feasible {
                 assert!(
-                    out.predicted_mse <= pl.calibration.budget(tau) + 1e-12,
+                    out.predicted_mse <= calibration.budget(tau) + 1e-12,
                     "{} tau {tau}: mse {} > budget {}",
                     objective.name(),
                     out.predicted_mse,
-                    pl.calibration.budget(tau)
+                    calibration.budget(tau)
                 );
             }
         }
     }
 }
 
-fn check_memory_family_skips_bgemm(pl: &Pipeline) {
-    let tm = pl.measure_time(2, 5).unwrap();
-    let family = pl.family(Objective::Memory, &tm);
-    let out = optimize(&family.groups, &pl.calibration, 0.01).unwrap();
-    for (l, q) in pl.info.qlayers.iter().enumerate() {
+fn check_memory_family_skips_bgemm(planner: &Planner, info: &ModelInfo) {
+    let family = planner.family(Objective::Memory);
+    let out = optimize(&family.groups, planner.calibration(), 0.01).unwrap();
+    for (l, q) in info.qlayers.iter().enumerate() {
         if q.kind == ampq::model::LayerKind::Bgemm {
             assert_eq!(out.config.get(l), Format::Bf16, "{}", q.name);
         }
     }
     // ...but with a generous budget it quantizes every linear layer.
-    let n_linear = pl
-        .info
+    let n_linear = info
         .qlayers
         .iter()
         .filter(|q| q.kind == ampq::model::LayerKind::Linear)
@@ -193,20 +195,20 @@ fn check_memory_family_skips_bgemm(pl: &Pipeline) {
     assert_eq!(out.config.n_quantized(), n_linear);
 }
 
-fn check_evaluation(pl: &Pipeline, m: &Manifest) {
-    let tasks = load_all_tasks(&m.root, &pl.info).unwrap();
-    let nq = pl.info.n_qlayers;
+fn check_evaluation(info: &ModelInfo, mr: &ModelRuntime) {
+    let tasks = load_all_tasks(&root(), info).unwrap();
+    let nq = info.n_qlayers;
     let bf16 = MpConfig::all_bf16(nq);
     let ones = vec![1.0f32; nq];
-    let a = evaluate(&pl.mr, &tasks[0], &bf16, &ones).unwrap();
-    let b = evaluate(&pl.mr, &tasks[0], &bf16, &ones).unwrap();
+    let a = evaluate(mr, &tasks[0], &bf16, &ones).unwrap();
+    let b = evaluate(mr, &tasks[0], &bf16, &ones).unwrap();
     assert_eq!(a.acc, b.acc);
     assert_eq!(a.ppl, b.ppl);
     // FP8 must change measured perplexity.
     let fp8 = MpConfig::uniform(nq, Format::Fp8E4m3);
     let mut rng = Rng::new(9);
     let ps = draw_pscale(nq, 0.02, &mut rng);
-    let c = evaluate(&pl.mr, &tasks[0], &fp8, &ps).unwrap();
+    let c = evaluate(mr, &tasks[0], &fp8, &ps).unwrap();
     assert!((c.ppl - a.ppl).abs() / a.ppl > 1e-4, "fp8 left ppl unchanged");
     // Scores are sane.
     for r in [&a, &c] {
@@ -215,19 +217,18 @@ fn check_evaluation(pl: &Pipeline, m: &Manifest) {
     }
 }
 
-fn check_tau_zero(pl: &Pipeline) {
-    let tm = pl.measure_time(3, 5).unwrap();
-    let family = pl.family(Objective::EmpiricalTime, &tm);
-    let out = optimize(&family.groups, &pl.calibration, 0.0).unwrap();
+fn check_tau_zero(planner: &Planner) {
+    let family = planner.family(Objective::EmpiricalTime);
+    let out = optimize(&family.groups, planner.calibration(), 0.0).unwrap();
     assert_eq!(out.config.n_quantized(), 0);
 }
 
-fn check_wall_clock(pl: &Pipeline, m: &Manifest) {
-    let calib = pl.info.load_calib(&m.root).unwrap();
-    let tokens: Vec<i32> = calib[..pl.info.eval_b].concat();
-    let mut src = ampq::timing::WallTtft { mr: &pl.mr, tokens, reps: 2 };
+fn check_wall_clock(info: &ModelInfo, mr: &ModelRuntime) {
+    let calib = info.load_calib(&root()).unwrap();
+    let tokens: Vec<i32> = calib[..info.eval_b].concat();
+    let mut src = ampq::timing::WallTtft { mr, tokens, reps: 2 };
     use ampq::timing::TtftSource;
-    let t = src.measure(&MpConfig::all_bf16(pl.info.n_qlayers)).unwrap();
+    let t = src.measure(&MpConfig::all_bf16(info.n_qlayers)).unwrap();
     assert!(t > 100.0, "wall-clock TTFT {t} us implausibly small");
     assert!(t < 10.0e6, "wall-clock TTFT {t} us implausibly large");
 }

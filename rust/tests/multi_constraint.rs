@@ -5,7 +5,7 @@
 //!   at that tau on the demo model;
 //! * a two-constraint request (loss-MSE + memory cap) returns a plan
 //!   satisfying both budgets and matching `brute_force` on a small instance;
-//! * the deprecated `Planner::plan(...)` shim delegates to `solve`;
+//! * device-scoped requests resolve per-device (backend subsystem);
 //! * `PlanService` answers concurrent plan/frontier queries with exactly one
 //!   frontier sweep and thread-order-independent results.
 
@@ -167,26 +167,17 @@ fn two_constraint_small_instance_matches_brute_force() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn deprecated_plan_shim_matches_solve() {
+fn device_scoped_requests_constrain_the_planner() {
+    // A request carrying a device must resolve only against a planner
+    // measured on that device; its Plan is stamped with the device name.
     let mut engine = demo_engine();
     let planner = engine.planner("demo").unwrap();
-    for objective in Objective::ALL {
-        for strategy in Strategy::ALL {
-            for &tau in &[0.0, 0.002, 0.005] {
-                let shim = planner.plan(objective, strategy, tau, 4).unwrap();
-                let solved = planner
-                    .solve(
-                        &PlanRequest::new(objective)
-                            .with_strategy(strategy)
-                            .with_loss_budget(tau)
-                            .with_seed(4),
-                    )
-                    .unwrap();
-                assert_eq!(shim, solved, "{objective:?}/{strategy:?} tau {tau}");
-            }
-        }
-    }
+    let base = PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004);
+    let plain = planner.solve(&base).unwrap();
+    assert_eq!(plain.device, "gaudi2");
+    let scoped = planner.solve(&base.clone().with_device("gaudi2")).unwrap();
+    assert_eq!(scoped, plain);
+    assert!(planner.solve(&base.with_device("cpu-roofline")).is_err());
 }
 
 #[test]

@@ -7,18 +7,31 @@
 //! * stage artifacts persist to the on-disk cache and a fresh Engine solves
 //!   the same grid with zero recomputation and identical plans.
 
-// These PR-1 acceptance tests intentionally exercise the 0.2 scalar
-// `Planner::plan(...)` surface, now a deprecated shim over
-// `Planner::solve(&PlanRequest)` — they must keep passing unchanged until
-// the shim is removed.
-#![allow(deprecated)]
-
 use ampq::coordinator::{paper_tau_grid, Strategy};
 use ampq::metrics::Objective;
 use ampq::plan::demo::demo_model;
-use ampq::plan::{Engine, Plan};
+use ampq::plan::{Engine, Plan, PlanRequest};
 use ampq::util::Json;
 use std::path::PathBuf;
+
+/// The scalar query shape the PR-1 acceptance tests were written against,
+/// expressed on the 0.3+ request surface (the deprecated shim is gone).
+fn solve(
+    planner: &ampq::plan::Planner,
+    objective: Objective,
+    strategy: Strategy,
+    tau: f64,
+    seed: u64,
+) -> Plan {
+    planner
+        .solve(
+            &PlanRequest::new(objective)
+                .with_strategy(strategy)
+                .with_loss_budget(tau)
+                .with_seed(seed),
+        )
+        .unwrap()
+}
 
 fn demo_engine() -> Engine {
     let (graph, qlayers, calibration) = demo_model(2, 7);
@@ -49,9 +62,7 @@ fn full_grid_sweep_costs_one_calibration_and_one_measurement() {
 
     // Solving more plans afterwards still costs nothing.
     let planner2 = engine.planner("demo").unwrap();
-    planner2
-        .plan(Objective::EmpiricalTime, Strategy::Ip, 0.003, 5)
-        .unwrap();
+    solve(&planner2, Objective::EmpiricalTime, Strategy::Ip, 0.003, 5);
     let c = engine.counters();
     assert_eq!(c.calibration_passes, 1);
     assert_eq!(c.measurement_passes, 1);
@@ -78,7 +89,7 @@ fn ip_plans_are_budget_feasible_and_monotone() {
     for objective in Objective::ALL {
         let mut last_gain = -1.0;
         for &tau in &paper_tau_grid()[1..] {
-            let plan = planner.plan(objective, Strategy::Ip, tau, 0).unwrap();
+            let plan = solve(&planner, objective, Strategy::Ip, tau, 0);
             assert!(plan.feasible, "{objective:?} tau {tau} infeasible");
             assert!(
                 plan.predicted_mse <= plan.budget + 1e-12,
@@ -97,7 +108,7 @@ fn tau_zero_falls_back_to_all_bf16() {
     let mut engine = demo_engine();
     let planner = engine.planner("demo").unwrap();
     for objective in Objective::ALL {
-        let plan = planner.plan(objective, Strategy::Ip, 0.0, 0).unwrap();
+        let plan = solve(&planner, objective, Strategy::Ip, 0.0, 0);
         assert_eq!(plan.config.n_quantized(), 0, "{objective:?}");
     }
 }
@@ -109,9 +120,7 @@ fn empirical_plan_ttft_is_consistent_with_its_gain() {
     let mut engine = demo_engine();
     let planner = engine.planner("demo").unwrap();
     for &tau in &paper_tau_grid() {
-        let plan = planner
-            .plan(Objective::EmpiricalTime, Strategy::Ip, tau, 0)
-            .unwrap();
+        let plan = solve(&planner, Objective::EmpiricalTime, Strategy::Ip, tau, 0);
         let expect = plan.provenance.base_ttft_us - plan.gain;
         assert!(
             (plan.predicted_ttft_us - expect).abs() < 1e-9,
@@ -138,8 +147,9 @@ fn cold_cache_then_warm_cache_grid_is_identical_and_free() {
         .unwrap();
     assert_eq!(cold.counters().calibration_passes, 1);
 
-    // Artifacts landed on disk in the documented layout.
-    for stage in ["partitioned", "calibrated", "measured"] {
+    // Artifacts landed on disk in the documented layout (the measured
+    // stage is keyed by the engine's device — gaudi2 by default).
+    for stage in ["partitioned", "calibrated", "measured-gaudi2"] {
         let p = cache.join("demo").join(format!("{stage}.json"));
         assert!(p.exists(), "missing cache file {}", p.display());
     }
@@ -163,20 +173,14 @@ fn cold_cache_then_warm_cache_grid_is_identical_and_free() {
 fn random_strategy_plans_record_their_seed() {
     let mut engine = demo_engine();
     let planner = engine.planner("demo").unwrap();
-    let a = planner
-        .plan(Objective::EmpiricalTime, Strategy::Random, 0.004, 1)
-        .unwrap();
-    let b = planner
-        .plan(Objective::EmpiricalTime, Strategy::Random, 0.004, 1)
-        .unwrap();
+    let a = solve(&planner, Objective::EmpiricalTime, Strategy::Random, 0.004, 1);
+    let b = solve(&planner, Objective::EmpiricalTime, Strategy::Random, 0.004, 1);
     assert_eq!(a, b, "same seed must reproduce the same plan");
     assert_eq!(a.seed, 1);
     // Across a handful of seeds the shuffled selection must actually vary.
     let mut labels: Vec<String> = (0..6)
         .map(|seed| {
-            planner
-                .plan(Objective::EmpiricalTime, Strategy::Random, 0.004, seed)
-                .unwrap()
+            solve(&planner, Objective::EmpiricalTime, Strategy::Random, 0.004, seed)
                 .config
                 .bits_label()
         })
