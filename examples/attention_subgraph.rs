@@ -16,8 +16,9 @@ use ampq::metrics::tt_layer_gain;
 use ampq::numerics::{Format, PAPER_FORMATS};
 use ampq::plan::demo::demo_model;
 use ampq::plan::Engine;
+use ampq::exec::ExecPool;
 use ampq::timing::{measure_groups, measure_per_layer, SimTtft};
-use ampq::util::{stats, Args, Rng};
+use ampq::util::{stats, Args};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 
@@ -51,9 +52,10 @@ fn main() -> Result<()> {
 
     let hw = HwModel { noise_std: 0.005, ..HwModel::default() };
     let sim = Simulator::new(&graph, hw);
-    let mut src = SimTtft { sim, rng: Rng::new(7), reps: 5 };
-    let tm = measure_groups(&mut src, &part.partition, &PAPER_FORMATS)?;
-    let per_layer = measure_per_layer(&mut src, &PAPER_FORMATS)?;
+    let src = SimTtft { sim, seed: 7, reps: 5 };
+    let pool = ExecPool::default();
+    let tm = measure_groups(&src, &part.partition, &PAPER_FORMATS, &pool)?;
+    let per_layer = measure_per_layer(&src, &PAPER_FORMATS, &pool)?;
     let group = &tm.groups[gi];
 
     let mut rows: Vec<(String, f64, f64, f64)> = group

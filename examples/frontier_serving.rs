@@ -13,6 +13,7 @@
 //! Run: cargo run --release --example frontier_serving [-- --blocks 2 --threads 4]
 
 use ampq::coordinator::Strategy;
+use ampq::exec::{ExecCfg, ExecPool};
 use ampq::metrics::Objective;
 use ampq::plan::demo::demo_model;
 use ampq::plan::{Engine, PlanRequest, ServeRequest};
@@ -88,7 +89,7 @@ fn main() -> Result<()> {
     }
 
     let t1 = Instant::now();
-    let answers = svc.serve_batch(&reqs, threads)?;
+    let answers = svc.serve_batch(&reqs, &ExecPool::new(ExecCfg::new(threads)))?;
     let elapsed = t1.elapsed();
     println!(
         "\nserved {} mixed requests on {} threads in {:.1} ms ({:.1} us/request, {} frontier sweeps total)",

@@ -12,14 +12,15 @@ use ampq::metrics::{GroupChoices, Objective};
 use ampq::numerics::{Format, PAPER_FORMATS};
 use ampq::plan::Engine;
 use ampq::solver::{branch_bound, greedy, Mckp};
+use ampq::exec::ExecPool;
 use ampq::timing::{measure_groups, measure_per_layer, SimTtft};
-use ampq::util::Rng;
 
 fn fig1_gap(graph: &ampq::graph::Graph, part: &ampq::graph::partition::Partition, hw: HwModel) -> f64 {
     let sim = Simulator::new(graph, hw.clone());
-    let mut src = SimTtft { sim, rng: Rng::new(0), reps: 1 };
-    let tm = measure_groups(&mut src, part, &PAPER_FORMATS).unwrap();
-    let pl = measure_per_layer(&mut src, &PAPER_FORMATS).unwrap();
+    let src = SimTtft { sim, seed: 0, reps: 1 };
+    let pool = ExecPool::sequential();
+    let tm = measure_groups(&src, part, &PAPER_FORMATS, &pool).unwrap();
+    let pl = measure_per_layer(&src, &PAPER_FORMATS, &pool).unwrap();
     let gi = part.groups.iter().position(|g| g.len() == 5).unwrap();
     let g = &tm.groups[gi];
     let max_gain = g.gains.iter().cloned().fold(0.0f64, f64::max).max(1e-9);
@@ -92,8 +93,8 @@ fn main() {
     // with it, then re-score the chosen config with the true simulator.
     let nq = planner.n_qlayers();
     let sim = Simulator::new(&graph, base.clone());
-    let mut src = SimTtft { sim, rng: Rng::new(1), reps: 5 };
-    let per_layer = measure_per_layer(&mut src, &PAPER_FORMATS).unwrap();
+    let src = SimTtft { sim, seed: 1, reps: 5 };
+    let per_layer = measure_per_layer(&src, &PAPER_FORMATS, &ExecPool::sequential()).unwrap();
     let naive_groups: Vec<GroupChoices> = (0..nq)
         .map(|l| GroupChoices {
             qidxs: vec![l],
@@ -104,8 +105,9 @@ fn main() {
     let sim2 = Simulator::new(&graph, base.clone());
     let base_ttft = sim2.makespan(&MpConfig::all_bf16(nq));
     for tau in [0.002, 0.004, 0.007] {
-        let paper = ampq::coordinator::optimize(&family.groups, calibration, tau).unwrap();
-        let naive = ampq::coordinator::optimize(&naive_groups, calibration, tau).unwrap();
+        let pool = ExecPool::sequential();
+        let paper = ampq::coordinator::optimize(&family.groups, calibration, tau, &pool).unwrap();
+        let naive = ampq::coordinator::optimize(&naive_groups, calibration, tau, &pool).unwrap();
         let t_paper = sim2.makespan(&paper.config);
         let t_naive = sim2.makespan(&naive.config);
         println!(

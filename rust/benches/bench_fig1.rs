@@ -6,9 +6,9 @@ use ampq::gaudisim::{HwModel, Simulator};
 use ampq::graph::partition::partition;
 use ampq::model::Manifest;
 use ampq::numerics::PAPER_FORMATS;
+use ampq::exec::ExecPool;
 use ampq::timing::{measure_groups, measure_per_layer, SimTtft};
 use ampq::util::bench::{bench, black_box};
-use ampq::util::Rng;
 use std::path::Path;
 
 fn main() {
@@ -19,23 +19,24 @@ fn main() {
         let part = partition(&graph).unwrap();
         let hw = HwModel { noise_std: 0.0, ..HwModel::default() };
 
+        let pool = ExecPool::sequential();
         bench(&format!("fig1/{model}/measure_all_groups"), 1, 5, || {
             let sim = Simulator::new(&graph, hw.clone());
-            let mut src = SimTtft { sim, rng: Rng::new(0), reps: 5 };
-            black_box(measure_groups(&mut src, &part, &PAPER_FORMATS).unwrap());
+            let src = SimTtft { sim, seed: 0, reps: 5 };
+            black_box(measure_groups(&src, &part, &PAPER_FORMATS, &pool).unwrap());
         });
         bench(&format!("fig1/{model}/measure_per_layer"), 1, 5, || {
             let sim = Simulator::new(&graph, hw.clone());
-            let mut src = SimTtft { sim, rng: Rng::new(0), reps: 5 };
-            black_box(measure_per_layer(&mut src, &PAPER_FORMATS).unwrap());
+            let src = SimTtft { sim, seed: 0, reps: 5 };
+            black_box(measure_per_layer(&src, &PAPER_FORMATS, &pool).unwrap());
         });
 
         // Correctness shape check mirrored from the paper: per-layer sums
         // must mispredict the attention group's measured gains.
         let sim = Simulator::new(&graph, hw.clone());
-        let mut src = SimTtft { sim, rng: Rng::new(0), reps: 1 };
-        let tm = measure_groups(&mut src, &part, &PAPER_FORMATS).unwrap();
-        let pl_gains = measure_per_layer(&mut src, &PAPER_FORMATS).unwrap();
+        let src = SimTtft { sim, seed: 0, reps: 1 };
+        let tm = measure_groups(&src, &part, &PAPER_FORMATS, &pool).unwrap();
+        let pl_gains = measure_per_layer(&src, &PAPER_FORMATS, &pool).unwrap();
         let gi = part.groups.iter().position(|g| g.len() == 5).unwrap();
         let g = &tm.groups[gi];
         let worst_gap = g

@@ -35,12 +35,13 @@ fn main() {
 
         // A full Algorithm-1 measurement pass (dominates `ampq measure`).
         let part = partition(&graph).unwrap();
-        let n_meas = part.n_measurements(2) + 1;
+        let n_meas = part.n_measurements(2).unwrap() + 1;
+        let pool = ampq::exec::ExecPool::sequential();
         let r = bench(&format!("sim/{model}/full_measurement_pass"), 1, 10, || {
             let sim = Simulator::new(&graph, hw.clone());
-            let mut rng = ampq::util::Rng::new(0);
-            let mut src = ampq::timing::SimTtft { sim, rng: rng.fork(1), reps: 5 };
-            black_box(ampq::timing::measure_groups(&mut src, &part, &ampq::numerics::PAPER_FORMATS).unwrap());
+            let src = ampq::timing::SimTtft { sim, seed: 1, reps: 5 };
+            let fmts = &ampq::numerics::PAPER_FORMATS;
+            black_box(ampq::timing::measure_groups(&src, &part, fmts, &pool).unwrap());
         });
         println!(
             "sim/{model}: {} TTFT measurements x 5 reps -> {:.2} us per makespan call",

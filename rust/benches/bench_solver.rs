@@ -1,9 +1,17 @@
 //! MCKP solver micro-benchmarks (L3 hot path): exact branch & bound vs DP
-//! vs greedy vs LP relaxation, on paper-scale and stress-scale instances.
+//! vs greedy vs LP relaxation on paper-scale instances, plus the parallel
+//! execution layer's scaling story — branch & bound and frontier sweeps at
+//! 1, 2, and max threads (bit-identical outputs, different wall clocks).
 //!
 //! Emits a machine-readable summary to BENCH_solver.json (override with
-//! BENCH_OUT=path) so CI records perf-trajectory data points.
+//! BENCH_OUT=path) so CI records perf-trajectory data points, including
+//! one entry per thread count for the parallel cases.
 
+use ampq::coordinator::Strategy;
+use ampq::exec::{ExecCfg, ExecPool};
+use ampq::metrics::Objective;
+use ampq::plan::demo::demo_model;
+use ampq::plan::Engine;
 use ampq::solver::{branch_bound, dp, greedy, lp_relax, Mckp};
 use ampq::util::bench::{bench, black_box, write_summary};
 use ampq::util::{Json, Rng};
@@ -27,6 +35,15 @@ fn paper_scale_instance(seed: u64) -> Mckp {
     Mckp::new(gains, costs, total * 0.4).unwrap()
 }
 
+/// Thread counts to sweep: 1, 2, and the machine's max (deduped).
+fn thread_counts() -> Vec<usize> {
+    let max = ExecCfg::from_env().threads;
+    let mut ts = vec![1usize, 2, max];
+    ts.sort_unstable();
+    ts.dedup();
+    ts
+}
+
 fn main() {
     let p = paper_scale_instance(7);
     println!(
@@ -35,7 +52,7 @@ fn main() {
         p.gains.iter().map(|g| g.len()).sum::<usize>()
     );
 
-    let results = vec![
+    let mut results = vec![
         bench("solver/branch_bound (exact)", 3, 50, || {
             black_box(branch_bound::solve(&p));
         }),
@@ -50,8 +67,64 @@ fn main() {
         }),
     ];
 
-    // Solution-quality ablation (DESIGN.md ablations).
+    // Parallel scaling: the SAME solve at 1 / 2 / max threads.  Outputs
+    // are bit-identical (asserted); only the wall clock may move.
     let mut quality: Vec<(String, Json)> = Vec::new();
+    let reference = branch_bound::solve_with(&p, &ExecPool::sequential());
+    let mut per_thread_mean: Vec<(usize, f64)> = Vec::new();
+    for &t in &thread_counts() {
+        let pool = ExecPool::new(ExecCfg::new(t));
+        assert_eq!(
+            branch_bound::solve_with(&p, &pool),
+            reference,
+            "threads={t} must be bit-identical"
+        );
+        let r = bench(&format!("solver/branch_bound/threads={t}"), 2, 30, || {
+            black_box(branch_bound::solve_with(&p, &pool));
+        });
+        per_thread_mean.push((t, r.mean_us));
+        results.push(r);
+    }
+    if let (Some((_, t1)), Some((tmax, tn))) = (per_thread_mean.first(), per_thread_mean.last())
+    {
+        let speedup = t1 / tn.max(1e-9);
+        println!("solver/branch_bound: {speedup:.2}x speedup at {tmax} threads vs 1");
+        quality.push(("bb_speedup_max_threads".into(), Json::Num(speedup)));
+        quality.push(("bb_max_threads".into(), Json::Num(*tmax as f64)));
+    }
+
+    // Frontier sweeps: many per-tau IP solves batched across the pool.
+    // A deeper demo model makes each sweep a real workload.
+    let mut frontier_mean: Vec<(usize, f64)> = Vec::new();
+    for &t in &thread_counts() {
+        let mut engine = demo_engine(t);
+        let planner = engine.planner("demo").unwrap();
+        let r = bench(&format!("frontier/demo/threads={t}"), 1, 8, || {
+            black_box(planner.frontier(Objective::EmpiricalTime, Strategy::Ip).unwrap());
+        });
+        frontier_mean.push((t, r.mean_us));
+        results.push(r);
+    }
+    // Cross-thread equality of the swept frontier (the determinism
+    // contract, asserted on the bench workload too).
+    let f1 = demo_engine(1)
+        .planner("demo")
+        .unwrap()
+        .frontier(Objective::EmpiricalTime, Strategy::Ip)
+        .unwrap();
+    let fmax = demo_engine(ExecCfg::from_env().threads)
+        .planner("demo")
+        .unwrap()
+        .frontier(Objective::EmpiricalTime, Strategy::Ip)
+        .unwrap();
+    assert_eq!(f1, fmax, "frontier must be bit-identical across thread counts");
+    if let (Some((_, t1)), Some((tmax, tn))) = (frontier_mean.first(), frontier_mean.last()) {
+        let speedup = t1 / tn.max(1e-9);
+        println!("frontier/demo: {speedup:.2}x speedup at {tmax} threads vs 1");
+        quality.push(("frontier_speedup_max_threads".into(), Json::Num(speedup)));
+    }
+
+    // Solution-quality ablation (DESIGN.md ablations).
     let exact = branch_bound::solve(&p);
     for (name, sol) in [("dp", dp::solve(&p)), ("greedy", greedy::solve(&p))] {
         println!(
@@ -85,4 +158,13 @@ fn main() {
         Ok(()) => println!("bench summary written to {}", out.display()),
         Err(e) => eprintln!("warning: could not write {}: {e}", out.display()),
     }
+}
+
+/// A 4-block demo engine at the given thread budget (cache disabled so
+/// every staging is a real measurement pass).
+fn demo_engine(threads: usize) -> Engine {
+    let (graph, qlayers, calibration) = demo_model(4, 11);
+    let mut engine = Engine::new().with_threads(threads);
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    engine
 }

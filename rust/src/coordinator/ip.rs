@@ -3,6 +3,7 @@
 //! MpConfig.  Since 0.3 the solve optionally carries a second knapsack
 //! dimension capping total stored weight bytes (multi-constraint requests).
 
+use crate::exec::ExecPool;
 use crate::gaudisim::MpConfig;
 use crate::metrics::{covered_layers, group_weight_bytes, GroupChoices};
 use crate::model::QLayer;
@@ -24,13 +25,28 @@ pub struct IpOutcome {
     pub weight_bytes: Option<f64>,
 }
 
+/// The budget bookkeeping every constraint dimension shares: layers no
+/// group covers stay at BF16, so their constant per-layer cost is charged
+/// up front and the groups solve against the clamped residual budget.
+fn charge_uncovered<F>(covered: &[bool], budget: f64, layer_cost: F) -> f64
+where
+    F: Fn(usize) -> f64,
+{
+    let uncovered: f64 = (0..covered.len())
+        .filter(|&l| !covered[l])
+        .map(layer_cost)
+        .sum();
+    (budget - uncovered).max(0.0)
+}
+
 /// Solve eq. (5) at threshold `tau` (single loss-MSE constraint).
 pub fn optimize(
     groups: &[GroupChoices],
     calib: &Calibration,
     tau: f64,
+    pool: &ExecPool,
 ) -> Result<IpOutcome> {
-    optimize_with_caps(groups, calib, tau, None)
+    optimize_with_caps(groups, calib, tau, None, pool)
 }
 
 /// Solve eq. (5) at threshold `tau`, optionally under a second knapsack
@@ -38,23 +54,22 @@ pub fn optimize(
 ///
 /// Layers not covered by any group (e.g. BGEMM under IP-M) are fixed at
 /// BF16; their (constant) loss-MSE — and, when capped, weight-byte —
-/// contributions are charged against the budgets so the constraints cover
-/// the whole model.
+/// contributions are charged against the budgets (see [`charge_uncovered`])
+/// so the constraints cover the whole model.  The MCKP solve fans out over
+/// `pool` on large instances with bit-identical output at any thread count.
 pub fn optimize_with_caps(
     groups: &[GroupChoices],
     calib: &Calibration,
     tau: f64,
     memory: Option<(&[QLayer], f64)>,
+    pool: &ExecPool,
 ) -> Result<IpOutcome> {
     let nq = calib.s.len();
     let covered = covered_layers(groups, nq);
-    let uncovered_mse: f64 = (0..nq)
-        .filter(|&l| !covered[l])
-        .map(|l| calib.layer_mse(l, Format::Bf16))
-        .sum();
 
     let budget_total = calib.budget(tau);
-    let budget = (budget_total - uncovered_mse).max(0.0);
+    let budget =
+        charge_uncovered(&covered, budget_total, |l| calib.layer_mse(l, Format::Bf16));
 
     let gains: Vec<Vec<f64>> = groups.iter().map(|g| g.gains.clone()).collect();
     let mse_costs: Vec<Vec<f64>> = groups
@@ -82,21 +97,20 @@ pub fn optimize_with_caps(
                         .collect()
                 })
                 .collect();
-            let uncovered_bytes: f64 = (0..nq)
-                .filter(|&l| !covered[l])
-                .map(|l| qlayers[l].params as f64 * Format::Bf16.bytes() as f64)
-                .sum();
+            let bytes_budget = charge_uncovered(&covered, cap, |l| {
+                qlayers[l].params as f64 * Format::Bf16.bytes() as f64
+            });
             Mckp::multi(
                 gains,
                 vec![
                     CostDim::new("loss_mse", mse_costs),
                     CostDim::new("weight_bytes", bytes_table),
                 ],
-                vec![budget, (cap - uncovered_bytes).max(0.0)],
+                vec![budget, bytes_budget],
             )?
         }
     };
-    let solution = solver::solve(&problem);
+    let solution = solver::solve_with(&problem, pool);
 
     let mut config = MpConfig::all_bf16(nq);
     for (g, &p) in groups.iter().zip(&solution.choice) {
@@ -112,6 +126,7 @@ pub fn optimize_with_caps(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::ExecPool;
     use crate::model::LayerKind;
     use crate::numerics::PAPER_FORMATS;
 
@@ -151,7 +166,7 @@ mod tests {
         // Budget enough for ~2 cheap layers but not the sensitive one.
         let d_cheap = calib.layer_mse(2, Format::Fp8E4m3) + calib.layer_mse(0, Format::Fp8E4m3);
         let tau = ((d_cheap * 1.5 + calib.loss_mse(&MpConfig::all_bf16(4))) / calib.eg2).sqrt();
-        let out = optimize(&groups, &calib, tau).unwrap();
+        let out = optimize(&groups, &calib, tau, &ExecPool::sequential()).unwrap();
         assert!(out.solution.feasible);
         // Layer 2 (s=0.1) must be quantized before layer 1 (s=10).
         assert_eq!(out.config.get(2), Format::Fp8E4m3);
@@ -164,7 +179,7 @@ mod tests {
     fn generous_budget_quantizes_everything() {
         let calib = calib4();
         let groups = singleton_groups(&[1.0, 1.0, 1.0, 1.0]);
-        let out = optimize(&groups, &calib, 10.0).unwrap();
+        let out = optimize(&groups, &calib, 10.0, &ExecPool::sequential()).unwrap();
         assert_eq!(out.config.n_quantized(), 4);
     }
 
@@ -172,7 +187,7 @@ mod tests {
     fn tau_zero_falls_back_to_baseline() {
         let calib = calib4();
         let groups = singleton_groups(&[1.0, 1.0, 1.0, 1.0]);
-        let out = optimize(&groups, &calib, 0.0).unwrap();
+        let out = optimize(&groups, &calib, 0.0, &ExecPool::sequential()).unwrap();
         // All-BF16 has nonzero d, so tau=0 is infeasible: fall back to
         // the min-cost (all-BF16) configuration.
         assert!(!out.solution.feasible);
@@ -189,7 +204,7 @@ mod tests {
             .filter(|(l, _)| *l == 0 || *l == 2)
             .map(|(_, g)| g)
             .collect();
-        let out = optimize(&groups, &calib, 0.5).unwrap();
+        let out = optimize(&groups, &calib, 0.5, &ExecPool::sequential()).unwrap();
         assert_eq!(out.config.get(1), Format::Bf16);
         assert_eq!(out.config.get(3), Format::Bf16);
         // Full-model predicted MSE includes the uncovered layers.
@@ -203,7 +218,7 @@ mod tests {
         let groups = singleton_groups(&[3.0, 1.0, 2.0, 1.5]);
         let mut last_gain = -1.0;
         for tau in [0.01, 0.05, 0.1, 0.5, 1.0] {
-            let out = optimize(&groups, &calib, tau).unwrap();
+            let out = optimize(&groups, &calib, tau, &ExecPool::sequential()).unwrap();
             assert!(out.solution.gain >= last_gain - 1e-12);
             last_gain = out.solution.gain;
         }
@@ -218,10 +233,13 @@ mod tests {
         // the unprofitable layers to FP8 as well.
         let groups = singleton_groups(&[-1.0, -1.0, 2.0, 2.0]);
         let qlayers = qlayers4();
-        let free = optimize_with_caps(&groups, &calib, 10.0, Some((&qlayers, 1e9))).unwrap();
+        let pool = ExecPool::sequential();
+        let free =
+            optimize_with_caps(&groups, &calib, 10.0, Some((&qlayers, 1e9)), &pool).unwrap();
         assert_eq!(free.config.n_quantized(), 2);
         assert_eq!(free.weight_bytes.unwrap(), 600.0);
-        let capped = optimize_with_caps(&groups, &calib, 10.0, Some((&qlayers, 500.0))).unwrap();
+        let capped =
+            optimize_with_caps(&groups, &calib, 10.0, Some((&qlayers, 500.0)), &pool).unwrap();
         assert!(capped.solution.feasible);
         let bytes = capped.weight_bytes.unwrap();
         assert!(bytes <= 500.0 + 1e-9, "bytes {bytes}");
@@ -238,7 +256,14 @@ mod tests {
         // Loss budget fits roughly the two cheapest-sensitivity upgrades.
         let d_cheap = calib.layer_mse(2, Format::Fp8E4m3) + calib.layer_mse(0, Format::Fp8E4m3);
         let tau = ((d_cheap * 1.2 + calib.loss_mse(&MpConfig::all_bf16(4))) / calib.eg2).sqrt();
-        let out = optimize_with_caps(&groups, &calib, tau, Some((&qlayers, 700.0))).unwrap();
+        let out = optimize_with_caps(
+            &groups,
+            &calib,
+            tau,
+            Some((&qlayers, 700.0)),
+            &ExecPool::sequential(),
+        )
+        .unwrap();
         // Cross-check against the brute-force oracle on the same instance.
         let mse_costs: Vec<Vec<f64>> = groups
             .iter()
@@ -271,7 +296,14 @@ mod tests {
         let groups = singleton_groups(&[1.0, 1.0, 1.0, 1.0]);
         let qlayers = qlayers4();
         // Even all-FP8 needs 400 bytes.
-        let out = optimize_with_caps(&groups, &calib, 10.0, Some((&qlayers, 100.0))).unwrap();
+        let out = optimize_with_caps(
+            &groups,
+            &calib,
+            10.0,
+            Some((&qlayers, 100.0)),
+            &ExecPool::sequential(),
+        )
+        .unwrap();
         assert!(!out.solution.feasible);
     }
 }

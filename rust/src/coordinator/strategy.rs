@@ -2,6 +2,7 @@
 //! by the staged planning API (`plan::Planner`).
 
 use crate::backend::DeviceProfile;
+use crate::exec::ExecPool;
 use crate::gaudisim::MpConfig;
 use crate::graph::partition::Partition;
 use crate::metrics::{self, GroupChoices, Objective};
@@ -150,16 +151,19 @@ impl Strategy {
     }
 }
 
-/// Produce the MP configuration a strategy chooses at threshold tau.
+/// Produce the MP configuration a strategy chooses at threshold tau.  The
+/// IP strategies route their MCKP solve through `pool` (bit-identical at
+/// any thread count); the baselines are closed-form.
 pub fn select_config(
     family: &Family,
     strategy: Strategy,
     calibration: &Calibration,
     tau: f64,
     seed: u64,
+    pool: &ExecPool,
 ) -> Result<MpConfig> {
     Ok(match strategy {
-        Strategy::Ip => super::ip::optimize(&family.groups, calibration, tau)?.config,
+        Strategy::Ip => super::ip::optimize(&family.groups, calibration, tau, pool)?.config,
         Strategy::Random => {
             let mut rng = Rng::new(0xA11CE ^ seed);
             super::baselines::random_config(
@@ -190,12 +194,18 @@ pub fn select_config_constrained(
     tau: f64,
     memory: Option<(&[QLayer], f64)>,
     seed: u64,
+    pool: &ExecPool,
 ) -> Result<MpConfig> {
     match (strategy, memory) {
-        (Strategy::Ip, Some(_)) => {
-            Ok(super::ip::optimize_with_caps(&family.groups, calibration, tau, memory)?.config)
-        }
-        _ => select_config(family, strategy, calibration, tau, seed),
+        (Strategy::Ip, Some(_)) => Ok(super::ip::optimize_with_caps(
+            &family.groups,
+            calibration,
+            tau,
+            memory,
+            pool,
+        )?
+        .config),
+        _ => select_config(family, strategy, calibration, tau, seed, pool),
     }
 }
 

@@ -1,0 +1,95 @@
+//! Deterministic parallel execution layer.
+//!
+//! Every hot path in the planning pipeline is embarrassingly parallel —
+//! per-sample sensitivity calibration (§2.2), per-(group, configuration)
+//! time-gain measurement (§2.3.1), per-tau IP solves when sweeping Pareto
+//! frontiers, and the subproblem tree of the branch & bound solver — but
+//! the gaudi2 acceptance tests pin planning output bit-for-bit, so "just
+//! spawn threads" is not enough.  This module provides the scaffolding that
+//! makes fan-out safe under that contract:
+//!
+//! * [`ExecCfg`] — the worker-thread budget, plumbed from the global
+//!   `--threads` CLI flag (or the `AMPQ_THREADS` env var); `threads == 1`
+//!   is the exact sequential path.
+//! * [`ExecPool`] — a scoped worker pool over [`std::thread::scope`] with
+//!   ordered [`ExecPool::par_map`] / [`ExecPool::par_chunks`] primitives:
+//!   `out[i]` is always `f(i)` regardless of which worker ran it, so a
+//!   reduction over the output in index order is bit-identical to the
+//!   sequential loop.
+//! * [`WorkQueue`] — a dynamic task queue for irregular loads (workers may
+//!   push subtasks while draining), returning key-tagged results that the
+//!   caller folds in deterministic key order.
+//!
+//! **The determinism contract.**  Parallel output must be bit-identical to
+//! `threads == 1` output.  The pool guarantees ordered delivery, but the
+//! contract also constrains *task bodies*: each task must be a pure
+//! function of its index/payload (no shared mutable state, no
+//! iteration-order-dependent RNG).  Randomized tasks therefore draw from
+//! [`crate::util::Rng::stream`] — a splittable generator keyed by
+//! `(seed, task index)` — so the noise a task sees does not depend on
+//! which worker ran it or what ran before.  Cross-task communication is
+//! allowed only when provably result-invariant (see
+//! `solver::branch_bound`'s shared incumbent floor, which only ever skips
+//! subproblems that cannot contain the final argmax).
+
+pub mod pool;
+pub mod queue;
+
+pub use pool::ExecPool;
+pub use queue::WorkQueue;
+
+/// Worker-thread budget for the parallel execution layer.
+///
+/// `threads == 1` runs everything inline on the calling thread — the exact
+/// sequential path, with no pool machinery on the stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecCfg {
+    pub threads: usize,
+}
+
+/// Env var overriding the default thread budget (used by CI to exercise
+/// the parallel paths under `cargo test`).
+pub const THREADS_ENV: &str = "AMPQ_THREADS";
+
+impl ExecCfg {
+    /// A budget of exactly `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> ExecCfg {
+        ExecCfg { threads: threads.max(1) }
+    }
+
+    /// The exact sequential path.
+    pub fn sequential() -> ExecCfg {
+        ExecCfg { threads: 1 }
+    }
+
+    /// Default budget: `AMPQ_THREADS` if set (and parseable), else the
+    /// machine's available parallelism, else 1.
+    pub fn from_env() -> ExecCfg {
+        if let Ok(v) = std::env::var(THREADS_ENV) {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return ExecCfg::new(n);
+            }
+        }
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ExecCfg::new(n)
+    }
+}
+
+impl Default for ExecCfg {
+    fn default() -> Self {
+        ExecCfg::from_env()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_clamps_to_one() {
+        assert_eq!(ExecCfg::new(0).threads, 1);
+        assert_eq!(ExecCfg::new(7).threads, 7);
+        assert_eq!(ExecCfg::sequential().threads, 1);
+        assert!(ExecCfg::from_env().threads >= 1);
+    }
+}

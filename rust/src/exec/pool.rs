@@ -1,0 +1,178 @@
+//! Scoped worker pool with ordered, deterministic map primitives.
+//!
+//! Workers are spawned per call inside a [`std::thread::scope`], so tasks
+//! may freely borrow from the caller's stack.  Spawn cost (~tens of us per
+//! worker) is irrelevant for the coarse tasks this pool carries
+//! (simulator measurements, IP solves, calibration samples); callers with
+//! microsecond-scale tasks batch them via [`ExecPool::par_chunks`].
+
+use super::ExecCfg;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A worker pool of fixed thread budget.  Cheap to construct and `Copy`;
+/// holds no threads between calls.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecPool {
+    threads: usize,
+}
+
+impl Default for ExecPool {
+    /// The environment's budget ([`ExecCfg::from_env`]).
+    fn default() -> Self {
+        ExecPool::new(ExecCfg::from_env())
+    }
+}
+
+impl ExecPool {
+    pub fn new(cfg: ExecCfg) -> ExecPool {
+        ExecPool { threads: cfg.threads.max(1) }
+    }
+
+    /// The exact sequential path (`par_map` degenerates to a plain loop).
+    pub fn sequential() -> ExecPool {
+        ExecPool { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn cfg(&self) -> ExecCfg {
+        ExecCfg { threads: self.threads }
+    }
+
+    /// Ordered parallel map: returns `[f(0), f(1), .., f(n-1)]`.  Tasks are
+    /// handed to workers through a shared index counter (a work queue, so
+    /// uneven task costs balance), but the output order is always index
+    /// order — a fold over it is bit-identical to the sequential loop
+    /// whenever `f` is a pure function of its index.
+    pub fn par_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.threads == 1 || n <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let workers = self.threads.min(n);
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i);
+                    *slots[i].lock().expect("par_map slot lock poisoned") = Some(v);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("par_map slot lock poisoned")
+                    .expect("par_map task completed")
+            })
+            .collect()
+    }
+
+    /// Fallible ordered map.  Every task runs to completion (a failure does
+    /// not cancel in-flight work); afterwards the FIRST error in index
+    /// order is returned, so the surfaced error does not depend on thread
+    /// timing.
+    pub fn try_par_map<T, F>(&self, n: usize, f: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T> + Sync,
+    {
+        let results = self.par_map(n, f);
+        results.into_iter().collect()
+    }
+
+    /// Ordered map over fixed-size chunks of `items`: `f(start, chunk)` for
+    /// each chunk, results in chunk order.  The chunking is a pure function
+    /// of `(items.len(), chunk_size)` — never of the thread count — so
+    /// output is identical at any parallelism.  Use for fine-grained tasks
+    /// where per-task dispatch would dominate.
+    pub fn par_chunks<T, R, F>(&self, items: &[T], chunk_size: usize, f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &[T]) -> R + Sync,
+    {
+        let chunk = chunk_size.max(1);
+        let n_chunks = items.len().div_ceil(chunk);
+        self.par_map(n_chunks, |c| {
+            let start = c * chunk;
+            let end = (start + chunk).min(items.len());
+            f(start, &items[start..end])
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    #[test]
+    fn par_map_is_ordered_and_complete() {
+        for threads in [1, 2, 8] {
+            let pool = ExecPool::new(ExecCfg::new(threads));
+            let out = pool.par_map(100, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn par_map_matches_sequential_bitwise() {
+        // Float reduction in index order must be identical at any width.
+        let seq = ExecPool::sequential();
+        let par = ExecPool::new(ExecCfg::new(4));
+        let f = |i: usize| ((i as f64) * 0.1).sin() / (1.0 + i as f64);
+        let a: f64 = seq.par_map(1000, f).iter().sum();
+        let b: f64 = par.par_map(1000, f).iter().sum();
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn try_par_map_returns_first_error_in_index_order() {
+        let pool = ExecPool::new(ExecCfg::new(4));
+        let out: Result<Vec<usize>> = pool.try_par_map(64, |i| {
+            if i == 41 || i == 7 {
+                Err(anyhow!("task {i} failed"))
+            } else {
+                Ok(i)
+            }
+        });
+        let msg = format!("{:#}", out.unwrap_err());
+        assert!(msg.contains("task 7"), "{msg}");
+    }
+
+    #[test]
+    fn par_chunks_covers_every_item_once() {
+        let items: Vec<usize> = (0..103).collect();
+        for threads in [1, 3] {
+            let pool = ExecPool::new(ExecCfg::new(threads));
+            let sums = pool.par_chunks(&items, 10, |start, chunk| {
+                assert_eq!(chunk[0], start);
+                chunk.iter().sum::<usize>()
+            });
+            assert_eq!(sums.len(), 11);
+            assert_eq!(sums.iter().sum::<usize>(), items.iter().sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let pool = ExecPool::new(ExecCfg::new(4));
+        assert!(pool.par_map(0, |i| i).is_empty());
+        assert_eq!(pool.par_map(1, |i| i + 10), vec![10]);
+        assert!(pool.par_chunks(&[] as &[u8], 4, |_, c| c.len()).is_empty());
+    }
+}

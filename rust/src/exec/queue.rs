@@ -1,0 +1,175 @@
+//! Dynamic work queue for irregular loads.
+//!
+//! [`ExecPool::par_map`] needs the task list up front; tree-shaped work
+//! (branch & bound subproblems, adaptive refinement) discovers tasks while
+//! running.  [`WorkQueue::run`] drains a queue that workers may push onto
+//! mid-task, then hands the caller every emitted result sorted by its key
+//! — so as long as each task's output is a pure function of the task (and
+//! the caller's fold is a function of the sorted results), the outcome is
+//! bit-identical at any thread count, regardless of which worker ran what
+//! in which order.
+
+use super::ExecPool;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct QueueState<T> {
+    tasks: VecDeque<T>,
+    /// Tasks currently being processed (the queue is only exhausted when
+    /// it is empty AND nothing in flight can still push).
+    in_flight: usize,
+}
+
+/// Handle a running task uses to enqueue subtasks.
+pub struct WorkQueue<T> {
+    state: Mutex<QueueState<T>>,
+    ready: Condvar,
+}
+
+impl<T: Send> WorkQueue<T> {
+    fn new(seed: Vec<T>) -> WorkQueue<T> {
+        WorkQueue {
+            state: Mutex::new(QueueState { tasks: VecDeque::from(seed), in_flight: 0 }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a subtask (callable from inside a worker).
+    pub fn push(&self, task: T) {
+        let mut st = self.state.lock().expect("work queue lock poisoned");
+        st.tasks.push_back(task);
+        self.ready.notify_one();
+    }
+
+    /// Pop the next task, waiting while other workers might still push.
+    /// Returns None when the queue has fully drained.
+    fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().expect("work queue lock poisoned");
+        loop {
+            if let Some(t) = st.tasks.pop_front() {
+                st.in_flight += 1;
+                return Some(t);
+            }
+            if st.in_flight == 0 {
+                return None;
+            }
+            st = self.ready.wait(st).expect("work queue lock poisoned");
+        }
+    }
+
+    /// Mark one popped task as finished.  Called from a drop guard so a
+    /// panicking task still releases its in-flight slot — otherwise the
+    /// other workers would wait on the condvar forever and the panic
+    /// could never propagate out of the scope.
+    fn done(&self) {
+        let mut st = self.state.lock().expect("work queue lock poisoned");
+        st.in_flight -= 1;
+        // Wake everyone: the queue may now be exhausted (empty + idle), and
+        // waiters deciding that need a look at the state.
+        if st.tasks.is_empty() && st.in_flight == 0 {
+            self.ready.notify_all();
+        }
+    }
+
+    /// Drain `seed` (plus everything workers push) across the pool.  Each
+    /// task may emit one `(key, result)`; the emitted pairs come back
+    /// sorted by key.  Keys must be unique per emitting task — derive them
+    /// from the task's position in the (deterministic) task tree.
+    pub fn run<K, R, F>(pool: &ExecPool, seed: Vec<T>, work: F) -> Vec<(K, R)>
+    where
+        K: Ord + Send,
+        R: Send,
+        F: Fn(T, &WorkQueue<T>) -> Option<(K, R)> + Sync,
+    {
+        let queue = WorkQueue::new(seed);
+        let results: Mutex<Vec<(K, R)>> = Mutex::new(Vec::new());
+        let drain = || {
+            while let Some(task) = queue.pop() {
+                // The guard releases the in-flight slot even if `work`
+                // panics, so sibling workers drain and the panic can
+                // propagate out of the scope instead of deadlocking it.
+                let _done = DoneGuard(&queue);
+                if let Some(kr) = work(task, &queue) {
+                    results.lock().expect("result lock poisoned").push(kr);
+                }
+            }
+        };
+        let workers = pool.threads();
+        if workers == 1 {
+            drain();
+        } else {
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(&drain);
+                }
+            });
+        }
+        let mut out = results.into_inner().expect("result lock poisoned");
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+/// Releases one in-flight slot on drop (see [`WorkQueue::done`]).
+struct DoneGuard<'a, T: Send>(&'a WorkQueue<T>);
+
+impl<T: Send> Drop for DoneGuard<'_, T> {
+    fn drop(&mut self) {
+        self.0.done();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecCfg;
+
+    /// Recursively split ranges until small, then emit their sums — an
+    /// irregular tree whose sorted output must not depend on thread count.
+    fn range_sums(pool: &ExecPool) -> Vec<(Vec<u32>, u64)> {
+        WorkQueue::run(
+            pool,
+            vec![(vec![], 0u64, 1000u64)],
+            |(key, lo, hi), q: &WorkQueue<(Vec<u32>, u64, u64)>| {
+                if hi - lo > 100 {
+                    let mid = (lo + hi) / 2;
+                    let mut k0 = key.clone();
+                    k0.push(0);
+                    let mut k1 = key;
+                    k1.push(1);
+                    q.push((k0, lo, mid));
+                    q.push((k1, mid, hi));
+                    None
+                } else {
+                    Some((key, (lo..hi).sum::<u64>()))
+                }
+            },
+        )
+    }
+
+    #[test]
+    fn irregular_tree_is_thread_count_invariant() {
+        let seq = range_sums(&ExecPool::sequential());
+        let par = range_sums(&ExecPool::new(ExecCfg::new(8)));
+        assert_eq!(seq, par);
+        let total: u64 = seq.iter().map(|(_, s)| s).sum();
+        assert_eq!(total, (0..1000u64).sum::<u64>());
+        assert!(seq.len() > 8, "splitting actually happened");
+    }
+
+    #[test]
+    fn empty_seed_returns_empty() {
+        let pool = ExecPool::new(ExecCfg::new(4));
+        let out: Vec<(usize, usize)> =
+            WorkQueue::run(&pool, Vec::<usize>::new(), |t, _| Some((t, t)));
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn results_sorted_by_key() {
+        let pool = ExecPool::new(ExecCfg::new(3));
+        let out = WorkQueue::run(&pool, (0..50usize).rev().collect(), |t, _| Some((t, t * 2)));
+        let keys: Vec<usize> = out.iter().map(|(k, _)| *k).collect();
+        assert_eq!(keys, (0..50).collect::<Vec<_>>());
+    }
+}

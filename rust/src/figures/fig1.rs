@@ -12,7 +12,7 @@ use crate::metrics::tt_layer_gain;
 use crate::numerics::Format;
 use crate::report::{self, ascii};
 use crate::timing::{measure_groups, measure_per_layer, SimTtft};
-use crate::util::{stats, Rng};
+use crate::util::stats;
 use anyhow::{anyhow, Result};
 
 pub fn run(ctx: &mut FigureCtx, model: &str) -> Result<()> {
@@ -30,10 +30,11 @@ pub fn run(ctx: &mut FigureCtx, model: &str) -> Result<()> {
         .ok_or_else(|| anyhow!("no 5-layer attention group found"))?;
 
     let device = ctx.params.device.clone();
+    let pool = ctx.engine.pool();
     let sim = Simulator::for_device(&graph, &device);
-    let mut src = SimTtft { sim, rng: Rng::new(7), reps: ctx.params.reps };
-    let tm = measure_groups(&mut src, &part.partition, &formats)?;
-    let per_layer = measure_per_layer(&mut src, &formats)?;
+    let src = SimTtft { sim, seed: 7, reps: ctx.params.reps };
+    let tm = measure_groups(&src, &part.partition, &formats, &pool)?;
+    let per_layer = measure_per_layer(&src, &formats, &pool)?;
 
     let group = &tm.groups[gi];
     let qidxs = &group.qidxs;

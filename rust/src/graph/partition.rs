@@ -6,7 +6,7 @@
 //! ("residual adds are omitted for clarity").
 
 use super::Graph;
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeSet;
 
 /// One sequential sub-graph V_j.
@@ -29,9 +29,21 @@ impl SubGraph {
         self.qidxs.is_empty()
     }
 
-    /// Number of MP configurations for this group: F^{L_j}.
-    pub fn n_configs(&self, n_formats: usize) -> usize {
-        n_formats.pow(self.qidxs.len() as u32)
+    /// Number of MP configurations for this group: F^{L_j}.  Errors when
+    /// the count overflows `usize` — a group that long cannot be measured
+    /// configuration-by-configuration anyway, and the callers must refuse
+    /// it explicitly instead of panicking (debug) or wrapping (release).
+    pub fn n_configs(&self, n_formats: usize) -> Result<usize> {
+        u32::try_from(self.qidxs.len())
+            .ok()
+            .and_then(|len| n_formats.checked_pow(len))
+            .ok_or_else(|| {
+                anyhow!(
+                    "config space too large: {n_formats}^{} (group of {} layers) overflows usize",
+                    self.qidxs.len(),
+                    self.qidxs.len()
+                )
+            })
     }
 }
 
@@ -60,8 +72,13 @@ impl Partition {
     }
 
     /// Total number of per-group timing measurements: sum_j F^{L_j}.
-    pub fn n_measurements(&self, n_formats: usize) -> usize {
-        self.groups.iter().map(|g| g.n_configs(n_formats)).sum()
+    /// Errors when any group's config space (or the total) overflows.
+    pub fn n_measurements(&self, n_formats: usize) -> Result<usize> {
+        self.groups.iter().try_fold(0usize, |acc, g| {
+            let n = g.n_configs(n_formats)?;
+            acc.checked_add(n)
+                .ok_or_else(|| anyhow!("config space too large: total measurement count overflows"))
+        })
     }
 }
 
@@ -191,7 +208,26 @@ mod tests {
         // {x, y, m} is a single SESE region; t is non-quantizable.
         assert_eq!(p.groups.len(), 1);
         assert_eq!(p.groups[0].qidxs, vec![0, 1, 2]);
-        assert_eq!(p.groups[0].n_configs(2), 8);
+        assert_eq!(p.groups[0].n_configs(2).unwrap(), 8);
+    }
+
+    #[test]
+    fn n_configs_overflow_is_an_error_not_a_panic() {
+        // 2^64 layers' worth of configs cannot fit a usize: the count must
+        // surface as an explicit error.
+        let g = SubGraph {
+            all_nodes: (0..70).collect(),
+            qnodes: (0..70).collect(),
+            qidxs: (0..70).collect(),
+        };
+        let err = g.n_configs(2).unwrap_err();
+        assert!(format!("{err:#}").contains("config space too large"));
+        // And the per-partition total propagates it.
+        let p = Partition { groups: vec![g] };
+        assert!(p.n_measurements(2).is_err());
+        // Small groups still count exactly.
+        let small = SubGraph { all_nodes: vec![0], qnodes: vec![0], qidxs: vec![0] };
+        assert_eq!(small.n_configs(3).unwrap(), 3);
     }
 
     #[test]
@@ -234,7 +270,7 @@ mod tests {
         assert_eq!(p.groups[0].qidxs, vec![0, 1, 2]);
         assert_eq!(p.groups[1].qidxs, vec![3]);
         assert_eq!(p.groups[2].qidxs, vec![4]);
-        assert_eq!(p.n_measurements(2), 8 + 2 + 2);
+        assert_eq!(p.n_measurements(2).unwrap(), 8 + 2 + 2);
         validate_sequential(&g, &p).unwrap();
     }
 

@@ -24,7 +24,10 @@
 //! requests to per-device planners.  Hardware lives in [`backend`]: a
 //! [`backend::DeviceProfile`] (JSON-loadable; four built-ins in
 //! [`backend::Registry`]) parameterizes the simulator, the theoretical
-//! gain tables, and the format menus.
+//! gain tables, and the format menus.  Stage fan-outs, solver
+//! decomposition, frontier sweeps, and serve batches all run on the
+//! deterministic parallel execution layer in [`exec`] (`--threads`):
+//! output is bit-identical at any thread count.
 
 #![allow(
     clippy::len_without_is_empty,
@@ -38,6 +41,7 @@
 pub mod backend;
 pub mod coordinator;
 pub mod evalharness;
+pub mod exec;
 pub mod figures;
 pub mod gaudisim;
 pub mod graph;

@@ -25,6 +25,7 @@
 use ampq::backend::{DeviceProfile, Registry};
 use ampq::coordinator::{paper_tau_grid, Strategy};
 use ampq::evalharness::{evaluate, evaluate_plan, load_all_tasks};
+use ampq::exec::{ExecCfg, ExecPool};
 use ampq::figures::{fig1, fig2, fig3, table1, ExpParams, FigureCtx};
 use ampq::gaudisim::MpConfig;
 use ampq::metrics::Objective;
@@ -78,7 +79,11 @@ options:
   --tau X               loss-NRMSE threshold [0.004]
   --memory-cap BYTES    additional stored-weight-byte cap (optimize)
   --requests FILE       serve: JSON array of plan/frontier requests
-  --threads N           serve: worker threads [4]
+  --threads N           worker threads for parallel stages, solves,
+                        frontier sweeps, and serve batches
+                        [AMPQ_THREADS or available parallelism;
+                        1 = exact sequential path — output is
+                        bit-identical either way]
   --taus a,b,c          explicit tau grid [paper grid 0..0.007]
   --objective et|tt|m   IP objective family [et; sweep: all]
   --strategy ip|random|prefix
@@ -105,6 +110,7 @@ struct EngineSpec {
     demo: bool,
     blocks: usize,
     demo_seed: u64,
+    exec: ExecCfg,
 }
 
 impl EngineSpec {
@@ -113,6 +119,7 @@ impl EngineSpec {
             .with_artifacts_root(self.root.clone())
             .with_fwd_mode(self.fwd_mode)
             .with_measure_protocol(self.measure_seed, self.reps)
+            .with_exec(self.exec)
             .with_device(device);
         if !self.no_cache {
             engine = engine.with_cache_dir(self.root.join("cache"));
@@ -159,6 +166,13 @@ fn run(raw: &[String]) -> Result<()> {
         None => DeviceProfile::gaudi2(),
         Some(spec) => registry.resolve(spec)?,
     };
+    // Global worker budget: explicit --threads wins, else AMPQ_THREADS /
+    // available parallelism.  Every output is bit-identical across
+    // settings (the exec layer's determinism contract).
+    let exec = match args.get("threads") {
+        None => ExecCfg::from_env(),
+        Some(_) => ExecCfg::new(args.usize_or("threads", 1)?),
+    };
     let spec = EngineSpec {
         root,
         fwd_mode,
@@ -168,6 +182,7 @@ fn run(raw: &[String]) -> Result<()> {
         demo,
         blocks: args.usize_or("blocks", 2)?,
         demo_seed: args.u64_or("seed", 0)?,
+        exec,
     };
     let mut engine = spec.engine(device);
     let model = args
@@ -233,13 +248,13 @@ fn cmd_partition(engine: &mut Engine, model: &str, json: bool) -> Result<()> {
         println!(
             "  V{j:<2} ({} layers, {} configs): {}",
             g.len(),
-            g.n_configs(nf),
+            g.n_configs(nf)?,
             names.join(", ")
         );
     }
     println!(
         "total per-group measurements: {} (vs {:.2e} for exhaustive whole-model search)",
-        art.partition.n_measurements(nf),
+        art.partition.n_measurements(nf)?,
         (nf as f64).powi(art.n_qlayers() as i32)
     );
     Ok(())
@@ -369,7 +384,7 @@ fn cmd_pipeline(engine: &mut Engine, model: &str, args: &Args, json: bool) -> Re
         println!(
             "[1] partition: {} groups, {} measurements",
             part.partition.groups.len(),
-            part.partition.n_measurements(part.formats.len())
+            part.partition.n_measurements(part.formats.len())?
         );
     }
     let planner = engine.planner(model)?;
@@ -583,9 +598,9 @@ fn cmd_serve(engine: &mut Engine, spec: &EngineSpec, args: &Args, json: bool) ->
             &mut dev_engines.iter_mut().find(|(n, _)| n.as_str() == dname).unwrap().1;
         svc.register_for_device(model, dname, dev_engine.planner(model)?)?;
     }
-    let threads = args.usize_or("threads", 4)?;
+    let pool = ExecPool::new(spec.exec);
     let t0 = Instant::now();
-    let answers = svc.serve_batch(&reqs, threads)?;
+    let answers = svc.serve_batch(&reqs, &pool)?;
     let elapsed = t0.elapsed();
     for a in &answers {
         if json {
@@ -609,7 +624,7 @@ fn cmd_serve(engine: &mut Engine, spec: &EngineSpec, args: &Args, json: bool) ->
          ({:.1} us/request); {} frontier sweeps",
         reqs.len(),
         models.len(),
-        threads,
+        pool.threads(),
         elapsed.as_secs_f64() * 1e3,
         elapsed.as_secs_f64() * 1e6 / reqs.len().max(1) as f64,
         svc.frontier_solves()
@@ -777,9 +792,9 @@ fn cmd_ttft(engine: &mut Engine, model: &str, args: &Args) -> Result<()> {
     let part = engine.partitioned(model)?;
     let mr = engine.runtime(model)?;
     let tokens: Vec<i32> = calib[..info.eval_b].concat();
-    let mut src = WallTtft { mr, tokens, reps: args.usize_or("reps", 5)? };
-    let base = src.measure(&MpConfig::all_bf16(info.n_qlayers))?;
-    let fp8 = src.measure(&MpConfig::uniform(info.n_qlayers, Format::Fp8E4m3))?;
+    let src = WallTtft { mr, tokens, reps: args.usize_or("reps", 5)? };
+    let base = src.measure(&MpConfig::all_bf16(info.n_qlayers), 0)?;
+    let fp8 = src.measure(&MpConfig::uniform(info.n_qlayers, Format::Fp8E4m3), 1)?;
     println!(
         "model {model} [{}] wall-clock fwd: bf16-config {:.1} us, fp8-config {:.1} us / batch of {}",
         if mr.fwd_mode == FwdMode::Pallas { "pallas" } else { "ref" },
@@ -788,7 +803,9 @@ fn cmd_ttft(engine: &mut Engine, model: &str, args: &Args) -> Result<()> {
         info.eval_b
     );
     // Per-group measurement demo over the wall clock (paper Algorithm 1.3).
-    let tm = measure_groups(&mut src, &part.partition, &part.formats)?;
+    // Wall-clock timing is contention-sensitive: always sequential, even
+    // when --threads asks for a wide pool.
+    let tm = measure_groups(&src, &part.partition, &part.formats, &ExecPool::sequential())?;
     println!("wall-clock per-group gains (us): ");
     for g in &tm.groups {
         let best = g.gains.iter().cloned().fold(f64::MIN, f64::max);

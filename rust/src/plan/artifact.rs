@@ -19,7 +19,12 @@ use anyhow::{anyhow, bail, Result};
 use std::path::Path;
 
 /// Version stamp embedded in every artifact and Plan.
-pub const SCHEMA_VERSION: i64 = 1;
+///
+/// 2 (0.5): the Measured stage draws per-measurement noise from
+/// `Rng::stream(seed, index)` instead of one rolling generator, so gain
+/// tables cached under schema 1 are NOT reproducible by the current code
+/// at the same seed — they must miss and recompute.
+pub const SCHEMA_VERSION: i64 = 2;
 
 // ---- shared JSON helpers ------------------------------------------------
 

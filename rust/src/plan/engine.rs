@@ -9,14 +9,14 @@
 
 use super::artifact::{Calibrated, Measured, Partitioned};
 use super::planner::Planner;
+use super::stage::{CalibSource, CalibrateStage, MeasureStage, PartitionStage, Stage};
 use crate::backend::DeviceProfile;
-use crate::graph::partition::partition;
+use crate::exec::{ExecCfg, ExecPool};
 use crate::graph::Graph;
 use crate::model::{Manifest, ModelInfo, QLayer};
 use crate::numerics::{Format, PAPER_FORMATS};
 use crate::runtime::{FwdMode, ModelRuntime, Runtime};
-use crate::sensitivity::{calibrate, Calibration};
-use crate::timing::{measure_groups, SimTtft};
+use crate::sensitivity::Calibration;
 use crate::util::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -72,6 +72,9 @@ pub struct Engine {
     formats: Vec<Format>,
     measure_seed: u64,
     measure_reps: usize,
+    /// Worker budget for the stage fan-outs (and the planners this engine
+    /// assembles).  Artifacts are bit-identical at any setting.
+    exec: ExecCfg,
     rt: Option<Runtime>,
     models: BTreeMap<String, ModelState>,
     counters: EngineCounters,
@@ -90,6 +93,7 @@ impl Engine {
             formats: PAPER_FORMATS.to_vec(),
             measure_seed: DEFAULT_MEASURE_SEED,
             measure_reps: DEFAULT_MEASURE_REPS,
+            exec: ExecCfg::from_env(),
             rt: None,
             models: BTreeMap::new(),
             counters: EngineCounters::default(),
@@ -118,6 +122,28 @@ impl Engine {
     pub fn with_fwd_mode(mut self, mode: FwdMode) -> Engine {
         self.fwd_mode = mode;
         self
+    }
+
+    /// Worker budget for stage fan-outs and assembled planners.  Changing
+    /// it never invalidates artifacts: parallel staging is bit-identical
+    /// to sequential (the exec layer's determinism contract).
+    pub fn with_exec(mut self, exec: ExecCfg) -> Engine {
+        self.exec = exec;
+        self
+    }
+
+    /// Shorthand for [`Engine::with_exec`] (`1` = exact sequential path).
+    pub fn with_threads(self, threads: usize) -> Engine {
+        self.with_exec(ExecCfg::new(threads))
+    }
+
+    pub fn exec(&self) -> ExecCfg {
+        self.exec
+    }
+
+    /// The pool stage fan-outs run on.
+    pub fn pool(&self) -> ExecPool {
+        ExecPool::new(self.exec)
     }
 
     /// Drop memoized stage artifacts that depend on the device/menu or the
@@ -366,14 +392,10 @@ impl Engine {
         }
         let graph = self.graph(model)?;
         let qlayers = self.qlayers(model)?;
-        let part = partition(&graph)?;
+        let art =
+            PartitionStage { model, graph: &graph, qlayers: &qlayers, menu: &menu }
+                .run(&self.pool())?;
         self.counters.partition_passes += 1;
-        let art = Partitioned {
-            model: model.to_string(),
-            formats: menu,
-            qlayers,
-            partition: part,
-        };
         self.store_cache(model, &stage, &art.to_json());
         self.state_mut(model).partitioned = Some(art.clone());
         Ok(art)
@@ -408,18 +430,23 @@ impl Engine {
             }
             eprintln!("warning: stale calibrated cache for '{model}'; recomputing");
         }
-        let calibration = if self.is_synthetic(model) {
+        let pool = self.pool();
+        let art = if self.is_synthetic(model) {
             let state = self.models.get(model).unwrap();
-            state.synthetic.as_ref().unwrap().calibration.clone()
+            let injected = &state.synthetic.as_ref().unwrap().calibration;
+            CalibrateStage { model, source: CalibSource::Injected(injected) }.run(&pool)?
         } else {
             let root = self.manifest()?.root.clone();
             let info = self.info(model)?;
             let calib_tokens = info.load_calib(&root)?;
             let mr = self.runtime(model)?;
-            calibrate(mr, &calib_tokens)?
+            CalibrateStage {
+                model,
+                source: CalibSource::Runtime { mr, samples: &calib_tokens },
+            }
+            .run(&pool)?
         };
         self.counters.calibration_passes += 1;
-        let art = Calibrated { model: model.to_string(), calibration };
         self.store_cache(model, "calibrated", &art.to_json());
         self.state_mut(model).calibrated = Some(art.clone());
         Ok(art)
@@ -472,18 +499,16 @@ impl Engine {
             );
         }
         let graph = self.graph(model)?;
-        let mut src =
-            SimTtft::for_device(&graph, &self.device, self.measure_seed, self.measure_reps);
-        let tm = measure_groups(&mut src, &partitioned.partition, &partitioned.formats)?;
-        self.counters.measurement_passes += 1;
-        let art = Measured {
-            model: model.to_string(),
-            formats: partitioned.formats.clone(),
+        let art = MeasureStage {
+            model,
+            graph: &graph,
+            partitioned: &partitioned,
+            device: &self.device,
             seed: self.measure_seed,
             reps: self.measure_reps,
-            device: self.device.clone(),
-            measurements: tm,
-        };
+        }
+        .run(&self.pool())?;
+        self.counters.measurement_passes += 1;
         self.store_cache(model, &stage, &art.to_json());
         self.state_mut(model).measured = Some(art.clone());
         Ok(art)
@@ -492,12 +517,13 @@ impl Engine {
     // ---- assembly --------------------------------------------------------
 
     /// Assemble a [`Planner`] from the three stage artifacts, materializing
-    /// any that are missing.  Repeated calls re-use every artifact.
+    /// any that are missing.  Repeated calls re-use every artifact.  The
+    /// planner inherits this engine's exec budget for its solves/sweeps.
     pub fn planner(&mut self, model: &str) -> Result<Planner> {
         let partitioned = self.partitioned(model)?;
         let calibrated = self.calibrated(model)?;
         let measured = self.measured(model)?;
-        Planner::new(partitioned, calibrated, measured)
+        Ok(Planner::new(partitioned, calibrated, measured)?.with_exec(self.exec))
     }
 
     /// Stage `models` and wrap their planners in a concurrent

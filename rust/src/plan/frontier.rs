@@ -14,6 +14,7 @@
 
 use super::artifact::{check_header, formats_from_json, formats_to_json, num, SCHEMA_VERSION};
 use crate::coordinator::Strategy;
+use crate::exec::ExecPool;
 use crate::gaudisim::MpConfig;
 use crate::metrics::Objective;
 use crate::solver::EPS;
@@ -149,6 +150,12 @@ const MAX_REFINE_SOLVES: usize = 320;
 /// refine gain breakpoints by bisection, Pareto-filter, and assemble the
 /// [`Frontier`].  `grid` taus outside [0, tau_max] are clamped away; 0 and
 /// tau_max themselves are always solved.
+///
+/// Solves are batched across `pool`: the initial grid in one batch, then
+/// one batch of midpoints per bisection round.  Each round's batch is a
+/// pure function of the previous round's (ordered) results — never of the
+/// thread count — so the swept frontier is bit-identical at any
+/// parallelism, including how the solve budget truncates refinement.
 pub fn sweep<F>(
     model: &str,
     objective: Objective,
@@ -156,10 +163,11 @@ pub fn sweep<F>(
     eg2: f64,
     tau_max: f64,
     grid: &[f64],
-    mut solve: F,
+    pool: &ExecPool,
+    solve: F,
 ) -> Result<Frontier>
 where
-    F: FnMut(f64) -> Result<(f64, f64, MpConfig)>,
+    F: Fn(f64) -> Result<(f64, f64, MpConfig)> + Sync,
 {
     struct Rec {
         tau: f64,
@@ -180,40 +188,48 @@ where
     taus.sort_by(|a, b| a.partial_cmp(b).unwrap());
     taus.dedup_by(|a, b| (*a - *b).abs() <= tau_max * 1e-9);
 
-    let mut records: Vec<Rec> = Vec::with_capacity(taus.len());
-    for &tau in &taus {
-        let (mse, gain, config) = solve(tau)?;
-        records.push(Rec { tau, mse, gain, config });
-    }
+    let batch = |ts: &[f64]| -> Result<Vec<Rec>> {
+        let solved: Vec<(f64, f64, MpConfig)> =
+            pool.try_par_map(ts.len(), |i| solve(ts[i]))?;
+        Ok(ts
+            .iter()
+            .zip(solved)
+            .map(|(&tau, (mse, gain, config))| Rec { tau, mse, gain, config })
+            .collect())
+    };
+    let mut records: Vec<Rec> = batch(&taus)?;
 
     // Bisect adjacent taus with differing optimal gains until the gain step
-    // is localized to tau_res (or the solve budget runs out).
+    // is localized to tau_res (or the solve budget runs out) — one batched
+    // round of midpoints per iteration, intervals kept in ascending order.
     let gain_span = records.iter().map(|r| r.gain.abs()).fold(0.0, f64::max);
     let gtol = 1e-9 * (1.0 + gain_span);
     let tau_res = tau_max * 1e-4;
-    let mut queue: Vec<(f64, f64, f64, f64)> = records
+    let mut intervals: Vec<(f64, f64, f64, f64)> = records
         .windows(2)
-        .filter(|w| (w[1].gain - w[0].gain).abs() > gtol)
+        .filter(|w| (w[1].gain - w[0].gain).abs() > gtol && w[1].tau - w[0].tau > tau_res)
         .map(|w| (w[0].tau, w[0].gain, w[1].tau, w[1].gain))
         .collect();
     let mut solves_left = MAX_REFINE_SOLVES;
-    while let Some((lo, glo, hi, ghi)) = queue.pop() {
-        if solves_left == 0 {
-            break;
+    while !intervals.is_empty() && solves_left > 0 {
+        // Deterministic truncation: the budget cuts the round's tail, not
+        // whatever a thread happened to pop last.
+        intervals.truncate(solves_left);
+        let mids: Vec<f64> = intervals.iter().map(|(lo, _, hi, _)| 0.5 * (lo + hi)).collect();
+        solves_left -= mids.len();
+        let solved = batch(&mids)?;
+        let mut next: Vec<(f64, f64, f64, f64)> = Vec::new();
+        for ((lo, glo, hi, ghi), rec) in intervals.into_iter().zip(&solved) {
+            let mid = rec.tau;
+            if (rec.gain - glo).abs() > gtol && mid - lo > tau_res {
+                next.push((lo, glo, mid, rec.gain));
+            }
+            if (ghi - rec.gain).abs() > gtol && hi - mid > tau_res {
+                next.push((mid, rec.gain, hi, ghi));
+            }
         }
-        if hi - lo <= tau_res {
-            continue;
-        }
-        let mid = 0.5 * (lo + hi);
-        let (mse, gain, config) = solve(mid)?;
-        solves_left -= 1;
-        records.push(Rec { tau: mid, mse, gain, config });
-        if (gain - glo).abs() > gtol {
-            queue.push((lo, glo, mid, gain));
-        }
-        if (ghi - gain).abs() > gtol {
-            queue.push((mid, gain, hi, ghi));
-        }
+        records.extend(solved);
+        intervals = next;
     }
 
     // Pareto filter: ascending MSE, keep only strictly increasing gain
@@ -268,9 +284,27 @@ mod tests {
             1.0,
             2.0,
             &[0.0, 0.1, 1.2, 2.0],
+            &ExecPool::sequential(),
             step_solve,
         )
         .unwrap()
+    }
+
+    #[test]
+    fn sweep_is_bit_identical_across_thread_counts() {
+        use crate::exec::ExecCfg;
+        let par = sweep(
+            "m",
+            Objective::EmpiricalTime,
+            Strategy::Ip,
+            1.0,
+            2.0,
+            &[0.0, 0.1, 1.2, 2.0],
+            &ExecPool::new(ExecCfg::new(8)),
+            step_solve,
+        )
+        .unwrap();
+        assert_eq!(par, step_frontier());
     }
 
     #[test]
@@ -343,6 +377,7 @@ mod tests {
             1.0,
             0.0,
             &[],
+            &ExecPool::sequential(),
             step_solve
         )
         .is_err());

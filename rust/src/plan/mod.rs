@@ -8,7 +8,10 @@
 //! * [`Engine`] owns the runtime and a multi-model registry and produces
 //!   the typed stage artifacts [`Partitioned`] -> [`Calibrated`] ->
 //!   [`Measured`], each cached in memory and (optionally) on disk under
-//!   `artifacts/cache/<model>/<stage>.json`;
+//!   `artifacts/cache/<model>/<stage>.json`.  Each arrow is an explicit
+//!   [`Stage`] value (see [`stage`]) whose inner loops fan out over the
+//!   engine's `crate::exec::ExecPool` — bit-identical artifacts at any
+//!   `--threads` setting;
 //! * [`PlanRequest`] is the multi-constraint query builder — loss budget,
 //!   memory cap, strategy, seed, target device — resolved by
 //!   [`Planner::solve`] against the artifacts in microseconds, with no
@@ -63,6 +66,7 @@ pub mod frontier;
 pub mod planner;
 pub mod request;
 pub mod service;
+pub mod stage;
 
 pub use self::artifact::{Calibrated, Measured, Partitioned, SCHEMA_VERSION};
 pub use self::engine::{Engine, EngineCounters};
@@ -70,6 +74,10 @@ pub use self::frontier::{Frontier, FrontierPoint};
 pub use self::planner::Planner;
 pub use self::request::PlanRequest;
 pub use self::service::{load_requests, PlanService, ServeRequest};
+pub use self::stage::{CalibSource, CalibrateStage, MeasureStage, PartitionStage, Stage, StageIo};
+// The IP solve outcome is part of the planning surface (Plans embed its
+// numbers); re-exported so callers stop reaching into `coordinator`.
+pub use crate::coordinator::IpOutcome;
 
 use crate::coordinator::Strategy;
 use crate::gaudisim::MpConfig;

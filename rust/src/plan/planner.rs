@@ -11,6 +11,7 @@ use super::{Plan, Provenance};
 use crate::coordinator::strategy::{
     build_family, select_config_constrained, Family, Strategy,
 };
+use crate::exec::{ExecCfg, ExecPool};
 use crate::metrics::{covered_layers, weight_bytes, Objective};
 use crate::numerics::Format;
 use crate::sensitivity::Calibration;
@@ -29,6 +30,10 @@ pub struct Planner {
     /// Per-family tau_max, precomputed at assembly (pure function of the
     /// artifacts) so budget-less requests stay O(solve), not O(tables).
     tau_maxes: [f64; 3],
+    /// Worker budget for solves, sweeps, and frontier refinement.  Plans
+    /// are bit-identical at any setting (exec determinism contract), so
+    /// this is pure throughput tuning.
+    exec: ExecCfg,
 }
 
 impl Planner {
@@ -94,7 +99,24 @@ impl Planner {
             family_tau_max(&families[1], &calibrated.calibration),
             family_tau_max(&families[2], &calibrated.calibration),
         ];
-        Ok(Planner { partitioned, calibrated, measured, families, tau_maxes })
+        Ok(Planner {
+            partitioned,
+            calibrated,
+            measured,
+            families,
+            tau_maxes,
+            exec: ExecCfg::from_env(),
+        })
+    }
+
+    /// Set the worker budget for this planner's solves and sweeps.
+    pub fn with_exec(mut self, exec: ExecCfg) -> Planner {
+        self.exec = exec;
+        self
+    }
+
+    pub fn exec(&self) -> ExecCfg {
+        self.exec
     }
 
     pub fn model(&self) -> &str {
@@ -146,6 +168,14 @@ impl Planner {
     /// Resolve one multi-constraint planning query.  Pure function of the
     /// artifacts: no calibration, measurement, or IO happens here.
     pub fn solve(&self, req: &PlanRequest) -> Result<Plan> {
+        self.solve_on(req, &ExecPool::new(self.exec))
+    }
+
+    /// [`Planner::solve`] on an explicit pool.  Batch layers (sweep,
+    /// frontier) pass [`ExecPool::sequential`] here: they already fan out
+    /// across cells, and nesting a second full-width pool per solve would
+    /// oversubscribe the cores without buying throughput.
+    fn solve_on(&self, req: &PlanRequest, pool: &ExecPool) -> Result<Plan> {
         let family = self.family(req.objective);
         let calib = &self.calibrated.calibration;
         let qlayers = &self.partitioned.qlayers;
@@ -177,7 +207,7 @@ impl Planner {
         let tau = req.tau.unwrap_or_else(|| self.tau_max(req.objective));
         let memory = req.memory_cap.map(|cap| (qlayers.as_slice(), cap));
         let config =
-            select_config_constrained(family, req.strategy, calib, tau, memory, req.seed)?;
+            select_config_constrained(family, req.strategy, calib, tau, memory, req.seed, pool)?;
         let gain = family.gain_of(&config)?;
         let predicted_mse = calib.loss_mse(&config);
         let budget = calib.budget(tau);
@@ -211,9 +241,11 @@ impl Planner {
 
     /// Precompute the Pareto frontier of the tau -> gain tradeoff for one
     /// (objective, strategy): the paper tau grid plus an even cover of
-    /// [0, tau_max], bisection-refined at every gain step.  `frontier.at(tau)`
-    /// then answers any threshold in O(log n) and agrees with a pointwise
-    /// IP solve (asserted in tests).
+    /// [0, tau_max], bisection-refined at every gain step.  The per-tau IP
+    /// solves run in batches on this planner's pool (deterministic: the
+    /// batch composition never depends on the thread count).
+    /// `frontier.at(tau)` then answers any threshold in O(log n) and
+    /// agrees with a pointwise IP solve (asserted in tests).
     pub fn frontier(&self, objective: Objective, strategy: Strategy) -> Result<Frontier> {
         let tau_max = self.tau_max(objective);
         let mut grid: Vec<f64> =
@@ -229,9 +261,12 @@ impl Planner {
             self.calibrated.calibration.eg2,
             tau_max,
             &grid,
+            &ExecPool::new(self.exec),
             |tau| {
-                let plan = self.solve(
+                // Sequential inner solve: the sweep itself is the fan-out.
+                let plan = self.solve_on(
                     &PlanRequest::new(objective).with_strategy(strategy).with_loss_budget(tau),
+                    &ExecPool::sequential(),
                 )?;
                 Ok((plan.predicted_mse, plan.gain, plan.config))
             },
@@ -239,7 +274,8 @@ impl Planner {
     }
 
     /// Batch-solve a full grid; plans come back in (objective, strategy,
-    /// tau) iteration order.
+    /// tau) iteration order, each cell solved independently across this
+    /// planner's pool.
     pub fn sweep(
         &self,
         objectives: &[Objective],
@@ -247,21 +283,25 @@ impl Planner {
         taus: &[f64],
         seed: u64,
     ) -> Result<Vec<Plan>> {
-        let mut plans =
+        let mut cells =
             Vec::with_capacity(objectives.len() * strategies.len() * taus.len());
         for &objective in objectives {
             for &strategy in strategies {
                 for &tau in taus {
-                    plans.push(self.solve(
-                        &PlanRequest::new(objective)
+                    cells.push(
+                        PlanRequest::new(objective)
                             .with_strategy(strategy)
                             .with_loss_budget(tau)
                             .with_seed(seed),
-                    )?);
+                    );
                 }
             }
         }
-        Ok(plans)
+        // Each cell is an independent pure solve (run sequentially inside:
+        // the grid is the fan-out); batching keeps request order, so
+        // output is identical to the sequential loop.
+        let pool = ExecPool::new(self.exec);
+        pool.try_par_map(cells.len(), |i| self.solve_on(&cells[i], &ExecPool::sequential()))
     }
 }
 

@@ -18,6 +18,7 @@ use super::frontier::Frontier;
 use super::planner::Planner;
 use super::request::PlanRequest;
 use crate::coordinator::Strategy;
+use crate::exec::ExecPool;
 use crate::metrics::Objective;
 use crate::util::Json;
 use anyhow::{anyhow, bail, Result};
@@ -270,39 +271,13 @@ impl PlanService {
         ]))
     }
 
-    /// Answer a batch across `threads` worker threads; results keep request
-    /// order.  Requests are answered independently (the batch always runs
-    /// to completion); if any failed, the earliest failure in request order
-    /// is returned after the batch drains.
-    pub fn serve_batch(&self, reqs: &[ServeRequest], threads: usize) -> Result<Vec<Json>> {
-        let n = reqs.len();
-        if n == 0 {
-            return Ok(Vec::new());
-        }
-        let workers = threads.max(1).min(n);
-        let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<Result<Json>>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let answer = self.answer(&reqs[i]);
-                    *slots[i].lock().expect("result slot lock poisoned") = Some(answer);
-                });
-            }
-        });
-        slots
-            .into_iter()
-            .enumerate()
-            .map(|(i, slot)| {
-                slot.into_inner()
-                    .expect("result slot lock poisoned")
-                    .unwrap_or_else(|| Err(anyhow!("request {i} was never answered")))
-            })
-            .collect()
+    /// Answer a batch across `pool`'s workers; results keep request order.
+    /// Requests are answered independently (the batch always runs to
+    /// completion); if any failed, the earliest failure in request order is
+    /// returned after the batch drains — exactly [`ExecPool::try_par_map`]'s
+    /// semantics, so the surfaced answer set never depends on timing.
+    pub fn serve_batch(&self, reqs: &[ServeRequest], pool: &ExecPool) -> Result<Vec<Json>> {
+        pool.try_par_map(reqs.len(), |i| self.answer(&reqs[i]))
     }
 }
 
@@ -518,7 +493,9 @@ mod tests {
             .collect();
         let sequential: Vec<Json> =
             reqs.iter().map(|r| svc.answer(r).unwrap()).collect();
-        let parallel = svc.serve_batch(&reqs, 4).unwrap();
+        let parallel = svc
+            .serve_batch(&reqs, &ExecPool::new(crate::exec::ExecCfg::new(4)))
+            .unwrap();
         assert_eq!(parallel, sequential);
         assert_eq!(svc.frontier_solves(), 1, "frontier must be swept once");
     }

@@ -1,0 +1,194 @@
+//! Explicit stage declarations for the Engine's artifact pipeline.
+//!
+//! The paper's Algorithm 1 is a dataflow — partition (Algorithm 2) ->
+//! sensitivity calibration (§2.2) -> per-group time-gain measurement
+//! (§2.3.1) — and since 0.5 each arrow is a [`Stage`] value: a struct
+//! holding the stage's declared inputs, producing its artifact through
+//! [`Stage::run`] on an [`ExecPool`].  The [`StageIo`] constant names the
+//! dataflow edges (what the stage consumes and what it produces) so the
+//! wiring is inspectable — `Engine` drives the stages and keeps the
+//! cache/counter bookkeeping around them:
+//!
+//! ```text
+//!   graph ──> PartitionStage ──> Partitioned ─┬─> MeasureStage ──> Measured
+//!   menu  ──────^                             │       ^── device, seed, reps
+//!   calib set ──> CalibrateStage ─> Calibrated│
+//!                     (per-sample fan-out)    │  (per-(group, config) fan-out)
+//!                                             v
+//!                              Planner::new(Partitioned, Calibrated, Measured)
+//! ```
+//!
+//! Stages fan their inner loops out over the pool; every stage obeys the
+//! exec layer's determinism contract (bit-identical artifacts at any
+//! thread count), property-tested in `tests/parallel.rs`.
+
+use super::artifact::{Calibrated, Measured, Partitioned};
+use crate::backend::DeviceProfile;
+use crate::exec::ExecPool;
+use crate::graph::partition::partition;
+use crate::graph::Graph;
+use crate::model::QLayer;
+use crate::numerics::Format;
+use crate::runtime::ModelRuntime;
+use crate::sensitivity::{calibrate, Calibration};
+use crate::timing::{measure_groups, SimTtft};
+use anyhow::Result;
+
+/// Declared dataflow of one stage: its name plus the names of the inputs
+/// it consumes and the artifacts it produces.
+#[derive(Clone, Copy, Debug)]
+pub struct StageIo {
+    pub name: &'static str,
+    pub inputs: &'static [&'static str],
+    pub outputs: &'static [&'static str],
+}
+
+/// One Engine stage: inputs are held by the stage value, the output is the
+/// stage artifact.  `run` may fan out over the pool but must return
+/// bit-identical output at any thread count.
+pub trait Stage {
+    type Output;
+    /// The stage's declared dataflow edges.
+    const IO: StageIo;
+    fn run(&self, pool: &ExecPool) -> Result<Self::Output>;
+}
+
+/// Stage 1 — Algorithm 2: partition the model DAG into sequential
+/// sub-graphs and bind the (device-restricted) format menu.
+pub struct PartitionStage<'a> {
+    pub model: &'a str,
+    pub graph: &'a Graph,
+    pub qlayers: &'a [QLayer],
+    pub menu: &'a [Format],
+}
+
+impl Stage for PartitionStage<'_> {
+    type Output = Partitioned;
+    const IO: StageIo = StageIo {
+        name: "partition",
+        inputs: &["graph", "qlayers", "menu"],
+        outputs: &["partitioned"],
+    };
+
+    fn run(&self, _pool: &ExecPool) -> Result<Partitioned> {
+        // The SESE walk is a cheap sequential graph pass; nothing to fan out.
+        let part = partition(self.graph)?;
+        Ok(Partitioned {
+            model: self.model.to_string(),
+            formats: self.menu.to_vec(),
+            qlayers: self.qlayers.to_vec(),
+            partition: part,
+        })
+    }
+}
+
+/// Where a calibration comes from: injected (synthetic models, tests) or
+/// computed by the AOT sensitivity executable over the calibration set.
+pub enum CalibSource<'a> {
+    Injected(&'a Calibration),
+    Runtime { mr: &'a ModelRuntime, samples: &'a [Vec<i32>] },
+}
+
+/// Stage 2 — sensitivity calibration (eq. 21): per-layer s_l and E[g^2],
+/// averaged over the calibration samples (fanned out per sample).
+pub struct CalibrateStage<'a> {
+    pub model: &'a str,
+    pub source: CalibSource<'a>,
+}
+
+impl Stage for CalibrateStage<'_> {
+    type Output = Calibrated;
+    const IO: StageIo = StageIo {
+        name: "calibrate",
+        inputs: &["calibration set", "sensitivity executable"],
+        outputs: &["calibrated"],
+    };
+
+    fn run(&self, pool: &ExecPool) -> Result<Calibrated> {
+        let calibration = match &self.source {
+            CalibSource::Injected(c) => (*c).clone(),
+            CalibSource::Runtime { mr, samples } => calibrate(mr, samples, pool)?,
+        };
+        Ok(Calibrated { model: self.model.to_string(), calibration })
+    }
+}
+
+/// Stage 3 — per-group time-gain measurement (§2.3.1) on the device's
+/// simulator, fanned out per (group, configuration) with per-measurement
+/// noise streams.
+pub struct MeasureStage<'a> {
+    pub model: &'a str,
+    pub graph: &'a Graph,
+    pub partitioned: &'a Partitioned,
+    pub device: &'a DeviceProfile,
+    pub seed: u64,
+    pub reps: usize,
+}
+
+impl Stage for MeasureStage<'_> {
+    type Output = Measured;
+    const IO: StageIo = StageIo {
+        name: "measure",
+        inputs: &["graph", "partitioned", "device", "seed", "reps"],
+        outputs: &["measured"],
+    };
+
+    fn run(&self, pool: &ExecPool) -> Result<Measured> {
+        let src = SimTtft::for_device(self.graph, self.device, self.seed, self.reps);
+        let tm =
+            measure_groups(&src, &self.partitioned.partition, &self.partitioned.formats, pool)?;
+        Ok(Measured {
+            model: self.model.to_string(),
+            formats: self.partitioned.formats.clone(),
+            seed: self.seed,
+            reps: self.reps,
+            device: self.device.clone(),
+            measurements: tm,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecCfg;
+    use crate::plan::demo::demo_model;
+
+    #[test]
+    fn stage_io_declarations_cover_the_dataflow() {
+        assert_eq!(PartitionStage::IO.name, "partition");
+        assert!(PartitionStage::IO.inputs.contains(&"graph"));
+        assert_eq!(PartitionStage::IO.outputs, &["partitioned"]);
+        assert_eq!(CalibrateStage::IO.name, "calibrate");
+        assert_eq!(MeasureStage::IO.name, "measure");
+        assert!(MeasureStage::IO.inputs.contains(&"partitioned"));
+    }
+
+    #[test]
+    fn stages_compose_into_planner_inputs() {
+        let (graph, qlayers, calibration) = demo_model(1, 3);
+        let pool = ExecPool::new(ExecCfg::new(2));
+        let menu = crate::numerics::PAPER_FORMATS.to_vec();
+        let partitioned =
+            PartitionStage { model: "demo", graph: &graph, qlayers: &qlayers, menu: &menu }
+                .run(&pool)
+                .unwrap();
+        let calibrated =
+            CalibrateStage { model: "demo", source: CalibSource::Injected(&calibration) }
+                .run(&pool)
+                .unwrap();
+        let device = DeviceProfile::gaudi2();
+        let measured = MeasureStage {
+            model: "demo",
+            graph: &graph,
+            partitioned: &partitioned,
+            device: &device,
+            seed: 1,
+            reps: 2,
+        }
+        .run(&pool)
+        .unwrap();
+        let planner = crate::plan::Planner::new(partitioned, calibrated, measured).unwrap();
+        assert_eq!(planner.model(), "demo");
+    }
+}

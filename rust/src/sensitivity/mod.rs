@@ -9,6 +9,7 @@
 
 pub mod validate;
 
+use crate::exec::ExecPool;
 use crate::gaudisim::MpConfig;
 use crate::numerics::Format;
 use crate::runtime::ModelRuntime;
@@ -26,22 +27,27 @@ pub struct Calibration {
     pub n_samples: usize,
 }
 
-/// Run the sensitivity executable over `samples` calibration sequences.
-pub fn calibrate(mr: &ModelRuntime, calib: &[Vec<i32>]) -> Result<Calibration> {
+/// Run the sensitivity executable over the calibration sequences, one
+/// independent pass per sample fanned out across `pool`.  Per-sample
+/// results come back in sample order and are averaged sequentially, so the
+/// calibration is bit-identical to a plain loop at any thread count (the
+/// exec layer's determinism contract).
+pub fn calibrate(mr: &ModelRuntime, calib: &[Vec<i32>], pool: &ExecPool) -> Result<Calibration> {
     if calib.is_empty() {
         bail!("empty calibration set");
     }
     let nq = mr.info.n_qlayers;
+    let samples: Vec<(f32, Vec<f32>)> =
+        pool.try_par_map(calib.len(), |i| mr.sensitivity(&calib[i]))?;
     let mut s = vec![0.0f64; nq];
     let mut g2 = 0.0f64;
     let mut g1 = 0.0f64;
-    for tokens in calib {
-        let (g, sl) = mr.sensitivity(tokens)?;
-        for (acc, x) in s.iter_mut().zip(&sl) {
+    for (g, sl) in &samples {
+        for (acc, x) in s.iter_mut().zip(sl) {
             *acc += *x as f64;
         }
-        g2 += (g as f64) * (g as f64);
-        g1 += g as f64;
+        g2 += (*g as f64) * (*g as f64);
+        g1 += *g as f64;
     }
     let r = calib.len() as f64;
     for x in s.iter_mut() {

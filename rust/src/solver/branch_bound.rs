@@ -1,5 +1,6 @@
-//! Exact MCKP via depth-first branch & bound with LP-relaxation pruning,
-//! over every cost dimension.
+//! Exact MCKP via branch & bound with LP-relaxation pruning over every
+//! cost dimension — depth-first sequentially, or fanned out over a
+//! deterministic subproblem queue (`solve_with`).
 //!
 //! Groups are branched in descending "spread" (max-min gain) order so strong
 //! decisions come first; at each node the suffix is pruned on (a) per-dim
@@ -16,46 +17,80 @@
 //! Multi-constraint instances may have NO feasible assignment even when
 //! each dimension is satisfiable alone; in that case the search proves it
 //! and the min-primary-cost fallback is returned with `feasible = false`.
+//!
+//! ## Parallel determinism
+//!
+//! `solve_with` must return BIT-IDENTICAL output at any thread count (the
+//! exec layer's contract), which rules out the classic racy
+//! shared-incumbent design.  Instead:
+//!
+//! * Large instances decompose into a fixed subproblem tree (choice
+//!   prefixes up to a split depth) that is a pure function of the instance
+//!   — never of the thread count.  Subproblems are drained through an
+//!   [`crate::exec::WorkQueue`] (workers expand prefix nodes and push the
+//!   children, an irregular load).
+//! * Each leaf subproblem is solved by the same DFS used sequentially,
+//!   with its local incumbent starting at the (deterministic) greedy gain
+//!   — so every report is a pure function of `(instance, subproblem)`.
+//! * Reports are reduced in subproblem (DFS preorder) key order with
+//!   strict-improvement acceptance, reproducing the sequential tie-break.
+//! * A shared atomic incumbent (the "floor": the best gain reported so
+//!   far, any order) lets workers skip whole subproblems — but only when
+//!   the subproblem's root LP bound sits a one-sided safety margin BELOW
+//!   the floor (2*EPS plus a relative term absorbing summation noise).
+//!   A skipped subproblem's best is then strictly below the final reduced
+//!   maximum, so skipping can never change the argmax: the floor
+//!   accelerates without entering the result.
+//!
+//! Small instances route to the sequential DFS at every thread count, so
+//! the "same instance -> same code path" invariant holds there too.
 
 use super::greedy;
 use super::hull::HullPoint;
 use super::lp_relax;
 use super::problem::{Mckp, Solution};
 use super::EPS;
+use crate::exec::{ExecPool, WorkQueue};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 const NODE_CAP: usize = 5_000_000;
+/// Instances with fewer total assignments than this solve sequentially at
+/// any thread count (subproblem bookkeeping would dominate the microsecond
+/// serving-path solves).
+const PAR_MIN_ASSIGNMENTS: usize = 1 << 20;
+/// Decomposition targets at least this many leaf subproblems...
+const SPLIT_TARGET: usize = 128;
+/// ...expanding choice prefixes at most this deep.
+const MAX_SPLIT_DEPTH: usize = 4;
 
-struct Ctx<'a> {
+/// Immutable search context shared by every subproblem.
+struct Shared<'a> {
     p: &'a Mckp,
     order: Vec<usize>,
     /// hulls[d][j] = dim-d efficient frontier of group j (original index).
     hulls: Vec<Vec<Vec<HullPoint>>>,
     /// suffix_min[d][i] = min dim-d cost of groups order[i..].
     suffix_min: Vec<Vec<f64>>,
-    best: Solution,
-    /// Gain of the best FEASIBLE solution found (-inf before the first).
-    best_gain: f64,
-    nodes: usize,
+    /// Per-position choice visit order (descending gain), shared so the
+    /// prefix expansion and the DFS branch identically.
+    idxs: Vec<Vec<usize>>,
 }
 
-pub fn solve(p: &Mckp) -> Solution {
-    // Incumbent: greedy (always produces min-cost fallback at worst).
-    let incumbent = greedy::solve(p);
-    if !incumbent.feasible {
-        if p.is_single() {
-            // Even all-min-cost exceeds the budget: nothing better exists.
-            return incumbent;
-        }
-        // Multi-constraint: per-dim independent minima prove infeasibility;
-        // otherwise a feasible assignment may still exist — search for it.
-        for d in 0..p.n_dims() {
-            if p.independent_min_cost(d) > p.budgets[d] + EPS {
-                return incumbent;
-            }
-        }
-    }
-    let best_gain = if incumbent.feasible { incumbent.gain } else { f64::NEG_INFINITY };
+/// Mutable state of one DFS run (one subproblem, or the whole tree).
+struct Search {
+    /// Strict-improvement threshold: leaves must exceed this to be taken.
+    best_gain: f64,
+    /// Accepted leaf in branch order (un-permuted lazily at the end).
+    best: Option<Vec<usize>>,
+    nodes: usize,
+    /// Node budget of THIS run: the whole of NODE_CAP sequentially, or a
+    /// proportional share per subproblem when decomposed — so the total
+    /// worst-case work stays ~NODE_CAP either way (and per-run caps are
+    /// pure functions of the instance, keeping truncation deterministic).
+    cap: usize,
+}
 
+fn build_shared(p: &Mckp) -> Shared<'_> {
     let hulls: Vec<Vec<Vec<HullPoint>>> =
         (0..p.n_dims()).map(|d| lp_relax::hulls_for(p, d)).collect();
     // Branch order: descending gain spread.
@@ -75,31 +110,249 @@ pub fn solve(p: &Mckp) -> Solution {
             suffix_min[d][i] = suffix_min[d][i + 1] + mc;
         }
     }
-
-    let mut ctx = Ctx {
-        p,
-        hulls,
-        suffix_min,
-        best: incumbent,
-        best_gain,
-        nodes: 0,
-        order,
-    };
-    let mut choice = vec![0usize; n];
-    let mut cost = vec![0.0f64; p.n_dims()];
-    dfs(&mut ctx, 0, 0.0, &mut cost, &mut choice);
-    ctx.best
+    // Visit choices in descending gain (find good incumbents early).
+    let idxs: Vec<Vec<usize>> = order
+        .iter()
+        .map(|&j| {
+            let mut ix: Vec<usize> = (0..p.gains[j].len()).collect();
+            ix.sort_by(|&a, &b| p.gains[j][b].partial_cmp(&p.gains[j][a]).unwrap());
+            ix
+        })
+        .collect();
+    Shared { p, order, hulls, suffix_min, idxs }
 }
 
-fn suffix_lp_bound(ctx: &Ctx, d: usize, pos: usize, remaining_budget: f64) -> f64 {
+/// The greedy incumbent plus the quick infeasibility checks shared by both
+/// entry points.  `Err(solution)` means "answer immediately".
+fn incumbent(p: &Mckp) -> Result<Solution, Solution> {
+    // Incumbent: greedy (always produces min-cost fallback at worst).
+    let incumbent = greedy::solve(p);
+    if !incumbent.feasible {
+        if p.is_single() {
+            // Even all-min-cost exceeds the budget: nothing better exists.
+            return Err(incumbent);
+        }
+        // Multi-constraint: per-dim independent minima prove infeasibility;
+        // otherwise a feasible assignment may still exist — search for it.
+        for d in 0..p.n_dims() {
+            if p.independent_min_cost(d) > p.budgets[d] + EPS {
+                return Err(incumbent);
+            }
+        }
+    }
+    Ok(incumbent)
+}
+
+pub fn solve(p: &Mckp) -> Solution {
+    solve_with(p, &ExecPool::sequential())
+}
+
+/// Solve across `pool`; output is bit-identical at any thread count.
+pub fn solve_with(p: &Mckp, pool: &ExecPool) -> Solution {
+    let inc = match incumbent(p) {
+        Ok(s) => s,
+        Err(s) => return s,
+    };
+    let sh = build_shared(p);
+    // Route purely by instance size: small instances take the sequential
+    // DFS even on a wide pool, so thread count never selects the code path.
+    let assignments = p
+        .gains
+        .iter()
+        .fold(1usize, |acc, g| acc.saturating_mul(g.len()));
+    if p.n_groups() < MAX_SPLIT_DEPTH || assignments < PAR_MIN_ASSIGNMENTS {
+        return solve_sequential(&sh, inc);
+    }
+    solve_decomposed(&sh, inc, pool)
+}
+
+fn solve_sequential(sh: &Shared, inc: Solution) -> Solution {
+    let inc_gain = if inc.feasible { inc.gain } else { f64::NEG_INFINITY };
+    let mut st = Search { best_gain: inc_gain, best: None, nodes: 0, cap: NODE_CAP };
+    let mut choice = vec![0usize; sh.p.n_groups()];
+    let mut cost = vec![0.0f64; sh.p.n_dims()];
+    dfs(sh, &mut st, 0, 0.0, &mut cost, &mut choice);
+    finish(sh, st, inc)
+}
+
+/// Un-permute an accepted branch-order choice vector into a Solution.
+fn materialize(sh: &Shared, branch_choice: &[usize]) -> Solution {
+    let mut c = vec![0usize; branch_choice.len()];
+    for (i, &j) in sh.order.iter().enumerate() {
+        c[j] = branch_choice[i];
+    }
+    sh.p.solution_from(c)
+}
+
+fn finish(sh: &Shared, st: Search, inc: Solution) -> Solution {
+    match st.best {
+        Some(bc) => materialize(sh, &bc),
+        None => inc,
+    }
+}
+
+/// One subproblem: a choice prefix over `sh.order[..pos]`.
+struct Sub {
+    /// DFS-preorder key: the rank of each prefix choice in its group's
+    /// visit order.  Lexicographic key order == sequential DFS order.
+    key: Vec<u16>,
+    pos: usize,
+    gain: f64,
+    cost: Vec<f64>,
+    choice: Vec<usize>,
+}
+
+/// Monotone max on an f64 stored as bits (gains only grow, so a CAS loop
+/// on the decoded value suffices; NEG_INFINITY round-trips fine).
+fn atomic_max_f64(a: &AtomicU64, v: f64) {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        if f64::from_bits(cur) >= v {
+            return;
+        }
+        match a.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// Hard ceiling on the prefix-expansion product, bounding both the
+/// subproblem count and how thin the per-subproblem node budget gets.
+const MAX_SUBPROBLEMS: usize = 4096;
+
+/// Depth (pure in the instance) to which choice prefixes are expanded,
+/// and the resulting prefix product (an upper bound on the subproblem
+/// count, used to share NODE_CAP proportionally).
+fn split_depth(sh: &Shared) -> (usize, usize) {
+    let mut depth = 0usize;
+    let mut count = 1usize;
+    while depth < sh.order.len() && depth < MAX_SPLIT_DEPTH && count < SPLIT_TARGET {
+        let next = count.saturating_mul(sh.p.gains[sh.order[depth]].len());
+        if next > MAX_SUBPROBLEMS {
+            break;
+        }
+        count = next;
+        depth += 1;
+    }
+    (depth, count)
+}
+
+/// The tightest single-dimension LP bound at a subproblem root (same
+/// arithmetic the DFS uses for its optimality prune).
+fn root_bound(sh: &Shared, sub: &Sub) -> f64 {
+    let mut bound = f64::INFINITY;
+    for d in 0..sh.p.n_dims() {
+        let b = sub.gain + suffix_lp_bound(sh, d, sub.pos, sh.p.budgets[d] - sub.cost[d]);
+        bound = bound.min(b);
+    }
+    bound
+}
+
+fn solve_decomposed(sh: &Shared, inc: Solution, pool: &ExecPool) -> Solution {
+    let inc_gain = if inc.feasible { inc.gain } else { f64::NEG_INFINITY };
+    let (depth, prefix_product) = split_depth(sh);
+    // Share the sequential node budget across the (at most prefix_product)
+    // leaf subproblems, so decomposition cannot multiply the worst-case
+    // work.  The floor keeps tiny shares from starving well-pruned
+    // subtrees; both terms are pure in the instance.
+    let sub_cap = (NODE_CAP / prefix_product.max(1)).max(1024);
+    // Shared incumbent floor: best REPORTED gain so far (any completion
+    // order).  Only ever used to skip subproblems provably strictly below
+    // the final maximum — see the module docs.
+    let floor = AtomicU64::new(inc_gain.to_bits());
+    // Skip margin: 2*EPS for the bound semantics plus a relative term
+    // absorbing float summation noise (a subtree's re-summed gain can sit
+    // a few ulps-per-term ABOVE its accumulated root bound; the skip must
+    // stay strictly one-sided for the floor to be result-invariant).
+    let gain_mag: f64 = sh
+        .p
+        .gains
+        .iter()
+        .map(|g| g.iter().fold(0.0f64, |m, x| m.max(x.abs())))
+        .sum();
+    let skip_margin = 2.0 * EPS + 1e-9 * (1.0 + gain_mag);
+
+    let root = Sub {
+        key: Vec::new(),
+        pos: 0,
+        gain: 0.0,
+        cost: vec![0.0f64; sh.p.n_dims()],
+        choice: vec![0usize; sh.p.n_groups()],
+    };
+    let reports: Vec<(Vec<u16>, Solution)> =
+        WorkQueue::run(pool, vec![root], |sub: Sub, q: &WorkQueue<Sub>| {
+            if sub.pos < depth {
+                // Prefix node: expand children in DFS choice order.
+                let j = sh.order[sub.pos];
+                'children: for (rank, &i) in sh.idxs[sub.pos].iter().enumerate() {
+                    for d in 0..sh.p.n_dims() {
+                        let c = sub.cost[d] + sh.p.costs[d].table[j][i];
+                        if c + sh.suffix_min[d][sub.pos + 1] > sh.p.budgets[d] + EPS {
+                            continue 'children;
+                        }
+                    }
+                    let mut key = sub.key.clone();
+                    key.push(rank as u16);
+                    let mut cost = sub.cost.clone();
+                    for (d, c) in cost.iter_mut().enumerate() {
+                        *c += sh.p.costs[d].table[j][i];
+                    }
+                    let mut choice = sub.choice.clone();
+                    choice[sub.pos] = i;
+                    q.push(Sub {
+                        key,
+                        pos: sub.pos + 1,
+                        gain: sub.gain + sh.p.gains[j][i],
+                        cost,
+                        choice,
+                    });
+                }
+                return None;
+            }
+            // Leaf subproblem.  Skip when provably strictly below the final
+            // maximum (the one-sided margin means a skipped subproblem can
+            // never tie the reduced argmax, so timing cannot leak in).
+            let fl = f64::from_bits(floor.load(Ordering::Relaxed));
+            if root_bound(sh, &sub) <= fl - skip_margin {
+                return None;
+            }
+            let mut st = Search { best_gain: inc_gain, best: None, nodes: 0, cap: sub_cap };
+            let mut cost = sub.cost.clone();
+            let mut choice = sub.choice.clone();
+            dfs(sh, &mut st, sub.pos, sub.gain, &mut cost, &mut choice);
+            let found = st.best.as_deref().map(|bc| materialize(sh, bc));
+            match found {
+                Some(sol) => {
+                    atomic_max_f64(&floor, sol.gain);
+                    Some((sub.key, sol))
+                }
+                None => None,
+            }
+        });
+
+    // Ordered reduction: strict improvement in DFS-preorder key order
+    // reproduces the sequential first-found tie-break.
+    let mut best = inc;
+    let mut best_gain = inc_gain;
+    for (_, sol) in reports {
+        if sol.gain > best_gain {
+            best_gain = sol.gain;
+            best = sol;
+        }
+    }
+    best
+}
+
+fn suffix_lp_bound(sh: &Shared, d: usize, pos: usize, remaining_budget: f64) -> f64 {
     // LP relaxation of dim d over groups order[pos..] with the remaining
     // budget: start at min-cost hull points, apply increments in efficiency
     // order.
     let mut base_gain = 0.0;
     let mut base_cost = 0.0;
     let mut incs: Vec<(f64, f64)> = Vec::new(); // (efficiency-ordered dgain, dcost)
-    for i in pos..ctx.order.len() {
-        let h = &ctx.hulls[d][ctx.order[i]];
+    for i in pos..sh.order.len() {
+        let h = &sh.hulls[d][sh.order[i]];
         base_gain += h[0].gain;
         base_cost += h[0].cost;
         for t in 1..h.len() {
@@ -128,55 +381,57 @@ fn suffix_lp_bound(ctx: &Ctx, d: usize, pos: usize, remaining_budget: f64) -> f6
     bound
 }
 
-fn dfs(ctx: &mut Ctx, pos: usize, gain: f64, cost: &mut Vec<f64>, choice: &mut Vec<usize>) {
-    ctx.nodes += 1;
-    if ctx.nodes > NODE_CAP {
+fn dfs(
+    sh: &Shared,
+    st: &mut Search,
+    pos: usize,
+    gain: f64,
+    cost: &mut Vec<f64>,
+    choice: &mut Vec<usize>,
+) {
+    st.nodes += 1;
+    if st.nodes > st.cap {
         return;
     }
-    if pos == ctx.order.len() {
-        if gain > ctx.best_gain + EPS && ctx.p.fits(cost) {
-            // Un-permute the choice vector.
-            let mut c = vec![0usize; choice.len()];
-            for (i, &j) in ctx.order.iter().enumerate() {
-                c[j] = choice[i];
-            }
-            ctx.best = ctx.p.solution_from(c);
-            ctx.best_gain = ctx.best.gain;
+    if pos == sh.order.len() {
+        // Strict acceptance: the first leaf attaining a new maximum wins,
+        // so the accepted leaf is the subtree argmax independent of any
+        // floor-based skipping around this subtree.
+        if gain > st.best_gain && sh.p.fits(cost) {
+            st.best_gain = gain;
+            st.best = Some(choice.clone());
         }
         return;
     }
     // Feasibility prune (every dimension).
-    for d in 0..ctx.p.n_dims() {
-        if cost[d] + ctx.suffix_min[d][pos] > ctx.p.budgets[d] + EPS {
+    for d in 0..sh.p.n_dims() {
+        if cost[d] + sh.suffix_min[d][pos] > sh.p.budgets[d] + EPS {
             return;
         }
     }
     // Optimality prune: each single-dimension LP relaxation upper-bounds
     // the multi-constraint optimum, so the FIRST one at or below the
-    // incumbent already proves the subtree hopeless — stop bounding there.
-    for d in 0..ctx.p.n_dims() {
-        let bound = gain + suffix_lp_bound(ctx, d, pos, ctx.p.budgets[d] - cost[d]);
-        if bound <= ctx.best_gain + EPS {
+    // incumbent already proves the subtree cannot strictly improve.
+    for d in 0..sh.p.n_dims() {
+        let bound = gain + suffix_lp_bound(sh, d, pos, sh.p.budgets[d] - cost[d]);
+        if bound <= st.best_gain {
             return;
         }
     }
-    let j = ctx.order[pos];
-    // Visit choices in descending gain (find good incumbents early).
-    let mut idxs: Vec<usize> = (0..ctx.p.gains[j].len()).collect();
-    idxs.sort_by(|&a, &b| ctx.p.gains[j][b].partial_cmp(&ctx.p.gains[j][a]).unwrap());
-    'choices: for i in idxs {
-        for d in 0..ctx.p.n_dims() {
-            if cost[d] + ctx.p.costs[d].table[j][i] > ctx.p.budgets[d] + EPS {
+    let j = sh.order[pos];
+    'choices: for &i in &sh.idxs[pos] {
+        for d in 0..sh.p.n_dims() {
+            if cost[d] + sh.p.costs[d].table[j][i] > sh.p.budgets[d] + EPS {
                 continue 'choices;
             }
         }
         for (d, c) in cost.iter_mut().enumerate() {
-            *c += ctx.p.costs[d].table[j][i];
+            *c += sh.p.costs[d].table[j][i];
         }
         choice[pos] = i;
-        dfs(ctx, pos + 1, gain + ctx.p.gains[j][i], cost, choice);
+        dfs(sh, st, pos + 1, gain + sh.p.gains[j][i], cost, choice);
         for (d, c) in cost.iter_mut().enumerate() {
-            *c -= ctx.p.costs[d].table[j][i];
+            *c -= sh.p.costs[d].table[j][i];
         }
     }
 }
@@ -184,6 +439,7 @@ fn dfs(ctx: &mut Ctx, pos: usize, gain: f64, cost: &mut Vec<f64>, choice: &mut V
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::ExecCfg;
     use crate::solver::problem::gen::{random, random_multi};
     use crate::solver::CostDim;
     use crate::util::Rng;
@@ -224,6 +480,45 @@ mod tests {
                     bb.gain,
                     exact.gain
                 );
+                assert!(p.fits(&bb.costs), "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_solve_is_bit_identical_to_sequential() {
+        // The decomposed path must reproduce the single-thread result
+        // EXACTLY — gains, costs, and the chosen assignment.
+        let mut rng = Rng::new(0xDE7E12);
+        let pools = [
+            ExecPool::sequential(),
+            ExecPool::new(ExecCfg::new(2)),
+            ExecPool::new(ExecCfg::new(8)),
+        ];
+        for trial in 0..40 {
+            let dims = 1 + (trial % 3 == 0) as usize;
+            // Big enough to cross the decomposition threshold.
+            let p = random_multi(&mut rng, 10, 8, dims);
+            let base = solve_with(&p, &pools[0]);
+            for pool in &pools[1..] {
+                let par = solve_with(&p, pool);
+                assert_eq!(base, par, "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_solve_stays_exact() {
+        // The decomposed path is still an exact solver.
+        let mut rng = Rng::new(0xBEEF);
+        let pool = ExecPool::new(ExecCfg::new(4));
+        for trial in 0..20 {
+            let p = random_multi(&mut rng, 7, 5, 2);
+            let exact = p.brute_force();
+            let bb = solve_with(&p, &pool);
+            assert_eq!(bb.feasible, exact.feasible, "trial {trial}");
+            if exact.feasible {
+                assert!((bb.gain - exact.gain).abs() < 1e-9, "trial {trial}");
                 assert!(p.fits(&bb.costs), "trial {trial}");
             }
         }

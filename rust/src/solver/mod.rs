@@ -9,7 +9,9 @@
 //! (MCKP); the planning layer adds a second dimension (weight bytes) for
 //! memory-capped requests.  Four solvers:
 //!   * `branch_bound` — exact, LP-relaxation-bounded DFS, prunes on every
-//!     cost dimension (the default).
+//!     cost dimension (the default); large instances fan out over a
+//!     deterministic subproblem queue (`solve_with`) with bit-identical
+//!     output at any thread count.
 //!   * `dp`           — scaled dynamic program over the primary dimension
 //!     (near-exact, linear-ish; single-constraint fast path).
 //!   * `greedy`       — convex-hull marginal-efficiency heuristic; upgrades
@@ -38,4 +40,12 @@ pub const EPS: f64 = 1e-12;
 /// budget (never observed on paper-scale instances, but bounded by design).
 pub fn solve(p: &Mckp) -> Solution {
     branch_bound::solve(p)
+}
+
+/// Like [`solve`], fanned out over `pool` for large instances.  Output is
+/// bit-identical to `solve` at any thread count (the exec layer's
+/// determinism contract; see `branch_bound`'s module docs for the proof
+/// sketch).
+pub fn solve_with(p: &Mckp, pool: &crate::exec::ExecPool) -> Solution {
+    branch_bound::solve_with(p, pool)
 }

@@ -9,28 +9,45 @@
 //! (primary; see gaudisim) or wall-clock timing of the real compiled HLO on
 //! the CPU PJRT client (secondary — proves the harness drives real
 //! executables; CPU fake-quant adds ops, so its gains are not Gaudi-shaped).
+//!
+//! Measurement enumeration fans out across an [`ExecPool`]: every
+//! measurement in a pass is assigned a stable stream index in sequential
+//! enumeration order, sources draw their noise from
+//! [`Rng::stream`]`(seed, index)`, and results are reduced in index order —
+//! so the produced gain tables are bit-identical at any thread count.
+//! Wall-clock sources are the exception: timing is contention-sensitive,
+//! so `measure_groups` on a [`WallTtft`] should be given
+//! [`ExecPool::sequential`].
 
 use crate::backend::DeviceProfile;
+use crate::exec::ExecPool;
 use crate::gaudisim::{enumerate_configs, MpConfig, Simulator};
 use crate::graph::partition::Partition;
 use crate::graph::Graph;
 use crate::numerics::Format;
 use crate::runtime::ModelRuntime;
 use crate::util::{stats, Rng};
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 /// Provider of one averaged TTFT measurement for a full-model config.
-pub trait TtftSource {
-    fn measure(&mut self, cfg: &MpConfig) -> Result<f64>;
+///
+/// `stream` is the measurement's stable noise-stream index, assigned by
+/// the caller in sequential enumeration order: a source measuring the same
+/// `(cfg, stream)` must return the same value no matter which worker calls
+/// it or what was measured before (the exec layer's determinism contract).
+pub trait TtftSource: Sync {
+    fn measure(&self, cfg: &MpConfig, stream: u64) -> Result<f64>;
     /// Number of quantizable layers (config length).
     fn n_qlayers(&self) -> usize;
 }
 
 /// Simulator-backed TTFT (the paper's hardware stand-in; any device via
-/// [`SimTtft::for_device`]).
+/// [`SimTtft::for_device`]).  Noise is drawn from the per-measurement
+/// stream of `seed`, so measurements are order- and thread-independent.
 pub struct SimTtft<'g> {
     pub sim: Simulator<'g>,
-    pub rng: Rng,
+    /// Base seed; measurement `stream` draws from `Rng::stream(seed, stream)`.
+    pub seed: u64,
     /// Paper protocol: average of 5 iterations.
     pub reps: usize,
 }
@@ -44,13 +61,14 @@ impl<'g> SimTtft<'g> {
         seed: u64,
         reps: usize,
     ) -> SimTtft<'g> {
-        SimTtft { sim: Simulator::for_device(graph, device), rng: Rng::new(seed), reps }
+        SimTtft { sim: Simulator::for_device(graph, device), seed, reps }
     }
 }
 
 impl<'g> TtftSource for SimTtft<'g> {
-    fn measure(&mut self, cfg: &MpConfig) -> Result<f64> {
-        Ok(self.sim.measure_ttft(cfg, &mut self.rng, self.reps))
+    fn measure(&self, cfg: &MpConfig, stream: u64) -> Result<f64> {
+        let mut rng = Rng::stream(self.seed, stream);
+        Ok(self.sim.measure_ttft(cfg, &mut rng, self.reps))
     }
 
     fn n_qlayers(&self) -> usize {
@@ -58,7 +76,8 @@ impl<'g> TtftSource for SimTtft<'g> {
     }
 }
 
-/// Wall-clock TTFT of the real compiled forward on this host.
+/// Wall-clock TTFT of the real compiled forward on this host.  Ignores the
+/// stream index (time is not seedable); measure it on a sequential pool.
 pub struct WallTtft<'a> {
     pub mr: &'a ModelRuntime,
     pub tokens: Vec<i32>,
@@ -66,7 +85,7 @@ pub struct WallTtft<'a> {
 }
 
 impl<'a> TtftSource for WallTtft<'a> {
-    fn measure(&mut self, cfg: &MpConfig) -> Result<f64> {
+    fn measure(&self, cfg: &MpConfig, _stream: u64) -> Result<f64> {
         let ps = vec![1.0f32; self.mr.info.n_qlayers];
         // Warm-up once, then average `reps` timed runs (paper: 5).
         self.mr.fwd(&self.tokens, cfg, &ps)?;
@@ -125,59 +144,112 @@ impl TimeMeasurements {
     }
 }
 
-/// Measure every group x config (paper Algorithm 1, line 3).
+/// The chunk size for fanned-out measurement lists: fixed (never derived
+/// from the pool width) so the task batching is a pure function of the
+/// measurement plan.
+const MEASURE_CHUNK: usize = 8;
+
+/// Measure every group x config (paper Algorithm 1, line 3), fanned out
+/// over `pool`.  Stream 0 is the baseline; streams 1.. follow the
+/// sequential (group, config) enumeration order, so the gain tables are
+/// bit-identical at any thread count.
 pub fn measure_groups<S: TtftSource>(
-    src: &mut S,
+    src: &S,
     part: &Partition,
     formats: &[Format],
+    pool: &ExecPool,
 ) -> Result<TimeMeasurements> {
     let nq = src.n_qlayers();
-    let base = src.measure(&MpConfig::all_bf16(nq))?;
-    let mut groups = Vec::with_capacity(part.groups.len());
-    for (j, g) in part.groups.iter().enumerate() {
+    // Refuse absurd config spaces up front (checked F^{L_j}).
+    let total = part
+        .n_measurements(formats.len())
+        .context("cannot enumerate per-group measurements")?;
+    let base = src.measure(&MpConfig::all_bf16(nq), 0)?;
+
+    // Flatten the (group, config) plan in enumeration order.
+    struct Task {
+        group: usize,
+        cfg: MpConfig,
+    }
+    let mut tasks: Vec<Task> = Vec::with_capacity(total);
+    let mut group_configs: Vec<Vec<Vec<Format>>> = Vec::with_capacity(part.groups.len());
+    for g in &part.groups {
         let configs = enumerate_configs(formats, g.qidxs.len());
-        let mut gains = Vec::with_capacity(configs.len());
         for cfg_fmts in &configs {
             let mut cfg = MpConfig::all_bf16(nq);
             for (&q, &f) in g.qidxs.iter().zip(cfg_fmts) {
                 cfg.set(q, f);
             }
-            let t = src.measure(&cfg)?;
-            gains.push(base - t);
+            tasks.push(Task { group: group_configs.len(), cfg });
         }
-        groups.push(GroupGains { group: j, qidxs: g.qidxs.clone(), configs, gains });
+        group_configs.push(configs);
+    }
+
+    let chunked: Vec<Result<Vec<f64>>> = pool.par_chunks(&tasks, MEASURE_CHUNK, |start, chunk| {
+        chunk
+            .iter()
+            .enumerate()
+            .map(|(k, t)| src.measure(&t.cfg, (start + k) as u64 + 1))
+            .collect()
+    });
+
+    let mut groups: Vec<GroupGains> = part
+        .groups
+        .iter()
+        .enumerate()
+        .map(|(j, g)| GroupGains {
+            group: j,
+            qidxs: g.qidxs.clone(),
+            configs: std::mem::take(&mut group_configs[j]),
+            gains: Vec::new(),
+        })
+        .collect();
+    let mut it = tasks.iter();
+    for chunk in chunked {
+        for t in chunk? {
+            let task = it.next().expect("one result per task");
+            groups[task.group].gains.push(base - t);
+        }
     }
     Ok(TimeMeasurements { base_ttft: base, groups })
 }
 
 /// Per-layer gains (the naive baseline of Fig. 1): gain of quantizing each
-/// single layer alone, summed later to "predict" group gains.
+/// single layer alone, summed later to "predict" group gains.  Fanned out
+/// like [`measure_groups`]; stream indices follow the sequential
+/// (layer, format) enumeration.
 pub fn measure_per_layer<S: TtftSource>(
-    src: &mut S,
+    src: &S,
     formats: &[Format],
+    pool: &ExecPool,
 ) -> Result<Vec<Vec<f64>>> {
     let nq = src.n_qlayers();
-    let base = src.measure(&MpConfig::all_bf16(nq))?;
-    let mut out = Vec::with_capacity(nq);
-    for q in 0..nq {
-        let mut per_fmt = Vec::with_capacity(formats.len());
-        for &f in formats {
-            if f == Format::Bf16 {
-                per_fmt.push(0.0);
-                continue;
-            }
-            let mut cfg = MpConfig::all_bf16(nq);
-            cfg.set(q, f);
-            per_fmt.push(base - src.measure(&cfg)?);
-        }
-        out.push(per_fmt);
+    let nf = formats.len();
+    if nf == 0 {
+        return Ok(vec![Vec::new(); nq]);
     }
-    Ok(out)
+    let base = src.measure(&MpConfig::all_bf16(nq), 0)?;
+    let cells: Vec<Result<f64>> = pool.par_map(nq * nf, |i| {
+        let (q, fi) = (i / nf, i % nf);
+        let f = formats[fi];
+        if f == Format::Bf16 {
+            return Ok(0.0);
+        }
+        let mut cfg = MpConfig::all_bf16(nq);
+        cfg.set(q, f);
+        Ok(base - src.measure(&cfg, i as u64 + 1)?)
+    });
+    let mut flat = Vec::with_capacity(nq * nf);
+    for c in cells {
+        flat.push(c?);
+    }
+    Ok(flat.chunks(nf).map(|row| row.to_vec()).collect())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::{ExecCfg, ExecPool};
     use crate::gaudisim::HwModel;
     use crate::graph::partition::partition;
     use crate::graph::testutil::n;
@@ -199,7 +271,7 @@ mod tests {
     fn sim_src(g: &Graph) -> SimTtft<'_> {
         SimTtft {
             sim: Simulator::new(g, HwModel { noise_std: 0.0, ..HwModel::default() }),
-            rng: Rng::new(0),
+            seed: 0,
             reps: 1,
         }
     }
@@ -208,8 +280,9 @@ mod tests {
     fn measures_all_group_configs() {
         let g = small_graph();
         let part = partition(&g).unwrap();
-        let mut src = sim_src(&g);
-        let tm = measure_groups(&mut src, &part, &PAPER_FORMATS).unwrap();
+        let src = sim_src(&g);
+        let tm =
+            measure_groups(&src, &part, &PAPER_FORMATS, &ExecPool::sequential()).unwrap();
         assert_eq!(tm.groups.len(), part.groups.len());
         for (gg, pg) in tm.groups.iter().zip(&part.groups) {
             assert_eq!(gg.gains.len(), 2usize.pow(pg.qidxs.len() as u32));
@@ -232,15 +305,43 @@ mod tests {
     }
 
     #[test]
+    fn parallel_measurement_is_bit_identical() {
+        // WITH noise: the per-measurement RNG streams must line up exactly
+        // across thread counts.
+        let g = small_graph();
+        let part = partition(&g).unwrap();
+        let src = SimTtft {
+            sim: Simulator::new(&g, HwModel::default()),
+            seed: 0x714e33,
+            reps: 5,
+        };
+        let seq =
+            measure_groups(&src, &part, &PAPER_FORMATS, &ExecPool::sequential()).unwrap();
+        let par = measure_groups(
+            &src,
+            &part,
+            &PAPER_FORMATS,
+            &ExecPool::new(ExecCfg::new(4)),
+        )
+        .unwrap();
+        assert_eq!(seq, par);
+        let pl_seq = measure_per_layer(&src, &PAPER_FORMATS, &ExecPool::sequential()).unwrap();
+        let pl_par =
+            measure_per_layer(&src, &PAPER_FORMATS, &ExecPool::new(ExecCfg::new(4))).unwrap();
+        assert_eq!(pl_seq, pl_par);
+    }
+
+    #[test]
     fn predict_matches_direct_measurement() {
         // Group additivity in the noise-free simulator: predicted TTFT of the
         // all-FP8 config tracks its direct measurement.
         let g = small_graph();
         let part = partition(&g).unwrap();
-        let mut src = sim_src(&g);
-        let tm = measure_groups(&mut src, &part, &PAPER_FORMATS).unwrap();
+        let src = sim_src(&g);
+        let tm =
+            measure_groups(&src, &part, &PAPER_FORMATS, &ExecPool::sequential()).unwrap();
         let full = MpConfig::uniform(3, Format::Fp8E4m3);
-        let direct = src.measure(&full).unwrap();
+        let direct = src.measure(&full, 0).unwrap();
         let predicted = tm.predict_ttft(&full);
         assert!(
             (direct - predicted).abs() / direct < 0.08,
@@ -251,8 +352,8 @@ mod tests {
     #[test]
     fn per_layer_table_shape() {
         let g = small_graph();
-        let mut src = sim_src(&g);
-        let t = measure_per_layer(&mut src, &PAPER_FORMATS).unwrap();
+        let src = sim_src(&g);
+        let t = measure_per_layer(&src, &PAPER_FORMATS, &ExecPool::sequential()).unwrap();
         assert_eq!(t.len(), 3);
         for row in &t {
             assert_eq!(row.len(), 2);

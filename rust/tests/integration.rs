@@ -8,6 +8,7 @@
 
 use ampq::backend::DeviceProfile;
 use ampq::coordinator::{optimize, select_config, Strategy};
+use ampq::exec::ExecPool;
 use ampq::evalharness::{evaluate, load_all_tasks};
 use ampq::gaudisim::{MpConfig, Simulator};
 use ampq::graph::Graph;
@@ -118,8 +119,10 @@ fn check_group_gains_additive(graph: &Graph, part: &Partitioned, info: &ModelInf
     // Paper Fig. 3b / §3.2: group-additive prediction matches direct
     // measurement (noise-free simulator).
     let device = quiet_device();
-    let mut src = ampq::timing::SimTtft::for_device(graph, &device, 0, 1);
-    let tm = ampq::timing::measure_groups(&mut src, &part.partition, &PAPER_FORMATS).unwrap();
+    let src = ampq::timing::SimTtft::for_device(graph, &device, 0, 1);
+    let tm =
+        ampq::timing::measure_groups(&src, &part.partition, &PAPER_FORMATS, &ExecPool::sequential())
+            .unwrap();
     let sim = Simulator::for_device(graph, &device);
     for (tag, cfg) in [
         ("all-fp8", MpConfig::uniform(info.n_qlayers, Format::Fp8E4m3)),
@@ -143,10 +146,12 @@ fn check_ip_dominates_baselines(planner: &Planner) {
     let calibration = planner.calibration();
     let family = planner.family(Objective::EmpiricalTime);
     for tau in [0.002, 0.004, 0.007] {
-        let ip = optimize(&family.groups, calibration, tau).unwrap();
+        let ip = optimize(&family.groups, calibration, tau, &ExecPool::sequential()).unwrap();
         for strategy in [Strategy::Random, Strategy::Prefix] {
             for seed in 0..3 {
-                let cfg = select_config(family, strategy, calibration, tau, seed).unwrap();
+                let cfg =
+                    select_config(family, strategy, calibration, tau, seed, &ExecPool::sequential())
+                        .unwrap();
                 let baseline_gain = tm.predict_gain(&cfg);
                 assert!(
                     ip.solution.gain >= baseline_gain - 1e-6,
@@ -164,7 +169,7 @@ fn check_budget_respected(planner: &Planner) {
     for objective in [Objective::EmpiricalTime, Objective::TheoreticalTime, Objective::Memory] {
         let family = planner.family(objective);
         for tau in [0.001, 0.003, 0.006] {
-            let out = optimize(&family.groups, calibration, tau).unwrap();
+            let out = optimize(&family.groups, calibration, tau, &ExecPool::sequential()).unwrap();
             if out.solution.feasible {
                 assert!(
                     out.predicted_mse <= calibration.budget(tau) + 1e-12,
@@ -180,7 +185,8 @@ fn check_budget_respected(planner: &Planner) {
 
 fn check_memory_family_skips_bgemm(planner: &Planner, info: &ModelInfo) {
     let family = planner.family(Objective::Memory);
-    let out = optimize(&family.groups, planner.calibration(), 0.01).unwrap();
+    let out =
+        optimize(&family.groups, planner.calibration(), 0.01, &ExecPool::sequential()).unwrap();
     for (l, q) in info.qlayers.iter().enumerate() {
         if q.kind == ampq::model::LayerKind::Bgemm {
             assert_eq!(out.config.get(l), Format::Bf16, "{}", q.name);
@@ -219,16 +225,17 @@ fn check_evaluation(info: &ModelInfo, mr: &ModelRuntime) {
 
 fn check_tau_zero(planner: &Planner) {
     let family = planner.family(Objective::EmpiricalTime);
-    let out = optimize(&family.groups, planner.calibration(), 0.0).unwrap();
+    let out =
+        optimize(&family.groups, planner.calibration(), 0.0, &ExecPool::sequential()).unwrap();
     assert_eq!(out.config.n_quantized(), 0);
 }
 
 fn check_wall_clock(info: &ModelInfo, mr: &ModelRuntime) {
     let calib = info.load_calib(&root()).unwrap();
     let tokens: Vec<i32> = calib[..info.eval_b].concat();
-    let mut src = ampq::timing::WallTtft { mr, tokens, reps: 2 };
+    let src = ampq::timing::WallTtft { mr, tokens, reps: 2 };
     use ampq::timing::TtftSource;
-    let t = src.measure(&MpConfig::all_bf16(info.n_qlayers)).unwrap();
+    let t = src.measure(&MpConfig::all_bf16(info.n_qlayers), 0).unwrap();
     assert!(t > 100.0, "wall-clock TTFT {t} us implausibly small");
     assert!(t < 10.0e6, "wall-clock TTFT {t} us implausibly large");
 }

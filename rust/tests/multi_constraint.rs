@@ -270,7 +270,9 @@ fn serve_batch_mixed_requests_end_to_end() {
     assert_eq!(parsed, reqs);
 
     let sequential: Vec<Json> = reqs.iter().map(|r| svc.answer(r).unwrap()).collect();
-    let parallel = svc.serve_batch(&parsed, 3).unwrap();
+    let parallel = svc
+        .serve_batch(&parsed, &ampq::exec::ExecPool::new(ampq::exec::ExecCfg::new(3)))
+        .unwrap();
     assert_eq!(parallel, sequential);
 
     // The frontier answer matches a pointwise solve at its tau.

@@ -1,0 +1,162 @@
+//! Parallel-vs-sequential equivalence: the exec layer's determinism
+//! contract, property-tested end to end.
+//!
+//! Every parallelized path — the branch & bound solver, `Planner::frontier`
+//! bisection, the Engine's Calibrated/Measured stage fan-outs, planner
+//! sweeps, and `PlanService::serve_batch` — must produce BIT-IDENTICAL
+//! output at `threads = 1` and `threads = N`.  These tests compare the
+//! full artifacts with `assert_eq!` (no tolerances): any scheduling leak
+//! into the numbers is a failure.
+
+use ampq::coordinator::Strategy;
+use ampq::exec::{ExecCfg, ExecPool};
+use ampq::metrics::Objective;
+use ampq::plan::demo::demo_model;
+use ampq::plan::{Engine, PlanRequest, PlanService, ServeRequest};
+use ampq::solver::problem::gen::random_multi;
+use ampq::solver::solve_with;
+use ampq::util::Rng;
+
+fn pools() -> [ExecPool; 3] {
+    [
+        ExecPool::sequential(),
+        ExecPool::new(ExecCfg::new(3)),
+        ExecPool::new(ExecCfg::new(8)),
+    ]
+}
+
+#[test]
+fn branch_bound_is_thread_count_invariant() {
+    // Seeded random MCKP instances, single and multi constraint, across a
+    // size range that straddles the solver's decomposition threshold.
+    let mut rng = Rng::new(0x5EED);
+    let [seq, p3, p8] = pools();
+    for trial in 0..60 {
+        let dims = 1 + (trial % 3 == 0) as usize;
+        let p = random_multi(&mut rng, 12, 8, dims);
+        let base = solve_with(&p, &seq);
+        assert_eq!(base, solve_with(&p, &p3), "trial {trial} (3 threads)");
+        assert_eq!(base, solve_with(&p, &p8), "trial {trial} (8 threads)");
+    }
+}
+
+fn demo_engine(threads: usize, blocks: usize, seed: u64) -> Engine {
+    let (graph, qlayers, calibration) = demo_model(blocks, seed);
+    let mut engine = Engine::new().with_threads(threads);
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    engine
+}
+
+#[test]
+fn stage_artifacts_are_thread_count_invariant() {
+    for (blocks, seed) in [(1, 3), (2, 7)] {
+        let mut seq = demo_engine(1, blocks, seed);
+        let mut par = demo_engine(8, blocks, seed);
+        assert_eq!(
+            seq.partitioned("demo").unwrap(),
+            par.partitioned("demo").unwrap(),
+            "Partitioned artifact diverged"
+        );
+        assert_eq!(
+            seq.calibrated("demo").unwrap(),
+            par.calibrated("demo").unwrap(),
+            "Calibrated artifact diverged"
+        );
+        // Measured carries the simulator's NOISY gain tables: equality here
+        // proves the per-measurement RNG streams line up exactly.
+        assert_eq!(
+            seq.measured("demo").unwrap(),
+            par.measured("demo").unwrap(),
+            "Measured artifact diverged"
+        );
+    }
+}
+
+#[test]
+fn plans_and_sweeps_are_thread_count_invariant() {
+    let seq = demo_engine(1, 2, 7).planner("demo").unwrap();
+    let par = demo_engine(8, 2, 7).planner("demo").unwrap();
+    let taus = [0.0, 0.001, 0.004, 0.007];
+    for objective in Objective::ALL {
+        for &tau in &taus {
+            let req = PlanRequest::new(objective).with_loss_budget(tau);
+            assert_eq!(seq.solve(&req).unwrap(), par.solve(&req).unwrap());
+        }
+    }
+    let a = seq.sweep(&Objective::ALL, &Strategy::ALL, &taus, 1).unwrap();
+    let b = par.sweep(&Objective::ALL, &Strategy::ALL, &taus, 1).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn frontiers_are_thread_count_invariant() {
+    let seq = demo_engine(1, 2, 7).planner("demo").unwrap();
+    let par = demo_engine(6, 2, 7).planner("demo").unwrap();
+    for objective in Objective::ALL {
+        let f1 = seq.frontier(objective, Strategy::Ip).unwrap();
+        let fn_ = par.frontier(objective, Strategy::Ip).unwrap();
+        assert_eq!(f1, fn_, "{objective:?} frontier diverged");
+        // And the curve still matches pointwise solves.
+        for &tau in &[0.001, 0.004] {
+            let plan = seq
+                .solve(&PlanRequest::new(objective).with_loss_budget(tau))
+                .unwrap();
+            assert_eq!(f1.at(tau).gain, plan.gain, "{objective:?} tau {tau}");
+        }
+    }
+}
+
+#[test]
+fn serve_batches_are_thread_count_invariant() {
+    let mut engine = demo_engine(4, 2, 7);
+    let svc = PlanService::from_engine(&mut engine, &["demo"]).unwrap();
+    let reqs: Vec<ServeRequest> = [0.001, 0.002, 0.004, 0.006]
+        .iter()
+        .flat_map(|&tau| {
+            vec![
+                ServeRequest::new(
+                    "demo",
+                    PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(tau),
+                ),
+                ServeRequest::new(
+                    "demo",
+                    PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(tau),
+                )
+                .via_frontier(),
+                ServeRequest::new(
+                    "demo",
+                    PlanRequest::new(Objective::Memory).with_loss_budget(tau),
+                ),
+            ]
+        })
+        .collect();
+    let [seq, p3, p8] = pools();
+    let base = svc.serve_batch(&reqs, &seq).unwrap();
+    assert_eq!(base, svc.serve_batch(&reqs, &p3).unwrap());
+    assert_eq!(base, svc.serve_batch(&reqs, &p8).unwrap());
+}
+
+#[test]
+fn engine_threads_do_not_thrash_the_disk_cache() {
+    // A parallel engine and a sequential engine sharing one cache dir must
+    // agree on the cached bytes: the second staging loads, not recomputes.
+    let cache = std::env::temp_dir()
+        .join(format!("ampq_parallel_cache_{}", std::process::id()));
+    std::fs::remove_dir_all(&cache).ok();
+    let (graph, qlayers, calibration) = demo_model(2, 7);
+
+    let mut par = Engine::new().with_threads(8).with_cache_dir(&cache);
+    par.register_synthetic("demo", graph.clone(), qlayers.clone(), calibration.clone());
+    let staged = par.planner("demo").unwrap();
+
+    let mut seq = Engine::new().with_threads(1).with_cache_dir(&cache);
+    seq.register_synthetic("demo", graph, qlayers, calibration);
+    let loaded = seq.planner("demo").unwrap();
+    assert_eq!(seq.counters().measurement_passes, 0, "cache must hit");
+    assert_eq!(seq.counters().calibration_passes, 0, "cache must hit");
+
+    let req = PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004);
+    assert_eq!(staged.solve(&req).unwrap(), loaded.solve(&req).unwrap());
+
+    std::fs::remove_dir_all(&cache).ok();
+}

@@ -4,6 +4,7 @@
 //! behaviour (all-BF16 fallback) at the coordinator layer.
 
 use ampq::coordinator::optimize;
+use ampq::exec::ExecPool;
 use ampq::metrics::GroupChoices;
 use ampq::numerics::Format;
 use ampq::sensitivity::Calibration;
@@ -53,7 +54,7 @@ fn ip_tau_zero_returns_all_bf16() {
             gains: vec![0.0, 1.0],
         })
         .collect();
-    let out = optimize(&groups, &calib, 0.0).unwrap();
+    let out = optimize(&groups, &calib, 0.0, &ExecPool::sequential()).unwrap();
     assert_eq!(out.config.n_quantized(), 0, "tau=0 must return all-BF16");
     assert_eq!(out.budget, 0.0);
 }
