@@ -93,8 +93,52 @@ fn main() {
         quality.push(("bb_max_threads".into(), Json::Num(*tmax as f64)));
     }
 
-    // Frontier sweeps: many per-tau IP solves batched across the pool.
-    // A deeper demo model makes each sweep a real workload.
+    // Frontier old-vs-new: the bisection sweep (one IP solve per probe,
+    // the pre-parametric path, kept as the oracle) against the one-pass
+    // parametric chain DP that replaced it.  Same curve — every knot the
+    // bisection localized must appear on the parametric curve — but the DP
+    // does ~one sweep's work instead of one branch & bound solve per knot.
+    {
+        let mut engine = demo_engine(1);
+        let planner = engine.planner("demo").unwrap();
+        let f_new = planner.frontier(Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        let f_old = planner
+            .frontier_via_bisection(Objective::EmpiricalTime, Strategy::Ip)
+            .unwrap();
+        for (i, old) in f_old.points.iter().enumerate() {
+            assert!(
+                f_new.points.iter().any(|p| (p.gain - old.gain).abs() <= 1e-9
+                    && (p.predicted_mse - old.predicted_mse).abs() <= 1e-12),
+                "bisection knot {i} (gain {}) missing from the parametric curve",
+                old.gain
+            );
+        }
+        let r_new = bench("frontier/demo/parametric (one-pass)", 1, 8, || {
+            black_box(planner.frontier(Objective::EmpiricalTime, Strategy::Ip).unwrap());
+        });
+        let r_old = bench("frontier/demo/bisection (per-tau solves)", 1, 3, || {
+            black_box(
+                planner
+                    .frontier_via_bisection(Objective::EmpiricalTime, Strategy::Ip)
+                    .unwrap(),
+            );
+        });
+        let speedup = r_old.mean_us / r_new.mean_us.max(1e-9);
+        println!(
+            "frontier/demo: parametric one-pass {speedup:.1}x faster than bisection \
+             ({} knots vs {} localized)",
+            f_new.len(),
+            f_old.len()
+        );
+        quality.push(("frontier_parametric_speedup_vs_bisection".into(), Json::Num(speedup)));
+        quality.push(("frontier_knots_parametric".into(), Json::Num(f_new.len() as f64)));
+        quality.push(("frontier_knots_bisection".into(), Json::Num(f_old.len() as f64)));
+        results.push(r_old);
+        results.push(r_new);
+    }
+
+    // Frontier thread scaling: the parametric sweep's state merge fans out
+    // across the pool (bit-identical curves, different wall clocks).
     let mut frontier_mean: Vec<(usize, f64)> = Vec::new();
     for &t in &thread_counts() {
         let mut engine = demo_engine(t);
@@ -154,9 +198,14 @@ fn main() {
     let out = PathBuf::from(
         std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_solver.json".to_string()),
     );
+    // Fail LOUDLY: a missing summary silently drops the perf-trajectory
+    // data point CI exists to record.
     match write_summary(&out, "solver", &results, quality) {
         Ok(()) => println!("bench summary written to {}", out.display()),
-        Err(e) => eprintln!("warning: could not write {}: {e}", out.display()),
+        Err(e) => {
+            eprintln!("error: could not write {}: {e}", out.display());
+            std::process::exit(1);
+        }
     }
 }
 

@@ -9,7 +9,7 @@ use crate::metrics::{covered_layers, group_weight_bytes, GroupChoices};
 use crate::model::QLayer;
 use crate::numerics::Format;
 use crate::sensitivity::Calibration;
-use crate::solver::{self, CostDim, Mckp, Solution};
+use crate::solver::{self, parametric, CostDim, Mckp, Solution};
 use anyhow::{bail, Result};
 
 /// Result of one IP solve.
@@ -37,6 +37,26 @@ where
         .map(layer_cost)
         .sum();
     (budget - uncovered).max(0.0)
+}
+
+/// The per-group gain and loss-MSE cost tables of eq. 5 — ONE assembly
+/// shared by the pointwise solves and the parametric frontier, so the two
+/// paths can never desynchronize.
+fn gain_mse_tables(
+    groups: &[GroupChoices],
+    calib: &Calibration,
+) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let gains: Vec<Vec<f64>> = groups.iter().map(|g| g.gains.clone()).collect();
+    let mse_costs: Vec<Vec<f64>> = groups
+        .iter()
+        .map(|g| {
+            g.configs
+                .iter()
+                .map(|cfg| calib.group_mse(&g.qidxs, cfg))
+                .collect()
+        })
+        .collect();
+    (gains, mse_costs)
 }
 
 /// Solve eq. (5) at threshold `tau` (single loss-MSE constraint).
@@ -71,16 +91,7 @@ pub fn optimize_with_caps(
     let budget =
         charge_uncovered(&covered, budget_total, |l| calib.layer_mse(l, Format::Bf16));
 
-    let gains: Vec<Vec<f64>> = groups.iter().map(|g| g.gains.clone()).collect();
-    let mse_costs: Vec<Vec<f64>> = groups
-        .iter()
-        .map(|g| {
-            g.configs
-                .iter()
-                .map(|cfg| calib.group_mse(&g.qidxs, cfg))
-                .collect()
-        })
-        .collect();
+    let (gains, mse_costs) = gain_mse_tables(groups, calib);
 
     let problem = match memory {
         None => Mckp::new(gains, mse_costs, budget)?,
@@ -121,6 +132,93 @@ pub fn optimize_with_caps(
     let predicted_mse = calib.loss_mse(&config);
     let weight_bytes = memory.map(|(qlayers, _)| crate::metrics::weight_bytes(qlayers, &config));
     Ok(IpOutcome { config, solution, predicted_mse, budget: budget_total, weight_bytes })
+}
+
+/// One knot of the full eq.-5 frontier, materialized as a model
+/// configuration: the Pareto-optimal plan at its own loss-MSE level.
+#[derive(Clone, Debug)]
+pub struct FrontierSolve {
+    pub config: MpConfig,
+    /// Objective-family gain of `config` (the DP's sum — bit-equal to
+    /// `Family::gain_of`, which folds the same per-group values in the
+    /// same order).
+    pub gain: f64,
+    /// Predicted FULL-model loss MSE of `config` (covered groups plus the
+    /// default-BF16 uncovered layers), recomputed via
+    /// [`Calibration::loss_mse`] so it is bit-equal to a pointwise
+    /// `Plan::predicted_mse` for the same configuration.
+    pub predicted_mse: f64,
+    /// False only when the parametric state cap thinned the sweep (never
+    /// observed at paper scale — single-constraint sweeps are exact).
+    pub exact: bool,
+}
+
+/// The full eq.-5 frontier: its knots, plus whether the knot SET is
+/// provably complete.
+pub struct FrontierSolves {
+    pub knots: Vec<FrontierSolve>,
+    /// False when the parametric state cap thinned the sweep: surviving
+    /// knots may be sub-optimal and knots BETWEEN them may be missing —
+    /// callers wanting the pointwise-agreement contract must fall back to
+    /// per-tau solves (see `Planner::frontier`).
+    pub complete: bool,
+}
+
+/// The ENTIRE gain-vs-loss-MSE Pareto curve of eq. 5 in one parametric DP
+/// sweep (`solver::parametric`) — one pass instead of one branch & bound
+/// solve per tau knot.  `tau_max` caps the curve: knots beyond its budget
+/// cannot be reached by any tau the frontier serves.  Uncovered layers
+/// are charged exactly like [`optimize_with_caps`].
+///
+/// No hardening happens here: when the state cap thinned the sweep
+/// (`complete = false`, never observed at paper scale) the knot SET may
+/// be missing entries that per-knot branch & bound cannot restore, so the
+/// sole production caller (`Planner::frontier`) abandons the curve for
+/// the bisection sweep — paying `solver::parametric::harden_with` first
+/// would be pure wasted work on that path.  Callers that consume
+/// incomplete curves directly can harden them via the solver API.
+pub fn optimize_frontier(
+    groups: &[GroupChoices],
+    calib: &Calibration,
+    tau_max: f64,
+    pool: &ExecPool,
+) -> Result<FrontierSolves> {
+    let nq = calib.s.len();
+    let covered = covered_layers(groups, nq);
+    let budget =
+        charge_uncovered(&covered, calib.budget(tau_max), |l| calib.layer_mse(l, Format::Bf16));
+    let (gains, mse_costs) = gain_mse_tables(groups, calib);
+    let problem = Mckp::new(gains, mse_costs, budget)?;
+    let curve = parametric::frontier_with(&problem, pool);
+    let materialize = |choice: &[usize], gain: f64, exact: bool| {
+        let mut config = MpConfig::all_bf16(nq);
+        for (g, &p) in groups.iter().zip(choice) {
+            for (&q, &f) in g.qidxs.iter().zip(&g.configs[p]) {
+                config.set(q, f);
+            }
+        }
+        let predicted_mse = calib.loss_mse(&config);
+        FrontierSolve { config, gain, predicted_mse, exact }
+    };
+    if curve.points.is_empty() {
+        // Even the min-cost assignment exceeds the tau_max budget (cannot
+        // happen for planner-built tau_max, which has headroom for the
+        // maximal configuration): the curve is the lone fallback plan every
+        // pointwise solve would return.
+        let fb = problem.fallback();
+        return Ok(FrontierSolves {
+            knots: vec![materialize(&fb.choice, fb.gain, true)],
+            complete: true,
+        });
+    }
+    Ok(FrontierSolves {
+        knots: curve
+            .points
+            .iter()
+            .map(|pt| materialize(&pt.choice, pt.gain, pt.exact))
+            .collect(),
+        complete: curve.exact,
+    })
 }
 
 #[cfg(test)]
@@ -288,6 +386,56 @@ mod tests {
         assert_eq!(out.solution.feasible, oracle.feasible);
         assert!((out.solution.gain - oracle.gain).abs() < 1e-9);
         assert!(out.weight_bytes.unwrap() <= 700.0 + 1e-9);
+    }
+
+    #[test]
+    fn frontier_solves_match_pointwise_optimize() {
+        let calib = calib4();
+        let groups = singleton_groups(&[3.0, 1.0, 2.0, 1.5]);
+        let pool = ExecPool::sequential();
+        let solves = optimize_frontier(&groups, &calib, 10.0, &pool).unwrap();
+        assert!(solves.complete);
+        let knots = solves.knots;
+        assert!(knots.len() >= 2, "expected several knots, got {}", knots.len());
+        for w in knots.windows(2) {
+            assert!(w[1].predicted_mse > w[0].predicted_mse);
+            assert!(w[1].gain > w[0].gain);
+        }
+        for k in &knots {
+            assert!(k.exact);
+            // A pointwise solve at the knot's own NRMSE level must agree.
+            let tau = (k.predicted_mse / calib.eg2).sqrt();
+            let out = optimize(&groups, &calib, tau, &pool).unwrap();
+            assert!(
+                (out.solution.gain - k.gain).abs() < 1e-9,
+                "knot gain {} vs pointwise {}",
+                k.gain,
+                out.solution.gain
+            );
+        }
+    }
+
+    #[test]
+    fn frontier_charges_uncovered_layers() {
+        let calib = calib4();
+        // Only layers {0, 2} participate; 1 and 3 stay BF16 and their MSE
+        // must appear in every knot's predicted (full-model) MSE.
+        let groups: Vec<GroupChoices> = singleton_groups(&[1.0, 1.0, 1.0, 1.0])
+            .into_iter()
+            .enumerate()
+            .filter(|(l, _)| *l == 0 || *l == 2)
+            .map(|(_, g)| g)
+            .collect();
+        let knots = optimize_frontier(&groups, &calib, 10.0, &ExecPool::sequential())
+            .unwrap()
+            .knots;
+        let uncovered = calib.layer_mse(1, Format::Bf16) + calib.layer_mse(3, Format::Bf16);
+        for k in &knots {
+            assert_eq!(k.config.get(1), Format::Bf16);
+            assert_eq!(k.config.get(3), Format::Bf16);
+            assert!(k.predicted_mse >= uncovered - 1e-15);
+            assert_eq!(k.predicted_mse, calib.loss_mse(&k.config));
+        }
     }
 
     #[test]

@@ -173,7 +173,7 @@ pub fn aggregate(sweep: &Sweep, strategy: Strategy) -> Vec<AggPoint> {
         .filter(|p| p.strategy == strategy)
         .map(|p| p.tau)
         .collect();
-    taus.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    taus.sort_by(f64::total_cmp);
     taus.dedup();
     let n_tasks = sweep.task_names.len();
 

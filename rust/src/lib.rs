@@ -19,8 +19,10 @@
 //! [`plan::Planner`] resolves multi-constraint [`plan::PlanRequest`]
 //! queries (loss budget + optional memory cap + target device) in
 //! microseconds, returning serializable [`plan::Plan`] values.
-//! [`plan::Planner::frontier`] precomputes the tau -> gain Pareto curve,
-//! and [`plan::PlanService`] serves both concurrently, routing per-device
+//! [`plan::Planner::frontier`] precomputes the tau -> gain Pareto curve —
+//! for the IP strategy in one parametric chain-DP sweep
+//! ([`solver::parametric`]) instead of one IP solve per knot — and
+//! [`plan::PlanService`] serves both concurrently, routing per-device
 //! requests to per-device planners.  Hardware lives in [`backend`]: a
 //! [`backend::DeviceProfile`] (JSON-loadable; four built-ins in
 //! [`backend::Registry`]) parameterizes the simulator, the theoretical

@@ -31,6 +31,7 @@ use ampq::gaudisim::MpConfig;
 use ampq::metrics::Objective;
 use ampq::numerics::Format;
 use ampq::plan::demo::demo_model;
+use ampq::plan::request::check_budget;
 use ampq::plan::{load_requests, Engine, Frontier, Plan, PlanRequest};
 use ampq::runtime::FwdMode;
 use ampq::timing::{measure_groups, TtftSource, WallTtft};
@@ -59,7 +60,8 @@ commands:
   pipeline    Algorithm 1 end to end: stages 1-3 + IP tau sweep
   sweep       batch-solve the tau x objective x strategy grid from cache
   frontier    precompute the tau -> gain Pareto frontier for one
-              (model, objective, strategy)
+              (model, objective, strategy); the IP curve is ONE
+              parametric DP sweep, not a solve per tau
   serve       answer a JSON array of requests (--requests FILE) on a
               concurrent PlanService; entries may carry \"device\"
   devices     list the built-in hardware device profiles
@@ -223,9 +225,12 @@ fn parse_taus(args: &Args) -> Result<Vec<f64>> {
         Some(s) => s
             .split(',')
             .map(|t| {
-                t.trim()
+                let tau = t
+                    .trim()
                     .parse::<f64>()
-                    .map_err(|e| anyhow!("--taus '{t}': {e}"))
+                    .map_err(|e| anyhow!("--taus '{t}': {e}"))?;
+                check_budget("--taus", tau)?;
+                Ok(tau)
             })
             .collect(),
     }
@@ -309,14 +314,21 @@ fn cmd_measure(engine: &mut Engine, model: &str, json: bool) -> Result<()> {
     Ok(())
 }
 
-/// Build a [`PlanRequest`] from the shared CLI options.
+/// Build a [`PlanRequest`] from the shared CLI options.  "nan"/"-1" parse
+/// as valid f64s; `check_budget` rejects them HERE so a bad flag is one
+/// clear CLI error instead of a per-request failure (or, pre-hardening, a
+/// comparator panic deep in a frontier sort).
 fn build_request(args: &Args) -> Result<PlanRequest> {
+    let tau = args.f64_or("tau", 0.004)?;
+    check_budget("--tau", tau)?;
     let mut req = PlanRequest::new(parse_objective(args)?)
         .with_strategy(parse_strategy(args)?)
-        .with_loss_budget(args.f64_or("tau", 0.004)?)
+        .with_loss_budget(tau)
         .with_seed(args.u64_or("seed", 0)?);
     if args.get("memory-cap").is_some() {
-        req = req.with_memory_cap(args.f64_or("memory-cap", 0.0)?);
+        let cap = args.f64_or("memory-cap", 0.0)?;
+        check_budget("--memory-cap", cap)?;
+        req = req.with_memory_cap(cap);
     }
     Ok(req)
 }

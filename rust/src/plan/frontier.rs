@@ -1,16 +1,28 @@
 //! Precomputed Pareto frontiers over the tau -> gain tradeoff.
 //!
 //! A pointwise IP solve answers ONE budget; serving wants the whole curve.
-//! [`sweep`] runs the pointwise solver over the calibration's tau range
-//! (paper grid + an even cover of [0, tau_max]), bisects adjacent taus whose
-//! optimal gains differ to localize the breakpoints, and Pareto-filters the
-//! records into a list of points with strictly increasing predicted MSE and
-//! gain.  [`Frontier::at`] then answers any tau in O(log n): the optimal
-//! gain is a step function of the budget, so the highest-gain point whose
-//! MSE fits IS the pointwise optimum for every tau the sweep localized
-//! (asserted against fresh IP solves in tests).  Frontiers round-trip
-//! through JSON, so they can be precomputed offline and shipped to serving
-//! hosts.
+//! Two builders produce it:
+//!
+//! * [`build`] assembles a frontier from pre-solved (mse, gain, config)
+//!   records — the parametric one-pass path (`Planner::frontier` for the
+//!   IP strategy feeds it `solver::parametric`'s chain-DP curve, computed
+//!   in a single sweep instead of one IP solve per knot);
+//! * [`sweep`] runs a pointwise solver over the calibration's tau range
+//!   (paper grid + an even cover of [0, tau_max]) and bisects adjacent
+//!   taus whose optimal gains differ to localize the breakpoints — the
+//!   pre-parametric path, kept for the closed-form baseline strategies and
+//!   as the property-test oracle.
+//!
+//! Both Pareto-filter their records into points with strictly increasing
+//! predicted MSE and gain.  [`Frontier::at`] then answers any tau in
+//! O(log n): the optimal gain is a step function of the budget, so the
+//! highest-gain point whose MSE fits IS the pointwise optimum (asserted
+//! against fresh IP solves in tests).  Frontiers round-trip through JSON,
+//! so they can be precomputed offline and shipped to serving hosts.
+//!
+//! All float sorts here are TOTAL (`f64::total_cmp`): a NaN smuggled in by
+//! a caller can produce a rejected artifact, never a panic.  NaN/negative
+//! taus themselves are rejected at the `PlanRequest`/CLI boundary.
 
 use super::artifact::{check_header, formats_from_json, formats_to_json, num, SCHEMA_VERSION};
 use crate::coordinator::Strategy;
@@ -52,7 +64,9 @@ impl Frontier {
     /// O(log n) lookup: the highest-gain point whose predicted loss MSE
     /// fits the tau budget.  Below the first point (the paper's tau = 0
     /// edge) the all-baseline fallback point itself is returned — exactly
-    /// what a pointwise infeasible solve falls back to.
+    /// what a pointwise infeasible solve falls back to.  Total for every
+    /// float input: a NaN tau compares below every point and resolves to
+    /// the fallback (serving layers reject NaN taus before they get here).
     pub fn at(&self, tau: f64) -> &FrontierPoint {
         let budget = tau * tau * self.eg2;
         let k = self.points.partition_point(|p| p.predicted_mse <= budget + EPS);
@@ -185,7 +199,7 @@ where
         .collect();
     taus.push(0.0);
     taus.push(tau_max);
-    taus.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    taus.sort_by(f64::total_cmp);
     taus.dedup_by(|a, b| (*a - *b).abs() <= tau_max * 1e-9);
 
     let batch = |ts: &[f64]| -> Result<Vec<Rec>> {
@@ -233,13 +247,13 @@ where
     }
 
     // Pareto filter: ascending MSE, keep only strictly increasing gain
-    // (ties resolve to the cheapest MSE, then the smallest tau).
+    // (ties resolve to the cheapest MSE, then the smallest tau; the sort
+    // is total so malformed solver output cannot panic the sweep).
     records.sort_by(|a, b| {
         a.mse
-            .partial_cmp(&b.mse)
-            .unwrap()
-            .then(b.gain.partial_cmp(&a.gain).unwrap())
-            .then(a.tau.partial_cmp(&b.tau).unwrap())
+            .total_cmp(&b.mse)
+            .then(b.gain.total_cmp(&a.gain))
+            .then(a.tau.total_cmp(&b.tau))
     });
     let mut points: Vec<FrontierPoint> = Vec::new();
     for r in records {
@@ -255,6 +269,44 @@ where
     }
     if points.is_empty() {
         bail!("frontier sweep produced no points");
+    }
+    Ok(Frontier { model: model.to_string(), objective, strategy, eg2, tau_max, points })
+}
+
+/// Assemble a [`Frontier`] from pre-solved `(predicted_mse, gain, config)`
+/// records — the parametric one-pass path.  Records are Pareto-filtered
+/// exactly like [`sweep`]'s (ascending MSE, strictly increasing gain, ties
+/// to the cheapest MSE); non-finite records are dropped rather than
+/// panicking a sort.  Knot taus are closed-form: `sqrt(mse / eg2)` is the
+/// smallest threshold whose budget admits the knot — except the first
+/// point, which keeps `tau = 0`: it is the fallback every infeasible
+/// budget resolves to, matching the bisection sweep's tau-0 record
+/// bit-for-bit.
+pub fn build(
+    model: &str,
+    objective: Objective,
+    strategy: Strategy,
+    eg2: f64,
+    tau_max: f64,
+    mut records: Vec<(f64, f64, MpConfig)>,
+) -> Result<Frontier> {
+    if !(tau_max > 0.0) || !tau_max.is_finite() {
+        bail!("tau_max must be positive and finite (got {tau_max})");
+    }
+    if !(eg2 > 0.0) || !eg2.is_finite() {
+        bail!("eg2 must be positive and finite (got {eg2})");
+    }
+    records.retain(|(mse, gain, _)| mse.is_finite() && gain.is_finite());
+    records.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.total_cmp(&a.1)));
+    let mut points: Vec<FrontierPoint> = Vec::new();
+    for (mse, gain, config) in records {
+        if points.last().map_or(true, |l| gain > l.gain) {
+            let tau = if points.is_empty() { 0.0 } else { (mse / eg2).sqrt().min(tau_max) };
+            points.push(FrontierPoint { tau, predicted_mse: mse, gain, config });
+        }
+    }
+    if points.is_empty() {
+        bail!("frontier build produced no points");
     }
     Ok(Frontier { model: model.to_string(), objective, strategy, eg2, tau_max, points })
 }
@@ -366,6 +418,35 @@ mod tests {
             }
         }
         assert!(Frontier::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn build_matches_sweep_pareto_semantics() {
+        // Records in arbitrary order, with a dominated and a non-finite
+        // entry: build keeps the Pareto set with closed-form knot taus.
+        let cfg = |fs: &[Format]| MpConfig(fs.to_vec());
+        let records = vec![
+            (0.25, 5.0, cfg(&[Format::Fp8E4m3, Format::Bf16])),
+            (0.01, 0.0, cfg(&[Format::Bf16, Format::Bf16])),
+            (0.9, 9.0, cfg(&[Format::Fp8E4m3, Format::Fp8E4m3])),
+            (0.3, 4.0, cfg(&[Format::Bf16, Format::Fp8E4m3])), // dominated
+            (f64::NAN, 99.0, cfg(&[Format::Bf16, Format::Bf16])), // dropped
+        ];
+        let f = build("m", Objective::EmpiricalTime, Strategy::Ip, 1.0, 2.0, records).unwrap();
+        assert_eq!(f.points.len(), 3);
+        assert_eq!(f.points[0].tau, 0.0);
+        assert!((f.points[1].tau - 0.5).abs() < 1e-12); // sqrt(0.25 / 1)
+        assert!((f.points[2].tau - 0.9f64.sqrt()).abs() < 1e-12);
+        // at() agrees with the step function the records encode.
+        assert_eq!(f.at(0.3).gain, 0.0);
+        assert_eq!(f.at(0.5).gain, 5.0);
+        assert_eq!(f.at(1.0).gain, 9.0);
+        // Round-trips like any swept frontier.
+        let back = Frontier::from_json(&Json::parse(&f.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, f);
+        // Degenerate parameters are rejected, not propagated.
+        assert!(build("m", Objective::EmpiricalTime, Strategy::Ip, 0.0, 2.0, vec![]).is_err());
+        assert!(build("m", Objective::EmpiricalTime, Strategy::Ip, 1.0, f64::NAN, vec![]).is_err());
     }
 
     #[test]

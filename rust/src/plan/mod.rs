@@ -17,7 +17,9 @@
 //!   [`Planner::solve`] against the artifacts in microseconds, with no
 //!   recomputation;
 //! * [`Planner::frontier`] precomputes the whole tau -> gain Pareto curve
-//!   ([`Frontier`], JSON-round-trippable) for O(log n) `at(tau)` lookups;
+//!   ([`Frontier`], JSON-round-trippable) for O(log n) `at(tau)` lookups —
+//!   for the IP strategy in ONE parametric chain-DP sweep
+//!   (`solver::parametric`), not one IP solve per tau knot;
 //! * [`PlanService`] is the `Send + Sync` serving handle: `Arc<Planner>`s
 //!   per (model, device) plus an interior frontier cache for concurrent
 //!   callers;

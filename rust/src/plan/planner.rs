@@ -180,16 +180,10 @@ impl Planner {
         let calib = &self.calibrated.calibration;
         let qlayers = &self.partitioned.qlayers;
         if let Some(t) = req.tau {
-            // tau enters the budget squared — a negative value would
-            // silently plan like its absolute value.
-            if !t.is_finite() || t < 0.0 {
-                bail!("loss budget tau must be finite and non-negative (got {t})");
-            }
+            super::request::check_budget("loss budget tau", t)?;
         }
         if let Some(c) = req.memory_cap {
-            if !c.is_finite() || c < 0.0 {
-                bail!("memory cap must be finite and non-negative (got {c})");
-            }
+            super::request::check_budget("memory cap", c)?;
         }
         // A device-scoped request must match the device this planner's
         // measurements ran on (PlanService routes by device; a direct
@@ -240,13 +234,66 @@ impl Planner {
     }
 
     /// Precompute the Pareto frontier of the tau -> gain tradeoff for one
-    /// (objective, strategy): the paper tau grid plus an even cover of
-    /// [0, tau_max], bisection-refined at every gain step.  The per-tau IP
-    /// solves run in batches on this planner's pool (deterministic: the
-    /// batch composition never depends on the thread count).
-    /// `frontier.at(tau)` then answers any threshold in O(log n) and
-    /// agrees with a pointwise IP solve (asserted in tests).
+    /// (objective, strategy).
+    ///
+    /// For the IP strategy this is ONE parametric DP sweep over the group
+    /// chain (`solver::parametric`): gains and loss-MSE costs are additive
+    /// over the sequential sub-graphs, so the exact full curve falls out of
+    /// a single dominance-pruned pass instead of one branch & bound solve
+    /// per tau knot.  The state merge fans out over this planner's pool
+    /// (bit-identical at any thread count).  The closed-form baseline
+    /// strategies (Random/Prefix) keep the per-tau bisection sweep
+    /// ([`Planner::frontier_via_bisection`]) — their selections are not
+    /// MCKP solves, so there is no chain DP to exploit.
+    ///
+    /// `frontier.at(tau)` answers any threshold in O(log n) and agrees
+    /// with a pointwise IP solve (asserted in tests against the bisection
+    /// oracle).
     pub fn frontier(&self, objective: Objective, strategy: Strategy) -> Result<Frontier> {
+        if strategy != Strategy::Ip {
+            return self.frontier_via_bisection(objective, strategy);
+        }
+        let tau_max = self.tau_max(objective);
+        let family = self.family(objective);
+        let calib = &self.calibrated.calibration;
+        let solves = crate::coordinator::ip::optimize_frontier(
+            &family.groups,
+            calib,
+            tau_max,
+            &ExecPool::new(self.exec),
+        )?;
+        if !solves.complete {
+            // The dominance state cap thinned the sweep (never observed at
+            // paper scale): the surviving knots are proven optima, but the
+            // knot SET may be incomplete and `at(tau)` between survivors
+            // would under-report.  Serve the per-tau sweep instead — slower
+            // but unconditionally faithful to pointwise solves.
+            return self.frontier_via_bisection(objective, strategy);
+        }
+        frontier::build(
+            self.model(),
+            objective,
+            strategy,
+            calib.eg2,
+            tau_max,
+            solves
+                .knots
+                .into_iter()
+                .map(|k| (k.predicted_mse, k.gain, k.config))
+                .collect(),
+        )
+    }
+
+    /// The per-tau bisection sweep the parametric DP replaced: the paper
+    /// tau grid plus an even cover of [0, tau_max], refined at every gain
+    /// step, one pointwise solve per probe.  Kept as the property-test and
+    /// bench oracle (and as [`Planner::frontier`]'s path for the
+    /// closed-form baseline strategies).
+    pub fn frontier_via_bisection(
+        &self,
+        objective: Objective,
+        strategy: Strategy,
+    ) -> Result<Frontier> {
         let tau_max = self.tau_max(objective);
         let mut grid: Vec<f64> =
             crate::coordinator::paper_tau_grid().into_iter().filter(|t| *t <= tau_max).collect();

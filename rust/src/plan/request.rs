@@ -25,6 +25,19 @@ use crate::metrics::Objective;
 use crate::util::Json;
 use anyhow::{anyhow, bail, Result};
 
+/// Shared domain check for user-supplied budget-like scalars (taus,
+/// memory caps): finite and non-negative.  "nan"/"-1" parse as valid
+/// f64s, and tau enters the IP budget SQUARED (a negative value would
+/// silently plan like its absolute value), so every boundary — CLI flags,
+/// request JSON, `Planner::solve`, serve frontier lookups — rejects
+/// through this one predicate.
+pub fn check_budget(name: &str, value: f64) -> Result<()> {
+    if !value.is_finite() || value < 0.0 {
+        bail!("{name} must be finite and non-negative (got {value})");
+    }
+    Ok(())
+}
+
 /// One planning query: maximize `objective` under the requested constraints.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PlanRequest {
@@ -124,18 +137,14 @@ impl PlanRequest {
             Some(x) => Some(x.f64()?),
         };
         if let Some(t) = tau {
-            if !t.is_finite() || t < 0.0 {
-                bail!("tau must be finite and non-negative (got {t})");
-            }
+            check_budget("tau", t)?;
         }
         let memory_cap = match j.opt("memory_cap") {
             None => None,
             Some(x) => Some(x.f64()?),
         };
         if let Some(c) = memory_cap {
-            if !c.is_finite() || c < 0.0 {
-                bail!("memory_cap must be finite and non-negative (got {c})");
-            }
+            check_budget("memory_cap", c)?;
         }
         let seed = match j.opt("seed") {
             None => 0,

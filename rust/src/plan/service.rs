@@ -31,11 +31,30 @@ use std::sync::{Arc, Mutex, RwLock};
 /// computation — while hits and sweeps for other keys proceed untouched.
 type FrontierCell = Arc<Mutex<Option<Arc<Frontier>>>>;
 
+/// Planner registry key: (model, resolved device); `None` is the model's
+/// default planner.  Structured — an earlier '@'-joined string key made a
+/// model registered as "llama@fp8" collide with model "llama"'s "fp8"
+/// device alias, so model names were banned from containing '@'.  With a
+/// tuple key any model name routes unambiguously.
+type PlannerKey = (String, Option<String>);
+
+/// Frontier cache key: (model, PLANNER IDENTITY, objective key, strategy
+/// key) — structured for the same reason as [`PlannerKey`].  The second
+/// component is the resolved `Arc<Planner>`'s address, not the device
+/// name: the default alias and an explicit request resolving to the SAME
+/// planner share one sweep, while two different planners that happen to
+/// be measured on a same-named device (e.g. `register` + a separately
+/// staged `register_for_device`) get separate cells instead of serving
+/// each other's curves.  Address reuse cannot alias stale entries: every
+/// registration drops the model's cells ([`PlanService::insert`]), and
+/// keys from different models differ in the leading component.
+type FrontierKey = (String, usize, &'static str, &'static str);
+
 struct Inner {
-    planners: RwLock<BTreeMap<String, Arc<Planner>>>,
-    /// Frontier cells keyed by "model/objective/strategy".  The outer lock
-    /// guards only the map; computation happens under the per-key cell.
-    frontiers: Mutex<BTreeMap<String, FrontierCell>>,
+    planners: RwLock<BTreeMap<PlannerKey, Arc<Planner>>>,
+    /// Frontier cells.  The outer lock guards only the map; computation
+    /// happens under the per-key cell.
+    frontiers: Mutex<BTreeMap<FrontierKey, FrontierCell>>,
     frontier_solves: AtomicUsize,
 }
 
@@ -62,37 +81,16 @@ impl PlanService {
         }
     }
 
-    /// Registry key of a (model, optional device) pair.  The '@' join is
-    /// unambiguous because registration rejects '@' in model names
-    /// (see [`PlanService::check_model_name`]).
-    fn key_of(model: &str, device: Option<&str>) -> String {
-        match device {
-            Some(d) => format!("{model}@{d}"),
-            None => model.to_string(),
-        }
-    }
-
-    /// '@' is the key separator: a model named "a@b" would collide with
-    /// the device alias of model "a" on device "b".  Enforced on every
-    /// registration path (lookups for such names simply miss).
-    fn check_model_name(model: &str) -> Result<()> {
-        if model.contains('@') {
-            bail!("model name '{model}' must not contain '@' (reserved for device routing keys)");
-        }
-        Ok(())
-    }
-
-    fn insert(&self, key: String, planner: Arc<Planner>) {
+    fn insert(&self, key: PlannerKey, planner: Arc<Planner>) {
         // (Re-)registering a planner invalidates the model's cached
         // frontiers: a replacement planner (new seed/protocol, edited
         // profile under the same name) must not serve its predecessor's
-        // curves.  Frontier keys are "model@device/..." (resolved device),
-        // so dropping the model's prefix over-invalidates at worst.
-        let model = key.split('@').next().unwrap_or(key.as_str()).to_string();
+        // curves.  Frontier keys lead with the model, so dropping every
+        // entry for it over-invalidates (other devices' curves) at worst.
         {
             let mut frontiers =
                 self.inner.frontiers.lock().expect("frontier cache lock poisoned");
-            frontiers.retain(|k, _| !k.starts_with(&format!("{model}@")));
+            frontiers.retain(|k, _| k.0 != key.0);
         }
         self.inner
             .planners
@@ -108,33 +106,28 @@ impl PlanService {
         let svc = PlanService::new();
         let device = engine.device().name.clone();
         for m in models {
-            Self::check_model_name(m)?;
             let planner = Arc::new(engine.planner(m)?);
-            svc.insert(Self::key_of(m, None), planner.clone());
-            svc.insert(Self::key_of(m, Some(&device)), planner);
+            svc.insert((m.to_string(), None), planner.clone());
+            svc.insert((m.to_string(), Some(device.clone())), planner);
         }
         Ok(svc)
     }
 
     /// Register `planner` as the model's default (device-less requests).
-    /// Panics if the model name contains '@' (reserved; see
-    /// [`PlanService::register_for_device`] for the fallible variant).
     pub fn register(&self, model: &str, planner: Planner) {
-        Self::check_model_name(model).expect("invalid model name");
-        self.insert(Self::key_of(model, None), Arc::new(planner));
+        self.insert((model.to_string(), None), Arc::new(planner));
     }
 
     /// Register `planner` for requests targeting `device` explicitly.  The
     /// planner's own measured device must match.
     pub fn register_for_device(&self, model: &str, device: &str, planner: Planner) -> Result<()> {
-        Self::check_model_name(model)?;
         if planner.device().name != device {
             bail!(
                 "planner for '{model}' was measured on '{}', not '{device}'",
                 planner.device().name
             );
         }
-        self.insert(Self::key_of(model, Some(device)), Arc::new(planner));
+        self.insert((model.to_string(), Some(device.to_string())), Arc::new(planner));
         Ok(())
     }
 
@@ -145,8 +138,8 @@ impl PlanService {
             .read()
             .expect("planner registry lock poisoned")
             .keys()
-            .filter(|k| !k.contains('@'))
-            .cloned()
+            .filter(|(_, device)| device.is_none())
+            .map(|(model, _)| model.clone())
             .collect()
     }
 
@@ -156,7 +149,7 @@ impl PlanService {
 
     /// The planner serving (model, optional device).
     pub fn planner_for(&self, model: &str, device: Option<&str>) -> Result<Arc<Planner>> {
-        let key = Self::key_of(model, device);
+        let key: PlannerKey = (model.to_string(), device.map(str::to_string));
         self.inner
             .planners
             .read()
@@ -191,8 +184,10 @@ impl PlanService {
     /// The (cached) Pareto frontier for one (model, device, objective,
     /// strategy).  Each key is swept exactly once; a failed sweep leaves
     /// the cell empty so a later caller retries.  The cache is keyed by
-    /// the planner's RESOLVED device, so the default alias and an explicit
-    /// request for the same device share one sweep.
+    /// the RESOLVED planner's identity, so the default alias and an
+    /// explicit request routing to the same planner share one sweep —
+    /// while distinct planners never serve each other's curves, even when
+    /// measured on a same-named device.
     pub fn frontier_for(
         &self,
         model: &str,
@@ -201,11 +196,11 @@ impl PlanService {
         strategy: Strategy,
     ) -> Result<Arc<Frontier>> {
         let planner = self.planner_for(model, device)?;
-        let key = format!(
-            "{model}@{}/{}/{}",
-            planner.device().name,
+        let key: FrontierKey = (
+            model.to_string(),
+            Arc::as_ptr(&planner) as usize,
             objective.key(),
-            strategy.key()
+            strategy.key(),
         );
         let cell: FrontierCell = self
             .inner
@@ -243,6 +238,10 @@ impl PlanService {
             .request
             .tau
             .ok_or_else(|| anyhow!("a frontier lookup needs an explicit tau"))?;
+        // Frontier lookups bypass Planner::solve's request validation, so
+        // re-check here: a NaN/negative tau must fail THIS request, never
+        // panic the batch.
+        super::request::check_budget("frontier lookup tau", tau)?;
         // Stamp the RESOLVED device (like Plan answers do), so per-device
         // frontier lines in one batch are distinguishable.
         let device = self
@@ -376,13 +375,78 @@ mod tests {
     }
 
     #[test]
-    fn model_names_with_at_are_rejected_at_registration() {
-        // '@' is the routing-key separator: "a@gaudi2" would collide with
-        // model "a"'s gaudi2 alias.
-        let (graph, qlayers, calibration) = demo_model(1, 3);
+    fn at_sign_model_names_do_not_collide_with_device_aliases() {
+        // Regression: the old '@'-joined string cache key spelled model
+        // "demo"'s gaudi2 alias as "demo@gaudi2" — colliding with a model
+        // literally REGISTERED under that name (e.g. "llama@fp8"-style
+        // names).  Structured (model, device) keys must keep them apart.
+        let (graph, qlayers, calibration) = demo_model(2, 7);
         let mut engine = Engine::new();
-        engine.register_synthetic("demo@gaudi2", graph, qlayers, calibration);
-        assert!(PlanService::from_engine(&mut engine, &["demo@gaudi2"]).is_err());
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+        let (g1, q1, c1) = demo_model(1, 3); // different depth => different planner
+        engine.register_synthetic("demo@gaudi2", g1, q1, c1);
+        let svc =
+            PlanService::from_engine(&mut engine, &["demo", "demo@gaudi2"]).unwrap();
+        assert_eq!(
+            svc.models(),
+            vec!["demo".to_string(), "demo@gaudi2".to_string()]
+        );
+
+        let req = PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004);
+        let via_alias = svc.solve("demo", &req.clone().with_device("gaudi2")).unwrap();
+        let default = svc.solve("demo", &req).unwrap();
+        let literal = svc.solve("demo@gaudi2", &req).unwrap();
+        // The alias resolves to "demo"'s planner, NOT the '@'-named model.
+        assert_eq!(via_alias, default);
+        assert_ne!(
+            literal.config.len(),
+            via_alias.config.len(),
+            "'demo@gaudi2' answered with 'demo''s planner (cache key collision)"
+        );
+
+        // Frontier cache entries stay separate per model, too.
+        let fa = svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        let fb = svc
+            .frontier("demo@gaudi2", Objective::EmpiricalTime, Strategy::Ip)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&fa, &fb));
+        assert_eq!(svc.frontier_solves(), 2);
+        // Re-registering the '@' model drops only ITS cached curves.
+        let (g2, q2, c2) = demo_model(1, 5);
+        let mut e2 = Engine::new();
+        e2.register_synthetic("demo@gaudi2", g2, q2, c2);
+        svc.register("demo@gaudi2", e2.planner("demo@gaudi2").unwrap());
+        let fa2 = svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        assert!(Arc::ptr_eq(&fa, &fa2), "'demo' curve must survive");
+        assert_eq!(svc.frontier_solves(), 2);
+        let fb2 = svc
+            .frontier("demo@gaudi2", Objective::EmpiricalTime, Strategy::Ip)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&fb, &fb2), "stale '@' model curve served");
+        assert_eq!(svc.frontier_solves(), 3);
+    }
+
+    #[test]
+    fn same_device_name_distinct_planners_do_not_share_frontiers() {
+        // register() + register_for_device() can install two DIFFERENT
+        // planners both measured on "gaudi2"; a device-name-keyed cache
+        // would let whichever sweeps first answer for both.
+        let svc = PlanService::new();
+        let (g1, q1, c1) = demo_model(1, 3);
+        let mut e1 = Engine::new();
+        e1.register_synthetic("demo", g1, q1, c1);
+        svc.register("demo", e1.planner("demo").unwrap());
+        let (g2, q2, c2) = demo_model(1, 9); // different seed, same device
+        let mut e2 = Engine::new();
+        e2.register_synthetic("demo", g2, q2, c2);
+        svc.register_for_device("demo", "gaudi2", e2.planner("demo").unwrap())
+            .unwrap();
+        let fd = svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        let fs = svc
+            .frontier_for("demo", Some("gaudi2"), Objective::EmpiricalTime, Strategy::Ip)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&fd, &fs), "distinct planners shared a frontier cell");
+        assert_eq!(svc.frontier_solves(), 2);
     }
 
     #[test]

@@ -99,7 +99,7 @@ fn build_shared(p: &Mckp) -> Shared<'_> {
         let g = &p.gains[j];
         g.iter().cloned().fold(f64::MIN, f64::max) - g.iter().cloned().fold(f64::MAX, f64::min)
     };
-    order.sort_by(|&a, &b| spread(b).partial_cmp(&spread(a)).unwrap());
+    order.sort_by(|&a, &b| spread(b).total_cmp(&spread(a)).then(a.cmp(&b)));
 
     let n = p.n_groups();
     let mut suffix_min = vec![vec![0.0f64; n + 1]; p.n_dims()];
@@ -115,7 +115,7 @@ fn build_shared(p: &Mckp) -> Shared<'_> {
         .iter()
         .map(|&j| {
             let mut ix: Vec<usize> = (0..p.gains[j].len()).collect();
-            ix.sort_by(|&a, &b| p.gains[j][b].partial_cmp(&p.gains[j][a]).unwrap());
+            ix.sort_by(|&a, &b| p.gains[j][b].total_cmp(&p.gains[j][a]));
             ix
         })
         .collect();
@@ -364,7 +364,12 @@ fn suffix_lp_bound(sh: &Shared, d: usize, pos: usize, remaining_budget: f64) -> 
         // Suffix can't even afford its min-cost choices — signal prune.
         return f64::MIN;
     }
-    incs.sort_by(|a, b| (b.0 / b.1).partial_cmp(&(a.0 / a.1)).unwrap_or(std::cmp::Ordering::Equal));
+    // Total order via the shared `solver::efficiency` (hulls strictly
+    // increase in cost, so 0/0 never forms, but degenerate tables must not
+    // reorder unstably between runs).
+    incs.sort_by(|a, b| {
+        super::efficiency(b.0, b.1).total_cmp(&super::efficiency(a.0, a.1))
+    });
     let mut bound = base_gain;
     for (dg, dc) in incs {
         if remaining <= 0.0 {

@@ -55,10 +55,18 @@ pub fn solve_with_hulls(p: &Mckp, hulls: &[Vec<HullPoint>]) -> Solution {
             });
         }
     }
+    // Zero-cost upgrades are free along the primary dimension: the shared
+    // `solver::efficiency` ranks them +inf so they apply unconditionally
+    // first (degenerate cost tables with equal-cost hull points otherwise
+    // produce 0/0 = NaN ratios whose ordering is unstable).  The sort is
+    // total — NaN-free efficiencies by construction, `total_cmp` plus the
+    // (group, to) key for exact ties — so degenerate tables reorder
+    // deterministically instead of panicking.
+    let eff = |i: &Inc| super::efficiency(i.dgain, i.dcost);
     incs.sort_by(|a, b| {
-        (b.dgain / b.dcost)
-            .partial_cmp(&(a.dgain / a.dcost))
-            .unwrap_or(std::cmp::Ordering::Equal)
+        eff(b)
+            .total_cmp(&eff(a))
+            .then((a.group, a.to).cmp(&(b.group, b.to)))
     });
 
     for inc in incs {
@@ -135,6 +143,49 @@ mod tests {
         .unwrap();
         let s = solve(&p);
         assert_eq!(s.gain, 9.0);
+    }
+
+    #[test]
+    fn degenerate_equal_cost_tables_match_brute_force() {
+        // Two choices at (numerically) the same cost plus denormal cost
+        // steps: the ratio sort must stay total and the free upgrades must
+        // apply first — regression for the 0/inf efficiency ordering.
+        let cases = vec![
+            // Exactly equal costs inside a group.
+            Mckp::new(
+                vec![vec![0.0, 3.0, 7.0], vec![0.0, 4.0]],
+                vec![vec![1.0, 1.0, 1.0], vec![0.0, 2.0]],
+                3.5,
+            )
+            .unwrap(),
+            // Denormal cost steps (efficiencies overflow toward +inf).
+            Mckp::new(
+                vec![vec![0.0, 5.0, 10.0], vec![0.0, 1.0]],
+                vec![vec![0.0, 1e-300, 2e-300], vec![0.0, 1.0]],
+                0.5,
+            )
+            .unwrap(),
+            // A zero-cost upgrade beside a paid one.
+            Mckp::new(
+                vec![vec![0.0, 2.0], vec![0.0, 9.0]],
+                vec![vec![0.0, 0.0], vec![0.0, 5.0]],
+                0.0,
+            )
+            .unwrap(),
+        ];
+        for (i, p) in cases.iter().enumerate() {
+            let g = solve(p);
+            let exact = p.brute_force();
+            assert_eq!(g.feasible, exact.feasible, "case {i}");
+            assert!(g.cost <= p.budget() + 1e-9, "case {i}");
+            assert!(g.gain <= exact.gain + 1e-9, "case {i}");
+        }
+        // The free-upgrade case is solved optimally by greedy alone.
+        let free = solve(&cases[2]);
+        assert_eq!(free.gain, 2.0);
+        // And the denormal case takes the (near-free) 10-gain upgrade.
+        let denormal = solve(&cases[1]);
+        assert_eq!(denormal.gain, 10.0);
     }
 
     #[test]

@@ -19,22 +19,26 @@ pub fn efficient_frontier(costs: &[f64], gains: &[f64]) -> Vec<HullPoint> {
     let mut pts: Vec<HullPoint> = (0..costs.len())
         .map(|i| HullPoint { choice: i, cost: costs[i], gain: gains[i] })
         .collect();
-    // Sort by cost, then by descending gain so the best at equal cost wins.
+    // Sort by cost, then by descending gain so the best at equal cost wins
+    // (total order: degenerate tables must not panic the comparator).
     pts.sort_by(|a, b| {
         a.cost
-            .partial_cmp(&b.cost)
-            .unwrap()
-            .then(b.gain.partial_cmp(&a.gain).unwrap())
+            .total_cmp(&b.cost)
+            .then(b.gain.total_cmp(&a.gain))
+            .then(a.choice.cmp(&b.choice))
     });
-    // Drop dominated points (non-increasing gain as cost grows).
+    // Drop dominated points (non-increasing gain as cost grows).  Exactly
+    // equal costs need no special case: the sort puts the best gain first,
+    // so a same-cost successor always fails the gain test.  Near-equal
+    // costs with strictly more gain are KEPT — collapsing them (as a
+    // tolerance-based dedup once did) would under-report the group's
+    // achievable gain and silently break the LP bound branch & bound
+    // prunes with.
     let mut frontier: Vec<HullPoint> = Vec::new();
     for p in pts {
         if let Some(last) = frontier.last() {
             if p.gain <= last.gain + 1e-15 {
                 continue;
-            }
-            if (p.cost - last.cost).abs() < 1e-18 {
-                continue; // same cost, lower/equal gain already covered
             }
         }
         frontier.push(p);
@@ -95,6 +99,19 @@ mod tests {
         let h = efficient_frontier(&[1.0, 1.0, 2.0], &[3.0, 7.0, 9.0]);
         assert_eq!(h[0].choice, 1);
         assert_eq!(h.len(), 2);
+    }
+
+    #[test]
+    fn near_equal_costs_keep_the_better_gain() {
+        // Two choices a denormal cost step apart: the higher-gain point
+        // must survive (a tolerance dedup here once under-reported the
+        // group's achievable gain, breaking the LP bound's soundness).
+        let h = efficient_frontier(&[0.0, 1e-300, 2e-300], &[0.0, 5.0, 10.0]);
+        let best = h.last().unwrap();
+        assert_eq!(best.choice, 2);
+        assert_eq!(best.gain, 10.0);
+        // The min-cost point is still present (greedy's start / LP base).
+        assert_eq!(h[0].choice, 0);
     }
 
     #[test]

@@ -68,11 +68,14 @@ pub fn solve_with_hulls(p: &Mckp, hulls: &[Vec<HullPoint>]) -> LpSolution {
     }
     // Decreasing efficiency. Hull increments within a group are already
     // decreasing, so the greedy order applies them consistently (point t
-    // before t+1).
+    // before t+1).  Total order (the shared `solver::efficiency` ranks
+    // degenerate dcosts +inf; ties break on the (group, point) key) so
+    // degenerate hulls sort deterministically.
+    let eff = |i: &Increment| super::efficiency(i.dgain, i.dcost);
     incs.sort_by(|a, b| {
-        (b.dgain / b.dcost)
-            .partial_cmp(&(a.dgain / a.dcost))
-            .unwrap_or(std::cmp::Ordering::Equal)
+        eff(b)
+            .total_cmp(&eff(a))
+            .then((a.group, a.to_point).cmp(&(b.group, b.to_point)))
     });
 
     let mut level = vec![0usize; hulls.len()];

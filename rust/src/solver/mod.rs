@@ -18,14 +18,24 @@
 //!     are applied only while every budget still fits.
 //!   * `lp_relax`     — LP relaxation (upper bound; used by branch_bound).
 //!     Multi-budget instances go through a surrogate/Lagrangian weighting.
+//!   * `parametric`   — one-pass chain DP over the group sequence yielding
+//!     the ENTIRE gain-vs-primary-cost Pareto curve (exact
+//!     single-constraint; dominance-bounded near-exact multi-constraint
+//!     with per-point exactness flags and a branch & bound fallback).
+//!     Backs `Planner::frontier` so a K-knot frontier costs one sweep, not
+//!     K exact solves.
 //!
-//! `Mckp::brute_force` stays as the cross-solver oracle for tests.
+//! `Mckp::brute_force` stays as the cross-solver oracle for tests.  Every
+//! float sort in this module is total (`f64::total_cmp` or an explicit
+//! NaN-free key): degenerate inputs produce pruned/ordered states, never a
+//! comparator panic.
 
 pub mod branch_bound;
 pub mod dp;
 pub mod greedy;
 pub mod hull;
 pub mod lp_relax;
+pub mod parametric;
 pub mod problem;
 
 pub use branch_bound::solve as solve_exact;
@@ -35,6 +45,19 @@ pub use problem::{CostDim, Mckp, Solution};
 /// EPS and still count as feasible.  Every solver and the planning layer
 /// use this one constant so tie-breaking is consistent end to end.
 pub const EPS: f64 = 1e-12;
+
+/// Marginal efficiency of a hull upgrade, shared by greedy, the LP
+/// relaxation, and branch & bound's suffix bound so their orderings can
+/// never desynchronize.  Total by construction: hull costs strictly
+/// increase, but a degenerate (non-positive) dcost ranks +inf so free
+/// upgrades sort first and 0/0 never forms a NaN comparator.
+pub(crate) fn efficiency(dgain: f64, dcost: f64) -> f64 {
+    if dcost <= 0.0 {
+        f64::INFINITY
+    } else {
+        dgain / dcost
+    }
+}
 
 /// Solve with the exact method; fall back to greedy if B&B blows the node
 /// budget (never observed on paper-scale instances, but bounded by design).

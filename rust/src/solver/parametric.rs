@@ -1,0 +1,543 @@
+//! Parametric one-pass frontier solver: a dominance-pruned dynamic program
+//! over the sequential sub-graph chain.
+//!
+//! The paper's whole premise (eq. 5) is that both the objective gain and
+//! every constraint cost are ADDITIVE over the chain of sequential
+//! sub-graphs.  That structure means the set of Pareto-optimal
+//! `(gain, cost-vector)` prefixes after group j is everything a later group
+//! can ever need: a prefix that another prefix matches or beats in gain AND
+//! every cost dimension cannot be completed into a strictly better full
+//! assignment than its dominator completed the same way.  [`frontier_with`]
+//! propagates those states left to right — merge each group's choices into
+//! every surviving state, prune dominated states — and reads the ENTIRE
+//! gain-vs-primary-cost Pareto curve off the final state set.  A K-knot
+//! frontier therefore costs one DP sweep instead of K branch & bound
+//! solves.
+//!
+//! * **Single-constraint** instances: the sweep is EXACT — every knot's
+//!   gain equals a pointwise [`branch_bound`] solve at that knot's budget
+//!   (property-tested against the oracle in `tests/parametric.rs`).
+//! * **Multi-constraint** instances: dominance runs over the full
+//!   `(gain, every-cost)` vector, so the sweep stays exact until the state
+//!   cap bites; past the cap states are thinned deterministically and every
+//!   resulting point is flagged `exact = false`.  [`harden_with`] re-solves
+//!   flagged knots with branch & bound for callers that consume incomplete
+//!   curves directly — the planning layer instead abandons incomplete
+//!   curves for its per-tau bisection oracle, since thinning can also DROP
+//!   knots that no per-knot re-solve can restore.
+//!
+//! Dominance uses exact float comparisons; the shared [`EPS`] tolerance
+//! enters exactly where the pointwise solvers use it — budget feasibility
+//! (`cost <= budget + EPS`) — so tie-breaking is consistent end to end.
+//!
+//! ## Determinism
+//!
+//! State expansion fans out over an [`ExecPool`] in fixed-size chunks whose
+//! boundaries are a pure function of the surviving state count — never of
+//! the thread count — and chunk results are concatenated in chunk order.
+//! Pruning then sorts by a TOTAL order (`f64::total_cmp` on the cost/gain
+//! coordinates, then the `(parent, choice)` key), so the curve is
+//! bit-identical at any `--threads` setting: the exec layer's contract.
+
+use super::branch_bound;
+use super::problem::Mckp;
+use super::EPS;
+use crate::exec::ExecPool;
+
+/// Kept-state cap per merge on single-constraint instances.  The 2-d
+/// Pareto set of partial sums stays far below this on paper-scale chains;
+/// the cap only bounds adversarial inputs.
+const MAX_STATES_SINGLE: usize = 32_768;
+/// Kept-state cap per merge on multi-constraint instances, where the
+/// dominance filter is O(candidates x kept) — this is the "dominance
+/// bound" that makes multi-constraint curves near-exact instead of
+/// worst-case exponential.
+const MAX_STATES_MULTI: usize = 2_048;
+/// States per fan-out chunk of the merge (pure in the state count).
+const EXPAND_CHUNK: usize = 512;
+
+/// One DP state: a choice prefix's accumulated (gain, costs), linked to
+/// its parent state so full choice vectors are reconstructed only for the
+/// states that survive to the end.
+#[derive(Clone, Debug)]
+struct Node {
+    gain: f64,
+    /// Per-dimension accumulated cost, summed in group order — bit-equal
+    /// to [`Mckp::evaluate`] of the reconstructed choice.
+    costs: Vec<f64>,
+    /// Index into the previous level's kept states (u32::MAX at the root).
+    parent: u32,
+    choice: u32,
+}
+
+/// One knot of the parametric curve: a full assignment Pareto-optimal in
+/// (gain, primary cost) among all assignments fitting every secondary
+/// budget.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamPoint {
+    pub choice: Vec<usize>,
+    pub gain: f64,
+    /// Per-dimension cost; summation order matches [`Mckp::evaluate`]
+    /// bit-for-bit (`costs[0]` is the primary / loss-MSE dimension).
+    pub costs: Vec<f64>,
+    /// False when the state cap thinned the sweep this point came from:
+    /// the knot is then a dominance-bounded lower estimate, not a proven
+    /// optimum — see [`harden_with`].
+    pub exact: bool,
+}
+
+impl ParamPoint {
+    /// Primary-dimension cost of this knot.
+    pub fn cost(&self) -> f64 {
+        self.costs[0]
+    }
+}
+
+/// The full gain-vs-primary-cost Pareto curve of one [`Mckp`] instance.
+///
+/// Empty iff NO assignment satisfies every budget (the pointwise solvers'
+/// `feasible = false` case); otherwise `points[0]` is the min-primary-cost
+/// assignment — exactly what an infeasible pointwise solve falls back to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParametricCurve {
+    /// Strictly increasing in BOTH primary cost and gain.
+    pub points: Vec<ParamPoint>,
+    /// True when the sweep was exhaustive: no thinning anywhere, so the
+    /// knot SET is complete and every knot is a proven optimum.  False
+    /// after thinning — even once [`harden_with`] proves the surviving
+    /// knots optimal, knots dropped between them stay missing.
+    pub exact: bool,
+}
+
+impl ParametricCurve {
+    /// Highest-gain knot whose primary cost fits `budget` (shared EPS
+    /// slack) — the pointwise optimum at that budget when the curve is
+    /// exact.  None when even the cheapest assignment exceeds `budget`.
+    pub fn at_budget(&self, budget: f64) -> Option<&ParamPoint> {
+        let k = self.points.partition_point(|p| p.costs[0] <= budget + EPS);
+        if k == 0 {
+            None
+        } else {
+            Some(&self.points[k - 1])
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// [`frontier_with`] on the sequential pool.
+pub fn frontier(p: &Mckp) -> ParametricCurve {
+    frontier_with(p, &ExecPool::sequential())
+}
+
+/// One-pass parametric sweep of the whole gain-vs-primary-cost Pareto
+/// curve, fanning the per-group state merge out over `pool`.  Output is
+/// bit-identical at any thread count.
+pub fn frontier_with(p: &Mckp, pool: &ExecPool) -> ParametricCurve {
+    let n = p.n_groups();
+    let dims = p.n_dims();
+    let cap = if dims == 1 { MAX_STATES_SINGLE } else { MAX_STATES_MULTI };
+
+    // suffix_min[d][j] = min dim-d cost over groups j.. — a state whose
+    // cost plus this lower bound already exceeds a budget can never be
+    // completed feasibly and is pruned at expansion.
+    let mut suffix_min = vec![vec![0.0f64; n + 1]; dims];
+    for (d, sm) in suffix_min.iter_mut().enumerate() {
+        for j in (0..n).rev() {
+            let mc = p.costs[d].table[j].iter().cloned().fold(f64::MAX, f64::min);
+            sm[j] = sm[j + 1] + mc;
+        }
+    }
+
+    let mut levels: Vec<Vec<Node>> = Vec::with_capacity(n + 1);
+    levels.push(vec![Node {
+        gain: 0.0,
+        costs: vec![0.0; dims],
+        parent: u32::MAX,
+        choice: 0,
+    }]);
+    let mut truncated = false;
+    for j in 0..n {
+        let prev = &levels[j];
+        let k = p.gains[j].len();
+        // State-merge fan-out: fixed-size chunks of the surviving states
+        // expand in parallel; concatenation is in chunk order, so the
+        // candidate list is identical at any thread count.
+        let mut cands: Vec<Node> = pool
+            .par_chunks(prev, EXPAND_CHUNK, |start, chunk| {
+                let mut out: Vec<Node> = Vec::with_capacity(chunk.len() * k);
+                for (off, s) in chunk.iter().enumerate() {
+                    let parent = (start + off) as u32;
+                    'choices: for i in 0..k {
+                        let mut costs = s.costs.clone();
+                        for d in 0..dims {
+                            let c = costs[d] + p.costs[d].table[j][i];
+                            if c + suffix_min[d][j + 1] > p.budgets[d] + EPS {
+                                continue 'choices;
+                            }
+                            costs[d] = c;
+                        }
+                        out.push(Node {
+                            gain: s.gain + p.gains[j][i],
+                            costs,
+                            parent,
+                            choice: i as u32,
+                        });
+                    }
+                }
+                out
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+
+        // Total-order sort: primary cost asc, gain desc, secondary costs
+        // asc, then the (parent, choice) key — deterministic down to exact
+        // ties, NaN-total by construction (`total_cmp`).
+        cands.sort_by(|a, b| {
+            a.costs[0]
+                .total_cmp(&b.costs[0])
+                .then(b.gain.total_cmp(&a.gain))
+                .then_with(|| {
+                    for d in 1..dims {
+                        let o = a.costs[d].total_cmp(&b.costs[d]);
+                        if o != std::cmp::Ordering::Equal {
+                            return o;
+                        }
+                    }
+                    (a.parent, a.choice).cmp(&(b.parent, b.choice))
+                })
+        });
+
+        let mut kept: Vec<Node> = Vec::new();
+        if dims == 1 {
+            // 2-d Pareto sweep: in cost order, keep strictly rising gain.
+            let mut best_gain = f64::NEG_INFINITY;
+            for c in cands {
+                if c.gain > best_gain {
+                    best_gain = c.gain;
+                    kept.push(c);
+                }
+            }
+        } else {
+            // n-d dominance: a candidate survives unless an already-kept
+            // state matches or beats it in gain AND every cost.  (The sort
+            // order guarantees no later candidate can dominate an earlier
+            // kept one, so `kept` stays an antichain.)
+            for c in cands {
+                let dominated = kept.iter().any(|a| {
+                    a.gain >= c.gain && (0..dims).all(|d| a.costs[d] <= c.costs[d])
+                });
+                if !dominated {
+                    kept.push(c);
+                }
+            }
+        }
+        if kept.len() > cap {
+            truncated = true;
+            kept = thin(kept, cap);
+        }
+        levels.push(kept);
+    }
+
+    // Reconstruct every surviving state's full choice vector through the
+    // parent links, then project onto the primary-cost curve.
+    let mut points: Vec<ParamPoint> = Vec::with_capacity(levels[n].len());
+    for node in &levels[n] {
+        let mut choice = vec![0usize; n];
+        let mut level = n;
+        let mut parent = node.parent;
+        let mut ch = node.choice;
+        while level > 0 {
+            choice[level - 1] = ch as usize;
+            level -= 1;
+            if level > 0 {
+                let pn = &levels[level][parent as usize];
+                ch = pn.choice;
+                parent = pn.parent;
+            }
+        }
+        points.push(ParamPoint {
+            choice,
+            gain: node.gain,
+            costs: node.costs.clone(),
+            exact: !truncated,
+        });
+    }
+    ParametricCurve { points: project(points), exact: !truncated }
+}
+
+/// Project points onto the strictly-increasing (primary cost, gain) curve
+/// (total-order sort; ties resolve to the lexicographically smallest
+/// choice, deterministically).
+fn project(mut points: Vec<ParamPoint>) -> Vec<ParamPoint> {
+    points.sort_by(|a, b| {
+        a.costs[0]
+            .total_cmp(&b.costs[0])
+            .then(b.gain.total_cmp(&a.gain))
+            .then_with(|| a.choice.cmp(&b.choice))
+    });
+    let mut curve: Vec<ParamPoint> = Vec::new();
+    for pt in points {
+        if curve.last().map_or(true, |l| pt.gain > l.gain) {
+            curve.push(pt);
+        }
+    }
+    curve
+}
+
+/// Deterministic thinning past the state cap: an even-by-index subset of
+/// the cost-ordered survivors, always including both endpoints.  Purely a
+/// function of the survivor list — thinned sweeps stay bit-identical
+/// across thread counts — but optimality may be lost, hence the
+/// `exact = false` flags downstream.
+fn thin(kept: Vec<Node>, cap: usize) -> Vec<Node> {
+    debug_assert!(cap >= 2 && kept.len() > cap);
+    let len = kept.len();
+    let mut out: Vec<Node> = Vec::with_capacity(cap);
+    let mut last = usize::MAX;
+    for i in 0..cap {
+        let idx = i * (len - 1) / (cap - 1);
+        if idx != last {
+            out.push(kept[idx].clone());
+            last = idx;
+        }
+    }
+    out
+}
+
+/// Branch & bound fallback for flagged knots: re-solve each non-exact
+/// point at its own primary-cost budget (secondary budgets unchanged),
+/// replace it with the proven optimum, and re-project the curve.  One
+/// exact IP solve per flagged knot — the pre-parametric per-tau price,
+/// paid only where the dominance cap actually bit.  (Each task clones the
+/// instance to override its budget; the clone is strictly cheaper than
+/// the branch & bound solve that follows it.)
+///
+/// Hardening proves every SURVIVING knot optimal (their `exact` flags flip
+/// true), but it cannot resurrect knots the thinning dropped between them
+/// — so the curve-level `exact` stays FALSE: the knot set may be
+/// incomplete, and `at_budget` between survivors may under-report.
+/// Callers needing the full contract must fall back to per-budget solves
+/// (see `Planner::frontier`).
+pub fn harden_with(p: &Mckp, curve: ParametricCurve, pool: &ExecPool) -> ParametricCurve {
+    if curve.exact {
+        return curve;
+    }
+    let flagged: Vec<usize> = curve
+        .points
+        .iter()
+        .enumerate()
+        .filter(|(_, pt)| !pt.exact)
+        .map(|(i, _)| i)
+        .collect();
+    let solved = pool.par_map(flagged.len(), |fi| {
+        let mut q = p.clone();
+        q.budgets[0] = curve.points[flagged[fi]].costs[0];
+        branch_bound::solve(&q)
+    });
+    let mut points = curve.points;
+    for (fi, &i) in flagged.iter().enumerate() {
+        let s = &solved[fi];
+        if s.feasible {
+            points[i] = ParamPoint {
+                choice: s.choice.clone(),
+                gain: s.gain,
+                costs: s.costs.clone(),
+                exact: true,
+            };
+        }
+    }
+    ParametricCurve { points: project(points), exact: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ExecCfg;
+    use crate::solver::problem::gen::{random, random_multi};
+    use crate::solver::CostDim;
+    use crate::util::Rng;
+
+    /// Brute-force oracle: max gain among assignments with primary cost
+    /// <= budget and every secondary cost within its budget.
+    fn oracle_gain(p: &Mckp, primary_budget: f64) -> Option<f64> {
+        let mut q = p.clone();
+        q.budgets[0] = primary_budget;
+        let s = q.brute_force();
+        if s.feasible {
+            Some(s.gain)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn curve_is_strictly_increasing_and_exact_on_random_instances() {
+        let mut rng = Rng::new(0xC0FFEE);
+        for trial in 0..80 {
+            let p = random(&mut rng, 5, 5);
+            let c = frontier(&p);
+            assert!(c.exact, "trial {trial}");
+            for w in c.points.windows(2) {
+                assert!(w[1].costs[0] > w[0].costs[0], "trial {trial}: cost not increasing");
+                assert!(w[1].gain > w[0].gain, "trial {trial}: gain not increasing");
+            }
+            // Every knot is the pointwise optimum at its own budget.
+            for pt in &c.points {
+                let (g, costs) = p.evaluate(&pt.choice);
+                assert_eq!(g.to_bits(), pt.gain.to_bits(), "trial {trial}");
+                assert_eq!(costs[0].to_bits(), pt.costs[0].to_bits(), "trial {trial}");
+                let o = oracle_gain(&p, pt.costs[0]).expect("knot must be feasible");
+                assert!(
+                    (o - pt.gain).abs() < 1e-9,
+                    "trial {trial}: knot gain {} vs oracle {o}",
+                    pt.gain
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multi_constraint_curve_respects_every_budget() {
+        let mut rng = Rng::new(0xBEEF5);
+        for trial in 0..150 {
+            let p = random_multi(&mut rng, 4, 4, 2);
+            let c = frontier(&p);
+            let exact = p.brute_force();
+            if c.points.is_empty() {
+                assert!(!exact.feasible, "trial {trial}: empty curve but feasible instance");
+                continue;
+            }
+            assert!(exact.feasible, "trial {trial}");
+            for pt in &c.points {
+                let (_, costs) = p.evaluate(&pt.choice);
+                for (d, (&cd, &b)) in costs.iter().zip(&p.budgets).enumerate() {
+                    assert!(cd <= b + EPS, "trial {trial}: dim {d} cost {cd} > budget {b}");
+                }
+                let o = oracle_gain(&p, pt.costs[0]).expect("knot feasible");
+                assert!((o - pt.gain).abs() < 1e-9, "trial {trial}");
+            }
+            // Top knot is the full-budget optimum.
+            let top = c.points.last().unwrap();
+            assert!((top.gain - exact.gain).abs() < 1e-9, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn between_knots_the_lower_knot_rules() {
+        let p = Mckp::new(
+            vec![vec![0.0, 10.0], vec![0.0, 8.0]],
+            vec![vec![0.0, 3.0], vec![0.0, 2.0]],
+            10.0,
+        )
+        .unwrap();
+        let c = frontier(&p);
+        // Knots: (0, 0), (2, 8), (3, 10), (5, 18).
+        assert_eq!(c.points.len(), 4);
+        assert_eq!(c.at_budget(1.9).unwrap().gain, 0.0);
+        assert_eq!(c.at_budget(2.0).unwrap().gain, 8.0);
+        assert_eq!(c.at_budget(2.9).unwrap().gain, 8.0);
+        assert_eq!(c.at_budget(3.0).unwrap().gain, 10.0);
+        assert_eq!(c.at_budget(4.9).unwrap().gain, 10.0);
+        assert_eq!(c.at_budget(5.0).unwrap().gain, 18.0);
+        assert!(c.at_budget(-1.0).is_none());
+    }
+
+    #[test]
+    fn secondary_budget_filters_the_curve() {
+        // Dim 1 forbids group 0's upgrade entirely.
+        let p = Mckp::multi(
+            vec![vec![0.0, 10.0], vec![0.0, 8.0]],
+            vec![
+                CostDim::new("mse", vec![vec![0.0, 1.0], vec![0.0, 2.0]]),
+                CostDim::new("bytes", vec![vec![0.0, 9.0], vec![0.0, 1.0]]),
+            ],
+            vec![10.0, 2.0],
+        )
+        .unwrap();
+        let c = frontier(&p);
+        assert_eq!(c.points.len(), 2);
+        assert_eq!(c.points[0].gain, 0.0);
+        assert_eq!(c.points[1].gain, 8.0);
+        assert_eq!(c.points[1].choice, vec![0, 1]);
+    }
+
+    #[test]
+    fn infeasible_secondary_budgets_yield_an_empty_curve() {
+        let p = Mckp::multi(
+            vec![vec![1.0, 5.0]],
+            vec![
+                CostDim::new("a", vec![vec![0.0, 3.0]]),
+                CostDim::new("b", vec![vec![3.0, 0.0]]),
+            ],
+            vec![1.0, 1.0],
+        )
+        .unwrap();
+        assert!(frontier(&p).is_empty());
+    }
+
+    #[test]
+    fn zero_groups_is_a_single_zero_point() {
+        let p = Mckp::new(vec![], vec![], 1.0).unwrap();
+        let c = frontier(&p);
+        assert_eq!(c.points.len(), 1);
+        assert_eq!(c.points[0].gain, 0.0);
+        assert_eq!(c.points[0].choice, Vec::<usize>::new());
+        assert!(c.exact);
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(0xD15C0);
+        let pools = [
+            ExecPool::sequential(),
+            ExecPool::new(ExecCfg::new(2)),
+            ExecPool::new(ExecCfg::new(8)),
+        ];
+        for trial in 0..40 {
+            let dims = 1 + (trial % 3 == 0) as usize;
+            let p = random_multi(&mut rng, 8, 6, dims);
+            let base = frontier_with(&p, &pools[0]);
+            for pool in &pools[1..] {
+                assert_eq!(base, frontier_with(&p, pool), "trial {trial}");
+            }
+        }
+    }
+
+    #[test]
+    fn harden_proves_flagged_knots_but_not_completeness() {
+        // Fabricate a thinned curve with one wrong, non-exact knot and
+        // check harden_with replaces it with the B&B optimum at that
+        // knot's budget — while the curve-level flag stays false (knots
+        // dropped by thinning cannot be resurrected).
+        let p = Mckp::new(
+            vec![vec![0.0, 10.0], vec![0.0, 8.0]],
+            vec![vec![0.0, 3.0], vec![0.0, 2.0]],
+            10.0,
+        )
+        .unwrap();
+        let bad = ParametricCurve {
+            points: vec![ParamPoint {
+                choice: vec![0, 0],
+                gain: 0.0,
+                costs: vec![2.0],
+                exact: false,
+            }],
+            exact: false,
+        };
+        let fixed = harden_with(&p, bad, &ExecPool::sequential());
+        assert_eq!(fixed.points.len(), 1);
+        // At budget 2.0 the optimum IS choice [0, 1] / gain 8.
+        assert_eq!(fixed.points[0].gain, 8.0);
+        assert_eq!(fixed.points[0].choice, vec![0, 1]);
+        assert!(fixed.points[0].exact, "hardened knot is proven optimal");
+        assert!(!fixed.exact, "the knot SET may still be incomplete");
+    }
+}

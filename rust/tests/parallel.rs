@@ -2,8 +2,9 @@
 //! contract, property-tested end to end.
 //!
 //! Every parallelized path — the branch & bound solver, `Planner::frontier`
-//! bisection, the Engine's Calibrated/Measured stage fan-outs, planner
-//! sweeps, and `PlanService::serve_batch` — must produce BIT-IDENTICAL
+//! (the parametric chain DP's state merge), the Engine's
+//! Calibrated/Measured stage fan-outs, planner sweeps, and
+//! `PlanService::serve_batch` — must produce BIT-IDENTICAL
 //! output at `threads = 1` and `threads = N`.  These tests compare the
 //! full artifacts with `assert_eq!` (no tolerances): any scheduling leak
 //! into the numbers is a failure.
@@ -96,12 +97,21 @@ fn frontiers_are_thread_count_invariant() {
         let f1 = seq.frontier(objective, Strategy::Ip).unwrap();
         let fn_ = par.frontier(objective, Strategy::Ip).unwrap();
         assert_eq!(f1, fn_, "{objective:?} frontier diverged");
-        // And the curve still matches pointwise solves.
+        // And the curve still matches pointwise solves.  (Tolerance, not
+        // bits: the parametric curve and the pointwise solver may pick
+        // different members of an exactly-tied optimum — the demo's blocks
+        // are structurally identical under IP-TT — whose float sums can
+        // differ by an ulp.)
         for &tau in &[0.001, 0.004] {
             let plan = seq
                 .solve(&PlanRequest::new(objective).with_loss_budget(tau))
                 .unwrap();
-            assert_eq!(f1.at(tau).gain, plan.gain, "{objective:?} tau {tau}");
+            let g = f1.at(tau).gain;
+            assert!(
+                (g - plan.gain).abs() <= 1e-9 * (1.0 + plan.gain.abs()),
+                "{objective:?} tau {tau}: frontier {g} vs pointwise {}",
+                plan.gain
+            );
         }
     }
 }

@@ -1,0 +1,375 @@
+//! Acceptance suite for the parametric one-pass frontier solver (chain DP
+//! over sequential sub-graphs) and the solver/frontier panic-hardening
+//! satellites:
+//!
+//! * the one-pass curve matches pointwise `branch_bound` solves at every
+//!   knot (and between knots) on randomized chains, single- AND
+//!   multi-constraint — per-tau IP solves remain only as this oracle;
+//! * `Planner::frontier` (parametric) reproduces the bisection sweep it
+//!   replaced on the demo model, knot for knot;
+//! * curves are bit-identical at 1 vs N threads;
+//! * NaN/negative taus are rejected with errors (never panics), and
+//!   degenerate cost tables no longer destabilize the greedy/hull sorts.
+
+use ampq::coordinator::Strategy;
+use ampq::exec::{ExecCfg, ExecPool};
+use ampq::metrics::Objective;
+use ampq::plan::demo::demo_model;
+use ampq::plan::{Engine, PlanRequest, PlanService, ServeRequest};
+use ampq::solver::problem::gen::{random, random_multi};
+use ampq::solver::{branch_bound, dp, greedy, parametric, Mckp};
+use ampq::util::Rng;
+
+fn demo_planner(threads: usize) -> ampq::plan::Planner {
+    let (graph, qlayers, calibration) = demo_model(2, 7);
+    let mut engine = Engine::new().with_threads(threads);
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    engine.planner("demo").unwrap()
+}
+
+/// Pointwise branch & bound at an explicit primary budget — the oracle the
+/// parametric sweep must match.
+fn solve_at(p: &Mckp, primary_budget: f64) -> ampq::solver::Solution {
+    let mut q = p.clone();
+    q.budgets[0] = primary_budget;
+    branch_bound::solve(&q)
+}
+
+#[test]
+fn one_pass_curve_matches_pointwise_branch_bound_single_constraint() {
+    let mut rng = Rng::new(0x515E_CA11);
+    for trial in 0..120 {
+        let p = random(&mut rng, 6, 5);
+        let curve = parametric::frontier(&p);
+        assert!(curve.exact, "trial {trial}: single-constraint sweeps are exact");
+        assert!(!curve.is_empty(), "trial {trial}");
+        for (i, pt) in curve.points.iter().enumerate() {
+            // At the knot's own budget the oracle agrees...
+            let s = solve_at(&p, pt.cost());
+            assert!(s.feasible, "trial {trial} knot {i}");
+            assert!(
+                (s.gain - pt.gain).abs() < 1e-9,
+                "trial {trial} knot {i}: parametric {} vs oracle {}",
+                pt.gain,
+                s.gain
+            );
+            // ...and just below the NEXT knot nothing better appears.
+            if let Some(next) = curve.points.get(i + 1) {
+                let mid = 0.5 * (pt.cost() + next.cost());
+                let m = solve_at(&p, mid);
+                assert!(
+                    (m.gain - pt.gain).abs() < 1e-9,
+                    "trial {trial} knot {i}: mid-budget gain {} vs knot {}",
+                    m.gain,
+                    pt.gain
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn one_pass_curve_matches_pointwise_branch_bound_multi_constraint() {
+    let mut rng = Rng::new(0x9A55_0A11);
+    for trial in 0..120 {
+        let dims = 2 + (trial % 2);
+        let p = random_multi(&mut rng, 4, 4, dims);
+        let mut curve = parametric::frontier(&p);
+        if !curve.exact {
+            curve = parametric::harden_with(&p, curve, &ExecPool::sequential());
+        }
+        let exact = p.brute_force();
+        if curve.is_empty() {
+            assert!(!exact.feasible, "trial {trial}: empty curve on a feasible instance");
+            continue;
+        }
+        assert!(exact.feasible, "trial {trial}");
+        let top = curve.points.last().unwrap();
+        assert!(
+            (top.gain - exact.gain).abs() < 1e-9,
+            "trial {trial}: top knot {} vs brute force {}",
+            top.gain,
+            exact.gain
+        );
+        for (i, pt) in curve.points.iter().enumerate() {
+            let s = solve_at(&p, pt.cost());
+            assert!(s.feasible, "trial {trial} knot {i}");
+            assert!(
+                (s.gain - pt.gain).abs() < 1e-9,
+                "trial {trial} knot {i}: parametric {} vs oracle {}",
+                pt.gain,
+                s.gain
+            );
+        }
+    }
+}
+
+#[test]
+fn curves_are_bit_identical_at_one_vs_n_threads() {
+    let mut rng = Rng::new(0x7_BEAD);
+    let pools = [
+        ExecPool::sequential(),
+        ExecPool::new(ExecCfg::new(4)),
+        ExecPool::new(ExecCfg::new(8)),
+    ];
+    for trial in 0..30 {
+        let dims = 1 + (trial % 3 == 0) as usize;
+        let p = random_multi(&mut rng, 9, 6, dims);
+        let base = parametric::frontier_with(&p, &pools[0]);
+        for pool in &pools[1..] {
+            assert_eq!(base, parametric::frontier_with(&p, pool), "trial {trial}");
+        }
+    }
+    // And end to end through the Planner (assert_eq: every knot bit-equal).
+    let f1 = demo_planner(1).frontier(Objective::EmpiricalTime, Strategy::Ip).unwrap();
+    let f8 = demo_planner(8).frontier(Objective::EmpiricalTime, Strategy::Ip).unwrap();
+    assert_eq!(f1, f8);
+}
+
+#[test]
+fn planner_frontier_reproduces_the_bisection_sweep_on_demo() {
+    let planner = demo_planner(1);
+    for objective in [Objective::EmpiricalTime, Objective::Memory] {
+        let parametric_f = planner.frontier(objective, Strategy::Ip).unwrap();
+        let bisection_f = planner.frontier_via_bisection(objective, Strategy::Ip).unwrap();
+        // Every gain level the bisection sweep localized appears on the
+        // one-pass curve.
+        for (i, old) in bisection_f.points.iter().enumerate() {
+            let hit = parametric_f
+                .points
+                .iter()
+                .find(|p| (p.gain - old.gain).abs() <= 1e-9)
+                .unwrap_or_else(|| {
+                    panic!(
+                        "{objective:?} knot {i} (gain {}) missing from the parametric curve",
+                        old.gain
+                    )
+                });
+            // The parametric knot is the CHEAPEST config at its gain level;
+            // the bisection record carries whatever the pointwise solve
+            // happened to pick, so its MSE can only be >= (equal on the
+            // tie-free empirical-time family, where configs match too).
+            assert!(
+                hit.predicted_mse <= old.predicted_mse + 1e-12,
+                "{objective:?} knot {i}: parametric mse {} above bisection {}",
+                hit.predicted_mse,
+                old.predicted_mse
+            );
+            if objective == Objective::EmpiricalTime {
+                assert!(
+                    (hit.predicted_mse - old.predicted_mse).abs() <= 1e-12,
+                    "{objective:?} knot {i}: mse {} vs {}",
+                    hit.predicted_mse,
+                    old.predicted_mse
+                );
+                assert_eq!(hit.config, old.config, "{objective:?} knot {i}");
+            }
+        }
+        // The parametric curve can only be FINER (it is exact), and its
+        // step function dominates the bisection curve's everywhere.
+        assert!(parametric_f.len() >= bisection_f.len());
+        let n = 400;
+        for i in 0..=n {
+            let tau = parametric_f.tau_max * i as f64 / n as f64;
+            let a = parametric_f.at(tau);
+            let b = bisection_f.at(tau);
+            assert!(
+                a.gain + 1e-9 >= b.gain,
+                "{objective:?} tau {tau}: parametric {} below bisection {}",
+                a.gain,
+                b.gain
+            );
+        }
+    }
+}
+
+#[test]
+fn planner_frontier_matches_pointwise_solves_at_every_knot() {
+    let planner = demo_planner(1);
+    let f = planner.frontier(Objective::EmpiricalTime, Strategy::Ip).unwrap();
+    assert!(f.len() > 3, "demo frontier should have several knots");
+    // Probe each knot's own tau plus a point just below the next knot.
+    let mut taus: Vec<f64> = Vec::new();
+    for w in f.points.windows(2) {
+        taus.push(w[1].tau);
+        taus.push(0.5 * (w[0].tau.max(1e-9) + w[1].tau));
+    }
+    taus.push(f.tau_max);
+    for &tau in &taus {
+        let point = f.at(tau);
+        let plan = planner
+            .solve(&PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(tau))
+            .unwrap();
+        assert!(
+            (point.gain - plan.gain).abs() < 1e-9,
+            "tau {tau}: frontier {} vs pointwise {}",
+            point.gain,
+            plan.gain
+        );
+        assert_eq!(point.config, plan.config, "tau {tau}");
+    }
+}
+
+#[test]
+fn nan_taus_error_instead_of_panicking() {
+    let (graph, qlayers, calibration) = demo_model(1, 3);
+    let mut engine = Engine::new();
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    let svc = PlanService::from_engine(&mut engine, &["demo"]).unwrap();
+
+    for bad in [f64::NAN, f64::INFINITY, -0.004] {
+        // Direct solves reject at the request boundary.
+        let req = PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(bad);
+        assert!(svc.solve("demo", &req).is_err(), "tau {bad} must be rejected");
+        // Frontier lookups reject per request — the batch completes with an
+        // error for the offending entry instead of a poisoned process.
+        let lookup = ServeRequest::new("demo", req).via_frontier();
+        assert!(svc.answer(&lookup).is_err(), "tau {bad} lookup must error");
+        let good = ServeRequest::new(
+            "demo",
+            PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004),
+        );
+        let batch = vec![good.clone(), lookup.clone(), good];
+        let out = svc.serve_batch(&batch, &ExecPool::new(ExecCfg::new(4)));
+        assert!(out.is_err(), "tau {bad} batch must surface the error");
+    }
+    // A NaN probing an already-built frontier resolves to the fallback
+    // point (total lookup), not a panic.
+    let f = svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+    assert_eq!(f.at(f64::NAN).gain, f.points[0].gain);
+}
+
+#[test]
+fn degenerate_cost_tables_survive_every_solver() {
+    // Equal-cost and denormal-step tables: hull/greedy sorts are total,
+    // branch & bound keeps its bound sound, the parametric curve matches
+    // the oracle.
+    let cases = vec![
+        Mckp::new(
+            vec![vec![0.0, 3.0, 7.0], vec![0.0, 4.0]],
+            vec![vec![1.0, 1.0, 1.0], vec![0.0, 2.0]],
+            3.5,
+        )
+        .unwrap(),
+        Mckp::new(
+            vec![vec![0.0, 5.0, 10.0], vec![0.0, 1.0]],
+            vec![vec![0.0, 1e-300, 2e-300], vec![0.0, 1.0]],
+            0.5,
+        )
+        .unwrap(),
+        Mckp::new(
+            vec![vec![0.0, 2.0], vec![0.0, 9.0], vec![1.0, 1.0]],
+            vec![vec![0.0, 0.0], vec![0.0, 5.0], vec![2.0, 2.0]],
+            2.0,
+        )
+        .unwrap(),
+    ];
+    for (i, p) in cases.iter().enumerate() {
+        let exact = p.brute_force();
+        let bb = branch_bound::solve(p);
+        assert_eq!(bb.feasible, exact.feasible, "case {i}");
+        if exact.feasible {
+            assert!(
+                (bb.gain - exact.gain).abs() < 1e-9,
+                "case {i}: bb {} vs {}",
+                bb.gain,
+                exact.gain
+            );
+        }
+        let g = greedy::solve(p);
+        assert!(g.gain <= exact.gain + 1e-9, "case {i}");
+        let d = dp::solve(p);
+        assert!(d.gain <= exact.gain + 1e-9, "case {i}");
+        // Knot gains never overstate the oracle.  (No equality here: with
+        // sub-EPS cost gaps the pointwise solver's EPS budget slack can
+        // legitimately reach the NEXT knot, so the oracle may exceed a
+        // knot that sits within EPS of a better one.)
+        let curve = parametric::frontier(p);
+        for pt in &curve.points {
+            let s = solve_at(p, pt.cost());
+            assert!(
+                s.feasible && s.gain >= pt.gain - 1e-9,
+                "case {i}: oracle {} below knot {}",
+                s.gain,
+                pt.gain
+            );
+        }
+        if exact.feasible {
+            let top = curve.points.last().unwrap();
+            assert!((top.gain - exact.gain).abs() < 1e-9, "case {i}");
+        }
+    }
+}
+
+/// Solver-oracle fuzz: many small randomized MCKP instances with fixed
+/// seeds, every solver checked against `brute_force`.  Run by the CI fuzz
+/// job (`cargo test --release --test parametric -- --ignored fuzz`).
+#[test]
+#[ignore = "fuzz job: CI runs it with --ignored (slow under the default profile)"]
+fn fuzz_solver_oracle_small_instances() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(0xF025 ^ seed);
+        for trial in 0..60 {
+            let single = trial % 2 == 0;
+            let p = if single {
+                random(&mut rng, 5, 5)
+            } else {
+                random_multi(&mut rng, 4, 4, 2)
+            };
+            let exact = p.brute_force();
+            let bb = branch_bound::solve(&p);
+            assert_eq!(bb.feasible, exact.feasible, "seed {seed} trial {trial}");
+            if exact.feasible {
+                assert!(
+                    (bb.gain - exact.gain).abs() < 1e-9,
+                    "seed {seed} trial {trial}: bb {} vs brute {}",
+                    bb.gain,
+                    exact.gain
+                );
+            }
+            let g = greedy::solve(&p);
+            if g.feasible {
+                assert!(p.fits(&g.costs), "seed {seed} trial {trial}: greedy infeasible");
+                assert!(
+                    g.gain <= exact.gain + 1e-9,
+                    "seed {seed} trial {trial}: greedy {} beats brute {}",
+                    g.gain,
+                    exact.gain
+                );
+            }
+            if single {
+                let d = dp::solve(&p);
+                assert_eq!(d.feasible, exact.feasible, "seed {seed} trial {trial}");
+                if d.feasible {
+                    assert!(d.cost <= p.budget() + 1e-9, "seed {seed} trial {trial}");
+                }
+            }
+            let mut curve = parametric::frontier(&p);
+            if !curve.exact {
+                curve = parametric::harden_with(&p, curve, &ExecPool::sequential());
+            }
+            if curve.is_empty() {
+                assert!(!exact.feasible, "seed {seed} trial {trial}: empty curve");
+                continue;
+            }
+            for pt in &curve.points {
+                let s = solve_at(&p, pt.cost());
+                assert!(
+                    s.feasible && (s.gain - pt.gain).abs() < 1e-9,
+                    "seed {seed} trial {trial}: knot {} vs oracle {}",
+                    pt.gain,
+                    s.gain
+                );
+            }
+            if exact.feasible {
+                let top = curve.points.last().unwrap();
+                assert!(
+                    (top.gain - exact.gain).abs() < 1e-9,
+                    "seed {seed} trial {trial}: top {} vs brute {}",
+                    top.gain,
+                    exact.gain
+                );
+            }
+        }
+    }
+}
