@@ -1,0 +1,65 @@
+//! Tiny HTTP client for the planning daemon, used by CI's daemon smoke
+//! job (curl is not assumed on the runner).
+//!
+//! ```text
+//! ampq_client <addr> <method> <path> [--data JSON] [--expect-status N]
+//! ```
+//!
+//! The response body goes to stdout.  With `--expect-status`, a
+//! different actual status exits nonzero (after printing the body), so
+//! shell pipelines can both grep the payload and assert the status.
+
+use anyhow::{anyhow, bail, Result};
+use std::io::Write;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("ampq_client: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.len() < 3 || argv.iter().any(|a| a == "--help") {
+        bail!("usage: ampq_client <addr> <method> <path> [--data JSON] [--expect-status N]");
+    }
+    let (addr, method, path) = (&argv[0], &argv[1], &argv[2]);
+    let mut data: Option<String> = None;
+    let mut expect: Option<u16> = None;
+    let mut i = 3;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--data" => {
+                i += 1;
+                data = Some(
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("--data needs a value"))?,
+                );
+            }
+            "--expect-status" => {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .ok_or_else(|| anyhow!("--expect-status needs a value"))?;
+                expect = Some(v.parse().map_err(|_| anyhow!("bad status '{v}'"))?);
+            }
+            other => bail!("unknown argument '{other}'"),
+        }
+        i += 1;
+    }
+    let resp = ampq::serve::client::request(addr, method, path, data.as_deref())?;
+    let mut out = std::io::stdout();
+    out.write_all(&resp.body)?;
+    if !resp.body.ends_with(b"\n") {
+        out.write_all(b"\n")?;
+    }
+    out.flush()?;
+    if let Some(want) = expect {
+        if resp.status != want {
+            bail!("status {} (expected {want})", resp.status);
+        }
+    }
+    Ok(())
+}

@@ -54,6 +54,7 @@ pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod sensitivity;
+pub mod serve;
 pub mod solver;
 pub mod tensorbin;
 pub mod timing;

@@ -63,7 +63,10 @@ commands:
               (model, objective, strategy); the IP curve is ONE
               parametric DP sweep, not a solve per tau
   serve       answer a JSON array of requests (--requests FILE) on a
-              concurrent PlanService; entries may carry \"device\"
+              concurrent PlanService; entries may carry \"device\".
+              with --listen ADDR: run as a resident daemon serving
+              POST /v1/plan, POST /v1/frontier (NDJSON streaming),
+              GET /v1/models, /v1/devices, /metrics, /healthz
   devices     list the built-in hardware device profiles
   compare     plan on several devices (--devices a,b,c) and print their
               Pareto frontiers side by side
@@ -76,11 +79,21 @@ options:
   --no-cache            disable the stage cache under <artifacts>/cache/
   --device NAME|FILE    hardware profile: a registry name (see `ampq
                         devices`) or a JSON profile file [gaudi2]
-  --devices a,b,c       compare: device list (names and/or JSON files)
+  --devices a,b,c       compare: device list (names and/or JSON files);
+                        serve --listen: extra devices to pre-stage
   --out DIR             figures output dir [results]
   --tau X               loss-NRMSE threshold [0.004]
   --memory-cap BYTES    additional stored-weight-byte cap (optimize)
   --requests FILE       serve: JSON array of plan/frontier requests
+  --listen ADDR         serve: bind a resident planning daemon on ADDR
+                        (e.g. 127.0.0.1:8787) instead of batch mode
+  --models a,b,c        serve --listen: models to stage [--model]
+  --queue-depth N       serve --listen: admission queue bound; overflow
+                        answers 503 + Retry-After [64]
+  --cache-cap N         serve --listen: frontier cache entry cap (LRU
+                        eviction; 0 = unbounded) [32]
+  --request-timeout MS  serve --listen: per-request deadline; expiry
+                        answers 504 [10000]
   --threads N           worker threads for parallel stages, solves,
                         frontier sweeps, and serve batches
                         [AMPQ_THREADS or available parallelism;
@@ -200,7 +213,13 @@ fn run(raw: &[String]) -> Result<()> {
         "pipeline" => cmd_pipeline(&mut engine, &model, &args, json),
         "sweep" => cmd_sweep(&mut engine, &model, &args, json),
         "frontier" => cmd_frontier(&mut engine, &model, &args, json),
-        "serve" => cmd_serve(&mut engine, &spec, &args, json),
+        "serve" => {
+            if args.get("listen").is_some() {
+                cmd_serve_listen(&mut engine, &spec, &model, &args)
+            } else {
+                cmd_serve(&mut engine, &spec, &args, json)
+            }
+        }
         "devices" => cmd_devices(&registry, json),
         "compare" => cmd_compare(&spec, &registry, &model, &args, json),
         "figures" => cmd_figures(engine, &args, fwd_mode),
@@ -584,10 +603,15 @@ fn cmd_serve(engine: &mut Engine, spec: &EngineSpec, args: &Args, json: bool) ->
         .collect();
     default_models.sort();
     default_models.dedup();
-    let svc = engine.service(&default_models)?;
+    // Lossy staging: a model that fails to stage answers its requests
+    // with indexed error entries instead of killing the batch.
+    let svc = ampq::plan::PlanService::new();
+    for (m, err) in svc.stage_from_engine(engine, &default_models) {
+        eprintln!("serve: skipping model '{m}': {err}");
+    }
     // Requests may target other devices: stage exactly the (model, device)
     // pairs the batch references (the default engine's own device name is
-    // already registered by `service`).
+    // already registered by the staging above).
     let mut pairs: Vec<(&str, &str)> = reqs
         .iter()
         .filter_map(|r| {
@@ -608,16 +632,33 @@ fn cmd_serve(engine: &mut Engine, spec: &EngineSpec, args: &Args, json: bool) ->
         }
         let dev_engine =
             &mut dev_engines.iter_mut().find(|(n, _)| n.as_str() == dname).unwrap().1;
-        svc.register_for_device(model, dname, dev_engine.planner(model)?)?;
+        match dev_engine.planner(model) {
+            Ok(p) => svc.register_for_device(model, dname, p)?,
+            Err(e) => eprintln!("serve: skipping '{model}' on '{dname}': {e:#}"),
+        }
     }
     let pool = ExecPool::new(spec.exec);
     let t0 = Instant::now();
-    let answers = svc.serve_batch(&reqs, &pool)?;
+    // Lossy batch semantics: one bad request (unknown model, NaN tau, ...)
+    // yields an indexed error line, never a poisoned batch — the same
+    // per-entry answer schema the daemon streams on POST /v1/plan.
+    let answers = svc.serve_batch_lossy(&reqs, &pool);
     let elapsed = t0.elapsed();
+    let mut failures = 0usize;
     for a in &answers {
+        let kind = a.opt("kind").and_then(|k| k.str().ok());
+        if kind == Some("error") {
+            failures += 1;
+        }
         if json {
             println!("{}", a.to_string());
-        } else if a.opt("kind").and_then(|k| k.str().ok()) == Some("plan") {
+        } else if kind == Some("error") {
+            println!(
+                "request {} failed: {}",
+                a.get("index")?.usize()?,
+                a.get("error")?.str()?
+            );
+        } else if kind == Some("plan") {
             println!("{}", Plan::from_json(a)?.summary());
         } else {
             println!(
@@ -632,9 +673,10 @@ fn cmd_serve(engine: &mut Engine, spec: &EngineSpec, args: &Args, json: bool) ->
         }
     }
     eprintln!(
-        "serve: {} requests over {} models on {} threads in {:.1} ms \
+        "serve: {} requests ({} failed) over {} models on {} threads in {:.1} ms \
          ({:.1} us/request); {} frontier sweeps",
         reqs.len(),
+        failures,
         models.len(),
         pool.threads(),
         elapsed.as_secs_f64() * 1e3,
@@ -642,6 +684,109 @@ fn cmd_serve(engine: &mut Engine, spec: &EngineSpec, args: &Args, json: bool) ->
         svc.frontier_solves()
     );
     Ok(())
+}
+
+/// Shutdown flag flipped by SIGINT/SIGTERM.  Static (not per-daemon)
+/// because a C signal handler cannot carry context; a watcher thread in
+/// [`cmd_serve_listen`] forwards it to the daemon's own handle.
+static SIGNALLED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALLED.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    // SAFETY: installs an async-signal-safe handler (a single atomic
+    // store) for SIGINT(2)/SIGTERM(15) through the C `signal` entry
+    // point; no Rust state is touched from signal context.
+    unsafe {
+        signal(2, on_signal);
+        signal(15, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+fn cmd_serve_listen(
+    engine: &mut Engine,
+    spec: &EngineSpec,
+    model: &str,
+    args: &Args,
+) -> Result<()> {
+    use ampq::serve::{Daemon, ServeConfig};
+    let addr = args.get("listen").unwrap_or("127.0.0.1:8787").to_string();
+    let queue_depth = args.usize_or("queue-depth", 64)?;
+    let cache_cap = args.usize_or("cache-cap", 32)?;
+    let timeout_ms = args.u64_or("request-timeout", 10_000)?;
+    let workers = spec.exec.threads.max(1);
+    let model_list: Vec<String> = args
+        .get_or("models", model)
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let refs: Vec<&str> = model_list.iter().map(String::as_str).collect();
+    // Daemon startup is strict: a model that cannot stage fails loudly
+    // here, instead of answering 400 to every request later.
+    let svc = engine.service(&refs)?;
+    // Optionally pre-stage extra devices so requests naming them route
+    // without a cold staging pass on the serving path.
+    let mut registry = Registry::builtin();
+    registry.register(engine.device().clone());
+    if let Some(devs) = args.get("devices") {
+        for d in devs.split(',') {
+            let d = d.trim();
+            if d.is_empty() {
+                continue;
+            }
+            let profile = registry.resolve(d)?;
+            if profile.name == engine.device().name {
+                continue;
+            }
+            let name = profile.name.clone();
+            registry.register(profile.clone());
+            let mut dev_engine = spec.engine(profile);
+            for m in &refs {
+                svc.register_for_device(m, &name, dev_engine.planner(m)?)?;
+            }
+        }
+    }
+    let devices: Vec<DeviceProfile> = registry.iter().cloned().collect();
+    let cfg = ServeConfig {
+        addr,
+        queue_depth,
+        workers,
+        cache_cap,
+        request_timeout: std::time::Duration::from_millis(timeout_ms),
+        ..ServeConfig::default()
+    };
+    let daemon = Daemon::new(svc, devices, cfg);
+    let listener = daemon.bind()?;
+    let local = listener.local_addr()?;
+    install_signal_handlers();
+    let handle = daemon.handle();
+    // Detached watcher forwarding SIGINT/SIGTERM to the daemon's own
+    // shutdown handle; dies with the process either way.
+    std::thread::spawn(move || loop {
+        if SIGNALLED.load(std::sync::atomic::Ordering::SeqCst) {
+            handle.shutdown();
+            return;
+        }
+        if handle.is_shutdown() {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    });
+    eprintln!(
+        "ampq serve: listening on {local} ({} models, {workers} workers, queue depth \
+         {queue_depth}, cache cap {cache_cap}, request timeout {timeout_ms} ms)",
+        model_list.len()
+    );
+    daemon.run(listener)
 }
 
 fn cmd_devices(registry: &Registry, json: bool) -> Result<()> {

@@ -50,12 +50,30 @@ type PlannerKey = (String, Option<String>);
 /// keys from different models differ in the leading component.
 type FrontierKey = (String, usize, &'static str, &'static str);
 
+/// The frontier cache proper: cells plus a monotonic access clock for
+/// LRU eviction.  A resident daemon serves unbounded (model, device,
+/// objective, strategy) combinations over its lifetime; without a cap
+/// the cell map — and the `Arc<Frontier>` curves it pins — would grow
+/// without bound.
+struct FrontierCache {
+    /// value = (cell, last-access stamp).
+    cells: BTreeMap<FrontierKey, (FrontierCell, u64)>,
+    tick: u64,
+}
+
 struct Inner {
     planners: RwLock<BTreeMap<PlannerKey, Arc<Planner>>>,
     /// Frontier cells.  The outer lock guards only the map; computation
     /// happens under the per-key cell.
-    frontiers: Mutex<BTreeMap<FrontierKey, FrontierCell>>,
+    frontiers: Mutex<FrontierCache>,
     frontier_solves: AtomicUsize,
+    /// Lookups answered from an already-computed cell.  Every
+    /// `frontier_for` call lands in exactly one of hits/solves (or
+    /// errors), so hit rate is `hits / (hits + solves)`.
+    frontier_hits: AtomicUsize,
+    /// Maximum retained cells; 0 = unbounded (the library default — CLI
+    /// one-shots don't live long enough to care).
+    cache_cap: AtomicUsize,
 }
 
 /// Thread-safe handle answering plan/frontier queries for registered models.
@@ -75,8 +93,10 @@ impl PlanService {
         PlanService {
             inner: Arc::new(Inner {
                 planners: RwLock::new(BTreeMap::new()),
-                frontiers: Mutex::new(BTreeMap::new()),
+                frontiers: Mutex::new(FrontierCache { cells: BTreeMap::new(), tick: 0 }),
                 frontier_solves: AtomicUsize::new(0),
+                frontier_hits: AtomicUsize::new(0),
+                cache_cap: AtomicUsize::new(0),
             }),
         }
     }
@@ -88,9 +108,9 @@ impl PlanService {
         // curves.  Frontier keys lead with the model, so dropping every
         // entry for it over-invalidates (other devices' curves) at worst.
         {
-            let mut frontiers =
+            let mut cache =
                 self.inner.frontiers.lock().expect("frontier cache lock poisoned");
-            frontiers.retain(|k, _| k.0 != key.0);
+            cache.cells.retain(|k, _| k.0 != key.0);
         }
         self.inner
             .planners
@@ -111,6 +131,32 @@ impl PlanService {
             svc.insert((m.to_string(), Some(device.clone())), planner);
         }
         Ok(svc)
+    }
+
+    /// Like [`PlanService::from_engine`], but lossy: a model that fails
+    /// to stage is skipped and returned with its error instead of
+    /// failing the whole set.  Its requests then answer with per-entry
+    /// errors (`serve_batch_lossy`, the daemon) — one bad model never
+    /// poisons a batch.  Successes share one planner `Arc` between the
+    /// default and device alias, exactly like `from_engine`.
+    pub fn stage_from_engine(
+        &self,
+        engine: &mut Engine,
+        models: &[&str],
+    ) -> Vec<(String, String)> {
+        let device = engine.device().name.clone();
+        let mut failed = Vec::new();
+        for m in models {
+            match engine.planner(m) {
+                Ok(p) => {
+                    let planner = Arc::new(p);
+                    self.insert((m.to_string(), None), planner.clone());
+                    self.insert((m.to_string(), Some(device.clone())), planner);
+                }
+                Err(e) => failed.push((m.to_string(), format!("{e:#}"))),
+            }
+        }
+        failed
     }
 
     /// Register `planner` as the model's default (device-less requests).
@@ -202,16 +248,44 @@ impl PlanService {
             objective.key(),
             strategy.key(),
         );
-        let cell: FrontierCell = self
-            .inner
-            .frontiers
-            .lock()
-            .expect("frontier cache lock poisoned")
-            .entry(key)
-            .or_default()
-            .clone();
+        let cell: FrontierCell = {
+            let mut cache =
+                self.inner.frontiers.lock().expect("frontier cache lock poisoned");
+            cache.tick += 1;
+            let now = cache.tick;
+            if let Some((cell, stamp)) = cache.cells.get_mut(&key) {
+                *stamp = now;
+                cell.clone()
+            } else {
+                let cell = FrontierCell::default();
+                cache.cells.insert(key, (cell.clone(), now));
+                // LRU eviction: drop least-recently-touched cells over the
+                // cap (never the one just inserted — it holds the max
+                // stamp).  Evicting a cell mid-sweep is safe: the sweeping
+                // thread owns its own Arc to the cell; only the CACHING of
+                // that curve is lost.
+                let cap = self.inner.cache_cap.load(Ordering::Relaxed);
+                if cap > 0 {
+                    while cache.cells.len() > cap {
+                        let victim = cache
+                            .cells
+                            .iter()
+                            .min_by_key(|(_, v)| v.1)
+                            .map(|(k, _)| k.clone());
+                        match victim {
+                            Some(v) => {
+                                cache.cells.remove(&v);
+                            }
+                            None => break,
+                        }
+                    }
+                }
+                cell
+            }
+        };
         let mut slot = cell.lock().expect("frontier cell lock poisoned");
         if let Some(f) = slot.as_ref() {
+            self.inner.frontier_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(f.clone());
         }
         let f = Arc::new(planner.frontier(objective, strategy)?);
@@ -223,6 +297,36 @@ impl PlanService {
     /// How many frontier sweeps actually ran (cache misses).
     pub fn frontier_solves(&self) -> usize {
         self.inner.frontier_solves.load(Ordering::Relaxed)
+    }
+
+    /// How many `frontier_for` calls were answered from the cache.
+    pub fn frontier_hits(&self) -> usize {
+        self.inner.frontier_hits.load(Ordering::Relaxed)
+    }
+
+    /// Cached frontier cells currently retained.
+    pub fn frontier_cache_len(&self) -> usize {
+        self.inner.frontiers.lock().expect("frontier cache lock poisoned").cells.len()
+    }
+
+    /// Cap the frontier cache at `cap` entries, evicting LRU cells over
+    /// the cap now and on every future insert.  `0` removes the cap.
+    pub fn set_cache_cap(&self, cap: usize) {
+        self.inner.cache_cap.store(cap, Ordering::Relaxed);
+        if cap == 0 {
+            return;
+        }
+        let mut cache = self.inner.frontiers.lock().expect("frontier cache lock poisoned");
+        while cache.cells.len() > cap {
+            let victim =
+                cache.cells.iter().min_by_key(|(_, v)| v.1).map(|(k, _)| k.clone());
+            match victim {
+                Some(v) => {
+                    cache.cells.remove(&v);
+                }
+                None => break,
+            }
+        }
     }
 
     /// Answer one serve entry: a fresh solve, or (for `via_frontier`
@@ -278,6 +382,38 @@ impl PlanService {
     pub fn serve_batch(&self, reqs: &[ServeRequest], pool: &ExecPool) -> Result<Vec<Json>> {
         pool.try_par_map(reqs.len(), |i| self.answer(&reqs[i]))
     }
+
+    /// Answer a batch without failing it: every entry yields a line — the
+    /// answer stamped with its request index, or an indexed error object
+    /// ([`error_entry`]).  Same schema as the daemon's streaming batch
+    /// path, so `ampq serve --requests` output and `POST /v1/plan` bodies
+    /// are interchangeable downstream.
+    pub fn serve_batch_lossy(&self, reqs: &[ServeRequest], pool: &ExecPool) -> Vec<Json> {
+        pool.par_map(reqs.len(), |i| match self.answer(&reqs[i]) {
+            Ok(j) => indexed(i, j),
+            Err(e) => error_entry(i, &format!("{e:#}")),
+        })
+    }
+}
+
+/// Stamp an answer with its request index (leading key, so streaming
+/// consumers can attribute a line before parsing the rest).
+pub fn indexed(i: usize, j: Json) -> Json {
+    let mut kv = vec![("index".to_string(), Json::Num(i as f64))];
+    match j {
+        Json::Obj(rest) => kv.extend(rest),
+        other => kv.push(("answer".to_string(), other)),
+    }
+    Json::Obj(kv)
+}
+
+/// The per-request error object of a lossy batch: request index + message.
+pub fn error_entry(i: usize, msg: &str) -> Json {
+    Json::Obj(vec![
+        ("kind".to_string(), Json::Str("error".to_string())),
+        ("index".to_string(), Json::Num(i as f64)),
+        ("error".to_string(), Json::Str(msg.to_string())),
+    ])
 }
 
 /// One entry of a serve batch: a model to route to plus the request itself.
@@ -317,8 +453,7 @@ impl ServeRequest {
         let request = PlanRequest::from_json(j)?;
         let via_frontier = match j.opt("via_frontier") {
             None => false,
-            Some(Json::Bool(b)) => *b,
-            Some(_) => bail!("'via_frontier' must be a bool"),
+            Some(v) => v.bool().map_err(|_| anyhow!("'via_frontier' must be a bool"))?,
         };
         Ok(ServeRequest { model, request, via_frontier })
     }
@@ -510,6 +645,82 @@ mod tests {
             .unwrap();
         assert!(Arc::ptr_eq(&fd, &f2));
         assert_eq!(svc.frontier_solves(), 2);
+    }
+
+    #[test]
+    fn frontier_cache_evicts_lru_under_cap() {
+        let svc = demo_service();
+        svc.set_cache_cap(2);
+        svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        svc.frontier("demo", Objective::Memory, Strategy::Ip).unwrap();
+        assert_eq!(svc.frontier_cache_len(), 2);
+        assert_eq!(svc.frontier_solves(), 2);
+        // Touch ET so Memory becomes the LRU entry, then overflow the cap.
+        svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        assert_eq!(svc.frontier_hits(), 1);
+        svc.frontier("demo", Objective::TheoreticalTime, Strategy::Ip).unwrap();
+        assert_eq!(svc.frontier_cache_len(), 2, "cap must hold");
+        assert_eq!(svc.frontier_solves(), 3);
+        // ET survived the eviction...
+        svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        assert_eq!(svc.frontier_solves(), 3);
+        assert_eq!(svc.frontier_hits(), 2);
+        // ...and Memory (the LRU victim) re-solves on demand.
+        svc.frontier("demo", Objective::Memory, Strategy::Ip).unwrap();
+        assert_eq!(svc.frontier_solves(), 4);
+        // Every call above was exactly one hit or one solve.
+        assert_eq!(svc.frontier_hits() + svc.frontier_solves(), 6);
+    }
+
+    #[test]
+    fn shrinking_cache_cap_evicts_immediately() {
+        let svc = demo_service();
+        svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        svc.frontier("demo", Objective::TheoreticalTime, Strategy::Ip).unwrap();
+        svc.frontier("demo", Objective::Memory, Strategy::Ip).unwrap();
+        assert_eq!(svc.frontier_cache_len(), 3, "unbounded by default");
+        svc.set_cache_cap(1);
+        assert_eq!(svc.frontier_cache_len(), 1);
+        // The survivor is the most recently touched curve: Memory.
+        svc.frontier("demo", Objective::Memory, Strategy::Ip).unwrap();
+        assert_eq!(svc.frontier_solves(), 3);
+        assert_eq!(svc.frontier_hits(), 1);
+    }
+
+    #[test]
+    fn lossy_batch_reports_indexed_errors_and_matches_answers() {
+        let svc = demo_service();
+        let good = ServeRequest::new(
+            "demo",
+            PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004),
+        );
+        let bad_model = ServeRequest::new(
+            "nope",
+            PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004),
+        );
+        let bad_tau = ServeRequest {
+            model: "demo".to_string(),
+            request: PlanRequest::new(Objective::EmpiricalTime)
+                .with_loss_budget(f64::NAN),
+            via_frontier: true,
+        };
+        let reqs = vec![good.clone(), bad_model, bad_tau, good.clone()];
+        let out =
+            svc.serve_batch_lossy(&reqs, &ExecPool::new(crate::exec::ExecCfg::new(4)));
+        assert_eq!(out.len(), 4);
+        // Good entries: the direct answer with a leading index stamp.
+        assert_eq!(out[0], indexed(0, svc.answer(&good).unwrap()));
+        assert_eq!(out[3], indexed(3, svc.answer(&good).unwrap()));
+        // Bad entries: indexed error objects, batch not poisoned.
+        for (i, line) in [(1usize, &out[1]), (2, &out[2])] {
+            assert_eq!(line.get("kind").unwrap().str().unwrap(), "error");
+            assert_eq!(line.get("index").unwrap().usize().unwrap(), i);
+            assert!(!line.get("error").unwrap().str().unwrap().is_empty());
+        }
+        // The whole-batch path still fails fast on the earliest error.
+        assert!(svc
+            .serve_batch(&reqs, &ExecPool::new(crate::exec::ExecCfg::new(2)))
+            .is_err());
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Minimal HTTP/1.1 client for the planning daemon: keep-alive requests,
+//! `Content-Length` and chunked response bodies.  Drives
+//! `tests/serve_daemon.rs` and the `ampq_client` smoke binary — NOT a
+//! general-purpose client (no TLS, no redirects, no request streaming).
+
+use anyhow::{anyhow, bail, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// One parsed response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    /// Lowercased names, trimmed values.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn text(&self) -> Result<String> {
+        String::from_utf8(self.body.clone()).map_err(|_| anyhow!("non-utf8 response body"))
+    }
+
+    /// Non-empty NDJSON lines of the body.
+    pub fn lines(&self) -> Result<Vec<String>> {
+        Ok(self
+            .text()?
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(str::to_string)
+            .collect())
+    }
+}
+
+/// One keep-alive connection to the daemon.
+pub struct Client {
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        Self::connect_with_timeout(addr, Duration::from_secs(30))
+    }
+
+    pub fn connect_with_timeout(addr: &str, timeout: Duration) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| anyhow!("connect {addr}: {e}"))?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { r: BufReader::new(stream) })
+    }
+
+    /// Issue one request and read the full response (chunked bodies are
+    /// decoded).  The connection stays usable for the next request as
+    /// long as the server kept it alive.
+    pub fn request(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<Response> {
+        let payload = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: ampq\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            payload.len()
+        );
+        let stream = self.r.get_mut();
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(payload.as_bytes())?;
+        stream.flush()?;
+        self.read_response()
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = Vec::new();
+        self.r.read_until(b'\n', &mut line)?;
+        if line.is_empty() {
+            bail!("connection closed mid-response");
+        }
+        while matches!(line.last(), Some(b'\n') | Some(b'\r')) {
+            line.pop();
+        }
+        String::from_utf8(line).map_err(|_| anyhow!("non-utf8 response line"))
+    }
+
+    fn read_response(&mut self) -> Result<Response> {
+        let status_line = self.read_line()?;
+        let mut parts = status_line.split(' ');
+        let version = parts.next().unwrap_or("");
+        if !version.starts_with("HTTP/1.") {
+            bail!("bad status line '{status_line}'");
+        }
+        let status: u16 = parts
+            .next()
+            .ok_or_else(|| anyhow!("bad status line '{status_line}'"))?
+            .parse()
+            .map_err(|_| anyhow!("bad status in '{status_line}'"))?;
+        let mut headers: Vec<(String, String)> = Vec::new();
+        loop {
+            let line = self.read_line()?;
+            if line.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+            }
+        }
+        // An interim 100 Continue is followed by the real response.
+        if status == 100 {
+            return self.read_response();
+        }
+        let header = |name: &str| -> Option<&str> {
+            headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+        };
+        let body = if header("transfer-encoding")
+            .map(|v| v.to_ascii_lowercase().contains("chunked"))
+            .unwrap_or(false)
+        {
+            self.read_chunked()?
+        } else {
+            let n: usize = match header("content-length") {
+                Some(v) => v.parse().map_err(|_| anyhow!("bad content-length '{v}'"))?,
+                None => 0,
+            };
+            let mut body = vec![0u8; n];
+            self.r.read_exact(&mut body)?;
+            body
+        };
+        Ok(Response { status, headers, body })
+    }
+
+    fn read_chunked(&mut self) -> Result<Vec<u8>> {
+        let mut body = Vec::new();
+        loop {
+            let size_line = self.read_line()?;
+            let size = usize::from_str_radix(size_line.trim(), 16)
+                .map_err(|_| anyhow!("bad chunk size '{size_line}'"))?;
+            if size == 0 {
+                // Trailer section: blank line terminates.
+                loop {
+                    if self.read_line()?.is_empty() {
+                        break;
+                    }
+                }
+                return Ok(body);
+            }
+            let start = body.len();
+            body.resize(start + size, 0);
+            self.r.read_exact(&mut body[start..])?;
+            let mut crlf = [0u8; 2];
+            self.r.read_exact(&mut crlf)?;
+            if &crlf != b"\r\n" {
+                bail!("chunk not terminated by CRLF");
+            }
+        }
+    }
+}
+
+/// One-shot convenience: connect, request, disconnect.
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<Response> {
+    Client::connect(addr)?.request(method, path, body)
+}

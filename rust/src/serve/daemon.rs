@@ -1,0 +1,787 @@
+//! The resident planning daemon: a TCP accept loop, a bounded admission
+//! queue feeding a fixed solver worker pool, and an HTTP router over the
+//! shared [`PlanService`].
+//!
+//! Request flow: a connection thread parses one HTTP request
+//! ([`super::http`]), turns it into jobs, and submits them to the
+//! [`AdmissionQueue`] — all-or-nothing, so overflow is an immediate `503`
+//! + `Retry-After` instead of a half-admitted batch.  Worker threads
+//! (one per exec worker) pop jobs and answer them on the `PlanService`;
+//! the connection thread reassembles replies in request order and streams
+//! batch/frontier results as newline-delimited JSON chunks.  Every
+//! per-request deadline is enforced twice: a worker popping an expired
+//! job refuses to burn a solve on it, and the connection thread gives up
+//! waiting shortly after the deadline either way (`504`).
+//!
+//! Answers are BIT-IDENTICAL to direct [`PlanService::answer`] calls at
+//! any worker count: the daemon adds routing and transport, never a
+//! different solve path (`tests/serve_daemon.rs` asserts the bytes).
+//!
+//! Shutdown (SIGTERM/ctrl-c via [`ShutdownHandle`]): stop accepting,
+//! let in-flight connections finish their current request, drain the
+//! queue, then flush a metrics summary to stderr.
+
+use super::http::{self, ChunkedWriter, Limits, Request};
+use super::metrics::Metrics;
+use super::queue::AdmissionQueue;
+use crate::backend::DeviceProfile;
+use crate::coordinator::Strategy;
+use crate::metrics::Objective;
+use crate::plan::service::{error_entry, indexed};
+use crate::plan::{Frontier, PlanService, ServeRequest};
+use crate::util::Json;
+use anyhow::Result;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// How often idle loops re-check the shutdown flag.
+const POLL: Duration = Duration::from_millis(100);
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+/// Slack past a request's deadline before the connection stops waiting
+/// for its reply: covers the reply-channel hop for a job that STARTED
+/// just inside the deadline.
+const REPLY_GRACE: Duration = Duration::from_millis(250);
+
+/// Daemon tuning; `ampq serve --listen` maps its flags onto this.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+    /// Maximum jobs queued ahead of the workers (admission bound).
+    pub queue_depth: usize,
+    /// Solver worker threads (the engine's exec budget by default).
+    pub workers: usize,
+    /// Frontier-cache entry cap installed on the service (0 = unbounded).
+    pub cache_cap: usize,
+    /// Per-request deadline from admission to reply.
+    pub request_timeout: Duration,
+    pub limits: Limits,
+    /// Test hook: artificial per-job latency, so overflow and deadline
+    /// tests are deterministic instead of racing real solve times.
+    pub debug_delay: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:8787".to_string(),
+            queue_depth: 64,
+            workers: 2,
+            cache_cap: 32,
+            request_timeout: Duration::from_secs(10),
+            limits: Limits::default(),
+            debug_delay: Duration::ZERO,
+        }
+    }
+}
+
+/// Flip-once switch shared by signal handlers, tests, and the daemon's
+/// own loops.
+#[derive(Clone)]
+pub struct ShutdownHandle(Arc<AtomicBool>);
+
+impl ShutdownHandle {
+    pub fn shutdown(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+enum JobKind {
+    Answer(ServeRequest),
+    Frontier {
+        model: String,
+        device: Option<String>,
+        objective: Objective,
+        strategy: Strategy,
+    },
+}
+
+enum JobOutcome {
+    Answer(Json),
+    Frontier { frontier: Arc<Frontier>, device: String },
+    Failed(String),
+    TimedOut,
+}
+
+struct Job {
+    kind: JobKind,
+    index: usize,
+    deadline: Instant,
+    reply: mpsc::Sender<(usize, JobOutcome)>,
+}
+
+pub struct Daemon {
+    svc: PlanService,
+    cfg: ServeConfig,
+    metrics: Arc<Metrics>,
+    devices: Json,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Daemon {
+    /// `devices` is the profile set advertised on `GET /v1/devices`
+    /// (serialized once here — the registry itself is not `Clone`).
+    pub fn new(svc: PlanService, devices: Vec<DeviceProfile>, cfg: ServeConfig) -> Daemon {
+        if cfg.cache_cap > 0 {
+            svc.set_cache_cap(cfg.cache_cap);
+        }
+        let devices = Json::Obj(vec![(
+            "devices".to_string(),
+            Json::Arr(devices.iter().map(|d| d.to_json()).collect()),
+        )]);
+        Daemon {
+            svc,
+            cfg,
+            metrics: Arc::new(Metrics::new()),
+            devices,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn handle(&self) -> ShutdownHandle {
+        ShutdownHandle(self.shutdown.clone())
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    pub fn service(&self) -> &PlanService {
+        &self.svc
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Bind the configured listen address.
+    pub fn bind(&self) -> Result<TcpListener> {
+        Ok(TcpListener::bind(&self.cfg.addr)?)
+    }
+
+    /// Serve until the shutdown flag flips, then drain and return.
+    pub fn run(&self, listener: TcpListener) -> Result<()> {
+        listener.set_nonblocking(true)?;
+        let queue: AdmissionQueue<Job> = AdmissionQueue::new(self.cfg.queue_depth);
+        let conns = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..self.cfg.workers.max(1) {
+                let q = &queue;
+                s.spawn(move || self.worker_loop(q));
+            }
+            while !self.shutdown.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        conns.fetch_add(1, Ordering::SeqCst);
+                        let q = &queue;
+                        let c = &conns;
+                        s.spawn(move || {
+                            self.handle_conn(stream, q);
+                            c.fetch_sub(1, Ordering::SeqCst);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(_) => std::thread::sleep(ACCEPT_POLL),
+                }
+            }
+            // Graceful drain: no new connections (listener drops below),
+            // in-flight connections finish their current request, then the
+            // queue closes and the workers run it dry.
+            drop(listener);
+            let drain_deadline =
+                Instant::now() + self.cfg.request_timeout + Duration::from_secs(2);
+            while conns.load(Ordering::SeqCst) > 0 && Instant::now() < drain_deadline {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            queue.close();
+        });
+        eprintln!(
+            "ampq serve: shutdown after {} requests ({} queue rejections, {} timeouts); \
+             {} frontier sweeps, {} cache hits",
+            self.metrics.total_requests(),
+            self.metrics.rejected(),
+            self.metrics.timeouts(),
+            self.svc.frontier_solves(),
+            self.svc.frontier_hits(),
+        );
+        Ok(())
+    }
+
+    // ---- worker side -----------------------------------------------------
+
+    fn worker_loop(&self, queue: &AdmissionQueue<Job>) {
+        while let Some(job) = queue.pop() {
+            self.run_job(job);
+        }
+    }
+
+    fn run_job(&self, job: Job) {
+        if !self.cfg.debug_delay.is_zero() {
+            std::thread::sleep(self.cfg.debug_delay);
+        }
+        let outcome = if Instant::now() > job.deadline {
+            // Expired while queued: don't burn a solve on it.  The
+            // connection side owns the timeout metric.
+            JobOutcome::TimedOut
+        } else {
+            let t0 = Instant::now();
+            match &job.kind {
+                JobKind::Answer(req) => match self.svc.answer(req) {
+                    Ok(j) => {
+                        self.metrics.plan_latency.record(t0.elapsed().as_secs_f64() * 1e6);
+                        JobOutcome::Answer(j)
+                    }
+                    Err(e) => JobOutcome::Failed(format!("{e:#}")),
+                },
+                JobKind::Frontier { model, device, objective, strategy } => {
+                    let solved = self
+                        .svc
+                        .planner_for(model, device.as_deref())
+                        .map(|p| p.device().name.clone())
+                        .and_then(|dev| {
+                            self.svc
+                                .frontier_for(model, device.as_deref(), *objective, *strategy)
+                                .map(|f| (f, dev))
+                        });
+                    match solved {
+                        Ok((frontier, device)) => {
+                            self.metrics
+                                .frontier_latency
+                                .record(t0.elapsed().as_secs_f64() * 1e6);
+                            JobOutcome::Frontier { frontier, device }
+                        }
+                        Err(e) => JobOutcome::Failed(format!("{e:#}")),
+                    }
+                }
+            }
+        };
+        // A dropped receiver (peer gone, batch already timed out) is fine.
+        let _ = job.reply.send((job.index, outcome));
+    }
+
+    // ---- connection side -------------------------------------------------
+
+    fn handle_conn(&self, mut stream: TcpStream, queue: &AdmissionQueue<Job>) {
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(POLL)).ok();
+        let shutdown = self.shutdown.clone();
+        let stop = move || shutdown.load(Ordering::SeqCst);
+        loop {
+            let req = match http::read_request(&mut stream, &self.cfg.limits, &stop) {
+                Ok(Some(r)) => r,
+                Ok(None) => return,
+                Err(e) => {
+                    let status = e.status();
+                    if status != 0 {
+                        self.metrics.record_request("other", status);
+                        let _ = http::respond(
+                            &mut stream,
+                            status,
+                            "application/json",
+                            error_body(&e.message()).as_bytes(),
+                            false,
+                            &[],
+                        );
+                    }
+                    return;
+                }
+            };
+            let keep = req.keep_alive && !stop();
+            if self.route(&mut stream, &req, queue, keep).is_err() {
+                return; // peer went away mid-response
+            }
+            if !keep {
+                return;
+            }
+        }
+    }
+
+    fn route(
+        &self,
+        stream: &mut TcpStream,
+        req: &Request,
+        queue: &AdmissionQueue<Job>,
+        keep: bool,
+    ) -> std::io::Result<()> {
+        const KNOWN: [&str; 6] =
+            ["/healthz", "/metrics", "/v1/models", "/v1/devices", "/v1/plan", "/v1/frontier"];
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => {
+                self.simple(stream, "/healthz", 200, "text/plain", b"ok\n", keep)
+            }
+            ("GET", "/metrics") => {
+                let text = self.render_metrics(queue);
+                self.simple(stream, "/metrics", 200, "text/plain", text.as_bytes(), keep)
+            }
+            ("GET", "/v1/models") => {
+                let body = Json::Obj(vec![(
+                    "models".to_string(),
+                    Json::Arr(self.svc.models().into_iter().map(Json::Str).collect()),
+                )]);
+                self.simple(
+                    stream,
+                    "/v1/models",
+                    200,
+                    "application/json",
+                    body.to_string().as_bytes(),
+                    keep,
+                )
+            }
+            ("GET", "/v1/devices") => self.simple(
+                stream,
+                "/v1/devices",
+                200,
+                "application/json",
+                self.devices.to_string().as_bytes(),
+                keep,
+            ),
+            ("POST", "/v1/plan") => self.handle_plan(stream, req, queue, keep),
+            ("POST", "/v1/frontier") => self.handle_frontier(stream, req, queue, keep),
+            (_, path) if KNOWN.contains(&path) => self.error(
+                stream,
+                path,
+                405,
+                &format!("method {} not allowed on {path}", req.method),
+                keep,
+                &[],
+            ),
+            _ => self.error(stream, "other", 404, "no such endpoint", keep, &[]),
+        }
+    }
+
+    fn simple(
+        &self,
+        stream: &mut TcpStream,
+        endpoint: &str,
+        status: u16,
+        content_type: &str,
+        body: &[u8],
+        keep: bool,
+    ) -> std::io::Result<()> {
+        self.metrics.record_request(endpoint, status);
+        http::respond(stream, status, content_type, body, keep, &[])
+    }
+
+    fn error(
+        &self,
+        stream: &mut TcpStream,
+        endpoint: &str,
+        status: u16,
+        msg: &str,
+        keep: bool,
+        extra: &[(&str, &str)],
+    ) -> std::io::Result<()> {
+        self.metrics.record_request(endpoint, status);
+        http::respond(stream, status, "application/json", error_body(msg).as_bytes(), keep, extra)
+    }
+
+    fn render_metrics(&self, queue: &AdmissionQueue<Job>) -> String {
+        self.metrics.render(&[
+            ("frontier_cache_hits_total", self.svc.frontier_hits() as f64),
+            ("frontier_cache_solves_total", self.svc.frontier_solves() as f64),
+            ("frontier_cache_entries", self.svc.frontier_cache_len() as f64),
+            ("queue_depth", queue.len() as f64),
+            ("queue_capacity", queue.depth() as f64),
+        ])
+    }
+
+    // ---- /v1/plan --------------------------------------------------------
+
+    fn handle_plan(
+        &self,
+        stream: &mut TcpStream,
+        req: &Request,
+        queue: &AdmissionQueue<Job>,
+        keep: bool,
+    ) -> std::io::Result<()> {
+        let parsed = match parse_json_body(&req.body) {
+            Ok(j) => j,
+            Err(msg) => return self.error(stream, "/v1/plan", 400, &msg, keep, &[]),
+        };
+        match parsed {
+            Json::Arr(entries) => self.plan_batch(stream, &entries, queue, keep),
+            obj => self.plan_single(stream, &obj, queue, keep),
+        }
+    }
+
+    fn plan_single(
+        &self,
+        stream: &mut TcpStream,
+        obj: &Json,
+        queue: &AdmissionQueue<Job>,
+        keep: bool,
+    ) -> std::io::Result<()> {
+        let sreq = match ServeRequest::from_json(obj) {
+            Ok(r) => r,
+            Err(e) => return self.error(stream, "/v1/plan", 400, &format!("{e:#}"), keep, &[]),
+        };
+        let deadline = Instant::now() + self.cfg.request_timeout;
+        let (tx, rx) = mpsc::channel();
+        let job = Job { kind: JobKind::Answer(sreq), index: 0, deadline, reply: tx };
+        if queue.submit(job).is_err() {
+            self.metrics.inc_rejected();
+            return self.error(
+                stream,
+                "/v1/plan",
+                503,
+                "admission queue full",
+                keep,
+                &[("Retry-After", "1")],
+            );
+        }
+        match rx.recv_timeout(until(deadline) + REPLY_GRACE) {
+            Ok((_, JobOutcome::Answer(j))) => self.simple(
+                stream,
+                "/v1/plan",
+                200,
+                "application/json",
+                j.to_string().as_bytes(),
+                keep,
+            ),
+            Ok((_, JobOutcome::Failed(msg))) => {
+                self.error(stream, "/v1/plan", 400, &msg, keep, &[])
+            }
+            Ok((_, JobOutcome::TimedOut)) | Err(_) => {
+                self.metrics.inc_timeouts();
+                self.error(stream, "/v1/plan", 504, "request deadline exceeded", keep, &[])
+            }
+            Ok((_, JobOutcome::Frontier { .. })) => {
+                self.error(stream, "/v1/plan", 500, "internal: mismatched outcome", keep, &[])
+            }
+        }
+    }
+
+    /// Batch planning streams per-request progress: one NDJSON line per
+    /// entry, emitted in request order as answers land, errors inline.
+    fn plan_batch(
+        &self,
+        stream: &mut TcpStream,
+        entries: &[Json],
+        queue: &AdmissionQueue<Job>,
+        keep: bool,
+    ) -> std::io::Result<()> {
+        let n = entries.len();
+        let deadline = Instant::now() + self.cfg.request_timeout;
+        let (tx, rx) = mpsc::channel();
+        let mut done: std::collections::BTreeMap<usize, Json> = std::collections::BTreeMap::new();
+        let mut jobs = Vec::new();
+        for (i, e) in entries.iter().enumerate() {
+            match ServeRequest::from_json(e) {
+                Ok(r) => jobs.push(Job {
+                    kind: JobKind::Answer(r),
+                    index: i,
+                    deadline,
+                    reply: tx.clone(),
+                }),
+                Err(e) => {
+                    done.insert(i, error_entry(i, &format!("{e:#}")));
+                }
+            }
+        }
+        drop(tx);
+        if queue.submit_all(jobs).is_err() {
+            self.metrics.inc_rejected();
+            return self.error(
+                stream,
+                "/v1/plan",
+                503,
+                &format!("admission queue cannot take {n} more requests"),
+                keep,
+                &[("Retry-After", "1")],
+            );
+        }
+        self.metrics.record_request("/v1/plan", 200);
+        let mut w = ChunkedWriter::begin(stream, 200, "application/x-ndjson", keep)?;
+        w.line(&batch_header(n).to_string())?;
+        let mut errors = 0usize;
+        let mut next = 0usize;
+        while next < n {
+            if let Some(line) = done.remove(&next) {
+                if is_error_line(&line) {
+                    errors += 1;
+                }
+                w.line(&line.to_string())?;
+                next += 1;
+                continue;
+            }
+            match rx.recv_timeout(until(deadline) + REPLY_GRACE) {
+                Ok((i, outcome)) => {
+                    done.insert(i, self.outcome_line(i, outcome));
+                }
+                Err(_) => {
+                    // Batch deadline: every unanswered entry reports it.
+                    self.metrics.inc_timeouts();
+                    for i in next..n {
+                        done.entry(i)
+                            .or_insert_with(|| error_entry(i, "request deadline exceeded"));
+                    }
+                }
+            }
+        }
+        w.line(&batch_footer(n, errors).to_string())?;
+        w.finish()
+    }
+
+    fn outcome_line(&self, i: usize, outcome: JobOutcome) -> Json {
+        match outcome {
+            JobOutcome::Answer(j) => indexed(i, j),
+            JobOutcome::Failed(msg) => error_entry(i, &msg),
+            JobOutcome::TimedOut => {
+                self.metrics.inc_timeouts();
+                error_entry(i, "request deadline exceeded")
+            }
+            JobOutcome::Frontier { .. } => error_entry(i, "internal: mismatched outcome"),
+        }
+    }
+
+    // ---- /v1/frontier ----------------------------------------------------
+
+    fn handle_frontier(
+        &self,
+        stream: &mut TcpStream,
+        req: &Request,
+        queue: &AdmissionQueue<Job>,
+        keep: bool,
+    ) -> std::io::Result<()> {
+        let parsed = match parse_json_body(&req.body) {
+            Ok(j) => j,
+            Err(msg) => return self.error(stream, "/v1/frontier", 400, &msg, keep, &[]),
+        };
+        let (entries, batch) = match parsed {
+            Json::Arr(v) => (v, true),
+            obj => (vec![obj], false),
+        };
+        let n = entries.len();
+        let deadline = Instant::now() + self.cfg.request_timeout;
+        let (tx, rx) = mpsc::channel();
+        let mut done: std::collections::BTreeMap<usize, Result<JobOutcome, String>> =
+            std::collections::BTreeMap::new();
+        let mut jobs = Vec::new();
+        for (i, e) in entries.iter().enumerate() {
+            match parse_frontier_query(e) {
+                Ok(kind) => jobs.push(Job { kind, index: i, deadline, reply: tx.clone() }),
+                Err(msg) if batch => {
+                    done.insert(i, Err(msg));
+                }
+                Err(msg) => {
+                    return self.error(stream, "/v1/frontier", 400, &msg, keep, &[]);
+                }
+            }
+        }
+        drop(tx);
+        if queue.submit_all(jobs).is_err() {
+            self.metrics.inc_rejected();
+            return self.error(
+                stream,
+                "/v1/frontier",
+                503,
+                "admission queue full",
+                keep,
+                &[("Retry-After", "1")],
+            );
+        }
+        if !batch {
+            // Single query: wait for the sweep, then stream its knots.
+            return match rx.recv_timeout(until(deadline) + REPLY_GRACE) {
+                Ok((_, JobOutcome::Frontier { frontier, device })) => {
+                    self.metrics.record_request("/v1/frontier", 200);
+                    let mut w =
+                        ChunkedWriter::begin(stream, 200, "application/x-ndjson", keep)?;
+                    stream_frontier(&mut w, &frontier, &device, None)?;
+                    w.finish()
+                }
+                Ok((_, JobOutcome::Failed(msg))) => {
+                    self.error(stream, "/v1/frontier", 400, &msg, keep, &[])
+                }
+                Ok((_, JobOutcome::TimedOut)) | Err(_) => {
+                    self.metrics.inc_timeouts();
+                    self.error(
+                        stream,
+                        "/v1/frontier",
+                        504,
+                        "request deadline exceeded",
+                        keep,
+                        &[],
+                    )
+                }
+                Ok((_, JobOutcome::Answer(_))) => self.error(
+                    stream,
+                    "/v1/frontier",
+                    500,
+                    "internal: mismatched outcome",
+                    keep,
+                    &[],
+                ),
+            };
+        }
+        self.metrics.record_request("/v1/frontier", 200);
+        let mut w = ChunkedWriter::begin(stream, 200, "application/x-ndjson", keep)?;
+        w.line(&batch_header(n).to_string())?;
+        let mut errors = 0usize;
+        let mut next = 0usize;
+        while next < n {
+            if let Some(r) = done.remove(&next) {
+                match r {
+                    Ok(JobOutcome::Frontier { frontier, device }) => {
+                        stream_frontier(&mut w, &frontier, &device, Some(next))?;
+                    }
+                    Ok(JobOutcome::TimedOut) => {
+                        self.metrics.inc_timeouts();
+                        errors += 1;
+                        w.line(&error_entry(next, "request deadline exceeded").to_string())?;
+                    }
+                    Ok(JobOutcome::Failed(msg)) | Err(msg) => {
+                        errors += 1;
+                        w.line(&error_entry(next, &msg).to_string())?;
+                    }
+                    Ok(JobOutcome::Answer(_)) => {
+                        errors += 1;
+                        w.line(&error_entry(next, "internal: mismatched outcome").to_string())?;
+                    }
+                }
+                next += 1;
+                continue;
+            }
+            match rx.recv_timeout(until(deadline) + REPLY_GRACE) {
+                Ok((i, outcome)) => {
+                    done.insert(i, Ok(outcome));
+                }
+                Err(_) => {
+                    self.metrics.inc_timeouts();
+                    for i in next..n {
+                        done.entry(i).or_insert_with(|| {
+                            Err("request deadline exceeded".to_string())
+                        });
+                    }
+                }
+            }
+        }
+        w.line(&batch_footer(n, errors).to_string())?;
+        w.finish()
+    }
+}
+
+// ---- free helpers --------------------------------------------------------
+
+fn until(deadline: Instant) -> Duration {
+    deadline.saturating_duration_since(Instant::now())
+}
+
+fn error_body(msg: &str) -> String {
+    Json::Obj(vec![
+        ("kind".to_string(), Json::Str("error".to_string())),
+        ("error".to_string(), Json::Str(msg.to_string())),
+    ])
+    .to_string()
+}
+
+fn batch_header(n: usize) -> Json {
+    Json::Obj(vec![
+        ("kind".to_string(), Json::Str("batch".to_string())),
+        ("n".to_string(), Json::Num(n as f64)),
+    ])
+}
+
+fn batch_footer(n: usize, errors: usize) -> Json {
+    Json::Obj(vec![
+        ("kind".to_string(), Json::Str("done".to_string())),
+        ("n".to_string(), Json::Num(n as f64)),
+        ("errors".to_string(), Json::Num(errors as f64)),
+    ])
+}
+
+fn is_error_line(j: &Json) -> bool {
+    j.opt("kind").and_then(|k| k.str().ok()) == Some("error")
+}
+
+fn parse_json_body(body: &[u8]) -> Result<Json, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "non-utf8 body".to_string())?;
+    Json::parse(text).map_err(|e| format!("bad json body: {e:#}"))
+}
+
+/// Frontier query schema: `{"model": M, "objective"?: K, "strategy"?: K,
+/// "device"?: D}` — objective/strategy default to the IP empirical-time
+/// curve, like the CLI.
+fn parse_frontier_query(e: &Json) -> Result<JobKind, String> {
+    let model = e
+        .get("model")
+        .and_then(|m| m.str())
+        .map_err(|e| format!("{e:#}"))?
+        .to_string();
+    let objective = match e.opt("objective") {
+        None => Objective::EmpiricalTime,
+        Some(o) => {
+            let key = o.str().map_err(|e| format!("'objective': {e:#}"))?;
+            Objective::from_key(key).ok_or_else(|| format!("unknown objective '{key}'"))?
+        }
+    };
+    let strategy = match e.opt("strategy") {
+        None => Strategy::Ip,
+        Some(s) => {
+            let key = s.str().map_err(|e| format!("'strategy': {e:#}"))?;
+            Strategy::from_key(key).ok_or_else(|| format!("unknown strategy '{key}'"))?
+        }
+    };
+    let device = match e.opt("device") {
+        None => None,
+        Some(d) => Some(d.str().map_err(|e| format!("'device': {e:#}"))?.to_string()),
+    };
+    Ok(JobKind::Frontier { model, device, objective, strategy })
+}
+
+/// Stream one frontier as NDJSON: a header, one line per knot (in the
+/// DP's materialization order — ascending tau), and a footer.  `index`
+/// stamps batch entries so interleaved consumers can attribute lines.
+fn stream_frontier(
+    w: &mut ChunkedWriter,
+    f: &Frontier,
+    device: &str,
+    index: Option<usize>,
+) -> std::io::Result<()> {
+    let stamp = |mut kv: Vec<(String, Json)>| -> Json {
+        if let Some(i) = index {
+            kv.insert(1, ("index".to_string(), Json::Num(i as f64)));
+        }
+        Json::Obj(kv)
+    };
+    w.line(
+        &stamp(vec![
+            ("kind".to_string(), Json::Str("frontier_header".to_string())),
+            ("model".to_string(), Json::Str(f.model.clone())),
+            ("device".to_string(), Json::Str(device.to_string())),
+            ("objective".to_string(), Json::Str(f.objective.key().to_string())),
+            ("strategy".to_string(), Json::Str(f.strategy.key().to_string())),
+            ("eg2".to_string(), Json::Num(f.eg2)),
+            ("tau_max".to_string(), Json::Num(f.tau_max)),
+            ("points".to_string(), Json::Num(f.points.len() as f64)),
+        ])
+        .to_string(),
+    )?;
+    for (k, p) in f.points.iter().enumerate() {
+        w.line(
+            &stamp(vec![
+                ("kind".to_string(), Json::Str("knot".to_string())),
+                ("i".to_string(), Json::Num(k as f64)),
+                ("tau".to_string(), Json::Num(p.tau)),
+                ("predicted_mse".to_string(), Json::Num(p.predicted_mse)),
+                ("gain".to_string(), Json::Num(p.gain)),
+                ("config".to_string(), crate::plan::artifact::formats_to_json(&p.config.0)),
+            ])
+            .to_string(),
+        )?;
+    }
+    w.line(
+        &stamp(vec![
+            ("kind".to_string(), Json::Str("frontier_done".to_string())),
+            ("points".to_string(), Json::Num(f.points.len() as f64)),
+        ])
+        .to_string(),
+    )
+}

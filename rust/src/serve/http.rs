@@ -1,0 +1,453 @@
+//! Minimal HTTP/1.1 server plumbing on std `TcpStream` (hyper is not
+//! vendored in this image).
+//!
+//! Just enough of RFC 9112 for the planning daemon and its test client:
+//! request-line + header parsing with hard size/time limits,
+//! `Content-Length` bodies, keep-alive, `Expect: 100-continue`, and
+//! chunked *responses* (the NDJSON streaming endpoints).  Chunked request
+//! bodies are rejected — every client we control sends a length.
+//!
+//! Reads poll: the stream carries a short read timeout and
+//! [`read_request`] re-checks a caller-supplied stop flag between idle
+//! reads, so keep-alive connections notice a daemon shutdown within one
+//! poll interval instead of holding the drain hostage.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// Hard limits on one request (and how long a started one may dribble in).
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    pub max_header_bytes: usize,
+    pub max_body_bytes: usize,
+    /// Deadline from the first byte of a request to its last.
+    pub read_timeout: std::time::Duration,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits {
+            max_header_bytes: 16 * 1024,
+            max_body_bytes: 1024 * 1024,
+            read_timeout: std::time::Duration::from_secs(5),
+        }
+    }
+}
+
+/// One parsed request.  Header names are lowercased; values are trimmed.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: Option<String>,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// Whether the connection may serve another request after this one.
+    pub keep_alive: bool,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read.  Each maps to one response status;
+/// after any of these the connection closes (framing is unreliable).
+#[derive(Debug)]
+pub enum HttpError {
+    /// 400 — malformed request line, header, or truncated body.
+    BadRequest(String),
+    /// 413 — headers or declared body over the limits.
+    TooLarge(String),
+    /// 408 — a started request did not finish within the read deadline.
+    Timeout,
+    /// Transport died; nothing can be written back.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    pub fn status(&self) -> u16 {
+        match self {
+            HttpError::BadRequest(_) => 400,
+            HttpError::TooLarge(_) => 413,
+            HttpError::Timeout => 408,
+            HttpError::Io(_) => 0,
+        }
+    }
+
+    pub fn message(&self) -> String {
+        match self {
+            HttpError::BadRequest(m) => m.clone(),
+            HttpError::TooLarge(m) => m.clone(),
+            HttpError::Timeout => "request read deadline exceeded".to_string(),
+            HttpError::Io(e) => format!("io: {e}"),
+        }
+    }
+}
+
+fn is_poll_timeout(e: &std::io::Error) -> bool {
+    // Read timeouts surface as WouldBlock on unix and TimedOut on windows.
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Read one request.  `Ok(None)` means the peer closed between requests
+/// or `stop` went true while the connection was idle — either way the
+/// connection is done cleanly.  The stream must carry a short read
+/// timeout (that is the stop-flag poll interval).
+pub fn read_request(
+    stream: &mut TcpStream,
+    limits: &Limits,
+    stop: &dyn Fn() -> bool,
+) -> Result<Option<Request>, HttpError> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let mut started: Option<Instant> = None;
+    // ---- header section --------------------------------------------------
+    let header_end = loop {
+        if let Some(end) = find_header_end(&buf) {
+            break end;
+        }
+        if buf.len() > limits.max_header_bytes {
+            return Err(HttpError::TooLarge(format!(
+                "header section over {} bytes",
+                limits.max_header_bytes
+            )));
+        }
+        if let Some(t0) = started {
+            if t0.elapsed() > limits.read_timeout {
+                return Err(HttpError::Timeout);
+            }
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => {
+                return if buf.is_empty() {
+                    Ok(None)
+                } else {
+                    Err(HttpError::BadRequest("connection closed mid-header".into()))
+                };
+            }
+            Ok(n) => {
+                if started.is_none() {
+                    started = Some(Instant::now());
+                }
+                buf.extend_from_slice(&tmp[..n]);
+            }
+            Err(e) if is_poll_timeout(&e) => {
+                if buf.is_empty() {
+                    if stop() {
+                        return Ok(None);
+                    }
+                    continue;
+                }
+                // Mid-request: keep reading until the per-request deadline.
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    };
+
+    let head = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| HttpError::BadRequest("non-utf8 header section".into()))?;
+    let mut lines = head.split("\r\n");
+    let request_line =
+        lines.next().ok_or_else(|| HttpError::BadRequest("empty request".into()))?;
+    let mut parts = request_line.split(' ');
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| HttpError::BadRequest("missing method".into()))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| HttpError::BadRequest("missing request target".into()))?;
+    let version = parts
+        .next()
+        .ok_or_else(|| HttpError::BadRequest("missing HTTP version".into()))?;
+    if !matches!(version, "HTTP/1.1" | "HTTP/1.0") {
+        return Err(HttpError::BadRequest(format!("unsupported version '{version}'")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::BadRequest(format!("malformed header '{line}'")))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let header = |name: &str| -> Option<&str> {
+        headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    };
+
+    if header("transfer-encoding").is_some() {
+        return Err(HttpError::BadRequest("chunked request bodies not supported".into()));
+    }
+    let keep_alive = match header("connection").map(str::to_ascii_lowercase) {
+        Some(c) if c.contains("close") => false,
+        Some(c) if c.contains("keep-alive") => true,
+        _ => version == "HTTP/1.1",
+    };
+
+    // ---- body ------------------------------------------------------------
+    let content_length: usize = match header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse()
+            .map_err(|_| HttpError::BadRequest(format!("bad content-length '{v}'")))?,
+    };
+    if content_length > limits.max_body_bytes {
+        return Err(HttpError::TooLarge(format!(
+            "declared body of {content_length} bytes over the {} limit",
+            limits.max_body_bytes
+        )));
+    }
+    if content_length > 0 && header("expect").map(str::to_ascii_lowercase).as_deref()
+        == Some("100-continue")
+    {
+        stream
+            .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+            .map_err(HttpError::Io)?;
+    }
+    let mut body = buf[header_end..].to_vec();
+    let t0 = started.unwrap_or_else(Instant::now);
+    while body.len() < content_length {
+        if t0.elapsed() > limits.read_timeout {
+            return Err(HttpError::Timeout);
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return Err(HttpError::BadRequest("connection closed mid-body".into())),
+            Ok(n) => body.extend_from_slice(&tmp[..n]),
+            Err(e) if is_poll_timeout(&e) => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+    body.truncate(content_length); // drop any pipelined spill-over
+    Ok(Some(Request { method, path, query, headers, body, keep_alive }))
+}
+
+/// Byte offset just past the `\r\n\r\n` terminator, if present.
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4)
+}
+
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write one fixed-length response.  `extra` appends verbatim headers
+/// (e.g. `Retry-After` on a 503).
+pub fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+    extra: &[(&str, &str)],
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    for (k, v) in extra {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// A chunked-transfer response in progress: one chunk per NDJSON line, a
+/// zero chunk on [`ChunkedWriter::finish`].
+pub struct ChunkedWriter<'a> {
+    stream: &'a mut TcpStream,
+}
+
+impl<'a> ChunkedWriter<'a> {
+    pub fn begin(
+        stream: &'a mut TcpStream,
+        status: u16,
+        content_type: &str,
+        keep_alive: bool,
+    ) -> std::io::Result<ChunkedWriter<'a>> {
+        let head = format!(
+            "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+            reason(status),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        stream.write_all(head.as_bytes())?;
+        Ok(ChunkedWriter { stream })
+    }
+
+    /// Write one line (a trailing `\n` is appended) as one chunk, flushed
+    /// immediately so clients see knots as they materialize.
+    pub fn line(&mut self, s: &str) -> std::io::Result<()> {
+        let mut chunk = format!("{:x}\r\n", s.len() + 1).into_bytes();
+        chunk.extend_from_slice(s.as_bytes());
+        chunk.extend_from_slice(b"\n\r\n");
+        self.stream.write_all(&chunk)?;
+        self.stream.flush()
+    }
+
+    pub fn finish(self) -> std::io::Result<()> {
+        self.stream.write_all(b"0\r\n\r\n")?;
+        self.stream.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Duration;
+
+    /// A connected (client, server) socket pair on the loopback.
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+        (client, server)
+    }
+
+    fn never() -> bool {
+        false
+    }
+
+    #[test]
+    fn parses_post_with_body_and_query() {
+        let (mut client, mut server) = pair();
+        client
+            .write_all(
+                b"POST /v1/plan?x=1 HTTP/1.1\r\nHost: a\r\nContent-Length: 4\r\n\r\nabcd",
+            )
+            .unwrap();
+        let r = read_request(&mut server, &Limits::default(), &never).unwrap().unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/v1/plan");
+        assert_eq!(r.query.as_deref(), Some("x=1"));
+        assert_eq!(r.body, b"abcd");
+        assert!(r.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(r.header("host"), Some("a"));
+    }
+
+    #[test]
+    fn keep_alive_serves_sequential_requests() {
+        // One request at a time (no pipelining — spill-over past a request
+        // is dropped by design), same connection for both.
+        let (mut client, mut server) = pair();
+        client.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        let a = read_request(&mut server, &Limits::default(), &never).unwrap().unwrap();
+        assert_eq!(a.path, "/healthz");
+        assert!(a.keep_alive);
+        client
+            .write_all(b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap();
+        let b = read_request(&mut server, &Limits::default(), &never).unwrap().unwrap();
+        assert_eq!(b.path, "/metrics");
+        assert!(!b.keep_alive);
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        let (client, mut server) = pair();
+        drop(client);
+        assert!(read_request(&mut server, &Limits::default(), &never).unwrap().is_none());
+    }
+
+    #[test]
+    fn idle_stop_flag_is_none() {
+        let (_client, mut server) = pair();
+        assert!(read_request(&mut server, &Limits::default(), &|| true).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_declared_body_is_413() {
+        let (mut client, mut server) = pair();
+        client
+            .write_all(b"POST /v1/plan HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n")
+            .unwrap();
+        let e = read_request(&mut server, &Limits::default(), &never).unwrap_err();
+        assert_eq!(e.status(), 413);
+    }
+
+    #[test]
+    fn oversized_headers_are_413() {
+        let (mut client, mut server) = pair();
+        let mut req = b"GET / HTTP/1.1\r\n".to_vec();
+        req.extend_from_slice(format!("X-Pad: {}\r\n", "y".repeat(64 * 1024)).as_bytes());
+        client.write_all(&req).unwrap();
+        let e = read_request(&mut server, &Limits::default(), &never).unwrap_err();
+        assert_eq!(e.status(), 413);
+    }
+
+    #[test]
+    fn malformed_request_line_is_400() {
+        let (mut client, mut server) = pair();
+        client.write_all(b"NOT-HTTP\r\n\r\n").unwrap();
+        let e = read_request(&mut server, &Limits::default(), &never).unwrap_err();
+        assert_eq!(e.status(), 400);
+    }
+
+    #[test]
+    fn truncated_body_times_out() {
+        let (mut client, mut server) = pair();
+        client
+            .write_all(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc")
+            .unwrap();
+        let limits = Limits {
+            read_timeout: Duration::from_millis(60),
+            ..Limits::default()
+        };
+        let e = read_request(&mut server, &limits, &never).unwrap_err();
+        assert_eq!(e.status(), 408);
+    }
+
+    #[test]
+    fn respond_and_chunked_roundtrip() {
+        let (mut client, mut server) = pair();
+        respond(&mut server, 200, "text/plain", b"ok\n", false, &[("Retry-After", "1")])
+            .unwrap();
+        {
+            let mut w =
+                ChunkedWriter::begin(&mut server, 200, "application/x-ndjson", false).unwrap();
+            w.line("{\"a\":1}").unwrap();
+            w.line("{\"b\":2}").unwrap();
+            w.finish().unwrap();
+        }
+        drop(server);
+        let mut all = String::new();
+        client.read_to_string(&mut all).unwrap();
+        assert!(all.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(all.contains("Retry-After: 1\r\n"));
+        assert!(all.contains("ok\n"));
+        assert!(all.contains("Transfer-Encoding: chunked"));
+        assert!(all.contains("{\"a\":1}\n"));
+        assert!(all.contains("0\r\n\r\n"));
+    }
+}

@@ -1,0 +1,231 @@
+//! Daemon observability: per-endpoint/status request counters and
+//! fixed-bucket latency histograms, rendered in the Prometheus text
+//! exposition format for `GET /metrics`.
+//!
+//! The histogram buckets are log-spaced powers of two over 1us..~67s —
+//! fixed at construction, so recording is a lock-free pair of atomic
+//! increments and quantile estimates (p50/p99) are a cumulative walk
+//! returning the matched bucket's upper bound.  Estimates are therefore
+//! quantized to bucket resolution (a factor of 2), which is exactly the
+//! fidelity a serving dashboard needs and all the determinism a test can
+//! assert against.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+const N_BUCKETS: usize = 27;
+
+/// Fixed log-spaced latency histogram (microseconds).
+pub struct Histogram {
+    /// Upper bound of bucket i: `2^i` us; the last bucket is unbounded.
+    counts: [AtomicU64; N_BUCKETS + 1],
+    total: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record(&self, us: f64) {
+        let us = us.max(0.0);
+        let mut idx = N_BUCKETS; // overflow bucket
+        for i in 0..N_BUCKETS {
+            if us <= (1u64 << i) as f64 {
+                idx = i;
+                break;
+            }
+        }
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us.round() as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Upper bound (us) of the bucket containing the q-quantile sample;
+    /// 0 when nothing was recorded.  `q` in [0, 1].
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return if i < N_BUCKETS {
+                    (1u64 << i) as f64
+                } else {
+                    f64::INFINITY
+                };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// All daemon counters.  Shared (`Arc`) between the accept loop, the
+/// worker pool, and the /metrics renderer.
+#[derive(Default)]
+pub struct Metrics {
+    /// (endpoint, status) -> count.  Unknown paths are bucketed under
+    /// "other" so a scanner can't grow the map without bound.
+    requests: Mutex<BTreeMap<(String, u16), u64>>,
+    pub plan_latency: Histogram,
+    pub frontier_latency: Histogram,
+    queue_rejected: AtomicU64,
+    request_timeouts: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self, endpoint: &str, status: u16) {
+        let mut m = self.requests.lock().expect("metrics lock poisoned");
+        *m.entry((endpoint.to_string(), status)).or_insert(0) += 1;
+    }
+
+    pub fn requests_for(&self, endpoint: &str, status: u16) -> u64 {
+        let m = self.requests.lock().expect("metrics lock poisoned");
+        m.get(&(endpoint.to_string(), status)).copied().unwrap_or(0)
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        let m = self.requests.lock().expect("metrics lock poisoned");
+        m.values().sum()
+    }
+
+    pub fn inc_rejected(&self) {
+        self.queue_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.queue_rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn inc_timeouts(&self) {
+        self.request_timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn timeouts(&self) -> u64 {
+        self.request_timeouts.load(Ordering::Relaxed)
+    }
+
+    /// Prometheus text exposition.  `extra` carries gauges owned elsewhere
+    /// (frontier cache hit/solve counters, queue depth, ...).
+    pub fn render(&self, extra: &[(&str, f64)]) -> String {
+        let mut out = String::new();
+        out.push_str("# TYPE ampq_requests_total counter\n");
+        {
+            let m = self.requests.lock().expect("metrics lock poisoned");
+            for ((endpoint, status), count) in m.iter() {
+                out.push_str(&format!(
+                    "ampq_requests_total{{endpoint=\"{endpoint}\",status=\"{status}\"}} {count}\n"
+                ));
+            }
+        }
+        out.push_str("# TYPE ampq_queue_rejected_total counter\n");
+        out.push_str(&format!("ampq_queue_rejected_total {}\n", self.rejected()));
+        out.push_str("# TYPE ampq_request_timeouts_total counter\n");
+        out.push_str(&format!("ampq_request_timeouts_total {}\n", self.timeouts()));
+        for (name, hist) in
+            [("plan", &self.plan_latency), ("frontier", &self.frontier_latency)]
+        {
+            out.push_str(&format!("# TYPE ampq_{name}_latency_us summary\n"));
+            for (label, q) in [("0.5", 0.5), ("0.99", 0.99)] {
+                out.push_str(&format!(
+                    "ampq_{name}_latency_us{{quantile=\"{label}\"}} {}\n",
+                    fmt_val(hist.quantile_us(q))
+                ));
+            }
+            out.push_str(&format!("ampq_{name}_latency_us_count {}\n", hist.count()));
+            out.push_str(&format!("ampq_{name}_latency_us_sum {}\n", hist.sum_us()));
+        }
+        for (k, v) in extra {
+            out.push_str(&format!("ampq_{k} {}\n", fmt_val(*v)));
+        }
+        out
+    }
+}
+
+fn fmt_val(v: f64) -> String {
+    if v.is_infinite() {
+        "+Inf".to_string()
+    } else if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_hit_bucket_bounds() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_us(0.5), 0.0, "empty histogram reports 0");
+        for _ in 0..90 {
+            h.record(100.0); // bucket bound 128
+        }
+        for _ in 0..10 {
+            h.record(5000.0); // bucket bound 8192
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile_us(0.5), 128.0);
+        assert_eq!(h.quantile_us(0.99), 8192.0);
+        assert_eq!(h.sum_us(), 90 * 100 + 10 * 5000);
+    }
+
+    #[test]
+    fn histogram_overflow_bucket_is_inf() {
+        let h = Histogram::new();
+        h.record(1e12);
+        assert!(h.quantile_us(0.5).is_infinite());
+    }
+
+    #[test]
+    fn render_is_parseable_line_oriented_text() {
+        let m = Metrics::new();
+        m.record_request("/v1/plan", 200);
+        m.record_request("/v1/plan", 200);
+        m.record_request("/v1/plan", 503);
+        m.record_request("/healthz", 200);
+        m.inc_rejected();
+        m.plan_latency.record(900.0);
+        let text = m.render(&[("frontier_cache_hits_total", 3.0)]);
+        assert!(text
+            .contains("ampq_requests_total{endpoint=\"/v1/plan\",status=\"200\"} 2\n"));
+        assert!(text
+            .contains("ampq_requests_total{endpoint=\"/v1/plan\",status=\"503\"} 1\n"));
+        assert!(text.contains("ampq_queue_rejected_total 1\n"));
+        assert!(text.contains("ampq_plan_latency_us{quantile=\"0.5\"} 1024\n"));
+        assert!(text.contains("ampq_plan_latency_us_count 1\n"));
+        assert!(text.contains("ampq_frontier_cache_hits_total 3\n"));
+        assert_eq!(m.requests_for("/v1/plan", 200), 2);
+        assert_eq!(m.total_requests(), 4);
+    }
+}

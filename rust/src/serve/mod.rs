@@ -1,0 +1,26 @@
+//! The resident planning daemon (`ampq serve --listen`).
+//!
+//! A zero-dependency HTTP/1.1 service over the staged planning API:
+//!
+//! * [`http`] — hand-rolled request parsing (size/time limits,
+//!   keep-alive) and chunked NDJSON responses;
+//! * [`queue`] — the bounded admission queue (all-or-nothing admission,
+//!   503 + `Retry-After` on overflow);
+//! * [`metrics`] — request/status counters and fixed-bucket latency
+//!   histograms behind `GET /metrics`;
+//! * [`daemon`] — the accept loop, router, solver worker pool, and
+//!   graceful shutdown;
+//! * [`client`] — the minimal HTTP client driving the integration tests
+//!   and the `ampq_client` CI smoke binary.
+//!
+//! See DESIGN.md §4e for the endpoint table and streaming schema.
+
+pub mod client;
+pub mod daemon;
+pub mod http;
+pub mod metrics;
+pub mod queue;
+
+pub use daemon::{Daemon, ServeConfig, ShutdownHandle};
+pub use metrics::{Histogram, Metrics};
+pub use queue::AdmissionQueue;

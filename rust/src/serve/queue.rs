@@ -1,0 +1,154 @@
+//! Bounded admission queue between connection handlers and the solver
+//! worker pool.
+//!
+//! Admission is all-or-nothing per submission: a batch either fits under
+//! the configured depth in one shot or is rejected whole (the HTTP layer
+//! turns a rejection into `503` + `Retry-After`), so a burst can never
+//! deadlock half-admitted.  Items are handed back on rejection — nothing
+//! is silently dropped.  [`AdmissionQueue::close`] wakes every blocked
+//! worker; `pop` then drains what was already admitted before reporting
+//! end-of-queue, which is exactly the graceful-shutdown drain.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct State<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+pub struct AdmissionQueue<T> {
+    state: Mutex<State<T>>,
+    ready: Condvar,
+    depth: usize,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// `depth` is the maximum number of queued (not yet popped) items.
+    pub fn new(depth: usize) -> AdmissionQueue<T> {
+        AdmissionQueue {
+            state: Mutex::new(State { q: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            depth: depth.max(1),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("admission queue lock poisoned").q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit one item, or hand it back if the queue is full or closed.
+    pub fn submit(&self, item: T) -> Result<(), T> {
+        match self.submit_all(vec![item]) {
+            Ok(()) => Ok(()),
+            Err(mut items) => Err(items.pop().expect("rejected batch returns its items")),
+        }
+    }
+
+    /// Admit `items` atomically: all of them or none (handed back).
+    pub fn submit_all(&self, items: Vec<T>) -> Result<(), Vec<T>> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        let mut s = self.state.lock().expect("admission queue lock poisoned");
+        if s.closed || s.q.len() + items.len() > self.depth {
+            return Err(items);
+        }
+        let n = items.len();
+        s.q.extend(items);
+        drop(s);
+        if n == 1 {
+            self.ready.notify_one();
+        } else {
+            self.ready.notify_all();
+        }
+        Ok(())
+    }
+
+    /// Next admitted item; blocks while the queue is open and empty.
+    /// `None` means closed AND drained — the worker should exit.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().expect("admission queue lock poisoned");
+        loop {
+            if let Some(item) = s.q.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.ready.wait(s).expect("admission queue lock poisoned");
+        }
+    }
+
+    /// Stop admitting; wake every blocked worker.  Already-admitted items
+    /// still drain through `pop`.
+    pub fn close(&self) {
+        self.state.lock().expect("admission queue lock poisoned").closed = true;
+        self.ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn overflow_hands_items_back() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(2);
+        assert!(q.submit(1).is_ok());
+        assert!(q.submit(2).is_ok());
+        assert_eq!(q.submit(3), Err(3));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.submit(3).is_ok(), "popping frees a slot");
+    }
+
+    #[test]
+    fn batch_admission_is_all_or_nothing() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(3);
+        assert!(q.submit(0).is_ok());
+        // 3 more would need 4 slots: rejected whole, queue untouched.
+        assert_eq!(q.submit_all(vec![1, 2, 3]), Err(vec![1, 2, 3]));
+        assert_eq!(q.len(), 1);
+        assert!(q.submit_all(vec![1, 2]).is_ok());
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q: AdmissionQueue<u32> = AdmissionQueue::new(4);
+        q.submit(7).unwrap();
+        q.submit(8).unwrap();
+        q.close();
+        assert_eq!(q.submit(9), Err(9), "closed queue admits nothing");
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), Some(8));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn blocked_workers_wake_on_close() {
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(1));
+        let workers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || q.pop())
+            })
+            .collect();
+        q.submit(42).unwrap();
+        q.close();
+        let mut got: Vec<Option<u32>> =
+            workers.into_iter().map(|w| w.join().unwrap()).collect();
+        got.sort();
+        assert_eq!(got, vec![None, None, Some(42)]);
+    }
+}

@@ -68,6 +68,13 @@ impl Json {
         }
     }
 
+    pub fn bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a bool"),
+        }
+    }
+
     pub fn f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -358,11 +365,13 @@ mod tests {
 
     #[test]
     fn accessor_errors() {
-        let j = Json::parse(r#"{"a": 1}"#).unwrap();
+        let j = Json::parse(r#"{"a": 1, "f": true}"#).unwrap();
         assert!(j.get("b").is_err());
         assert!(j.get("a").unwrap().str().is_err());
         assert_eq!(j.get("a").unwrap().usize().unwrap(), 1);
         assert!(j.opt("missing").is_none());
+        assert!(j.get("f").unwrap().bool().unwrap());
+        assert!(j.get("a").unwrap().bool().is_err());
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! The promoted fuzz suite.
+//!
+//! Two tiers:
+//!
+//! * [`fuzz_smoke`] — a ~2s seeded slice of the solver-oracle fuzz that
+//!   runs in plain `cargo test`, so the differential harness itself can
+//!   never rot behind `--ignored` (the full campaign stays in
+//!   `tests/parametric.rs::fuzz_solver_oracle_small_instances`, run by
+//!   the CI fuzz job);
+//! * [`corpus_replays_minimized_failures`] — replays every minimized
+//!   failure under `tests/corpus/*.json`.  Each file is one regression
+//!   the fuzzer (or a release) once caught: add new findings here,
+//!   minimized, instead of growing the smoke loop.
+//!
+//! Corpus schema (one object per file):
+//!
+//! ```json
+//! {"kind": "mckp_oracle", "gains": [[...]], "costs": [[...]], "budget": X}
+//! {"kind": "tau_reject", "tau": "nan" | "inf" | -0.004}
+//! ```
+//!
+//! `tau` may be a string so non-finite values survive JSON.
+
+use ampq::exec::{ExecCfg, ExecPool};
+use ampq::metrics::Objective;
+use ampq::plan::demo::demo_model;
+use ampq::plan::{Engine, PlanRequest, PlanService, ServeRequest};
+use ampq::solver::problem::gen::{random, random_multi};
+use ampq::solver::{branch_bound, dp, greedy, parametric, Mckp};
+use ampq::util::{Json, Rng};
+use std::path::PathBuf;
+
+/// Pointwise branch & bound at an explicit primary budget.
+fn solve_at(p: &Mckp, primary_budget: f64) -> ampq::solver::Solution {
+    let mut q = p.clone();
+    q.budgets[0] = primary_budget;
+    branch_bound::solve(&q)
+}
+
+/// The differential check every fuzzed or replayed instance must pass:
+/// branch & bound matches brute force, greedy/dp never beat it, and the
+/// parametric curve's knots agree with pointwise solves.
+fn check_against_oracle(p: &Mckp, label: &str) {
+    let exact = p.brute_force();
+    let bb = branch_bound::solve(p);
+    assert_eq!(bb.feasible, exact.feasible, "{label}");
+    if exact.feasible {
+        assert!(
+            (bb.gain - exact.gain).abs() < 1e-9,
+            "{label}: bb {} vs brute {}",
+            bb.gain,
+            exact.gain
+        );
+    }
+    let g = greedy::solve(p);
+    if g.feasible {
+        assert!(p.fits(&g.costs), "{label}: greedy returned an infeasible pick");
+        assert!(
+            g.gain <= exact.gain + 1e-9,
+            "{label}: greedy {} beats brute {}",
+            g.gain,
+            exact.gain
+        );
+    }
+    if p.budgets.len() == 1 {
+        let d = dp::solve(p);
+        assert_eq!(d.feasible, exact.feasible, "{label}: dp feasibility");
+        if d.feasible {
+            assert!(d.cost <= p.budget() + 1e-9, "{label}: dp over budget");
+            assert!(d.gain <= exact.gain + 1e-9, "{label}: dp beats brute");
+        }
+    }
+    let mut curve = parametric::frontier(p);
+    if !curve.exact {
+        curve = parametric::harden_with(p, curve, &ExecPool::sequential());
+    }
+    if curve.is_empty() {
+        assert!(!exact.feasible, "{label}: empty curve on a feasible instance");
+        return;
+    }
+    // Knot gains never overstate the pointwise oracle (sub-EPS cost gaps
+    // can let the oracle legitimately exceed a knot — see parametric.rs).
+    for pt in &curve.points {
+        let s = solve_at(p, pt.cost());
+        assert!(
+            s.feasible && s.gain >= pt.gain - 1e-9,
+            "{label}: oracle {} below knot {}",
+            s.gain,
+            pt.gain
+        );
+    }
+    if exact.feasible {
+        let top = curve.points.last().unwrap();
+        assert!(
+            (top.gain - exact.gain).abs() < 1e-9,
+            "{label}: top knot {} vs brute {}",
+            top.gain,
+            exact.gain
+        );
+    }
+}
+
+/// Always-on fuzz slice: small instances, fixed seeds, ~2s in a debug
+/// build.  The full campaign (40 seeds x 60 trials, larger instances) is
+/// `parametric.rs::fuzz_solver_oracle_small_instances` under `--ignored`.
+#[test]
+fn fuzz_smoke() {
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(0x50_0E ^ (seed << 8));
+        for trial in 0..20 {
+            let p = if trial % 2 == 0 {
+                random(&mut rng, 4, 4)
+            } else {
+                random_multi(&mut rng, 3, 3, 2)
+            };
+            check_against_oracle(&p, &format!("seed {seed} trial {trial}"));
+        }
+    }
+}
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("corpus")
+}
+
+fn f64_field(j: &Json, key: &str, file: &str) -> f64 {
+    match j.get(key).unwrap_or_else(|e| panic!("{file}: {e:#}")) {
+        Json::Num(x) => *x,
+        // Strings carry non-finite values (JSON numbers cannot).
+        Json::Str(s) => s
+            .parse::<f64>()
+            .unwrap_or_else(|e| panic!("{file}: bad {key} '{s}': {e}")),
+        other => panic!("{file}: {key} must be a number or string, got {other:?}"),
+    }
+}
+
+fn table(j: &Json, key: &str, file: &str) -> Vec<Vec<f64>> {
+    let rows = j
+        .get(key)
+        .and_then(|v| v.arr())
+        .unwrap_or_else(|e| panic!("{file}: bad {key}: {e:#}"));
+    rows.iter()
+        .map(|row| {
+            row.arr()
+                .unwrap_or_else(|e| panic!("{file}: bad {key} row: {e:#}"))
+                .iter()
+                .map(|x| {
+                    x.f64().unwrap_or_else(|e| panic!("{file}: bad {key} value: {e:#}"))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn replay_tau_reject(tau: f64, file: &str) {
+    let (graph, qlayers, calibration) = demo_model(1, 3);
+    let mut engine = Engine::new();
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    let svc = PlanService::from_engine(&mut engine, &["demo"]).unwrap();
+    let req = PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(tau);
+    assert!(svc.solve("demo", &req).is_err(), "{file}: tau {tau} must be rejected");
+    let lookup = ServeRequest::new("demo", req).via_frontier();
+    assert!(svc.answer(&lookup).is_err(), "{file}: tau {tau} lookup must error");
+    // The lossy batch completes with an indexed error, never a panic.
+    let good = ServeRequest::new(
+        "demo",
+        PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004),
+    );
+    let out = svc.serve_batch_lossy(
+        &[good.clone(), lookup, good],
+        &ExecPool::new(ExecCfg::new(2)),
+    );
+    assert_eq!(out.len(), 3, "{file}");
+    assert_eq!(
+        out[1].get("kind").and_then(|k| k.str().map(str::to_string)).unwrap(),
+        "error",
+        "{file}: entry 1 must be an indexed error"
+    );
+}
+
+/// Replay every minimized failure in `tests/corpus/`.  Seeded with the
+/// NaN/inf/negative-tau rejects and the degenerate-hull instances that
+/// destabilized the pre-hardening frontier solver.
+#[test]
+fn corpus_replays_minimized_failures() {
+    let dir = corpus_dir();
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("corpus dir {}: {e}", dir.display()))
+        .filter_map(|entry| {
+            let path = entry.unwrap().path();
+            (path.extension().and_then(|x| x.to_str()) == Some("json")).then_some(path)
+        })
+        .collect();
+    files.sort();
+    assert!(
+        files.len() >= 6,
+        "corpus unexpectedly small ({} files) — was it checked in?",
+        files.len()
+    );
+    for path in files {
+        let file = path.file_name().unwrap().to_string_lossy().to_string();
+        let j = Json::parse_file(&path).unwrap_or_else(|e| panic!("{file}: {e:#}"));
+        let kind = j
+            .get("kind")
+            .and_then(|k| k.str().map(str::to_string))
+            .unwrap_or_else(|e| panic!("{file}: {e:#}"));
+        match kind.as_str() {
+            "mckp_oracle" => {
+                let gains = table(&j, "gains", &file);
+                let costs = table(&j, "costs", &file);
+                let budget = f64_field(&j, "budget", &file);
+                let p = Mckp::new(gains, costs, budget)
+                    .unwrap_or_else(|e| panic!("{file}: {e:#}"));
+                check_against_oracle(&p, &file);
+            }
+            "tau_reject" => replay_tau_reject(f64_field(&j, "tau", &file), &file),
+            other => panic!("{file}: unknown corpus kind '{other}'"),
+        }
+    }
+}

@@ -1,0 +1,450 @@
+//! Integration tests for the resident planning daemon: a real socket, the
+//! real accept loop, and the crate's own HTTP client.
+//!
+//! The load-bearing assertion is BIT-identity: every daemon answer body
+//! must equal the direct `PlanService::answer` serialization, at any
+//! worker count — the daemon adds transport, never a different solve
+//! path.  The rest covers the serving machinery itself: admission
+//! overflow (503 + Retry-After), per-request deadlines (504), NDJSON
+//! streaming with per-entry errors, the /metrics endpoint, and graceful
+//! drain on shutdown.
+
+use ampq::backend::DeviceProfile;
+use ampq::coordinator::Strategy;
+use ampq::metrics::Objective;
+use ampq::plan::demo::demo_model;
+use ampq::plan::service::indexed;
+use ampq::plan::{Engine, PlanRequest, PlanService, ServeRequest};
+use ampq::serve::client::{request as one_shot, Client};
+use ampq::serve::{Daemon, ServeConfig};
+use ampq::util::Json;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+/// Two models ("alpha" depth 2, "beta" depth 1) staged on gaudi2 (the
+/// default + its device alias) and gaudi3.  Fully deterministic, so two
+/// independently built services answer bit-identically.
+fn build_service() -> PlanService {
+    let (ga, qa, ca) = demo_model(2, 7);
+    let (gb, qb, cb) = demo_model(1, 5);
+    let mut g2 = Engine::new();
+    g2.register_synthetic("alpha", ga.clone(), qa.clone(), ca.clone());
+    g2.register_synthetic("beta", gb.clone(), qb.clone(), cb.clone());
+    let svc = PlanService::from_engine(&mut g2, &["alpha", "beta"]).unwrap();
+    let mut g3 = Engine::new().with_device(DeviceProfile::gaudi3());
+    g3.register_synthetic("alpha", ga, qa, ca);
+    g3.register_synthetic("beta", gb, qb, cb);
+    svc.register_for_device("alpha", "gaudi3", g3.planner("alpha").unwrap()).unwrap();
+    svc.register_for_device("beta", "gaudi3", g3.planner("beta").unwrap()).unwrap();
+    svc
+}
+
+fn devices() -> Vec<DeviceProfile> {
+    vec![DeviceProfile::gaudi2(), DeviceProfile::gaudi3()]
+}
+
+/// A daemon on an ephemeral port plus the thread running it.  Dropping
+/// shuts it down and joins, so a failed assertion can't leak a thread
+/// that outlives its scope.
+struct TestDaemon {
+    daemon: Arc<Daemon>,
+    addr: String,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestDaemon {
+    fn start(cfg: ServeConfig) -> TestDaemon {
+        Self::start_with(build_service(), cfg)
+    }
+
+    fn start_with(svc: PlanService, mut cfg: ServeConfig) -> TestDaemon {
+        cfg.addr = "127.0.0.1:0".to_string();
+        let daemon = Arc::new(Daemon::new(svc, devices(), cfg));
+        let listener = daemon.bind().unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let d = daemon.clone();
+        let join = std::thread::spawn(move || d.run(listener).unwrap());
+        TestDaemon { daemon, addr, join: Some(join) }
+    }
+
+    fn stop(mut self) {
+        self.daemon.handle().shutdown();
+        self.join.take().unwrap().join().unwrap();
+    }
+}
+
+impl Drop for TestDaemon {
+    fn drop(&mut self) {
+        self.daemon.handle().shutdown();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn plan_req(model: &str, tau: f64) -> ServeRequest {
+    ServeRequest::new(model, PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(tau))
+}
+
+fn plan_body(model: &str, tau: f64) -> String {
+    plan_req(model, tau).to_json().to_string()
+}
+
+#[test]
+fn plan_answers_are_bit_identical_to_direct_service() {
+    let oracle = build_service();
+    let td = TestDaemon::start(ServeConfig::default());
+    let mut c = Client::connect(&td.addr).unwrap();
+
+    let cases = vec![
+        plan_req("alpha", 0.004),
+        plan_req("beta", 0.002),
+        ServeRequest::new(
+            "alpha",
+            PlanRequest::new(Objective::EmpiricalTime)
+                .with_loss_budget(0.004)
+                .with_device("gaudi3"),
+        ),
+        plan_req("alpha", 0.003).via_frontier(),
+        ServeRequest::new(
+            "beta",
+            PlanRequest::new(Objective::Memory).with_loss_budget(0.005),
+        ),
+    ];
+    for req in cases {
+        let body = req.to_json().to_string();
+        let resp = c.request("POST", "/v1/plan", Some(body.as_str())).unwrap();
+        assert_eq!(resp.status, 200, "body: {}", resp.text().unwrap());
+        let expected = oracle.answer(&req).unwrap().to_string().into_bytes();
+        assert_eq!(resp.body, expected, "daemon answer diverged for {body}");
+    }
+    td.stop();
+}
+
+#[test]
+fn worker_count_does_not_change_bytes() {
+    let reqs =
+        vec![plan_body("alpha", 0.004), plan_body("beta", 0.001), plan_body("alpha", 0.006)];
+    let mut answers: Vec<Vec<Vec<u8>>> = Vec::new();
+    for workers in [1usize, 4] {
+        let td = TestDaemon::start(ServeConfig { workers, ..ServeConfig::default() });
+        let mut c = Client::connect(&td.addr).unwrap();
+        let mut round = Vec::new();
+        for body in &reqs {
+            let resp = c.request("POST", "/v1/plan", Some(body.as_str())).unwrap();
+            assert_eq!(resp.status, 200);
+            round.push(resp.body.clone());
+        }
+        // The streaming frontier endpoint must be byte-stable too.
+        let f = c
+            .request("POST", "/v1/frontier", Some("{\"model\":\"alpha\"}"))
+            .unwrap();
+        assert_eq!(f.status, 200);
+        round.push(f.body.clone());
+        answers.push(round);
+        td.stop();
+    }
+    assert_eq!(answers[0], answers[1], "worker count changed response bytes");
+}
+
+#[test]
+fn get_endpoints_report_models_devices_and_metrics() {
+    let td = TestDaemon::start(ServeConfig::default());
+    let mut c = Client::connect(&td.addr).unwrap();
+
+    let h = c.request("GET", "/healthz", None).unwrap();
+    assert_eq!(h.status, 200);
+    assert_eq!(h.body, b"ok\n");
+
+    let m = c.request("GET", "/v1/models", None).unwrap();
+    assert_eq!(m.status, 200);
+    let models = Json::parse(&m.text().unwrap()).unwrap();
+    let names: Vec<String> = models
+        .get("models")
+        .unwrap()
+        .arr()
+        .unwrap()
+        .iter()
+        .map(|j| j.str().unwrap().to_string())
+        .collect();
+    assert_eq!(names, vec!["alpha".to_string(), "beta".to_string()]);
+
+    let d = c.request("GET", "/v1/devices", None).unwrap();
+    assert_eq!(d.status, 200);
+    let parsed = Json::parse(&d.text().unwrap()).unwrap();
+    let devs = parsed.get("devices").unwrap().arr().unwrap();
+    assert_eq!(devs.len(), 2);
+    assert_eq!(devs[1].get("name").unwrap().str().unwrap(), "gaudi3");
+
+    // Generate one plan + one frontier sweep + one cache hit, then read
+    // the counters back through the exposition endpoint.
+    let body = plan_body("alpha", 0.004);
+    let p = c.request("POST", "/v1/plan", Some(body.as_str())).unwrap();
+    assert_eq!(p.status, 200);
+    for _ in 0..2 {
+        let f = c
+            .request("POST", "/v1/frontier", Some("{\"model\":\"beta\"}"))
+            .unwrap();
+        assert_eq!(f.status, 200);
+    }
+    let metrics = c.request("GET", "/metrics", None).unwrap().text().unwrap();
+    assert!(metrics.contains("ampq_requests_total{endpoint=\"/healthz\",status=\"200\"} 1\n"));
+    assert!(metrics.contains("ampq_requests_total{endpoint=\"/v1/plan\",status=\"200\"} 1\n"));
+    assert!(
+        metrics.contains("ampq_requests_total{endpoint=\"/v1/frontier\",status=\"200\"} 2\n")
+    );
+    assert!(metrics.contains("ampq_plan_latency_us{quantile=\"0.5\"} "));
+    assert!(metrics.contains("ampq_plan_latency_us{quantile=\"0.99\"} "));
+    assert!(metrics.contains("ampq_plan_latency_us_count 1\n"));
+    assert!(metrics.contains("ampq_frontier_latency_us_count 1\n"));
+    assert!(metrics.contains("ampq_frontier_cache_hits_total 1\n"));
+    assert!(metrics.contains("ampq_frontier_cache_solves_total 1\n"));
+    assert!(metrics.contains("ampq_frontier_cache_entries 1\n"));
+    assert!(metrics.contains("ampq_queue_rejected_total 0\n"));
+    assert!(metrics.contains("ampq_queue_capacity 64\n"));
+
+    // Routing edges: unknown path, wrong method, malformed body.
+    assert_eq!(c.request("GET", "/nope", None).unwrap().status, 404);
+    assert_eq!(c.request("GET", "/v1/plan", None).unwrap().status, 405);
+    let bad = c.request("POST", "/v1/plan", Some("{not json")).unwrap();
+    assert_eq!(bad.status, 400);
+    assert_eq!(
+        Json::parse(&bad.text().unwrap()).unwrap().get("kind").unwrap().str().unwrap(),
+        "error"
+    );
+    td.stop();
+}
+
+#[test]
+fn concurrent_clients_get_identical_bytes_and_cache_hits() {
+    let td = TestDaemon::start(ServeConfig { workers: 4, ..ServeConfig::default() });
+    let addr = td.addr.clone();
+    // Every (model, device) combo exercised by every thread: 4 distinct
+    // frontier keys total, everything past the first sweep a cache hit.
+    let combos: Vec<String> = vec![
+        "{\"model\":\"alpha\"}".into(),
+        "{\"model\":\"alpha\",\"device\":\"gaudi3\"}".into(),
+        "{\"model\":\"beta\"}".into(),
+        "{\"model\":\"beta\",\"device\":\"gaudi3\"}".into(),
+    ];
+    const THREADS: usize = 8;
+    let n_combos = combos.len();
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let mut handles = Vec::new();
+    for _ in 0..THREADS {
+        let addr = addr.clone();
+        let combos = combos.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            barrier.wait();
+            let mut out = Vec::new();
+            for body in &combos {
+                let f = c.request("POST", "/v1/frontier", Some(body.as_str())).unwrap();
+                assert_eq!(f.status, 200);
+                out.push(f.body);
+                let plan = plan_body("alpha", 0.004);
+                let p = c.request("POST", "/v1/plan", Some(plan.as_str())).unwrap();
+                assert_eq!(p.status, 200);
+                out.push(p.body);
+            }
+            out
+        }));
+    }
+    let results: Vec<Vec<Vec<u8>>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for r in &results[1..] {
+        assert_eq!(r, &results[0], "concurrent clients saw different bytes");
+    }
+    // 4 distinct frontier cells; every other lookup was a hit.
+    let svc = td.daemon.service();
+    assert_eq!(svc.frontier_solves(), 4);
+    assert_eq!(svc.frontier_hits(), THREADS * n_combos - 4);
+    assert_eq!(svc.frontier_cache_len(), 4);
+    td.stop();
+}
+
+#[test]
+fn queue_overflow_answers_503_with_retry_after() {
+    // One worker, tiny queue, 100ms per job: a synchronized burst has to
+    // overflow admission — and the daemon must keep serving afterwards.
+    let td = TestDaemon::start(ServeConfig {
+        workers: 1,
+        queue_depth: 2,
+        debug_delay: Duration::from_millis(100),
+        ..ServeConfig::default()
+    });
+    const CLIENTS: usize = 12;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let mut handles = Vec::new();
+    for _ in 0..CLIENTS {
+        let addr = td.addr.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let body = plan_body("alpha", 0.004);
+            barrier.wait();
+            let resp = c.request("POST", "/v1/plan", Some(body.as_str())).unwrap();
+            if resp.status == 503 {
+                assert_eq!(resp.header("retry-after"), Some("1"));
+            }
+            resp.status
+        }));
+    }
+    let statuses: Vec<u16> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let ok = statuses.iter().filter(|&&s| s == 200).count();
+    let rejected = statuses.iter().filter(|&&s| s == 503).count();
+    assert_eq!(ok + rejected, CLIENTS, "unexpected statuses: {statuses:?}");
+    assert!(ok >= 1, "no request survived the burst: {statuses:?}");
+    assert!(rejected >= 1, "burst never overflowed the queue: {statuses:?}");
+    assert_eq!(td.daemon.metrics().rejected() as usize, rejected);
+    // No deadlock, no panic: the daemon still answers.
+    assert_eq!(one_shot(&td.addr, "GET", "/healthz", None).unwrap().status, 200);
+    td.stop();
+}
+
+#[test]
+fn expired_requests_answer_504() {
+    let td = TestDaemon::start(ServeConfig {
+        workers: 1,
+        request_timeout: Duration::from_millis(50),
+        debug_delay: Duration::from_millis(600),
+        ..ServeConfig::default()
+    });
+    let body = plan_body("alpha", 0.004);
+    let resp = one_shot(&td.addr, "POST", "/v1/plan", Some(body.as_str())).unwrap();
+    assert_eq!(resp.status, 504);
+    assert!(td.daemon.metrics().timeouts() >= 1);
+    td.stop();
+}
+
+#[test]
+fn batch_plan_streams_indexed_lines_with_per_request_errors() {
+    let oracle = build_service();
+    let td = TestDaemon::start(ServeConfig::default());
+    let batch = format!(
+        "[{},{},{},{}]",
+        plan_body("alpha", 0.004),
+        plan_body("nope", 0.004),               // unknown model
+        "{\"objective\":\"et\",\"tau\":0.004}", // missing model field
+        plan_body("beta", 0.002),
+    );
+    let resp = one_shot(&td.addr, "POST", "/v1/plan", Some(batch.as_str())).unwrap();
+    assert_eq!(resp.status, 200);
+    let lines = resp.lines().unwrap();
+    assert_eq!(lines.len(), 6, "header + 4 entries + footer: {lines:?}");
+
+    let header = Json::parse(&lines[0]).unwrap();
+    assert_eq!(header.get("kind").unwrap().str().unwrap(), "batch");
+    assert_eq!(header.get("n").unwrap().usize().unwrap(), 4);
+
+    // Entries arrive in request order, index-stamped; good ones are the
+    // oracle's answers byte for byte.
+    for (i, expect_ok) in [(0usize, true), (1, false), (2, false), (3, true)] {
+        let line = Json::parse(&lines[1 + i]).unwrap();
+        assert_eq!(line.get("index").unwrap().usize().unwrap(), i);
+        if expect_ok {
+            let req = if i == 0 { plan_req("alpha", 0.004) } else { plan_req("beta", 0.002) };
+            let expected = indexed(i, oracle.answer(&req).unwrap());
+            assert_eq!(lines[1 + i], expected.to_string());
+        } else {
+            assert_eq!(line.get("kind").unwrap().str().unwrap(), "error");
+            assert!(!line.get("error").unwrap().str().unwrap().is_empty());
+        }
+    }
+    let footer = Json::parse(&lines[5]).unwrap();
+    assert_eq!(footer.get("kind").unwrap().str().unwrap(), "done");
+    assert_eq!(footer.get("errors").unwrap().usize().unwrap(), 2);
+    td.stop();
+}
+
+#[test]
+fn frontier_streams_knots_matching_the_cached_curve() {
+    let oracle = build_service();
+    let td = TestDaemon::start(ServeConfig::default());
+    let resp =
+        one_shot(&td.addr, "POST", "/v1/frontier", Some("{\"model\":\"alpha\"}")).unwrap();
+    assert_eq!(resp.status, 200);
+    let lines = resp.lines().unwrap();
+    let f = oracle.frontier_for("alpha", None, Objective::EmpiricalTime, Strategy::Ip).unwrap();
+
+    let header = Json::parse(&lines[0]).unwrap();
+    assert_eq!(header.get("kind").unwrap().str().unwrap(), "frontier_header");
+    assert_eq!(header.get("model").unwrap().str().unwrap(), "alpha");
+    assert_eq!(header.get("device").unwrap().str().unwrap(), "gaudi2");
+    assert_eq!(header.get("points").unwrap().usize().unwrap(), f.points.len());
+    assert_eq!(lines.len(), f.points.len() + 2, "header + knots + footer");
+    for (k, p) in f.points.iter().enumerate() {
+        let knot = Json::parse(&lines[1 + k]).unwrap();
+        assert_eq!(knot.get("kind").unwrap().str().unwrap(), "knot");
+        assert_eq!(knot.get("i").unwrap().usize().unwrap(), k);
+        assert_eq!(knot.get("tau").unwrap().f64().unwrap(), p.tau);
+        assert_eq!(knot.get("gain").unwrap().f64().unwrap(), p.gain);
+    }
+    let footer = Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(footer.get("kind").unwrap().str().unwrap(), "frontier_done");
+
+    // Batch form: per-entry index stamps, errors inline, stream completes.
+    let resp = one_shot(
+        &td.addr,
+        "POST",
+        "/v1/frontier",
+        Some("[{\"model\":\"alpha\"},{\"model\":\"nope\"}]"),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200);
+    let lines = resp.lines().unwrap();
+    assert_eq!(lines.len(), 1 + (f.points.len() + 2) + 1 + 1);
+    let header = Json::parse(&lines[1]).unwrap();
+    assert_eq!(header.get("kind").unwrap().str().unwrap(), "frontier_header");
+    assert_eq!(header.get("index").unwrap().usize().unwrap(), 0);
+    let err = Json::parse(&lines[lines.len() - 2]).unwrap();
+    assert_eq!(err.get("kind").unwrap().str().unwrap(), "error");
+    assert_eq!(err.get("index").unwrap().usize().unwrap(), 1);
+    let footer = Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(footer.get("errors").unwrap().usize().unwrap(), 1);
+    td.stop();
+}
+
+#[test]
+fn oversized_bodies_answer_413() {
+    let td = TestDaemon::start(ServeConfig {
+        limits: ampq::serve::http::Limits {
+            max_body_bytes: 1024,
+            ..ampq::serve::http::Limits::default()
+        },
+        ..ServeConfig::default()
+    });
+    let big = format!("{{\"model\":\"{}\"}}", "x".repeat(4096));
+    let resp = one_shot(&td.addr, "POST", "/v1/plan", Some(big.as_str())).unwrap();
+    assert_eq!(resp.status, 413);
+    td.stop();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let td = TestDaemon::start(ServeConfig {
+        workers: 1,
+        debug_delay: Duration::from_millis(300),
+        ..ServeConfig::default()
+    });
+    let addr = td.addr.clone();
+    let slow_addr = addr.clone();
+    let slow = std::thread::spawn(move || {
+        let body = plan_body("alpha", 0.004);
+        one_shot(&slow_addr, "POST", "/v1/plan", Some(body.as_str())).unwrap()
+    });
+    // Let the slow request get admitted, then pull the plug.
+    std::thread::sleep(Duration::from_millis(100));
+    td.daemon.handle().shutdown();
+    let resp = slow.join().unwrap();
+    assert_eq!(resp.status, 200, "in-flight request must complete through a drain");
+    // run() returns (stop() joins the thread), after which the port is dark.
+    let daemon = td.daemon.clone();
+    td.stop();
+    assert!(daemon.handle().is_shutdown());
+    assert!(
+        one_shot(&addr, "GET", "/healthz", None).is_err(),
+        "daemon kept serving after shutdown"
+    );
+}
