@@ -7,10 +7,15 @@
 //! BENCH_OUT=path) so CI records perf-trajectory data points, including
 //! one entry per thread count for the parallel cases.
 
+use ampq::backend::DeviceProfile;
 use ampq::coordinator::Strategy;
+use ampq::dist::{Coordinator, DistConfig};
 use ampq::exec::{ExecCfg, ExecPool};
 use ampq::metrics::Objective;
+use ampq::numerics::PAPER_FORMATS;
 use ampq::plan::demo::demo_model;
+use ampq::plan::engine::{DEFAULT_MEASURE_REPS, DEFAULT_MEASURE_SEED};
+use ampq::plan::stage::{MeasureStage, PartitionStage, Stage};
 use ampq::plan::Engine;
 use ampq::solver::{branch_bound, dp, greedy, lp_relax, Mckp};
 use ampq::util::bench::{bench, black_box, write_summary};
@@ -166,6 +171,68 @@ fn main() {
         let speedup = t1 / tn.max(1e-9);
         println!("frontier/demo: {speedup:.2}x speedup at {tmax} threads vs 1");
         quality.push(("frontier_speedup_max_threads".into(), Json::Num(speedup)));
+    }
+
+    // Distributed measurement throughput: the fleet-sharded Measured
+    // stage (2 `ampq worker` subprocesses, stdio pipes) against the
+    // in-process sequential stage — same bytes (asserted), the ratio
+    // records what process fan-out costs/buys on this workload.
+    {
+        let (graph, qlayers, _) = demo_model(4, 11);
+        let device = DeviceProfile::gaudi2();
+        let menu = device.restrict_menu(&PAPER_FORMATS);
+        let seq = ExecPool::sequential();
+        let partitioned = PartitionStage {
+            model: "demo",
+            graph: &graph,
+            qlayers: &qlayers,
+            menu: &menu,
+        }
+        .run(&seq)
+        .unwrap();
+        let ms = MeasureStage {
+            model: "demo",
+            graph: &graph,
+            partitioned: &partitioned,
+            device: &device,
+            seed: DEFAULT_MEASURE_SEED,
+            reps: DEFAULT_MEASURE_REPS,
+        };
+        let reference = ms.run(&seq).unwrap();
+        let r_local = bench("measure/demo/in-process", 1, 5, || {
+            black_box(ms.run(&seq).unwrap());
+        });
+        let dist_cfg = DistConfig {
+            workers: 2,
+            worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_ampq"))),
+            ..DistConfig::default()
+        };
+        match Coordinator::new(dist_cfg) {
+            Ok(mut coord) => {
+                assert_eq!(
+                    coord.measure_stage(&ms).unwrap(),
+                    reference,
+                    "distributed Measured must be bit-identical"
+                );
+                let r_dist = bench("measure/demo/dist/workers=2", 1, 5, || {
+                    black_box(coord.measure_stage(&ms).unwrap());
+                });
+                let ratio = r_local.mean_us / r_dist.mean_us.max(1e-9);
+                println!(
+                    "measure/demo: distributed (2 workers) runs at {ratio:.2}x the \
+                     in-process rate"
+                );
+                quality.push((
+                    "measure_dist_vs_in_process_speedup".into(),
+                    Json::Num(ratio),
+                ));
+                quality.push(("measure_dist_workers".into(), Json::Num(2.0)));
+                results.push(r_dist);
+                coord.shutdown();
+            }
+            Err(e) => eprintln!("warning: skipping distributed measure bench ({e:#})"),
+        }
+        results.push(r_local);
     }
 
     // Solution-quality ablation (DESIGN.md ablations).

@@ -3,14 +3,26 @@
 //!
 //! ```text
 //! ampq_client <addr> <method> <path> [--data JSON] [--expect-status N]
+//!                                    [--retry N]
+//! ampq_client <addr> --load [--qps N] [--duration S] [--model NAME]
+//!                           [--tau X] [--retry N]
 //! ```
 //!
-//! The response body goes to stdout.  With `--expect-status`, a
-//! different actual status exits nonzero (after printing the body), so
-//! shell pipelines can both grep the payload and assert the status.
+//! One-shot mode: the response body goes to stdout; with
+//! `--expect-status`, a different actual status exits nonzero (after
+//! printing the body), so shell pipelines can both grep the payload and
+//! assert the status.  `--retry N` honors `Retry-After` on 503 under a
+//! capped budget of N extra attempts.
+//!
+//! Load mode (`--load`): sustained mixed plan/frontier traffic at the
+//! target QPS for the given duration, printing client-side p50/p99
+//! latency and error counts, cross-checked against the daemon's own
+//! `/metrics` counters (snapshot diff across the run).
 
+use ampq::serve::client::{request, request_with_retry, RetryPolicy};
 use anyhow::{anyhow, bail, Result};
 use std::io::Write;
+use std::time::{Duration, Instant};
 
 fn main() {
     if let Err(e) = run() {
@@ -21,12 +33,23 @@ fn main() {
 
 fn run() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    if argv.len() < 3 || argv.iter().any(|a| a == "--help") {
-        bail!("usage: ampq_client <addr> <method> <path> [--data JSON] [--expect-status N]");
+    if argv.iter().any(|a| a == "--help") || argv.is_empty() {
+        bail!(
+            "usage: ampq_client <addr> <method> <path> [--data JSON] [--expect-status N] \
+             [--retry N]\n       ampq_client <addr> --load [--qps N] [--duration S] \
+             [--model NAME] [--tau X] [--retry N]"
+        );
+    }
+    if argv.iter().any(|a| a == "--load") {
+        return run_load(&argv);
+    }
+    if argv.len() < 3 {
+        bail!("usage: ampq_client <addr> <method> <path> [--data JSON] [--expect-status N] [--retry N]");
     }
     let (addr, method, path) = (&argv[0], &argv[1], &argv[2]);
     let mut data: Option<String> = None;
     let mut expect: Option<u16> = None;
+    let mut retry = 0usize;
     let mut i = 3;
     while i < argv.len() {
         match argv[i].as_str() {
@@ -45,11 +68,21 @@ fn run() -> Result<()> {
                     .ok_or_else(|| anyhow!("--expect-status needs a value"))?;
                 expect = Some(v.parse().map_err(|_| anyhow!("bad status '{v}'"))?);
             }
+            "--retry" => {
+                i += 1;
+                let v = argv.get(i).ok_or_else(|| anyhow!("--retry needs a value"))?;
+                retry = v.parse().map_err(|_| anyhow!("bad retry budget '{v}'"))?;
+            }
             other => bail!("unknown argument '{other}'"),
         }
         i += 1;
     }
-    let resp = ampq::serve::client::request(addr, method, path, data.as_deref())?;
+    let resp = if retry > 0 {
+        let policy = RetryPolicy { budget: retry, ..RetryPolicy::default() };
+        request_with_retry(addr, method, path, data.as_deref(), policy)?.response
+    } else {
+        request(addr, method, path, data.as_deref())?
+    };
     let mut out = std::io::stdout();
     out.write_all(&resp.body)?;
     if !resp.body.ends_with(b"\n") {
@@ -60,6 +93,130 @@ fn run() -> Result<()> {
         if resp.status != want {
             bail!("status {} (expected {want})", resp.status);
         }
+    }
+    Ok(())
+}
+
+/// Sum of `ampq_requests_total{endpoint="...",...}` over all statuses for
+/// the two solve endpoints, from the daemon's /metrics exposition text.
+fn solve_requests_total(metrics: &str) -> u64 {
+    metrics
+        .lines()
+        .filter(|l| l.starts_with("ampq_requests_total{"))
+        .filter(|l| {
+            l.contains("endpoint=\"/v1/plan\"") || l.contains("endpoint=\"/v1/frontier\"")
+        })
+        .filter_map(|l| l.rsplit(' ').next()?.trim().parse::<u64>().ok())
+        .sum()
+}
+
+fn load_flag<T: std::str::FromStr>(argv: &[String], name: &str, default: T) -> Result<T> {
+    match argv.iter().position(|a| a == name) {
+        None => Ok(default),
+        Some(i) => {
+            let v = argv.get(i + 1).ok_or_else(|| anyhow!("{name} needs a value"))?;
+            v.parse().map_err(|_| anyhow!("bad {name} value '{v}'"))
+        }
+    }
+}
+
+fn run_load(argv: &[String]) -> Result<()> {
+    let addr = &argv[0];
+    if addr.starts_with("--") {
+        bail!("usage: ampq_client <addr> --load [--qps N] [--duration S] ...");
+    }
+    let qps: f64 = load_flag(argv, "--qps", 20.0)?;
+    let duration: f64 = load_flag(argv, "--duration", 2.0)?;
+    let model: String = load_flag(argv, "--model", "demo".to_string())?;
+    let tau: f64 = load_flag(argv, "--tau", 0.004)?;
+    let retry: usize = load_flag(argv, "--retry", 2)?;
+    if !(qps > 0.0) || !(duration > 0.0) {
+        bail!("--qps and --duration must be positive");
+    }
+    let policy = RetryPolicy {
+        budget: retry,
+        max_wait: Duration::from_millis(250),
+    };
+    let plan_body = format!("{{\"model\":\"{model}\",\"objective\":\"et\",\"tau\":{tau}}}");
+    let frontier_body = format!("{{\"model\":\"{model}\"}}");
+
+    let before = request(addr, "GET", "/metrics", None)?.text()?;
+    let base = solve_requests_total(&before);
+
+    let interval = Duration::from_secs_f64(1.0 / qps);
+    let start = Instant::now();
+    let t_end = start + Duration::from_secs_f64(duration);
+    let mut latencies_us: Vec<f64> = Vec::new();
+    let (mut sent, mut ok, mut http_errors, mut transport_errors) = (0u64, 0u64, 0u64, 0u64);
+    let mut attempts_total = 0u64;
+    while Instant::now() < t_end {
+        // Open-loop pacing: each request has a scheduled send time; a slow
+        // server makes us late, not slower (that is the point of a load
+        // test).
+        let scheduled = start + interval.mul_f64(sent as f64);
+        let now = Instant::now();
+        if scheduled > now {
+            std::thread::sleep(scheduled - now);
+        }
+        // Mixed traffic: every 5th request sweeps a frontier, the rest
+        // solve plans (the frontier side is cache-hot after the first).
+        let (path, body) = if sent % 5 == 4 {
+            ("/v1/frontier", frontier_body.as_str())
+        } else {
+            ("/v1/plan", plan_body.as_str())
+        };
+        let t0 = Instant::now();
+        match request_with_retry(addr, "POST", path, Some(body), policy) {
+            Ok(r) => {
+                attempts_total += r.attempts as u64;
+                if r.response.status == 200 {
+                    ok += 1;
+                    latencies_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                } else {
+                    http_errors += 1;
+                    if http_errors <= 3 {
+                        eprintln!("load: {path} -> {}", r.response.status);
+                    }
+                }
+            }
+            Err(e) => {
+                transport_errors += 1;
+                if transport_errors <= 3 {
+                    eprintln!("load: {path} -> transport error: {e:#}");
+                }
+            }
+        }
+        sent += 1;
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+
+    latencies_us.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let pct = |q: f64| -> f64 {
+        if latencies_us.is_empty() {
+            return f64::NAN;
+        }
+        let idx = ((latencies_us.len() - 1) as f64 * q).round() as usize;
+        latencies_us[idx]
+    };
+    println!(
+        "load: {sent} requests in {elapsed:.2}s ({:.1} qps achieved, {qps:.1} target): \
+         {ok} ok, {http_errors} http errors, {transport_errors} transport errors",
+        sent as f64 / elapsed
+    );
+    println!("client latency: p50 {:.0} us, p99 {:.0} us", pct(0.50), pct(0.99));
+
+    // Cross-check: the daemon's own request counters must account for
+    // every attempt we made (retries included).  Requests that died in
+    // transport may or may not have been counted server-side, so the
+    // strict check only runs on a clean-transport run.
+    let after = request(addr, "GET", "/metrics", None)?.text()?;
+    let served = solve_requests_total(&after) - base;
+    println!("server /metrics: {served} solve requests this run (client sent {attempts_total} attempts)");
+    if transport_errors == 0 && served != attempts_total {
+        bail!("metrics cross-check failed: server counted {served}, client sent {attempts_total}");
+    }
+    if ok == 0 {
+        bail!("load run produced no successful responses");
     }
     Ok(())
 }

@@ -183,13 +183,39 @@ pub fn optimize_frontier(
     tau_max: f64,
     pool: &ExecPool,
 ) -> Result<FrontierSolves> {
+    let problem = frontier_instance(groups, calib, tau_max)?;
+    let curve = parametric::frontier_with(&problem, pool);
+    Ok(materialize_curve(groups, calib, &problem, &curve))
+}
+
+/// Assemble the eq.-5 single-constraint MCKP instance the frontier sweep
+/// solves — shared by the in-process path above and the distributed
+/// coordinator (`crate::dist`), which ships THIS instance to workers so
+/// both sides expand identical DP states.
+pub(crate) fn frontier_instance(
+    groups: &[GroupChoices],
+    calib: &Calibration,
+    tau_max: f64,
+) -> Result<Mckp> {
     let nq = calib.s.len();
     let covered = covered_layers(groups, nq);
     let budget =
         charge_uncovered(&covered, calib.budget(tau_max), |l| calib.layer_mse(l, Format::Bf16));
     let (gains, mse_costs) = gain_mse_tables(groups, calib);
-    let problem = Mckp::new(gains, mse_costs, budget)?;
-    let curve = parametric::frontier_with(&problem, pool);
+    Mckp::new(gains, mse_costs, budget)
+}
+
+/// Materialize a parametric curve's knots as model configurations — the
+/// single reduction from DP choices to [`FrontierSolves`], shared with the
+/// distributed path so remotely-expanded curves yield byte-identical
+/// knots.
+pub(crate) fn materialize_curve(
+    groups: &[GroupChoices],
+    calib: &Calibration,
+    problem: &Mckp,
+    curve: &parametric::ParametricCurve,
+) -> FrontierSolves {
+    let nq = calib.s.len();
     let materialize = |choice: &[usize], gain: f64, exact: bool| {
         let mut config = MpConfig::all_bf16(nq);
         for (g, &p) in groups.iter().zip(choice) {
@@ -206,19 +232,19 @@ pub fn optimize_frontier(
         // maximal configuration): the curve is the lone fallback plan every
         // pointwise solve would return.
         let fb = problem.fallback();
-        return Ok(FrontierSolves {
+        return FrontierSolves {
             knots: vec![materialize(&fb.choice, fb.gain, true)],
             complete: true,
-        });
+        };
     }
-    Ok(FrontierSolves {
+    FrontierSolves {
         knots: curve
             .points
             .iter()
             .map(|pt| materialize(&pt.choice, pt.gain, pt.exact))
             .collect(),
         complete: curve.exact,
-    })
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,765 @@
+//! The distributed-planning coordinator: a supervised fleet of `ampq
+//! worker` subprocesses plus the deterministic task scheduler that fans
+//! measurement and frontier-DP work out to them.
+//!
+//! ## Determinism
+//!
+//! Workers are interchangeable pure-function evaluators.  Every task's
+//! identity (noise-stream index, DP level + chunk start) is fixed by the
+//! SAME enumeration the in-process path uses (`timing::measure_plan`,
+//! `parametric::EXPAND_CHUNK` boundaries), results are stored by task
+//! index and reduced in task order, and floats survive the JSON wire
+//! bit-exactly — so any worker count, any assignment interleaving, and
+//! any number of crash/retry cycles produce output byte-identical to
+//! `--threads 1` in process.
+//!
+//! ## Supervision
+//!
+//! One in-flight task per worker.  Each assignment carries a deadline;
+//! expiry kills the worker and re-issues the task to a healthy one.  A
+//! worker EOF (crash) fails its assignment the same way.  Re-issues are
+//! counted against a bounded per-task retry budget with a fixed backoff
+//! before each respawn; exhausting the budget fails the batch (after
+//! aborting in-flight work so the fleet stays usable).  Contexts (model +
+//! device, MCKP instance) are installed once per worker and re-installed
+//! transparently after a respawn.
+
+use super::protocol::{
+    mckp_to_json, msg_id, nodes_from_json, nodes_to_json, read_frame, request, write_frame,
+};
+use super::worker::ctx_request;
+use crate::backend::DeviceProfile;
+use crate::gaudisim::MpConfig;
+use crate::graph::partition::Partition;
+use crate::graph::Graph;
+use crate::numerics::Format;
+use crate::plan::stage::MeasureStage;
+use crate::plan::Measured;
+use crate::sensitivity::Calibration;
+use crate::solver::parametric::{self, ParametricCurve};
+use crate::solver::Mckp;
+use crate::timing::{measure_plan, MeasurePlan, TimeMeasurements, MEASURE_CHUNK};
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{HashSet, VecDeque};
+use std::io::Write;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How coordinator and workers talk: stdin/stdout pipes (default) or a
+/// loopback TCP socket each worker dials back to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    Stdio,
+    Tcp,
+}
+
+/// Fleet shape and supervision policy.
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    /// Worker process count (min 1).
+    pub workers: usize,
+    /// Worker executable; defaults to `$AMPQ_WORKER_BIN`, then the current
+    /// executable when it IS `ampq`.
+    pub worker_bin: Option<PathBuf>,
+    pub transport: Transport,
+    /// Per-assignment deadline; expiry kills the worker and re-issues.
+    pub task_deadline: Duration,
+    /// Re-issues allowed per task before the batch fails.
+    pub max_retries: usize,
+    /// Pause before each worker respawn.
+    pub retry_backoff: Duration,
+    /// Test hook: crash (SIGKILL) worker 0 after this many completed tasks,
+    /// once — exercises the recovery path deterministically.
+    pub debug_kill_after: Option<usize>,
+}
+
+impl Default for DistConfig {
+    fn default() -> DistConfig {
+        DistConfig {
+            workers: 2,
+            worker_bin: None,
+            transport: Transport::Stdio,
+            task_deadline: Duration::from_secs(30),
+            max_retries: 3,
+            retry_backoff: Duration::from_millis(50),
+            debug_kill_after: None,
+        }
+    }
+}
+
+/// Supervision counters (progress/metrics summary of a fleet run).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DistMetrics {
+    /// Tasks completed successfully.
+    pub tasks: usize,
+    /// Task re-issues (crash, deadline, or worker-reported error).
+    pub retries: usize,
+    pub deadline_expiries: usize,
+    pub worker_crashes: usize,
+    pub respawns: usize,
+}
+
+/// A context shared by several tasks, installed at most once per worker
+/// (and re-installed after respawns).
+pub struct CtxSpec {
+    pub name: String,
+    pub body: Json,
+}
+
+/// One schedulable unit of remote work.
+#[derive(Clone)]
+pub struct TaskSpec {
+    pub kind: String,
+    pub fields: Vec<(String, Json)>,
+    pub ctx: Option<Arc<CtxSpec>>,
+}
+
+struct Assignment {
+    task: usize,
+    id: u64,
+    deadline: Instant,
+}
+
+struct WorkerSlot {
+    child: Child,
+    writer: Box<dyn Write + Send>,
+    /// Spawn generation; events from a previous incarnation are dropped.
+    gen: u64,
+    ctxs: HashSet<String>,
+    /// Outstanding ctx-install message ids awaiting their (ignored) ack.
+    ctx_acks: HashSet<u64>,
+    assignment: Option<Assignment>,
+    alive: bool,
+}
+
+enum Event {
+    Msg { worker: usize, gen: u64, msg: Json },
+    Eof { worker: usize, gen: u64 },
+}
+
+/// Resolve the worker executable (config -> env -> self).
+pub fn resolve_worker_bin(cfg: &DistConfig) -> Result<PathBuf> {
+    if let Some(b) = &cfg.worker_bin {
+        return Ok(b.clone());
+    }
+    if let Ok(env) = std::env::var("AMPQ_WORKER_BIN") {
+        if !env.is_empty() {
+            return Ok(PathBuf::from(env));
+        }
+    }
+    let exe = std::env::current_exe().context("cannot resolve current executable")?;
+    if exe.file_stem().map(|s| s == "ampq").unwrap_or(false) {
+        return Ok(exe);
+    }
+    bail!(
+        "cannot locate the ampq worker binary from {}: set AMPQ_WORKER_BIN or \
+         DistConfig.worker_bin",
+        exe.display()
+    )
+}
+
+pub struct Coordinator {
+    cfg: DistConfig,
+    bin: PathBuf,
+    slots: Vec<WorkerSlot>,
+    tx: mpsc::Sender<Event>,
+    rx: mpsc::Receiver<Event>,
+    listener: Option<TcpListener>,
+    next_id: u64,
+    next_ctx: u64,
+    next_gen: u64,
+    metrics: DistMetrics,
+    debug_killed: bool,
+    shut: bool,
+}
+
+impl Coordinator {
+    /// Spawn the full worker fleet eagerly (fail fast on a bad binary).
+    pub fn new(cfg: DistConfig) -> Result<Coordinator> {
+        let bin = resolve_worker_bin(&cfg)?;
+        let listener = match cfg.transport {
+            Transport::Stdio => None,
+            Transport::Tcp => {
+                let l = TcpListener::bind("127.0.0.1:0")?;
+                l.set_nonblocking(true)?;
+                Some(l)
+            }
+        };
+        let (tx, rx) = mpsc::channel();
+        let mut c = Coordinator {
+            cfg,
+            bin,
+            slots: Vec::new(),
+            tx,
+            rx,
+            listener,
+            next_id: 0,
+            next_ctx: 0,
+            next_gen: 0,
+            metrics: DistMetrics::default(),
+            debug_killed: false,
+            shut: false,
+        };
+        for _ in 0..c.cfg.workers.max(1) {
+            let slot = c.spawn_slot()?;
+            c.slots.push(slot);
+        }
+        Ok(c)
+    }
+
+    pub fn metrics(&self) -> &DistMetrics {
+        &self.metrics
+    }
+
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn spawn_slot(&mut self) -> Result<WorkerSlot> {
+        let gen = self.next_gen;
+        self.next_gen += 1;
+        let idx = self.slots.len(); // corrected by caller on respawn
+        self.spawn_slot_at(idx, gen)
+    }
+
+    fn spawn_slot_at(&mut self, idx: usize, gen: u64) -> Result<WorkerSlot> {
+        let (child, writer, reader): (Child, Box<dyn Write + Send>, Box<dyn std::io::Read + Send>) =
+            match self.cfg.transport {
+                Transport::Stdio => {
+                    let mut child = Command::new(&self.bin)
+                        .arg("worker")
+                        .stdin(Stdio::piped())
+                        .stdout(Stdio::piped())
+                        .stderr(Stdio::inherit())
+                        .spawn()
+                        .with_context(|| format!("spawning worker {}", self.bin.display()))?;
+                    let stdin = child.stdin.take().expect("piped stdin");
+                    let stdout = child.stdout.take().expect("piped stdout");
+                    (child, Box::new(stdin), Box::new(stdout))
+                }
+                Transport::Tcp => {
+                    let listener = self.listener.as_ref().expect("tcp listener");
+                    let addr = listener.local_addr()?.to_string();
+                    let child = Command::new(&self.bin)
+                        .args(["worker", "--connect", &addr])
+                        .stdin(Stdio::null())
+                        .stdout(Stdio::inherit())
+                        .stderr(Stdio::inherit())
+                        .spawn()
+                        .with_context(|| format!("spawning worker {}", self.bin.display()))?;
+                    let deadline = Instant::now() + Duration::from_secs(10);
+                    let stream = loop {
+                        match listener.accept() {
+                            Ok((s, _)) => break s,
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                if Instant::now() >= deadline {
+                                    bail!("worker did not dial back within 10s");
+                                }
+                                std::thread::sleep(Duration::from_millis(5));
+                            }
+                            Err(e) => return Err(e.into()),
+                        }
+                    };
+                    stream.set_nodelay(true).ok();
+                    let reader = stream.try_clone()?;
+                    (child, Box::new(stream), Box::new(reader))
+                }
+            };
+        let tx = self.tx.clone();
+        let mut reader = reader;
+        std::thread::spawn(move || loop {
+            match read_frame(&mut reader) {
+                Ok(Some(msg)) => {
+                    if tx.send(Event::Msg { worker: idx, gen, msg }).is_err() {
+                        return;
+                    }
+                }
+                Ok(None) | Err(_) => {
+                    let _ = tx.send(Event::Eof { worker: idx, gen });
+                    return;
+                }
+            }
+        });
+        Ok(WorkerSlot {
+            child,
+            writer,
+            gen,
+            ctxs: HashSet::new(),
+            ctx_acks: HashSet::new(),
+            assignment: None,
+            alive: true,
+        })
+    }
+
+    fn respawn(&mut self, i: usize) -> Result<()> {
+        std::thread::sleep(self.cfg.retry_backoff);
+        let _ = self.slots[i].child.kill();
+        let _ = self.slots[i].child.wait();
+        let gen = self.next_gen;
+        self.next_gen += 1;
+        let slot = self.spawn_slot_at(i, gen)?;
+        self.slots[i] = slot;
+        self.metrics.respawns += 1;
+        Ok(())
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+
+    /// Run a task batch to completion; results in task order.  On failure
+    /// (retry budget exhausted, unrecoverable spawn error) in-flight work
+    /// is aborted so the fleet stays usable for the next batch.
+    pub fn run_tasks(&mut self, tasks: &[TaskSpec]) -> Result<Vec<Json>> {
+        let r = self.run_tasks_inner(tasks);
+        if r.is_err() {
+            self.abort_in_flight();
+        }
+        r
+    }
+
+    fn run_tasks_inner(&mut self, tasks: &[TaskSpec]) -> Result<Vec<Json>> {
+        let n = tasks.len();
+        let mut results: Vec<Option<Json>> = (0..n).map(|_| None).collect();
+        let mut retries = vec![0usize; n];
+        let mut pending: VecDeque<usize> = (0..n).collect();
+        let mut done = 0usize;
+        while done < n {
+            self.assign_pending(tasks, &mut retries, &mut pending)?;
+            match self.rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(ev) => {
+                    self.handle_event(ev, &mut results, &mut retries, &mut pending, &mut done)?
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    bail!("worker event channel closed unexpectedly")
+                }
+            }
+            self.check_deadlines(&mut retries, &mut pending)?;
+        }
+        Ok(results.into_iter().map(|r| r.expect("completed")).collect())
+    }
+
+    fn assign_pending(
+        &mut self,
+        tasks: &[TaskSpec],
+        retries: &mut [usize],
+        pending: &mut VecDeque<usize>,
+    ) -> Result<()> {
+        for i in 0..self.slots.len() {
+            if pending.is_empty() {
+                break;
+            }
+            if !self.slots[i].alive {
+                self.respawn(i)?;
+            }
+            if self.slots[i].assignment.is_some() {
+                continue;
+            }
+            let t = match pending.pop_front() {
+                Some(t) => t,
+                None => break,
+            };
+            if let Err(e) = self.issue(i, t, &tasks[t]) {
+                // Treat a write failure like a crash: the reader thread's
+                // EOF event (if any) finds the slot already dead.
+                eprintln!("warning: worker {i} write failed ({e:#}); re-issuing task {t}");
+                self.metrics.worker_crashes += 1;
+                self.slots[i].alive = false;
+                self.slots[i].assignment = None;
+                self.requeue(t, retries, pending)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Send (ctx?, task) frames for one assignment.  Pipelined: the worker
+    /// processes frames in order, so no ack round-trip is needed between
+    /// the ctx install and the task.
+    fn issue(&mut self, i: usize, t: usize, spec: &TaskSpec) -> Result<()> {
+        if let Some(ctx) = &spec.ctx {
+            if !self.slots[i].ctxs.contains(&ctx.name) {
+                let id = self.fresh_id();
+                let frame = ctx_request(id, &ctx.name, ctx.body.clone());
+                write_frame(&mut self.slots[i].writer, &frame)?;
+                self.slots[i].ctxs.insert(ctx.name.clone());
+                self.slots[i].ctx_acks.insert(id);
+            }
+        }
+        let id = self.fresh_id();
+        let frame = request(id, &spec.kind, spec.fields.clone());
+        write_frame(&mut self.slots[i].writer, &frame)?;
+        self.slots[i].assignment = Some(Assignment {
+            task: t,
+            id,
+            deadline: Instant::now() + self.cfg.task_deadline,
+        });
+        Ok(())
+    }
+
+    fn requeue(
+        &mut self,
+        t: usize,
+        retries: &mut [usize],
+        pending: &mut VecDeque<usize>,
+    ) -> Result<()> {
+        retries[t] += 1;
+        self.metrics.retries += 1;
+        if retries[t] > self.cfg.max_retries {
+            bail!("task {t} failed after {} retries", self.cfg.max_retries);
+        }
+        pending.push_front(t);
+        Ok(())
+    }
+
+    fn handle_event(
+        &mut self,
+        ev: Event,
+        results: &mut [Option<Json>],
+        retries: &mut [usize],
+        pending: &mut VecDeque<usize>,
+        done: &mut usize,
+    ) -> Result<()> {
+        match ev {
+            Event::Eof { worker, gen } => {
+                let slot = &mut self.slots[worker];
+                if slot.gen != gen || !slot.alive {
+                    return Ok(()); // stale, or a death we already handled
+                }
+                slot.alive = false;
+                self.metrics.worker_crashes += 1;
+                if let Some(a) = self.slots[worker].assignment.take() {
+                    self.requeue(a.task, retries, pending)?;
+                }
+                Ok(())
+            }
+            Event::Msg { worker, gen, msg } => {
+                {
+                    let slot = &self.slots[worker];
+                    if slot.gen != gen || !slot.alive {
+                        return Ok(());
+                    }
+                }
+                let id = match msg_id(&msg) {
+                    Ok(id) => id,
+                    Err(_) => return Ok(()), // malformed frame: ignore
+                };
+                let ok = matches!(msg.opt("ok"), Some(Json::Bool(true)));
+                if self.slots[worker].ctx_acks.remove(&id) {
+                    if !ok {
+                        // A failed ctx install poisons this worker: its
+                        // pipelined task cannot succeed either.  Kill it
+                        // and let the crash path recover the task.
+                        let err = msg
+                            .opt("error")
+                            .and_then(|e| e.str().ok())
+                            .unwrap_or("ctx install failed")
+                            .to_string();
+                        eprintln!("warning: worker {worker} rejected ctx: {err}");
+                        self.metrics.worker_crashes += 1;
+                        let _ = self.slots[worker].child.kill();
+                        self.slots[worker].alive = false;
+                        if let Some(a) = self.slots[worker].assignment.take() {
+                            self.requeue(a.task, retries, pending)?;
+                        }
+                    }
+                    return Ok(());
+                }
+                let matches_assignment = self.slots[worker]
+                    .assignment
+                    .as_ref()
+                    .map(|a| a.id == id)
+                    .unwrap_or(false);
+                if !matches_assignment {
+                    return Ok(()); // stale response from a superseded task
+                }
+                let a = self.slots[worker].assignment.take().expect("checked");
+                if ok {
+                    let result = msg.get("result")?.clone();
+                    results[a.task] = Some(result);
+                    *done += 1;
+                    self.metrics.tasks += 1;
+                    self.maybe_debug_kill();
+                    Ok(())
+                } else {
+                    let err = msg
+                        .opt("error")
+                        .and_then(|e| e.str().ok())
+                        .unwrap_or("worker error")
+                        .to_string();
+                    if retries[a.task] >= self.cfg.max_retries {
+                        bail!("task {} failed on worker {worker}: {err}", a.task);
+                    }
+                    self.requeue(a.task, retries, pending)
+                }
+            }
+        }
+    }
+
+    /// Test hook: after `debug_kill_after` completed tasks, SIGKILL worker
+    /// 0's process WITHOUT marking it dead — the reader thread's EOF event
+    /// then drives the normal crash-recovery path.
+    fn maybe_debug_kill(&mut self) {
+        if self.debug_killed {
+            return;
+        }
+        if let Some(k) = self.cfg.debug_kill_after {
+            if self.metrics.tasks >= k {
+                self.debug_killed = true;
+                let _ = self.slots[0].child.kill();
+            }
+        }
+    }
+
+    fn check_deadlines(
+        &mut self,
+        retries: &mut [usize],
+        pending: &mut VecDeque<usize>,
+    ) -> Result<()> {
+        let now = Instant::now();
+        for i in 0..self.slots.len() {
+            let expired = self.slots[i].alive
+                && self.slots[i]
+                    .assignment
+                    .as_ref()
+                    .map(|a| now >= a.deadline)
+                    .unwrap_or(false);
+            if !expired {
+                continue;
+            }
+            self.metrics.deadline_expiries += 1;
+            let _ = self.slots[i].child.kill();
+            self.slots[i].alive = false;
+            if let Some(a) = self.slots[i].assignment.take() {
+                self.requeue(a.task, retries, pending)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Kill every worker with an in-flight assignment so a failed batch
+    /// cannot leave stale responses for the next one.
+    fn abort_in_flight(&mut self) {
+        for i in 0..self.slots.len() {
+            if self.slots[i].assignment.is_some() {
+                let _ = self.slots[i].child.kill();
+                self.slots[i].alive = false;
+                self.slots[i].assignment = None;
+            }
+        }
+    }
+
+    /// Graceful drain: ask every worker to exit, give them a moment, then
+    /// kill stragglers.  Idempotent (also runs on Drop).
+    pub fn shutdown(&mut self) {
+        if self.shut {
+            return;
+        }
+        self.shut = true;
+        for i in 0..self.slots.len() {
+            if self.slots[i].alive {
+                let id = self.fresh_id();
+                let frame = request(id, "shutdown", vec![]);
+                let _ = write_frame(&mut self.slots[i].writer, &frame);
+            }
+        }
+        let deadline = Instant::now() + Duration::from_millis(500);
+        for i in 0..self.slots.len() {
+            loop {
+                match self.slots[i].child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10))
+                    }
+                    _ => {
+                        let _ = self.slots[i].child.kill();
+                        let _ = self.slots[i].child.wait();
+                        break;
+                    }
+                }
+            }
+            self.slots[i].alive = false;
+        }
+    }
+
+    // ---- high-level distributed operations ------------------------------
+
+    fn fresh_ctx(&mut self, prefix: &str) -> String {
+        self.next_ctx += 1;
+        format!("{prefix}{}", self.next_ctx)
+    }
+
+    /// Distributed Measured stage: same plan, streams, and reduction as
+    /// `timing::measure_groups`, with TTFT evaluation on the fleet.
+    pub fn measure(
+        &mut self,
+        graph: &Graph,
+        device: &DeviceProfile,
+        seed: u64,
+        reps: usize,
+        part: &Partition,
+        formats: &[Format],
+    ) -> Result<TimeMeasurements> {
+        let nq = graph.qlayers.len();
+        let plan = measure_plan(part, formats, nq)?;
+        let ctx_name = self.fresh_ctx("m");
+        let ctx = Arc::new(CtxSpec {
+            name: ctx_name.clone(),
+            body: Json::Obj(vec![
+                ("type".into(), Json::Str("measure".into())),
+                ("graph".into(), graph.to_json()),
+                ("device".into(), device.to_json()),
+                ("seed".into(), Json::Str(seed.to_string())),
+                ("reps".into(), Json::Num(reps as f64)),
+            ]),
+        });
+        let cfg_json = |cfg: &MpConfig| {
+            Json::Arr(cfg.0.iter().map(|f| Json::Str(f.name().to_string())).collect())
+        };
+        let task = |streams: Vec<Json>, cfgs: Vec<Json>| TaskSpec {
+            kind: "measure".into(),
+            fields: vec![
+                ("ctx".to_string(), Json::Str(ctx_name.clone())),
+                ("streams".to_string(), Json::Arr(streams)),
+                ("cfgs".to_string(), Json::Arr(cfgs)),
+            ],
+            ctx: Some(ctx.clone()),
+        };
+        // Task 0: the stream-0 all-BF16 baseline; then the plan in
+        // MEASURE_CHUNK batches mirroring the in-process par_chunks.
+        let mut tasks =
+            vec![task(vec![Json::Num(0.0)], vec![cfg_json(&MpConfig::all_bf16(nq))])];
+        for (ci, chunk) in plan.tasks.chunks(MEASURE_CHUNK).enumerate() {
+            let start = ci * MEASURE_CHUNK;
+            let streams = (0..chunk.len())
+                .map(|k| Json::Num(MeasurePlan::stream(start + k) as f64))
+                .collect();
+            let cfgs = chunk.iter().map(|t| cfg_json(&t.cfg)).collect();
+            tasks.push(task(streams, cfgs));
+        }
+        let results = self.run_tasks(&tasks)?;
+        let ttfts_of = |r: &Json| -> Result<Vec<f64>> {
+            r.get("ttfts")?.arr()?.iter().map(|x| x.f64()).collect()
+        };
+        let base = *ttfts_of(&results[0])?
+            .first()
+            .ok_or_else(|| anyhow!("baseline task returned no TTFT"))?;
+        let mut ttfts = Vec::with_capacity(plan.tasks.len());
+        for r in &results[1..] {
+            ttfts.extend(ttfts_of(r)?);
+        }
+        Ok(plan.assemble(base, &ttfts))
+    }
+
+    /// [`Coordinator::measure`] packaged as the Measured stage artifact —
+    /// the Engine measure-hook entry point (`Engine::set_measure_hook`).
+    pub fn measure_stage(&mut self, ms: &MeasureStage<'_>) -> Result<Measured> {
+        let tm = self.measure(
+            ms.graph,
+            ms.device,
+            ms.seed,
+            ms.reps,
+            &ms.partitioned.partition,
+            &ms.partitioned.formats,
+        )?;
+        Ok(Measured {
+            model: ms.model.to_string(),
+            formats: ms.partitioned.formats.clone(),
+            seed: ms.seed,
+            reps: ms.reps,
+            device: ms.device.clone(),
+            measurements: tm,
+        })
+    }
+
+    /// Distributed parametric frontier sweep: the coordinator runs the
+    /// level loop and pruning; workers run `parametric::expand_chunk` on
+    /// EXPAND_CHUNK-sized state chunks.  Chunk boundaries and
+    /// concatenation order match `parametric::frontier_with` exactly, so
+    /// the curve is bit-identical to the in-process sweep.
+    pub fn frontier_curve(&mut self, p: &Mckp) -> Result<ParametricCurve> {
+        let n = p.n_groups();
+        let dims = p.n_dims();
+        let ctx_name = self.fresh_ctx("f");
+        let ctx = Arc::new(CtxSpec {
+            name: ctx_name.clone(),
+            body: Json::Obj(vec![
+                ("type".into(), Json::Str("frontier".into())),
+                ("mckp".into(), mckp_to_json(p)),
+            ]),
+        });
+        let mut levels = Vec::with_capacity(n + 1);
+        levels.push(parametric::root_level(dims));
+        let mut truncated = false;
+        for j in 0..n {
+            let prev = &levels[j];
+            let tasks: Vec<TaskSpec> = prev
+                .chunks(parametric::EXPAND_CHUNK)
+                .enumerate()
+                .map(|(ci, chunk)| TaskSpec {
+                    kind: "expand".into(),
+                    fields: vec![
+                        ("ctx".to_string(), Json::Str(ctx_name.clone())),
+                        ("j".to_string(), Json::Num(j as f64)),
+                        ("start".to_string(), Json::Num((ci * parametric::EXPAND_CHUNK) as f64)),
+                        ("nodes".to_string(), nodes_to_json(chunk, dims)),
+                    ],
+                    ctx: Some(ctx.clone()),
+                })
+                .collect();
+            let results = self.run_tasks(&tasks)?;
+            let mut cands = Vec::new();
+            for r in &results {
+                cands.extend(nodes_from_json(r)?);
+            }
+            let (kept, thinned) = parametric::prune_level(p, cands);
+            truncated |= thinned;
+            levels.push(kept);
+        }
+        Ok(parametric::finish(n, &levels, truncated))
+    }
+
+    /// Distributed demo calibration: the worker recomputes the pure
+    /// `demo_calibration(n_qlayers, seed)` — one task, byte-identical to
+    /// the in-process injection.
+    pub fn calibrate_demo(&mut self, n_qlayers: usize, seed: u64) -> Result<Calibration> {
+        let tasks = vec![TaskSpec {
+            kind: "calibrate_demo".into(),
+            fields: vec![
+                ("n_qlayers".to_string(), Json::Num(n_qlayers as f64)),
+                ("seed".to_string(), Json::Str(seed.to_string())),
+            ],
+            ctx: None,
+        }];
+        let r = &self.run_tasks(&tasks)?[0];
+        Ok(Calibration {
+            s: r.get("s")?.arr()?.iter().map(|x| x.f64()).collect::<Result<Vec<f64>>>()?,
+            eg2: r.get("eg2")?.f64()?,
+            g_mean: r.get("g_mean")?.f64()?,
+            n_samples: r.get("n_samples")?.usize()?,
+        })
+    }
+
+    /// Liveness probe: one ping round-trip through the scheduler.
+    pub fn ping(&mut self) -> Result<()> {
+        let tasks =
+            vec![TaskSpec { kind: "ping".into(), fields: vec![], ctx: None }];
+        let r = &self.run_tasks(&tasks)?[0];
+        if r.str()? != "pong" {
+            bail!("unexpected ping reply");
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -1,0 +1,321 @@
+//! Fleet mode: schedule the full models × devices calibration +
+//! measurement + frontier matrix over one shared worker fleet
+//! (`ampq fleet --models a,b --devices gaudi2,gaudi3 --workers W`).
+//!
+//! Artifacts land under `out/<model>/` with the same JSON encodings the
+//! Engine cache uses; the run summary (timings, supervision metrics) goes
+//! to stdout ONLY, so two output trees produced at different worker
+//! counts can be compared with a plain `diff -r` — the determinism
+//! acceptance check in `tests/dist.rs` and the `dist-smoke` CI job.
+//!
+//! `workers == 0` runs every cell in-process on a sequential pool — the
+//! reference the distributed path must match byte-for-byte.
+
+use super::coordinator::{Coordinator, DistConfig, DistMetrics};
+use crate::backend::Registry;
+use crate::coordinator::ip;
+use crate::exec::{ExecCfg, ExecPool};
+use crate::metrics::Objective;
+use crate::numerics::{Format, PAPER_FORMATS};
+use crate::plan::demo::demo_model;
+use crate::plan::engine::{DEFAULT_MEASURE_REPS, DEFAULT_MEASURE_SEED};
+use crate::plan::stage::{CalibSource, CalibrateStage, MeasureStage, PartitionStage, Stage};
+use crate::plan::{Calibrated, Planner};
+use crate::solver::parametric;
+use crate::util::Json;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// One fleet run: the model × device matrix, the worker count (0 =
+/// in-process reference path), and the supervision policy.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub models: Vec<String>,
+    pub devices: Vec<String>,
+    /// Worker processes; 0 runs everything in-process sequentially.
+    pub workers: usize,
+    /// Output root; artifacts land in `out/<model>/`.
+    pub out: PathBuf,
+    /// Synthetic transformer depth for demo models.
+    pub blocks: usize,
+    pub dist: DistConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            models: vec!["demo".into()],
+            devices: vec!["gaudi2".into()],
+            workers: 0,
+            out: PathBuf::from("fleet-out"),
+            blocks: 2,
+            dist: DistConfig::default(),
+        }
+    }
+}
+
+/// One completed (model, device) cell of the matrix.
+#[derive(Clone, Debug)]
+pub struct FleetCell {
+    pub model: String,
+    pub device: String,
+    pub knots: usize,
+    pub complete: bool,
+    pub elapsed: Duration,
+}
+
+/// The full fleet run: every cell plus the coordinator's supervision
+/// counters (all zero on the in-process path).
+pub struct FleetReport {
+    pub cells: Vec<FleetCell>,
+    pub metrics: DistMetrics,
+}
+
+/// Deterministic per-model demo seed: FNV-1a 64 of the model name (the
+/// same constants [`crate::backend::DeviceProfile::fs_key`] uses), so
+/// every worker count — and every session — derives the same model.
+pub fn model_seed(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Mirror of `Engine::menu`: validate the device and restrict the paper
+/// format menu to what it supports; BF16 must survive (it is the baseline
+/// every gain is measured against).
+fn device_menu(device: &crate::backend::DeviceProfile) -> Result<Vec<Format>> {
+    device.validate()?;
+    let menu = device.restrict_menu(&PAPER_FORMATS);
+    if !menu.contains(&Format::Bf16) {
+        bail!("device '{}' does not support BF16 (no baseline format)", device.name);
+    }
+    Ok(menu)
+}
+
+/// Run the matrix.  Every artifact is byte-identical at any `workers`
+/// value; see the module docs for the contract.
+pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetReport> {
+    if cfg.models.is_empty() || cfg.devices.is_empty() {
+        bail!("fleet needs at least one model and one device");
+    }
+    let registry = Registry::builtin();
+    let seq = ExecPool::sequential();
+    let mut coord = if cfg.workers > 0 {
+        let dist = DistConfig { workers: cfg.workers, ..cfg.dist.clone() };
+        Some(Coordinator::new(dist)?)
+    } else {
+        None
+    };
+
+    let mut cells = Vec::new();
+    for model in &cfg.models {
+        let seed = model_seed(model);
+        let (graph, qlayers, calibration) = demo_model(cfg.blocks.max(1), seed);
+        let model_dir = cfg.out.join(model);
+        std::fs::create_dir_all(&model_dir)
+            .with_context(|| format!("creating {}", model_dir.display()))?;
+
+        for (di, device_name) in cfg.devices.iter().enumerate() {
+            let t0 = Instant::now();
+            let device = registry.resolve(device_name)?;
+            let menu = device_menu(&device)?;
+
+            // Stage 1 — partition (cheap graph pass, always in-process).
+            let partitioned =
+                PartitionStage { model, graph: &graph, qlayers: &qlayers, menu: &menu }
+                    .run(&seq)?;
+
+            // Stage 2 — calibration.  The demo calibration is a pure
+            // function of (n_qlayers, seed); the distributed path has a
+            // worker recompute it, the reference path injects it — both
+            // produce the identical artifact.
+            let calibrated = match coord.as_mut() {
+                Some(c) => Calibrated {
+                    model: model.clone(),
+                    calibration: c.calibrate_demo(qlayers.len(), seed)?,
+                },
+                None => CalibrateStage { model, source: CalibSource::Injected(&calibration) }
+                    .run(&seq)?,
+            };
+
+            // Stage 3 — per-(group, config) TTFT measurement.
+            let ms = MeasureStage {
+                model,
+                graph: &graph,
+                partitioned: &partitioned,
+                device: &device,
+                seed: DEFAULT_MEASURE_SEED,
+                reps: DEFAULT_MEASURE_REPS,
+            };
+            let measured = match coord.as_mut() {
+                Some(c) => c.measure_stage(&ms)?,
+                None => ms.run(&seq)?,
+            };
+
+            // Device-independent artifacts once per model; per-device ones
+            // keyed by the profile's filesystem key.
+            if di == 0 {
+                write_text(&model_dir.join("partitioned.json"), &partitioned.to_json())?;
+                write_text(&model_dir.join("calibrated.json"), &calibrated.to_json())?;
+            }
+            let key = device.fs_key();
+            write_text(&model_dir.join(format!("measured-{key}.json")), &measured.to_json())?;
+
+            // Frontier: the parametric chain-DP sweep, remote expansion
+            // when a fleet is attached.
+            let planner = Planner::new(partitioned, calibrated, measured)?
+                .with_exec(ExecCfg::new(1));
+            let obj = Objective::EmpiricalTime;
+            let family = planner.family(obj);
+            let problem =
+                ip::frontier_instance(&family.groups, planner.calibration(), planner.tau_max(obj))?;
+            let curve = match coord.as_mut() {
+                Some(c) => c.frontier_curve(&problem)?,
+                None => parametric::frontier_with(&problem, &seq),
+            };
+            let solves =
+                ip::materialize_curve(&family.groups, planner.calibration(), &problem, &curve);
+            write_text(
+                &model_dir.join(format!("frontier-{key}.json")),
+                &frontier_json(model, &device.name, planner.tau_max(obj), &solves),
+            )?;
+
+            cells.push(FleetCell {
+                model: model.clone(),
+                device: device.name.clone(),
+                knots: solves.knots.len(),
+                complete: solves.complete,
+                elapsed: t0.elapsed(),
+            });
+        }
+    }
+
+    let metrics = match coord.as_mut() {
+        Some(c) => {
+            let m = c.metrics().clone();
+            c.shutdown();
+            m
+        }
+        None => DistMetrics::default(),
+    };
+    Ok(FleetReport { cells, metrics })
+}
+
+/// The frontier artifact: every knot as (gain, predicted MSE, config).
+fn frontier_json(
+    model: &str,
+    device: &str,
+    tau_max: f64,
+    solves: &ip::FrontierSolves,
+) -> Json {
+    let knots = solves
+        .knots
+        .iter()
+        .map(|k| {
+            Json::Obj(vec![
+                ("gain".into(), Json::Num(k.gain)),
+                ("predicted_mse".into(), Json::Num(k.predicted_mse)),
+                ("exact".into(), Json::Bool(k.exact)),
+                (
+                    "config".into(),
+                    Json::Arr(
+                        k.config.0.iter().map(|f| Json::Str(f.name().to_string())).collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("schema".into(), Json::Num(crate::plan::SCHEMA_VERSION as f64)),
+        ("kind".into(), Json::Str("frontier".into())),
+        ("model".into(), Json::Str(model.to_string())),
+        ("device".into(), Json::Str(device.to_string())),
+        ("objective".into(), Json::Str("empirical_time".into())),
+        ("tau_max".into(), Json::Num(tau_max)),
+        ("complete".into(), Json::Bool(solves.complete)),
+        ("knots".into(), Json::Arr(knots)),
+    ])
+}
+
+fn write_text(path: &std::path::Path, j: &Json) -> Result<()> {
+    std::fs::write(path, j.to_string())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Render the run summary (stdout-only; never written under `out`).
+pub fn render_summary(report: &FleetReport, workers: usize) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "fleet: {} cell(s), {} worker(s)\n",
+        report.cells.len(),
+        workers
+    ));
+    for c in &report.cells {
+        s.push_str(&format!(
+            "  {:<12} {:<12} {:>4} knots  complete={}  {:>7.1}ms\n",
+            c.model,
+            c.device,
+            c.knots,
+            c.complete,
+            c.elapsed.as_secs_f64() * 1e3
+        ));
+    }
+    let m = &report.metrics;
+    s.push_str(&format!(
+        "  supervision: tasks={} retries={} deadline_expiries={} crashes={} respawns={}\n",
+        m.tasks, m.retries, m.deadline_expiries, m.worker_crashes, m.respawns
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_seed_is_stable_fnv1a() {
+        // Locked values: artifacts on disk depend on them.
+        assert_eq!(model_seed(""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(model_seed("demo"), model_seed("demo2"));
+        assert_eq!(model_seed("demo"), model_seed("demo"));
+    }
+
+    #[test]
+    fn in_process_fleet_writes_the_full_matrix() {
+        let out = std::env::temp_dir().join(format!("ampq_fleet_{}", std::process::id()));
+        std::fs::remove_dir_all(&out).ok();
+        let cfg = FleetConfig {
+            models: vec!["demo".into()],
+            devices: vec!["gaudi2".into(), "gaudi3".into()],
+            workers: 0,
+            out: out.clone(),
+            blocks: 1,
+            ..FleetConfig::default()
+        };
+        let report = run_fleet(&cfg).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        assert_eq!(report.metrics, DistMetrics::default());
+        for f in ["partitioned.json", "calibrated.json"] {
+            assert!(out.join("demo").join(f).exists(), "{f} missing");
+        }
+        let entries: Vec<String> = std::fs::read_dir(out.join("demo"))
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(entries.iter().filter(|e| e.starts_with("measured-")).count(), 2);
+        assert_eq!(entries.iter().filter(|e| e.starts_with("frontier-")).count(), 2);
+        let summary = render_summary(&report, 0);
+        assert!(summary.contains("2 cell(s)"));
+        std::fs::remove_dir_all(&out).ok();
+    }
+
+    #[test]
+    fn fleet_rejects_an_empty_matrix() {
+        let cfg = FleetConfig { models: vec![], ..FleetConfig::default() };
+        assert!(run_fleet(&cfg).is_err());
+    }
+}

@@ -1,0 +1,34 @@
+//! Distributed planning: a coordinator plus an `ampq worker` process
+//! fleet that shards calibration, per-(group, config) TTFT measurement,
+//! and parametric frontier DP expansion — deterministically.
+//!
+//! Layering (see DESIGN.md §4f):
+//!
+//! * [`protocol`] — the length-prefixed JSON wire format (framing,
+//!   request/response envelopes, bit-exact DP-state and MCKP encodings).
+//! * [`worker`] — the worker side: a stateless request loop over
+//!   stdin/stdout pipes or a dialed-back TCP socket, evaluating pure
+//!   tasks against installed contexts.
+//! * [`coordinator`] — the supervision core: spawns the fleet, schedules
+//!   tasks with per-assignment deadlines, re-issues work after crashes or
+//!   hangs under a bounded retry budget, and reduces results in task
+//!   order so any worker count W yields output byte-identical to the
+//!   in-process path at `--threads 1`.
+//! * [`fleet`] — `ampq fleet`: the full models × devices matrix over one
+//!   shared worker pool, with a stdout-only progress/metrics summary so
+//!   output trees stay `diff -r`-comparable across worker counts.
+//!
+//! The determinism argument, wire protocol reference, and supervision
+//! state machine are documented in DESIGN.md §4f and exercised end-to-end
+//! in `tests/dist.rs` (1-vs-N byte equality, worker-kill recovery,
+//! deadline/retry accounting).
+
+pub mod coordinator;
+pub mod fleet;
+pub mod protocol;
+pub mod worker;
+
+pub use coordinator::{
+    resolve_worker_bin, Coordinator, CtxSpec, DistConfig, DistMetrics, TaskSpec, Transport,
+};
+pub use fleet::{model_seed, render_summary, run_fleet, FleetCell, FleetConfig, FleetReport};

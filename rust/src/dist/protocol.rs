@@ -1,0 +1,310 @@
+//! Length-prefixed JSON wire protocol between the planning coordinator
+//! and `ampq worker` processes.
+//!
+//! Framing: a 4-byte big-endian length followed by that many bytes of
+//! UTF-8 JSON.  Every request carries `{id, kind, ...}`; every response is
+//! `{id, ok, result}` or `{id, ok: false, error}`.  Floats cross the wire
+//! through `util::Json`'s shortest-round-trip `Display`, which Rust's
+//! `str::parse::<f64>` reads back bit-identical — the reason remotely
+//! computed DP states and TTFTs can be byte-equal to in-process ones.
+//! u64 values that may exceed 2^53 (seeds) travel as strings.
+
+use crate::solver::parametric::Node;
+use crate::solver::{CostDim, Mckp};
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+
+/// Upper bound on one frame; a length prefix beyond this is treated as a
+/// corrupt stream, not an allocation request.
+pub const MAX_FRAME: usize = 256 << 20;
+
+/// Write one `length || payload` frame.
+pub fn write_frame(w: &mut impl Write, j: &Json) -> Result<()> {
+    let payload = j.to_string();
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        bail!("frame of {} bytes exceeds MAX_FRAME", bytes.len());
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    // EOF before the first length byte is a clean close; mid-prefix is not.
+    let mut filled = 0usize;
+    while filled < 4 {
+        let n = r.read(&mut len_buf[filled..])?;
+        if n == 0 {
+            if filled == 0 {
+                return Ok(None);
+            }
+            bail!("stream closed mid frame header ({filled}/4 bytes)");
+        }
+        filled += n;
+    }
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds MAX_FRAME (corrupt stream?)");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let text = std::str::from_utf8(&payload)?;
+    Ok(Some(Json::parse(text)?))
+}
+
+/// `{id, kind, ...fields}` request frame.
+pub fn request(id: u64, kind: &str, fields: Vec<(String, Json)>) -> Json {
+    let mut kv = vec![
+        ("id".to_string(), Json::Str(id.to_string())),
+        ("kind".to_string(), Json::Str(kind.to_string())),
+    ];
+    kv.extend(fields);
+    Json::Obj(kv)
+}
+
+pub fn ok_response(id: u64, result: Json) -> Json {
+    Json::Obj(vec![
+        ("id".into(), Json::Str(id.to_string())),
+        ("ok".into(), Json::Bool(true)),
+        ("result".into(), result),
+    ])
+}
+
+pub fn err_response(id: u64, msg: &str) -> Json {
+    Json::Obj(vec![
+        ("id".into(), Json::Str(id.to_string())),
+        ("ok".into(), Json::Bool(false)),
+        ("error".into(), Json::Str(msg.to_string())),
+    ])
+}
+
+/// Message id of a request or response frame.
+pub fn msg_id(j: &Json) -> Result<u64> {
+    Ok(j.get("id")?.str()?.parse::<u64>()?)
+}
+
+// ---- DP state (de)serialization -----------------------------------------
+//
+// States travel as flat arrays — node-major costs — instead of one object
+// per node: a level can hold tens of thousands of states and the flat form
+// keeps frames small and parsing linear.
+
+/// Serialize DP nodes: `{dims, g: [..], c: [..], p: [..], ch: [..]}` with
+/// `c` node-major (`c[i*dims + d]`).  `expand_chunk` never reads its
+/// inputs' parent/choice, but they are shipped anyway so the encoding is
+/// its own inverse (and so worker->coordinator candidates carry them).
+pub fn nodes_to_json(nodes: &[Node], dims: usize) -> Json {
+    let mut g = Vec::with_capacity(nodes.len());
+    let mut c = Vec::with_capacity(nodes.len() * dims);
+    let mut p = Vec::with_capacity(nodes.len());
+    let mut ch = Vec::with_capacity(nodes.len());
+    for n in nodes {
+        g.push(Json::Num(n.gain));
+        for d in 0..dims {
+            c.push(Json::Num(n.costs[d]));
+        }
+        // u32 fits f64 exactly (including the u32::MAX root sentinel).
+        p.push(Json::Num(n.parent as f64));
+        ch.push(Json::Num(n.choice as f64));
+    }
+    Json::Obj(vec![
+        ("dims".into(), Json::Num(dims as f64)),
+        ("g".into(), Json::Arr(g)),
+        ("c".into(), Json::Arr(c)),
+        ("p".into(), Json::Arr(p)),
+        ("ch".into(), Json::Arr(ch)),
+    ])
+}
+
+pub fn nodes_from_json(j: &Json) -> Result<Vec<Node>> {
+    let dims = j.get("dims")?.usize()?;
+    if dims == 0 {
+        bail!("node batch needs at least one cost dimension");
+    }
+    let g = j.get("g")?.arr()?;
+    let c = j.get("c")?.arr()?;
+    let p = j.get("p")?.arr()?;
+    let ch = j.get("ch")?.arr()?;
+    if c.len() != g.len() * dims || p.len() != g.len() || ch.len() != g.len() {
+        bail!(
+            "inconsistent node batch shape: {} gains, {} costs, {} parents, {} choices (dims {dims})",
+            g.len(),
+            c.len(),
+            p.len(),
+            ch.len()
+        );
+    }
+    let mut nodes = Vec::with_capacity(g.len());
+    for i in 0..g.len() {
+        let costs = (0..dims)
+            .map(|d| c[i * dims + d].f64())
+            .collect::<Result<Vec<f64>>>()?;
+        nodes.push(Node {
+            gain: g[i].f64()?,
+            costs,
+            parent: p[i].f64()? as u32,
+            choice: ch[i].f64()? as u32,
+        });
+    }
+    Ok(nodes)
+}
+
+// ---- MCKP instance (de)serialization ------------------------------------
+
+fn table_to_json(table: &[Vec<f64>]) -> Json {
+    Json::Arr(
+        table
+            .iter()
+            .map(|row| Json::Arr(row.iter().map(|&x| Json::Num(x)).collect()))
+            .collect(),
+    )
+}
+
+fn table_from_json(j: &Json) -> Result<Vec<Vec<f64>>> {
+    j.arr()?
+        .iter()
+        .map(|row| row.arr()?.iter().map(|x| x.f64()).collect())
+        .collect()
+}
+
+/// Serialize a full MCKP instance (the frontier ctx payload).
+pub fn mckp_to_json(p: &Mckp) -> Json {
+    let costs = p
+        .costs
+        .iter()
+        .map(|dim| {
+            Json::Obj(vec![
+                ("label".into(), Json::Str(dim.label.clone())),
+                ("table".into(), table_to_json(&dim.table)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("gains".into(), table_to_json(&p.gains)),
+        ("costs".into(), Json::Arr(costs)),
+        (
+            "budgets".into(),
+            Json::Arr(p.budgets.iter().map(|&b| Json::Num(b)).collect()),
+        ),
+    ])
+}
+
+pub fn mckp_from_json(j: &Json) -> Result<Mckp> {
+    let gains = table_from_json(j.get("gains")?)?;
+    let costs = j
+        .get("costs")?
+        .arr()?
+        .iter()
+        .map(|dim| {
+            Ok(CostDim::new(
+                dim.get("label")?.str()?.to_string(),
+                table_from_json(dim.get("table")?)?,
+            ))
+        })
+        .collect::<Result<Vec<CostDim>>>()?;
+    let budgets = j
+        .get("budgets")?
+        .arr()?
+        .iter()
+        .map(|x| x.f64())
+        .collect::<Result<Vec<f64>>>()?;
+    Mckp::multi(gains, costs, budgets)
+        .map_err(|e| anyhow!("invalid MCKP instance on the wire: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::problem::gen::random_multi;
+    use crate::util::Rng;
+
+    #[test]
+    fn frames_roundtrip_over_a_buffer() {
+        let msgs = vec![
+            request(1, "ping", vec![]),
+            ok_response(1, Json::Str("pong".into())),
+            err_response(2, "boom"),
+        ];
+        let mut buf: Vec<u8> = Vec::new();
+        for m in &msgs {
+            write_frame(&mut buf, m).unwrap();
+        }
+        let mut cursor = std::io::Cursor::new(buf);
+        for m in &msgs {
+            let back = read_frame(&mut cursor).unwrap().expect("frame present");
+            assert_eq!(back.to_string(), m.to_string());
+        }
+        assert!(read_frame(&mut cursor).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn truncated_frames_are_errors_not_eof() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &request(7, "ping", vec![])).unwrap();
+        // Chop the payload short: the reader must error, not hang or
+        // silently succeed.
+        buf.truncate(buf.len() - 2);
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+        // And a lone partial length prefix is also an error.
+        let mut cursor = std::io::Cursor::new(vec![0u8, 0u8]);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected() {
+        let mut buf = (u32::MAX).to_be_bytes().to_vec();
+        buf.extend_from_slice(b"junk");
+        let mut cursor = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn nodes_roundtrip_bitwise() {
+        let nodes = vec![
+            Node { gain: 0.1 + 0.2, costs: vec![1.0 / 3.0, -0.0], parent: u32::MAX, choice: 0 },
+            Node { gain: f64::MIN_POSITIVE, costs: vec![1e300, 2.5e-17], parent: 41, choice: 3 },
+        ];
+        let j = nodes_to_json(&nodes, 2);
+        let back = nodes_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.len(), nodes.len());
+        for (a, b) in nodes.iter().zip(&back) {
+            assert_eq!(a.gain.to_bits(), b.gain.to_bits());
+            assert_eq!(a.parent, b.parent);
+            assert_eq!(a.choice, b.choice);
+            for (x, y) in a.costs.iter().zip(&b.costs) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn mckp_roundtrips_through_text() {
+        let mut rng = Rng::new(0xD157);
+        for _ in 0..20 {
+            let p = random_multi(&mut rng, 5, 4, 2);
+            let text = mckp_to_json(&p).to_string();
+            let back = mckp_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.gains, p.gains);
+            assert_eq!(back.budgets, p.budgets);
+            assert_eq!(back.costs.len(), p.costs.len());
+            for (a, b) in p.costs.iter().zip(&back.costs) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.table, b.table);
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_node_batches_are_rejected() {
+        let j = Json::parse(r#"{"dims": 2, "g": [1.0], "c": [1.0], "p": [0], "ch": [0]}"#).unwrap();
+        assert!(nodes_from_json(&j).is_err(), "cost array shorter than dims * nodes");
+        let j = Json::parse(r#"{"dims": 0, "g": [], "c": [], "p": [], "ch": []}"#).unwrap();
+        assert!(nodes_from_json(&j).is_err(), "zero dims");
+    }
+}

@@ -1,0 +1,360 @@
+//! The `ampq worker` process body: a single-threaded request loop over the
+//! length-prefixed JSON protocol.
+//!
+//! A worker is deliberately dumb: it installs contexts (a model + device to
+//! measure, or an MCKP instance to expand), executes the pure task kinds
+//! the coordinator sends, and replies in arrival order.  All determinism
+//! lives in the shared library functions it calls — `TtftSource::measure`
+//! per `(config, stream)`, `parametric::expand_chunk` per state chunk,
+//! `demo_calibration` per `(n_qlayers, seed)` — so WHICH worker runs a
+//! task (or how often it is retried elsewhere) cannot change a bit of the
+//! result.
+//!
+//! Task kinds: `ping`, `ctx`, `measure`, `expand`, `calibrate_demo`,
+//! `shutdown`, plus the test-only hostile-fleet hooks `sleep` and `exit`.
+
+use super::protocol::{
+    err_response, mckp_from_json, msg_id, nodes_from_json, nodes_to_json, ok_response,
+    read_frame, request, write_frame,
+};
+use crate::backend::DeviceProfile;
+use crate::gaudisim::MpConfig;
+use crate::graph::Graph;
+use crate::numerics::Format;
+use crate::plan::demo::demo_calibration;
+use crate::solver::parametric;
+use crate::solver::Mckp;
+use crate::timing::{SimTtft, TtftSource};
+use crate::util::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// One installed context.
+enum Ctx {
+    /// A model + device + measurement protocol to time configurations on.
+    Measure { graph: Graph, device: DeviceProfile, seed: u64, reps: usize },
+    /// An MCKP instance (plus its precomputed suffix lower bounds) to
+    /// expand DP state chunks against.
+    Frontier { problem: Mckp, suffix_min: Vec<Vec<f64>> },
+}
+
+/// Serve requests until a `shutdown` frame or clean EOF.  The stdio entry
+/// point of `ampq worker`.
+pub fn serve(mut reader: impl Read, mut writer: impl Write) -> Result<()> {
+    let mut ctxs: HashMap<String, Ctx> = HashMap::new();
+    loop {
+        let msg = match read_frame(&mut reader)? {
+            Some(m) => m,
+            None => return Ok(()), // coordinator closed the pipe: drain
+        };
+        let id = msg_id(&msg)?;
+        let kind = msg.get("kind")?.str()?.to_string();
+        if kind == "shutdown" {
+            let _ = write_frame(&mut writer, &ok_response(id, Json::Null));
+            return Ok(());
+        }
+        let reply = match handle(&kind, &msg, &mut ctxs) {
+            Ok(result) => ok_response(id, result),
+            Err(e) => err_response(id, &format!("{e:#}")),
+        };
+        write_frame(&mut writer, &reply)?;
+    }
+}
+
+/// `ampq worker --connect ADDR`: same loop over a TCP socket the worker
+/// dials back to the coordinator.
+pub fn serve_tcp(addr: &str) -> Result<()> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let reader = stream.try_clone()?;
+    serve(reader, stream)
+}
+
+fn parse_formats(j: &Json) -> Result<Vec<Format>> {
+    j.arr()?
+        .iter()
+        .map(|x| {
+            let name = x.str()?;
+            Format::from_name(name).ok_or_else(|| anyhow!("unknown format '{name}'"))
+        })
+        .collect()
+}
+
+fn handle(kind: &str, msg: &Json, ctxs: &mut HashMap<String, Ctx>) -> Result<Json> {
+    match kind {
+        "ping" => Ok(Json::Str("pong".into())),
+
+        "ctx" => {
+            let name = msg.get("ctx")?.str()?.to_string();
+            let body = msg.get("body")?;
+            let ctx = match body.get("type")?.str()? {
+                "measure" => Ctx::Measure {
+                    graph: Graph::from_json(body.get("graph")?)?,
+                    device: DeviceProfile::from_json(body.get("device")?)?,
+                    seed: body.get("seed")?.str()?.parse::<u64>()?,
+                    reps: body.get("reps")?.usize()?,
+                },
+                "frontier" => {
+                    let problem = mckp_from_json(body.get("mckp")?)?;
+                    // Recomputed here, not shipped: suffix_mins is a pure
+                    // function of the instance, so both sides agree.
+                    let suffix_min = parametric::suffix_mins(&problem);
+                    Ctx::Frontier { problem, suffix_min }
+                }
+                t => bail!("unknown ctx type '{t}'"),
+            };
+            ctxs.insert(name, ctx);
+            Ok(Json::Null)
+        }
+
+        "measure" => {
+            let name = msg.get("ctx")?.str()?;
+            let (graph, device, seed, reps) = match ctxs.get(name) {
+                Some(Ctx::Measure { graph, device, seed, reps }) => {
+                    (graph, device, *seed, *reps)
+                }
+                Some(_) => bail!("ctx '{name}' is not a measure context"),
+                None => bail!("unknown ctx '{name}'"),
+            };
+            let src = SimTtft::for_device(graph, device, seed, reps);
+            let streams = msg.get("streams")?.arr()?;
+            let cfgs = msg.get("cfgs")?.arr()?;
+            if streams.len() != cfgs.len() {
+                bail!("measure batch: {} streams vs {} configs", streams.len(), cfgs.len());
+            }
+            let nq = src.n_qlayers();
+            let mut ttfts = Vec::with_capacity(streams.len());
+            for (s, c) in streams.iter().zip(cfgs) {
+                let formats = parse_formats(c)?;
+                if formats.len() != nq {
+                    bail!("config covers {} layers, model has {nq}", formats.len());
+                }
+                let stream = s.f64()? as u64;
+                ttfts.push(Json::Num(src.measure(&MpConfig(formats), stream)?));
+            }
+            Ok(Json::Obj(vec![("ttfts".into(), Json::Arr(ttfts))]))
+        }
+
+        "expand" => {
+            let name = msg.get("ctx")?.str()?;
+            let (problem, suffix_min) = match ctxs.get(name) {
+                Some(Ctx::Frontier { problem, suffix_min }) => (problem, suffix_min),
+                Some(_) => bail!("ctx '{name}' is not a frontier context"),
+                None => bail!("unknown ctx '{name}'"),
+            };
+            let j = msg.get("j")?.usize()?;
+            let start = msg.get("start")?.usize()?;
+            if j >= problem.n_groups() {
+                bail!("expand level {j} out of range ({} groups)", problem.n_groups());
+            }
+            let states = nodes_from_json(msg.get("nodes")?)?;
+            for s in &states {
+                if s.costs.len() != problem.n_dims() {
+                    bail!("state carries {} cost dims, instance has {}", s.costs.len(), problem.n_dims());
+                }
+            }
+            let out = parametric::expand_chunk(problem, suffix_min, j, start, &states);
+            Ok(nodes_to_json(&out, problem.n_dims()))
+        }
+
+        "calibrate_demo" => {
+            let n_qlayers = msg.get("n_qlayers")?.usize()?;
+            let seed = msg.get("seed")?.str()?.parse::<u64>()?;
+            let c = demo_calibration(n_qlayers, seed);
+            Ok(Json::Obj(vec![
+                ("s".into(), Json::Arr(c.s.iter().map(|&x| Json::Num(x)).collect())),
+                ("eg2".into(), Json::Num(c.eg2)),
+                ("g_mean".into(), Json::Num(c.g_mean)),
+                ("n_samples".into(), Json::Num(c.n_samples as f64)),
+            ]))
+        }
+
+        // Hostile-fleet test hooks: a worker that hangs, and one that dies.
+        "sleep" => {
+            let ms = msg.get("ms")?.usize()?;
+            std::thread::sleep(std::time::Duration::from_millis(ms as u64));
+            Ok(Json::Null)
+        }
+        "exit" => {
+            let code = msg.get("code")?.i64()? as i32;
+            std::process::exit(code);
+        }
+
+        k => bail!("unknown task kind '{k}'"),
+    }
+}
+
+/// Build a `ctx` install request (coordinator side; lives here so the two
+/// ends of the protocol are defined next to each other).
+pub fn ctx_request(id: u64, name: &str, body: Json) -> Json {
+    request(
+        id,
+        "ctx",
+        vec![
+            ("ctx".to_string(), Json::Str(name.to_string())),
+            ("body".to_string(), body),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::demo::demo_model;
+    use crate::solver::problem::gen::random;
+    use crate::util::Rng;
+
+    /// Run one in-memory request/response exchange against the serve loop.
+    fn roundtrip(requests: Vec<Json>) -> Vec<Json> {
+        let mut input: Vec<u8> = Vec::new();
+        for r in &requests {
+            write_frame(&mut input, r).unwrap();
+        }
+        let mut output: Vec<u8> = Vec::new();
+        serve(std::io::Cursor::new(input), &mut output).unwrap();
+        let mut cursor = std::io::Cursor::new(output);
+        let mut replies = Vec::new();
+        while let Some(j) = read_frame(&mut cursor).unwrap() {
+            replies.push(j);
+        }
+        replies
+    }
+
+    #[test]
+    fn ping_and_unknown_kind() {
+        let replies = roundtrip(vec![
+            request(1, "ping", vec![]),
+            request(2, "no_such_kind", vec![]),
+        ]);
+        assert_eq!(replies.len(), 2);
+        assert!(matches!(replies[0].get("ok").unwrap(), Json::Bool(true)));
+        assert_eq!(replies[0].get("result").unwrap().str().unwrap(), "pong");
+        assert!(matches!(replies[1].get("ok").unwrap(), Json::Bool(false)));
+        assert!(replies[1].get("error").unwrap().str().unwrap().contains("no_such_kind"));
+    }
+
+    #[test]
+    fn measure_tasks_match_local_source_bitwise() {
+        let (graph, _, _) = demo_model(1, 5);
+        let device = DeviceProfile::gaudi2();
+        let (seed, reps) = (0x71_4e_33u64, 5usize);
+        let nq = graph.qlayers.len();
+
+        let body = Json::Obj(vec![
+            ("type".into(), Json::Str("measure".into())),
+            ("graph".into(), graph.to_json()),
+            ("device".into(), device.to_json()),
+            ("seed".into(), Json::Str(seed.to_string())),
+            ("reps".into(), Json::Num(reps as f64)),
+        ]);
+        let mut cfg = MpConfig::all_bf16(nq);
+        cfg.set(0, Format::Fp8E4m3);
+        let cfg_json = Json::Arr(
+            cfg.0.iter().map(|f| Json::Str(f.name().to_string())).collect(),
+        );
+        let replies = roundtrip(vec![
+            ctx_request(1, "m0", body),
+            request(
+                2,
+                "measure",
+                vec![
+                    ("ctx".to_string(), Json::Str("m0".into())),
+                    ("streams".to_string(), Json::Arr(vec![Json::Num(0.0), Json::Num(7.0)])),
+                    ("cfgs".to_string(), Json::Arr(vec![cfg_json.clone(), cfg_json])),
+                ],
+            ),
+        ]);
+        assert!(matches!(replies[1].get("ok").unwrap(), Json::Bool(true)));
+        let ttfts = replies[1].get("result").unwrap().get("ttfts").unwrap().arr().unwrap();
+        let src = SimTtft::for_device(&graph, &device, seed, reps);
+        let want0 = src.measure(&cfg, 0).unwrap();
+        let want7 = src.measure(&cfg, 7).unwrap();
+        assert_eq!(ttfts[0].f64().unwrap().to_bits(), want0.to_bits());
+        assert_eq!(ttfts[1].f64().unwrap().to_bits(), want7.to_bits());
+    }
+
+    #[test]
+    fn expand_tasks_match_local_expansion_bitwise() {
+        let mut rng = Rng::new(0xFA57);
+        let p = random(&mut rng, 4, 4);
+        let suffix_min = parametric::suffix_mins(&p);
+        let root = parametric::root_level(p.n_dims());
+        let want = parametric::expand_chunk(&p, &suffix_min, 0, 0, &root);
+
+        let body = Json::Obj(vec![
+            ("type".into(), Json::Str("frontier".into())),
+            ("mckp".into(), super::super::protocol::mckp_to_json(&p)),
+        ]);
+        let replies = roundtrip(vec![
+            ctx_request(1, "f0", body),
+            request(
+                2,
+                "expand",
+                vec![
+                    ("ctx".to_string(), Json::Str("f0".into())),
+                    ("j".to_string(), Json::Num(0.0)),
+                    ("start".to_string(), Json::Num(0.0)),
+                    ("nodes".to_string(), nodes_to_json(&root, p.n_dims())),
+                ],
+            ),
+        ]);
+        assert!(matches!(replies[1].get("ok").unwrap(), Json::Bool(true)));
+        let got = nodes_from_json(replies[1].get("result").unwrap()).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.gain.to_bits(), b.gain.to_bits());
+            assert_eq!(a.costs.len(), b.costs.len());
+            for (x, y) in a.costs.iter().zip(&b.costs) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            assert_eq!((a.parent, a.choice), (b.parent, b.choice));
+        }
+    }
+
+    #[test]
+    fn calibrate_demo_matches_local() {
+        let (_, qlayers, want) = demo_model(2, 99);
+        let replies = roundtrip(vec![request(
+            1,
+            "calibrate_demo",
+            vec![
+                ("n_qlayers".to_string(), Json::Num(qlayers.len() as f64)),
+                ("seed".to_string(), Json::Str("99".into())),
+            ],
+        )]);
+        let r = replies[0].get("result").unwrap();
+        let s: Vec<f64> =
+            r.get("s").unwrap().arr().unwrap().iter().map(|x| x.f64().unwrap()).collect();
+        assert_eq!(s.len(), want.s.len());
+        for (a, b) in s.iter().zip(&want.s) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(r.get("eg2").unwrap().f64().unwrap().to_bits(), want.eg2.to_bits());
+    }
+
+    #[test]
+    fn shutdown_stops_the_loop_mid_stream() {
+        let replies = roundtrip(vec![
+            request(1, "shutdown", vec![]),
+            request(2, "ping", vec![]), // never reached
+        ]);
+        assert_eq!(replies.len(), 1);
+    }
+
+    #[test]
+    fn tasks_against_missing_ctx_error_cleanly() {
+        let replies = roundtrip(vec![request(
+            1,
+            "measure",
+            vec![
+                ("ctx".to_string(), Json::Str("nope".into())),
+                ("streams".to_string(), Json::Arr(vec![])),
+                ("cfgs".to_string(), Json::Arr(vec![])),
+            ],
+        )]);
+        assert!(matches!(replies[0].get("ok").unwrap(), Json::Bool(false)));
+        assert!(replies[0].get("error").unwrap().str().unwrap().contains("unknown ctx"));
+    }
+}

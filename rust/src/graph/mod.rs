@@ -112,6 +112,63 @@ impl Graph {
         Graph::from_json(&Json::parse_file(path)?)
     }
 
+    /// Exact inverse of [`Graph::from_json`]: the emitted JSON parses back
+    /// into an identical graph (the node `index` is rebuilt on parse).
+    /// This is what lets a distributed coordinator ship a graph to worker
+    /// processes and have both sides time the SAME model bit-for-bit.
+    pub fn to_json(&self) -> Json {
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| {
+                Json::Obj(vec![
+                    ("id".into(), Json::Str(n.id.clone())),
+                    ("kind".into(), Json::Str(n.kind.clone())),
+                    (
+                        "engine".into(),
+                        Json::Str(match n.engine {
+                            Engine::Mme => "mme".into(),
+                            Engine::Tpc => "tpc".into(),
+                        }),
+                    ),
+                    ("qidx".into(), Json::Num(n.qidx as f64)),
+                    ("macs".into(), Json::Num(n.macs as f64)),
+                    ("bytes_in".into(), Json::Num(n.bytes_in as f64)),
+                    ("bytes_out".into(), Json::Num(n.bytes_out as f64)),
+                    ("param_bytes".into(), Json::Num(n.param_bytes as f64)),
+                    ("c".into(), Json::Num(n.c as f64)),
+                    ("k".into(), Json::Num(n.k as f64)),
+                ])
+            })
+            .collect();
+        let pairs = |edges: &[(usize, usize)]| {
+            Json::Arr(
+                edges
+                    .iter()
+                    .map(|&(s, d)| {
+                        Json::Arr(vec![
+                            Json::Str(self.nodes[s].id.clone()),
+                            Json::Str(self.nodes[d].id.clone()),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        let strs = |xs: &[String]| {
+            Json::Arr(xs.iter().map(|s| Json::Str(s.clone())).collect())
+        };
+        Json::Obj(vec![
+            ("model".into(), Json::Str(self.model.clone())),
+            ("eval_b".into(), Json::Num(self.eval_b as f64)),
+            ("seq".into(), Json::Num(self.seq as f64)),
+            ("nodes".into(), Json::Arr(nodes)),
+            ("edges".into(), pairs(&self.edges)),
+            ("residual_edges".into(), pairs(&self.residual_edges)),
+            ("qlayers".into(), strs(&self.qlayers)),
+            ("qkinds".into(), strs(&self.qkinds)),
+        ])
+    }
+
     /// Construct directly (tests / synthetic graphs).
     pub fn synthetic(nodes: Vec<Node>, edges: Vec<(usize, usize)>) -> Graph {
         let index = nodes.iter().enumerate().map(|(i, n)| (n.id.clone(), i)).collect();
@@ -330,6 +387,29 @@ mod tests {
         assert_eq!(g.node_index("b").unwrap(), 1);
         assert!(g.nodes[1].quantizable());
         assert_eq!(g.total_param_bytes(), 32);
+    }
+
+    #[test]
+    fn to_json_roundtrips_synthetic_graphs() {
+        let (g, _, _) = crate::plan::demo::demo_model(2, 5);
+        let back = Graph::from_json(&Json::parse(&g.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.model, g.model);
+        assert_eq!(back.edges, g.edges);
+        assert_eq!(back.residual_edges, g.residual_edges);
+        assert_eq!(back.qlayers, g.qlayers);
+        assert_eq!(back.qkinds, g.qkinds);
+        assert_eq!(back.nodes.len(), g.nodes.len());
+        for (a, b) in back.nodes.iter().zip(&g.nodes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.engine, b.engine);
+            assert_eq!(a.qidx, b.qidx);
+            assert_eq!(a.macs, b.macs);
+            assert_eq!(a.bytes_in, b.bytes_in);
+            assert_eq!(a.param_bytes, b.param_bytes);
+            assert_eq!((a.c, a.k), (b.c, b.k));
+        }
+        // Serialization is stable: emit -> parse -> emit is a fixpoint.
+        assert_eq!(back.to_json().to_string(), g.to_json().to_string());
     }
 
     #[test]

@@ -42,6 +42,7 @@
 
 pub mod backend;
 pub mod coordinator;
+pub mod dist;
 pub mod evalharness;
 pub mod exec;
 pub mod figures;

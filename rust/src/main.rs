@@ -38,7 +38,7 @@ use ampq::timing::{measure_groups, TtftSource, WallTtft};
 use ampq::util::{Args, Json};
 use anyhow::{anyhow, bail, Result};
 use std::path::PathBuf;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -70,6 +70,11 @@ commands:
   devices     list the built-in hardware device profiles
   compare     plan on several devices (--devices a,b,c) and print their
               Pareto frontiers side by side
+  fleet       schedule the --models x --devices calibration + measurement
+              + frontier matrix over a worker process fleet; artifacts
+              are byte-identical at any --workers count (0 = in-process)
+  worker      distributed-planning worker (spawned by the coordinator;
+              speaks frames on stdin/stdout, or --connect HOST:PORT)
   figures     regenerate paper figures/tables into results/
   ttft        wall-clock TTFT of the real compiled forward (needs PJRT)
 
@@ -109,6 +114,14 @@ options:
   --reps N              TTFT iterations per measurement [5]
   --sigma X             scale-perturbation sigma [0.02]
   --fwd pallas|ref      forward artifact [ref; ttft: pallas]
+  --workers N           fleet: worker process count (0 = in-process) [2]
+  --dist-workers N      serve --listen: stage measurement passes through
+                        N worker processes (0 = in-process) [0]
+  --transport stdio|tcp fleet: coordinator<->worker transport [stdio]
+  --task-deadline MS    fleet: per-task deadline before the worker is
+                        killed and the task re-issued [30000]
+  --max-retries N       fleet: re-issues allowed per task [3]
+  --retry-backoff MS    fleet: pause before a worker respawn [50]
   --json                machine-readable JSON lines (Plan serde format)
   --demo                register a synthetic model 'demo' (no artifacts
                         or PJRT needed; sets the default --model)
@@ -154,6 +167,14 @@ fn run(raw: &[String]) -> Result<()> {
         return Ok(());
     }
     let cmd = args.positional[0].as_str();
+    // The distributed subcommands dispatch before any engine/device setup:
+    // `worker` is spawned in bulk by a coordinator and must start speaking
+    // frames immediately; `fleet` builds its own per-cell pipelines.
+    match cmd {
+        "worker" => return cmd_worker(&args),
+        "fleet" => return cmd_fleet(&args),
+        _ => {}
+    }
     let root = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let fwd_default = if cmd == "ttft" { "pallas" } else { "ref" };
     let fwd_mode = match args.get_or("fwd", fwd_default) {
@@ -730,6 +751,23 @@ fn cmd_serve_listen(
         .filter(|s| !s.is_empty())
         .collect();
     let refs: Vec<&str> = model_list.iter().map(String::as_str).collect();
+    // Optionally stage measurement passes through a worker fleet: the
+    // coordinator produces bit-identical Measured artifacts, so serving
+    // behavior is unchanged — only who computed the TTFTs differs.  The
+    // fleet exists for staging only and drains before the daemon binds.
+    let dist_workers = args.usize_or("dist-workers", 0)?;
+    let coord = if dist_workers > 0 {
+        let cfg = ampq::dist::DistConfig { workers: dist_workers, ..Default::default() };
+        let c = std::sync::Arc::new(std::sync::Mutex::new(ampq::dist::Coordinator::new(cfg)?));
+        let hook = c.clone();
+        engine.set_measure_hook(Some(Box::new(move |ms| {
+            hook.lock().unwrap().measure_stage(ms)
+        })));
+        eprintln!("ampq serve: staging measurements over {dist_workers} worker process(es)");
+        Some(c)
+    } else {
+        None
+    };
     // Daemon startup is strict: a model that cannot stage fails loudly
     // here, instead of answering 400 to every request later.
     let svc = engine.service(&refs)?;
@@ -750,10 +788,21 @@ fn cmd_serve_listen(
             let name = profile.name.clone();
             registry.register(profile.clone());
             let mut dev_engine = spec.engine(profile);
+            if let Some(c) = &coord {
+                let hook = c.clone();
+                dev_engine.set_measure_hook(Some(Box::new(move |ms| {
+                    hook.lock().unwrap().measure_stage(ms)
+                })));
+            }
             for m in &refs {
                 svc.register_for_device(m, &name, dev_engine.planner(m)?)?;
             }
         }
+    }
+    // Staging is done: drain the worker fleet before going resident.
+    if let Some(c) = &coord {
+        engine.set_measure_hook(None);
+        c.lock().unwrap().shutdown();
     }
     let devices: Vec<DeviceProfile> = registry.iter().cloned().collect();
     let cfg = ServeConfig {
@@ -787,6 +836,59 @@ fn cmd_serve_listen(
         model_list.len()
     );
     daemon.run(listener)
+}
+
+/// `ampq worker` — one member of a distributed planning fleet.  Speaks
+/// the length-prefixed JSON protocol on stdin/stdout (default) or dials
+/// back to the coordinator's TCP listener (`--connect HOST:PORT`).
+fn cmd_worker(args: &Args) -> Result<()> {
+    match args.get("connect") {
+        Some(addr) => ampq::dist::worker::serve_tcp(addr),
+        None => {
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            ampq::dist::worker::serve(stdin.lock(), stdout.lock())
+        }
+    }
+}
+
+/// `ampq fleet` — schedule the models x devices calibration + measurement
+/// + frontier matrix over a worker fleet (`--workers 0` = in-process
+/// reference path).  Artifacts land under --out; the summary goes to
+/// stdout only, so output trees stay `diff -r`-comparable.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use ampq::dist::{DistConfig, FleetConfig};
+    let split = |s: &str| -> Vec<String> {
+        s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+    };
+    let dist = DistConfig {
+        task_deadline: Duration::from_millis(args.u64_or("task-deadline", 30_000)?),
+        max_retries: args.usize_or("max-retries", 3)?,
+        retry_backoff: Duration::from_millis(args.u64_or("retry-backoff", 50)?),
+        debug_kill_after: match args.get("debug-kill-after") {
+            None => None,
+            Some(v) => Some(v.parse().map_err(|e| anyhow!("--debug-kill-after: {e}"))?),
+        },
+        transport: match args.get_or("transport", "stdio") {
+            "stdio" => ampq::dist::Transport::Stdio,
+            "tcp" => ampq::dist::Transport::Tcp,
+            t => bail!("unknown --transport '{t}' (stdio|tcp)"),
+        },
+        ..DistConfig::default()
+    };
+    let cfg = FleetConfig {
+        models: split(args.get_or("models", "demo")),
+        devices: split(args.get_or("devices", "gaudi2")),
+        workers: args.usize_or("workers", 2)?,
+        out: PathBuf::from(args.get_or("out", "fleet-out")),
+        blocks: args.usize_or("blocks", 2)?,
+        dist,
+    };
+    let t0 = Instant::now();
+    let report = ampq::dist::run_fleet(&cfg)?;
+    print!("{}", ampq::dist::render_summary(&report, cfg.workers));
+    println!("total {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    Ok(())
 }
 
 fn cmd_devices(registry: &Registry, json: bool) -> Result<()> {

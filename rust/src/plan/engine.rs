@@ -28,6 +28,12 @@ pub const DEFAULT_MEASURE_SEED: u64 = 0x71_4e_33;
 /// Paper protocol: TTFT averaged over 5 iterations.
 pub const DEFAULT_MEASURE_REPS: usize = 5;
 
+/// Alternate executor of the Measured stage (e.g. the distributed
+/// coordinator in [`crate::dist`]).  Receives the fully-assembled
+/// [`MeasureStage`] and must produce an artifact bit-identical to
+/// `stage.run(&pool)` — the cache layer cannot tell them apart.
+pub type MeasureHook = Box<dyn FnMut(&MeasureStage<'_>) -> Result<Measured> + Send>;
+
 /// How many real (non-cached) passes the engine has run.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct EngineCounters {
@@ -78,6 +84,7 @@ pub struct Engine {
     rt: Option<Runtime>,
     models: BTreeMap<String, ModelState>,
     counters: EngineCounters,
+    measure_hook: Option<MeasureHook>,
 }
 
 impl Engine {
@@ -97,7 +104,16 @@ impl Engine {
             rt: None,
             models: BTreeMap::new(),
             counters: EngineCounters::default(),
+            measure_hook: None,
         }
+    }
+
+    /// Route every real (non-cached) Measured pass through `hook` instead
+    /// of the in-process [`MeasureStage::run`].  The hook must honor the
+    /// determinism contract: its artifact is cached and compared exactly
+    /// like an in-process one.  Pass `None` to restore the default path.
+    pub fn set_measure_hook(&mut self, hook: Option<MeasureHook>) {
+        self.measure_hook = hook;
     }
 
     /// Directory holding manifest.json + the AOT artifacts.
@@ -499,15 +515,19 @@ impl Engine {
             );
         }
         let graph = self.graph(model)?;
-        let art = MeasureStage {
+        let pool = self.pool();
+        let ms = MeasureStage {
             model,
             graph: &graph,
             partitioned: &partitioned,
             device: &self.device,
             seed: self.measure_seed,
             reps: self.measure_reps,
-        }
-        .run(&self.pool())?;
+        };
+        let art = match self.measure_hook.as_mut() {
+            Some(hook) => hook(&ms)?,
+            None => ms.run(&pool)?,
+        };
         self.counters.measurement_passes += 1;
         self.store_cache(model, &stage, &art.to_json());
         self.state_mut(model).measured = Some(art.clone());

@@ -253,27 +253,47 @@ impl Planner {
         if strategy != Strategy::Ip {
             return self.frontier_via_bisection(objective, strategy);
         }
+        let exec = self.exec;
+        self.frontier_via(objective, |groups, calib, tau_max| {
+            crate::coordinator::ip::optimize_frontier(
+                groups,
+                calib,
+                tau_max,
+                &ExecPool::new(exec),
+            )
+        })
+    }
+
+    /// The IP frontier with the eq.-5 sweep supplied by `solve` — the seam
+    /// the distributed coordinator (`crate::dist`) plugs into: it runs the
+    /// chain DP across worker PROCESSES, while knot materialization, curve
+    /// assembly, and the incomplete-curve bisection fallback stay this
+    /// planner's code, so a distributed frontier is byte-identical to the
+    /// in-process one.
+    pub fn frontier_via<F>(&self, objective: Objective, solve: F) -> Result<Frontier>
+    where
+        F: FnOnce(
+            &[crate::metrics::GroupChoices],
+            &Calibration,
+            f64,
+        ) -> Result<crate::coordinator::ip::FrontierSolves>,
+    {
         let tau_max = self.tau_max(objective);
         let family = self.family(objective);
         let calib = &self.calibrated.calibration;
-        let solves = crate::coordinator::ip::optimize_frontier(
-            &family.groups,
-            calib,
-            tau_max,
-            &ExecPool::new(self.exec),
-        )?;
+        let solves = solve(&family.groups, calib, tau_max)?;
         if !solves.complete {
             // The dominance state cap thinned the sweep (never observed at
             // paper scale): the surviving knots are proven optima, but the
             // knot SET may be incomplete and `at(tau)` between survivors
             // would under-report.  Serve the per-tau sweep instead — slower
             // but unconditionally faithful to pointwise solves.
-            return self.frontier_via_bisection(objective, strategy);
+            return self.frontier_via_bisection(objective, Strategy::Ip);
         }
         frontier::build(
             self.model(),
             objective,
-            strategy,
+            Strategy::Ip,
             calib.eg2,
             tau_max,
             solves

@@ -162,3 +162,58 @@ impl Client {
 pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<Response> {
     Client::connect(addr)?.request(method, path, body)
 }
+
+/// Retry policy for [`request_with_retry`]: a 503 carrying `Retry-After`
+/// earns up to `budget` additional attempts, each waiting the server's
+/// hint clamped to `max_wait`.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Additional attempts after the first (0 = never retry).
+    pub budget: usize,
+    /// Cap on one server-hinted wait (defends against absurd hints).
+    pub max_wait: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { budget: 3, max_wait: Duration::from_secs(2) }
+    }
+}
+
+/// Final response of a retried request plus how many attempts it took
+/// (1 = answered first try).
+#[derive(Clone, Debug)]
+pub struct RetriedResponse {
+    pub response: Response,
+    pub attempts: usize,
+}
+
+/// One-shot request honoring `Retry-After` on 503 under a capped retry
+/// budget.  Reconnects per attempt (the daemon may close a rejected
+/// connection).  Returns immediately on anything other than a 503 that
+/// carries the header — success, other statuses, a hint-less 503 — and
+/// propagates transport errors; an exhausted budget returns the last 503.
+pub fn request_with_retry(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    policy: RetryPolicy,
+) -> Result<RetriedResponse> {
+    let mut attempts = 0usize;
+    loop {
+        attempts += 1;
+        let response = request(addr, method, path, body)?;
+        if response.status != 503 || attempts > policy.budget {
+            return Ok(RetriedResponse { response, attempts });
+        }
+        let Some(hint) = response.header("retry-after") else {
+            return Ok(RetriedResponse { response, attempts });
+        };
+        // The header is integer seconds (RFC 9110); a malformed value
+        // retries immediately rather than failing the request.
+        let secs = hint.trim().parse::<f64>().unwrap_or(0.0).max(0.0);
+        let wait = secs.min(policy.max_wait.as_secs_f64());
+        std::thread::sleep(Duration::from_secs_f64(wait));
+    }
+}

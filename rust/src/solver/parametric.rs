@@ -54,20 +54,26 @@ const MAX_STATES_SINGLE: usize = 32_768;
 /// worst-case exponential.
 const MAX_STATES_MULTI: usize = 2_048;
 /// States per fan-out chunk of the merge (pure in the state count).
-const EXPAND_CHUNK: usize = 512;
+/// Shared with the distributed coordinator, whose remote task boundaries
+/// must match the in-process chunking exactly.
+pub(crate) const EXPAND_CHUNK: usize = 512;
 
 /// One DP state: a choice prefix's accumulated (gain, costs), linked to
 /// its parent state so full choice vectors are reconstructed only for the
 /// states that survive to the end.
+///
+/// `pub(crate)` (fields included) so the distributed coordinator
+/// (`crate::dist`) can ship state chunks to worker processes and run the
+/// SAME expansion/prune code on both sides of the wire.
 #[derive(Clone, Debug)]
-struct Node {
-    gain: f64,
+pub(crate) struct Node {
+    pub(crate) gain: f64,
     /// Per-dimension accumulated cost, summed in group order — bit-equal
     /// to [`Mckp::evaluate`] of the reconstructed choice.
-    costs: Vec<f64>,
+    pub(crate) costs: Vec<f64>,
     /// Index into the previous level's kept states (u32::MAX at the root).
-    parent: u32,
-    choice: u32,
+    pub(crate) parent: u32,
+    pub(crate) choice: u32,
 }
 
 /// One knot of the parametric curve: a full assignment Pareto-optimal in
@@ -141,113 +147,139 @@ pub fn frontier(p: &Mckp) -> ParametricCurve {
 /// bit-identical at any thread count.
 pub fn frontier_with(p: &Mckp, pool: &ExecPool) -> ParametricCurve {
     let n = p.n_groups();
-    let dims = p.n_dims();
-    let cap = if dims == 1 { MAX_STATES_SINGLE } else { MAX_STATES_MULTI };
+    let suffix_min = suffix_mins(p);
+    let mut levels: Vec<Vec<Node>> = Vec::with_capacity(n + 1);
+    levels.push(root_level(p.n_dims()));
+    let mut truncated = false;
+    for j in 0..n {
+        let prev = &levels[j];
+        // State-merge fan-out: fixed-size chunks of the surviving states
+        // expand in parallel; concatenation is in chunk order, so the
+        // candidate list is identical at any thread count.
+        let cands: Vec<Node> = pool
+            .par_chunks(prev, EXPAND_CHUNK, |start, chunk| {
+                expand_chunk(p, &suffix_min, j, start, chunk)
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+        let (kept, thinned) = prune_level(p, cands);
+        truncated |= thinned;
+        levels.push(kept);
+    }
+    finish(n, &levels, truncated)
+}
 
-    // suffix_min[d][j] = min dim-d cost over groups j.. — a state whose
-    // cost plus this lower bound already exceeds a budget can never be
-    // completed feasibly and is pruned at expansion.
-    let mut suffix_min = vec![vec![0.0f64; n + 1]; dims];
+/// `suffix_min[d][j]` = min dim-d cost over groups j.. — a state whose
+/// cost plus this lower bound already exceeds a budget can never be
+/// completed feasibly and is pruned at expansion.
+pub(crate) fn suffix_mins(p: &Mckp) -> Vec<Vec<f64>> {
+    let n = p.n_groups();
+    let mut suffix_min = vec![vec![0.0f64; n + 1]; p.n_dims()];
     for (d, sm) in suffix_min.iter_mut().enumerate() {
         for j in (0..n).rev() {
             let mc = p.costs[d].table[j].iter().cloned().fold(f64::MAX, f64::min);
             sm[j] = sm[j + 1] + mc;
         }
     }
+    suffix_min
+}
 
-    let mut levels: Vec<Vec<Node>> = Vec::with_capacity(n + 1);
-    levels.push(vec![Node {
-        gain: 0.0,
-        costs: vec![0.0; dims],
-        parent: u32::MAX,
-        choice: 0,
-    }]);
-    let mut truncated = false;
-    for j in 0..n {
-        let prev = &levels[j];
-        let k = p.gains[j].len();
-        // State-merge fan-out: fixed-size chunks of the surviving states
-        // expand in parallel; concatenation is in chunk order, so the
-        // candidate list is identical at any thread count.
-        let mut cands: Vec<Node> = pool
-            .par_chunks(prev, EXPAND_CHUNK, |start, chunk| {
-                let mut out: Vec<Node> = Vec::with_capacity(chunk.len() * k);
-                for (off, s) in chunk.iter().enumerate() {
-                    let parent = (start + off) as u32;
-                    'choices: for i in 0..k {
-                        let mut costs = s.costs.clone();
-                        for d in 0..dims {
-                            let c = costs[d] + p.costs[d].table[j][i];
-                            if c + suffix_min[d][j + 1] > p.budgets[d] + EPS {
-                                continue 'choices;
-                            }
-                            costs[d] = c;
-                        }
-                        out.push(Node {
-                            gain: s.gain + p.gains[j][i],
-                            costs,
-                            parent,
-                            choice: i as u32,
-                        });
-                    }
+/// The DP's root: one empty prefix.
+pub(crate) fn root_level(dims: usize) -> Vec<Node> {
+    vec![Node { gain: 0.0, costs: vec![0.0; dims], parent: u32::MAX, choice: 0 }]
+}
+
+/// Expand one fixed-size chunk of level-`j` states with every group-`j`
+/// choice, budget-pruned through the suffix lower bounds.  This is the
+/// unit of remote work in the distributed path: coordinator and worker
+/// both call THIS function, so sharding cannot change a single bit.
+pub(crate) fn expand_chunk(
+    p: &Mckp,
+    suffix_min: &[Vec<f64>],
+    j: usize,
+    start: usize,
+    chunk: &[Node],
+) -> Vec<Node> {
+    let dims = p.n_dims();
+    let k = p.gains[j].len();
+    let mut out: Vec<Node> = Vec::with_capacity(chunk.len() * k);
+    for (off, s) in chunk.iter().enumerate() {
+        let parent = (start + off) as u32;
+        'choices: for i in 0..k {
+            let mut costs = s.costs.clone();
+            for d in 0..dims {
+                let c = costs[d] + p.costs[d].table[j][i];
+                if c + suffix_min[d][j + 1] > p.budgets[d] + EPS {
+                    continue 'choices;
                 }
-                out
-            })
-            .into_iter()
-            .flatten()
-            .collect();
-
-        // Total-order sort: primary cost asc, gain desc, secondary costs
-        // asc, then the (parent, choice) key — deterministic down to exact
-        // ties, NaN-total by construction (`total_cmp`).
-        cands.sort_by(|a, b| {
-            a.costs[0]
-                .total_cmp(&b.costs[0])
-                .then(b.gain.total_cmp(&a.gain))
-                .then_with(|| {
-                    for d in 1..dims {
-                        let o = a.costs[d].total_cmp(&b.costs[d]);
-                        if o != std::cmp::Ordering::Equal {
-                            return o;
-                        }
-                    }
-                    (a.parent, a.choice).cmp(&(b.parent, b.choice))
-                })
-        });
-
-        let mut kept: Vec<Node> = Vec::new();
-        if dims == 1 {
-            // 2-d Pareto sweep: in cost order, keep strictly rising gain.
-            let mut best_gain = f64::NEG_INFINITY;
-            for c in cands {
-                if c.gain > best_gain {
-                    best_gain = c.gain;
-                    kept.push(c);
-                }
+                costs[d] = c;
             }
-        } else {
-            // n-d dominance: a candidate survives unless an already-kept
-            // state matches or beats it in gain AND every cost.  (The sort
-            // order guarantees no later candidate can dominate an earlier
-            // kept one, so `kept` stays an antichain.)
-            for c in cands {
-                let dominated = kept.iter().any(|a| {
-                    a.gain >= c.gain && (0..dims).all(|d| a.costs[d] <= c.costs[d])
-                });
-                if !dominated {
-                    kept.push(c);
-                }
-            }
+            out.push(Node { gain: s.gain + p.gains[j][i], costs, parent, choice: i as u32 });
         }
-        if kept.len() > cap {
-            truncated = true;
-            kept = thin(kept, cap);
-        }
-        levels.push(kept);
     }
+    out
+}
 
-    // Reconstruct every surviving state's full choice vector through the
-    // parent links, then project onto the primary-cost curve.
+/// Sort + Pareto-prune + (past the cap) thin one level's candidates.
+/// Returns the kept antichain and whether thinning bit.  Pure in the
+/// candidate list, so any sharding that reproduces the candidate order
+/// reproduces the level exactly.
+pub(crate) fn prune_level(p: &Mckp, mut cands: Vec<Node>) -> (Vec<Node>, bool) {
+    let dims = p.n_dims();
+    let cap = if dims == 1 { MAX_STATES_SINGLE } else { MAX_STATES_MULTI };
+    // Total-order sort: primary cost asc, gain desc, secondary costs
+    // asc, then the (parent, choice) key — deterministic down to exact
+    // ties, NaN-total by construction (`total_cmp`).
+    cands.sort_by(|a, b| {
+        a.costs[0]
+            .total_cmp(&b.costs[0])
+            .then(b.gain.total_cmp(&a.gain))
+            .then_with(|| {
+                for d in 1..dims {
+                    let o = a.costs[d].total_cmp(&b.costs[d]);
+                    if o != std::cmp::Ordering::Equal {
+                        return o;
+                    }
+                }
+                (a.parent, a.choice).cmp(&(b.parent, b.choice))
+            })
+    });
+
+    let mut kept: Vec<Node> = Vec::new();
+    if dims == 1 {
+        // 2-d Pareto sweep: in cost order, keep strictly rising gain.
+        let mut best_gain = f64::NEG_INFINITY;
+        for c in cands {
+            if c.gain > best_gain {
+                best_gain = c.gain;
+                kept.push(c);
+            }
+        }
+    } else {
+        // n-d dominance: a candidate survives unless an already-kept
+        // state matches or beats it in gain AND every cost.  (The sort
+        // order guarantees no later candidate can dominate an earlier
+        // kept one, so `kept` stays an antichain.)
+        for c in cands {
+            let dominated = kept
+                .iter()
+                .any(|a| a.gain >= c.gain && (0..dims).all(|d| a.costs[d] <= c.costs[d]));
+            if !dominated {
+                kept.push(c);
+            }
+        }
+    }
+    if kept.len() > cap {
+        (thin(kept, cap), true)
+    } else {
+        (kept, false)
+    }
+}
+
+/// Reconstruct every surviving state's full choice vector through the
+/// parent links, then project onto the primary-cost curve.
+pub(crate) fn finish(n: usize, levels: &[Vec<Node>], truncated: bool) -> ParametricCurve {
     let mut points: Vec<ParamPoint> = Vec::with_capacity(levels[n].len());
     for node in &levels[n] {
         let mut choice = vec![0usize; n];

@@ -146,8 +146,81 @@ impl TimeMeasurements {
 
 /// The chunk size for fanned-out measurement lists: fixed (never derived
 /// from the pool width) so the task batching is a pure function of the
-/// measurement plan.
-const MEASURE_CHUNK: usize = 8;
+/// measurement plan.  Shared with the distributed coordinator so remote
+/// task batches mirror the in-process chunking.
+pub const MEASURE_CHUNK: usize = 8;
+
+/// One measurement of the flattened (group, config) plan: set `cfg`, time
+/// it on stream `k + 1` where `k` is the task's plan index.
+#[derive(Clone, Debug)]
+pub struct MeasureTask {
+    pub group: usize,
+    pub cfg: MpConfig,
+}
+
+/// The flattened measurement plan of one partition x format menu — the
+/// SINGLE source of task enumeration order for both the in-process
+/// [`measure_groups`] fan-out and the distributed coordinator, so a TTFT
+/// table assembled from remote results is bit-identical to the local one.
+pub struct MeasurePlan {
+    pub tasks: Vec<MeasureTask>,
+    /// Per-group config enumerations, aligned with the task order.
+    pub group_configs: Vec<Vec<Vec<Format>>>,
+    pub qidxs: Vec<Vec<usize>>,
+}
+
+impl MeasurePlan {
+    /// Noise-stream index of task `k` (stream 0 is the baseline).
+    pub fn stream(k: usize) -> u64 {
+        k as u64 + 1
+    }
+
+    /// Assemble the measurement product from the baseline TTFT and one
+    /// TTFT per task in plan order — the exact reduction the in-process
+    /// path performs.
+    pub fn assemble(&self, base: f64, ttfts: &[f64]) -> TimeMeasurements {
+        assert_eq!(ttfts.len(), self.tasks.len(), "one TTFT per planned task");
+        let mut groups: Vec<GroupGains> = self
+            .group_configs
+            .iter()
+            .zip(&self.qidxs)
+            .enumerate()
+            .map(|(j, (configs, qidxs))| GroupGains {
+                group: j,
+                qidxs: qidxs.clone(),
+                configs: configs.clone(),
+                gains: Vec::new(),
+            })
+            .collect();
+        for (task, &t) in self.tasks.iter().zip(ttfts) {
+            groups[task.group].gains.push(base - t);
+        }
+        TimeMeasurements { base_ttft: base, groups }
+    }
+}
+
+/// Flatten the (group, config) measurement plan in sequential enumeration
+/// order.  Refuses absurd config spaces up front (checked F^{L_j}).
+pub fn measure_plan(part: &Partition, formats: &[Format], nq: usize) -> Result<MeasurePlan> {
+    let total = part
+        .n_measurements(formats.len())
+        .context("cannot enumerate per-group measurements")?;
+    let mut tasks: Vec<MeasureTask> = Vec::with_capacity(total);
+    let mut group_configs: Vec<Vec<Vec<Format>>> = Vec::with_capacity(part.groups.len());
+    for g in &part.groups {
+        let configs = enumerate_configs(formats, g.qidxs.len());
+        for cfg_fmts in &configs {
+            let mut cfg = MpConfig::all_bf16(nq);
+            for (&q, &f) in g.qidxs.iter().zip(cfg_fmts) {
+                cfg.set(q, f);
+            }
+            tasks.push(MeasureTask { group: group_configs.len(), cfg });
+        }
+        group_configs.push(configs);
+    }
+    let qidxs = part.groups.iter().map(|g| g.qidxs.clone()).collect();
+    Ok(MeasurePlan { tasks, group_configs, qidxs })
+}
 
 /// Measure every group x config (paper Algorithm 1, line 3), fanned out
 /// over `pool`.  Stream 0 is the baseline; streams 1.. follow the
@@ -160,58 +233,23 @@ pub fn measure_groups<S: TtftSource>(
     pool: &ExecPool,
 ) -> Result<TimeMeasurements> {
     let nq = src.n_qlayers();
-    // Refuse absurd config spaces up front (checked F^{L_j}).
-    let total = part
-        .n_measurements(formats.len())
-        .context("cannot enumerate per-group measurements")?;
+    let plan = measure_plan(part, formats, nq)?;
     let base = src.measure(&MpConfig::all_bf16(nq), 0)?;
 
-    // Flatten the (group, config) plan in enumeration order.
-    struct Task {
-        group: usize,
-        cfg: MpConfig,
-    }
-    let mut tasks: Vec<Task> = Vec::with_capacity(total);
-    let mut group_configs: Vec<Vec<Vec<Format>>> = Vec::with_capacity(part.groups.len());
-    for g in &part.groups {
-        let configs = enumerate_configs(formats, g.qidxs.len());
-        for cfg_fmts in &configs {
-            let mut cfg = MpConfig::all_bf16(nq);
-            for (&q, &f) in g.qidxs.iter().zip(cfg_fmts) {
-                cfg.set(q, f);
-            }
-            tasks.push(Task { group: group_configs.len(), cfg });
-        }
-        group_configs.push(configs);
-    }
+    let chunked: Vec<Result<Vec<f64>>> =
+        pool.par_chunks(&plan.tasks, MEASURE_CHUNK, |start, chunk| {
+            chunk
+                .iter()
+                .enumerate()
+                .map(|(k, t)| src.measure(&t.cfg, MeasurePlan::stream(start + k)))
+                .collect()
+        });
 
-    let chunked: Vec<Result<Vec<f64>>> = pool.par_chunks(&tasks, MEASURE_CHUNK, |start, chunk| {
-        chunk
-            .iter()
-            .enumerate()
-            .map(|(k, t)| src.measure(&t.cfg, (start + k) as u64 + 1))
-            .collect()
-    });
-
-    let mut groups: Vec<GroupGains> = part
-        .groups
-        .iter()
-        .enumerate()
-        .map(|(j, g)| GroupGains {
-            group: j,
-            qidxs: g.qidxs.clone(),
-            configs: std::mem::take(&mut group_configs[j]),
-            gains: Vec::new(),
-        })
-        .collect();
-    let mut it = tasks.iter();
+    let mut ttfts: Vec<f64> = Vec::with_capacity(plan.tasks.len());
     for chunk in chunked {
-        for t in chunk? {
-            let task = it.next().expect("one result per task");
-            groups[task.group].gains.push(base - t);
-        }
+        ttfts.extend(chunk?);
     }
-    Ok(TimeMeasurements { base_ttft: base, groups })
+    Ok(plan.assemble(base, &ttfts))
 }
 
 /// Per-layer gains (the naive baseline of Fig. 1): gain of quantizing each

@@ -1,0 +1,291 @@
+//! End-to-end tests for the distributed planning layer (`src/dist/`).
+//!
+//! The acceptance contract under test:
+//!
+//! * `ampq fleet` artifact trees are byte-identical at ANY worker count —
+//!   including 0 (the in-process reference path) — over a models × devices
+//!   matrix, and including runs where a worker is killed mid-run;
+//! * supervision accounting (crashes, deadline expiries, retries,
+//!   respawns) is observable and bounded;
+//! * the TCP transport produces the same bytes as stdio pipes;
+//! * the coordinator's high-level ops (calibrate, measure, frontier)
+//!   match their in-process counterparts exactly, including when routed
+//!   through `Engine::set_measure_hook`.
+//!
+//! Workers are real `ampq worker` subprocesses (`CARGO_BIN_EXE_ampq`).
+
+use ampq::backend::DeviceProfile;
+use ampq::dist::{
+    run_fleet, Coordinator, DistConfig, FleetConfig, TaskSpec, Transport,
+};
+use ampq::exec::ExecPool;
+use ampq::metrics::Objective;
+use ampq::numerics::PAPER_FORMATS;
+use ampq::plan::demo::{demo_calibration, demo_model};
+use ampq::plan::engine::{DEFAULT_MEASURE_REPS, DEFAULT_MEASURE_SEED};
+use ampq::plan::stage::{MeasureStage, PartitionStage, Stage};
+use ampq::plan::{Engine, PlanRequest};
+use ampq::solver::parametric;
+use ampq::solver::problem::gen::random_multi;
+use ampq::util::{Json, Rng};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A DistConfig pointing at the real worker binary Cargo built for this
+/// test run (the coordinator cannot infer it from the test executable).
+fn dist_cfg(workers: usize) -> DistConfig {
+    DistConfig {
+        workers,
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_ampq"))),
+        retry_backoff: Duration::from_millis(10),
+        ..DistConfig::default()
+    }
+}
+
+/// Every file under `root`, keyed by relative path, as text (all fleet
+/// artifacts are JSON).
+fn read_tree(root: &Path) -> BTreeMap<String, String> {
+    fn walk(dir: &Path, root: &Path, out: &mut BTreeMap<String, String>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(&path, root, out);
+            } else {
+                let rel =
+                    path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.insert(rel, std::fs::read_to_string(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+fn assert_trees_equal(
+    a: &BTreeMap<String, String>,
+    b: &BTreeMap<String, String>,
+    what: &str,
+) {
+    assert_eq!(
+        a.keys().collect::<Vec<_>>(),
+        b.keys().collect::<Vec<_>>(),
+        "{what}: file sets differ"
+    );
+    for (path, text) in a {
+        assert_eq!(text, &b[path], "{what}: {path} differs");
+    }
+}
+
+/// Run one fleet over a unique temp dir and return (artifact tree,
+/// supervision metrics).
+fn fleet_tree(
+    tag: &str,
+    models: &[&str],
+    devices: &[&str],
+    workers: usize,
+    dist: DistConfig,
+) -> (BTreeMap<String, String>, ampq::dist::DistMetrics) {
+    let out =
+        std::env::temp_dir().join(format!("ampq_dist_{}_{tag}", std::process::id()));
+    std::fs::remove_dir_all(&out).ok();
+    let cfg = FleetConfig {
+        models: models.iter().map(|s| s.to_string()).collect(),
+        devices: devices.iter().map(|s| s.to_string()).collect(),
+        workers,
+        out: out.clone(),
+        blocks: 1,
+        dist,
+    };
+    let report = run_fleet(&cfg).unwrap_or_else(|e| panic!("{tag}: {e:#}"));
+    assert_eq!(report.cells.len(), models.len() * devices.len(), "{tag}");
+    let tree = read_tree(&out);
+    std::fs::remove_dir_all(&out).ok();
+    (tree, report.metrics)
+}
+
+/// The headline determinism check: the full 2-model × 2-device matrix is
+/// byte-identical in-process, with 1 worker, and with 4 workers.
+#[test]
+fn fleet_artifacts_are_byte_identical_across_worker_counts() {
+    let models = ["demo", "tiny"];
+    let devices = ["gaudi2", "gaudi3"];
+    let (reference, m0) = fleet_tree("ref", &models, &devices, 0, dist_cfg(0));
+    assert_eq!(m0, ampq::dist::DistMetrics::default(), "in-process runs no fleet");
+    assert!(
+        reference.keys().any(|k| k.starts_with("tiny/frontier-")),
+        "reference tree incomplete: {:?}",
+        reference.keys().collect::<Vec<_>>()
+    );
+
+    let (one, m1) = fleet_tree("w1", &models, &devices, 1, dist_cfg(1));
+    assert_trees_equal(&reference, &one, "workers=1 vs in-process");
+
+    let (four, m4) = fleet_tree("w4", &models, &devices, 4, dist_cfg(4));
+    assert_trees_equal(&reference, &four, "workers=4 vs in-process");
+
+    for (label, m) in [("workers=1", &m1), ("workers=4", &m4)] {
+        assert!(m.tasks > 0, "{label}: no tasks ran on the fleet");
+        assert_eq!(m.retries, 0, "{label}: unexpected retries on a healthy fleet");
+        assert_eq!(m.worker_crashes, 0, "{label}: unexpected crashes");
+        assert_eq!(m.deadline_expiries, 0, "{label}: unexpected expiries");
+    }
+    // Same task decomposition at both worker counts: the schedule changes,
+    // the work does not.
+    assert_eq!(m1.tasks, m4.tasks, "task count must not depend on fleet size");
+}
+
+/// Killing a worker mid-run (SIGKILL after 2 completed tasks) must leave
+/// the artifact tree untouched — the crash is absorbed by re-issue — and
+/// must be visible in the supervision counters.
+#[test]
+fn fleet_survives_a_worker_killed_mid_run_byte_identically() {
+    let models = ["demo"];
+    let devices = ["gaudi2", "gaudi3"];
+    let (reference, _) = fleet_tree("kill_ref", &models, &devices, 0, dist_cfg(0));
+    let hostile = DistConfig { debug_kill_after: Some(2), ..dist_cfg(2) };
+    let (tree, m) = fleet_tree("kill", &models, &devices, 2, hostile);
+    assert_trees_equal(&reference, &tree, "killed-worker run vs in-process");
+    assert!(m.worker_crashes >= 1, "the kill went unnoticed: {m:?}");
+    assert!(m.respawns >= 1, "the dead slot was never respawned: {m:?}");
+}
+
+/// Loopback TCP workers produce the same bytes as stdio-pipe workers.
+#[test]
+fn tcp_transport_matches_the_in_process_reference() {
+    let models = ["demo"];
+    let devices = ["gaudi2"];
+    let (reference, _) = fleet_tree("tcp_ref", &models, &devices, 0, dist_cfg(0));
+    let tcp = DistConfig { transport: Transport::Tcp, ..dist_cfg(2) };
+    let (tree, m) = fleet_tree("tcp", &models, &devices, 2, tcp);
+    assert_trees_equal(&reference, &tree, "tcp vs in-process");
+    assert_eq!(m.worker_crashes, 0);
+    assert!(m.tasks > 0);
+}
+
+/// A task that hangs past its deadline is killed and re-issued until the
+/// retry budget runs out; the failure is surfaced, accounted, and leaves
+/// the fleet usable for the next batch.
+#[test]
+fn deadline_expiries_are_bounded_and_accounted() {
+    let cfg = DistConfig {
+        task_deadline: Duration::from_millis(250),
+        max_retries: 2,
+        ..dist_cfg(1)
+    };
+    let mut c = Coordinator::new(cfg).unwrap();
+    let hang = TaskSpec {
+        kind: "sleep".to_string(),
+        fields: vec![("ms".to_string(), Json::Num(60_000.0))],
+        ctx: None,
+    };
+    let err = c.run_tasks(std::slice::from_ref(&hang));
+    assert!(err.is_err(), "a permanently hanging task must fail the batch");
+    let m = c.metrics().clone();
+    // Initial attempt + 2 re-issues, each ending in a deadline kill; the
+    // third kill exhausts the budget.
+    assert_eq!(m.deadline_expiries, 3, "{m:?}");
+    assert_eq!(m.retries, 3, "{m:?}");
+    assert_eq!(m.tasks, 0, "{m:?}");
+    // The fleet recovers: the dead slot respawns for the next batch.
+    c.ping().unwrap();
+    assert!(c.metrics().respawns >= 1);
+    assert_eq!(c.metrics().tasks, 1);
+    c.shutdown();
+}
+
+/// A task whose worker dies instead of answering exercises the crash
+/// path: EOF detection, re-issue, bounded failure — without poisoning a
+/// later healthy batch.
+#[test]
+fn worker_crashes_are_retried_then_surfaced() {
+    let cfg = DistConfig { max_retries: 2, ..dist_cfg(1) };
+    let mut c = Coordinator::new(cfg).unwrap();
+    let die = TaskSpec {
+        kind: "exit".to_string(),
+        fields: vec![("code".to_string(), Json::Num(9.0))],
+        ctx: None,
+    };
+    assert!(c.run_tasks(std::slice::from_ref(&die)).is_err());
+    let m = c.metrics().clone();
+    assert!(m.worker_crashes >= 3, "every attempt must register a crash: {m:?}");
+    assert_eq!(m.retries, 3, "{m:?}");
+    assert_eq!(m.tasks, 0, "{m:?}");
+    c.ping().unwrap();
+    c.shutdown();
+}
+
+/// The coordinator's high-level operations reproduce their in-process
+/// counterparts exactly: calibration, the Measured stage, and the
+/// parametric frontier sweep.
+#[test]
+fn coordinator_ops_match_in_process_bitwise() {
+    let mut c = Coordinator::new(dist_cfg(2)).unwrap();
+    c.ping().unwrap();
+
+    // Calibration: a worker recomputes the pure demo calibration.
+    let (graph, qlayers, _) = demo_model(1, 0xD157);
+    let got = c.calibrate_demo(qlayers.len(), 0xD157).unwrap();
+    assert_eq!(got, demo_calibration(qlayers.len(), 0xD157));
+
+    // Measurement: the sharded fleet path vs the sequential stage.
+    let device = DeviceProfile::gaudi2();
+    let menu = device.restrict_menu(&PAPER_FORMATS);
+    let seq = ExecPool::sequential();
+    let partitioned =
+        PartitionStage { model: "demo", graph: &graph, qlayers: &qlayers, menu: &menu }
+            .run(&seq)
+            .unwrap();
+    let ms = MeasureStage {
+        model: "demo",
+        graph: &graph,
+        partitioned: &partitioned,
+        device: &device,
+        seed: DEFAULT_MEASURE_SEED,
+        reps: DEFAULT_MEASURE_REPS,
+    };
+    let want = ms.run(&seq).unwrap();
+    let got = c.measure_stage(&ms).unwrap();
+    assert_eq!(got, want, "distributed Measured artifact drifted");
+
+    // Frontier: remote chunk expansion vs the in-process sweep, on a few
+    // multi-dimensional instances.
+    let mut rng = Rng::new(0xF20_17);
+    for trial in 0..3 {
+        let p = random_multi(&mut rng, 4, 3, 2);
+        let want = parametric::frontier_with(&p, &seq);
+        let got = c.frontier_curve(&p).unwrap();
+        assert_eq!(got, want, "trial {trial}: distributed curve drifted");
+    }
+    c.shutdown();
+}
+
+/// `Engine::set_measure_hook` routes the measure stage through the fleet
+/// without changing a single planning answer.
+#[test]
+fn engine_measure_hook_through_the_fleet_matches_default_path() {
+    let (graph, qlayers, calibration) = demo_model(1, 11);
+
+    let mut plain = Engine::new();
+    plain.register_synthetic("demo", graph.clone(), qlayers.clone(), calibration.clone());
+    let want = plain.planner("demo").unwrap();
+
+    let coord = Arc::new(Mutex::new(Coordinator::new(dist_cfg(2)).unwrap()));
+    let mut hooked = Engine::new();
+    hooked.register_synthetic("demo", graph, qlayers, calibration);
+    let h = coord.clone();
+    hooked.set_measure_hook(Some(Box::new(move |ms| {
+        h.lock().unwrap().measure_stage(ms)
+    })));
+    let got = hooked.planner("demo").unwrap();
+
+    let req = PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004);
+    assert_eq!(got.solve(&req).unwrap(), want.solve(&req).unwrap());
+    assert!(
+        coord.lock().unwrap().metrics().tasks > 0,
+        "the hook never reached the fleet"
+    );
+    coord.lock().unwrap().shutdown();
+}

@@ -12,6 +12,12 @@
 //!   the fuzzer (or a release) once caught: add new findings here,
 //!   minimized, instead of growing the smoke loop.
 //!
+//! Plus the structured-input generators: random-but-valid device
+//! profiles and serve requests, differentially checked through their
+//! JSON round trips (the wire the dist worker fleet and the serve
+//! daemon both ride) and through `serve_batch_lossy`, which must answer
+//! every fuzzed entry with an indexed line — never a panic.
+//!
 //! Corpus schema (one object per file):
 //!
 //! ```json
@@ -21,9 +27,13 @@
 //!
 //! `tau` may be a string so non-finite values survive JSON.
 
+use ampq::backend::{DeviceProfile, RateTable};
+use ampq::coordinator::Strategy;
 use ampq::exec::{ExecCfg, ExecPool};
 use ampq::metrics::Objective;
+use ampq::numerics::Format;
 use ampq::plan::demo::demo_model;
+use ampq::plan::service::{error_entry, indexed};
 use ampq::plan::{Engine, PlanRequest, PlanService, ServeRequest};
 use ampq::solver::problem::gen::{random, random_multi};
 use ampq::solver::{branch_bound, dp, greedy, parametric, Mckp};
@@ -214,6 +224,225 @@ fn corpus_replays_minimized_failures() {
             }
             "tau_reject" => replay_tau_reject(f64_field(&j, "tau", &file), &file),
             other => panic!("{file}: unknown corpus kind '{other}'"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Structured generators: device profiles and serve requests.
+// ---------------------------------------------------------------------------
+
+/// A random device profile that [`DeviceProfile::validate`] must accept:
+/// every field is drawn from its legal range (positive finite rooflines
+/// and rates, >=1 engines, BF16 always supported).
+fn random_device_profile(rng: &mut Rng, tag: u64) -> DeviceProfile {
+    let mut p = DeviceProfile::gaudi2();
+    p.name = format!("fuzz-dev-{tag}");
+    p.n_mme = rng.range(1, 17);
+    p.n_tpc = rng.range(1, 65);
+    p.mme_macs_per_us = 1.0 + rng.f64() * 1.0e7;
+    p.tpc_bytes_per_us = 1.0 + rng.f64() * 1.0e6;
+    p.hbm_bytes_per_us = 1.0 + rng.f64() * 1.0e6;
+    p.launch_us = rng.f64() * 10.0;
+    p.noise_std = rng.f64() * 0.05;
+    p.enable_fusion = rng.bool();
+    p.hbm_capacity_bytes = (rng.f64() * 1.0e11).floor();
+    let mut rates = RateTable::uniform(0.25 + rng.f64() * 4.0);
+    for f in Format::ALL {
+        if rng.bool() {
+            rates.set(f, 0.1 + rng.f64() * 8.0);
+        }
+    }
+    p.mme_rates = rates;
+    let mut supported = vec![Format::Bf16];
+    for f in Format::ALL {
+        if f != Format::Bf16 && rng.bool() {
+            supported.push(f);
+        }
+    }
+    p.supported = supported;
+    p
+}
+
+/// Every generated profile validates, survives a JSON text round trip
+/// bit-identically (re-encoding is byte-stable — artifact trees are
+/// compared with `diff -r` across worker counts), keeps its filesystem
+/// key, and restricts menus to exactly its supported mask in menu order.
+#[test]
+fn fuzz_device_profile_roundtrip_and_menus() {
+    for seed in 0..4u64 {
+        let mut rng = Rng::stream(0xDE_71CE, seed);
+        for trial in 0..16u64 {
+            let p = random_device_profile(&mut rng, seed * 100 + trial);
+            let label = format!("profile seed {seed} trial {trial}");
+            p.validate().unwrap_or_else(|e| panic!("{label}: {e:#}"));
+            let text = p.to_json().to_string();
+            let back = DeviceProfile::from_json(&Json::parse(&text).unwrap())
+                .unwrap_or_else(|e| panic!("{label}: {e:#}"));
+            assert_eq!(back, p, "{label}: JSON round trip drifted");
+            assert_eq!(back.fs_key(), p.fs_key(), "{label}: fs_key drifted");
+            assert_eq!(back.to_json().to_string(), text, "{label}: re-encode unstable");
+            let menu = p.restrict_menu(&Format::ALL);
+            assert!(menu.contains(&Format::Bf16), "{label}: baseline dropped");
+            let expect: Vec<Format> =
+                Format::ALL.iter().copied().filter(|f| p.supports(*f)).collect();
+            assert_eq!(menu, expect, "{label}: restrict_menu must keep menu order");
+        }
+    }
+}
+
+/// Rebuild a JSON object with one top-level key replaced.
+fn with_key(j: &Json, key: &str, val: Json) -> Json {
+    match j {
+        Json::Obj(kv) => Json::Obj(
+            kv.iter()
+                .map(|(k, v)| {
+                    (k.clone(), if k == key { val.clone() } else { v.clone() })
+                })
+                .collect(),
+        ),
+        other => other.clone(),
+    }
+}
+
+/// Each single-field corruption of a valid profile must be rejected by
+/// `from_json` — including after a text round trip, which is the path
+/// user profile files actually take (`--device profile.json`).
+#[test]
+fn doctored_device_profiles_are_rejected() {
+    let base = DeviceProfile::gaudi2().to_json();
+    assert!(DeviceProfile::from_json(&base).is_ok(), "baseline must load");
+    let rates_zero = match base.get("mme_rates").unwrap() {
+        Json::Obj(kv) => {
+            Json::Obj(kv.iter().map(|(k, _)| (k.clone(), Json::Num(0.0))).collect())
+        }
+        other => panic!("mme_rates must be an object, got {other:?}"),
+    };
+    let cases = vec![
+        ("empty name", with_key(&base, "name", Json::Str(String::new()))),
+        ("zero mme engines", with_key(&base, "n_mme", Json::Num(0.0))),
+        ("zero tpc engines", with_key(&base, "n_tpc", Json::Num(0.0))),
+        ("negative roofline", with_key(&base, "hbm_bytes_per_us", Json::Num(-1.0))),
+        ("zero roofline", with_key(&base, "mme_macs_per_us", Json::Num(0.0))),
+        ("negative launch", with_key(&base, "launch_us", Json::Num(-0.5))),
+        ("negative capacity", with_key(&base, "hbm_capacity_bytes", Json::Num(-1.0))),
+        ("zero mme rates", with_key(&base, "mme_rates", rates_zero)),
+        (
+            "baseline format unsupported",
+            with_key(
+                &base,
+                "supported_formats",
+                Json::Arr(vec![Json::Str("fp8_e4m3".to_string())]),
+            ),
+        ),
+        (
+            "unknown format name",
+            with_key(
+                &base,
+                "supported_formats",
+                Json::Arr(vec![Json::Str("bf16".to_string()), Json::Str("int8".to_string())]),
+            ),
+        ),
+        (
+            "non-bool fusion flag",
+            with_key(&base, "enable_fusion", Json::Str("yes".to_string())),
+        ),
+    ];
+    for (what, doctored) in cases {
+        let reparsed = Json::parse(&doctored.to_string()).unwrap();
+        assert!(
+            DeviceProfile::from_json(&reparsed).is_err(),
+            "doctored profile ({what}) was accepted"
+        );
+    }
+}
+
+/// A random plan request whose JSON form is valid: budgets stay finite
+/// and non-negative here (non-finite values cannot ride JSON numbers —
+/// they are fuzzed as struct fields in the lossy-batch test below).
+fn random_plan_request(rng: &mut Rng) -> PlanRequest {
+    let mut r = PlanRequest::new(Objective::ALL[rng.below(Objective::ALL.len())]);
+    r = r.with_strategy(Strategy::ALL[rng.below(Strategy::ALL.len())]);
+    if rng.bool() {
+        r = r.with_loss_budget(1.0e-6 + rng.f64() * 0.01);
+    }
+    if rng.bool() {
+        r = r.with_memory_cap(1.0 + rng.f64() * 1.0e9);
+    }
+    if rng.bool() {
+        r = r.with_seed(rng.next_u64());
+    }
+    if rng.bool() {
+        r = r.with_device(["gaudi2", "gaudi3"][rng.below(2)]);
+    }
+    r
+}
+
+/// Serve requests round-trip through their JSON text exactly — fields,
+/// u64 seeds (string-carried), and float budgets bit-for-bit — and
+/// re-encode to the identical byte string.
+#[test]
+fn fuzz_serve_request_json_roundtrip_is_stable() {
+    let mut rng = Rng::new(0x5EB7_FA77);
+    for trial in 0..64 {
+        let mut sr =
+            ServeRequest::new(["demo", "other-model"][rng.below(2)], random_plan_request(&mut rng));
+        if rng.bool() {
+            sr = sr.via_frontier();
+        }
+        let text = sr.to_json().to_string();
+        let back = ServeRequest::from_json(&Json::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("trial {trial}: {e:#} ({text})"));
+        assert_eq!(back, sr, "trial {trial}: round trip drifted");
+        assert_eq!(back.to_json().to_string(), text, "trial {trial}: re-encode unstable");
+    }
+}
+
+/// Fuzzed serve batches — unknown models, non-finite budgets, frontier
+/// lookups with the wrong strategy — always complete with one indexed
+/// line per entry, and every line equals the sequential `answer` path's
+/// verdict (indexed answer or indexed error).  Never a panic.
+#[test]
+fn fuzz_lossy_batches_never_panic_and_match_sequential_answers() {
+    let (graph, qlayers, calibration) = demo_model(1, 3);
+    let mut engine = Engine::new();
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    let svc = PlanService::from_engine(&mut engine, &["demo"]).unwrap();
+    let pool = ExecPool::new(ExecCfg::new(2));
+    let mut rng = Rng::new(0xBA7C_4);
+    for round in 0..6 {
+        let reqs: Vec<ServeRequest> = (0..12)
+            .map(|_| {
+                let mut r = random_plan_request(&mut rng);
+                match rng.below(8) {
+                    0 => r.tau = Some(f64::NAN),
+                    1 => r.tau = Some(f64::INFINITY),
+                    2 => r.memory_cap = Some(f64::NEG_INFINITY),
+                    _ => {}
+                }
+                let model = if rng.below(4) == 0 { "ghost" } else { "demo" };
+                let mut sr = ServeRequest::new(model, r);
+                if rng.bool() {
+                    sr = sr.via_frontier();
+                }
+                sr
+            })
+            .collect();
+        let out = svc.serve_batch_lossy(&reqs, &pool);
+        assert_eq!(out.len(), reqs.len(), "round {round}: entry dropped");
+        for (i, (line, req)) in out.iter().zip(&reqs).enumerate() {
+            match svc.answer(req) {
+                Ok(answer) => assert_eq!(
+                    line,
+                    &indexed(i, answer),
+                    "round {round} entry {i}: lossy line diverged from answer()"
+                ),
+                Err(e) => assert_eq!(
+                    line,
+                    &error_entry(i, &format!("{e:#}")),
+                    "round {round} entry {i}: error line diverged"
+                ),
+            }
         }
     }
 }

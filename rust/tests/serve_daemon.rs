@@ -303,6 +303,107 @@ fn queue_overflow_answers_503_with_retry_after() {
     td.stop();
 }
 
+/// A mock HTTP server for retry-path tests: scripted statuses, one
+/// connection per response, counts attempts.
+fn mock_server(
+    responses: Vec<&'static str>,
+) -> (String, Arc<std::sync::atomic::AtomicUsize>, std::thread::JoinHandle<()>) {
+    use std::io::{Read, Write};
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let hits = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let h = hits.clone();
+    let join = std::thread::spawn(move || {
+        for resp in responses {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 4096];
+            let _ = s.read(&mut buf); // request head; content ignored
+            h.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            s.write_all(resp.as_bytes()).unwrap();
+        }
+    });
+    (addr, hits, join)
+}
+
+const BUSY: &str = "HTTP/1.1 503 Service Unavailable\r\nRetry-After: 0\r\nContent-Length: 0\r\nConnection: close\r\n\r\n";
+const BUSY_NO_HINT: &str =
+    "HTTP/1.1 503 Service Unavailable\r\nContent-Length: 0\r\nConnection: close\r\n\r\n";
+const OK: &str = "HTTP/1.1 200 OK\r\nContent-Length: 3\r\nConnection: close\r\n\r\nok\n";
+
+#[test]
+fn client_retries_503_until_success_within_budget() {
+    use ampq::serve::client::{request_with_retry, RetryPolicy};
+    let (addr, hits, join) = mock_server(vec![BUSY, BUSY, OK]);
+    let policy = RetryPolicy { budget: 3, max_wait: Duration::from_millis(50) };
+    let r = request_with_retry(&addr, "POST", "/v1/plan", Some("{}"), policy).unwrap();
+    assert_eq!(r.response.status, 200);
+    assert_eq!(r.attempts, 3, "two 503s then success");
+    assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 3);
+    join.join().unwrap();
+}
+
+#[test]
+fn client_retry_budget_is_capped() {
+    use ampq::serve::client::{request_with_retry, RetryPolicy};
+    // Budget 2 = at most 3 attempts total, even against a server that
+    // never stops saying 503.
+    let (addr, hits, join) = mock_server(vec![BUSY, BUSY, BUSY]);
+    let policy = RetryPolicy { budget: 2, max_wait: Duration::from_millis(50) };
+    let r = request_with_retry(&addr, "POST", "/v1/plan", Some("{}"), policy).unwrap();
+    assert_eq!(r.response.status, 503, "exhausted budget returns the last 503");
+    assert_eq!(r.attempts, 3);
+    assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 3);
+    join.join().unwrap();
+}
+
+#[test]
+fn client_does_not_retry_a_hintless_503() {
+    use ampq::serve::client::{request_with_retry, RetryPolicy};
+    let (addr, hits, join) = mock_server(vec![BUSY_NO_HINT]);
+    let policy = RetryPolicy { budget: 5, max_wait: Duration::from_millis(50) };
+    let r = request_with_retry(&addr, "POST", "/v1/plan", Some("{}"), policy).unwrap();
+    assert_eq!(r.response.status, 503);
+    assert_eq!(r.attempts, 1, "no Retry-After header, no retry");
+    assert_eq!(hits.load(std::sync::atomic::Ordering::SeqCst), 1);
+    join.join().unwrap();
+}
+
+#[test]
+fn retrying_clients_ride_out_a_queue_overflow() {
+    use ampq::serve::client::{request_with_retry, RetryPolicy};
+    // Same overload shape as queue_overflow_answers_503_with_retry_after,
+    // but every client retries on the server's Retry-After hint — so ALL
+    // of them must eventually land a 200.
+    let td = TestDaemon::start(ServeConfig {
+        workers: 1,
+        queue_depth: 2,
+        debug_delay: Duration::from_millis(50),
+        ..ServeConfig::default()
+    });
+    const CLIENTS: usize = 8;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let mut handles = Vec::new();
+    for _ in 0..CLIENTS {
+        let addr = td.addr.clone();
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            let body = plan_body("alpha", 0.004);
+            let policy = RetryPolicy { budget: 100, max_wait: Duration::from_millis(25) };
+            barrier.wait();
+            request_with_retry(&addr, "POST", "/v1/plan", Some(body.as_str()), policy)
+                .unwrap()
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for r in &results {
+        assert_eq!(r.response.status, 200, "retries must ride out the burst");
+    }
+    let attempts: usize = results.iter().map(|r| r.attempts).sum();
+    assert!(attempts >= CLIENTS);
+    assert_eq!(td.daemon.metrics().rejected() as usize, attempts - CLIENTS);
+    td.stop();
+}
+
 #[test]
 fn expired_requests_answer_504() {
     let td = TestDaemon::start(ServeConfig {
