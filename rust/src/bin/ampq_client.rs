@@ -3,9 +3,9 @@
 //!
 //! ```text
 //! ampq_client <addr> <method> <path> [--data JSON] [--expect-status N]
-//!                                    [--retry N]
+//!                                    [--retry N] [--trace ID]
 //! ampq_client <addr> --load [--qps N] [--duration S] [--model NAME]
-//!                           [--tau X] [--retry N]
+//!                           [--tau X] [--retry N] [--trace ID]
 //! ```
 //!
 //! One-shot mode: the response body goes to stdout; with
@@ -18,8 +18,14 @@
 //! target QPS for the given duration, printing client-side p50/p99
 //! latency and error counts, cross-checked against the daemon's own
 //! `/metrics` counters (snapshot diff across the run).
+//!
+//! `--trace ID` stamps every request with an `x-ampq-trace` header so
+//! the daemon stitches the whole run into one trace tree (inspect with
+//! `GET /v1/trace/ID` or `ampq trace`).
 
-use ampq::serve::client::{request, request_with_retry, RetryPolicy};
+use ampq::serve::client::{
+    request, request_with_headers, request_with_retry_headers, RetryPolicy,
+};
 use anyhow::{anyhow, bail, Result};
 use std::io::Write;
 use std::time::{Duration, Instant};
@@ -36,8 +42,8 @@ fn run() -> Result<()> {
     if argv.iter().any(|a| a == "--help") || argv.is_empty() {
         bail!(
             "usage: ampq_client <addr> <method> <path> [--data JSON] [--expect-status N] \
-             [--retry N]\n       ampq_client <addr> --load [--qps N] [--duration S] \
-             [--model NAME] [--tau X] [--retry N]"
+             [--retry N] [--trace ID]\n       ampq_client <addr> --load [--qps N] [--duration S] \
+             [--model NAME] [--tau X] [--retry N] [--trace ID]"
         );
     }
     if argv.iter().any(|a| a == "--load") {
@@ -50,9 +56,18 @@ fn run() -> Result<()> {
     let mut data: Option<String> = None;
     let mut expect: Option<u16> = None;
     let mut retry = 0usize;
+    let mut trace: Option<String> = None;
     let mut i = 3;
     while i < argv.len() {
         match argv[i].as_str() {
+            "--trace" => {
+                i += 1;
+                trace = Some(
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("--trace needs a value"))?,
+                );
+            }
             "--data" => {
                 i += 1;
                 data = Some(
@@ -77,11 +92,14 @@ fn run() -> Result<()> {
         }
         i += 1;
     }
+    let headers: Vec<(&str, &str)> =
+        trace.iter().map(|t| ("x-ampq-trace", t.as_str())).collect();
     let resp = if retry > 0 {
         let policy = RetryPolicy { budget: retry, ..RetryPolicy::default() };
-        request_with_retry(addr, method, path, data.as_deref(), policy)?.response
+        request_with_retry_headers(addr, method, path, data.as_deref(), &headers, policy)?
+            .response
     } else {
-        request(addr, method, path, data.as_deref())?
+        request_with_headers(addr, method, path, data.as_deref(), &headers)?
     };
     let mut out = std::io::stdout();
     out.write_all(&resp.body)?;
@@ -130,9 +148,15 @@ fn run_load(argv: &[String]) -> Result<()> {
     let model: String = load_flag(argv, "--model", "demo".to_string())?;
     let tau: f64 = load_flag(argv, "--tau", 0.004)?;
     let retry: usize = load_flag(argv, "--retry", 2)?;
+    let trace: String = load_flag(argv, "--trace", String::new())?;
     if !(qps > 0.0) || !(duration > 0.0) {
         bail!("--qps and --duration must be positive");
     }
+    let headers: Vec<(&str, &str)> = if trace.is_empty() {
+        Vec::new()
+    } else {
+        vec![("x-ampq-trace", trace.as_str())]
+    };
     let policy = RetryPolicy {
         budget: retry,
         max_wait: Duration::from_millis(250),
@@ -166,7 +190,7 @@ fn run_load(argv: &[String]) -> Result<()> {
             ("/v1/plan", plan_body.as_str())
         };
         let t0 = Instant::now();
-        match request_with_retry(addr, "POST", path, Some(body), policy) {
+        match request_with_retry_headers(addr, "POST", path, Some(body), &headers, policy) {
             Ok(r) => {
                 attempts_total += r.attempts as u64;
                 if r.response.status == 200 {

@@ -176,6 +176,9 @@ pub struct Coordinator {
     metrics: DistMetrics,
     debug_killed: bool,
     shut: bool,
+    /// Open `dist.run_tasks` span id; adopted worker spans re-parent
+    /// under it (0 = no batch in flight / tracing off).
+    batch_span: u64,
 }
 
 impl Coordinator {
@@ -204,6 +207,7 @@ impl Coordinator {
             metrics: DistMetrics::default(),
             debug_killed: false,
             shut: false,
+            batch_span: 0,
         };
         for _ in 0..c.cfg.workers.max(1) {
             let slot = c.spawn_slot()?;
@@ -316,8 +320,24 @@ impl Coordinator {
     /// Run a task batch to completion; results in task order.  On failure
     /// (retry budget exhausted, unrecoverable spawn error) in-flight work
     /// is aborted so the fleet stays usable for the next batch.
+    ///
+    /// Observation only: with tracing on, the batch runs inside a
+    /// `dist.run_tasks` span carrying task/retry counters and the
+    /// process-global wire-byte deltas of the batch window, and every
+    /// worker-shipped span tree is adopted under it.
     pub fn run_tasks(&mut self, tasks: &[TaskSpec]) -> Result<Vec<Json>> {
+        let mut sp = crate::obs::span("dist.run_tasks");
+        sp.counter("tasks", tasks.len() as f64);
+        sp.counter("workers", self.slots.len() as f64);
+        self.batch_span = sp.id();
+        let (out0, in0) = crate::obs::wire_totals();
+        let retries0 = self.metrics.retries;
         let r = self.run_tasks_inner(tasks);
+        self.batch_span = 0;
+        let (out1, in1) = crate::obs::wire_totals();
+        sp.counter("wire_bytes_out", (out1 - out0) as f64);
+        sp.counter("wire_bytes_in", (in1 - in0) as f64);
+        sp.counter("retries", (self.metrics.retries - retries0) as f64);
         if r.is_err() {
             self.abort_in_flight();
         }
@@ -393,7 +413,17 @@ impl Coordinator {
             }
         }
         let id = self.fresh_id();
-        let frame = request(id, &spec.kind, spec.fields.clone());
+        let mut fields = spec.fields.clone();
+        // Trace-context propagation: stamp the request so the worker can
+        // record — and ship back — spans under the caller's trace.  Absent
+        // when tracing is off, so traced and untraced request frames only
+        // differ by this observation-only field.
+        if crate::obs::enabled() {
+            let trace = crate::obs::current_trace()
+                .unwrap_or_else(|| crate::obs::LOCAL_TRACE.to_string());
+            fields.push(("trace".to_string(), Json::Str(trace)));
+        }
+        let frame = request(id, &spec.kind, fields);
         write_frame(&mut self.slots[i].writer, &frame)?;
         self.slots[i].assignment = Some(Assignment {
             task: t,
@@ -482,6 +512,19 @@ impl Coordinator {
                 let a = self.slots[worker].assignment.take().expect("checked");
                 if ok {
                     let result = msg.get("result")?.clone();
+                    // Stitch worker spans (if the response shipped any)
+                    // into the local registry under the batch span.
+                    if crate::obs::enabled() {
+                        if let Some(Json::Arr(raw)) = msg.opt("spans") {
+                            let spans: Vec<crate::obs::Span> = raw
+                                .iter()
+                                .filter_map(|s| crate::obs::Span::from_json(s).ok())
+                                .collect();
+                            let trace = crate::obs::current_trace()
+                                .unwrap_or_else(|| crate::obs::LOCAL_TRACE.to_string());
+                            crate::obs::adopt(spans, &trace, self.batch_span);
+                        }
+                    }
                     results[a.task] = Some(result);
                     *done += 1;
                     self.metrics.tasks += 1;

@@ -29,6 +29,8 @@ pub fn write_frame(w: &mut impl Write, j: &Json) -> Result<()> {
     w.write_all(&(bytes.len() as u32).to_be_bytes())?;
     w.write_all(bytes)?;
     w.flush()?;
+    // Observation only: wire-byte introspection (spans, `ampq trace`).
+    crate::obs::wire_count_out(4 + bytes.len());
     Ok(())
 }
 
@@ -54,6 +56,8 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Json>> {
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
     let text = std::str::from_utf8(&payload)?;
+    // Observation only: wire-byte introspection (spans, `ampq trace`).
+    crate::obs::wire_count_in(4 + len);
     Ok(Some(Json::parse(text)?))
 }
 

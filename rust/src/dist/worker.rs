@@ -55,12 +55,55 @@ pub fn serve(mut reader: impl Read, mut writer: impl Write) -> Result<()> {
             let _ = write_frame(&mut writer, &ok_response(id, Json::Null));
             return Ok(());
         }
-        let reply = match handle(&kind, &msg, &mut ctxs) {
-            Ok(result) => ok_response(id, result),
+        let reply = match traced_handle(&kind, &msg, &mut ctxs) {
+            Ok((result, spans)) => {
+                let mut resp = ok_response(id, result);
+                // Ship the task's spans back for the coordinator to adopt.
+                // A strictly additive, observation-only field: the `result`
+                // the coordinator reduces is untouched.
+                if !spans.is_empty() {
+                    if let Json::Obj(kv) = &mut resp {
+                        kv.push((
+                            "spans".to_string(),
+                            Json::Arr(spans.iter().map(|s| s.to_json()).collect()),
+                        ));
+                    }
+                }
+                resp
+            }
             Err(e) => err_response(id, &format!("{e:#}")),
         };
         write_frame(&mut writer, &reply)?;
     }
+}
+
+/// Run one task, recording spans when the request carries a (valid)
+/// `trace` field — the coordinator stamps one whenever tracing is on.
+/// An invalid trace id is ignored, never an error: tracing must not be
+/// able to fail a task.
+fn traced_handle(
+    kind: &str,
+    msg: &Json,
+    ctxs: &mut HashMap<String, Ctx>,
+) -> Result<(Json, Vec<crate::obs::Span>)> {
+    let trace = msg
+        .opt("trace")
+        .and_then(|t| t.str().ok())
+        .filter(|t| crate::obs::validate_trace_id(t).is_ok())
+        .map(str::to_string);
+    let Some(trace) = trace else {
+        return handle(kind, msg, ctxs).map(|r| (r, Vec::new()));
+    };
+    let (result, spans) = crate::obs::with_trace(&trace, || {
+        crate::obs::capture(|| {
+            let mut sp = crate::obs::span(&format!("worker.{kind}"));
+            let res = handle(kind, msg, ctxs);
+            sp.counter("ok", if res.is_ok() { 1.0 } else { 0.0 });
+            drop(sp);
+            res
+        })
+    });
+    result.map(|r| (r, spans))
 }
 
 /// `ampq worker --connect ADDR`: same loop over a TCP socket the worker
@@ -341,6 +384,26 @@ mod tests {
             request(2, "ping", vec![]), // never reached
         ]);
         assert_eq!(replies.len(), 1);
+    }
+
+    #[test]
+    fn traced_requests_ship_spans_and_untouched_results() {
+        let replies = roundtrip(vec![
+            request(1, "ping", vec![("trace".to_string(), Json::Str("t-abc".into()))]),
+            request(2, "ping", vec![]),
+            request(3, "ping", vec![("trace".to_string(), Json::Str("bad id".into()))]),
+        ]);
+        // Traced: spans ride along, result is byte-identical "pong".
+        let spans = replies[0].opt("spans").expect("spans on traced reply").arr().unwrap();
+        assert!(!spans.is_empty());
+        let sp = crate::obs::Span::from_json(&spans[0]).unwrap();
+        assert_eq!(sp.trace, "t-abc");
+        assert_eq!(sp.name, "worker.ping");
+        assert_eq!(replies[0].get("result").unwrap().str().unwrap(), "pong");
+        // Untraced and invalid-trace requests: no spans field at all.
+        assert!(replies[1].opt("spans").is_none());
+        assert!(replies[2].opt("spans").is_none());
+        assert_eq!(replies[2].get("result").unwrap().str().unwrap(), "pong");
     }
 
     #[test]

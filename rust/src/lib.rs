@@ -51,6 +51,7 @@ pub mod graph;
 pub mod metrics;
 pub mod model;
 pub mod numerics;
+pub mod obs;
 pub mod plan;
 pub mod report;
 pub mod runtime;

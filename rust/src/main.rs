@@ -66,7 +66,9 @@ commands:
               concurrent PlanService; entries may carry \"device\".
               with --listen ADDR: run as a resident daemon serving
               POST /v1/plan, POST /v1/frontier (NDJSON streaming),
-              GET /v1/models, /v1/devices, /metrics, /healthz
+              GET /v1/models, /v1/devices, /v1/trace/:id, /metrics
+              (Prometheus text, or JSON with Accept: application/json),
+              /healthz
   devices     list the built-in hardware device profiles
   compare     plan on several devices (--devices a,b,c) and print their
               Pareto frontiers side by side
@@ -77,6 +79,10 @@ commands:
               speaks frames on stdin/stdout, or --connect HOST:PORT)
   figures     regenerate paper figures/tables into results/
   ttft        wall-clock TTFT of the real compiled forward (needs PJRT)
+  trace       record a traced demo run (plan + frontier; with
+              --workers N also a fleet cell, stitching worker-process
+              spans into the tree) and export Chrome trace-event JSON
+              to --out [trace.json] — open in Perfetto / about:tracing
 
 options:
   --model NAME          model from artifacts/manifest.json [tiny-s]
@@ -122,6 +128,12 @@ options:
                         killed and the task re-issued [30000]
   --max-retries N       fleet: re-issues allowed per task [3]
   --retry-backoff MS    fleet: pause before a worker respawn [50]
+  --trace FILE          record spans for this run and write Chrome
+                        trace-event (Perfetto) JSON to FILE on success;
+                        observation-only — every output is bit-identical
+                        with and without it
+  --no-trace            serve --listen: do not record spans (requests
+                        still carry and echo x-ampq-trace ids)
   --json                machine-readable JSON lines (Plan serde format)
   --demo                register a synthetic model 'demo' (no artifacts
                         or PJRT needed; sets the default --model)
@@ -161,18 +173,28 @@ impl EngineSpec {
 }
 
 fn run(raw: &[String]) -> Result<()> {
-    let args = Args::parse(raw, &["quick", "all", "help", "json", "demo", "no-cache"])?;
+    let args =
+        Args::parse(raw, &["quick", "all", "help", "json", "demo", "no-cache", "no-trace"])?;
     if args.flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
     }
     let cmd = args.positional[0].as_str();
+    // --trace FILE: record spans for the whole run and export them as
+    // Chrome trace-event JSON at the end.  Observation-only: outputs are
+    // bit-identical with and without it (tests/obs.rs pins this).
+    let trace_out: Option<PathBuf> = args.get("trace").map(PathBuf::from);
+    if trace_out.is_some() {
+        ampq::obs::set_enabled(true);
+    }
     // The distributed subcommands dispatch before any engine/device setup:
     // `worker` is spawned in bulk by a coordinator and must start speaking
-    // frames immediately; `fleet` builds its own per-cell pipelines.
+    // frames immediately; `fleet` builds its own per-cell pipelines; the
+    // `trace` demo builds its own synthetic engine.
     match cmd {
         "worker" => return cmd_worker(&args),
-        "fleet" => return cmd_fleet(&args),
+        "fleet" => return finish_traced(cmd_fleet(&args), trace_out.as_deref()),
+        "trace" => return cmd_trace(&args),
         _ => {}
     }
     let root = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -225,7 +247,7 @@ fn run(raw: &[String]) -> Result<()> {
         .get_or("model", if demo { "demo" } else { "tiny-s" })
         .to_string();
 
-    match cmd {
+    let result = match cmd {
         "partition" => cmd_partition(&mut engine, &model, json),
         "calibrate" => cmd_calibrate(&mut engine, &model, json),
         "measure" => cmd_measure(&mut engine, &model, json),
@@ -246,7 +268,24 @@ fn run(raw: &[String]) -> Result<()> {
         "figures" => cmd_figures(engine, &args, fwd_mode),
         "ttft" => cmd_ttft(&mut engine, &model, &args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
+    };
+    finish_traced(result, trace_out.as_deref())
+}
+
+/// Flush recorded spans to `--trace FILE` after a successful command.
+/// Failures keep their original error (a half-run trace is rarely what
+/// the flag was for, and the error must not be masked by export issues).
+fn finish_traced(result: Result<()>, out: Option<&std::path::Path>) -> Result<()> {
+    let Some(path) = out else { return result };
+    if result.is_ok() {
+        ampq::obs::write_chrome_trace(path)?;
+        eprintln!(
+            "trace: {} span(s) written to {}",
+            ampq::obs::snapshot().len(),
+            path.display()
+        );
     }
+    result
 }
 
 fn parse_objective(args: &Args) -> Result<Objective> {
@@ -799,10 +838,15 @@ fn cmd_serve_listen(
             }
         }
     }
-    // Staging is done: drain the worker fleet before going resident.
+    // Staging is done: drain the worker fleet before going resident, but
+    // snapshot its supervision counters first — they surface on /metrics
+    // as ampq_dist_* so operators can see how staging went.
+    let mut dist_metrics = None;
     if let Some(c) = &coord {
         engine.set_measure_hook(None);
-        c.lock().unwrap().shutdown();
+        let mut c = c.lock().unwrap();
+        c.shutdown();
+        dist_metrics = Some(c.metrics().clone());
     }
     let devices: Vec<DeviceProfile> = registry.iter().cloned().collect();
     let cfg = ServeConfig {
@@ -811,9 +855,13 @@ fn cmd_serve_listen(
         workers,
         cache_cap,
         request_timeout: std::time::Duration::from_millis(timeout_ms),
+        tracing: !args.flag("no-trace"),
         ..ServeConfig::default()
     };
     let daemon = Daemon::new(svc, devices, cfg);
+    if let Some(m) = dist_metrics {
+        daemon.metrics().set_dist(m);
+    }
     let listener = daemon.bind()?;
     let local = listener.local_addr()?;
     install_signal_handlers();
@@ -888,6 +936,83 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let report = ampq::dist::run_fleet(&cfg)?;
     print!("{}", ampq::dist::render_summary(&report, cfg.workers));
     println!("total {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    Ok(())
+}
+
+/// `ampq trace` — record a fully-traced demo run and export the span
+/// tree as Chrome trace-event JSON.  Plans and sweeps a frontier on the
+/// synthetic model; with `--workers N` it also runs one fleet cell so
+/// worker-process spans are shipped back and stitched into the same
+/// tree (artifacts go to a scratch dir that is removed afterwards).
+fn cmd_trace(args: &Args) -> Result<()> {
+    use ampq::obs;
+    let out = PathBuf::from(args.get_or("out", "trace.json"));
+    let workers = args.usize_or("workers", 0)?;
+    let blocks = args.usize_or("blocks", 2)?;
+    let tau = args.f64_or("tau", 0.004)?;
+    check_budget("--tau", tau)?;
+    let objective = parse_objective(args)?;
+    obs::set_enabled(true);
+    obs::clear();
+    let spec = EngineSpec {
+        root: PathBuf::from(args.get_or("artifacts", "artifacts")),
+        fwd_mode: FwdMode::Ref,
+        measure_seed: ampq::plan::engine::DEFAULT_MEASURE_SEED,
+        reps: args.usize_or("reps", 5)?,
+        no_cache: true,
+        demo: true,
+        blocks,
+        demo_seed: args.u64_or("seed", 0)?,
+        exec: match args.get("threads") {
+            None => ExecCfg::from_env(),
+            Some(_) => ExecCfg::new(args.usize_or("threads", 1)?),
+        },
+    };
+    let mut engine = spec.engine(DeviceProfile::gaudi2());
+    let trace_id = obs::fresh_trace_id();
+    obs::with_trace(&trace_id, || -> Result<()> {
+        let mut sp = obs::span("cli.trace");
+        sp.counter("blocks", blocks as f64);
+        sp.counter("workers", workers as f64);
+        let planner = engine.planner("demo")?;
+        let plan = planner.solve(&PlanRequest::new(objective).with_loss_budget(tau))?;
+        println!("{}", plan.summary());
+        let f = planner.frontier(objective, Strategy::Ip)?;
+        println!(
+            "frontier: {} Pareto points over tau in [0, {:.5}]",
+            f.points.len(),
+            f.tau_max
+        );
+        if workers > 0 {
+            let tmp =
+                std::env::temp_dir().join(format!("ampq-trace-{}", std::process::id()));
+            let cfg = ampq::dist::FleetConfig {
+                models: vec!["demo".into()],
+                devices: vec!["gaudi2".into()],
+                workers,
+                out: tmp.clone(),
+                blocks,
+                dist: ampq::dist::DistConfig::default(),
+            };
+            let report = ampq::dist::run_fleet(&cfg);
+            let _ = std::fs::remove_dir_all(&tmp);
+            let report = report?;
+            println!(
+                "fleet cell: {} cell(s) over {workers} worker(s), {} task(s), {} retries",
+                report.cells.len(),
+                report.metrics.tasks,
+                report.metrics.retries
+            );
+        }
+        drop(sp);
+        Ok(())
+    })?;
+    obs::write_chrome_trace(&out)?;
+    println!(
+        "trace {trace_id}: {} span(s) written to {} (open in Perfetto / about:tracing)",
+        obs::snapshot().len(),
+        out.display()
+    );
     Ok(())
 }
 

@@ -1,0 +1,174 @@
+//! Span exporters: Chrome trace-event / Perfetto JSON (load the file at
+//! `ui.perfetto.dev` or `chrome://tracing`) and the nested span tree
+//! behind the daemon's `GET /v1/trace/:id`.
+//!
+//! The trace-event schema emitted here (validated by
+//! `scripts/check_trace.py` in CI):
+//!
+//! ```json
+//! {"traceEvents": [
+//!    {"name": "solver.parametric", "cat": "ampq", "ph": "X",
+//!     "ts": 120, "dur": 480, "pid": 4242, "tid": 1,
+//!     "args": {"trace": "t1-9", "span_id": 3, "parent": 1,
+//!              "states_kept": 512.0, "states_pruned": 1024.0}}
+//!  ],
+//!  "displayTimeUnit": "ms"}
+//! ```
+//!
+//! Every event is a complete (`"ph": "X"`) slice; `ts`/`dur` are
+//! microseconds on the process-local monotonic clock.  Worker-process
+//! spans keep their own `pid`, so Perfetto renders the fleet as separate
+//! process tracks stitched by the shared `trace`/`parent` args.
+
+use super::trace::{snapshot, spans_for, Span};
+use crate::util::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One span as a Chrome trace-event "complete" slice.
+fn event(s: &Span) -> Json {
+    let mut args = vec![
+        ("trace".to_string(), Json::Str(s.trace.clone())),
+        ("span_id".to_string(), Json::Num(s.id as f64)),
+        ("parent".to_string(), Json::Num(s.parent as f64)),
+    ];
+    for (k, v) in &s.counters {
+        args.push((k.clone(), Json::Num(*v)));
+    }
+    Json::Obj(vec![
+        ("name".to_string(), Json::Str(s.name.clone())),
+        ("cat".to_string(), Json::Str("ampq".to_string())),
+        ("ph".to_string(), Json::Str("X".to_string())),
+        ("ts".to_string(), Json::Num(s.start_us as f64)),
+        ("dur".to_string(), Json::Num(s.dur_us as f64)),
+        ("pid".to_string(), Json::Num(s.pid as f64)),
+        ("tid".to_string(), Json::Num(s.tid as f64)),
+        ("args".to_string(), Json::Obj(args)),
+    ])
+}
+
+/// Encode `spans` as a Perfetto-loadable trace-event JSON document.
+pub fn chrome_trace(spans: &[Span]) -> Json {
+    Json::Obj(vec![
+        ("traceEvents".to_string(), Json::Arr(spans.iter().map(event).collect())),
+        ("displayTimeUnit".to_string(), Json::Str("ms".to_string())),
+    ])
+}
+
+/// Write every retained span to `path` as Perfetto JSON.
+pub fn write_chrome_trace(path: &Path) -> Result<()> {
+    let spans = snapshot();
+    std::fs::write(path, chrome_trace(&spans).to_string())
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    Ok(())
+}
+
+/// The nested span tree of one trace — `GET /v1/trace/:id`'s body — or
+/// `None` when no span of that trace is retained.  Children are ordered
+/// by `(start_us, id)`; spans whose parent was evicted from a ring
+/// surface as extra roots rather than vanishing.
+pub fn trace_tree(trace: &str) -> Option<Json> {
+    let spans = spans_for(trace);
+    if spans.is_empty() {
+        return None;
+    }
+    let present: std::collections::BTreeSet<u64> = spans.iter().map(|s| s.id).collect();
+    let roots: Vec<&Span> =
+        spans.iter().filter(|s| s.parent == 0 || !present.contains(&s.parent)).collect();
+    let nodes = roots.iter().map(|r| tree_node(r, &spans)).collect();
+    Some(Json::Obj(vec![
+        ("trace".to_string(), Json::Str(trace.to_string())),
+        ("span_count".to_string(), Json::Num(spans.len() as f64)),
+        ("roots".to_string(), Json::Arr(nodes)),
+    ]))
+}
+
+fn tree_node(s: &Span, all: &[Span]) -> Json {
+    let children: Vec<Json> =
+        all.iter().filter(|c| c.parent == s.id).map(|c| tree_node(c, all)).collect();
+    Json::Obj(vec![
+        ("name".to_string(), Json::Str(s.name.clone())),
+        ("span_id".to_string(), Json::Num(s.id as f64)),
+        ("start_us".to_string(), Json::Num(s.start_us as f64)),
+        ("dur_us".to_string(), Json::Num(s.dur_us as f64)),
+        ("pid".to_string(), Json::Num(s.pid as f64)),
+        ("tid".to_string(), Json::Num(s.tid as f64)),
+        (
+            "counters".to_string(),
+            Json::Obj(s.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect()),
+        ),
+        ("children".to_string(), Json::Arr(children)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{adopt, capture, span, with_trace};
+
+    fn sample_spans() -> Vec<Span> {
+        let ((), spans) = with_trace("export-test", || {
+            capture(|| {
+                let mut root = span("request");
+                {
+                    let mut dp = span("solver.parametric");
+                    dp.counter("states_kept", 12.0);
+                    dp.counter("states_pruned", 34.0);
+                }
+                root.counter("status", 200.0);
+            })
+        });
+        spans
+    }
+
+    #[test]
+    fn chrome_trace_schema_holds() {
+        let spans = sample_spans();
+        let doc = chrome_trace(&spans);
+        let events = doc.get("traceEvents").unwrap().arr().unwrap();
+        assert_eq!(events.len(), 2);
+        for e in events {
+            assert_eq!(e.get("cat").unwrap().str().unwrap(), "ampq");
+            assert_eq!(e.get("ph").unwrap().str().unwrap(), "X");
+            assert!(e.get("ts").unwrap().f64().unwrap() >= 0.0);
+            assert!(e.get("dur").unwrap().f64().unwrap() >= 0.0);
+            e.get("pid").unwrap().f64().unwrap();
+            e.get("tid").unwrap().f64().unwrap();
+            assert_eq!(
+                e.get("args").unwrap().get("trace").unwrap().str().unwrap(),
+                "export-test"
+            );
+        }
+        // Counters ride in args.
+        let dp = events
+            .iter()
+            .find(|e| e.get("name").unwrap().str().unwrap() == "solver.parametric")
+            .unwrap();
+        assert_eq!(dp.get("args").unwrap().get("states_kept").unwrap().f64().unwrap(), 12.0);
+        // The document parses back (what Perfetto does).
+        Json::parse(&doc.to_string()).unwrap();
+    }
+
+    #[test]
+    fn trace_tree_nests_children_under_roots() {
+        // Adopt into the global registry under a unique trace id (tests
+        // share the process's rings).
+        let spans = sample_spans();
+        let unique = "export-tree-test-1";
+        adopt(spans, unique, 0);
+        let tree = trace_tree(unique).expect("tree must exist");
+        assert_eq!(tree.get("trace").unwrap().str().unwrap(), unique);
+        assert_eq!(tree.get("span_count").unwrap().usize().unwrap(), 2);
+        let roots = tree.get("roots").unwrap().arr().unwrap();
+        assert_eq!(roots.len(), 1);
+        assert_eq!(roots[0].get("name").unwrap().str().unwrap(), "request");
+        let children = roots[0].get("children").unwrap().arr().unwrap();
+        assert_eq!(children.len(), 1);
+        assert_eq!(children[0].get("name").unwrap().str().unwrap(), "solver.parametric");
+        assert_eq!(
+            children[0].get("counters").unwrap().get("states_pruned").unwrap().f64().unwrap(),
+            34.0
+        );
+        assert!(trace_tree("no-such-trace-id-ever").is_none());
+    }
+}

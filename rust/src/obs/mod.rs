@@ -1,0 +1,34 @@
+//! Observability: span-based structured tracing and introspection
+//! counters across every layer of the planning stack — zero external
+//! dependencies, and **observation-only** by contract.
+//!
+//! * [`trace`] — the [`Tracer`](trace) core: monotonic-clock spans in
+//!   lock-sharded ring buffers behind a process-wide registry, a
+//!   thread-local trace context (install with [`with_trace`], honor an
+//!   incoming `x-ampq-trace` header with [`validate_trace_id`]), scoped
+//!   capture for shipping worker-process spans over the dist wire
+//!   ([`capture`] / [`adopt`]), and global wire-byte counters.
+//! * [`export`] — the Chrome trace-event / Perfetto JSON exporter
+//!   (`ampq trace --out trace.json`, `--trace FILE` on plan / frontier /
+//!   fleet) and the span-tree renderer behind `GET /v1/trace/:id`.
+//!
+//! The hard rule, enforced by `tests/obs.rs`: tracing never changes a
+//! planned artifact, a frontier, or a daemon answer — outputs are
+//! byte-identical with tracing on or off, at any `--threads` or
+//! `--workers` count.  Spans and counters are recorded through side
+//! channels (thread-local context, sharded rings, atomics) that no
+//! computation ever reads back; when tracing is off, the per-span cost
+//! is one relaxed atomic load.
+//!
+//! See DESIGN.md §4g for the span model, the trace-context propagation
+//! rules (HTTP header + dist frames), and the determinism argument.
+
+pub mod export;
+pub mod trace;
+
+pub use export::{chrome_trace, trace_tree, write_chrome_trace};
+pub use trace::{
+    adopt, capture, clear, current_trace, enabled, fresh_trace_id, set_enabled, snapshot, span,
+    spans_for, validate_trace_id, wire_count_in, wire_count_out, wire_totals, with_trace, Span,
+    SpanGuard, LOCAL_TRACE, MAX_TRACE_ID_LEN,
+};

@@ -1,0 +1,594 @@
+//! The tracer core: spans, the thread-local trace context, the
+//! process-wide lock-sharded span registry, and cross-process span
+//! shipping (capture / adopt) for the dist worker fleet.
+//!
+//! Design constraints (the reason this module looks the way it does):
+//!
+//! * **Observation-only.**  Nothing here is ever read back by planning
+//!   or solving code.  Spans flow one way — from [`SpanGuard::drop`]
+//!   into a ring buffer — and the only shared mutable state is a set of
+//!   monotonically increasing atomics.  Disabled tracing costs one
+//!   relaxed atomic load per would-be span.
+//! * **No allocation-order dependence.**  Span ids come from one global
+//!   counter, so their VALUES depend on thread interleaving — which is
+//!   why no computation may branch on them, and why deterministic
+//!   consumers (exports, the `/v1/trace/:id` tree) sort by
+//!   `(start_us, id)` and never by id alone across traces.
+//! * **Bounded memory.**  Each of the [`N_SHARDS`] rings holds at most
+//!   [`SHARD_CAP`] spans; a full ring overwrites its oldest entry.  A
+//!   resident daemon can trace forever without growing.
+
+use crate::util::Json;
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Maximum accepted `x-ampq-trace` header / trace-id length.
+pub const MAX_TRACE_ID_LEN: usize = 64;
+
+/// Ring shards; a thread writes to `tid % N_SHARDS`, so unrelated
+/// threads rarely contend on one lock.
+const N_SHARDS: usize = 16;
+
+/// Spans retained per shard before the ring overwrites its oldest.
+const SHARD_CAP: usize = 4096;
+
+/// The trace id used for spans recorded outside any installed context
+/// (CLI runs with `--trace FILE`, library use without a daemon).
+pub const LOCAL_TRACE: &str = "local";
+
+/// One completed span: a named, timed slice of work with introspection
+/// counters attached.  `parent == 0` marks a root.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    pub trace: String,
+    pub id: u64,
+    pub parent: u64,
+    pub name: String,
+    /// Microseconds since this process's tracer epoch (monotonic clock).
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Recording process (worker spans keep theirs after [`adopt`]).
+    pub pid: u64,
+    /// Tracer-assigned thread lane (small, stable per thread).
+    pub tid: u64,
+    /// Introspection counters, in recording order.
+    pub counters: Vec<(String, f64)>,
+}
+
+impl Span {
+    /// Wire encoding (worker -> coordinator span shipping).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("trace".into(), Json::Str(self.trace.clone())),
+            ("id".into(), Json::Num(self.id as f64)),
+            ("parent".into(), Json::Num(self.parent as f64)),
+            ("name".into(), Json::Str(self.name.clone())),
+            ("start_us".into(), Json::Num(self.start_us as f64)),
+            ("dur_us".into(), Json::Num(self.dur_us as f64)),
+            ("pid".into(), Json::Num(self.pid as f64)),
+            ("tid".into(), Json::Num(self.tid as f64)),
+            (
+                "counters".into(),
+                Json::Obj(
+                    self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Span> {
+        let counters = match j.opt("counters") {
+            Some(Json::Obj(kv)) => kv
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.f64()?)))
+                .collect::<Result<Vec<_>>>()?,
+            Some(other) => bail!("span counters must be an object, got {other:?}"),
+            None => Vec::new(),
+        };
+        Ok(Span {
+            trace: j.get("trace")?.str()?.to_string(),
+            id: j.get("id")?.f64()? as u64,
+            parent: j.get("parent")?.f64()? as u64,
+            name: j.get("name")?.str()?.to_string(),
+            start_us: j.get("start_us")?.f64()? as u64,
+            dur_us: j.get("dur_us")?.f64()? as u64,
+            pid: j.get("pid")?.f64()? as u64,
+            tid: j.get("tid")?.f64()? as u64,
+            counters,
+        })
+    }
+}
+
+/// Fixed-capacity overwrite-oldest span buffer.
+struct Ring {
+    buf: Vec<Span>,
+    /// Overwrite cursor once `buf` is full.
+    next: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    const fn new() -> Ring {
+        Ring { buf: Vec::new(), next: 0, dropped: 0 }
+    }
+
+    fn push(&mut self, s: Span) {
+        if self.buf.len() < SHARD_CAP {
+            self.buf.push(s);
+        } else {
+            self.buf[self.next] = s;
+            self.next = (self.next + 1) % SHARD_CAP;
+            self.dropped += 1;
+        }
+    }
+}
+
+struct Registry {
+    enabled: AtomicBool,
+    shards: Vec<Mutex<Ring>>,
+    /// Span ids start at 1; 0 is the "no parent" sentinel.
+    next_span: AtomicU64,
+    next_tid: AtomicU64,
+    next_trace: AtomicU64,
+    wire_out: AtomicU64,
+    wire_in: AtomicU64,
+}
+
+static REG: OnceLock<Registry> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn reg() -> &'static Registry {
+    REG.get_or_init(|| Registry {
+        enabled: AtomicBool::new(false),
+        shards: (0..N_SHARDS).map(|_| Mutex::new(Ring::new())).collect(),
+        next_span: AtomicU64::new(1),
+        next_tid: AtomicU64::new(1),
+        next_trace: AtomicU64::new(1),
+        wire_out: AtomicU64::new(0),
+        wire_in: AtomicU64::new(0),
+    })
+}
+
+/// Microseconds since the process's tracer epoch (monotonic).
+fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+struct Ctx {
+    trace: Option<String>,
+    /// Open span ids, innermost last.
+    stack: Vec<u64>,
+    /// Nested [`capture`] depth; > 0 diverts completed spans to
+    /// `captured` instead of the global rings.
+    capture: usize,
+    captured: Vec<Span>,
+    tid: u64,
+}
+
+thread_local! {
+    static CTX: RefCell<Ctx> = RefCell::new(Ctx {
+        trace: None,
+        stack: Vec::new(),
+        capture: 0,
+        captured: Vec::new(),
+        tid: reg().next_tid.fetch_add(1, Ordering::Relaxed),
+    });
+}
+
+/// Is global span recording on?  (Scoped [`capture`] works regardless.)
+pub fn enabled() -> bool {
+    reg().enabled.load(Ordering::Relaxed)
+}
+
+/// Turn global span recording on or off.  Purely additive: toggling
+/// never touches already-recorded spans.
+pub fn set_enabled(on: bool) {
+    reg().enabled.store(on, Ordering::Relaxed);
+}
+
+/// Drop every retained span (tests; never required for correctness).
+pub fn clear() {
+    for shard in &reg().shards {
+        let mut ring = shard.lock().expect("span ring poisoned");
+        ring.buf.clear();
+        ring.next = 0;
+        ring.dropped = 0;
+    }
+}
+
+/// Validate a caller-supplied trace id (the `x-ampq-trace` header):
+/// 1..=[`MAX_TRACE_ID_LEN`] chars from `[A-Za-z0-9._-]`.  Anything else
+/// — control bytes, header-injection attempts, oversized ids — errors.
+pub fn validate_trace_id(s: &str) -> Result<()> {
+    if s.is_empty() {
+        bail!("trace id is empty");
+    }
+    if s.len() > MAX_TRACE_ID_LEN {
+        bail!("trace id exceeds {MAX_TRACE_ID_LEN} bytes ({} given)", s.len());
+    }
+    if let Some(c) =
+        s.chars().find(|c| !(c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')))
+    {
+        bail!("trace id contains illegal character {c:?}");
+    }
+    Ok(())
+}
+
+/// A fresh process-unique trace id (stamped on requests that arrive
+/// without an `x-ampq-trace` header).
+pub fn fresh_trace_id() -> String {
+    let n = reg().next_trace.fetch_add(1, Ordering::Relaxed);
+    format!("t{:x}-{:x}", std::process::id(), n)
+}
+
+/// Install `trace` as this thread's trace context for the duration of
+/// `f`; the previous context (if any) is restored afterwards.
+pub fn with_trace<R>(trace: &str, f: impl FnOnce() -> R) -> R {
+    let prev = CTX.with(|c| {
+        let mut c = c.borrow_mut();
+        std::mem::replace(&mut c.trace, Some(trace.to_string()))
+    });
+    let r = f();
+    CTX.with(|c| c.borrow_mut().trace = prev);
+    r
+}
+
+/// The trace id installed on this thread, if any.
+pub fn current_trace() -> Option<String> {
+    CTX.with(|c| c.borrow().trace.clone())
+}
+
+/// Open a span.  Inert (and allocation-free) unless global recording is
+/// on or this thread is inside a [`capture`]; the span closes — and is
+/// delivered — when the guard drops.
+pub fn span(name: &str) -> SpanGuard {
+    let capturing = CTX.with(|c| c.borrow().capture > 0);
+    if !capturing && !enabled() {
+        return SpanGuard {
+            active: false,
+            id: 0,
+            parent: 0,
+            trace: String::new(),
+            name: String::new(),
+            start: None,
+            start_us: 0,
+            counters: Vec::new(),
+        };
+    }
+    let id = reg().next_span.fetch_add(1, Ordering::Relaxed);
+    let (trace, parent) = CTX.with(|c| {
+        let mut c = c.borrow_mut();
+        let parent = c.stack.last().copied().unwrap_or(0);
+        c.stack.push(id);
+        (c.trace.clone().unwrap_or_else(|| LOCAL_TRACE.to_string()), parent)
+    });
+    SpanGuard {
+        active: true,
+        id,
+        parent,
+        trace,
+        name: name.to_string(),
+        start: Some(Instant::now()),
+        start_us: now_us(),
+        counters: Vec::new(),
+    }
+}
+
+/// An open span; records itself on drop.
+pub struct SpanGuard {
+    active: bool,
+    id: u64,
+    parent: u64,
+    trace: String,
+    name: String,
+    start: Option<Instant>,
+    start_us: u64,
+    counters: Vec<(String, f64)>,
+}
+
+impl SpanGuard {
+    /// Set counter `name` to `v` (overwrites an earlier value).
+    pub fn counter(&mut self, name: &str, v: f64) {
+        if !self.active {
+            return;
+        }
+        match self.counters.iter_mut().find(|(k, _)| k == name) {
+            Some((_, old)) => *old = v,
+            None => self.counters.push((name.to_string(), v)),
+        }
+    }
+
+    /// Accumulate `v` into counter `name` (starting from 0).
+    pub fn add(&mut self, name: &str, v: f64) {
+        if !self.active {
+            return;
+        }
+        match self.counters.iter_mut().find(|(k, _)| k == name) {
+            Some((_, old)) => *old += v,
+            None => self.counters.push((name.to_string(), v)),
+        }
+    }
+
+    /// This span's id — the parent for spans [`adopt`]ed from a worker.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let dur_us = self.start.map(|t| t.elapsed().as_micros() as u64).unwrap_or(0);
+        let span_tid = CTX.with(|c| {
+            let mut c = c.borrow_mut();
+            // Tolerate out-of-order drops: remove this id wherever it is.
+            if let Some(pos) = c.stack.iter().rposition(|&x| x == self.id) {
+                c.stack.remove(pos);
+            }
+            c.tid
+        });
+        let span = Span {
+            trace: std::mem::take(&mut self.trace),
+            id: self.id,
+            parent: self.parent,
+            name: std::mem::take(&mut self.name),
+            start_us: self.start_us,
+            dur_us,
+            pid: u64::from(std::process::id()),
+            tid: span_tid,
+            counters: std::mem::take(&mut self.counters),
+        };
+        deliver(span, span_tid);
+    }
+}
+
+fn deliver(span: Span, tid: u64) {
+    let diverted = CTX.with(|c| {
+        let mut c = c.borrow_mut();
+        if c.capture > 0 {
+            c.captured.push(span.clone());
+            true
+        } else {
+            false
+        }
+    });
+    if diverted {
+        return;
+    }
+    let shard = &reg().shards[(tid as usize) % N_SHARDS];
+    shard.lock().expect("span ring poisoned").push(span);
+}
+
+/// Run `f` with span capture on: every span this thread completes inside
+/// is returned instead of entering the global rings (spans record even
+/// with global tracing off).  This is how a dist worker collects the
+/// spans it ships back in its response frame.
+pub fn capture<R>(f: impl FnOnce() -> R) -> (R, Vec<Span>) {
+    let mark = CTX.with(|c| {
+        let mut c = c.borrow_mut();
+        c.capture += 1;
+        c.captured.len()
+    });
+    let r = f();
+    let spans = CTX.with(|c| {
+        let mut c = c.borrow_mut();
+        c.capture -= 1;
+        c.captured.split_off(mark)
+    });
+    (r, spans)
+}
+
+/// Merge spans recorded in another process into the local registry:
+/// fresh local ids, roots re-parented under `parent`, trace id forced to
+/// `trace`, and timestamps shifted so the latest incoming end time lands
+/// at the local "now" (the response just arrived, so the work just
+/// finished).  Relative structure and durations are preserved.
+pub fn adopt(spans: Vec<Span>, trace: &str, parent: u64) {
+    if spans.is_empty() {
+        return;
+    }
+    let max_end = spans.iter().map(|s| s.start_us + s.dur_us).max().unwrap_or(0);
+    let shift = now_us().saturating_sub(max_end);
+    let ids: std::collections::BTreeMap<u64, u64> = spans
+        .iter()
+        .map(|s| (s.id, reg().next_span.fetch_add(1, Ordering::Relaxed)))
+        .collect();
+    for mut s in spans {
+        let old_parent = s.parent;
+        s.id = ids[&s.id];
+        s.parent = ids.get(&old_parent).copied().unwrap_or(parent);
+        s.trace = trace.to_string();
+        s.start_us += shift;
+        let tid = s.tid;
+        let shard = &reg().shards[(tid as usize) % N_SHARDS];
+        shard.lock().expect("span ring poisoned").push(s);
+    }
+}
+
+/// Every retained span, sorted by `(start_us, id)` so output is stable
+/// regardless of which shard a span landed in.
+pub fn snapshot() -> Vec<Span> {
+    let mut out = Vec::new();
+    for shard in &reg().shards {
+        out.extend(shard.lock().expect("span ring poisoned").buf.iter().cloned());
+    }
+    out.sort_by(|a, b| a.start_us.cmp(&b.start_us).then(a.id.cmp(&b.id)));
+    out
+}
+
+/// Retained spans of one trace, `(start_us, id)`-sorted.
+pub fn spans_for(trace: &str) -> Vec<Span> {
+    let mut out: Vec<Span> = snapshot().into_iter().filter(|s| s.trace == trace).collect();
+    out.sort_by(|a, b| a.start_us.cmp(&b.start_us).then(a.id.cmp(&b.id)));
+    out
+}
+
+/// Count bytes written to the dist wire (frame header included).
+pub fn wire_count_out(n: usize) {
+    reg().wire_out.fetch_add(n as u64, Ordering::Relaxed);
+}
+
+/// Count bytes read from the dist wire (frame header included).
+pub fn wire_count_in(n: usize) {
+    reg().wire_in.fetch_add(n as u64, Ordering::Relaxed);
+}
+
+/// Total (written, read) dist wire bytes this process has moved.
+pub fn wire_totals() -> (u64, u64) {
+    (reg().wire_out.load(Ordering::Relaxed), reg().wire_in.load(Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        // No global toggle here (tests share the process): capture is off
+        // and we only assert the guard is a no-op carrier.
+        let was = enabled();
+        if !was {
+            let mut g = span("never.recorded");
+            g.counter("x", 1.0);
+            assert_eq!(g.id(), 0);
+        }
+    }
+
+    #[test]
+    fn capture_collects_nested_spans_with_parents() {
+        let ((), spans) = capture(|| {
+            let outer = span("outer");
+            {
+                let mut inner = span("inner");
+                inner.counter("kept", 3.0);
+                inner.add("kept", 2.0);
+            }
+            drop(outer);
+        });
+        assert_eq!(spans.len(), 2);
+        // Inner closes first.
+        assert_eq!(spans[0].name, "inner");
+        assert_eq!(spans[1].name, "outer");
+        assert_eq!(spans[0].parent, spans[1].id);
+        assert_eq!(spans[1].parent, 0);
+        assert_eq!(spans[0].counters, vec![("kept".to_string(), 5.0)]);
+    }
+
+    #[test]
+    fn capture_respects_trace_context() {
+        let ((), spans) = with_trace("abc-123", || {
+            capture(|| {
+                let _s = span("work");
+            })
+        });
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].trace, "abc-123");
+        assert_eq!(current_trace(), None, "context must be restored");
+        let ((), spans) = capture(|| {
+            let _s = span("work");
+        });
+        assert_eq!(spans[0].trace, LOCAL_TRACE);
+    }
+
+    #[test]
+    fn trace_id_validation() {
+        validate_trace_id("abc-123_x.Y").unwrap();
+        validate_trace_id(&"a".repeat(MAX_TRACE_ID_LEN)).unwrap();
+        assert!(validate_trace_id("").is_err());
+        assert!(validate_trace_id(&"a".repeat(MAX_TRACE_ID_LEN + 1)).is_err());
+        assert!(validate_trace_id("x y").is_err());
+        assert!(validate_trace_id("inject\r\nx-evil: 1").is_err());
+        assert!(validate_trace_id("naïve").is_err());
+    }
+
+    #[test]
+    fn fresh_ids_validate_and_differ() {
+        let a = fresh_trace_id();
+        let b = fresh_trace_id();
+        validate_trace_id(&a).unwrap();
+        validate_trace_id(&b).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn span_json_roundtrip() {
+        let s = Span {
+            trace: "t1-2".into(),
+            id: 7,
+            parent: 3,
+            name: "solver.dp.group".into(),
+            start_us: 10,
+            dur_us: 4,
+            pid: 99,
+            tid: 2,
+            counters: vec![("kept".into(), 12.0), ("thinned".into(), 0.0)],
+        };
+        let text = s.to_json().to_string();
+        let back = Span::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn adopt_reparents_and_renumbers() {
+        let ((), worker_spans) = capture(|| {
+            let root = span("worker.task");
+            {
+                let _child = span("worker.step");
+            }
+            drop(root);
+        });
+        assert_eq!(worker_spans.len(), 2);
+        let ((), local) = capture(|| {
+            // Adoption goes to the global ring; capture only proves the
+            // remap logic on a copy here.
+            let parent = span("coord.task");
+            let pid = parent.id();
+            drop(parent);
+            adopt(worker_spans.clone(), "trace-x", pid);
+        });
+        assert_eq!(local.len(), 1);
+        let got = spans_for("trace-x");
+        let root = got.iter().find(|s| s.name == "worker.task").expect("root adopted");
+        let child = got.iter().find(|s| s.name == "worker.step").expect("child adopted");
+        assert_eq!(root.parent, local[0].id);
+        assert_eq!(child.parent, root.id);
+        assert_ne!(root.id, worker_spans[1].id, "ids must be renumbered");
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_beyond_cap() {
+        let mut ring = Ring::new();
+        for i in 0..(SHARD_CAP + 10) {
+            ring.push(Span {
+                trace: "r".into(),
+                id: i as u64 + 1,
+                parent: 0,
+                name: "x".into(),
+                start_us: i as u64,
+                dur_us: 0,
+                pid: 0,
+                tid: 0,
+                counters: Vec::new(),
+            });
+        }
+        assert_eq!(ring.buf.len(), SHARD_CAP);
+        assert_eq!(ring.dropped, 10);
+        // The ten oldest ids are gone.
+        assert!(ring.buf.iter().all(|s| s.id > 10));
+    }
+
+    #[test]
+    fn wire_counters_accumulate() {
+        let (o0, i0) = wire_totals();
+        wire_count_out(10);
+        wire_count_in(3);
+        let (o1, i1) = wire_totals();
+        assert!(o1 >= o0 + 10);
+        assert!(i1 >= i0 + 3);
+    }
+}

@@ -390,7 +390,9 @@ impl Engine {
 
     /// Stage-1 artifact (memory -> disk cache -> compute).
     pub fn partitioned(&mut self, model: &str) -> Result<Partitioned> {
+        let mut sp = crate::obs::span("stage.partition");
         if let Some(p) = self.models.get(model).and_then(|s| s.partitioned.clone()) {
+            sp.counter("cache_hit", 1.0);
             return Ok(p);
         }
         let expected_nq = self.qlayers(model)?.len();
@@ -401,6 +403,8 @@ impl Engine {
                 if art.model == model && art.formats == menu && art.n_qlayers() == expected_nq {
                     self.counters.cache_loads += 1;
                     self.state_mut(model).partitioned = Some(art.clone());
+                    sp.counter("cache_hit", 1.0);
+                    sp.counter("disk", 1.0);
                     return Ok(art);
                 }
             }
@@ -412,6 +416,8 @@ impl Engine {
             PartitionStage { model, graph: &graph, qlayers: &qlayers, menu: &menu }
                 .run(&self.pool())?;
         self.counters.partition_passes += 1;
+        sp.counter("cache_hit", 0.0);
+        sp.counter("groups", art.partition.groups.len() as f64);
         self.store_cache(model, &stage, &art.to_json());
         self.state_mut(model).partitioned = Some(art.clone());
         Ok(art)
@@ -424,7 +430,9 @@ impl Engine {
     /// artifact-backed models, or takes the injected calibration for
     /// synthetic ones; either counts as one calibration pass.
     pub fn calibrated(&mut self, model: &str) -> Result<Calibrated> {
+        let mut sp = crate::obs::span("stage.calibrate");
         if let Some(c) = self.models.get(model).and_then(|s| s.calibrated.clone()) {
+            sp.counter("cache_hit", 1.0);
             return Ok(c);
         }
         let expected_nq = self.qlayers(model)?.len();
@@ -441,6 +449,8 @@ impl Engine {
                 if art.model == model && art.calibration.s.len() == expected_nq && synthetic_ok {
                     self.counters.cache_loads += 1;
                     self.state_mut(model).calibrated = Some(art.clone());
+                    sp.counter("cache_hit", 1.0);
+                    sp.counter("disk", 1.0);
                     return Ok(art);
                 }
             }
@@ -463,6 +473,8 @@ impl Engine {
             .run(&pool)?
         };
         self.counters.calibration_passes += 1;
+        sp.counter("cache_hit", 0.0);
+        sp.counter("qlayers", art.calibration.s.len() as f64);
         self.store_cache(model, "calibrated", &art.to_json());
         self.state_mut(model).calibrated = Some(art.clone());
         Ok(art)
@@ -486,7 +498,9 @@ impl Engine {
     /// the per-group TTFT protocol on the simulator parameterized by this
     /// engine's device profile.
     pub fn measured(&mut self, model: &str) -> Result<Measured> {
+        let mut sp = crate::obs::span("stage.measure");
         if let Some(m) = self.models.get(model).and_then(|s| s.measured.clone()) {
+            sp.counter("cache_hit", 1.0);
             return Ok(m);
         }
         let partitioned = self.partitioned(model)?;
@@ -506,6 +520,8 @@ impl Engine {
                 {
                     self.counters.cache_loads += 1;
                     self.state_mut(model).measured = Some(art.clone());
+                    sp.counter("cache_hit", 1.0);
+                    sp.counter("disk", 1.0);
                     return Ok(art);
                 }
             }
@@ -529,6 +545,8 @@ impl Engine {
             None => ms.run(&pool)?,
         };
         self.counters.measurement_passes += 1;
+        sp.counter("cache_hit", 0.0);
+        sp.counter("groups", art.measurements.groups.len() as f64);
         self.store_cache(model, &stage, &art.to_json());
         self.state_mut(model).measured = Some(art.clone());
         Ok(art)

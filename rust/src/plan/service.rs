@@ -284,12 +284,16 @@ impl PlanService {
             }
         };
         let mut slot = cell.lock().expect("frontier cell lock poisoned");
+        let mut sp = crate::obs::span("service.frontier");
         if let Some(f) = slot.as_ref() {
             self.inner.frontier_hits.fetch_add(1, Ordering::Relaxed);
+            sp.counter("cache_hit", 1.0);
             return Ok(f.clone());
         }
+        sp.counter("cache_hit", 0.0);
         let f = Arc::new(planner.frontier(objective, strategy)?);
         self.inner.frontier_solves.fetch_add(1, Ordering::Relaxed);
+        sp.counter("points", f.points.len() as f64);
         *slot = Some(f.clone());
         Ok(f)
     }

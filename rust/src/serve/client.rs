@@ -61,11 +61,27 @@ impl Client {
     /// decoded).  The connection stays usable for the next request as
     /// long as the server kept it alive.
     pub fn request(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<Response> {
+        self.request_with_headers(method, path, body, &[])
+    }
+
+    /// [`Client::request`] with extra request headers (e.g.
+    /// `("x-ampq-trace", id)` to stitch this request into a trace).
+    pub fn request_with_headers(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        headers: &[(&str, &str)],
+    ) -> Result<Response> {
         let payload = body.unwrap_or("");
-        let head = format!(
-            "{method} {path} HTTP/1.1\r\nHost: ampq\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: ampq\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
             payload.len()
         );
+        for (k, v) in headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str("\r\n");
         let stream = self.r.get_mut();
         stream.write_all(head.as_bytes())?;
         stream.write_all(payload.as_bytes())?;
@@ -163,6 +179,17 @@ pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>) -> Resu
     Client::connect(addr)?.request(method, path, body)
 }
 
+/// One-shot convenience with extra request headers.
+pub fn request_with_headers(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    headers: &[(&str, &str)],
+) -> Result<Response> {
+    Client::connect(addr)?.request_with_headers(method, path, body, headers)
+}
+
 /// Retry policy for [`request_with_retry`]: a 503 carrying `Retry-After`
 /// earns up to `budget` additional attempts, each waiting the server's
 /// hint clamped to `max_wait`.
@@ -200,10 +227,22 @@ pub fn request_with_retry(
     body: Option<&str>,
     policy: RetryPolicy,
 ) -> Result<RetriedResponse> {
+    request_with_retry_headers(addr, method, path, body, &[], policy)
+}
+
+/// [`request_with_retry`] with extra request headers on every attempt.
+pub fn request_with_retry_headers(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    headers: &[(&str, &str)],
+    policy: RetryPolicy,
+) -> Result<RetriedResponse> {
     let mut attempts = 0usize;
     loop {
         attempts += 1;
-        let response = request(addr, method, path, body)?;
+        let response = request_with_headers(addr, method, path, body, headers)?;
         if response.status != 503 || attempts > policy.budget {
             return Ok(RetriedResponse { response, attempts });
         }

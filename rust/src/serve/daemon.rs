@@ -60,6 +60,10 @@ pub struct ServeConfig {
     /// Test hook: artificial per-job latency, so overflow and deadline
     /// tests are deterministic instead of racing real solve times.
     pub debug_delay: Duration,
+    /// Record spans for every request (observation-only; answers are
+    /// bit-identical either way).  On by default so `/v1/trace/:id` works
+    /// out of the box; `--no-trace` turns it off.
+    pub tracing: bool,
 }
 
 impl Default for ServeConfig {
@@ -72,6 +76,7 @@ impl Default for ServeConfig {
             request_timeout: Duration::from_secs(10),
             limits: Limits::default(),
             debug_delay: Duration::ZERO,
+            tracing: true,
         }
     }
 }
@@ -113,6 +118,9 @@ struct Job {
     index: usize,
     deadline: Instant,
     reply: mpsc::Sender<(usize, JobOutcome)>,
+    /// Trace id of the request that submitted this job, so solver spans
+    /// recorded on a worker thread stitch under the request's trace.
+    trace: String,
 }
 
 pub struct Daemon {
@@ -129,6 +137,11 @@ impl Daemon {
     pub fn new(svc: PlanService, devices: Vec<DeviceProfile>, cfg: ServeConfig) -> Daemon {
         if cfg.cache_cap > 0 {
             svc.set_cache_cap(cfg.cache_cap);
+        }
+        // Enable-only: never flip a process-wide ON back off from a
+        // constructor (tests may run several daemons in one process).
+        if cfg.tracing {
+            crate::obs::set_enabled(true);
         }
         let devices = Json::Obj(vec![(
             "devices".to_string(),
@@ -231,39 +244,51 @@ impl Daemon {
             // connection side owns the timeout metric.
             JobOutcome::TimedOut
         } else {
-            let t0 = Instant::now();
-            match &job.kind {
-                JobKind::Answer(req) => match self.svc.answer(req) {
-                    Ok(j) => {
-                        self.metrics.plan_latency.record(t0.elapsed().as_secs_f64() * 1e6);
-                        JobOutcome::Answer(j)
-                    }
-                    Err(e) => JobOutcome::Failed(format!("{e:#}")),
-                },
-                JobKind::Frontier { model, device, objective, strategy } => {
-                    let solved = self
-                        .svc
-                        .planner_for(model, device.as_deref())
-                        .map(|p| p.device().name.clone())
-                        .and_then(|dev| {
-                            self.svc
-                                .frontier_for(model, device.as_deref(), *objective, *strategy)
-                                .map(|f| (f, dev))
-                        });
-                    match solved {
-                        Ok((frontier, device)) => {
-                            self.metrics
-                                .frontier_latency
-                                .record(t0.elapsed().as_secs_f64() * 1e6);
-                            JobOutcome::Frontier { frontier, device }
-                        }
-                        Err(e) => JobOutcome::Failed(format!("{e:#}")),
-                    }
-                }
-            }
+            // Re-install the submitting request's trace on THIS worker
+            // thread, so solver spans nest under the request.
+            crate::obs::with_trace(&job.trace, || {
+                let mut sp = crate::obs::span("daemon.job");
+                sp.counter("index", job.index as f64);
+                let out = self.job_outcome(&job);
+                drop(sp);
+                out
+            })
         };
         // A dropped receiver (peer gone, batch already timed out) is fine.
         let _ = job.reply.send((job.index, outcome));
+    }
+
+    fn job_outcome(&self, job: &Job) -> JobOutcome {
+        let t0 = Instant::now();
+        match &job.kind {
+            JobKind::Answer(req) => match self.svc.answer(req) {
+                Ok(j) => {
+                    self.metrics.plan_latency.record(t0.elapsed().as_secs_f64() * 1e6);
+                    JobOutcome::Answer(j)
+                }
+                Err(e) => JobOutcome::Failed(format!("{e:#}")),
+            },
+            JobKind::Frontier { model, device, objective, strategy } => {
+                let solved = self
+                    .svc
+                    .planner_for(model, device.as_deref())
+                    .map(|p| p.device().name.clone())
+                    .and_then(|dev| {
+                        self.svc
+                            .frontier_for(model, device.as_deref(), *objective, *strategy)
+                            .map(|f| (f, dev))
+                    });
+                match solved {
+                    Ok((frontier, device)) => {
+                        self.metrics
+                            .frontier_latency
+                            .record(t0.elapsed().as_secs_f64() * 1e6);
+                        JobOutcome::Frontier { frontier, device }
+                    }
+                    Err(e) => JobOutcome::Failed(format!("{e:#}")),
+                }
+            }
+        }
     }
 
     // ---- connection side -------------------------------------------------
@@ -303,7 +328,44 @@ impl Daemon {
         }
     }
 
+    /// Validate / stamp the request's trace id, install it on this thread,
+    /// and dispatch.  An `x-ampq-trace` header is honored when valid (400
+    /// when not); absent one, every request gets a fresh id — echoed back
+    /// on the response either way (see `http::respond`), so a client can
+    /// always come back with `GET /v1/trace/:id`.
     fn route(
+        &self,
+        stream: &mut TcpStream,
+        req: &Request,
+        queue: &AdmissionQueue<Job>,
+        keep: bool,
+    ) -> std::io::Result<()> {
+        let trace = match req.header("x-ampq-trace") {
+            Some(h) => match crate::obs::validate_trace_id(h) {
+                Ok(()) => h.to_string(),
+                Err(e) => {
+                    return self.error(
+                        stream,
+                        endpoint_label(&req.path),
+                        400,
+                        &format!("invalid x-ampq-trace header: {e:#}"),
+                        keep,
+                        &[],
+                    )
+                }
+            },
+            None => crate::obs::fresh_trace_id(),
+        };
+        crate::obs::with_trace(&trace, || {
+            let mut sp = crate::obs::span(&format!("daemon.{}", endpoint_label(&req.path)));
+            sp.counter("body_bytes", req.body.len() as f64);
+            let r = self.route_inner(stream, req, queue, keep);
+            drop(sp);
+            r
+        })
+    }
+
+    fn route_inner(
         &self,
         stream: &mut TcpStream,
         req: &Request,
@@ -317,9 +379,55 @@ impl Daemon {
                 self.simple(stream, "/healthz", 200, "text/plain", b"ok\n", keep)
             }
             ("GET", "/metrics") => {
-                let text = self.render_metrics(queue);
-                self.simple(stream, "/metrics", 200, "text/plain", text.as_bytes(), keep)
+                // Content negotiation: Prometheus text by default, the
+                // same counters as JSON on `Accept: application/json`.
+                if req.header("accept").map_or(false, |a| a.contains("application/json")) {
+                    let body = self.metrics.render_json(&self.metric_extras(queue));
+                    self.simple(
+                        stream,
+                        "/metrics",
+                        200,
+                        "application/json",
+                        body.to_string().as_bytes(),
+                        keep,
+                    )
+                } else {
+                    let text = self.render_metrics(queue);
+                    self.simple(stream, "/metrics", 200, "text/plain", text.as_bytes(), keep)
+                }
             }
+            ("GET", path) if path.starts_with("/v1/trace/") => {
+                let id = &path["/v1/trace/".len()..];
+                if crate::obs::validate_trace_id(id).is_err() {
+                    return self.error(stream, "/v1/trace", 400, "invalid trace id", keep, &[]);
+                }
+                match crate::obs::trace_tree(id) {
+                    Some(tree) => self.simple(
+                        stream,
+                        "/v1/trace",
+                        200,
+                        "application/json",
+                        tree.to_string().as_bytes(),
+                        keep,
+                    ),
+                    None => self.error(
+                        stream,
+                        "/v1/trace",
+                        404,
+                        &format!("no spans recorded for trace '{id}'"),
+                        keep,
+                        &[],
+                    ),
+                }
+            }
+            (_, path) if path.starts_with("/v1/trace/") => self.error(
+                stream,
+                "/v1/trace",
+                405,
+                &format!("method {} not allowed on /v1/trace/:id", req.method),
+                keep,
+                &[],
+            ),
             ("GET", "/v1/models") => {
                 let body = Json::Obj(vec![(
                     "models".to_string(),
@@ -382,14 +490,18 @@ impl Daemon {
         http::respond(stream, status, "application/json", error_body(msg).as_bytes(), keep, extra)
     }
 
-    fn render_metrics(&self, queue: &AdmissionQueue<Job>) -> String {
-        self.metrics.render(&[
+    fn metric_extras(&self, queue: &AdmissionQueue<Job>) -> [(&'static str, f64); 5] {
+        [
             ("frontier_cache_hits_total", self.svc.frontier_hits() as f64),
             ("frontier_cache_solves_total", self.svc.frontier_solves() as f64),
             ("frontier_cache_entries", self.svc.frontier_cache_len() as f64),
             ("queue_depth", queue.len() as f64),
             ("queue_capacity", queue.depth() as f64),
-        ])
+        ]
+    }
+
+    fn render_metrics(&self, queue: &AdmissionQueue<Job>) -> String {
+        self.metrics.render(&self.metric_extras(queue))
     }
 
     // ---- /v1/plan --------------------------------------------------------
@@ -424,7 +536,8 @@ impl Daemon {
         };
         let deadline = Instant::now() + self.cfg.request_timeout;
         let (tx, rx) = mpsc::channel();
-        let job = Job { kind: JobKind::Answer(sreq), index: 0, deadline, reply: tx };
+        let job =
+            Job { kind: JobKind::Answer(sreq), index: 0, deadline, reply: tx, trace: job_trace() };
         if queue.submit(job).is_err() {
             self.metrics.inc_rejected();
             return self.error(
@@ -479,6 +592,7 @@ impl Daemon {
                     index: i,
                     deadline,
                     reply: tx.clone(),
+                    trace: job_trace(),
                 }),
                 Err(e) => {
                     done.insert(i, error_entry(i, &format!("{e:#}")));
@@ -566,7 +680,13 @@ impl Daemon {
         let mut jobs = Vec::new();
         for (i, e) in entries.iter().enumerate() {
             match parse_frontier_query(e) {
-                Ok(kind) => jobs.push(Job { kind, index: i, deadline, reply: tx.clone() }),
+                Ok(kind) => jobs.push(Job {
+                    kind,
+                    index: i,
+                    deadline,
+                    reply: tx.clone(),
+                    trace: job_trace(),
+                }),
                 Err(msg) if batch => {
                     done.insert(i, Err(msg));
                 }
@@ -669,6 +789,27 @@ impl Daemon {
 }
 
 // ---- free helpers --------------------------------------------------------
+
+/// Metrics/span label of a request path: the known endpoints by name,
+/// `/v1/trace/:id` collapsed to one label, everything else "other" (so a
+/// scanner cannot grow the metrics map or span names without bound).
+fn endpoint_label(path: &str) -> &'static str {
+    match path {
+        "/healthz" => "/healthz",
+        "/metrics" => "/metrics",
+        "/v1/models" => "/v1/models",
+        "/v1/devices" => "/v1/devices",
+        "/v1/plan" => "/v1/plan",
+        "/v1/frontier" => "/v1/frontier",
+        p if p.starts_with("/v1/trace/") => "/v1/trace",
+        _ => "other",
+    }
+}
+
+/// Trace id jobs inherit from the submitting request's thread context.
+fn job_trace() -> String {
+    crate::obs::current_trace().unwrap_or_else(|| crate::obs::LOCAL_TRACE.to_string())
+}
 
 fn until(deadline: Instant) -> Duration {
     deadline.saturating_duration_since(Instant::now())

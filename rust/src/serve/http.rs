@@ -272,6 +272,12 @@ pub fn respond(
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
+    // Echo the request's trace id (the daemon installs it on this thread
+    // before routing), so a client can fetch `GET /v1/trace/:id` without
+    // having stamped its own header.
+    if let Some(t) = crate::obs::current_trace() {
+        head.push_str(&format!("x-ampq-trace: {t}\r\n"));
+    }
     for (k, v) in extra {
         head.push_str(&format!("{k}: {v}\r\n"));
     }
@@ -294,11 +300,15 @@ impl<'a> ChunkedWriter<'a> {
         content_type: &str,
         keep_alive: bool,
     ) -> std::io::Result<ChunkedWriter<'a>> {
-        let head = format!(
-            "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+        let mut head = format!(
+            "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: {}\r\n",
             reason(status),
             if keep_alive { "keep-alive" } else { "close" },
         );
+        if let Some(t) = crate::obs::current_trace() {
+            head.push_str(&format!("x-ampq-trace: {t}\r\n"));
+        }
+        head.push_str("\r\n");
         stream.write_all(head.as_bytes())?;
         Ok(ChunkedWriter { stream })
     }

@@ -5,11 +5,13 @@
 //! The histogram buckets are log-spaced powers of two over 1us..~67s —
 //! fixed at construction, so recording is a lock-free pair of atomic
 //! increments and quantile estimates (p50/p99) are a cumulative walk
-//! returning the matched bucket's upper bound.  Estimates are therefore
-//! quantized to bucket resolution (a factor of 2), which is exactly the
-//! fidelity a serving dashboard needs and all the determinism a test can
-//! assert against.
+//! with linear interpolation inside the matched bucket.  (An earlier
+//! version returned the bucket's upper bound outright, overstating small
+//! latencies by up to 2x — the estimate now lands within the bucket, so
+//! the absolute error is bounded by the bucket width.)
 
+use crate::dist::DistMetrics;
+use crate::util::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -61,8 +63,13 @@ impl Histogram {
         self.sum_us.load(Ordering::Relaxed)
     }
 
-    /// Upper bound (us) of the bucket containing the q-quantile sample;
-    /// 0 when nothing was recorded.  `q` in [0, 1].
+    /// Estimated q-quantile latency (us): the rank is located in its
+    /// bucket, then linearly interpolated between the bucket's bounds by
+    /// rank position.  The estimate always lies within the matched
+    /// bucket, so its absolute error is bounded by that bucket's width
+    /// (and a bucket's last rank still maps to its exact upper bound).
+    /// 0 when nothing was recorded; `q` in [0, 1]; +Inf only for samples
+    /// in the unbounded overflow bucket.
     pub fn quantile_us(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
@@ -71,14 +78,20 @@ impl Histogram {
         let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (i, c) in self.counts.iter().enumerate() {
-            seen += c.load(Ordering::Relaxed);
-            if seen >= target {
-                return if i < N_BUCKETS {
-                    (1u64 << i) as f64
-                } else {
-                    f64::INFINITY
-                };
+            let c = c.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
             }
+            if seen + c >= target {
+                if i >= N_BUCKETS {
+                    return f64::INFINITY;
+                }
+                let lower = if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 };
+                let upper = (1u64 << i) as f64;
+                let frac = (target - seen) as f64 / c as f64;
+                return lower + (upper - lower) * frac;
+            }
+            seen += c;
         }
         f64::INFINITY
     }
@@ -95,6 +108,9 @@ pub struct Metrics {
     pub frontier_latency: Histogram,
     queue_rejected: AtomicU64,
     request_timeouts: AtomicU64,
+    /// Supervision counters of the dist worker fleet the daemon staged
+    /// with (`--dist-workers N`); `None` when staging ran in-process.
+    dist: Mutex<Option<DistMetrics>>,
 }
 
 impl Metrics {
@@ -133,6 +149,18 @@ impl Metrics {
         self.request_timeouts.load(Ordering::Relaxed)
     }
 
+    /// Install (or refresh) the dist fleet's supervision counters so
+    /// `/metrics` exposes them.  The daemon snapshots the coordinator
+    /// after staging — the fleet is shut down before the listener binds,
+    /// so these are final values, not a live view.
+    pub fn set_dist(&self, m: DistMetrics) {
+        *self.dist.lock().expect("metrics lock poisoned") = Some(m);
+    }
+
+    pub fn dist(&self) -> Option<DistMetrics> {
+        self.dist.lock().expect("metrics lock poisoned").clone()
+    }
+
     /// Prometheus text exposition.  `extra` carries gauges owned elsewhere
     /// (frontier cache hit/solve counters, queue depth, ...).
     pub fn render(&self, extra: &[(&str, f64)]) -> String {
@@ -150,6 +178,18 @@ impl Metrics {
         out.push_str(&format!("ampq_queue_rejected_total {}\n", self.rejected()));
         out.push_str("# TYPE ampq_request_timeouts_total counter\n");
         out.push_str(&format!("ampq_request_timeouts_total {}\n", self.timeouts()));
+        if let Some(d) = self.dist() {
+            for (k, v) in [
+                ("tasks", d.tasks),
+                ("retries", d.retries),
+                ("deadline_expiries", d.deadline_expiries),
+                ("worker_crashes", d.worker_crashes),
+                ("respawns", d.respawns),
+            ] {
+                out.push_str(&format!("# TYPE ampq_dist_{k}_total counter\n"));
+                out.push_str(&format!("ampq_dist_{k}_total {v}\n"));
+            }
+        }
         for (name, hist) in
             [("plan", &self.plan_latency), ("frontier", &self.frontier_latency)]
         {
@@ -168,6 +208,59 @@ impl Metrics {
         }
         out
     }
+
+    /// The same counters as [`Metrics::render`], as a JSON object — served
+    /// when a `/metrics` client sends `Accept: application/json`.
+    pub fn render_json(&self, extra: &[(&str, f64)]) -> Json {
+        let requests = {
+            let m = self.requests.lock().expect("metrics lock poisoned");
+            Json::Arr(
+                m.iter()
+                    .map(|((endpoint, status), count)| {
+                        Json::Obj(vec![
+                            ("endpoint".into(), Json::Str(endpoint.clone())),
+                            ("status".into(), Json::Num(*status as f64)),
+                            ("count".into(), Json::Num(*count as f64)),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        // Overflow-bucket quantiles are +Inf, which JSON cannot carry.
+        let num_or_null = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let hist = |h: &Histogram| {
+            Json::Obj(vec![
+                ("p50_us".into(), num_or_null(h.quantile_us(0.5))),
+                ("p99_us".into(), num_or_null(h.quantile_us(0.99))),
+                ("count".into(), Json::Num(h.count() as f64)),
+                ("sum_us".into(), Json::Num(h.sum_us() as f64)),
+            ])
+        };
+        let mut kv = vec![
+            ("requests".to_string(), requests),
+            ("queue_rejected".to_string(), Json::Num(self.rejected() as f64)),
+            ("request_timeouts".to_string(), Json::Num(self.timeouts() as f64)),
+            ("plan_latency".to_string(), hist(&self.plan_latency)),
+            ("frontier_latency".to_string(), hist(&self.frontier_latency)),
+        ];
+        if let Some(d) = self.dist() {
+            kv.push((
+                "dist".to_string(),
+                Json::Obj(vec![
+                    ("tasks".into(), Json::Num(d.tasks as f64)),
+                    ("retries".into(), Json::Num(d.retries as f64)),
+                    ("deadline_expiries".into(), Json::Num(d.deadline_expiries as f64)),
+                    ("worker_crashes".into(), Json::Num(d.worker_crashes as f64)),
+                    ("respawns".into(), Json::Num(d.respawns as f64)),
+                ]),
+            ));
+        }
+        kv.push((
+            "gauges".to_string(),
+            Json::Obj(extra.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect()),
+        ));
+        Json::Obj(kv)
+    }
 }
 
 fn fmt_val(v: f64) -> String {
@@ -185,19 +278,69 @@ mod tests {
     use super::*;
 
     #[test]
-    fn histogram_quantiles_hit_bucket_bounds() {
+    fn histogram_quantiles_interpolate_within_the_bucket() {
         let h = Histogram::new();
         assert_eq!(h.quantile_us(0.5), 0.0, "empty histogram reports 0");
         for _ in 0..90 {
-            h.record(100.0); // bucket bound 128
+            h.record(100.0); // bucket (64, 128]
         }
         for _ in 0..10 {
-            h.record(5000.0); // bucket bound 8192
+            h.record(5000.0); // bucket (4096, 8192]
         }
         assert_eq!(h.count(), 100);
-        assert_eq!(h.quantile_us(0.5), 128.0);
-        assert_eq!(h.quantile_us(0.99), 8192.0);
+        // p50: rank 50 of 90 in (64, 128] -> 64 + 64 * 50/90.
+        let p50 = h.quantile_us(0.5);
+        assert!((p50 - (64.0 + 64.0 * 50.0 / 90.0)).abs() < 1e-9, "p50 {p50}");
+        // p99: rank 99, the 9th of 10 in (4096, 8192] -> 4096 + 4096 * 0.9.
+        let p99 = h.quantile_us(0.99);
+        assert!((p99 - (4096.0 + 4096.0 * 0.9)).abs() < 1e-9, "p99 {p99}");
         assert_eq!(h.sum_us(), 90 * 100 + 10 * 5000);
+    }
+
+    #[test]
+    fn histogram_quantile_error_is_bounded_by_bucket_width() {
+        // The regression this fix pins: a single 100us sample used to
+        // report p50 = 128us (the bucket bound, a 28% overstatement; 1.xus
+        // samples were overstated up to 2x).  Interpolation must land
+        // within the sample's bucket and within one bucket width of truth.
+        for &sample in &[1.5, 3.0, 100.0, 900.0, 5000.0] {
+            let h = Histogram::new();
+            h.record(sample);
+            let est = h.quantile_us(0.5);
+            let width = {
+                let mut i = 0;
+                while sample > (1u64 << i) as f64 {
+                    i += 1;
+                }
+                let lower = if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 };
+                ((1u64 << i) as f64, lower)
+            };
+            let (upper, lower) = width;
+            assert!(est > lower && est <= upper, "{sample}: est {est} outside bucket");
+            assert!((est - sample).abs() <= upper - lower, "{sample}: err too large");
+        }
+        // A bucket's last rank still reports the exact upper bound, so
+        // quantiles never UNDERstate by more than the bucket width either.
+        let h = Histogram::new();
+        h.record(1024.0);
+        assert_eq!(h.quantile_us(1.0), 1024.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_monotone_in_q() {
+        let h = Histogram::new();
+        for v in [2.0, 10.0, 70.0, 300.0, 2000.0, 9000.0, 40000.0] {
+            for _ in 0..5 {
+                h.record(v);
+            }
+        }
+        let mut prev = 0.0;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let est = h.quantile_us(q);
+            assert!(est >= prev, "quantile not monotone at q={q}: {est} < {prev}");
+            prev = est;
+        }
     }
 
     #[test]
@@ -227,5 +370,54 @@ mod tests {
         assert!(text.contains("ampq_frontier_cache_hits_total 3\n"));
         assert_eq!(m.requests_for("/v1/plan", 200), 2);
         assert_eq!(m.total_requests(), 4);
+    }
+
+    #[test]
+    fn json_rendering_mirrors_the_text_counters() {
+        let m = Metrics::new();
+        m.record_request("/v1/plan", 200);
+        m.inc_timeouts();
+        m.plan_latency.record(900.0);
+        m.frontier_latency.record(1e12); // overflow bucket -> null quantiles
+        let j = m.render_json(&[("queue_depth", 4.0)]);
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("render_json must emit valid JSON");
+        let reqs = back.get("requests").unwrap().arr().unwrap();
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].get("endpoint").unwrap().str().unwrap(), "/v1/plan");
+        assert_eq!(reqs[0].get("count").unwrap().f64().unwrap(), 1.0);
+        assert_eq!(back.get("request_timeouts").unwrap().f64().unwrap(), 1.0);
+        let plan = back.get("plan_latency").unwrap();
+        assert_eq!(plan.get("count").unwrap().f64().unwrap(), 1.0);
+        assert_eq!(plan.get("p50_us").unwrap().f64().unwrap(), 1024.0);
+        assert!(matches!(
+            back.get("frontier_latency").unwrap().get("p50_us").unwrap(),
+            Json::Null
+        ));
+        let gauges = back.get("gauges").unwrap();
+        assert_eq!(gauges.get("queue_depth").unwrap().f64().unwrap(), 4.0);
+    }
+
+    #[test]
+    fn dist_supervision_counters_render_when_installed() {
+        let m = Metrics::new();
+        assert!(
+            !m.render(&[]).contains("ampq_dist_"),
+            "no dist lines without a fleet"
+        );
+        m.set_dist(DistMetrics {
+            tasks: 12,
+            retries: 3,
+            deadline_expiries: 1,
+            worker_crashes: 2,
+            respawns: 2,
+        });
+        let text = m.render(&[]);
+        assert!(text.contains("# TYPE ampq_dist_tasks_total counter\n"));
+        assert!(text.contains("ampq_dist_tasks_total 12\n"));
+        assert!(text.contains("ampq_dist_retries_total 3\n"));
+        assert!(text.contains("ampq_dist_deadline_expiries_total 1\n"));
+        assert!(text.contains("ampq_dist_worker_crashes_total 2\n"));
+        assert!(text.contains("ampq_dist_respawns_total 2\n"));
     }
 }

@@ -147,11 +147,25 @@ pub fn solve(p: &Mckp) -> Solution {
     solve_with(p, &ExecPool::sequential())
 }
 
+/// Observation-only search introspection, surfaced as span counters.
+/// Atomics because decomposed leaves run on pool threads; NOTHING in the
+/// search reads these back, so they cannot perturb the result.
+#[derive(Default)]
+struct BbStats {
+    nodes: AtomicU64,
+    subs_skipped: AtomicU64,
+}
+
 /// Solve across `pool`; output is bit-identical at any thread count.
 pub fn solve_with(p: &Mckp, pool: &ExecPool) -> Solution {
+    let mut sp = crate::obs::span("solver.branch_bound");
+    sp.counter("groups", p.n_groups() as f64);
     let inc = match incumbent(p) {
         Ok(s) => s,
-        Err(s) => return s,
+        Err(s) => {
+            sp.counter("pruned_at_root", 1.0);
+            return s;
+        }
     };
     let sh = build_shared(p);
     // Route purely by instance size: small instances take the sequential
@@ -160,18 +174,25 @@ pub fn solve_with(p: &Mckp, pool: &ExecPool) -> Solution {
         .gains
         .iter()
         .fold(1usize, |acc, g| acc.saturating_mul(g.len()));
-    if p.n_groups() < MAX_SPLIT_DEPTH || assignments < PAR_MIN_ASSIGNMENTS {
-        return solve_sequential(&sh, inc);
-    }
-    solve_decomposed(&sh, inc, pool)
+    let stats = BbStats::default();
+    let sol = if p.n_groups() < MAX_SPLIT_DEPTH || assignments < PAR_MIN_ASSIGNMENTS {
+        solve_sequential(&sh, inc, &stats)
+    } else {
+        solve_decomposed(&sh, inc, pool, &stats)
+    };
+    sp.counter("nodes", stats.nodes.load(Ordering::Relaxed) as f64);
+    sp.counter("subs_skipped", stats.subs_skipped.load(Ordering::Relaxed) as f64);
+    sp.counter("feasible", if sol.feasible { 1.0 } else { 0.0 });
+    sol
 }
 
-fn solve_sequential(sh: &Shared, inc: Solution) -> Solution {
+fn solve_sequential(sh: &Shared, inc: Solution, stats: &BbStats) -> Solution {
     let inc_gain = if inc.feasible { inc.gain } else { f64::NEG_INFINITY };
     let mut st = Search { best_gain: inc_gain, best: None, nodes: 0, cap: NODE_CAP };
     let mut choice = vec![0usize; sh.p.n_groups()];
     let mut cost = vec![0.0f64; sh.p.n_dims()];
     dfs(sh, &mut st, 0, 0.0, &mut cost, &mut choice);
+    stats.nodes.fetch_add(st.nodes as u64, Ordering::Relaxed);
     finish(sh, st, inc)
 }
 
@@ -249,7 +270,7 @@ fn root_bound(sh: &Shared, sub: &Sub) -> f64 {
     bound
 }
 
-fn solve_decomposed(sh: &Shared, inc: Solution, pool: &ExecPool) -> Solution {
+fn solve_decomposed(sh: &Shared, inc: Solution, pool: &ExecPool, stats: &BbStats) -> Solution {
     let inc_gain = if inc.feasible { inc.gain } else { f64::NEG_INFINITY };
     let (depth, prefix_product) = split_depth(sh);
     // Share the sequential node budget across the (at most prefix_product)
@@ -315,12 +336,14 @@ fn solve_decomposed(sh: &Shared, inc: Solution, pool: &ExecPool) -> Solution {
             // never tie the reduced argmax, so timing cannot leak in).
             let fl = f64::from_bits(floor.load(Ordering::Relaxed));
             if root_bound(sh, &sub) <= fl - skip_margin {
+                stats.subs_skipped.fetch_add(1, Ordering::Relaxed);
                 return None;
             }
             let mut st = Search { best_gain: inc_gain, best: None, nodes: 0, cap: sub_cap };
             let mut cost = sub.cost.clone();
             let mut choice = sub.choice.clone();
             dfs(sh, &mut st, sub.pos, sub.gain, &mut cost, &mut choice);
+            stats.nodes.fetch_add(st.nodes as u64, Ordering::Relaxed);
             let found = st.best.as_deref().map(|bc| materialize(sh, bc));
             match found {
                 Some(sol) => {

@@ -147,11 +147,15 @@ pub fn frontier(p: &Mckp) -> ParametricCurve {
 /// bit-identical at any thread count.
 pub fn frontier_with(p: &Mckp, pool: &ExecPool) -> ParametricCurve {
     let n = p.n_groups();
+    let mut root_sp = crate::obs::span("solver.frontier");
+    root_sp.counter("groups", n as f64);
     let suffix_min = suffix_mins(p);
     let mut levels: Vec<Vec<Node>> = Vec::with_capacity(n + 1);
     levels.push(root_level(p.n_dims()));
     let mut truncated = false;
     for j in 0..n {
+        let mut sp = crate::obs::span("solver.dp.group");
+        sp.counter("group", j as f64);
         let prev = &levels[j];
         // State-merge fan-out: fixed-size chunks of the surviving states
         // expand in parallel; concatenation is in chunk order, so the
@@ -163,11 +167,19 @@ pub fn frontier_with(p: &Mckp, pool: &ExecPool) -> ParametricCurve {
             .into_iter()
             .flatten()
             .collect();
+        let n_cands = cands.len();
+        sp.counter("candidates", n_cands as f64);
         let (kept, thinned) = prune_level(p, cands);
+        sp.counter("kept", kept.len() as f64);
+        sp.counter("pruned", (n_cands - kept.len()) as f64);
+        sp.counter("thinned", if thinned { 1.0 } else { 0.0 });
         truncated |= thinned;
         levels.push(kept);
     }
-    finish(n, &levels, truncated)
+    let curve = finish(n, &levels, truncated);
+    root_sp.counter("knots", curve.points.len() as f64);
+    root_sp.counter("exact", if curve.exact { 1.0 } else { 0.0 });
+    curve
 }
 
 /// `suffix_min[d][j]` = min dim-d cost over groups j.. — a state whose
@@ -369,11 +381,15 @@ pub fn harden_with(p: &Mckp, curve: ParametricCurve, pool: &ExecPool) -> Paramet
         .filter(|(_, pt)| !pt.exact)
         .map(|(i, _)| i)
         .collect();
+    let mut sp = crate::obs::span("solver.harden");
+    sp.counter("flagged", flagged.len() as f64);
     let solved = pool.par_map(flagged.len(), |fi| {
         let mut q = p.clone();
         q.budgets[0] = curve.points[flagged[fi]].costs[0];
         branch_bound::solve(&q)
     });
+    sp.counter("proved", solved.iter().filter(|s| s.feasible).count() as f64);
+    drop(sp);
     let mut points = curve.points;
     for (fi, &i) in flagged.iter().enumerate() {
         let s = &solved[fi];

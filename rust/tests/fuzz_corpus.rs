@@ -398,6 +398,101 @@ fn fuzz_serve_request_json_roundtrip_is_stable() {
     }
 }
 
+/// Hostile `x-ampq-trace` headers against a live daemon, over a raw
+/// socket so malformed bytes reach the parser unfiltered.  Every hostile
+/// value must answer 400 — never a panic, never a solve — the trace ids
+/// must never enter the span registry, the trace context must not leak
+/// across keep-alive requests, and the daemon must keep serving.
+#[test]
+fn hostile_trace_headers_answer_400_without_panicking_or_leaking_spans() {
+    use ampq::serve::client::{request as one_shot, Client};
+    use ampq::serve::{Daemon, ServeConfig};
+    use std::io::{Read, Write};
+
+    let (graph, qlayers, calibration) = demo_model(1, 3);
+    let mut engine = Engine::new();
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    let svc = PlanService::from_engine(&mut engine, &["demo"]).unwrap();
+    let cfg = ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() };
+    let daemon =
+        std::sync::Arc::new(Daemon::new(svc, vec![DeviceProfile::gaudi2()], cfg));
+    let listener = daemon.bind().unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let d = daemon.clone();
+    let join = std::thread::spawn(move || d.run(listener).unwrap());
+
+    // One raw exchange: write the request bytes, half-close, read until
+    // the daemon closes (it sees EOF after answering).
+    let raw = |payload: &[u8]| -> String {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+        s.write_all(payload).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut out = Vec::new();
+        let _ = s.read_to_end(&mut out);
+        String::from_utf8_lossy(&out).into_owned()
+    };
+    let with_header = |value: &[u8]| -> Vec<u8> {
+        let mut req = Vec::new();
+        req.extend_from_slice(
+            b"POST /v1/plan HTTP/1.1\r\nHost: ampq\r\nContent-Length: 2\r\nx-ampq-trace: ",
+        );
+        req.extend_from_slice(value);
+        req.extend_from_slice(b"\r\n\r\n{}");
+        req
+    };
+
+    let oversized = "a".repeat(65);
+    let cases: Vec<(&str, Vec<u8>)> = vec![
+        ("oversized id (65 chars)", with_header(oversized.as_bytes())),
+        ("empty id", with_header(b"")),
+        ("embedded spaces", with_header(b"not a valid id")),
+        ("response-splitting chars", with_header(b"abc%0d%0aset-cookie:x")),
+        ("quoted id", with_header(b"\"quoted\"")),
+        ("non-utf8 bytes", with_header(&[0xff, 0xfe, 0x80])),
+    ];
+    for (what, req) in cases {
+        let resp = raw(&req);
+        assert!(
+            resp.starts_with("HTTP/1.1 400"),
+            "{what}: expected 400, got: {}",
+            resp.lines().next().unwrap_or("<no response>")
+        );
+    }
+    // None of the rejected ids may have entered the span registry.
+    assert!(ampq::obs::spans_for(&oversized).is_empty(), "oversized id leaked spans");
+    assert!(ampq::obs::spans_for("not a valid id").is_empty(), "invalid id leaked spans");
+
+    // The trace context is per-request, not per-connection: a follow-up
+    // request without a header gets a FRESH id, not the previous one.
+    let body = ServeRequest::new(
+        "demo",
+        PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004),
+    )
+    .to_json()
+    .to_string();
+    let mut c = Client::connect(&addr).unwrap();
+    let r1 = c
+        .request_with_headers(
+            "POST",
+            "/v1/plan",
+            Some(body.as_str()),
+            &[("x-ampq-trace", "fuzz-keepalive-1")],
+        )
+        .unwrap();
+    assert_eq!(r1.status, 200);
+    assert_eq!(r1.header("x-ampq-trace"), Some("fuzz-keepalive-1"));
+    let r2 = c.request("POST", "/v1/plan", Some(body.as_str())).unwrap();
+    assert_eq!(r2.status, 200);
+    let fresh = r2.header("x-ampq-trace").expect("fresh trace id missing");
+    assert_ne!(fresh, "fuzz-keepalive-1", "trace context leaked across requests");
+
+    // Still alive and healthy after the abuse.
+    assert_eq!(one_shot(&addr, "GET", "/healthz", None).unwrap().status, 200);
+    daemon.handle().shutdown();
+    join.join().unwrap();
+}
+
 /// Fuzzed serve batches — unknown models, non-finite budgets, frontier
 /// lookups with the wrong strategy — always complete with one indexed
 /// line per entry, and every line equals the sequential `answer` path's

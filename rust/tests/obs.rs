@@ -1,0 +1,359 @@
+//! Acceptance tests for the observability layer (`src/obs/`).
+//!
+//! The load-bearing contract is OBSERVATION-ONLY tracing: every plan,
+//! frontier, daemon answer, and fleet artifact is bit-identical with
+//! tracing on or off, at any thread count and any worker count.  The
+//! rest covers the daemon's trace plumbing — `x-ampq-trace` validation
+//! and echo, `GET /v1/trace/:id`, `/metrics` content negotiation — and
+//! the span/counter payloads the solver and engine stages record.
+
+use ampq::backend::DeviceProfile;
+use ampq::coordinator::Strategy;
+use ampq::exec::ExecCfg;
+use ampq::metrics::Objective;
+use ampq::obs;
+use ampq::plan::demo::demo_model;
+use ampq::plan::{Engine, PlanRequest, PlanService, ServeRequest};
+use ampq::serve::client::{request as one_shot, request_with_headers, Client};
+use ampq::serve::{Daemon, ServeConfig};
+use ampq::util::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+/// The recording flag is process-wide; tests that toggle it (or assert
+/// that spans were recorded) serialize here so a concurrent test never
+/// observes a surprise flip.
+static OBS_FLAG: Mutex<()> = Mutex::new(());
+
+fn flag_lock() -> std::sync::MutexGuard<'static, ()> {
+    OBS_FLAG.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Solve one demo plan + frontier on a fresh engine and return both
+/// serializations — the bytes the bit-identity tests compare.
+fn solve_bytes(threads: usize) -> (String, String) {
+    let (graph, qlayers, calibration) = demo_model(2, 3);
+    let mut engine = Engine::new().with_exec(ExecCfg::new(threads));
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    let planner = engine.planner("demo").unwrap();
+    let plan = planner
+        .solve(&PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004))
+        .unwrap();
+    let frontier = planner.frontier(Objective::EmpiricalTime, Strategy::Ip).unwrap();
+    (plan.to_json().to_string(), frontier.to_json().to_string())
+}
+
+#[test]
+fn tracing_never_changes_plan_or_frontier_bytes() {
+    let _g = flag_lock();
+    let was = obs::enabled();
+    obs::set_enabled(false);
+    let reference = solve_bytes(1);
+    let untraced_par = solve_bytes(4);
+    obs::set_enabled(true);
+    let traced_seq = obs::with_trace("obs-bit-identity", || solve_bytes(1));
+    let traced_par = obs::with_trace("obs-bit-identity", || solve_bytes(4));
+    obs::set_enabled(was);
+    assert_eq!(reference, untraced_par, "thread count changed bytes");
+    assert_eq!(reference, traced_seq, "tracing changed sequential bytes");
+    assert_eq!(reference, traced_par, "tracing changed parallel bytes");
+}
+
+// ---------------------------------------------------------------- fleet
+
+/// Every file under `root`, keyed by relative path (fleet artifacts are
+/// all JSON text).
+fn read_tree(root: &Path) -> BTreeMap<String, String> {
+    fn walk(dir: &Path, root: &Path, out: &mut BTreeMap<String, String>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(&path, root, out);
+            } else {
+                let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                out.insert(rel, std::fs::read_to_string(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+fn fleet_tree(tag: &str, workers: usize) -> (BTreeMap<String, String>, ampq::dist::DistMetrics) {
+    let out = std::env::temp_dir().join(format!("ampq_obs_{}_{tag}", std::process::id()));
+    std::fs::remove_dir_all(&out).ok();
+    let cfg = ampq::dist::FleetConfig {
+        models: vec!["demo".to_string()],
+        devices: vec!["gaudi2".to_string()],
+        workers,
+        out: out.clone(),
+        blocks: 1,
+        dist: ampq::dist::DistConfig {
+            workers,
+            worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_ampq"))),
+            retry_backoff: Duration::from_millis(10),
+            ..ampq::dist::DistConfig::default()
+        },
+    };
+    let report = ampq::dist::run_fleet(&cfg).unwrap_or_else(|e| panic!("{tag}: {e:#}"));
+    let tree = read_tree(&out);
+    std::fs::remove_dir_all(&out).ok();
+    (tree, report.metrics)
+}
+
+/// Fleet artifacts are byte-identical untraced vs traced, in-process vs
+/// over real worker subprocesses — and the traced distributed run ships
+/// worker-process spans back into the coordinator's trace tree.
+#[test]
+fn fleet_artifacts_identical_with_tracing_on_across_worker_counts() {
+    let _g = flag_lock();
+    let was = obs::enabled();
+    obs::set_enabled(false);
+    let (reference, m0) = fleet_tree("ref", 0);
+    assert_eq!(m0, ampq::dist::DistMetrics::default());
+    assert!(!reference.is_empty(), "reference fleet produced no artifacts");
+
+    obs::set_enabled(true);
+    let t_inproc = obs::fresh_trace_id();
+    let (traced0, _) = obs::with_trace(&t_inproc, || fleet_tree("t0", 0));
+    let t_fleet = obs::fresh_trace_id();
+    let (traced2, m2) = obs::with_trace(&t_fleet, || fleet_tree("t2", 2));
+    obs::set_enabled(was);
+
+    assert_eq!(reference, traced0, "tracing changed in-process fleet artifacts");
+    assert_eq!(reference, traced2, "tracing changed distributed fleet artifacts");
+    assert!(m2.tasks > 0, "no tasks reached the fleet");
+
+    // Worker spans must be adopted into the coordinator's trace.
+    let spans = obs::spans_for(&t_fleet);
+    assert!(
+        spans.iter().any(|s| s.name == "dist.run_tasks"),
+        "coordinator batch span missing: {:?}",
+        spans.iter().map(|s| s.name.as_str()).collect::<Vec<_>>()
+    );
+    assert!(
+        spans.iter().any(|s| s.name.starts_with("worker.")),
+        "no worker-process spans were stitched into the trace"
+    );
+    // Stitched spans keep their origin pid: at least one span must come
+    // from a process that is not this one.
+    let here = u64::from(std::process::id());
+    assert!(
+        spans.iter().any(|s| s.pid != here),
+        "all spans claim the coordinator pid; shipping lost origin pids"
+    );
+}
+
+/// The solver and engine stages record introspection counters on their
+/// spans (DP states kept/pruned per group, frontier knots, stage cache
+/// hits) without touching outputs.
+#[test]
+fn solver_and_stage_spans_carry_counters() {
+    let _g = flag_lock();
+    let was = obs::enabled();
+    obs::set_enabled(true);
+    let id = "obs-solver-counters";
+    obs::with_trace(id, || {
+        let (graph, qlayers, calibration) = demo_model(2, 9);
+        let mut engine = Engine::new();
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+        let planner = engine.planner("demo").unwrap();
+        planner.frontier(Objective::EmpiricalTime, Strategy::Ip).unwrap();
+    });
+    obs::set_enabled(was);
+
+    let spans = obs::spans_for(id);
+    let frontier = spans
+        .iter()
+        .find(|s| s.name == "solver.frontier")
+        .expect("solver.frontier span missing");
+    assert!(frontier.counters.iter().any(|(k, _)| k == "knots"));
+    assert!(frontier.counters.iter().any(|(k, _)| k == "groups"));
+    let dp: Vec<_> = spans.iter().filter(|s| s.name == "solver.dp.group").collect();
+    assert!(!dp.is_empty(), "no per-group DP spans recorded");
+    for sp in &dp {
+        for key in ["candidates", "kept", "pruned"] {
+            assert!(
+                sp.counters.iter().any(|(k, _)| k == key),
+                "DP span missing counter '{key}': {:?}",
+                sp.counters
+            );
+        }
+    }
+    assert!(
+        spans.iter().any(|s| s.name == "stage.measure"),
+        "engine stage spans missing"
+    );
+}
+
+// --------------------------------------------------------------- daemon
+
+fn build_service() -> PlanService {
+    let (graph, qlayers, calibration) = demo_model(1, 7);
+    let mut engine = Engine::new();
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    PlanService::from_engine(&mut engine, &["demo"]).unwrap()
+}
+
+struct TestDaemon {
+    daemon: Arc<Daemon>,
+    addr: String,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestDaemon {
+    fn start(mut cfg: ServeConfig) -> TestDaemon {
+        cfg.addr = "127.0.0.1:0".to_string();
+        let daemon = Arc::new(Daemon::new(build_service(), vec![DeviceProfile::gaudi2()], cfg));
+        let listener = daemon.bind().unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let d = daemon.clone();
+        let join = std::thread::spawn(move || d.run(listener).unwrap());
+        TestDaemon { daemon, addr, join: Some(join) }
+    }
+
+    fn stop(mut self) {
+        self.daemon.handle().shutdown();
+        self.join.take().unwrap().join().unwrap();
+    }
+}
+
+impl Drop for TestDaemon {
+    fn drop(&mut self) {
+        self.daemon.handle().shutdown();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn plan_body() -> String {
+    ServeRequest::new("demo", PlanRequest::new(Objective::EmpiricalTime).with_loss_budget(0.004))
+        .to_json()
+        .to_string()
+}
+
+/// The `tracing` serve flag changes what is recorded, never what is
+/// answered.
+#[test]
+fn daemon_answers_identical_with_tracing_on_and_off() {
+    let body = plan_body();
+    let mut rounds: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+    for tracing in [false, true] {
+        let td = TestDaemon::start(ServeConfig { tracing, ..ServeConfig::default() });
+        let mut c = Client::connect(&td.addr).unwrap();
+        let p = c.request("POST", "/v1/plan", Some(body.as_str())).unwrap();
+        assert_eq!(p.status, 200, "body: {}", p.text().unwrap());
+        let f = c.request("POST", "/v1/frontier", Some("{\"model\":\"demo\"}")).unwrap();
+        assert_eq!(f.status, 200);
+        rounds.push((p.body, f.body));
+        td.stop();
+    }
+    assert_eq!(rounds[0], rounds[1], "the tracing flag changed daemon answer bytes");
+}
+
+#[test]
+fn daemon_validates_echoes_and_serves_traces() {
+    let _g = flag_lock();
+    obs::set_enabled(true); // ServeConfig::default() enables too; be explicit
+    let td = TestDaemon::start(ServeConfig::default());
+    let body = plan_body();
+
+    // A supplied id is echoed on the response and queryable afterwards.
+    let id = "obs-daemon-trace-1";
+    let resp = request_with_headers(
+        &td.addr,
+        "POST",
+        "/v1/plan",
+        Some(body.as_str()),
+        &[("x-ampq-trace", id)],
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("x-ampq-trace"), Some(id), "trace id not echoed");
+
+    let tree = one_shot(&td.addr, "GET", &format!("/v1/trace/{id}"), None).unwrap();
+    assert_eq!(tree.status, 200);
+    let t = Json::parse(&tree.text().unwrap()).unwrap();
+    assert_eq!(t.get("trace").unwrap().str().unwrap(), id);
+    assert!(t.get("span_count").unwrap().usize().unwrap() >= 1);
+    let roots = t.get("roots").unwrap().arr().unwrap();
+    assert!(
+        roots.iter().any(|r| r.get("name").unwrap().str().unwrap().starts_with("daemon.")),
+        "request root is not a daemon span: {}",
+        t.to_string()
+    );
+
+    // Without a header the daemon stamps (and echoes) a fresh id.
+    let resp = one_shot(&td.addr, "POST", "/v1/plan", Some(body.as_str())).unwrap();
+    assert_eq!(resp.status, 200);
+    let fresh = resp.header("x-ampq-trace").expect("daemon must stamp a trace id");
+    assert!(!fresh.is_empty() && fresh != id);
+
+    // Unknown trace: 404.  Hostile ids in the path: 400.  Wrong method: 405.
+    assert_eq!(
+        one_shot(&td.addr, "GET", "/v1/trace/never-recorded-id", None).unwrap().status,
+        404
+    );
+    let long = "x".repeat(65);
+    assert_eq!(
+        one_shot(&td.addr, "GET", &format!("/v1/trace/{long}"), None).unwrap().status,
+        400
+    );
+    assert_eq!(one_shot(&td.addr, "POST", "/v1/trace/abc", Some("{}")).unwrap().status, 405);
+
+    // An invalid request header is a client error, not a solve.
+    let bad = request_with_headers(
+        &td.addr,
+        "POST",
+        "/v1/plan",
+        Some(body.as_str()),
+        &[("x-ampq-trace", "no/slashes!allowed")],
+    )
+    .unwrap();
+    assert_eq!(bad.status, 400);
+    let parsed = Json::parse(&bad.text().unwrap()).unwrap();
+    assert_eq!(parsed.get("kind").unwrap().str().unwrap(), "error");
+    td.stop();
+}
+
+#[test]
+fn metrics_negotiates_prometheus_text_and_json() {
+    let td = TestDaemon::start(ServeConfig::default());
+    let mut c = Client::connect(&td.addr).unwrap();
+    let body = plan_body();
+    assert_eq!(c.request("POST", "/v1/plan", Some(body.as_str())).unwrap().status, 200);
+
+    let text = c.request("GET", "/metrics", None).unwrap();
+    assert_eq!(text.status, 200);
+    assert!(text.text().unwrap().contains("ampq_requests_total{"));
+
+    let json = c
+        .request_with_headers("GET", "/metrics", None, &[("Accept", "application/json")])
+        .unwrap();
+    assert_eq!(json.status, 200);
+    let parsed = Json::parse(&json.text().unwrap()).unwrap();
+    assert!(!parsed.get("requests").unwrap().arr().unwrap().is_empty());
+    parsed.get("gauges").unwrap().get("queue_depth").unwrap().f64().unwrap();
+    parsed.get("plan_latency").unwrap().get("count").unwrap().f64().unwrap();
+    td.stop();
+}
+
+/// Supervision counters installed on the daemon's metrics (the
+/// `--dist-workers` staging path) surface as `ampq_dist_*`.
+#[test]
+fn dist_metrics_surface_on_the_daemon_exposition() {
+    let td = TestDaemon::start(ServeConfig::default());
+    td.daemon.metrics().set_dist(ampq::dist::DistMetrics {
+        tasks: 3,
+        retries: 1,
+        ..Default::default()
+    });
+    let m = one_shot(&td.addr, "GET", "/metrics", None).unwrap().text().unwrap();
+    assert!(m.contains("ampq_dist_tasks_total 3\n"), "{m}");
+    assert!(m.contains("ampq_dist_retries_total 1\n"));
+    td.stop();
+}

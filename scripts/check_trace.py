@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event (Perfetto) JSON file emitted by
+`ampq trace --out FILE` or the `--trace FILE` flag.
+
+Checks the schema the exporters promise (src/obs/export.rs): a non-empty
+`traceEvents` array of complete ("ph": "X") slices with numeric ts/dur,
+pid/tid lanes, and an `args` object carrying trace/span_id/parent.  With
+`--expect PREFIX` (repeatable), at least one event name must start with
+each prefix — how CI pins that solver, stage, daemon, and worker spans
+actually made it into the export.
+
+usage: check_trace.py TRACE.json [--expect PREFIX ...]
+"""
+
+import json
+import sys
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main(argv):
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__)
+        return 0 if argv else 2
+    path, expect = argv[0], []
+    rest = argv[1:]
+    while rest:
+        if rest[0] != "--expect" or len(rest) < 2:
+            fail(f"unknown argument {rest[0]!r}")
+        expect.append(rest[1])
+        rest = rest[2:]
+
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"{path}: {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level must be an object")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail("traceEvents must be a non-empty array")
+    if doc.get("displayTimeUnit") != "ms":
+        fail(f"displayTimeUnit must be 'ms', got {doc.get('displayTimeUnit')!r}")
+
+    names = set()
+    for i, e in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(e, dict):
+            fail(f"{where}: not an object")
+        name = e.get("name")
+        if not isinstance(name, str) or not name:
+            fail(f"{where}: bad name {name!r}")
+        names.add(name)
+        if e.get("cat") != "ampq":
+            fail(f"{where} ({name}): cat must be 'ampq'")
+        if e.get("ph") != "X":
+            fail(f"{where} ({name}): ph must be 'X' (complete slice)")
+        for key in ("ts", "dur", "pid", "tid"):
+            v = e.get(key)
+            if not isinstance(v, (int, float)) or v < 0:
+                fail(f"{where} ({name}): bad {key} {v!r}")
+        args = e.get("args")
+        if not isinstance(args, dict):
+            fail(f"{where} ({name}): args must be an object")
+        if not isinstance(args.get("trace"), str) or not args["trace"]:
+            fail(f"{where} ({name}): args.trace missing")
+        for key in ("span_id", "parent"):
+            if not isinstance(args.get(key), (int, float)):
+                fail(f"{where} ({name}): args.{key} missing")
+        for k, v in args.items():
+            if k != "trace" and not isinstance(v, (int, float)):
+                fail(f"{where} ({name}): counter {k}={v!r} is not numeric")
+
+    for prefix in expect:
+        if not any(n.startswith(prefix) for n in names):
+            fail(f"no event name starts with {prefix!r}; saw: {sorted(names)}")
+
+    print(f"check_trace: OK: {len(events)} event(s), {len(names)} distinct span name(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
