@@ -50,6 +50,12 @@ fn thread_counts() -> Vec<usize> {
 }
 
 fn main() {
+    // Tracing off for the whole run: span/counter bookkeeping inside the
+    // solver hot loops would tax exactly the sections being timed, and a
+    // stray AMPQ_TRACE in the CI environment must not skew the committed
+    // baseline.
+    ampq::obs::set_enabled(false);
+
     let p = paper_scale_instance(7);
     println!(
         "instance: {} groups, {} total choices",
@@ -171,6 +177,33 @@ fn main() {
         let speedup = t1 / tn.max(1e-9);
         println!("frontier/demo: {speedup:.2}x speedup at {tmax} threads vs 1");
         quality.push(("frontier_speedup_max_threads".into(), Json::Num(speedup)));
+    }
+
+    // Steady-state frontier serving at max threads: after the first solve
+    // commits the arena, every re-solve reuses the committed level columns
+    // (`Planner::frontier` runs through the persistent FrontierDp), so this
+    // is the daemon's hot refresh path.  Also records the arena's peak live
+    // DP-state count and resident bytes — the SoA layout's footprint.
+    {
+        let tmax = ExecCfg::from_env().threads;
+        let mut engine = demo_engine(tmax);
+        let planner = engine.planner("demo").unwrap();
+        planner.frontier(Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        let r = bench(&format!("frontier/demo/steady-state/threads={tmax}"), 2, 16, || {
+            black_box(planner.frontier(Objective::EmpiricalTime, Strategy::Ip).unwrap());
+        });
+        let throughput = 1.0e6 / r.mean_us.max(1e-9);
+        let stats = planner.frontier_dp_stats(Objective::EmpiricalTime);
+        println!(
+            "frontier/demo: steady-state {throughput:.0} curves/s ({} peak live DP states, \
+             {} arena bytes)",
+            stats.peak_live_states, stats.arena_bytes
+        );
+        quality.push(("frontier_throughput_curves_per_sec".into(), Json::Num(throughput)));
+        quality
+            .push(("frontier_peak_dp_states".into(), Json::Num(stats.peak_live_states as f64)));
+        quality.push(("frontier_arena_bytes".into(), Json::Num(stats.arena_bytes as f64)));
+        results.push(r);
     }
 
     // Distributed measurement throughput: the fleet-sharded Measured

@@ -188,6 +188,25 @@ pub fn optimize_frontier(
     Ok(materialize_curve(groups, calib, &problem, &curve))
 }
 
+/// [`optimize_frontier`] through a persistent [`parametric::FrontierDp`]
+/// arena: when only `tau_max` (the budget) or a single group's gain table
+/// changed since the arena's last commit, the DP reuses every level solved
+/// before the first divergent group and re-merges from there rightward.
+/// The returned curve is bit-identical to a from-scratch
+/// [`optimize_frontier`] on the same instance; the
+/// [`parametric::FrontierDelta`] reports how much work the reuse skipped.
+pub fn optimize_frontier_incremental(
+    groups: &[GroupChoices],
+    calib: &Calibration,
+    tau_max: f64,
+    pool: &ExecPool,
+    dp: &mut parametric::FrontierDp,
+) -> Result<(FrontierSolves, parametric::FrontierDelta)> {
+    let problem = frontier_instance(groups, calib, tau_max)?;
+    let (curve, delta) = dp.solve_delta(&problem, pool);
+    Ok((materialize_curve(groups, calib, &problem, &curve), delta))
+}
+
 /// Assemble the eq.-5 single-constraint MCKP instance the frontier sweep
 /// solves — shared by the in-process path above and the distributed
 /// coordinator (`crate::dist`), which ships THIS instance to workers so
@@ -438,6 +457,36 @@ mod tests {
                 k.gain,
                 out.solution.gain
             );
+        }
+    }
+
+    #[test]
+    fn incremental_frontier_matches_from_scratch_bitwise() {
+        let calib = calib4();
+        let groups = singleton_groups(&[3.0, 1.0, 2.0, 1.5]);
+        let pool = ExecPool::sequential();
+        let mut dp = parametric::FrontierDp::default();
+        for (trial, tau_max) in [10.0, 10.0, 2.5, 10.0].into_iter().enumerate() {
+            let scratch = optimize_frontier(&groups, &calib, tau_max, &pool).unwrap();
+            let (inc, delta) =
+                optimize_frontier_incremental(&groups, &calib, tau_max, &pool, &mut dp).unwrap();
+            assert_eq!(inc.complete, scratch.complete);
+            assert_eq!(inc.knots.len(), scratch.knots.len());
+            for (a, b) in inc.knots.iter().zip(&scratch.knots) {
+                assert_eq!(a.gain.to_bits(), b.gain.to_bits());
+                assert_eq!(a.predicted_mse.to_bits(), b.predicted_mse.to_bits());
+                assert_eq!(a.config, b.config);
+                assert_eq!(a.exact, b.exact);
+            }
+            if trial == 0 {
+                assert!(delta.full_solve, "cold arena must solve from scratch");
+            } else {
+                // Only tau_max (the budget) varies: every committed level is
+                // reusable, so no group re-merges.
+                assert!(!delta.full_solve);
+                assert_eq!(delta.solved_groups, 0);
+                assert_eq!(delta.reused_levels, groups.len());
+            }
         }
     }
 

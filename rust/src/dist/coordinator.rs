@@ -25,7 +25,7 @@
 //! transparently after a respawn.
 
 use super::protocol::{
-    mckp_to_json, msg_id, nodes_from_json, nodes_to_json, read_frame, request, write_frame,
+    level_from_json, level_to_json, mckp_to_json, msg_id, read_frame, request, write_frame,
 };
 use super::worker::ctx_request;
 use crate::backend::DeviceProfile;
@@ -742,30 +742,34 @@ impl Coordinator {
         let mut truncated = false;
         for j in 0..n {
             let prev = &levels[j];
-            let tasks: Vec<TaskSpec> = prev
-                .chunks(parametric::EXPAND_CHUNK)
-                .enumerate()
-                .map(|(ci, chunk)| TaskSpec {
-                    kind: "expand".into(),
-                    fields: vec![
-                        ("ctx".to_string(), Json::Str(ctx_name.clone())),
-                        ("j".to_string(), Json::Num(j as f64)),
-                        ("start".to_string(), Json::Num((ci * parametric::EXPAND_CHUNK) as f64)),
-                        ("nodes".to_string(), nodes_to_json(chunk, dims)),
-                    ],
-                    ctx: Some(ctx.clone()),
+            let n_chunks = prev.len().div_ceil(parametric::EXPAND_CHUNK);
+            let tasks: Vec<TaskSpec> = (0..n_chunks)
+                .map(|ci| {
+                    let lo = ci * parametric::EXPAND_CHUNK;
+                    let hi = (lo + parametric::EXPAND_CHUNK).min(prev.len());
+                    TaskSpec {
+                        kind: "expand".into(),
+                        fields: vec![
+                            ("ctx".to_string(), Json::Str(ctx_name.clone())),
+                            ("j".to_string(), Json::Num(j as f64)),
+                            ("start".to_string(), Json::Num(lo as f64)),
+                            ("nodes".to_string(), level_to_json(prev, lo, hi)),
+                        ],
+                        ctx: Some(ctx.clone()),
+                    }
                 })
                 .collect();
             let results = self.run_tasks(&tasks)?;
-            let mut cands = Vec::new();
+            let mut cands = parametric::LevelSoa::new(dims);
             for r in &results {
-                cands.extend(nodes_from_json(r)?);
+                let mut frag = level_from_json(r)?;
+                cands.append(&mut frag);
             }
-            let (kept, thinned) = parametric::prune_level(p, cands);
+            let (kept, thinned) = parametric::prune_level(p, &cands);
             truncated |= thinned;
             levels.push(kept);
         }
-        Ok(parametric::finish(n, &levels, truncated))
+        Ok(parametric::finish(n, &levels, truncated, None))
     }
 
     /// Distributed demo calibration: the worker recomputes the pure

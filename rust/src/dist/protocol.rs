@@ -9,7 +9,7 @@
 //! computed DP states and TTFTs can be byte-equal to in-process ones.
 //! u64 values that may exceed 2^53 (seeds) travel as strings.
 
-use crate::solver::parametric::Node;
+use crate::solver::parametric::LevelSoa;
 use crate::solver::{CostDim, Mckp};
 use crate::util::Json;
 use anyhow::{anyhow, bail, Result};
@@ -96,25 +96,29 @@ pub fn msg_id(j: &Json) -> Result<u64> {
 //
 // States travel as flat arrays — node-major costs — instead of one object
 // per node: a level can hold tens of thousands of states and the flat form
-// keeps frames small and parsing linear.
+// keeps frames small and parsing linear.  Since the solver itself stores
+// levels in structure-of-arrays columns ([`LevelSoa`]), the encoder reads
+// the columns straight through — the wire schema is the memory layout.
 
-/// Serialize DP nodes: `{dims, g: [..], c: [..], p: [..], ch: [..]}` with
-/// `c` node-major (`c[i*dims + d]`).  `expand_chunk` never reads its
-/// inputs' parent/choice, but they are shipped anyway so the encoding is
-/// its own inverse (and so worker->coordinator candidates carry them).
-pub fn nodes_to_json(nodes: &[Node], dims: usize) -> Json {
-    let mut g = Vec::with_capacity(nodes.len());
-    let mut c = Vec::with_capacity(nodes.len() * dims);
-    let mut p = Vec::with_capacity(nodes.len());
-    let mut ch = Vec::with_capacity(nodes.len());
-    for n in nodes {
-        g.push(Json::Num(n.gain));
-        for d in 0..dims {
-            c.push(Json::Num(n.costs[d]));
+/// Serialize rows `lo..hi` of a DP level:
+/// `{dims, g: [..], c: [..], p: [..], ch: [..]}` with `c` node-major
+/// (`c[i*dims + d]`).  `expand_chunk` never reads its inputs'
+/// parent/choice, but they are shipped anyway so the encoding is its own
+/// inverse (and so worker->coordinator candidates carry them).
+pub fn level_to_json(level: &LevelSoa, lo: usize, hi: usize) -> Json {
+    let dims = level.dims();
+    let mut g = Vec::with_capacity(hi - lo);
+    let mut c = Vec::with_capacity((hi - lo) * dims);
+    let mut p = Vec::with_capacity(hi - lo);
+    let mut ch = Vec::with_capacity(hi - lo);
+    for i in lo..hi {
+        g.push(Json::Num(level.gain(i)));
+        for &x in level.costs(i) {
+            c.push(Json::Num(x));
         }
         // u32 fits f64 exactly (including the u32::MAX root sentinel).
-        p.push(Json::Num(n.parent as f64));
-        ch.push(Json::Num(n.choice as f64));
+        p.push(Json::Num(level.parent(i) as f64));
+        ch.push(Json::Num(level.choice(i) as f64));
     }
     Json::Obj(vec![
         ("dims".into(), Json::Num(dims as f64)),
@@ -125,7 +129,7 @@ pub fn nodes_to_json(nodes: &[Node], dims: usize) -> Json {
     ])
 }
 
-pub fn nodes_from_json(j: &Json) -> Result<Vec<Node>> {
+pub fn level_from_json(j: &Json) -> Result<LevelSoa> {
     let dims = j.get("dims")?.usize()?;
     if dims == 0 {
         bail!("node batch needs at least one cost dimension");
@@ -143,19 +147,16 @@ pub fn nodes_from_json(j: &Json) -> Result<Vec<Node>> {
             ch.len()
         );
     }
-    let mut nodes = Vec::with_capacity(g.len());
+    let mut level = LevelSoa::new(dims);
+    level.reserve(g.len());
+    let mut costs = vec![0.0f64; dims];
     for i in 0..g.len() {
-        let costs = (0..dims)
-            .map(|d| c[i * dims + d].f64())
-            .collect::<Result<Vec<f64>>>()?;
-        nodes.push(Node {
-            gain: g[i].f64()?,
-            costs,
-            parent: p[i].f64()? as u32,
-            choice: ch[i].f64()? as u32,
-        });
+        for (d, slot) in costs.iter_mut().enumerate() {
+            *slot = c[i * dims + d].f64()?;
+        }
+        level.push(g[i].f64()?, &costs, p[i].f64()? as u32, ch[i].f64()? as u32);
     }
-    Ok(nodes)
+    Ok(level)
 }
 
 // ---- MCKP instance (de)serialization ------------------------------------
@@ -269,22 +270,27 @@ mod tests {
     }
 
     #[test]
-    fn nodes_roundtrip_bitwise() {
-        let nodes = vec![
-            Node { gain: 0.1 + 0.2, costs: vec![1.0 / 3.0, -0.0], parent: u32::MAX, choice: 0 },
-            Node { gain: f64::MIN_POSITIVE, costs: vec![1e300, 2.5e-17], parent: 41, choice: 3 },
-        ];
-        let j = nodes_to_json(&nodes, 2);
-        let back = nodes_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
-        assert_eq!(back.len(), nodes.len());
-        for (a, b) in nodes.iter().zip(&back) {
-            assert_eq!(a.gain.to_bits(), b.gain.to_bits());
-            assert_eq!(a.parent, b.parent);
-            assert_eq!(a.choice, b.choice);
-            for (x, y) in a.costs.iter().zip(&b.costs) {
+    fn levels_roundtrip_bitwise() {
+        let mut level = LevelSoa::new(2);
+        level.push(0.1 + 0.2, &[1.0 / 3.0, -0.0], u32::MAX, 0);
+        level.push(f64::MIN_POSITIVE, &[1e300, 2.5e-17], 41, 3);
+        let j = level_to_json(&level, 0, level.len());
+        let back = level_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.len(), level.len());
+        assert_eq!(back.dims(), level.dims());
+        for i in 0..level.len() {
+            assert_eq!(level.gain(i).to_bits(), back.gain(i).to_bits());
+            assert_eq!(level.parent(i), back.parent(i));
+            assert_eq!(level.choice(i), back.choice(i));
+            for (x, y) in level.costs(i).iter().zip(back.costs(i)) {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
         }
+        // Sub-range serialization ships exactly the requested rows.
+        let tail = level_from_json(&level_to_json(&level, 1, 2)).unwrap();
+        assert_eq!(tail.len(), 1);
+        assert_eq!(tail.gain(0).to_bits(), level.gain(1).to_bits());
+        assert_eq!(tail.parent(0), 41);
     }
 
     #[test]
@@ -307,8 +313,8 @@ mod tests {
     #[test]
     fn malformed_node_batches_are_rejected() {
         let j = Json::parse(r#"{"dims": 2, "g": [1.0], "c": [1.0], "p": [0], "ch": [0]}"#).unwrap();
-        assert!(nodes_from_json(&j).is_err(), "cost array shorter than dims * nodes");
+        assert!(level_from_json(&j).is_err(), "cost array shorter than dims * nodes");
         let j = Json::parse(r#"{"dims": 0, "g": [], "c": [], "p": [], "ch": []}"#).unwrap();
-        assert!(nodes_from_json(&j).is_err(), "zero dims");
+        assert!(level_from_json(&j).is_err(), "zero dims");
     }
 }

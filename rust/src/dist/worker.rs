@@ -14,7 +14,7 @@
 //! `shutdown`, plus the test-only hostile-fleet hooks `sleep` and `exit`.
 
 use super::protocol::{
-    err_response, mckp_from_json, msg_id, nodes_from_json, nodes_to_json, ok_response,
+    err_response, level_from_json, level_to_json, mckp_from_json, msg_id, ok_response,
     read_frame, request, write_frame,
 };
 use crate::backend::DeviceProfile;
@@ -192,14 +192,16 @@ fn handle(kind: &str, msg: &Json, ctxs: &mut HashMap<String, Ctx>) -> Result<Jso
             if j >= problem.n_groups() {
                 bail!("expand level {j} out of range ({} groups)", problem.n_groups());
             }
-            let states = nodes_from_json(msg.get("nodes")?)?;
-            for s in &states {
-                if s.costs.len() != problem.n_dims() {
-                    bail!("state carries {} cost dims, instance has {}", s.costs.len(), problem.n_dims());
-                }
+            let states = level_from_json(msg.get("nodes")?)?;
+            if states.dims() != problem.n_dims() {
+                bail!(
+                    "state carries {} cost dims, instance has {}",
+                    states.dims(),
+                    problem.n_dims()
+                );
             }
             let out = parametric::expand_chunk(problem, suffix_min, j, start, &states);
-            Ok(nodes_to_json(&out, problem.n_dims()))
+            Ok(level_to_json(&out, 0, out.len()))
         }
 
         "calibrate_demo" => {
@@ -339,20 +341,19 @@ mod tests {
                     ("ctx".to_string(), Json::Str("f0".into())),
                     ("j".to_string(), Json::Num(0.0)),
                     ("start".to_string(), Json::Num(0.0)),
-                    ("nodes".to_string(), nodes_to_json(&root, p.n_dims())),
+                    ("nodes".to_string(), level_to_json(&root, 0, root.len())),
                 ],
             ),
         ]);
         assert!(matches!(replies[1].get("ok").unwrap(), Json::Bool(true)));
-        let got = nodes_from_json(replies[1].get("result").unwrap()).unwrap();
+        let got = level_from_json(replies[1].get("result").unwrap()).unwrap();
         assert_eq!(got.len(), want.len());
-        for (a, b) in want.iter().zip(&got) {
-            assert_eq!(a.gain.to_bits(), b.gain.to_bits());
-            assert_eq!(a.costs.len(), b.costs.len());
-            for (x, y) in a.costs.iter().zip(&b.costs) {
+        for i in 0..want.len() {
+            assert_eq!(want.gain(i).to_bits(), got.gain(i).to_bits());
+            for (x, y) in want.costs(i).iter().zip(got.costs(i)) {
                 assert_eq!(x.to_bits(), y.to_bits());
             }
-            assert_eq!((a.parent, a.choice), (b.parent, b.choice));
+            assert_eq!((want.parent(i), want.choice(i)), (got.parent(i), got.choice(i)));
         }
     }
 

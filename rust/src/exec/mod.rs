@@ -19,6 +19,10 @@
 //! * [`WorkQueue`] — a dynamic task queue for irregular loads (workers may
 //!   push subtasks while draining), returning key-tagged results that the
 //!   caller folds in deterministic key order.
+//! * [`Scratch`] — a shared free list of recycled buffers, so per-chunk
+//!   fan-out allocations (the parametric DP's level fragments) are reused
+//!   across merges instead of re-allocated; recycling never changes a
+//!   computed value, only where it is written.
 //!
 //! **The determinism contract.**  Parallel output must be bit-identical to
 //! `threads == 1` output.  The pool guarantees ordered delivery, but the
@@ -34,9 +38,11 @@
 
 pub mod pool;
 pub mod queue;
+pub mod scratch;
 
 pub use pool::ExecPool;
 pub use queue::WorkQueue;
+pub use scratch::Scratch;
 
 /// Worker-thread budget for the parallel execution layer.
 ///

@@ -1,0 +1,100 @@
+//! Recycled-buffer free lists for the parallel execution layer.
+//!
+//! The parametric DP's state merge allocates one fragment buffer per
+//! fan-out chunk per group — thousands of short-lived column vectors on a
+//! paper-scale sweep.  [`Scratch`] keeps the retired buffers on a shared
+//! free list so each merge reuses the previous merge's allocations
+//! instead of hitting the allocator.  Recycling changes WHERE results are
+//! written, never WHAT is written, so it is invisible to the exec layer's
+//! `--threads N ≡ --threads 1` bit-identity contract; which buffer a
+//! worker happens to pop is the only nondeterminism, and no computed
+//! value ever depends on it.
+
+use std::sync::Mutex;
+
+/// A lock-guarded free list of reusable buffers.
+///
+/// [`Scratch::take`] pops a retired buffer (or makes a fresh
+/// `T::default()`); callers clear/refill it and hand it back with
+/// [`Scratch::put`] once the contents have been consumed.  Shareable
+/// across worker threads by reference.
+#[derive(Debug)]
+pub struct Scratch<T> {
+    free: Mutex<Vec<T>>,
+}
+
+impl<T> Default for Scratch<T> {
+    fn default() -> Self {
+        Scratch { free: Mutex::new(Vec::new()) }
+    }
+}
+
+impl<T: Default> Scratch<T> {
+    pub fn new() -> Scratch<T> {
+        Scratch::default()
+    }
+
+    /// Pop a retired buffer, or build a fresh default one.  The buffer
+    /// arrives as its PREVIOUS user left it — callers reset it before
+    /// writing.
+    pub fn take(&self) -> T {
+        self.free.lock().expect("scratch free list poisoned").pop().unwrap_or_default()
+    }
+
+    /// Retire a buffer back onto the free list for the next taker.
+    pub fn put(&self, buf: T) {
+        self.free.lock().expect("scratch free list poisoned").push(buf);
+    }
+
+    /// Buffers currently parked on the free list.
+    pub fn idle(&self) -> usize {
+        self.free.lock().expect("scratch free list poisoned").len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_on_an_empty_list_builds_a_default() {
+        let s: Scratch<Vec<u8>> = Scratch::new();
+        assert_eq!(s.idle(), 0);
+        assert!(s.take().is_empty());
+    }
+
+    #[test]
+    fn put_then_take_recycles_the_allocation() {
+        let s: Scratch<Vec<u8>> = Scratch::new();
+        let mut buf = s.take();
+        buf.reserve(1024);
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        s.put(buf);
+        assert_eq!(s.idle(), 1);
+        let again = s.take();
+        assert_eq!(again.capacity(), cap);
+        assert_eq!(again.as_ptr(), ptr);
+        assert_eq!(s.idle(), 0);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let s: Scratch<Vec<u64>> = Scratch::new();
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let s = &s;
+                scope.spawn(move || {
+                    for i in 0..32 {
+                        let mut buf = s.take();
+                        buf.clear();
+                        buf.push(t * 100 + i);
+                        assert_eq!(buf.last(), Some(&(t * 100 + i)));
+                        s.put(buf);
+                    }
+                });
+            }
+        });
+        assert!(s.idle() >= 1 && s.idle() <= 4, "free list holds the retired buffers");
+    }
+}

@@ -6,7 +6,9 @@
 //! * [`build`] assembles a frontier from pre-solved (mse, gain, config)
 //!   records — the parametric one-pass path (`Planner::frontier` for the
 //!   IP strategy feeds it `solver::parametric`'s chain-DP curve, computed
-//!   in a single sweep instead of one IP solve per knot);
+//!   in a single sweep instead of one IP solve per knot; warm re-solves
+//!   reuse the planner's committed `FrontierDp` arena, see
+//!   `Planner::frontier_delta`);
 //! * [`sweep`] runs a pointwise solver over the calibration's tau range
 //!   (paper grid + an even cover of [0, tau_max]) and bisects adjacent
 //!   taus whose optimal gains differ to localize the breakpoints — the

@@ -15,9 +15,10 @@ use crate::exec::{ExecCfg, ExecPool};
 use crate::metrics::{covered_layers, weight_bytes, Objective};
 use crate::numerics::Format;
 use crate::sensitivity::Calibration;
-use crate::solver::EPS;
+use crate::solver::{parametric, EPS};
 use crate::timing::TimeMeasurements;
 use anyhow::{bail, Result};
+use std::sync::Mutex;
 
 /// Immutable planning state for one model: artifacts + the three
 /// precomputed IP families.  Plain data — `Send + Sync`, so serving layers
@@ -34,6 +35,13 @@ pub struct Planner {
     /// are bit-identical at any setting (exec determinism contract), so
     /// this is pure throughput tuning.
     exec: ExecCfg,
+    /// Per-objective parametric-DP arenas ([`Objective::ALL`] order).  Each
+    /// holds the committed level columns of its family's last IP frontier
+    /// sweep, so a re-solve after a budget tweak or a single-group gain
+    /// change reuses the clean prefix (`FrontierDp::solve_delta`).  Interior
+    /// mutability keeps `frontier` callable through `&self`/`Arc<Planner>`;
+    /// curves are bit-identical whether the arena is cold or warm.
+    frontier_dp: [Mutex<parametric::FrontierDp>; 3],
 }
 
 impl Planner {
@@ -106,6 +114,7 @@ impl Planner {
             families,
             tau_maxes,
             exec: ExecCfg::from_env(),
+            frontier_dp: Default::default(),
         })
     }
 
@@ -250,18 +259,72 @@ impl Planner {
     /// with a pointwise IP solve (asserted in tests against the bisection
     /// oracle).
     pub fn frontier(&self, objective: Objective, strategy: Strategy) -> Result<Frontier> {
+        Ok(self.frontier_delta(objective, strategy)?.0)
+    }
+
+    /// [`Planner::frontier`], reporting how much committed DP state the
+    /// solve reused.  The IP path runs through the objective's persistent
+    /// [`parametric::FrontierDp`] arena: a warm re-solve after a tau-range
+    /// change re-filters committed levels instead of re-merging the chain,
+    /// and a single-group gain change re-merges only from that group
+    /// rightward.  The curve is bit-identical to a cold solve either way.
+    /// Non-IP strategies keep the bisection sweep and report a full solve.
+    pub fn frontier_delta(
+        &self,
+        objective: Objective,
+        strategy: Strategy,
+    ) -> Result<(Frontier, parametric::FrontierDelta)> {
         if strategy != Strategy::Ip {
-            return self.frontier_via_bisection(objective, strategy);
+            let f = self.frontier_via_bisection(objective, strategy)?;
+            let delta = parametric::FrontierDelta { full_solve: true, ..Default::default() };
+            return Ok((f, delta));
         }
         let exec = self.exec;
-        self.frontier_via(objective, |groups, calib, tau_max| {
-            crate::coordinator::ip::optimize_frontier(
+        let slot = &self.frontier_dp[objective_slot(objective)];
+        let mut delta = parametric::FrontierDelta { full_solve: true, ..Default::default() };
+        let f = self.frontier_via(objective, |groups, calib, tau_max| {
+            let mut dp = slot.lock().expect("frontier DP arena lock poisoned");
+            let (solves, d) = crate::coordinator::ip::optimize_frontier_incremental(
                 groups,
                 calib,
                 tau_max,
                 &ExecPool::new(exec),
-            )
-        })
+                &mut dp,
+            )?;
+            delta = d;
+            Ok(solves)
+        })?;
+        Ok((f, delta))
+    }
+
+    /// Hand over another planner's committed frontier-DP arenas to this
+    /// one.  `PlanService` calls this when a model is re-registered, so the
+    /// replacement planner's first frontier solve can still reuse whatever
+    /// levels survive the artifact diff (`Mckp::first_divergent_group`
+    /// guards correctness — incompatible state triggers a full solve).
+    pub fn adopt_frontier_state(&self, prev: &Planner) {
+        if std::ptr::eq(self, prev) {
+            return;
+        }
+        for (dst, src) in self.frontier_dp.iter().zip(&prev.frontier_dp) {
+            let mut src = src.lock().expect("frontier DP arena lock poisoned");
+            // Only move live state: the same planner pair is adopted once
+            // per registry alias, and a second pass over an already-drained
+            // source must not wipe what the first pass handed over.
+            if src.has_commit() {
+                let mut dst = dst.lock().expect("frontier DP arena lock poisoned");
+                *dst = std::mem::take(&mut *src);
+            }
+        }
+    }
+
+    /// Arena telemetry of an objective's last committed IP frontier solve
+    /// (zeros while cold) — surfaced by the solver bench.
+    pub fn frontier_dp_stats(&self, objective: Objective) -> parametric::DpStats {
+        self.frontier_dp[objective_slot(objective)]
+            .lock()
+            .expect("frontier DP arena lock poisoned")
+            .stats()
     }
 
     /// The IP frontier with the eq.-5 sweep supplied by `solve` — the seam
@@ -369,6 +432,16 @@ impl Planner {
         // output is identical to the sequential loop.
         let pool = ExecPool::new(self.exec);
         pool.try_par_map(cells.len(), |i| self.solve_on(&cells[i], &ExecPool::sequential()))
+    }
+}
+
+/// Index of an objective's slot in the planner's `[_; 3]` arrays
+/// ([`Objective::ALL`] order — matches `families`/`tau_maxes`).
+fn objective_slot(objective: Objective) -> usize {
+    match objective {
+        Objective::EmpiricalTime => 0,
+        Objective::TheoreticalTime => 1,
+        Objective::Memory => 2,
     }
 }
 

@@ -20,6 +20,7 @@ use super::request::PlanRequest;
 use crate::coordinator::Strategy;
 use crate::exec::ExecPool;
 use crate::metrics::Objective;
+use crate::solver::parametric;
 use crate::util::Json;
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -112,11 +113,18 @@ impl PlanService {
                 self.inner.frontiers.lock().expect("frontier cache lock poisoned");
             cache.cells.retain(|k, _| k.0 != key.0);
         }
-        self.inner
-            .planners
-            .write()
-            .expect("planner registry lock poisoned")
-            .insert(key, planner);
+        let mut planners =
+            self.inner.planners.write().expect("planner registry lock poisoned");
+        // The curves are invalidated, but the predecessor's committed
+        // frontier-DP levels carry over: if the replacement's tables match
+        // (or diverge late in the chain), its first sweep re-solves
+        // incrementally instead of from scratch.  Safe for ANY replacement —
+        // the DP diffs the instances and falls back to a full solve on
+        // mismatch.
+        if let Some(old) = planners.get(&key) {
+            planner.adopt_frontier_state(old);
+        }
+        planners.insert(key, planner);
     }
 
     /// Stage every model on `engine` and register its planner — both as
@@ -242,47 +250,7 @@ impl PlanService {
         strategy: Strategy,
     ) -> Result<Arc<Frontier>> {
         let planner = self.planner_for(model, device)?;
-        let key: FrontierKey = (
-            model.to_string(),
-            Arc::as_ptr(&planner) as usize,
-            objective.key(),
-            strategy.key(),
-        );
-        let cell: FrontierCell = {
-            let mut cache =
-                self.inner.frontiers.lock().expect("frontier cache lock poisoned");
-            cache.tick += 1;
-            let now = cache.tick;
-            if let Some((cell, stamp)) = cache.cells.get_mut(&key) {
-                *stamp = now;
-                cell.clone()
-            } else {
-                let cell = FrontierCell::default();
-                cache.cells.insert(key, (cell.clone(), now));
-                // LRU eviction: drop least-recently-touched cells over the
-                // cap (never the one just inserted — it holds the max
-                // stamp).  Evicting a cell mid-sweep is safe: the sweeping
-                // thread owns its own Arc to the cell; only the CACHING of
-                // that curve is lost.
-                let cap = self.inner.cache_cap.load(Ordering::Relaxed);
-                if cap > 0 {
-                    while cache.cells.len() > cap {
-                        let victim = cache
-                            .cells
-                            .iter()
-                            .min_by_key(|(_, v)| v.1)
-                            .map(|(k, _)| k.clone());
-                        match victim {
-                            Some(v) => {
-                                cache.cells.remove(&v);
-                            }
-                            None => break,
-                        }
-                    }
-                }
-                cell
-            }
-        };
+        let cell = self.frontier_cell(model, &planner, objective, strategy);
         let mut slot = cell.lock().expect("frontier cell lock poisoned");
         let mut sp = crate::obs::span("service.frontier");
         if let Some(f) = slot.as_ref() {
@@ -296,6 +264,88 @@ impl PlanService {
         sp.counter("points", f.points.len() as f64);
         *slot = Some(f.clone());
         Ok(f)
+    }
+
+    /// Recompute one (model, device, objective, strategy) frontier IN
+    /// PLACE: the sweep always runs — a cached curve is replaced, never
+    /// served — so callers refreshing after an artifact or budget change
+    /// get a provably current curve.  The solve goes through
+    /// [`Planner::frontier_delta`], so a planner that already committed DP
+    /// levels for this objective re-solves incrementally; the returned
+    /// [`parametric::FrontierDelta`] says how much it reused.  Counts as a
+    /// solve (never a hit) in the service counters, and re-stamps the
+    /// cell's LRU recency like any other access.
+    pub fn refresh_frontier(
+        &self,
+        model: &str,
+        device: Option<&str>,
+        objective: Objective,
+        strategy: Strategy,
+    ) -> Result<(Arc<Frontier>, parametric::FrontierDelta)> {
+        let planner = self.planner_for(model, device)?;
+        let cell = self.frontier_cell(model, &planner, objective, strategy);
+        let mut slot = cell.lock().expect("frontier cell lock poisoned");
+        let mut sp = crate::obs::span("service.frontier");
+        sp.counter("cache_hit", 0.0);
+        let (f, delta) = planner.frontier_delta(objective, strategy)?;
+        let f = Arc::new(f);
+        self.inner.frontier_solves.fetch_add(1, Ordering::Relaxed);
+        sp.counter("points", f.points.len() as f64);
+        *slot = Some(f.clone());
+        Ok((f, delta))
+    }
+
+    /// The cache cell for one resolved (model, planner, objective,
+    /// strategy) — re-stamping its LRU recency, inserting (and evicting
+    /// over the cap) when absent.  Shared by the hit-or-sweep path
+    /// ([`PlanService::frontier_for`]) and the always-sweep path
+    /// ([`PlanService::refresh_frontier`]) so both agree on keys and
+    /// eviction.
+    fn frontier_cell(
+        &self,
+        model: &str,
+        planner: &Arc<Planner>,
+        objective: Objective,
+        strategy: Strategy,
+    ) -> FrontierCell {
+        let key: FrontierKey = (
+            model.to_string(),
+            Arc::as_ptr(planner) as usize,
+            objective.key(),
+            strategy.key(),
+        );
+        let mut cache = self.inner.frontiers.lock().expect("frontier cache lock poisoned");
+        cache.tick += 1;
+        let now = cache.tick;
+        if let Some((cell, stamp)) = cache.cells.get_mut(&key) {
+            *stamp = now;
+            cell.clone()
+        } else {
+            let cell = FrontierCell::default();
+            cache.cells.insert(key, (cell.clone(), now));
+            // LRU eviction: drop least-recently-touched cells over the
+            // cap (never the one just inserted — it holds the max
+            // stamp).  Evicting a cell mid-sweep is safe: the sweeping
+            // thread owns its own Arc to the cell; only the CACHING of
+            // that curve is lost.
+            let cap = self.inner.cache_cap.load(Ordering::Relaxed);
+            if cap > 0 {
+                while cache.cells.len() > cap {
+                    let victim = cache
+                        .cells
+                        .iter()
+                        .min_by_key(|(_, v)| v.1)
+                        .map(|(k, _)| k.clone());
+                    match victim {
+                        Some(v) => {
+                            cache.cells.remove(&v);
+                        }
+                        None => break,
+                    }
+                }
+            }
+            cell
+        }
     }
 
     /// How many frontier sweeps actually ran (cache misses).
@@ -674,6 +724,73 @@ mod tests {
         assert_eq!(svc.frontier_solves(), 4);
         // Every call above was exactly one hit or one solve.
         assert_eq!(svc.frontier_hits() + svc.frontier_solves(), 6);
+    }
+
+    #[test]
+    fn hot_entry_survives_an_eviction_burst() {
+        // Regression for the LRU recency audit: the cache-hit path must
+        // re-stamp the entry's tick, or a burst of fresh keys evicts the
+        // hottest curve in the cache.
+        let svc = demo_service();
+        svc.set_cache_cap(2);
+        svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        let burst = [
+            (Objective::Memory, Strategy::Ip),
+            (Objective::TheoreticalTime, Strategy::Ip),
+            (Objective::EmpiricalTime, Strategy::Random),
+            (Objective::Memory, Strategy::Random),
+        ];
+        for (objective, strategy) in burst {
+            // Touch the hot entry, then push a cold key over the cap: the
+            // eviction victim must always be the PREVIOUS burst key.
+            svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+            svc.frontier("demo", objective, strategy).unwrap();
+        }
+        assert_eq!(svc.frontier_solves(), 5, "each burst key swept once");
+        assert_eq!(svc.frontier_hits(), 4, "every hot touch must hit");
+        svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        assert_eq!(svc.frontier_solves(), 5, "hot entry evicted despite its recency");
+        assert_eq!(svc.frontier_hits(), 5);
+    }
+
+    #[test]
+    fn refresh_frontier_reuses_committed_dp_levels() {
+        let svc = demo_service();
+        let a = svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        assert_eq!(svc.frontier_solves(), 1);
+        let (b, delta) = svc
+            .refresh_frontier("demo", None, Objective::EmpiricalTime, Strategy::Ip)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &b), "refresh must re-solve, not serve the cache");
+        assert_eq!(*a, *b, "a warm re-solve must reproduce the curve");
+        assert!(!delta.full_solve, "second solve must reuse the committed levels");
+        assert_eq!(delta.solved_groups, 0, "nothing changed, so no group re-merges");
+        assert_eq!(svc.frontier_solves(), 2);
+        assert_eq!(svc.frontier_hits(), 0);
+        // The refreshed curve now serves cached lookups.
+        let c = svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        assert!(Arc::ptr_eq(&b, &c));
+        assert_eq!(svc.frontier_hits(), 1);
+    }
+
+    #[test]
+    fn reregistered_planner_inherits_frontier_dp_state() {
+        let svc = demo_service();
+        svc.frontier("demo", Objective::EmpiricalTime, Strategy::Ip).unwrap();
+        // Re-stage the same artifacts under the same name: the replacement
+        // planner adopts its predecessor's committed DP levels, so its
+        // first sweep is incremental even though the curve cache was
+        // (correctly) invalidated.
+        let (graph, qlayers, calibration) = demo_model(2, 7);
+        let mut engine = Engine::new();
+        engine.register_synthetic("demo", graph, qlayers, calibration);
+        svc.register("demo", engine.planner("demo").unwrap());
+        let (_, delta) = svc
+            .refresh_frontier("demo", None, Objective::EmpiricalTime, Strategy::Ip)
+            .unwrap();
+        assert!(!delta.full_solve, "adopted DP state must survive re-registration");
+        assert_eq!(delta.solved_groups, 0);
+        assert_eq!(svc.frontier_solves(), 2);
     }
 
     #[test]

@@ -22,8 +22,12 @@
 //!     the ENTIRE gain-vs-primary-cost Pareto curve (exact
 //!     single-constraint; dominance-bounded near-exact multi-constraint
 //!     with per-point exactness flags and a branch & bound fallback).
-//!     Backs `Planner::frontier` so a K-knot frontier costs one sweep, not
-//!     K exact solves.
+//!     Levels live in arena-recycled structure-of-arrays columns
+//!     (`LevelSoa`), an optional epsilon grid pre-prunes dominated states
+//!     (`frontier_quantized`), and a persistent `FrontierDp` re-solves
+//!     committed instances incrementally after budget or single-group
+//!     table changes.  Backs `Planner::frontier` so a K-knot frontier
+//!     costs one sweep, not K exact solves — and a warm re-solve far less.
 //!
 //! `Mckp::brute_force` stays as the cross-solver oracle for tests.  Every
 //! float sort in this module is total (`f64::total_cmp` or an explicit

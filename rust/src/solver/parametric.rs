@@ -30,6 +30,35 @@
 //! enters exactly where the pointwise solvers use it — budget feasibility
 //! (`cost <= budget + EPS`) — so tie-breaking is consistent end to end.
 //!
+//! ## Memory layout
+//!
+//! DP levels live in [`LevelSoa`]: four flat columns (`gain`, node-major
+//! `cost`, `parent`, `choice`) instead of a `Vec` of parent-linked state
+//! structs.  A level is four allocations however many states it holds,
+//! expansion writes straight into recycled column buffers (a
+//! [`Scratch`] free list), and [`FrontierDp`] retains the committed
+//! levels as an arena across `Planner::frontier` calls.  Allocation
+//! reuse never changes a computed value, so the layout is invisible to
+//! the bit-identity contracts.  See DESIGN.md §4h.
+//!
+//! ## Grid-quantized pruning
+//!
+//! [`frontier_quantized`] snaps cost vectors onto an epsilon grid before
+//! the exact total-order sort and keeps one winner per grid cell.  The
+//! exact path ([`frontier_with`]) is untouched when the grid is
+//! disabled; when a rejection is not provably harmless (the cell winner
+//! does not dominate the loser outright) the curve and its knots drop
+//! their `exact` flags, so quantized curves never masquerade as proven
+//! optima.
+//!
+//! ## Incremental re-solve
+//!
+//! [`FrontierDp`] commits the DP levels of its last solve — solved
+//! budget-FREE, with feasibility filtered once at the end — and on the
+//! next solve re-merges only from the first group whose gain/cost tables
+//! actually changed.  Pure tau-range or memory-cap (budget) changes
+//! re-run no merges at all.  [`FrontierDelta`] reports the reuse.
+//!
 //! ## Determinism
 //!
 //! State expansion fans out over an [`ExecPool`] in fixed-size chunks whose
@@ -39,9 +68,13 @@
 //! coordinates, then the `(parent, choice)` key), so the curve is
 //! bit-identical at any `--threads` setting: the exec layer's contract.
 
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
 use super::branch_bound;
 use super::problem::Mckp;
 use super::EPS;
+use crate::exec::scratch::Scratch;
 use crate::exec::ExecPool;
 
 /// Kept-state cap per merge on single-constraint instances.  The 2-d
@@ -58,22 +91,110 @@ const MAX_STATES_MULTI: usize = 2_048;
 /// must match the in-process chunking exactly.
 pub(crate) const EXPAND_CHUNK: usize = 512;
 
-/// One DP state: a choice prefix's accumulated (gain, costs), linked to
-/// its parent state so full choice vectors are reconstructed only for the
-/// states that survive to the end.
+/// One DP level in structure-of-arrays layout: row `i` is the state
+/// `(gain[i], cost[i*dims..(i+1)*dims], parent[i], choice[i])`, with
+/// `cost` node-major and `parent` indexing the previous level's rows
+/// (`u32::MAX` at the root).  Replaces the per-merge `Vec` of
+/// parent-linked `Node` structs: one level is four flat allocations,
+/// recycled across merges and — via [`FrontierDp`] — across
+/// `Planner::frontier` calls.
 ///
-/// `pub(crate)` (fields included) so the distributed coordinator
-/// (`crate::dist`) can ship state chunks to worker processes and run the
-/// SAME expansion/prune code on both sides of the wire.
-#[derive(Clone, Debug)]
-pub(crate) struct Node {
-    pub(crate) gain: f64,
-    /// Per-dimension accumulated cost, summed in group order — bit-equal
-    /// to [`Mckp::evaluate`] of the reconstructed choice.
-    pub(crate) costs: Vec<f64>,
-    /// Index into the previous level's kept states (u32::MAX at the root).
-    pub(crate) parent: u32,
-    pub(crate) choice: u32,
+/// Public so the distributed coordinator can ship level slices to worker
+/// processes (`dist::protocol::{level_to_json, level_from_json}`) and
+/// run the SAME expansion code on both sides of the wire.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LevelSoa {
+    dims: usize,
+    gain: Vec<f64>,
+    cost: Vec<f64>,
+    parent: Vec<u32>,
+    choice: Vec<u32>,
+}
+
+impl LevelSoa {
+    pub fn new(dims: usize) -> LevelSoa {
+        LevelSoa { dims, ..LevelSoa::default() }
+    }
+
+    /// Number of cost dimensions per state row.
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        self.gain.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gain.is_empty()
+    }
+
+    /// Drop all rows and re-dimension, KEEPING the four column
+    /// allocations — the arena-recycling entry point.
+    pub fn reset(&mut self, dims: usize) {
+        self.dims = dims;
+        self.gain.clear();
+        self.cost.clear();
+        self.parent.clear();
+        self.choice.clear();
+    }
+
+    /// Reserve room for `rows` additional states.
+    pub fn reserve(&mut self, rows: usize) {
+        self.gain.reserve(rows);
+        self.cost.reserve(rows * self.dims);
+        self.parent.reserve(rows);
+        self.choice.reserve(rows);
+    }
+
+    pub fn push(&mut self, gain: f64, costs: &[f64], parent: u32, choice: u32) {
+        debug_assert_eq!(costs.len(), self.dims);
+        self.gain.push(gain);
+        self.cost.extend_from_slice(costs);
+        self.parent.push(parent);
+        self.choice.push(choice);
+    }
+
+    pub fn gain(&self, i: usize) -> f64 {
+        self.gain[i]
+    }
+
+    /// Per-dimension accumulated costs of row `i`, summed in group order
+    /// — bit-equal to [`Mckp::evaluate`] of the reconstructed choice.
+    pub fn costs(&self, i: usize) -> &[f64] {
+        &self.cost[i * self.dims..(i + 1) * self.dims]
+    }
+
+    pub fn parent(&self, i: usize) -> u32 {
+        self.parent[i]
+    }
+
+    pub fn choice(&self, i: usize) -> u32 {
+        self.choice[i]
+    }
+
+    /// Move every row of `other` onto the end of `self` (splices
+    /// expansion fragments back together in chunk order; `other` is left
+    /// empty with its capacity intact).
+    pub fn append(&mut self, other: &mut LevelSoa) {
+        debug_assert_eq!(self.dims, other.dims);
+        self.gain.append(&mut other.gain);
+        self.cost.append(&mut other.cost);
+        self.parent.append(&mut other.parent);
+        self.choice.append(&mut other.choice);
+    }
+
+    /// Copy row `i` of `src` onto the end of `self`.
+    fn push_row(&mut self, src: &LevelSoa, i: usize) {
+        self.push(src.gain[i], src.costs(i), src.parent[i], src.choice[i]);
+    }
+
+    /// Heap bytes currently reserved by the four columns (arena
+    /// accounting for [`DpStats`]).
+    pub fn heap_bytes(&self) -> usize {
+        (self.gain.capacity() + self.cost.capacity()) * std::mem::size_of::<f64>()
+            + (self.parent.capacity() + self.choice.capacity()) * std::mem::size_of::<u32>()
+    }
 }
 
 /// One knot of the parametric curve: a full assignment Pareto-optimal in
@@ -86,9 +207,10 @@ pub struct ParamPoint {
     /// Per-dimension cost; summation order matches [`Mckp::evaluate`]
     /// bit-for-bit (`costs[0]` is the primary / loss-MSE dimension).
     pub costs: Vec<f64>,
-    /// False when the state cap thinned the sweep this point came from:
-    /// the knot is then a dominance-bounded lower estimate, not a proven
-    /// optimum — see [`harden_with`].
+    /// False when the state cap thinned — or the quantization grid
+    /// inexactly pruned — the sweep this point came from: the knot is
+    /// then a dominance-bounded lower estimate, not a proven optimum —
+    /// see [`harden_with`].
     pub exact: bool,
 }
 
@@ -108,10 +230,11 @@ impl ParamPoint {
 pub struct ParametricCurve {
     /// Strictly increasing in BOTH primary cost and gain.
     pub points: Vec<ParamPoint>,
-    /// True when the sweep was exhaustive: no thinning anywhere, so the
-    /// knot SET is complete and every knot is a proven optimum.  False
-    /// after thinning — even once [`harden_with`] proves the surviving
-    /// knots optimal, knots dropped between them stay missing.
+    /// True when the sweep was exhaustive: no thinning and no inexact
+    /// grid rejection anywhere, so the knot SET is complete and every
+    /// knot is a proven optimum.  False after thinning — even once
+    /// [`harden_with`] proves the surviving knots optimal, knots dropped
+    /// between them stay missing.
     pub exact: bool,
 }
 
@@ -146,37 +269,50 @@ pub fn frontier(p: &Mckp) -> ParametricCurve {
 /// curve, fanning the per-group state merge out over `pool`.  Output is
 /// bit-identical at any thread count.
 pub fn frontier_with(p: &Mckp, pool: &ExecPool) -> ParametricCurve {
+    sweep(p, pool, None)
+}
+
+/// [`frontier_with`] with grid-quantized dominance pruning: cost vectors
+/// snap onto a `cell`-sized grid and only the best-gain state per cell
+/// reaches the exact sort.  `cell <= 0` disables the grid (the exact
+/// path, bit-identical to [`frontier_with`]).  Rejections that the exact
+/// dominance sweep would have made anyway keep the curve `exact`; any
+/// other rejection clears the `exact` flags — the curve is then a
+/// lower-envelope estimate whose knots are still real, feasible
+/// assignments (gains never overstate the optimum).
+pub fn frontier_quantized(p: &Mckp, pool: &ExecPool, cell: f64) -> ParametricCurve {
+    sweep(p, pool, if cell > 0.0 { Some(cell) } else { None })
+}
+
+/// The classic bounded sweep: suffix-budget filtering at expansion,
+/// optional grid quantization at pruning.
+fn sweep(p: &Mckp, pool: &ExecPool, grid: Option<f64>) -> ParametricCurve {
     let n = p.n_groups();
     let mut root_sp = crate::obs::span("solver.frontier");
     root_sp.counter("groups", n as f64);
     let suffix_min = suffix_mins(p);
-    let mut levels: Vec<Vec<Node>> = Vec::with_capacity(n + 1);
+    let scratch: Scratch<LevelSoa> = Scratch::default();
+    let mut levels: Vec<LevelSoa> = Vec::with_capacity(n + 1);
     levels.push(root_level(p.n_dims()));
     let mut truncated = false;
     for j in 0..n {
         let mut sp = crate::obs::span("solver.dp.group");
         sp.counter("group", j as f64);
-        let prev = &levels[j];
         // State-merge fan-out: fixed-size chunks of the surviving states
         // expand in parallel; concatenation is in chunk order, so the
         // candidate list is identical at any thread count.
-        let cands: Vec<Node> = pool
-            .par_chunks(prev, EXPAND_CHUNK, |start, chunk| {
-                expand_chunk(p, &suffix_min, j, start, chunk)
-            })
-            .into_iter()
-            .flatten()
-            .collect();
+        let cands = expand_level(p, Some(&suffix_min), j, &levels[j], pool, &scratch);
         let n_cands = cands.len();
         sp.counter("candidates", n_cands as f64);
-        let (kept, thinned) = prune_level(p, cands);
+        let (kept, thinned, inexact) = prune_level_with(p, &cands, grid);
+        scratch.put(cands);
         sp.counter("kept", kept.len() as f64);
         sp.counter("pruned", (n_cands - kept.len()) as f64);
         sp.counter("thinned", if thinned { 1.0 } else { 0.0 });
-        truncated |= thinned;
+        truncated |= thinned || inexact;
         levels.push(kept);
     }
-    let curve = finish(n, &levels, truncated);
+    let curve = finish(n, &levels, truncated, None);
     root_sp.counter("knots", curve.points.len() as f64);
     root_sp.counter("exact", if curve.exact { 1.0 } else { 0.0 });
     curve
@@ -198,74 +334,155 @@ pub(crate) fn suffix_mins(p: &Mckp) -> Vec<Vec<f64>> {
 }
 
 /// The DP's root: one empty prefix.
-pub(crate) fn root_level(dims: usize) -> Vec<Node> {
-    vec![Node { gain: 0.0, costs: vec![0.0; dims], parent: u32::MAX, choice: 0 }]
+pub(crate) fn root_level(dims: usize) -> LevelSoa {
+    let mut root = LevelSoa::new(dims);
+    root.push(0.0, &vec![0.0; dims], u32::MAX, 0);
+    root
 }
 
-/// Expand one fixed-size chunk of level-`j` states with every group-`j`
+/// Expand rows `range` of level-`j` states with every group-`j` choice
+/// into `out`, numbering parents `parent_base + row`.  With
+/// `suffix_min = Some(..)` candidates are budget-pruned through the
+/// suffix lower bounds (the classic bounded sweep); `None` expands
+/// budget-free ([`FrontierDp`]'s reusable levels, feasibility-filtered
+/// once in [`finish`]).
+fn expand_range(
+    p: &Mckp,
+    suffix_min: Option<&[Vec<f64>]>,
+    j: usize,
+    parent_base: usize,
+    states: &LevelSoa,
+    range: std::ops::Range<usize>,
+    out: &mut LevelSoa,
+) {
+    let dims = states.dims;
+    debug_assert_eq!(dims, p.n_dims());
+    let k = p.gains[j].len();
+    for off in range {
+        let parent = (parent_base + off) as u32;
+        let costs = states.costs(off);
+        'choices: for i in 0..k {
+            let base = out.cost.len();
+            for d in 0..dims {
+                let c = costs[d] + p.costs[d].table[j][i];
+                if let Some(sm) = suffix_min {
+                    if c + sm[d][j + 1] > p.budgets[d] + EPS {
+                        out.cost.truncate(base);
+                        continue 'choices;
+                    }
+                }
+                out.cost.push(c);
+            }
+            out.gain.push(states.gain[off] + p.gains[j][i]);
+            out.parent.push(parent);
+            out.choice.push(i as u32);
+        }
+    }
+}
+
+/// Expand one fixed-size chunk of level-`j` states (rows `0..len`, with
+/// absolute parent indices starting at `start`) with every group-`j`
 /// choice, budget-pruned through the suffix lower bounds.  This is the
 /// unit of remote work in the distributed path: coordinator and worker
-/// both call THIS function, so sharding cannot change a single bit.
+/// both call THIS expansion, so sharding cannot change a single bit.
 pub(crate) fn expand_chunk(
     p: &Mckp,
     suffix_min: &[Vec<f64>],
     j: usize,
     start: usize,
-    chunk: &[Node],
-) -> Vec<Node> {
-    let dims = p.n_dims();
-    let k = p.gains[j].len();
-    let mut out: Vec<Node> = Vec::with_capacity(chunk.len() * k);
-    for (off, s) in chunk.iter().enumerate() {
-        let parent = (start + off) as u32;
-        'choices: for i in 0..k {
-            let mut costs = s.costs.clone();
-            for d in 0..dims {
-                let c = costs[d] + p.costs[d].table[j][i];
-                if c + suffix_min[d][j + 1] > p.budgets[d] + EPS {
-                    continue 'choices;
-                }
-                costs[d] = c;
-            }
-            out.push(Node { gain: s.gain + p.gains[j][i], costs, parent, choice: i as u32 });
-        }
-    }
+    states: &LevelSoa,
+) -> LevelSoa {
+    let mut out = LevelSoa::new(states.dims());
+    out.reserve(states.len() * p.gains[j].len());
+    expand_range(p, Some(suffix_min), j, start, states, 0..states.len(), &mut out);
     out
 }
 
+/// In-process level expansion: fan rows out over `pool` in
+/// [`EXPAND_CHUNK`]-sized index ranges, writing into recycled `scratch`
+/// buffers, and splice the fragments back in chunk order.
+fn expand_level(
+    p: &Mckp,
+    suffix_min: Option<&[Vec<f64>]>,
+    j: usize,
+    prev: &LevelSoa,
+    pool: &ExecPool,
+    scratch: &Scratch<LevelSoa>,
+) -> LevelSoa {
+    let dims = p.n_dims();
+    let k = p.gains[j].len();
+    let n_chunks = prev.len().div_ceil(EXPAND_CHUNK);
+    let mut frags = pool.par_map(n_chunks, |ci| {
+        let lo = ci * EXPAND_CHUNK;
+        let hi = (lo + EXPAND_CHUNK).min(prev.len());
+        let mut out = scratch.take();
+        out.reset(dims);
+        out.reserve((hi - lo) * k);
+        expand_range(p, suffix_min, j, 0, prev, lo..hi, &mut out);
+        out
+    });
+    if frags.len() == 1 {
+        return frags.pop().expect("one fragment");
+    }
+    let mut cands = scratch.take();
+    cands.reset(dims);
+    cands.reserve(frags.iter().map(LevelSoa::len).sum());
+    for mut f in frags {
+        cands.append(&mut f);
+        scratch.put(f);
+    }
+    cands
+}
+
 /// Sort + Pareto-prune + (past the cap) thin one level's candidates.
-/// Returns the kept antichain and whether thinning bit.  Pure in the
+/// Returns the kept antichain and the thinning bit.  Pure in the
 /// candidate list, so any sharding that reproduces the candidate order
 /// reproduces the level exactly.
-pub(crate) fn prune_level(p: &Mckp, mut cands: Vec<Node>) -> (Vec<Node>, bool) {
+pub(crate) fn prune_level(p: &Mckp, cands: &LevelSoa) -> (LevelSoa, bool) {
+    let (kept, thinned, _) = prune_level_with(p, cands, None);
+    (kept, thinned)
+}
+
+/// [`prune_level`] with an optional quantization grid: `Some(cell)` runs
+/// the grid pre-pass first.  The third flag is true when some grid
+/// rejection was NOT provably harmless (see [`grid_survivors`]).
+fn prune_level_with(p: &Mckp, cands: &LevelSoa, grid: Option<f64>) -> (LevelSoa, bool, bool) {
     let dims = p.n_dims();
     let cap = if dims == 1 { MAX_STATES_SINGLE } else { MAX_STATES_MULTI };
+    let (mut idx, grid_inexact) = match grid {
+        Some(cell) => grid_survivors(cands, cell),
+        None => ((0..cands.len() as u32).collect(), false),
+    };
     // Total-order sort: primary cost asc, gain desc, secondary costs
     // asc, then the (parent, choice) key — deterministic down to exact
-    // ties, NaN-total by construction (`total_cmp`).
-    cands.sort_by(|a, b| {
-        a.costs[0]
-            .total_cmp(&b.costs[0])
-            .then(b.gain.total_cmp(&a.gain))
+    // ties, NaN-total by construction (`total_cmp`).  Row keys are
+    // unique in (parent, choice), so the order is strict and
+    // `sort_unstable` cannot introduce nondeterminism.
+    idx.sort_unstable_by(|&ia, &ib| {
+        let (a, b) = (ia as usize, ib as usize);
+        cands.cost[a * dims]
+            .total_cmp(&cands.cost[b * dims])
+            .then(cands.gain[b].total_cmp(&cands.gain[a]))
             .then_with(|| {
                 for d in 1..dims {
-                    let o = a.costs[d].total_cmp(&b.costs[d]);
+                    let o = cands.cost[a * dims + d].total_cmp(&cands.cost[b * dims + d]);
                     if o != std::cmp::Ordering::Equal {
                         return o;
                     }
                 }
-                (a.parent, a.choice).cmp(&(b.parent, b.choice))
+                (cands.parent[a], cands.choice[a]).cmp(&(cands.parent[b], cands.choice[b]))
             })
     });
 
-    let mut kept: Vec<Node> = Vec::new();
+    let mut kept = LevelSoa::new(dims);
     if dims == 1 {
         // 2-d Pareto sweep: in cost order, keep strictly rising gain.
         let mut best_gain = f64::NEG_INFINITY;
-        for c in cands {
-            if c.gain > best_gain {
-                best_gain = c.gain;
-                kept.push(c);
+        for &ia in &idx {
+            let i = ia as usize;
+            if cands.gain[i] > best_gain {
+                best_gain = cands.gain[i];
+                kept.push_row(cands, i);
             }
         }
     } else {
@@ -273,44 +490,112 @@ pub(crate) fn prune_level(p: &Mckp, mut cands: Vec<Node>) -> (Vec<Node>, bool) {
         // state matches or beats it in gain AND every cost.  (The sort
         // order guarantees no later candidate can dominate an earlier
         // kept one, so `kept` stays an antichain.)
-        for c in cands {
-            let dominated = kept
-                .iter()
-                .any(|a| a.gain >= c.gain && (0..dims).all(|d| a.costs[d] <= c.costs[d]));
+        for &ia in &idx {
+            let i = ia as usize;
+            let dominated = (0..kept.len()).any(|a| {
+                kept.gain[a] >= cands.gain[i]
+                    && (0..dims).all(|d| kept.cost[a * dims + d] <= cands.cost[i * dims + d])
+            });
             if !dominated {
-                kept.push(c);
+                kept.push_row(cands, i);
             }
         }
     }
     if kept.len() > cap {
-        (thin(kept, cap), true)
+        (thin(&kept, cap), true, grid_inexact)
     } else {
-        (kept, false)
+        (kept, false, grid_inexact)
     }
 }
 
+/// Grid pre-pass: bucket candidates by their per-dimension cost cell
+/// (`floor(cost / cell)`), keep one winner per bucket — max gain, ties to
+/// the earliest candidate — and reject the rest before the exact sort.
+/// Buckets are looked up by key only (map iteration order is never
+/// observed) and survivors keep candidate order, so the pass is
+/// deterministic at any thread count.  A rejection is *harmless* when
+/// the bucket winner outright dominates the loser — the exact sweep
+/// would prune it too, so the output is bit-identical and stays exact.
+/// The returned flag is true only when some rejection was not harmless:
+/// curve gains may then under-estimate the optimum and `exact` must
+/// drop.
+fn grid_survivors(cands: &LevelSoa, cell: f64) -> (Vec<u32>, bool) {
+    let dims = cands.dims;
+    let inv = 1.0 / cell;
+    let len = cands.len();
+    let mut keys: Vec<i64> = Vec::with_capacity(len * dims);
+    for &c in &cands.cost {
+        // f64 -> i64 casts saturate, so even overflowed products map
+        // deterministically (if coarsely) onto the grid.
+        keys.push((c * inv).floor() as i64);
+    }
+    let mut winner: HashMap<&[i64], u32> = HashMap::with_capacity(len);
+    for i in 0..len {
+        match winner.entry(&keys[i * dims..(i + 1) * dims]) {
+            Entry::Vacant(v) => {
+                v.insert(i as u32);
+            }
+            Entry::Occupied(mut o) => {
+                if cands.gain[i] > cands.gain[*o.get() as usize] {
+                    o.insert(i as u32);
+                }
+            }
+        }
+    }
+    let mut idx: Vec<u32> = Vec::with_capacity(winner.len());
+    let mut inexact = false;
+    for i in 0..len {
+        let w = winner[&keys[i * dims..(i + 1) * dims]] as usize;
+        if w == i {
+            idx.push(i as u32);
+        } else if !inexact {
+            let dominated = cands.gain[w] >= cands.gain[i]
+                && (0..dims).all(|d| cands.cost[w * dims + d] <= cands.cost[i * dims + d]);
+            inexact = !dominated;
+        }
+    }
+    (idx, inexact)
+}
+
 /// Reconstruct every surviving state's full choice vector through the
-/// parent links, then project onto the primary-cost curve.
-pub(crate) fn finish(n: usize, levels: &[Vec<Node>], truncated: bool) -> ParametricCurve {
-    let mut points: Vec<ParamPoint> = Vec::with_capacity(levels[n].len());
-    for node in &levels[n] {
+/// parent links, then project onto the primary-cost curve.  With
+/// `budgets = Some(..)` final states exceeding any budget (shared EPS
+/// slack) are skipped first — how [`FrontierDp`] turns its budget-free
+/// levels into the bounded curve; the classic sweep passes `None`
+/// because its expansion filter already enforced feasibility.
+pub(crate) fn finish(
+    n: usize,
+    levels: &[LevelSoa],
+    truncated: bool,
+    budgets: Option<&[f64]>,
+) -> ParametricCurve {
+    let last = &levels[n];
+    let mut points: Vec<ParamPoint> = Vec::with_capacity(last.len());
+    'states: for s in 0..last.len() {
+        if let Some(budgets) = budgets {
+            for (d, &b) in budgets.iter().enumerate() {
+                if last.cost[s * last.dims + d] > b + EPS {
+                    continue 'states;
+                }
+            }
+        }
         let mut choice = vec![0usize; n];
         let mut level = n;
-        let mut parent = node.parent;
-        let mut ch = node.choice;
+        let mut parent = last.parent[s];
+        let mut ch = last.choice[s];
         while level > 0 {
             choice[level - 1] = ch as usize;
             level -= 1;
             if level > 0 {
-                let pn = &levels[level][parent as usize];
-                ch = pn.choice;
-                parent = pn.parent;
+                let pl = &levels[level];
+                ch = pl.choice[parent as usize];
+                parent = pl.parent[parent as usize];
             }
         }
         points.push(ParamPoint {
             choice,
-            gain: node.gain,
-            costs: node.costs.clone(),
+            gain: last.gain[s],
+            costs: last.costs(s).to_vec(),
             exact: !truncated,
         });
     }
@@ -341,19 +626,171 @@ fn project(mut points: Vec<ParamPoint>) -> Vec<ParamPoint> {
 /// function of the survivor list — thinned sweeps stay bit-identical
 /// across thread counts — but optimality may be lost, hence the
 /// `exact = false` flags downstream.
-fn thin(kept: Vec<Node>, cap: usize) -> Vec<Node> {
+fn thin(kept: &LevelSoa, cap: usize) -> LevelSoa {
     debug_assert!(cap >= 2 && kept.len() > cap);
     let len = kept.len();
-    let mut out: Vec<Node> = Vec::with_capacity(cap);
+    let mut out = LevelSoa::new(kept.dims);
+    out.reserve(cap);
     let mut last = usize::MAX;
     for i in 0..cap {
         let idx = i * (len - 1) / (cap - 1);
         if idx != last {
-            out.push(kept[idx].clone());
+            out.push_row(kept, idx);
             last = idx;
         }
     }
     out
+}
+
+/// How much committed DP state one [`FrontierDp::solve_delta`] call
+/// reused versus re-solved.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FrontierDelta {
+    /// Committed group-merge levels reused as-is (root excluded).
+    pub reused_levels: usize,
+    /// Group merges actually re-run this call.
+    pub solved_groups: usize,
+    /// Total states across the reused levels.
+    pub reused_states: usize,
+    /// True when no committed state was available or shape-compatible
+    /// (or the solve bailed to the classic sweep): everything ran from
+    /// the root and nothing carried over.
+    pub full_solve: bool,
+}
+
+/// Arena accounting for one [`FrontierDp`]: the bench harness records
+/// these alongside wall time so the memory-layout trajectory is visible
+/// in `BENCH_solver.json`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DpStats {
+    /// Peak live DP states (retained levels + in-flight candidates)
+    /// observed across this arena's lifetime.
+    pub peak_live_states: usize,
+    /// Heap bytes currently reserved by the committed level columns.
+    pub arena_bytes: usize,
+}
+
+/// Committed levels of the last [`FrontierDp`] solve.  Solved
+/// budget-FREE (no suffix filter) and grid-off, so they stay valid
+/// verbatim across pure tau-range / memory-cap changes and are
+/// feasibility-filtered per call in [`finish`].
+#[derive(Debug)]
+struct Committed {
+    problem: Mckp,
+    levels: Vec<LevelSoa>,
+}
+
+/// Incremental parametric frontier solver: retains the DP level arenas
+/// of its last solve and, on the next one, re-merges only from the first
+/// group whose gain/cost tables changed bitwise.  Budget-only changes
+/// (tau range, memory cap) re-run no merges at all.
+///
+/// Output is bit-identical to [`frontier_with`] on the same instance —
+/// the equality is property-tested in `tests/incremental.rs` and argued
+/// in DESIGN.md §4h: levels are solved budget-free, the final level is
+/// feasibility-filtered by the same `cost <= budget + EPS` rule the
+/// bounded sweep applies at its last group, and budget-free pruning
+/// never discards a state the bounded sweep keeps.  If a budget-free
+/// level ever exceeds the state cap (adversarial shapes the suffix
+/// filter would have contained), the solver discards its arena and
+/// delegates to the classic sweep, thinned flags and all.
+#[derive(Debug, Default)]
+pub struct FrontierDp {
+    committed: Option<Committed>,
+    scratch: Scratch<LevelSoa>,
+    stats: DpStats,
+}
+
+impl FrontierDp {
+    /// [`FrontierDp::solve_delta`] without the reuse report.
+    pub fn solve(&mut self, p: &Mckp, pool: &ExecPool) -> ParametricCurve {
+        self.solve_delta(p, pool).0
+    }
+
+    /// Arena accounting across this solver's lifetime.
+    pub fn stats(&self) -> DpStats {
+        self.stats
+    }
+
+    /// Whether a committed instance (reusable DP levels) is resident.
+    pub fn has_commit(&self) -> bool {
+        self.committed.is_some()
+    }
+
+    /// Solve `p`'s parametric frontier, reusing committed DP levels
+    /// wherever `p`'s tables are bit-identical to the last solve's, and
+    /// report what was reused.  Bit-identical to a from-scratch
+    /// [`frontier_with`] at any thread count.
+    pub fn solve_delta(&mut self, p: &Mckp, pool: &ExecPool) -> (ParametricCurve, FrontierDelta) {
+        let n = p.n_groups();
+        if n == 0 {
+            // Degenerate chain: nothing worth committing.
+            self.committed = None;
+            let full = FrontierDelta { full_solve: true, ..FrontierDelta::default() };
+            return (frontier_with(p, pool), full);
+        }
+        let mut root_sp = crate::obs::span("solver.frontier");
+        root_sp.counter("groups", n as f64);
+
+        // Diff-classify against the committed instance.  Budget changes
+        // never dirty a level: committed levels are budget-free and the
+        // feasibility filter runs once in `finish`.
+        let (mut levels, first_dirty, full_solve) = match self.committed.take() {
+            Some(c) if c.problem.same_shape(p) => {
+                let dirty = c.problem.first_divergent_group(p).unwrap_or(n);
+                let mut lv = c.levels;
+                lv.truncate(dirty + 1);
+                (lv, dirty, false)
+            }
+            _ => (vec![root_level(p.n_dims())], 0, true),
+        };
+        let reused_states: usize = levels.iter().skip(1).map(LevelSoa::len).sum();
+        root_sp.counter("reused_levels", first_dirty as f64);
+        root_sp.counter("solved_levels", (n - first_dirty) as f64);
+
+        let mut thinned_out = false;
+        for j in first_dirty..n {
+            let mut sp = crate::obs::span("solver.dp.group");
+            sp.counter("group", j as f64);
+            let cands = expand_level(p, None, j, &levels[j], pool, &self.scratch);
+            let n_cands = cands.len();
+            sp.counter("candidates", n_cands as f64);
+            let (kept, thinned) = prune_level(p, &cands);
+            let live = levels.iter().map(LevelSoa::len).sum::<usize>() + n_cands + kept.len();
+            self.stats.peak_live_states = self.stats.peak_live_states.max(live);
+            self.scratch.put(cands);
+            sp.counter("kept", kept.len() as f64);
+            sp.counter("pruned", (n_cands - kept.len()) as f64);
+            sp.counter("thinned", if thinned { 1.0 } else { 0.0 });
+            if thinned {
+                thinned_out = true;
+                break;
+            }
+            levels.push(kept);
+        }
+        if thinned_out {
+            // The budget-free antichain blew the state cap — the suffix
+            // filter is load-bearing on this instance.  Drop the arena
+            // and delegate to the classic bounded sweep so curve bytes
+            // (including any thinned flags) match it exactly.
+            drop(root_sp);
+            self.committed = None;
+            let full = FrontierDelta { full_solve: true, ..FrontierDelta::default() };
+            return (frontier_with(p, pool), full);
+        }
+        let curve = finish(n, &levels, false, Some(&p.budgets));
+        root_sp.counter("knots", curve.points.len() as f64);
+        root_sp.counter("exact", 1.0);
+        self.stats.arena_bytes = levels.iter().map(LevelSoa::heap_bytes).sum();
+        let delta = FrontierDelta {
+            reused_levels: first_dirty,
+            solved_groups: n - first_dirty,
+            reused_states,
+            full_solve,
+        };
+        self.committed = Some(Committed { problem: p.clone(), levels });
+        (curve, delta)
+    }
 }
 
 /// Branch & bound fallback for flagged knots: re-solve each non-exact
@@ -539,6 +976,12 @@ mod tests {
         assert_eq!(c.points[0].gain, 0.0);
         assert_eq!(c.points[0].choice, Vec::<usize>::new());
         assert!(c.exact);
+
+        // The incremental solver delegates the degenerate chain too.
+        let mut dp = FrontierDp::default();
+        let (c2, delta) = dp.solve_delta(&p, &ExecPool::sequential());
+        assert_eq!(c2, c);
+        assert!(delta.full_solve);
     }
 
     #[test]
@@ -557,6 +1000,80 @@ mod tests {
                 assert_eq!(base, frontier_with(&p, pool), "trial {trial}");
             }
         }
+    }
+
+    #[test]
+    fn arena_solver_matches_the_classic_sweep_and_reuses_levels() {
+        let mut rng = Rng::new(0xA2E4A);
+        let pool = ExecPool::sequential();
+        for trial in 0..40 {
+            let dims = 1 + (trial % 3 == 0) as usize;
+            let p = random_multi(&mut rng, 6, 5, dims);
+            let classic = frontier_with(&p, &pool);
+            let mut dp = FrontierDp::default();
+            let (cold, d_cold) = dp.solve_delta(&p, &pool);
+            assert_eq!(cold, classic, "trial {trial}: cold solve");
+            assert!(d_cold.full_solve, "trial {trial}");
+            // Identical instance: every level reused, same bytes out.
+            let (warm, d_warm) = dp.solve_delta(&p, &pool);
+            assert_eq!(warm, classic, "trial {trial}: warm solve");
+            assert_eq!(d_warm.solved_groups, 0, "trial {trial}");
+            assert_eq!(d_warm.reused_levels, p.n_groups(), "trial {trial}");
+            assert!(!d_warm.full_solve, "trial {trial}");
+            assert!(dp.stats().arena_bytes > 0, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn grid_with_harmless_cells_is_bit_identical_and_exact() {
+        // Integer-valued tables: with cell = 0.5 distinct cost vectors
+        // land in distinct buckets, so every grid rejection is an exact
+        // same-cost dominance the plain sweep performs too.
+        let mut rng = Rng::new(0x617D);
+        let pool = ExecPool::sequential();
+        for trial in 0..40 {
+            let dims = 1 + (trial % 2);
+            let mut p = random_multi(&mut rng, 5, 4, dims);
+            for g in p.gains.iter_mut().flatten() {
+                *g = (*g * 3.0).round();
+            }
+            for cd in p.costs.iter_mut() {
+                for c in cd.table.iter_mut().flatten() {
+                    *c = (*c * 3.0).round();
+                }
+            }
+            let exact = frontier_with(&p, &pool);
+            assert_eq!(frontier_quantized(&p, &pool, 0.5), exact, "trial {trial}");
+            // cell <= 0 disables the grid outright.
+            assert_eq!(frontier_quantized(&p, &pool, 0.0), exact, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn coarse_grid_flags_inexact_and_never_overstates() {
+        let mut rng = Rng::new(0x6AA55);
+        let pool = ExecPool::sequential();
+        let mut saw_inexact = false;
+        for trial in 0..40 {
+            let p = random(&mut rng, 5, 5);
+            let exact = frontier_with(&p, &pool);
+            let q = frontier_quantized(&p, &pool, 2.5);
+            if !q.exact {
+                saw_inexact = true;
+                assert!(q.points.iter().all(|pt| !pt.exact), "trial {trial}");
+            }
+            for pt in &q.points {
+                // Every quantized knot is a real assignment, evaluated
+                // bit-faithfully...
+                let (g, costs) = p.evaluate(&pt.choice);
+                assert_eq!(g.to_bits(), pt.gain.to_bits(), "trial {trial}");
+                assert_eq!(costs[0].to_bits(), pt.costs[0].to_bits(), "trial {trial}");
+                // ...that never beats the exact curve at its own budget.
+                let best = exact.at_budget(pt.costs[0]).expect("exact curve covers the knot");
+                assert!(pt.gain <= best.gain + 1e-9, "trial {trial}");
+            }
+        }
+        assert!(saw_inexact, "a coarse grid must reject something across 40 trials");
     }
 
     #[test]

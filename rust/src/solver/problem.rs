@@ -168,6 +168,35 @@ impl Mckp {
             .sum()
     }
 
+    /// True when `other` has the same group / choice-count / dimension
+    /// shape, i.e. DP levels built for `self` are index-compatible with
+    /// `other`'s tables.  Values are NOT compared — see
+    /// [`Mckp::first_divergent_group`].
+    pub fn same_shape(&self, other: &Mckp) -> bool {
+        self.n_dims() == other.n_dims()
+            && self.gains.len() == other.gains.len()
+            && self.gains.iter().zip(&other.gains).all(|(a, b)| a.len() == b.len())
+    }
+
+    /// First group whose gain table or any dimension's cost table differs
+    /// BITWISE from `other`'s (`None` when every table is bit-identical).
+    /// Budgets are deliberately not compared: the incremental frontier
+    /// solver's committed levels are budget-free, so pure tau-range or
+    /// memory-cap changes dirty nothing.  Requires [`Mckp::same_shape`].
+    pub fn first_divergent_group(&self, other: &Mckp) -> Option<usize> {
+        debug_assert!(self.same_shape(other));
+        (0..self.n_groups()).find(|&j| {
+            let gains_differ = self.gains[j]
+                .iter()
+                .zip(&other.gains[j])
+                .any(|(a, b)| a.to_bits() != b.to_bits());
+            gains_differ
+                || self.costs.iter().zip(&other.costs).any(|(da, db)| {
+                    da.table[j].iter().zip(&db.table[j]).any(|(a, b)| a.to_bits() != b.to_bits())
+                })
+        })
+    }
+
     pub fn solution_from(&self, choice: Vec<usize>) -> Solution {
         let (gain, costs) = self.evaluate(&choice);
         Solution { feasible: self.fits(&costs), choice, gain, cost: costs[0], costs }
@@ -372,6 +401,43 @@ mod tests {
         let s = p.brute_force();
         assert!(!s.feasible);
         assert_eq!(s.choice, vec![0]); // min primary cost
+    }
+
+    #[test]
+    fn shape_and_divergence_diffing() {
+        let base = Mckp::new(
+            vec![vec![0.0, 10.0], vec![0.0, 8.0]],
+            vec![vec![0.0, 3.0], vec![0.0, 2.0]],
+            4.0,
+        )
+        .unwrap();
+        // Identical tables: same shape, no divergent group — even when
+        // only the budget changed.
+        let mut budget_only = base.clone();
+        budget_only.budgets[0] = 1.5;
+        assert!(base.same_shape(&budget_only));
+        assert_eq!(base.first_divergent_group(&budget_only), None);
+        // Group 1's gain table changes: divergence starts there.
+        let mut g1 = base.clone();
+        g1.gains[1][1] = 9.0;
+        assert!(base.same_shape(&g1));
+        assert_eq!(base.first_divergent_group(&g1), Some(1));
+        // A cost-table change counts too, at its own group.
+        let mut c0 = base.clone();
+        c0.costs[0].table[0][1] = 3.5;
+        assert_eq!(base.first_divergent_group(&c0), Some(0));
+        // -0.0 vs 0.0 is a BITWISE divergence (conservative on purpose).
+        let mut negz = base.clone();
+        negz.gains[0][0] = -0.0;
+        assert_eq!(base.first_divergent_group(&negz), Some(0));
+        // Different choice counts: not the same shape.
+        let wider = Mckp::new(
+            vec![vec![0.0, 10.0, 11.0], vec![0.0, 8.0]],
+            vec![vec![0.0, 3.0, 4.0], vec![0.0, 2.0]],
+            4.0,
+        )
+        .unwrap();
+        assert!(!base.same_shape(&wider));
     }
 
     #[test]

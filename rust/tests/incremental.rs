@@ -1,0 +1,163 @@
+//! Acceptance suite for the incremental frontier re-solve path
+//! (`FrontierDp::solve_delta` and its `Planner`/`PlanService` plumbing):
+//!
+//! * a warm arena re-solve after mutating ONE group's gain table is
+//!   bit-identical to a from-scratch sweep, and re-merges exactly the
+//!   dirty suffix of the group chain;
+//! * tau-range (primary budget) and memory-cap changes reuse EVERY
+//!   committed level — only the feasibility filter re-runs;
+//! * all of the above at 1 and 4 threads, single- and multi-constraint
+//!   (`--threads N ≡ --threads 1` bit-identity extends to warm arenas);
+//! * `Planner::frontier_delta` serves the same curve as
+//!   `Planner::frontier` and reports full reuse on a repeat solve.
+//!
+//! Instance sizes are chosen so the budget-free DP levels can never
+//! exceed the dominance state caps (4^5 = 1024 < 2048 multi,
+//! 5^6 = 15625 < 32768 single): the arena never bails to the classic
+//! sweep, so the delta accounting asserted here is deterministic.
+
+use ampq::coordinator::Strategy;
+use ampq::exec::{ExecCfg, ExecPool};
+use ampq::metrics::Objective;
+use ampq::plan::demo::demo_model;
+use ampq::plan::Engine;
+use ampq::solver::parametric::{self, FrontierDp, ParametricCurve};
+use ampq::solver::problem::gen::{random, random_multi};
+use ampq::solver::Mckp;
+use ampq::util::Rng;
+
+/// A random instance sized to stay under the DP state caps even with the
+/// suffix-budget filter off (see module docs).
+fn instance(rng: &mut Rng, dims: usize) -> Mckp {
+    if dims == 1 {
+        random(rng, 6, 5)
+    } else {
+        random_multi(rng, 5, 4, dims)
+    }
+}
+
+/// Bitwise curve equality with a labelled panic (assert_eq's Debug dump
+/// of two full curves is unreadable; the derived PartialEq is exact float
+/// equality, which is the contract here).
+fn assert_same_curve(a: &ParametricCurve, b: &ParametricCurve, label: &str) {
+    assert_eq!(a, b, "{label}: warm arena curve differs from the from-scratch sweep");
+}
+
+#[test]
+fn warm_resolve_of_an_unchanged_instance_reuses_everything() {
+    for threads in [1usize, 4] {
+        let pool = ExecPool::new(ExecCfg::new(threads));
+        let mut rng = Rng::new(0x1DE2_0001);
+        for trial in 0..30 {
+            let dims = 1 + (trial % 2);
+            let p = instance(&mut rng, dims);
+            let oracle = parametric::frontier_with(&p, &ExecPool::sequential());
+            let mut dp = FrontierDp::default();
+            let (cold, d0) = dp.solve_delta(&p, &pool);
+            assert_same_curve(&cold, &oracle, "cold");
+            assert!(d0.full_solve, "trial {trial}: cold arena must report a full solve");
+            let (warm, d1) = dp.solve_delta(&p, &pool);
+            assert_same_curve(&warm, &oracle, "warm");
+            assert!(!d1.full_solve, "trial {trial} threads {threads}");
+            assert_eq!(d1.solved_groups, 0, "trial {trial}: nothing changed");
+            assert_eq!(d1.reused_levels, p.n_groups(), "trial {trial}");
+            assert!(d1.reused_states > 0, "trial {trial}");
+        }
+    }
+}
+
+#[test]
+fn mutating_one_groups_gain_table_resolves_only_the_dirty_suffix() {
+    for threads in [1usize, 4] {
+        let pool = ExecPool::new(ExecCfg::new(threads));
+        let mut rng = Rng::new(0xD127_0002 ^ threads as u64);
+        for dims in [1usize, 2] {
+            let mut p = instance(&mut rng, dims);
+            let n = p.n_groups();
+            let mut dp = FrontierDp::default();
+            dp.solve_delta(&p, &pool);
+            for trial in 0..(2 * n) {
+                let j = trial % n;
+                let last = p.gains[j].len() - 1;
+                p.gains[j][last] += 0.25;
+                let oracle = parametric::frontier_with(&p, &ExecPool::sequential());
+                let (curve, delta) = dp.solve_delta(&p, &pool);
+                assert_same_curve(
+                    &curve,
+                    &oracle,
+                    &format!("dims {dims} threads {threads} trial {trial}"),
+                );
+                assert!(!delta.full_solve, "dims {dims} trial {trial}");
+                assert_eq!(
+                    delta.reused_levels, j,
+                    "dims {dims} trial {trial}: group {j} was mutated, so every level \
+                     before it must be reused as-is"
+                );
+                assert_eq!(delta.solved_groups, n - j, "dims {dims} trial {trial}");
+            }
+        }
+    }
+}
+
+#[test]
+fn budget_and_memory_cap_changes_reuse_every_committed_level() {
+    for threads in [1usize, 4] {
+        let pool = ExecPool::new(ExecCfg::new(threads));
+        let mut rng = Rng::new(0xB0D6_0003);
+        for dims in [1usize, 2] {
+            let p0 = instance(&mut rng, dims);
+            let base = p0.budgets.clone();
+            let mut dp = FrontierDp::default();
+            dp.solve_delta(&p0, &pool);
+            // Tau-range moves (primary budget) and, on the multi-constraint
+            // instance, memory-cap moves (second budget): neither touches a
+            // gain/cost table, so the whole committed chain re-filters
+            // without a single group re-merge.
+            for (trial, scale) in [0.0f64, 0.35, 1.0, 2.5].into_iter().enumerate() {
+                for dim in 0..dims {
+                    let mut p = p0.clone();
+                    p.budgets[dim] = base[dim] * scale;
+                    let oracle = parametric::frontier_with(&p, &ExecPool::sequential());
+                    let (curve, delta) = dp.solve_delta(&p, &pool);
+                    assert_same_curve(
+                        &curve,
+                        &oracle,
+                        &format!("dims {dims} threads {threads} trial {trial} dim {dim}"),
+                    );
+                    assert!(!delta.full_solve, "dims {dims} trial {trial} dim {dim}");
+                    assert_eq!(delta.solved_groups, 0, "dims {dims} trial {trial} dim {dim}");
+                    assert_eq!(
+                        delta.reused_levels,
+                        p.n_groups(),
+                        "dims {dims} trial {trial} dim {dim}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn planner_frontier_delta_matches_frontier_and_reports_reuse() {
+    let (graph, qlayers, calibration) = demo_model(2, 7);
+    let mut engine = Engine::new().with_threads(2);
+    engine.register_synthetic("demo", graph, qlayers, calibration);
+    let planner = engine.planner("demo").unwrap();
+    for objective in [Objective::EmpiricalTime, Objective::Memory] {
+        let first = planner.frontier(objective, Strategy::Ip).unwrap();
+        let (second, delta) = planner.frontier_delta(objective, Strategy::Ip).unwrap();
+        assert_eq!(first, second, "{objective:?}: warm re-solve must reproduce the curve");
+        assert!(!delta.full_solve, "{objective:?}: the first solve committed the arena");
+        assert_eq!(delta.solved_groups, 0, "{objective:?}");
+        let stats = planner.frontier_dp_stats(objective);
+        assert!(stats.peak_live_states > 0, "{objective:?}");
+        assert!(stats.arena_bytes > 0, "{objective:?}");
+    }
+    // Non-IP strategies stay on the bisection sweep and say so.
+    let (f, delta) = planner
+        .frontier_delta(Objective::EmpiricalTime, Strategy::Random)
+        .unwrap();
+    assert!(delta.full_solve);
+    assert_eq!(delta.solved_groups, 0);
+    assert!(!f.points.is_empty());
+}
