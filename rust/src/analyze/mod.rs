@@ -1,0 +1,352 @@
+//! `ampq lint` — the determinism & soundness static-analysis pass.
+//!
+//! The crate's core guarantee (additive sensitivities + per-group gains
+//! composing into ONE answer, bit-identical at any `--threads`/`--workers`)
+//! is enforced dynamically by equality tests that sample a few instances.
+//! This module encodes the underlying *rules* as a static pass that fails
+//! CI on any new violation:
+//!
+//! * **D1** — no `partial_cmp(..).unwrap()/.expect()` float orders
+//! * **D2** — no hash-order iteration feeding serialized/reduced output
+//! * **D3** — wall clocks only in `obs/`, `timing/`, and the daemon
+//! * **D4** — no `unwrap`/`expect`/`panic!` on user-reachable request paths
+//! * **D5** — encoder/decoder field-name symmetry for hand-rolled JSON
+//!
+//! Zero dependencies, no rustc plugin: a line/token-level scanner
+//! ([`scanner`]) feeds rule matchers ([`rules`]).  Suppressions are audited
+//! `// lint: …` comments; legacy findings can be parked in a baseline file
+//! (`rust/lint-baseline.json`) and burned down deliberately — a finding is
+//! only fatal when it is neither suppressed nor baselined.
+
+pub mod rules;
+pub mod scanner;
+
+pub use rules::{Finding, CATALOG};
+pub use scanner::SourceFile;
+
+use crate::util::Json;
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+/// Directory names never descended into during the walk: build output,
+/// vendored third-party code, seeded lint fixtures (they contain deliberate
+/// violations), and non-Rust corpora.
+const SKIP_DIRS: &[&str] = &[
+    "target",
+    "vendor",
+    "lint_fixtures",
+    "corpus",
+    ".git",
+    "artifacts",
+    "results",
+];
+
+#[derive(Clone, Debug, Default)]
+pub struct LintConfig {
+    /// Files or directories to scan (dirs walk recursively for `.rs`).
+    pub paths: Vec<PathBuf>,
+    /// Baseline file; missing file = empty baseline.
+    pub baseline: Option<PathBuf>,
+}
+
+/// A finding silenced by a `// lint:` directive, kept for the audit trail.
+#[derive(Clone, Debug)]
+pub struct Suppressed {
+    pub finding: Finding,
+    pub reason: String,
+}
+
+/// One baseline entry.  Line numbers are deliberately absent: entries match
+/// on (rule, file, excerpt) so routine edits elsewhere in a file do not
+/// churn the baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BaselineEntry {
+    pub rule: String,
+    pub file: String,
+    pub excerpt: String,
+}
+
+pub struct Report {
+    /// Violations that fail the run (not suppressed, not baselined).
+    pub findings: Vec<Finding>,
+    /// Violations matched by a baseline entry (legacy debt, non-fatal).
+    pub baselined: Vec<Finding>,
+    /// Violations silenced by an audited `// lint:` directive.
+    pub suppressed: Vec<Suppressed>,
+    /// Baseline entries that matched nothing — debt already paid off.
+    pub stale_baseline: Vec<BaselineEntry>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    // lint: allow(D5) write-only report for CI artifacts; no decoder by design
+    pub fn to_json(&self) -> Json {
+        let finding_json = |f: &Finding| {
+            Json::Obj(vec![
+                ("rule".into(), Json::Str(f.rule.to_string())),
+                ("file".into(), Json::Str(f.file.clone())),
+                ("line".into(), Json::Num(f.line as f64)),
+                ("excerpt".into(), Json::Str(f.excerpt.clone())),
+                ("message".into(), Json::Str(f.message.clone())),
+                ("hint".into(), Json::Str(f.hint.to_string())),
+            ])
+        };
+        let rules = CATALOG
+            .iter()
+            .map(|r| {
+                Json::Obj(vec![
+                    ("id".into(), Json::Str(r.id.to_string())),
+                    ("title".into(), Json::Str(r.title.to_string())),
+                    ("detail".into(), Json::Str(r.detail.to_string())),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("tool".into(), Json::Str("ampq lint".to_string())),
+            ("schema_version".into(), Json::Num(1.0)),
+            ("clean".into(), Json::Bool(self.clean())),
+            ("files_scanned".into(), Json::Num(self.files_scanned as f64)),
+            ("rules".into(), Json::Arr(rules)),
+            ("findings".into(), Json::Arr(self.findings.iter().map(finding_json).collect())),
+            (
+                "suppressed".into(),
+                Json::Arr(
+                    self.suppressed
+                        .iter()
+                        .map(|s| {
+                            let mut kv = match finding_json(&s.finding) {
+                                Json::Obj(kv) => kv,
+                                _ => unreachable!("finding_json returns an object"),
+                            };
+                            kv.push(("reason".into(), Json::Str(s.reason.clone())));
+                            Json::Obj(kv)
+                        })
+                        .collect(),
+                ),
+            ),
+            ("baselined".into(), Json::Arr(self.baselined.iter().map(finding_json).collect())),
+            (
+                "stale_baseline".into(),
+                Json::Arr(
+                    self.stale_baseline
+                        .iter()
+                        .map(|e| {
+                            Json::Obj(vec![
+                                ("rule".into(), Json::Str(e.rule.clone())),
+                                ("file".into(), Json::Str(e.file.clone())),
+                                ("excerpt".into(), Json::Str(e.excerpt.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Run the pass.  Deterministic: files are visited in sorted path order and
+/// findings are sorted by (file, line, rule).
+pub fn run(cfg: &LintConfig) -> Result<Report> {
+    let mut files = Vec::new();
+    for p in &cfg.paths {
+        collect(p, &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+
+    let mut raw: Vec<Finding> = Vec::new();
+    let mut suppressed: Vec<Suppressed> = Vec::new();
+    for path in &files {
+        let mut sf = SourceFile::load(path)?;
+        for f in rules::run_all(&sf) {
+            match sf.suppression_for(f.rule, f.line) {
+                Some(i) => {
+                    let s = &sf.suppressions[i];
+                    let reason = if s.reason.is_empty() {
+                        "(no reason given)".to_string()
+                    } else {
+                        s.reason.clone()
+                    };
+                    suppressed.push(Suppressed { finding: f, reason });
+                }
+                None => raw.push(f),
+            }
+        }
+    }
+    raw.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    suppressed.sort_by(|a, b| {
+        (&a.finding.file, a.finding.line, a.finding.rule)
+            .cmp(&(&b.finding.file, b.finding.line, b.finding.rule))
+    });
+
+    // Baseline pass: each entry absorbs at most one matching finding.
+    let mut entries = match &cfg.baseline {
+        Some(p) if p.exists() => load_baseline(p)?,
+        _ => Vec::new(),
+    };
+    let mut consumed = vec![false; entries.len()];
+    let mut findings = Vec::new();
+    let mut baselined = Vec::new();
+    for f in raw {
+        let hit = entries.iter().enumerate().position(|(i, e)| {
+            !consumed[i] && e.rule == f.rule && e.file == f.file && e.excerpt == f.excerpt
+        });
+        match hit {
+            Some(i) => {
+                consumed[i] = true;
+                baselined.push(f);
+            }
+            None => findings.push(f),
+        }
+    }
+    let stale_baseline = entries
+        .drain(..)
+        .zip(consumed)
+        .filter(|(_, used)| !used)
+        .map(|(e, _)| e)
+        .collect();
+
+    Ok(Report {
+        findings,
+        baselined,
+        suppressed,
+        stale_baseline,
+        files_scanned: files.len(),
+    })
+}
+
+fn collect(path: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if path.is_file() {
+        out.push(path.to_path_buf());
+        return Ok(());
+    }
+    if !path.is_dir() {
+        return Err(anyhow!("lint path not found: {}", path.display()));
+    }
+    let mut children: Vec<PathBuf> = std::fs::read_dir(path)
+        .map_err(|e| anyhow!("read dir {}: {e}", path.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    children.sort();
+    for child in children {
+        let name = child.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if child.is_dir() {
+            if SKIP_DIRS.contains(&name) {
+                continue;
+            }
+            collect(&child, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(child);
+        }
+    }
+    Ok(())
+}
+
+// ---- baseline file -------------------------------------------------------
+
+pub fn load_baseline(path: &Path) -> Result<Vec<BaselineEntry>> {
+    let j = Json::parse_file(path)?;
+    j.get("entries")?
+        .arr()?
+        .iter()
+        .map(|e| {
+            Ok(BaselineEntry {
+                rule: e.get("rule")?.str()?.to_string(),
+                file: e.get("file")?.str()?.to_string(),
+                excerpt: e.get("excerpt")?.str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+/// Serialize a baseline covering `findings` (both fresh and already
+/// baselined ones — `--write-baseline` passes the union).
+pub fn baseline_json(findings: &[&Finding]) -> Json {
+    Json::Obj(vec![
+        ("schema_version".into(), Json::Num(1.0)),
+        (
+            "entries".into(),
+            Json::Arr(
+                findings
+                    .iter()
+                    .map(|f| {
+                        Json::Obj(vec![
+                            ("rule".into(), Json::Str(f.rule.to_string())),
+                            ("file".into(), Json::Str(f.file.clone())),
+                            ("excerpt".into(), Json::Str(f.excerpt.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str, text: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("ampq-analyze-tests");
+        std::fs::create_dir_all(&dir).expect("temp dir");
+        let p = dir.join(name);
+        std::fs::write(&p, text).expect("write fixture");
+        p
+    }
+
+    #[test]
+    fn baseline_absorbs_then_goes_stale() {
+        let p = tmp(
+            "base_d1.rs",
+            "// lint: path src/x.rs\npub fn s(v: &mut [f64]) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n",
+        );
+        let report = run(&LintConfig { paths: vec![p.clone()], baseline: None }).unwrap();
+        assert_eq!(report.findings.len(), 1);
+        assert_eq!(report.findings[0].rule, "D1");
+
+        let base = tmp(
+            "base_d1.json",
+            &baseline_json(&report.findings.iter().collect::<Vec<_>>()).to_string(),
+        );
+        let report =
+            run(&LintConfig { paths: vec![p.clone()], baseline: Some(base.clone()) }).unwrap();
+        assert!(report.clean());
+        assert_eq!(report.baselined.len(), 1);
+        assert!(report.stale_baseline.is_empty());
+
+        // Fix the violation: the entry must surface as stale, not linger.
+        std::fs::write(&p, "// lint: path src/x.rs\npub fn s(v: &mut [f64]) {\n    v.sort_by(|a, b| a.total_cmp(b));\n}\n").unwrap();
+        let report = run(&LintConfig { paths: vec![p], baseline: Some(base) }).unwrap();
+        assert!(report.clean());
+        assert!(report.baselined.is_empty());
+        assert_eq!(report.stale_baseline.len(), 1);
+    }
+
+    #[test]
+    fn report_json_parses_back() {
+        let p = tmp(
+            "rep_d3.rs",
+            "// lint: path src/plan/x.rs\npub fn t() -> std::time::Instant { std::time::Instant::now() }\n",
+        );
+        let report = run(&LintConfig { paths: vec![p], baseline: None }).unwrap();
+        assert_eq!(report.findings.len(), 1);
+        let j = Json::parse(&report.to_json().to_string()).unwrap();
+        assert!(!j.get("clean").unwrap().bool().unwrap());
+        assert_eq!(j.get("rules").unwrap().arr().unwrap().len(), CATALOG.len());
+        let f = &j.get("findings").unwrap().arr().unwrap()[0];
+        assert_eq!(f.get("rule").unwrap().str().unwrap(), "D3");
+    }
+
+    #[test]
+    fn missing_path_is_an_error() {
+        let cfg = LintConfig {
+            paths: vec![PathBuf::from("/nonexistent/lint/root")],
+            baseline: None,
+        };
+        assert!(run(&cfg).is_err());
+    }
+}

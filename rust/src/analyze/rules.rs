@@ -1,0 +1,697 @@
+//! The determinism & soundness rule catalog (D1–D5).
+//!
+//! Every rule is a token-level check over a [`SourceFile`]'s masked text.
+//! Rules are deliberately narrow: each encodes ONE project invariant the
+//! dynamic test suite can only sample, stated in DESIGN.md §4i.  False
+//! positives are handled by the audited `// lint: allow(…)` directives or
+//! the baseline file, never by weakening the rule.
+
+use super::scanner::{find_from, SourceFile};
+
+/// One rule violation (pre-suppression, pre-baseline).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub excerpt: String,
+    pub message: String,
+    pub hint: &'static str,
+}
+
+/// Catalog entry, surfaced in `--json` reports and the docs.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub detail: &'static str,
+}
+
+pub const CATALOG: &[RuleInfo] = &[
+    RuleInfo {
+        id: "D1",
+        title: "no partial_cmp().unwrap() float ordering",
+        detail: "floats must be ordered with f64::total_cmp: partial_cmp \
+                 panics on NaN and its unwrap hides a non-total order from \
+                 every sort it feeds",
+    },
+    RuleInfo {
+        id: "D2",
+        title: "no hash-order iteration into serialized/reduced output",
+        detail: "HashMap/HashSet iteration order is randomized per process; \
+                 in files that build Json or wire frames it must pass \
+                 through a key sort (or a `// lint: sorted` audit) before \
+                 feeding any output",
+    },
+    RuleInfo {
+        id: "D3",
+        title: "wall clocks only in obs/, timing/, and the daemon",
+        detail: "Instant::now/SystemTime outside the sanctioned wall-clock \
+                 sources makes outputs time-dependent; planning and solver \
+                 code must stay replayable",
+    },
+    RuleInfo {
+        id: "D4",
+        title: "no unwrap/expect/panic on user-reachable request paths",
+        detail: "serve/, dist/proto, and plan/request parse attacker-shaped \
+                 bytes; they must return errors, not panic (lock-poison \
+                 witnesses on Mutex/Condvar are exempt: a poisoned lock is \
+                 itself a prior panic)",
+    },
+    RuleInfo {
+        id: "D5",
+        title: "encoder/decoder field-name symmetry",
+        detail: "every *to_json encoder must have a *from_json decoder \
+                 reading exactly the field names it writes; a one-sided \
+                 field is a silent wire-schema drift",
+    },
+];
+
+pub fn run_all(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    out.extend(d1_partial_cmp_unwrap(sf));
+    out.extend(d2_hash_iteration(sf));
+    out.extend(d3_wall_clock(sf));
+    out.extend(d4_request_path_panics(sf));
+    out.extend(d5_codec_symmetry(sf));
+    out
+}
+
+fn finding(
+    sf: &SourceFile,
+    rule: &'static str,
+    at: usize,
+    message: String,
+    hint: &'static str,
+) -> Finding {
+    let line = sf.line_of(at);
+    Finding {
+        rule,
+        file: sf.logical.clone(),
+        line,
+        excerpt: sf.line_text(line).to_string(),
+        message,
+        hint,
+    }
+}
+
+/// Is the logical path inside the crate's library/binary source (as opposed
+/// to integration tests, benches, or fixtures)?  Scope filter for the rules
+/// that only bind production code.
+fn is_src(sf: &SourceFile) -> bool {
+    let p = &sf.logical;
+    (p.contains("src/") || p.starts_with("src"))
+        && !p.contains("tests/")
+        && !p.contains("benches/")
+}
+
+fn path_has_dir(sf: &SourceFile, dir: &str) -> bool {
+    sf.logical.split('/').any(|c| c == dir)
+}
+
+// ---- D1 ------------------------------------------------------------------
+
+fn d1_partial_cmp_unwrap(sf: &SourceFile) -> Vec<Finding> {
+    let m = &sf.masked;
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(at) = find_token(m, b"partial_cmp", from) {
+        from = at + 1;
+        let mut j = at + "partial_cmp".len();
+        j = skip_ws(m, j);
+        let Some(close) = skip_group(m, j, b'(', b')') else { continue };
+        let j = skip_ws(m, close);
+        if m[j..].starts_with(b".unwrap") || m[j..].starts_with(b".expect") {
+            out.push(finding(
+                sf,
+                "D1",
+                at,
+                "float ordering via partial_cmp().unwrap()/.expect(): a \
+                 non-total order that panics on NaN"
+                    .to_string(),
+                "order floats with f64::total_cmp: `a.total_cmp(&b)` in the comparator",
+            ));
+        }
+    }
+    out
+}
+
+// ---- D2 ------------------------------------------------------------------
+
+/// Bytes of forward context inspected for an intervening sort after a hash
+/// iteration before it is flagged.
+const D2_SORT_WINDOW: usize = 280;
+
+fn d2_hash_iteration(sf: &SourceFile) -> Vec<Finding> {
+    if !is_src(sf) {
+        return Vec::new();
+    }
+    let m = &sf.masked;
+    // Gate: only files that build serialized output care about iteration
+    // order at the lint level (reductions elsewhere are covered by the
+    // exec layer's key-sorted merges).
+    let serializes = find_token(m, b"Json", 0).is_some()
+        || find_token(m, b"write_frame", 0).is_some();
+    if !serializes {
+        return Vec::new();
+    }
+    let names = hash_typed_names(m);
+    if names.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for name in &names {
+        let pat = name.as_bytes();
+        let mut from = 0usize;
+        while let Some(at) = find_token(m, pat, from) {
+            from = at + 1;
+            let after = at + pat.len();
+            let iterates = [".iter()", ".values()", ".keys()", ".into_iter()", ".drain("]
+                .iter()
+                .any(|s| m[after..].starts_with(s.as_bytes()));
+            let in_for = preceded_by_in(m, at);
+            if !(iterates || in_for) {
+                continue;
+            }
+            // An explicit sort (or a BTree re-keying, or an order-free
+            // count) within the statement window makes the order harmless.
+            let window = &m[after..(after + D2_SORT_WINDOW).min(m.len())];
+            let harmless = [".sort", "BTreeMap", "BTreeSet", ".count()", ".len()"]
+                .iter()
+                .any(|s| find_from(window, s.as_bytes(), 0).is_some());
+            if harmless {
+                continue;
+            }
+            out.push(finding(
+                sf,
+                "D2",
+                at,
+                format!(
+                    "iteration over hash-ordered '{name}' in a serializing \
+                     file without an intervening key sort"
+                ),
+                "collect and `.sort()` the keys first (or switch to BTreeMap); \
+                 if the order is provably irrelevant, audit it with `// lint: sorted`",
+            ));
+        }
+    }
+    out
+}
+
+/// Identifiers declared with a HashMap/HashSet type or constructor.
+fn hash_typed_names(m: &[u8]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    for ty in [&b"HashMap"[..], &b"HashSet"[..]] {
+        let mut from = 0usize;
+        while let Some(at) = find_token(m, ty, from) {
+            from = at + 1;
+            // Walk back over `&`, `&mut`, `&'a`, and whitespace so
+            // `name: &HashMap<…>` and `name: &'a mut HashMap<…>` both
+            // resolve to `name`.
+            let mut k = at;
+            loop {
+                let k0 = k;
+                while k > 0 && (m[k - 1] as char).is_whitespace() {
+                    k -= 1;
+                }
+                if k > 0 && m[k - 1] == b'&' {
+                    k -= 1;
+                    continue;
+                }
+                if k >= 3 && m[k - 3..k] == b"mut"[..] && !(k >= 4 && is_ident(m[k - 4])) {
+                    k -= 3;
+                    continue;
+                }
+                // Lifetime: `'a` — identifier run led by a tick.
+                let mut t = k;
+                while t > 0 && is_ident(m[t - 1]) {
+                    t -= 1;
+                }
+                if t > 0 && t < k && m[t - 1] == b'\'' {
+                    k = t - 1;
+                    continue;
+                }
+                if k == k0 {
+                    break;
+                }
+            }
+            // `name: HashMap<…>` (let binding, field, or param) …
+            if k > 0 && m[k - 1] == b':' {
+                if let Some(name) = ident_before(m, k - 1) {
+                    push_unique(&mut names, name);
+                    continue;
+                }
+            }
+            // … or `let name = HashMap::new()` style.
+            if k > 0 && m[k - 1] == b'=' {
+                if let Some(name) = ident_before(m, k - 1) {
+                    push_unique(&mut names, name);
+                }
+            }
+        }
+    }
+    names
+}
+
+fn push_unique(names: &mut Vec<String>, name: String) {
+    if name != "mut" && !name.is_empty() && !names.contains(&name) {
+        names.push(name);
+    }
+}
+
+fn preceded_by_in(m: &[u8], at: usize) -> bool {
+    let mut k = at;
+    while k > 0 && (m[k - 1] == b'&' || m[k - 1] == b' ') {
+        k -= 1;
+    }
+    // `for x in name` / `for x in &name` / `for x in &mut name`
+    if k >= 3 && m[k - 3..k] == b"mut"[..] && !(k >= 4 && is_ident(m[k - 4])) {
+        return preceded_by_in(m, k - 3);
+    }
+    k >= 2 && m[k - 2..k] == b"in"[..] && !(k >= 3 && is_ident(m[k - 3]))
+}
+
+// ---- D3 ------------------------------------------------------------------
+
+const D3_ALLOWED_DIRS: &[&str] = &["obs", "timing", "serve"];
+
+fn d3_wall_clock(sf: &SourceFile) -> Vec<Finding> {
+    if !is_src(sf) || D3_ALLOWED_DIRS.iter().any(|d| path_has_dir(sf, d)) {
+        return Vec::new();
+    }
+    let m = &sf.masked;
+    let mut out = Vec::new();
+    for pat in [&b"Instant::now"[..], &b"SystemTime"[..]] {
+        let mut from = 0usize;
+        while let Some(at) = find_token(m, pat, from) {
+            from = at + 1;
+            if sf.in_test_span(at) {
+                continue;
+            }
+            out.push(finding(
+                sf,
+                "D3",
+                at,
+                format!(
+                    "wall-clock source '{}' outside obs/, timing/, serve/",
+                    String::from_utf8_lossy(pat)
+                ),
+                "route timing through timing::/obs:: sources; if this use is a \
+                 sanctioned wall-clock (CLI stopwatch, supervision deadline), \
+                 audit it with `// lint: allow(D3) reason` or allow-file",
+            ));
+        }
+    }
+    out
+}
+
+// ---- D4 ------------------------------------------------------------------
+
+const D4_SCOPES: &[&str] = &["serve/", "dist/proto", "plan/request"];
+
+fn d4_request_path_panics(sf: &SourceFile) -> Vec<Finding> {
+    if !is_src(sf) || !D4_SCOPES.iter().any(|s| sf.logical.contains(s)) {
+        return Vec::new();
+    }
+    let m = &sf.masked;
+    let mut out = Vec::new();
+    for pat in [&b".unwrap"[..], &b".expect"[..]] {
+        let mut from = 0usize;
+        while let Some(at) = find_token_suffix(m, pat, from) {
+            from = at + 1;
+            if sf.in_test_span(at) || !m[at + pat.len()..].starts_with(b"(") {
+                continue;
+            }
+            if poison_witness(m, at) {
+                continue;
+            }
+            out.push(finding(
+                sf,
+                "D4",
+                at,
+                format!(
+                    "'{}()' on a user-reachable request path",
+                    String::from_utf8_lossy(&pat[1..])
+                ),
+                "return a Result (bail!/anyhow!) so malformed input answers an \
+                 error, not a worker panic",
+            ));
+        }
+    }
+    for pat in [&b"panic!"[..], &b"todo!"[..], &b"unimplemented!"[..]] {
+        let mut from = 0usize;
+        while let Some(at) = find_token(m, &pat[..pat.len() - 1], from) {
+            from = at + 1;
+            if m[at + pat.len() - 1..].first() != Some(&b'!') || sf.in_test_span(at) {
+                continue;
+            }
+            out.push(finding(
+                sf,
+                "D4",
+                at,
+                format!("'{}' on a user-reachable request path", String::from_utf8_lossy(pat)),
+                "return a Result (bail!/anyhow!) so malformed input answers an \
+                 error, not a worker panic",
+            ));
+        }
+    }
+    out
+}
+
+/// `x.lock().expect(…)` / `cv.wait(g).expect(…)` / RwLock read/write: the
+/// expect only fires if another thread already panicked while holding the
+/// lock — it is a poison *witness*, not a new panic path.
+fn poison_witness(m: &[u8], dot_at: usize) -> bool {
+    if dot_at == 0 || m[dot_at - 1] != b')' {
+        return false;
+    }
+    // Walk back over the balanced call group to its `(`.
+    let mut depth = 0isize;
+    let mut k = dot_at - 1;
+    loop {
+        match m[k] {
+            b')' => depth += 1,
+            b'(' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {}
+        }
+        if k == 0 {
+            return false;
+        }
+        k -= 1;
+    }
+    match ident_before(m, k) {
+        Some(name) => matches!(name.as_str(), "lock" | "wait" | "read" | "write"),
+        None => false,
+    }
+}
+
+// ---- D5 ------------------------------------------------------------------
+
+struct CodecFn {
+    name: String,
+    /// Name minus the `to_json`/`from_json` suffix (pairs share it).
+    prefix: String,
+    encoder: bool,
+    sig_line: usize,
+    body: (usize, usize),
+}
+
+fn d5_codec_symmetry(sf: &SourceFile) -> Vec<Finding> {
+    let fns = codec_fns(sf);
+    let mut out = Vec::new();
+    let mut used: Vec<bool> = vec![false; fns.len()];
+    for (i, enc) in fns.iter().enumerate() {
+        if !enc.encoder {
+            continue;
+        }
+        // Pair with the first unused same-prefix decoder (file order); the
+        // repo convention keeps each pair adjacent within one impl block.
+        let dec = fns.iter().enumerate().find(|(j, f)| {
+            !f.encoder && f.prefix == enc.prefix && !used[*j]
+        });
+        let Some((j, dec)) = dec else {
+            out.push(Finding {
+                rule: "D5",
+                file: sf.logical.clone(),
+                line: enc.sig_line,
+                excerpt: sf.line_text(enc.sig_line).to_string(),
+                message: format!("encoder '{}' has no matching *from_json decoder", enc.name),
+                hint: "add the inverse decoder (or rename the function if it is \
+                       not a wire codec)",
+            });
+            continue;
+        };
+        used[j] = true;
+        let enc_keys = encoder_keys(sf, enc.body);
+        let dec_mentions = decoder_mentions(sf, dec.body);
+        let dec_keys = decoder_reads(sf, dec.body);
+        if enc_keys.is_empty() {
+            // Dynamic keys (format!-built or pass-through): nothing to check.
+            continue;
+        }
+        for k in &enc_keys {
+            if !dec_mentions.contains(k) {
+                out.push(Finding {
+                    rule: "D5",
+                    file: sf.logical.clone(),
+                    line: enc.sig_line,
+                    excerpt: sf.line_text(enc.sig_line).to_string(),
+                    message: format!(
+                        "field '{k}' written by '{}' is never read by '{}'",
+                        enc.name, dec.name
+                    ),
+                    hint: "read the field in the decoder (or stop writing it); \
+                           symmetric field sets are what keep wire schemas honest",
+                });
+            }
+        }
+        for k in &dec_keys {
+            if !enc_keys.contains(k) {
+                out.push(Finding {
+                    rule: "D5",
+                    file: sf.logical.clone(),
+                    line: dec.sig_line,
+                    excerpt: sf.line_text(dec.sig_line).to_string(),
+                    message: format!(
+                        "field '{k}' read by '{}' is never written by '{}'",
+                        dec.name, enc.name
+                    ),
+                    hint: "write the field in the encoder (or stop reading it); \
+                           symmetric field sets are what keep wire schemas honest",
+                });
+            }
+        }
+    }
+    out
+}
+
+fn codec_fns(sf: &SourceFile) -> Vec<CodecFn> {
+    let m = &sf.masked;
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(at) = find_token(m, b"fn", from) {
+        from = at + 1;
+        let mut j = skip_ws(m, at + 2);
+        let start = j;
+        while j < m.len() && is_ident(m[j]) {
+            j += 1;
+        }
+        let name = String::from_utf8_lossy(&m[start..j]).to_string();
+        let (encoder, prefix) = if let Some(p) = name.strip_suffix("to_json") {
+            (true, p.to_string())
+        } else if let Some(p) = name.strip_suffix("from_json") {
+            (false, p.to_string())
+        } else {
+            continue;
+        };
+        let Some(open) = find_from(m, b"{", j) else { continue };
+        let mut depth = 0isize;
+        let mut k = open;
+        while k < m.len() {
+            match m[k] {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        out.push(CodecFn {
+            name,
+            prefix,
+            encoder,
+            sig_line: sf.line_of(at),
+            body: (open, k.min(m.len())),
+        });
+        from = open;
+    }
+    out
+}
+
+/// Field names an encoder writes: string literals shaped like
+/// `("key".into(), …)` / `("key".to_string(), …)` inside the body.
+fn encoder_keys(sf: &SourceFile, body: (usize, usize)) -> Vec<String> {
+    let m = &sf.masked;
+    let mut keys = Vec::new();
+    for lit in &sf.strings {
+        if lit.start < body.0 || lit.end > body.1 {
+            continue;
+        }
+        let before = prev_non_ws(m, lit.start.saturating_sub(1));
+        if before != Some(b'(') {
+            continue;
+        }
+        let after = skip_ws(m, lit.end + 1);
+        let past = if m[after..].starts_with(b".into()") {
+            Some(after + ".into()".len())
+        } else if m[after..].starts_with(b".to_string()") {
+            Some(after + ".to_string()".len())
+        } else {
+            None
+        };
+        // The comma disambiguates a key position `("k".into(), v)` from a
+        // string *value* like `Json::Str("frontier".into())`.
+        if let Some(past) = past {
+            if m.get(skip_ws(m, past)) == Some(&b',') && !keys.contains(&lit.value) {
+                keys.push(lit.value.clone());
+            }
+        }
+    }
+    keys
+}
+
+/// Everything a decoder body could plausibly be reading, used for the
+/// "written but never read" direction.  Deliberately generous — ANY string
+/// literal in the body counts (keys reach `get()`/`opt()` through helper
+/// closures like `read_edges("edges")`, so restricting to direct `get("k")`
+/// calls would produce false asymmetry).  A body that calls `check_header`
+/// implicitly reads the `schema`/`kind` envelope fields it validates.
+fn decoder_mentions(sf: &SourceFile, body: (usize, usize)) -> Vec<String> {
+    let mut keys = Vec::new();
+    for lit in &sf.strings {
+        if lit.start < body.0 || lit.end > body.1 {
+            continue;
+        }
+        if !keys.contains(&lit.value) {
+            keys.push(lit.value.clone());
+        }
+    }
+    if find_token(&sf.masked[body.0..body.1], b"check_header", 0).is_some() {
+        for k in ["schema", "kind"] {
+            if !keys.iter().any(|s| s == k) {
+                keys.push(k.to_string());
+            }
+        }
+    }
+    keys
+}
+
+/// Field names a decoder *definitely* reads — literals directly inside
+/// `get("key")` / `opt("key")` — used for the strict "read but never
+/// written" direction (a looser set would flag error-message text).
+fn decoder_reads(sf: &SourceFile, body: (usize, usize)) -> Vec<String> {
+    let m = &sf.masked;
+    let mut keys = Vec::new();
+    for lit in &sf.strings {
+        if lit.start < body.0 || lit.end > body.1 || lit.start < 2 {
+            continue;
+        }
+        if m[lit.start - 2] != b'(' {
+            continue;
+        }
+        match ident_before(m, lit.start - 2) {
+            Some(name) if name == "get" || name == "opt" => {
+                if !keys.contains(&lit.value) {
+                    keys.push(lit.value.clone());
+                }
+            }
+            _ => {}
+        }
+    }
+    keys
+}
+
+// ---- token helpers -------------------------------------------------------
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn skip_ws(m: &[u8], mut i: usize) -> usize {
+    while i < m.len() && (m[i] as char).is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// From `i` pointing at `open`, return the index just past the balanced
+/// closing delimiter.
+fn skip_group(m: &[u8], i: usize, open: u8, close: u8) -> Option<usize> {
+    if m.get(i) != Some(&open) {
+        return None;
+    }
+    let mut depth = 0isize;
+    let mut k = i;
+    while k < m.len() {
+        if m[k] == open {
+            depth += 1;
+        } else if m[k] == close {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k + 1);
+            }
+        }
+        k += 1;
+    }
+    None
+}
+
+/// Find `needle` at a word boundary on both sides.
+fn find_token(m: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    let mut at = from;
+    loop {
+        let hit = find_from(m, needle, at)?;
+        let left_ok = hit == 0 || !is_ident(m[hit - 1]);
+        let end = hit + needle.len();
+        let right_ok = end >= m.len() || !is_ident(m[end]);
+        if left_ok && right_ok {
+            return Some(hit);
+        }
+        at = hit + 1;
+    }
+}
+
+/// Find `needle` (starting with `.`) where the trailing side is a word
+/// boundary — catches `.unwrap(` but not `.unwrap_or(`.
+fn find_token_suffix(m: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    let mut at = from;
+    loop {
+        let hit = find_from(m, needle, at)?;
+        let end = hit + needle.len();
+        if end >= m.len() || !is_ident(m[end]) {
+            return Some(hit);
+        }
+        at = hit + 1;
+    }
+}
+
+/// The identifier ending immediately before `i` (skipping whitespace).
+fn ident_before(m: &[u8], i: usize) -> Option<String> {
+    let mut k = i;
+    while k > 0 && (m[k - 1] as char).is_whitespace() {
+        k -= 1;
+    }
+    let end = k;
+    while k > 0 && is_ident(m[k - 1]) {
+        k -= 1;
+    }
+    if k == end {
+        None
+    } else {
+        Some(String::from_utf8_lossy(&m[k..end]).to_string())
+    }
+}
+
+fn prev_non_ws(m: &[u8], mut i: usize) -> Option<u8> {
+    loop {
+        // `i` indexes the quote byte; step left past it and any whitespace.
+        if i == 0 {
+            return None;
+        }
+        i -= 1;
+        if !(m[i] as char).is_whitespace() && m[i] != b'"' {
+            return Some(m[i]);
+        }
+        if m[i] == b'"' {
+            continue;
+        }
+    }
+}

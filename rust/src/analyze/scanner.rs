@@ -1,0 +1,573 @@
+//! Source scanner for the lint pass: loads one `.rs` file, masks comments
+//! and literals out of a parallel "scan text", and collects the lint
+//! directives the rules consume.
+//!
+//! The crate convention is std-only, so this is a hand-rolled lexer, not a
+//! rustc plugin: it understands exactly as much Rust surface syntax as the
+//! rules need — line/block comments (nested), string/raw-string/byte-string
+//! literals, char literals vs. lifetimes — and nothing more.  Rules match
+//! tokens against [`SourceFile::masked`], where every comment byte and every
+//! string-literal *content* byte has been replaced by a space (quotes and
+//! newlines survive, so byte offsets and line numbers are shared with the
+//! raw text).  String literal values are kept separately in
+//! [`SourceFile::strings`] for the rules that need them (D5's field-name
+//! symmetry check).
+//!
+//! Directives are ordinary line comments:
+//!
+//! ```text
+//! // lint: allow(D3) reason…       suppress rule D3 on this line (or the
+//! //                               next line, when the comment stands alone)
+//! // lint: allow-file(D3) reason…  suppress rule D3 for the whole file
+//! // lint: sorted                  shorthand for allow(D2): the iteration
+//! //                               order is made irrelevant by hand
+//! // lint: path src/serve/x.rs     override the *logical* path used for
+//! //                               rule scoping (fixture files use this)
+//! ```
+//!
+//! Every suppression is recorded and surfaced in the report, so `// lint:`
+//! comments are an audited escape hatch, not a silent one.
+
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+/// One parsed `// lint: allow(...)` / `// lint: sorted` directive.
+#[derive(Clone, Debug)]
+pub struct Suppression {
+    /// Rule id the suppression names (`"D1"`..`"D5"`).
+    pub rule: String,
+    /// 1-based line the directive sits on.
+    pub line: usize,
+    /// Whole-file suppression (`allow-file`)?
+    pub file_wide: bool,
+    /// Free-text justification (everything after the directive head).
+    pub reason: String,
+    /// True once a finding was actually silenced by this directive.
+    pub used: bool,
+}
+
+/// A string literal in the raw text: byte span (content only, quotes
+/// excluded) plus the unescaped-ish value (escapes left verbatim — the
+/// rules only compare plain field names, which never contain escapes).
+#[derive(Clone, Debug)]
+pub struct StrLit {
+    pub start: usize,
+    pub end: usize,
+    pub value: String,
+}
+
+/// One scanned source file, ready for the rules.
+pub struct SourceFile {
+    /// Path as discovered on disk (for diagnostics and reports).
+    pub path: PathBuf,
+    /// Path used for rule *scoping*: the on-disk path unless a
+    /// `// lint: path …` directive overrides it (fixtures do).
+    pub logical: String,
+    /// Raw file contents.
+    pub text: String,
+    /// Same length as `text`: comments and literal contents are spaces.
+    pub masked: Vec<u8>,
+    /// Byte offset of each line start (index 0 = line 1).
+    pub line_starts: Vec<usize>,
+    /// Parsed suppression directives, in file order.
+    pub suppressions: Vec<Suppression>,
+    /// String literals outside comments, in file order.
+    pub strings: Vec<StrLit>,
+    /// Byte ranges of `#[cfg(test)] mod …` bodies (test-only code).
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn load(path: &Path) -> Result<SourceFile> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        Ok(Self::from_text(path, text))
+    }
+
+    pub fn from_text(path: &Path, text: String) -> SourceFile {
+        let mut sf = SourceFile {
+            path: path.to_path_buf(),
+            logical: normalize(path),
+            text,
+            masked: Vec::new(),
+            line_starts: vec![0],
+            suppressions: Vec::new(),
+            strings: Vec::new(),
+            test_spans: Vec::new(),
+        };
+        sf.scan();
+        sf.find_test_spans();
+        sf
+    }
+
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_starts.binary_search(&offset) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// The trimmed raw source of a 1-based line.
+    pub fn line_text(&self, line: usize) -> &str {
+        let start = self.line_starts[line - 1];
+        let end = self
+            .line_starts
+            .get(line)
+            .map(|&e| e.saturating_sub(1))
+            .unwrap_or(self.text.len());
+        self.text[start..end.max(start)].trim()
+    }
+
+    /// Does a byte offset fall inside a `#[cfg(test)]` module body?
+    pub fn in_test_span(&self, offset: usize) -> bool {
+        self.test_spans.iter().any(|&(s, e)| offset >= s && offset < e)
+    }
+
+    /// Look for a suppression covering `rule` at `line`; marks it used.
+    /// A directive covers its own line, the next line when the directive
+    /// line holds nothing but the comment, and every line when file-wide.
+    pub fn suppression_for(&mut self, rule: &str, line: usize) -> Option<usize> {
+        for (i, s) in self.suppressions.iter_mut().enumerate() {
+            if s.rule != rule {
+                continue;
+            }
+            if s.file_wide || s.line == line || s.line + 1 == line {
+                s.used = true;
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    // ---- lexing ----------------------------------------------------------
+
+    fn scan(&mut self) {
+        let mut lx = Lexer {
+            b: self.text.as_bytes(),
+            masked: self.text.as_bytes().to_vec(),
+            line_starts: vec![0],
+            strings: Vec::new(),
+            directives: Vec::new(),
+        };
+        lx.run();
+        let Lexer { masked, line_starts, strings, directives, b: _ } = lx;
+        self.masked = masked;
+        self.line_starts = line_starts;
+        self.strings = strings;
+        for (comment, offset, only_comment) in directives {
+            self.parse_directive(&comment, offset, only_comment);
+        }
+    }
+
+    fn parse_directive(&mut self, comment: &str, offset: usize, only_comment: bool) {
+        let body = comment.trim_start_matches('/').trim();
+        let Some(rest) = body.strip_prefix("lint:") else { return };
+        let rest = rest.trim();
+        let line = self.line_of(offset);
+        // A directive that stands alone on its line covers the next line;
+        // model that by recording it on the directive line and letting
+        // `suppression_for` also match `line + 1`.  A *trailing* directive
+        // covers only its own line, so shift stand-alone ones are fine as-is.
+        let _ = only_comment;
+        if rest == "sorted" || rest.starts_with("sorted ") {
+            self.suppressions.push(Suppression {
+                rule: "D2".into(),
+                line,
+                file_wide: false,
+                reason: rest.strip_prefix("sorted").unwrap_or("").trim().to_string(),
+                used: false,
+            });
+        } else if let Some(tail) = rest.strip_prefix("allow-file(") {
+            if let Some((rule, reason)) = split_allow(tail) {
+                self.suppressions.push(Suppression {
+                    rule,
+                    line,
+                    file_wide: true,
+                    reason,
+                    used: false,
+                });
+            }
+        } else if let Some(tail) = rest.strip_prefix("allow(") {
+            if let Some((rule, reason)) = split_allow(tail) {
+                self.suppressions.push(Suppression {
+                    rule,
+                    line,
+                    file_wide: false,
+                    reason,
+                    used: false,
+                });
+            }
+        } else if let Some(tail) = rest.strip_prefix("path ") {
+            self.logical = tail.trim().to_string();
+        }
+    }
+
+    /// Locate `#[cfg(test)] mod … { … }` bodies via brace matching on the
+    /// masked text (strings and comments no longer confuse the count).
+    fn find_test_spans(&mut self) {
+        let m = &self.masked;
+        let mut from = 0usize;
+        while let Some(at) = find_from(m, b"#[cfg(test)]", from) {
+            from = at + 1;
+            let mut j = at + b"#[cfg(test)]".len();
+            // Skip whitespace and further attributes to the item keyword.
+            loop {
+                while j < m.len() && (m[j] as char).is_whitespace() {
+                    j += 1;
+                }
+                if j < m.len() && m[j] == b'#' {
+                    while j < m.len() && m[j] != b']' {
+                        j += 1;
+                    }
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            // Only `mod` bodies are skipped wholesale; a stray
+            // `#[cfg(test)] fn` would be rare and still brace-matched below.
+            let rest = &m[j.min(m.len())..];
+            if !(rest.starts_with(b"mod ") || rest.starts_with(b"pub mod ")) {
+                continue;
+            }
+            let Some(open) = find_from(m, b"{", j) else { continue };
+            let mut depth = 0isize;
+            let mut k = open;
+            while k < m.len() {
+                match m[k] {
+                    b'{' => depth += 1,
+                    b'}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            self.test_spans.push((open, k.min(m.len())));
+            from = k.min(m.len());
+        }
+    }
+}
+
+/// Standalone lexer state: borrows the raw bytes and owns every output, so
+/// mutating `masked`/`line_starts`/`strings` never conflicts with the text
+/// borrow (which it would inside `&mut SourceFile` methods).
+struct Lexer<'a> {
+    b: &'a [u8],
+    masked: Vec<u8>,
+    line_starts: Vec<usize>,
+    strings: Vec<StrLit>,
+    /// (comment text, byte offset, directive stands alone on its line).
+    directives: Vec<(String, usize, bool)>,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(&mut self) {
+        let n = self.b.len();
+        let mut i = 0usize;
+        while i < n {
+            let c = self.b[i];
+            if c == b'\n' {
+                self.line_starts.push(i + 1);
+                i += 1;
+            } else if c == b'/' && i + 1 < n && self.b[i + 1] == b'/' {
+                let start = i;
+                while i < n && self.b[i] != b'\n' {
+                    i += 1;
+                }
+                let comment = String::from_utf8_lossy(&self.b[start..i]).into_owned();
+                if comment.contains("lint:") {
+                    let ls = *self.line_starts.last().unwrap();
+                    let only_comment = self.b[ls..start].iter().all(|c| c.is_ascii_whitespace());
+                    self.directives.push((comment, start, only_comment));
+                }
+                mask(&mut self.masked, start, i);
+            } else if c == b'/' && i + 1 < n && self.b[i + 1] == b'*' {
+                let start = i;
+                let mut depth = 1usize;
+                i += 2;
+                while i < n && depth > 0 {
+                    if self.b[i] == b'\n' {
+                        self.line_starts.push(i + 1);
+                        i += 1;
+                    } else if self.b[i] == b'/' && i + 1 < n && self.b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if self.b[i] == b'*' && i + 1 < n && self.b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                mask(&mut self.masked, start, i);
+            } else if c == b'"' {
+                i = self.string_lit(i);
+            } else if (c == b'r' || c == b'b') && !ident_tail(self.b, i) {
+                // r"…", r#"…"#, b"…", br#"…"# — only when `r`/`b` starts a
+                // fresh token (not the tail of an identifier).
+                if let Some(next) = self.raw_or_byte_lit(i) {
+                    i = next;
+                } else {
+                    i += 1;
+                }
+            } else if c == b'\'' {
+                i = self.char_or_lifetime(i);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Plain `"…"` literal starting at `i`; returns the index after it.
+    fn string_lit(&mut self, i: usize) -> usize {
+        let n = self.b.len();
+        let content = i + 1;
+        let mut j = content;
+        while j < n {
+            match self.b[j] {
+                b'\\' => j = (j + 2).min(n),
+                b'"' => break,
+                b'\n' => {
+                    self.line_starts.push(j + 1);
+                    j += 1;
+                }
+                _ => j += 1,
+            }
+        }
+        self.strings.push(StrLit {
+            start: content,
+            end: j.min(n),
+            value: String::from_utf8_lossy(&self.b[content..j.min(n)]).into_owned(),
+        });
+        mask(&mut self.masked, content, j.min(n));
+        (j + 1).min(n)
+    }
+
+    /// `r`/`b`-prefixed literal starting at `i`, or `None` if `i` is not
+    /// actually a literal prefix.  Returns the index after the literal.
+    fn raw_or_byte_lit(&mut self, i: usize) -> Option<usize> {
+        let n = self.b.len();
+        let mut j = i;
+        let mut raw = false;
+        if self.b[j] == b'b' {
+            j += 1;
+            if j < n && self.b[j] == b'r' {
+                raw = true;
+                j += 1;
+            }
+        } else {
+            raw = true;
+            j += 1;
+        }
+        let mut hashes = 0usize;
+        while raw && j < n && self.b[j] == b'#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j >= n || self.b[j] != b'"' {
+            return None;
+        }
+        let content = j + 1;
+        if raw {
+            // Ends at `"` followed by the same number of `#`s; no escapes.
+            let mut k = content;
+            'outer: while k < n {
+                if self.b[k] == b'\n' {
+                    self.line_starts.push(k + 1);
+                    k += 1;
+                    continue;
+                }
+                if self.b[k] == b'"' {
+                    let mut h = 0usize;
+                    while h < hashes && k + 1 + h < n && self.b[k + 1 + h] == b'#' {
+                        h += 1;
+                    }
+                    if h == hashes {
+                        break 'outer;
+                    }
+                }
+                k += 1;
+            }
+            self.strings.push(StrLit {
+                start: content,
+                end: k.min(n),
+                value: String::from_utf8_lossy(&self.b[content..k.min(n)]).into_owned(),
+            });
+            mask(&mut self.masked, content, k.min(n));
+            Some((k + 1 + hashes).min(n))
+        } else {
+            // b"…" with escapes, same shape as a plain string.
+            let mut k = content;
+            while k < n {
+                match self.b[k] {
+                    b'\\' => k = (k + 2).min(n),
+                    b'"' => break,
+                    b'\n' => {
+                        self.line_starts.push(k + 1);
+                        k += 1;
+                    }
+                    _ => k += 1,
+                }
+            }
+            mask(&mut self.masked, content, k.min(n));
+            Some((k + 1).min(n))
+        }
+    }
+
+    /// `'c'` / `'\n'` char literal vs. `'a` lifetime at `i`.
+    fn char_or_lifetime(&mut self, i: usize) -> usize {
+        let n = self.b.len();
+        if i + 1 >= n {
+            return i + 1;
+        }
+        if self.b[i + 1] == b'\\' {
+            // Escaped char literal: mask to the closing quote.
+            let mut j = i + 2;
+            while j < n && self.b[j] != b'\'' {
+                j += 1;
+            }
+            mask(&mut self.masked, i + 1, j.min(n));
+            return (j + 1).min(n);
+        }
+        // One UTF-8 scalar then a closing quote → char literal; anything
+        // else (`'a>` / `'a,` / `'static`) is a lifetime: skip the quote.
+        let len = utf8_len(self.b[i + 1]);
+        if i + 1 + len < n && self.b[i + 1 + len] == b'\'' {
+            mask(&mut self.masked, i + 1, i + 1 + len);
+            i + 2 + len
+        } else {
+            i + 1
+        }
+    }
+}
+
+fn split_allow(tail: &str) -> Option<(String, String)> {
+    let close = tail.find(')')?;
+    let rule = tail[..close].trim().to_string();
+    if rule.is_empty() {
+        return None;
+    }
+    Some((rule, tail[close + 1..].trim().to_string()))
+}
+
+fn mask(masked: &mut [u8], start: usize, end: usize) {
+    for b in masked[start..end].iter_mut() {
+        if *b != b'\n' {
+            *b = b' ';
+        }
+    }
+}
+
+fn ident_tail(b: &[u8], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_')
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+pub(crate) fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if from >= hay.len() || needle.is_empty() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+/// Forward-slash path with a leading `./` stripped, for stable reports
+/// across platforms and invocation styles.
+pub(crate) fn normalize(path: &Path) -> String {
+    let s = path.to_string_lossy().replace('\\', "/");
+    s.strip_prefix("./").unwrap_or(&s).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(text: &str) -> SourceFile {
+        SourceFile::from_text(Path::new("src/x.rs"), text.to_string())
+    }
+
+    #[test]
+    fn masks_comments_and_strings() {
+        let s = sf("let a = \"partial_cmp\"; // partial_cmp\nlet b = 1;\n");
+        let m = String::from_utf8(s.masked.clone()).unwrap();
+        assert!(!m.contains("partial_cmp"), "masked: {m}");
+        assert!(m.contains("let b = 1;"));
+        assert_eq!(s.strings.len(), 1);
+        assert_eq!(s.strings[0].value, "partial_cmp");
+    }
+
+    #[test]
+    fn masks_raw_and_byte_strings() {
+        let s = sf("let a = r#\"Instant::now \"quoted\" \"#; let b = b\"SystemTime\";\n");
+        let m = String::from_utf8(s.masked.clone()).unwrap();
+        assert!(!m.contains("Instant::now"));
+        assert!(!m.contains("SystemTime"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let s = sf("fn f<'a>(x: &'a str) -> char { let c = '\"'; let d = '\\n'; c }\n");
+        let m = String::from_utf8(s.masked.clone()).unwrap();
+        // The quote char literal must not open a string.
+        assert!(m.contains("let d ="));
+        assert_eq!(s.strings.len(), 0);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = sf("/* outer /* Instant::now */ still comment */ let x = 1;\n");
+        let m = String::from_utf8(s.masked.clone()).unwrap();
+        assert!(!m.contains("Instant::now"));
+        assert!(m.contains("let x = 1;"));
+    }
+
+    #[test]
+    fn directives_parse() {
+        let s = sf("// lint: path src/serve/h.rs\nlet a = 1; // lint: allow(D3) cli timing\n// lint: sorted keys collected below\nfor x in m {}\n");
+        assert_eq!(s.logical, "src/serve/h.rs");
+        assert_eq!(s.suppressions.len(), 2);
+        assert_eq!(s.suppressions[0].rule, "D3");
+        assert_eq!(s.suppressions[0].reason, "cli timing");
+        assert_eq!(s.suppressions[1].rule, "D2");
+    }
+
+    #[test]
+    fn suppression_covers_own_and_next_line() {
+        let mut s = sf("// lint: allow(D1) reviewed\nrows.sort();\nother();\n");
+        assert!(s.suppression_for("D1", 2).is_some());
+        assert!(s.suppression_for("D1", 3).is_none());
+        assert!(s.suppression_for("D2", 2).is_none());
+    }
+
+    #[test]
+    fn test_spans_found() {
+        let text = "fn real() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        let s = sf(text);
+        assert_eq!(s.test_spans.len(), 1);
+        let unwrap_at = text.find("unwrap").unwrap();
+        assert!(s.in_test_span(unwrap_at));
+        assert!(!s.in_test_span(0));
+    }
+
+    #[test]
+    fn line_numbers_stable_through_multiline_strings() {
+        let s = sf("let a = \"one\ntwo\nthree\";\nlet b = 2;\n");
+        let off = s.text.find("let b").unwrap();
+        assert_eq!(s.line_of(off), 4);
+    }
+}

@@ -24,6 +24,8 @@
 //! device, MCKP instance) are installed once per worker and re-installed
 //! transparently after a respawn.
 
+// lint: allow-file(D3) supervision deadlines (worker spawn timeouts, retry backoff, heartbeats) are wall-clock by design; task *results* are merged in deterministic shard order regardless of arrival time
+
 use super::protocol::{
     level_from_json, level_to_json, mckp_to_json, msg_id, read_frame, request, write_frame,
 };

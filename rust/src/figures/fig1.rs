@@ -66,7 +66,7 @@ pub fn run(ctx: &mut FigureCtx, model: &str) -> Result<()> {
             (label, measured, summed, theo)
         })
         .collect();
-    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    rows.sort_by(|a, b| a.1.total_cmp(&b.1));
 
     // Fit scale+bias of the theoretical gain onto the measured one
     // (paper: "we fit the theoretical and empirical time gains").

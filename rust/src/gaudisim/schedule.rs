@@ -123,7 +123,7 @@ impl<'g> Simulator<'g> {
             let (ei, _) = pool
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap();
             let end = start + self.duration(v, cfg);
             pool[ei] = end;
@@ -175,7 +175,7 @@ impl<'g> Simulator<'g> {
             let (ei, _) = pool
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap();
             let t = self.duration(v, cfg);
             let end = start + t;

@@ -40,6 +40,7 @@
     clippy::type_complexity
 )]
 
+pub mod analyze;
 pub mod backend;
 pub mod coordinator;
 pub mod dist;

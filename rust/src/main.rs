@@ -22,6 +22,8 @@
 //! serde format.  `--demo` registers a synthetic model ("demo") so
 //! everything except evaluate/ttft runs without AOT artifacts.
 
+// lint: allow-file(D3) CLI stopwatch lines ('done in 1.2s' on stderr); never serialized into artifacts or plans
+
 use ampq::backend::{DeviceProfile, Registry};
 use ampq::coordinator::{paper_tau_grid, Strategy};
 use ampq::evalharness::{evaluate, evaluate_plan, load_all_tasks};
@@ -79,6 +81,9 @@ commands:
               speaks frames on stdin/stdout, or --connect HOST:PORT)
   figures     regenerate paper figures/tables into results/
   ttft        wall-clock TTFT of the real compiled forward (needs PJRT)
+  lint        determinism & soundness static analysis over the crate
+              (rules D1-D5, see DESIGN.md 4i); exits non-zero on any
+              finding that is neither suppressed nor baselined
   trace       record a traced demo run (plan + frontier; with
               --workers N also a fleet cell, stitching worker-process
               spans into the tree) and export Chrome trace-event JSON
@@ -134,7 +139,12 @@ options:
                         with and without it
   --no-trace            serve --listen: do not record spans (requests
                         still carry and echo x-ampq-trace ids)
-  --json                machine-readable JSON lines (Plan serde format)
+  --baseline FILE       lint: baseline file [<src root>/../lint-baseline.json]
+  --no-baseline         lint: ignore the baseline file entirely
+  --write-baseline      lint: rewrite the baseline to cover current findings
+  --fix-hints           lint: print a fix hint under each finding
+  --json                machine-readable JSON lines (Plan serde format;
+                        lint: the full findings report)
   --demo                register a synthetic model 'demo' (no artifacts
                         or PJRT needed; sets the default --model)
   --blocks N            demo model depth [2]";
@@ -173,8 +183,21 @@ impl EngineSpec {
 }
 
 fn run(raw: &[String]) -> Result<()> {
-    let args =
-        Args::parse(raw, &["quick", "all", "help", "json", "demo", "no-cache", "no-trace"])?;
+    let args = Args::parse(
+        raw,
+        &[
+            "quick",
+            "all",
+            "help",
+            "json",
+            "demo",
+            "no-cache",
+            "no-trace",
+            "fix-hints",
+            "write-baseline",
+            "no-baseline",
+        ],
+    )?;
     if args.flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -195,6 +218,7 @@ fn run(raw: &[String]) -> Result<()> {
         "worker" => return cmd_worker(&args),
         "fleet" => return finish_traced(cmd_fleet(&args), trace_out.as_deref()),
         "trace" => return cmd_trace(&args),
+        "lint" => return cmd_lint(&args),
         _ => {}
     }
     let root = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -884,6 +908,84 @@ fn cmd_serve_listen(
         model_list.len()
     );
     daemon.run(listener)
+}
+
+/// `ampq lint [PATHS…]`: run the determinism & soundness pass (rules
+/// D1-D5) over the crate, or over explicit files/dirs.  Exit status is the
+/// contract CI relies on: non-zero iff any finding is neither suppressed
+/// (`// lint: allow(…)`) nor covered by the baseline file.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use ampq::analyze::{self, LintConfig};
+
+    // Default roots adapt to the invocation directory: `rust/src` +
+    // `rust/tests` from the repo root, `src` + `tests` from `rust/`.
+    let explicit: Vec<PathBuf> = args.positional[1..].iter().map(PathBuf::from).collect();
+    let (roots, default_baseline) = if PathBuf::from("rust/src").is_dir() {
+        (
+            vec![PathBuf::from("rust/src"), PathBuf::from("rust/tests")],
+            PathBuf::from("rust/lint-baseline.json"),
+        )
+    } else {
+        (
+            vec![PathBuf::from("src"), PathBuf::from("tests")],
+            PathBuf::from("lint-baseline.json"),
+        )
+    };
+    let paths = if explicit.is_empty() { roots } else { explicit };
+    let baseline = if args.flag("no-baseline") {
+        None
+    } else {
+        Some(args.get("baseline").map(PathBuf::from).unwrap_or(default_baseline))
+    };
+    let cfg = LintConfig { paths, baseline: baseline.clone() };
+    let report = analyze::run(&cfg)?;
+
+    if args.flag("write-baseline") {
+        let path = baseline.ok_or_else(|| anyhow!("--write-baseline needs a baseline path"))?;
+        let all: Vec<&analyze::Finding> =
+            report.findings.iter().chain(report.baselined.iter()).collect();
+        std::fs::write(&path, analyze::baseline_json(&all).to_string() + "\n")?;
+        println!(
+            "lint: baseline rewritten with {} entr{} -> {}",
+            all.len(),
+            if all.len() == 1 { "y" } else { "ies" },
+            path.display()
+        );
+        return Ok(());
+    }
+
+    if args.flag("json") {
+        println!("{}", report.to_json().to_string());
+    } else {
+        for f in &report.findings {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+            println!("    {}", f.excerpt);
+            if args.flag("fix-hints") {
+                println!("    hint: {}", f.hint);
+            }
+        }
+        for s in &report.suppressed {
+            println!(
+                "{}:{}: [{}] suppressed: {} ({})",
+                s.finding.file, s.finding.line, s.finding.rule, s.finding.message, s.reason
+            );
+        }
+        for e in &report.stale_baseline {
+            println!("stale baseline entry: [{}] {} `{}`", e.rule, e.file, e.excerpt);
+        }
+        println!(
+            "lint: {} file(s), {} finding(s), {} suppressed (audited), {} baselined, {} stale",
+            report.files_scanned,
+            report.findings.len(),
+            report.suppressed.len(),
+            report.baselined.len(),
+            report.stale_baseline.len()
+        );
+    }
+    if !report.clean() {
+        bail!("lint: {} non-baselined finding(s)", report.findings.len());
+    }
+    Ok(())
 }
 
 /// `ampq worker` — one member of a distributed planning fleet.  Speaks

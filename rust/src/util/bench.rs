@@ -4,6 +4,8 @@
 //! mean / median / p95 over timed iterations after a warmup, in a stable
 //! one-line format that EXPERIMENTS.md §Perf records.
 
+// lint: allow-file(D3) the benchmark harness IS a stopwatch; timings go to BENCH_*.json summaries, never into planning artifacts
+
 use super::stats;
 use std::time::Instant;
 
@@ -27,6 +29,7 @@ impl BenchResult {
 
     /// Machine-readable form for BENCH_*.json summaries (the perf
     /// trajectory's data points).
+    // lint: allow(D5) write-only bench summary; gating reads it from python, not rust
     pub fn to_json(&self) -> super::Json {
         use super::Json;
         Json::Obj(vec![

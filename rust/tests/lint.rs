@@ -1,0 +1,130 @@
+//! Self-tests for the `ampq lint` static-analysis pass: every rule fires
+//! on its seeded fixture, suppressions are audited rather than silent,
+//! the baseline round-trips, and — the point of the exercise — the repo
+//! itself is clean.
+
+use ampq::analyze::{baseline_json, load_baseline, run, LintConfig, CATALOG};
+use std::path::PathBuf;
+
+fn root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture(name: &str) -> PathBuf {
+    root().join("tests/lint_fixtures").join(name)
+}
+
+fn lint_one(name: &str) -> ampq::analyze::Report {
+    run(&LintConfig { paths: vec![fixture(name)], baseline: None }).expect("lint fixture")
+}
+
+#[test]
+fn each_rule_fires_on_its_fixture() {
+    for (rule, file) in
+        [("D1", "d1.rs"), ("D2", "d2.rs"), ("D3", "d3.rs"), ("D4", "d4.rs"), ("D5", "d5.rs")]
+    {
+        let report = lint_one(file);
+        assert!(!report.clean(), "{file} should trip the linter");
+        assert!(
+            report.findings.iter().all(|f| f.rule == rule),
+            "{file} should only produce {rule} findings, got {:?}",
+            report.findings
+        );
+        assert_eq!(report.findings.len(), 1, "{file} seeds exactly one violation");
+        assert!(report.findings[0].line > 0);
+        assert!(!report.findings[0].excerpt.is_empty());
+    }
+}
+
+#[test]
+fn clean_fixture_is_clean() {
+    let report = lint_one("clean.rs");
+    assert!(report.clean(), "clean.rs must pass: {:?}", report.findings);
+    assert!(report.suppressed.is_empty());
+}
+
+#[test]
+fn rule_catalog_matches_fixture_set() {
+    let ids: Vec<&str> = CATALOG.iter().map(|r| r.id).collect();
+    assert_eq!(ids, ["D1", "D2", "D3", "D4", "D5"]);
+}
+
+#[test]
+fn d2_sorted_suppression_is_audited_not_silent() {
+    let report = lint_one("d2.rs");
+    // The `emit_presorted` iteration is silenced by `// lint: sorted …`,
+    // but the audit trail keeps it visible.
+    assert_eq!(report.suppressed.len(), 1, "suppressed: {:?}", report.suppressed.len());
+    assert_eq!(report.suppressed[0].finding.rule, "D2");
+    assert!(
+        report.suppressed[0].reason.contains("key order"),
+        "directive reason survives: {:?}",
+        report.suppressed[0].reason
+    );
+}
+
+#[test]
+fn d4_poison_witness_is_carved_out() {
+    let report = lint_one("d4.rs");
+    let d4: Vec<_> = report.findings.iter().filter(|f| f.rule == "D4").collect();
+    // `parse().unwrap()` fires; `lock().expect(..)` does not (a poisoned
+    // lock is itself a prior panic — the expect is a witness).
+    assert_eq!(d4.len(), 1);
+    assert!(d4[0].excerpt.contains("parse"), "wrong site: {:?}", d4[0].excerpt);
+}
+
+#[test]
+fn baseline_round_trips_through_json() {
+    let report = lint_one("d1.rs");
+    let j = baseline_json(&report.findings.iter().collect::<Vec<_>>());
+    let dir = std::env::temp_dir().join("ampq-lint-integration");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("roundtrip-baseline.json");
+    std::fs::write(&path, j.to_string()).expect("write baseline");
+
+    let entries = load_baseline(&path).expect("parse baseline");
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].rule, "D1");
+
+    // With the baseline applied the same fixture is non-fatal.
+    let report =
+        run(&LintConfig { paths: vec![fixture("d1.rs")], baseline: Some(path) }).unwrap();
+    assert!(report.clean());
+    assert_eq!(report.baselined.len(), 1);
+    assert!(report.stale_baseline.is_empty());
+}
+
+/// The acceptance gate: `ampq lint` over the whole crate (src + tests,
+/// fixtures excluded by the walk) is clean against the committed baseline,
+/// the baseline carries no stale debt, and — per the burn-down contract —
+/// no D1 entries at all.
+#[test]
+fn repo_is_clean_under_committed_baseline() {
+    let baseline = root().join("lint-baseline.json");
+    let report = run(&LintConfig {
+        paths: vec![root().join("src"), root().join("tests")],
+        baseline: Some(baseline.clone()),
+    })
+    .expect("lint repo");
+    assert!(
+        report.clean(),
+        "new lint findings:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| format!("  {} {}:{} {}", f.rule, f.file, f.line, f.message))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(
+        report.stale_baseline.is_empty(),
+        "baseline entries already paid off: {:?}",
+        report.stale_baseline
+    );
+    let entries = load_baseline(&baseline).expect("baseline parses");
+    assert!(
+        entries.iter().all(|e| e.rule != "D1"),
+        "D1 debt may not be baselined (fix it with total_cmp)"
+    );
+    assert!(report.files_scanned > 40, "walk found {} files", report.files_scanned);
+}

@@ -1,0 +1,7 @@
+// lint: path src/solver/fixture_clean.rs
+//! Control fixture: equivalent code written the approved way.  `ampq lint`
+//! must exit zero on this file.
+
+pub fn sort_gains(v: &mut [f64]) {
+    v.sort_by(|a, b| a.total_cmp(b));
+}

@@ -1,0 +1,7 @@
+// lint: path src/solver/fixture_d1.rs
+//! Seeded D1 violation: float ordering through `partial_cmp().unwrap()`.
+//! NaN panics here; `f64::total_cmp` is the deterministic total order.
+
+pub fn sort_gains(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

@@ -1,0 +1,25 @@
+// lint: path src/report/fixture_d2.rs
+//! Seeded D2 violation: hash-order iteration feeding serialized output.
+//! HashMap iteration order varies across runs and toolchains; serialized
+//! bytes built from it break the bit-identical-output contract.
+
+use crate::util::Json;
+use std::collections::HashMap;
+
+pub fn emit(metrics: &HashMap<String, f64>) -> Json {
+    let mut rows = Vec::new();
+    for (k, v) in metrics.iter() {
+        rows.push((k.clone(), Json::Num(*v)));
+    }
+    Json::Obj(rows)
+}
+
+/// Same shape, but audited: the caller inserts in key order.
+pub fn emit_presorted(counters: &HashMap<String, u64>) -> Json {
+    let mut rows = Vec::new();
+    // lint: sorted upstream: caller guarantees insertion in key order
+    for (k, v) in counters.iter() {
+        rows.push((k.clone(), Json::Num(*v as f64)));
+    }
+    Json::Obj(rows)
+}

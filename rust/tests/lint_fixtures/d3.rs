@@ -1,0 +1,7 @@
+// lint: path src/plan/fixture_d3.rs
+//! Seeded D3 violation: wall clock outside `obs/`, `timing/`, `serve/`.
+//! Clock reads on the planning path make output depend on machine load.
+
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,15 @@
+// lint: path src/serve/fixture_d4.rs
+//! Seeded D4 violation: panic on a user-reachable request path.  A bad
+//! request body must map to an error response, never to a daemon abort.
+
+use std::sync::Mutex;
+
+pub fn parse_tau(body: &str) -> f64 {
+    body.trim().parse().unwrap()
+}
+
+/// NOT a violation: a poisoned lock is itself evidence of a prior panic,
+/// so the `.expect` is a witness, not a new panic path (the D4 carve-out).
+pub fn peek(m: &Mutex<Vec<u64>>) -> usize {
+    m.lock().expect("lock poisoned").len()
+}

@@ -1,0 +1,19 @@
+// lint: path src/dist/fixture_d5.rs
+//! Seeded D5 violation: encoder/decoder field-name asymmetry.  The
+//! encoder writes `y`; the decoder never reads it — round-trips silently
+//! lose data.
+
+use crate::util::Json;
+use anyhow::Result;
+
+pub fn point_to_json(x: f64, y: f64) -> Json {
+    Json::Obj(vec![
+        ("x".into(), Json::Num(x)),
+        ("y".into(), Json::Num(y)),
+    ])
+}
+
+pub fn point_from_json(j: &Json) -> Result<(f64, f64)> {
+    let x = j.get("x")?.f64()?;
+    Ok((x, 0.0))
+}

@@ -1,0 +1,161 @@
+//! Wire-schema symmetry tests for the hand-rolled JSON codecs — the
+//! dynamic counterpart of lint rule D5.  Every field an encoder writes
+//! must round-trip, every field a decoder requires must reject when
+//! absent, and unknown extra fields must be tolerated consistently
+//! (additive schema evolution) across the level / MCKP / envelope codecs.
+
+use ampq::dist::protocol::{
+    err_response, level_from_json, level_to_json, mckp_from_json, mckp_to_json, msg_id,
+    ok_response, request,
+};
+use ampq::solver::parametric::LevelSoa;
+use ampq::solver::problem::gen::random_multi;
+use ampq::util::{Json, Rng};
+
+/// Remove `key` from an object, panicking if it was not present (so the
+/// test fails loudly if the schema drifts under it).
+fn without(j: &Json, key: &str) -> Json {
+    match j {
+        Json::Obj(kv) => {
+            let filtered: Vec<(String, Json)> =
+                kv.iter().filter(|(k, _)| k != key).cloned().collect();
+            assert_eq!(filtered.len() + 1, kv.len(), "field '{key}' missing from encoder output");
+            Json::Obj(filtered)
+        }
+        _ => panic!("expected an object"),
+    }
+}
+
+fn with_extra(j: &Json, key: &str) -> Json {
+    match j {
+        Json::Obj(kv) => {
+            let mut kv = kv.clone();
+            kv.push((key.to_string(), Json::Str("ignored".into())));
+            Json::Obj(kv)
+        }
+        _ => panic!("expected an object"),
+    }
+}
+
+fn sample_level() -> LevelSoa {
+    let mut level = LevelSoa::new(2);
+    level.push(0.125, &[1.0, 2.0], u32::MAX, 0);
+    level.push(3.5, &[4.0, 5.0], 0, 1);
+    level
+}
+
+#[test]
+fn level_decoder_rejects_each_missing_field() {
+    let j = level_to_json(&sample_level(), 0, 2);
+    assert!(level_from_json(&j).is_ok(), "baseline encoding must decode");
+    for key in ["dims", "g", "c", "p", "ch"] {
+        let crippled = without(&j, key);
+        assert!(
+            level_from_json(&crippled).is_err(),
+            "level_from_json accepted a frame missing '{key}'"
+        );
+    }
+}
+
+#[test]
+fn level_decoder_tolerates_unknown_fields() {
+    let j = with_extra(&level_to_json(&sample_level(), 0, 2), "future_field");
+    let back = level_from_json(&j).expect("unknown fields are additive, not fatal");
+    assert_eq!(back.len(), 2);
+}
+
+#[test]
+fn level_decoder_rejects_inconsistent_shapes() {
+    let j = level_to_json(&sample_level(), 0, 2);
+    let broken = match &j {
+        Json::Obj(kv) => Json::Obj(
+            kv.iter()
+                .map(|(k, v)| {
+                    if k == "p" {
+                        (k.clone(), Json::Arr(vec![Json::Num(0.0)])) // 1 parent, 2 gains
+                    } else {
+                        (k.clone(), v.clone())
+                    }
+                })
+                .collect(),
+        ),
+        _ => unreachable!(),
+    };
+    assert!(level_from_json(&broken).is_err());
+}
+
+#[test]
+fn mckp_decoder_rejects_each_missing_field() {
+    let mut rng = Rng::new(7);
+    let p = random_multi(&mut rng, 4, 3, 2);
+    let j = mckp_to_json(&p);
+    assert!(mckp_from_json(&j).is_ok());
+    for key in ["gains", "costs", "budgets"] {
+        assert!(
+            mckp_from_json(&without(&j, key)).is_err(),
+            "mckp_from_json accepted a frame missing '{key}'"
+        );
+    }
+    // Nested cost-dimension objects carry the same contract.
+    if let Json::Obj(kv) = &j {
+        let mut kv = kv.clone();
+        for (k, v) in kv.iter_mut() {
+            if k == "costs" {
+                if let Json::Arr(dims) = v {
+                    dims[0] = without(&dims[0], "table");
+                }
+            }
+        }
+        assert!(mckp_from_json(&Json::Obj(kv)).is_err(), "cost dim without 'table' accepted");
+    }
+}
+
+#[test]
+fn mckp_random_instances_roundtrip_exactly() {
+    let mut rng = Rng::new(0xA11CE);
+    for _ in 0..25 {
+        let p = random_multi(&mut rng, 6, 4, 3);
+        let text = mckp_to_json(&p).to_string();
+        let back = mckp_from_json(&Json::parse(&text).expect("valid JSON")).expect("roundtrip");
+        assert_eq!(back.gains, p.gains);
+        assert_eq!(back.budgets, p.budgets);
+        assert_eq!(back.costs.len(), p.costs.len());
+        for (a, b) in back.costs.iter().zip(&p.costs) {
+            assert_eq!(a, b);
+        }
+        // Unknown-field tolerance is uniform across codecs.
+        assert!(mckp_from_json(&with_extra(&mckp_to_json(&p), "vendor_ext")).is_ok());
+    }
+}
+
+#[test]
+fn envelope_fields_are_symmetric() {
+    let req = request(42, "expand_chunk", vec![("lo".into(), Json::Num(0.0))]);
+    assert_eq!(msg_id(&req).unwrap(), 42);
+    assert_eq!(req.get("kind").unwrap().str().unwrap(), "expand_chunk");
+    assert_eq!(req.get("lo").unwrap().f64().unwrap(), 0.0);
+
+    let ok = ok_response(42, Json::Str("done".into()));
+    assert_eq!(msg_id(&ok).unwrap(), 42);
+    assert!(ok.get("ok").unwrap().bool().unwrap());
+    assert_eq!(ok.get("result").unwrap().str().unwrap(), "done");
+
+    let err = err_response(43, "nope");
+    assert_eq!(msg_id(&err).unwrap(), 43);
+    assert!(!err.get("ok").unwrap().bool().unwrap());
+    assert_eq!(err.get("error").unwrap().str().unwrap(), "nope");
+
+    // A frame without an id is unroutable and must be rejected, not
+    // defaulted — the same strictness the level/mckp decoders apply.
+    assert!(msg_id(&Json::Obj(vec![])).is_err());
+}
+
+#[test]
+fn envelope_ids_survive_u64_range() {
+    for id in [0u64, 1, u32::MAX as u64, u64::MAX] {
+        let req = request(id, "ping", vec![]);
+        let text = req.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(msg_id(&back).unwrap(), id, "id {id} corrupted on the wire");
+    }
+}

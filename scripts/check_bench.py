@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_solver.json summary and (optionally) gate it against
+the committed baseline.
+
+Two modes:
+
+  # schema only — is this file a well-formed solver bench summary?
+  python3 scripts/check_bench.py --schema rust/BENCH_solver.json
+
+  # schema + regression gate: fresh values must stay above
+  # RATIO x committed on every gated key (CI's solver-bench job)
+  python3 scripts/check_bench.py --baseline BENCH_solver.json \
+      --fresh rust/BENCH_solver.json [--ratio 0.8]
+
+Exit status: 0 = pass, 1 = schema violation or perf regression.
+The gated-key list lives here, in one place, instead of being duplicated
+between the workflow file and the docs.
+"""
+
+import argparse
+import json
+import sys
+
+# Every solver bench summary must carry these.  `bench` identifies the
+# suite; the two metric keys are the perf-trajectory series EXPERIMENTS.md
+# tracks and the CI gate enforces.
+REQUIRED_KEYS = {
+    "bench": str,
+    "frontier_parametric_speedup_vs_bisection": (int, float),
+    "frontier_throughput_curves_per_sec": (int, float),
+}
+
+GATED_KEYS = [
+    "frontier_parametric_speedup_vs_bisection",
+    "frontier_throughput_curves_per_sec",
+]
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except OSError as e:
+        sys.exit(f"check_bench: cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        sys.exit(f"check_bench: {path} is not valid JSON: {e}")
+
+
+def check_schema(doc, path):
+    errors = []
+    if not isinstance(doc, dict):
+        sys.exit(f"check_bench: {path}: top level must be an object")
+    for key, want in REQUIRED_KEYS.items():
+        if key not in doc:
+            errors.append(f"missing required key '{key}'")
+        elif not isinstance(doc[key], want) or isinstance(doc[key], bool):
+            errors.append(f"key '{key}' has type {type(doc[key]).__name__}, "
+                          f"expected {want if isinstance(want, type) else 'number'}")
+    if doc.get("bench") not in (None, "solver"):
+        errors.append(f"key 'bench' is '{doc.get('bench')}', expected 'solver'")
+    for key in GATED_KEYS:
+        v = doc.get(key)
+        if isinstance(v, (int, float)) and not isinstance(v, bool) and v <= 0:
+            errors.append(f"gated key '{key}' must be positive, got {v}")
+    if errors:
+        for e in errors:
+            print(f"check_bench: {path}: {e}", file=sys.stderr)
+        sys.exit(1)
+    print(f"check_bench: {path}: schema OK "
+          f"({', '.join(f'{k}={doc[k]:.2f}' for k in GATED_KEYS)})")
+
+
+def gate(base, fresh, ratio):
+    bad = []
+    for key in GATED_KEYS:
+        floor = ratio * base[key]
+        print(f"{key}: fresh {fresh[key]:.2f} vs committed {base[key]:.2f} "
+              f"(floor {floor:.2f})")
+        if fresh[key] < floor:
+            bad.append(key)
+    if bad:
+        sys.exit(f"check_bench: perf regression below floor: {', '.join(bad)}")
+    print("check_bench: perf gate passed")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--schema", metavar="FILE",
+                    help="validate FILE's schema and exit")
+    ap.add_argument("--baseline", metavar="FILE",
+                    help="committed baseline summary for the regression gate")
+    ap.add_argument("--fresh", metavar="FILE",
+                    help="freshly measured summary to gate against --baseline")
+    ap.add_argument("--ratio", type=float, default=0.8,
+                    help="regression floor as a fraction of baseline (default 0.8)")
+    args = ap.parse_args()
+
+    if args.schema:
+        check_schema(load(args.schema), args.schema)
+        return
+    if args.baseline and args.fresh:
+        base, fresh = load(args.baseline), load(args.fresh)
+        check_schema(base, args.baseline)
+        check_schema(fresh, args.fresh)
+        gate(base, fresh, args.ratio)
+        return
+    ap.error("need --schema FILE, or --baseline FILE --fresh FILE")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Minimize a failing `tests/corpus/*.json` replay (ddmin-style).
+
+Given a corpus file and an interestingness command, repeatedly deletes
+groups and per-group options from a `mckp_oracle` instance while the
+command still reports the failure, then writes the smallest reproducer.
+
+  python3 scripts/minimize_corpus.py tests/corpus/foo.json \
+      --check 'cargo test -q --test fuzz_corpus -- corpus_replays 2>/dev/null; test $? -ne 0' \
+      --out tests/corpus/foo.min.json
+
+The check command is run with `{}` replaced by the candidate file path
+(appended if no `{}` is present).  A candidate is "interesting" — i.e.
+still reproduces the failure — when the command exits NON-zero, matching
+the natural shape of `cargo test` on a failing replay.
+
+`tau_reject` files are single-scalar reproducers: there is nothing to
+delete, so they are copied through unchanged.
+
+Deterministic: candidates are tried in a fixed order, no randomness.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import tempfile
+import os
+
+
+def run_check(cmd, path):
+    """True iff the failure still reproduces on `path`."""
+    full = cmd.replace("{}", path) if "{}" in cmd else f"{cmd} {path}"
+    r = subprocess.run(full, shell=True,
+                       stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    return r.returncode != 0
+
+
+def interesting(doc, cmd, tmpdir):
+    fd, path = tempfile.mkstemp(suffix=".json", dir=tmpdir)
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=1)
+        return run_check(cmd, path)
+    finally:
+        os.unlink(path)
+
+
+def drop_group(doc, g):
+    out = dict(doc)
+    out["gains"] = [r for i, r in enumerate(doc["gains"]) if i != g]
+    out["costs"] = [r for i, r in enumerate(doc["costs"]) if i != g]
+    return out
+
+
+def drop_option(doc, g, k):
+    out = dict(doc)
+    out["gains"] = [list(r) for r in doc["gains"]]
+    out["costs"] = [list(r) for r in doc["costs"]]
+    del out["gains"][g][k]
+    del out["costs"][g][k]
+    return out
+
+
+def minimize_mckp(doc, cmd, tmpdir):
+    tried = 0
+    # Phase 1: whole groups, highest index first so indices stay valid.
+    changed = True
+    while changed:
+        changed = False
+        for g in range(len(doc["gains"]) - 1, -1, -1):
+            if len(doc["gains"]) == 1:
+                break
+            cand = drop_group(doc, g)
+            tried += 1
+            if interesting(cand, cmd, tmpdir):
+                doc = cand
+                changed = True
+    # Phase 2: individual options (each group keeps at least one).
+    changed = True
+    while changed:
+        changed = False
+        for g in range(len(doc["gains"])):
+            for k in range(len(doc["gains"][g]) - 1, -1, -1):
+                if len(doc["gains"][g]) == 1:
+                    break
+                cand = drop_option(doc, g, k)
+                tried += 1
+                if interesting(cand, cmd, tmpdir):
+                    doc = cand
+                    changed = True
+    return doc, tried
+
+
+def size_of(doc):
+    if doc.get("kind") != "mckp_oracle":
+        return 1
+    return sum(len(r) for r in doc["gains"])
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("input", help="failing corpus file (tests/corpus/*.json)")
+    ap.add_argument("--check", required=True, metavar="CMD",
+                    help="shell command; non-zero exit on `{}` = still failing")
+    ap.add_argument("--out", metavar="FILE",
+                    help="where to write the reproducer (default: INPUT.min.json)")
+    args = ap.parse_args()
+
+    with open(args.input) as f:
+        doc = json.load(f)
+    out_path = args.out or (args.input[:-5] if args.input.endswith(".json")
+                            else args.input) + ".min.json"
+
+    with tempfile.TemporaryDirectory(prefix="minimize-corpus-") as tmpdir:
+        if not interesting(doc, args.check, tmpdir):
+            sys.exit(f"minimize_corpus: {args.input} is not interesting under "
+                     f"--check (command exited zero); nothing to minimize")
+
+        kind = doc.get("kind")
+        if kind == "mckp_oracle":
+            before = size_of(doc)
+            doc, tried = minimize_mckp(doc, args.check, tmpdir)
+            after = size_of(doc)
+            print(f"minimize_corpus: {args.input}: {before} -> {after} options "
+                  f"({len(doc['gains'])} group(s), {tried} candidates tried)")
+        elif kind == "tau_reject":
+            print(f"minimize_corpus: {args.input}: tau_reject is already "
+                  f"minimal (single scalar); copying through")
+        else:
+            sys.exit(f"minimize_corpus: unknown corpus kind '{kind}' "
+                     f"(supported: mckp_oracle, tau_reject)")
+
+    doc["note"] = (f"Minimized from {os.path.basename(args.input)} by "
+                   f"scripts/minimize_corpus.py. " + str(doc.get("note", "")))
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"minimize_corpus: wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()
